@@ -1,0 +1,63 @@
+//! Ablation sweep over the paper's design knobs: the virtual-queue floor
+//! ζ (the paper's departure from vanilla drift-plus-penalty, eq. 18), the
+//! diversity minimum κ (C6), and the violation budget ε of the
+//! effective-capacity map.
+//!
+//! Run: `cargo run --release --example ablation_sweep`
+
+use fmedge::baselines::Proposal;
+use fmedge::config::ExperimentConfig;
+use fmedge::metrics::Summary;
+use fmedge::sim::{run_trial, SimEnv, SimOptions};
+
+fn run_point(cfg: &ExperimentConfig, trials: usize) -> (f64, f64, f64) {
+    let mut otr = Vec::new();
+    let mut cost = Vec::new();
+    for t in 0..trials {
+        let seed = cfg.sim.seed + t as u64;
+        let env = SimEnv::build(cfg, seed);
+        let mut opts = SimOptions::from_config(cfg);
+        opts.load_multiplier = 1.5; // stress regime: ablations matter here
+        let m = run_trial(&env, &mut Proposal::new(), seed, &opts);
+        otr.push(m.on_time_rate());
+        cost.push(m.total_cost);
+    }
+    let s = Summary::of(&otr);
+    (s.mean, s.std, Summary::of(&cost).mean)
+}
+
+fn main() {
+    let mut base = ExperimentConfig::paper_default();
+    base.sim.slots = 300;
+    let trials = 4;
+
+    println!("## ζ — virtual-queue floor (eq. 18)\n");
+    println!("| zeta | on-time | std | cost |");
+    println!("|---|---|---|---|");
+    for zeta in [0.0, 0.25, 0.5, 1.0, 2.0] {
+        let mut cfg = base.clone();
+        cfg.controller.zeta = zeta;
+        let (m, s, c) = run_point(&cfg, trials);
+        println!("| {zeta} | {m:.3} | {s:.3} | {c:.0} |");
+    }
+
+    println!("\n## κ — minimum distinct core deployments (C6)\n");
+    println!("| kappa | on-time | std | cost |");
+    println!("|---|---|---|---|");
+    for kappa in [2usize, 6, 8, 12, 16] {
+        let mut cfg = base.clone();
+        cfg.controller.kappa = kappa;
+        let (m, s, c) = run_point(&cfg, trials);
+        println!("| {kappa} | {m:.3} | {s:.3} | {c:.0} |");
+    }
+
+    println!("\n## ε — latency-violation budget of g_(m,eps)(y)\n");
+    println!("| epsilon | on-time | std | cost |");
+    println!("|---|---|---|---|");
+    for eps in [0.05, 0.1, 0.2, 0.4] {
+        let mut cfg = base.clone();
+        cfg.controller.epsilon = eps;
+        let (m, s, c) = run_point(&cfg, trials);
+        println!("| {eps} | {m:.3} | {s:.3} | {c:.0} |");
+    }
+}

@@ -1,0 +1,162 @@
+//! End-to-end serving driver — proves all three layers compose.
+//!
+//! 1. **Plan (Layers 1+2 via PJRT):** load `effcap.hlo.txt` (the Pallas
+//!    log-mean-exp kernel inside the JAX delay-bound graph) and build the
+//!    `g_{m,ε}(y)` table through the PJRT runtime — cross-checked against
+//!    the native implementation.
+//! 2. **Simulate (Layer 3):** run the two-tier controller on a recorded
+//!    workload trace with the PJRT-built table on the decision path.
+//! 3. **Serve (Layer 3 + PJRT on the request path):** replay the same
+//!    trace's arrival process against the serving coordinator, executing
+//!    the real `msblock.hlo.txt` transformer block per batched request,
+//!    and report latency/throughput.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_trace`
+//! (results recorded in EXPERIMENTS.md §End-to-end.)
+
+use std::time::Instant;
+
+use fmedge::baselines::Proposal;
+use fmedge::config::ExperimentConfig;
+use fmedge::coordinator::{BatchPolicy, Coordinator, Request, ServeConfig};
+use fmedge::rng::{Rng, Xoshiro256};
+use fmedge::runtime::{shapes, EffCapAccel, Runtime};
+use fmedge::sim::{run_trial, SimEnv, SimOptions};
+use fmedge::workload::{Trace, WorkloadGenerator};
+
+fn main() {
+    let mut cfg = ExperimentConfig::paper_default();
+    cfg.sim.slots = 400;
+
+    // ---------------------------------------------------------------- plan
+    let t0 = Instant::now();
+    let rt = match Runtime::cpu(Runtime::default_dir()) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("PJRT unavailable ({e}); run `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    println!("[plan] PJRT platform: {}", rt.platform());
+    let env = SimEnv::build(&cfg, cfg.sim.seed);
+    let workloads: Vec<f64> = env
+        .app
+        .catalog
+        .light_ids()
+        .iter()
+        .map(|&m| env.app.catalog.spec(m).workload_mb)
+        .collect();
+    let accel = EffCapAccel::load(&rt).expect("effcap artifact");
+    let t_native = Instant::now();
+    let native_g = env.gtable.clone();
+    let native_ms = t_native.elapsed();
+    let t_pjrt = Instant::now();
+    let gtable = accel
+        .build_gtable(&env.light_rate_samples, &workloads)
+        .expect("PJRT g-table");
+    let pjrt_ms = t_pjrt.elapsed();
+    let mut max_rel = 0.0f64;
+    for m in 0..gtable.num_ms() {
+        for y in 1..=gtable.max_parallelism() {
+            let (a, b) = (native_g.delay(m, y), gtable.delay(m, y));
+            max_rel = max_rel.max((a - b).abs() / a.max(1e-9));
+        }
+    }
+    println!(
+        "[plan] g-table built via PJRT in {pjrt_ms:?} (native {native_ms:?}); max |Δ|/g = {max_rel:.2e}"
+    );
+    println!("[plan] startup total {:?}", t0.elapsed());
+
+    // ------------------------------------------------------------ simulate
+    let mut gen = WorkloadGenerator::new(
+        &cfg,
+        &env.app,
+        &env.topo,
+        &mut Xoshiro256::seed_from(env.users_seed),
+    );
+    let mut arrivals = Vec::new();
+    let mut rng = Xoshiro256::seed_from(2026);
+    let opts = SimOptions::from_config(&cfg);
+    for t in 0..opts.arrival_cutoff {
+        arrivals.extend(gen.generate_slot(t, 1.0, &mut rng));
+    }
+    let trace = Trace::from_arrivals(arrivals);
+    println!(
+        "\n[sim] recorded trace: {} tasks over {} slots",
+        trace.len(),
+        trace.num_slots()
+    );
+    let env = env.with_gtable(gtable);
+    let t_sim = Instant::now();
+    let m = run_trial(&env, &mut Proposal::new(), cfg.sim.seed, &opts);
+    println!(
+        "[sim] {} tasks, completion {:.1}%, on-time {:.1}%, cost {:.0}, p50/p95 latency {:.1}/{:.1} ms ({:?})",
+        m.total_tasks,
+        100.0 * m.completion_rate(),
+        100.0 * m.on_time_rate(),
+        m.total_cost,
+        m.latency_percentile(0.5),
+        m.latency_percentile(0.95),
+        t_sim.elapsed()
+    );
+
+    // --------------------------------------------------------------- serve
+    // Replay the trace's arrival process against the live coordinator with
+    // real PJRT compute per request. 1 simulated ms -> `time_scale` wall ms
+    // keeps the open-loop rate within CPU serving capacity.
+    let time_scale = 100.0; // ~360 rps offered at the trace's arrival rate
+    let requests: usize = 1200.min(trace.len());
+    let coordinator = Coordinator::start(ServeConfig {
+        workers: 3,
+        batch: BatchPolicy::default(),
+        ..Default::default()
+    })
+    .expect("coordinator start");
+    // Warm up the PJRT executables before timing.
+    std::thread::sleep(std::time::Duration::from_millis(300));
+    let slot_len = shapes::MSBLOCK_L * shapes::MSBLOCK_D;
+    let mut rng = Xoshiro256::seed_from(99);
+    let t_serve = Instant::now();
+    let mut submitted = 0usize;
+    let mut rejected = 0usize;
+    'outer: for slot in 0..trace.num_slots() {
+        for a in trace.slot(slot) {
+            if submitted >= requests {
+                break 'outer;
+            }
+            let data: Vec<f32> = (0..slot_len).map(|_| rng.next_f64() as f32).collect();
+            let req = Request {
+                id: a.id.0,
+                data,
+                submitted: Instant::now(),
+                deadline_ms: 50.0,
+            };
+            match coordinator.submit(req) {
+                Ok(()) => submitted += 1,
+                Err(_) => rejected += 1,
+            }
+        }
+        // Pace: one simulated slot per time_scale wall-milliseconds (sleep
+        // until this slot's wall-clock target so arrivals are not bursty).
+        let target = std::time::Duration::from_secs_f64(
+            (slot as f64 + 1.0) * time_scale / 1e3,
+        );
+        if let Some(remaining) = target.checked_sub(t_serve.elapsed()) {
+            std::thread::sleep(remaining);
+        }
+    }
+    let report = coordinator.shutdown();
+    println!(
+        "\n[serve] replayed {} requests ({} backpressured) in {:?}",
+        submitted, rejected, report.elapsed
+    );
+    println!(
+        "[serve] throughput {:.0} rps | batch fill {:.2} | on-time(50ms) {:.1}%",
+        report.throughput_rps(),
+        report.batch_fill,
+        100.0 * report.on_time_rate()
+    );
+    println!("[serve] latency (ms): {}", report.latency_ms.row());
+    println!("\nAll three layers composed: Pallas kernel → JAX graph → HLO →");
+    println!("PJRT executables on the Rust planning *and* request paths.");
+}

@@ -1,0 +1,166 @@
+"""AOT-lower the Layer-2 graphs to HLO text artifacts for the Rust runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the vendored
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids, so text round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts (shapes fixed at compile time; Rust pads inputs):
+
+* ``effcap.hlo.txt``  — (samples f32[M,S], thetas f32[T], workload f32[M])
+                        -> (g f32[M,Y], g_mean f32[M,Y])
+* ``qos.hlo.txt``     — (dpr f32[R,V], z f32[R], D f32[R], dcu f32[R],
+                        dsu f32[R], group f32[R,C]) -> (zt, dt, q) f32[V,C]
+* ``msblock.hlo.txt`` — (x f32[B,L,D]) -> f32[B,L,D] (weights constant-folded)
+
+A ``manifest.txt`` records every artifact's shapes and static parameters so
+the Rust side can validate at load time.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (from python/).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Compile-time shape configuration (kept in sync with rust/src/runtime).
+EFFCAP_M = 16
+EFFCAP_S = 4096
+EFFCAP_T = 32
+EFFCAP_Y = 16
+EFFCAP_ALPHA = 1.0
+EFFCAP_EPSILON = 0.2
+
+QOS_R = 512
+QOS_V = 32
+QOS_C = 8
+QOS_DELTA = 0.05
+QOS_LO = 0.05
+QOS_HI = 4.0
+
+MSBLOCK_B = 4
+MSBLOCK_L = 16
+MSBLOCK_D = 256
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_effcap():
+    fn = functools.partial(
+        model.effcap_table,
+        max_y=EFFCAP_Y,
+        alpha=EFFCAP_ALPHA,
+        epsilon=EFFCAP_EPSILON,
+    )
+    spec = lambda *shape: jax.ShapeDtypeStruct(shape, jnp.float32)  # noqa: E731
+    return jax.jit(fn).lower(
+        spec(EFFCAP_M, EFFCAP_S), spec(EFFCAP_T), spec(EFFCAP_M)
+    )
+
+
+def lower_qos():
+    fn = functools.partial(
+        model.qos_scores, delta=QOS_DELTA, lo=QOS_LO, hi=QOS_HI
+    )
+    spec = lambda *shape: jax.ShapeDtypeStruct(shape, jnp.float32)  # noqa: E731
+    return jax.jit(fn).lower(
+        spec(QOS_R, QOS_V),
+        spec(QOS_R),
+        spec(QOS_R),
+        spec(QOS_R),
+        spec(QOS_R),
+        spec(QOS_R, QOS_C),
+    )
+
+
+# Weight argument order for the msblock artifact (and the sidecar
+# ``msblock.weights.bin`` raw-f32 file): must match MsBlockAccel.
+MSBLOCK_WEIGHT_ORDER = ("wq", "wk", "wv", "wo", "w1", "w2")
+
+
+def lower_msblock():
+    # Weights are *arguments*, not closure constants: ``as_hlo_text``
+    # elides large constants as ``{...}`` which the Rust-side HLO parser
+    # would silently fill with zeros. The sidecar weights file carries the
+    # actual values (see write_msblock_weights).
+    def fn(wq, wk, wv, wo, w1, w2, x):
+        params = dict(wq=wq, wk=wk, wv=wv, wo=wo, w1=w1, w2=w2)
+        return (model.ms_block(params, x),)
+
+    p = model.ms_block_params(MSBLOCK_D)
+    specs = [jax.ShapeDtypeStruct(p[k].shape, jnp.float32) for k in MSBLOCK_WEIGHT_ORDER]
+    specs.append(
+        jax.ShapeDtypeStruct((MSBLOCK_B, MSBLOCK_L, MSBLOCK_D), jnp.float32)
+    )
+    return jax.jit(fn).lower(*specs)
+
+
+def write_msblock_weights(out_dir: str) -> None:
+    """Raw little-endian f32 concatenation in MSBLOCK_WEIGHT_ORDER."""
+    import numpy as np
+
+    p = model.ms_block_params(MSBLOCK_D)
+    path = os.path.join(out_dir, "msblock.weights.bin")
+    with open(path, "wb") as f:
+        for k in MSBLOCK_WEIGHT_ORDER:
+            f.write(np.asarray(p[k], np.float32).tobytes())
+    print(f"wrote weights to {path}")
+
+
+MANIFEST = f"""# fmedge AOT manifest v1
+effcap.hlo.txt inputs samples:f32[{EFFCAP_M},{EFFCAP_S}] thetas:f32[{EFFCAP_T}] workload:f32[{EFFCAP_M}] outputs g:f32[{EFFCAP_M},{EFFCAP_Y}] gmean:f32[{EFFCAP_M},{EFFCAP_Y}] params alpha={EFFCAP_ALPHA} epsilon={EFFCAP_EPSILON}
+qos.hlo.txt inputs dpr:f32[{QOS_R},{QOS_V}] z:f32[{QOS_R}] deadlines:f32[{QOS_R}] dcu:f32[{QOS_R}] dsu:f32[{QOS_R}] group:f32[{QOS_R},{QOS_C}] outputs zt:f32[{QOS_V},{QOS_C}] dt:f32[{QOS_V},{QOS_C}] q:f32[{QOS_V},{QOS_C}] params delta={QOS_DELTA} lo={QOS_LO} hi={QOS_HI}
+msblock.hlo.txt inputs x:f32[{MSBLOCK_B},{MSBLOCK_L},{MSBLOCK_D}] outputs y:f32[{MSBLOCK_B},{MSBLOCK_L},{MSBLOCK_D}] params d_model={MSBLOCK_D}
+"""
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only",
+        choices=["effcap", "qos", "msblock"],
+        default=None,
+        help="build a single artifact",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    jobs = {
+        "effcap": lower_effcap,
+        "qos": lower_qos,
+        "msblock": lower_msblock,
+    }
+    if args.only:
+        jobs = {args.only: jobs[args.only]}
+    for name, lower in jobs.items():
+        text = to_hlo_text(lower())
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text)} chars to {path}")
+    if args.only in (None, "msblock"):
+        write_msblock_weights(args.out_dir)
+    manifest = os.path.join(args.out_dir, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write(MANIFEST)
+    print(f"wrote manifest to {manifest}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Layer-1 Pallas kernel: effective-capacity log-mean-exp sweep.
+
+Computes, for every light microservice `m`, QoS exponent `theta_t` and
+parallelism level `y in 1..Y`:
+
+    LME[m, t, y-1] = log( mean_s exp( -theta_t * f[m, s] / y**alpha ) )
+
+which the Layer-2 graph turns into the effective capacity
+`E^c = -LME / theta` and the Chernoff delay bound `g_{m,eps}(y)`
+(eq. 20-21 of the paper; see rust/src/effcap for the mirrored native
+implementation and DESIGN.md section 5 for the derivation).
+
+TPU shape rationale: the grid is (M, T); each program instance holds one
+(microservice, theta) pair's full sample vector in VMEM and materializes
+the [Y, S] scaled matrix (16 x 4096 f32 = 256 KiB, comfortably within a
+TPU core's ~16 MiB VMEM), reducing over the sample axis with a stable
+max-shifted log-sum-exp. `interpret=True` everywhere: the CPU PJRT client
+cannot execute Mosaic custom-calls, and correctness is validated against
+`ref.py` by pytest.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["effcap_lme"]
+
+
+def _lme_kernel(samples_ref, thetas_ref, out_ref, *, max_y: int, alpha: float):
+    """One (m, t) tile: LME over samples for every parallelism level."""
+    f = samples_ref[...]  # [1, S]
+    theta = thetas_ref[0]  # scalar
+    ys = jnp.arange(1, max_y + 1, dtype=f.dtype)  # [Y]
+    scale = ys**alpha  # [Y]
+    z = (-theta) * f / scale[:, None]  # [Y, S]
+    zmax = jnp.max(z, axis=1, keepdims=True)  # [Y, 1]
+    lme = zmax[:, 0] + jnp.log(jnp.mean(jnp.exp(z - zmax), axis=1))
+    out_ref[...] = lme[None, None, :]  # [1, 1, Y]
+
+
+@functools.partial(jax.jit, static_argnames=("max_y", "alpha"))
+def effcap_lme(samples: jax.Array, thetas: jax.Array, *, max_y: int, alpha: float):
+    """Pallas-tiled LME sweep.
+
+    Args:
+      samples: ``f32[M, S]`` iid uncontended service-rate draws per MS.
+      thetas:  ``f32[T]`` QoS exponents (log-spaced grid).
+      max_y:   maximum parallelism level Y (static).
+      alpha:   contention exponent (static); per-task rate is ``f / y**alpha``.
+
+    Returns:
+      ``f32[M, T, Y]`` log-mean-exp values.
+    """
+    m, s = samples.shape
+    (t,) = thetas.shape
+    kernel = functools.partial(_lme_kernel, max_y=max_y, alpha=alpha)
+    return pl.pallas_call(
+        kernel,
+        grid=(m, t),
+        in_specs=[
+            pl.BlockSpec((1, s), lambda i, j: (i, 0)),
+            pl.BlockSpec((1,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, max_y), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, t, max_y), samples.dtype),
+        interpret=True,
+    )(samples, thetas)

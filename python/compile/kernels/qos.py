@@ -1,0 +1,126 @@
+"""Layer-1 Pallas kernel: QoS-score apportionment (eqs. 15-16).
+
+Rows are (user, task-type, core-MS) tuples; for each row the kernel
+computes the softmax load apportionment over candidate nodes and the
+clamped urgency ratio, then scatters both into per-(node, core) matrices
+through a one-hot group matrix using matmuls (the MXU-facing part):
+
+    W[r, v]    = exp(-delta * (dpr[r, v] - min_v dpr[r, :])) / row_sum
+    zt[v, c]  += sum_r W[r, v] * z[r] * G[r, c]
+    ratio[r,v] = clip((D[r] - dpr[r, v] - dcu[r]) / dsu[r], lo, hi)
+    dt[v, c]  += sum_r ratio[r, v] * G[r, c]
+
+Zero-padded rows (z = 0 and G = 0) contribute nothing, so the Rust
+runtime can pad to the AOT-compiled shape freely.
+
+TPU shape rationale: the grid walks row tiles; each program holds a
+[Rt, V] tile plus the [V, C] accumulators in VMEM and performs two
+[V, Rt] x [Rt, C] matmuls per tile — MXU-shaped work — accumulating
+across the sequential grid axis with a first-iteration initializer.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["qos_apportion"]
+
+
+def _qos_kernel(
+    dpr_ref,
+    z_ref,
+    dd_ref,
+    dcu_ref,
+    dsu_ref,
+    group_ref,
+    zt_ref,
+    dt_ref,
+    *,
+    delta: float,
+    lo: float,
+    hi: float,
+):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        zt_ref[...] = jnp.zeros_like(zt_ref)
+        dt_ref[...] = jnp.zeros_like(dt_ref)
+
+    dpr = dpr_ref[...]  # [Rt, V]
+    z = z_ref[...]  # [Rt]
+    dd = dd_ref[...]  # [Rt]
+    dcu = dcu_ref[...]  # [Rt]
+    dsu = dsu_ref[...]  # [Rt]
+    group = group_ref[...]  # [Rt, C]
+
+    # eq. (15): exponential-decay softmax over nodes (max-shifted).
+    shifted = -delta * (dpr - jnp.min(dpr, axis=1, keepdims=True))
+    w = jnp.exp(shifted)
+    w = w / jnp.sum(w, axis=1, keepdims=True)  # [Rt, V]
+    weighted = group * z[:, None]  # [Rt, C]
+    zt_ref[...] += jnp.dot(w.T, weighted)  # [V, C]
+
+    # eq. (16): clamped urgency ratio.
+    ratio = jnp.clip((dd[:, None] - dpr - dcu[:, None]) / dsu[:, None], lo, hi)
+    dt_ref[...] += jnp.dot(ratio.T, group)  # [V, C]
+
+
+@functools.partial(jax.jit, static_argnames=("delta", "lo", "hi", "row_tile"))
+def qos_apportion(
+    dpr: jax.Array,
+    z: jax.Array,
+    deadlines: jax.Array,
+    dcu: jax.Array,
+    dsu: jax.Array,
+    group: jax.Array,
+    *,
+    delta: float,
+    lo: float,
+    hi: float,
+    row_tile: int = 64,
+):
+    """Pallas-tiled apportionment.
+
+    Args:
+      dpr:       ``f32[R, V]`` preceding latency of row r at node v.
+      z:         ``f32[R]`` mean arrival rate of the row (0 = padding).
+      deadlines: ``f32[R]`` task-type deadline D_n.
+      dcu:       ``f32[R]`` current-node mean processing delay.
+      dsu:       ``f32[R]`` successor mean processing (>= small floor).
+      group:     ``f32[R, C]`` one-hot row -> core-MS matrix (0 = padding).
+      delta:     decay rate of eq. (15).
+      lo, hi:    urgency clamp (C1 floor and the numerical cap).
+      row_tile:  rows per grid step (R must divide evenly after padding).
+
+    Returns:
+      ``(zt, dt)`` both ``f32[V, C]``; the QoS score is ``zt * dt``.
+    """
+    r, v = dpr.shape
+    c = group.shape[1]
+    assert r % row_tile == 0, f"pad rows to a multiple of {row_tile}"
+    kernel = functools.partial(_qos_kernel, delta=delta, lo=lo, hi=hi)
+    grid = (r // row_tile,)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((row_tile, v), lambda i: (i, 0)),
+            pl.BlockSpec((row_tile,), lambda i: (i,)),
+            pl.BlockSpec((row_tile,), lambda i: (i,)),
+            pl.BlockSpec((row_tile,), lambda i: (i,)),
+            pl.BlockSpec((row_tile,), lambda i: (i,)),
+            pl.BlockSpec((row_tile, c), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((v, c), lambda i: (0, 0)),
+            pl.BlockSpec((v, c), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((v, c), dpr.dtype),
+            jax.ShapeDtypeStruct((v, c), dpr.dtype),
+        ],
+        interpret=True,
+    )(dpr, z, deadlines, dcu, dsu, group)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every Pallas kernel in this package has a straight-line jnp twin here;
+pytest sweeps shapes/dtypes (hypothesis included) and asserts allclose.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def effcap_lme_ref(samples, thetas, *, max_y: int, alpha: float):
+    """Reference for ``effcap.effcap_lme``: f32[M,S],f32[T] -> f32[M,T,Y]."""
+    ys = jnp.arange(1, max_y + 1, dtype=samples.dtype)
+    scale = ys**alpha  # [Y]
+    # [M, T, Y, S]
+    z = -thetas[None, :, None, None] * samples[:, None, None, :] / scale[None, None, :, None]
+    zmax = jnp.max(z, axis=-1, keepdims=True)
+    return (zmax[..., 0] + jnp.log(jnp.mean(jnp.exp(z - zmax), axis=-1))).astype(
+        samples.dtype
+    )
+
+
+def qos_apportion_ref(dpr, z, deadlines, dcu, dsu, group, *, delta, lo, hi):
+    """Reference for ``qos.qos_apportion``."""
+    shifted = -delta * (dpr - jnp.min(dpr, axis=1, keepdims=True))
+    w = jnp.exp(shifted)
+    w = w / jnp.sum(w, axis=1, keepdims=True)
+    zt = w.T @ (group * z[:, None])
+    ratio = jnp.clip((deadlines[:, None] - dpr - dcu[:, None]) / dsu[:, None], lo, hi)
+    dt = ratio.T @ group
+    return zt, dt
+
+
+def gamma_effective_capacity(shape, scale, theta):
+    """Closed form E^c(theta) = k*ln(1+theta*s)/theta for Gamma(k, s) —
+    the analytic oracle shared with rust (rng::Gamma::effective_capacity)."""
+    return shape * jnp.log1p(theta * scale) / theta

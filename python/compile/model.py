@@ -1,0 +1,127 @@
+"""Layer-2 JAX graphs, AOT-lowered to the artifacts the Rust runtime runs.
+
+Three build-time computations (see DESIGN.md section 2):
+
+* ``effcap_table`` — sampled service rates -> the paper's deterministic
+  map ``g_{m,eps}(y)`` (QoS delay bound per light MS x parallelism) plus
+  the mean-value variant used by the PropAvg ablation. Mirrors
+  ``rust/src/effcap`` exactly (Chernoff inversion, mean floor, 20x-mean
+  clamp, monotonize) so the native and PJRT paths agree to fp tolerance.
+* ``qos_scores`` — mean-value latency profiles -> apportioned load
+  ``z~[v,c]`` and QoS score ``Q[v,c]`` (eqs. 15-16), mirroring
+  ``rust/src/placement/qos_score.rs``.
+* ``ms_block`` — a small transformer block standing in for a core-MS
+  forward pass; the serving example executes it per request through PJRT
+  so the demo exercises real MXU-shaped compute on the hot path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.effcap import effcap_lme
+from .kernels.qos import qos_apportion
+
+# ---------------------------------------------------------------- effcap ----
+
+
+@functools.partial(jax.jit, static_argnames=("max_y", "alpha", "epsilon"))
+def effcap_table(
+    samples: jax.Array,
+    thetas: jax.Array,
+    workload_mb: jax.Array,
+    *,
+    max_y: int,
+    alpha: float,
+    epsilon: float,
+):
+    """Build ``(g, g_mean)`` delay tables, both ``f32[M, Y]``.
+
+    Chernoff inversion of the service-rate lower tail (DESIGN.md section 5):
+      ``D(theta) = a / (E^c(theta) + ln(eps)/theta)`` where the effective
+      capacity at parallelism y comes from the Pallas LME kernel,
+      ``E^c_y(theta) = -LME[m, t, y] / theta``.
+    """
+    lme = effcap_lme(samples, thetas, max_y=max_y, alpha=alpha)  # [M,T,Y]
+    ec = -lme / thetas[None, :, None]  # [M, T, Y]
+    ln_eps = jnp.log(jnp.asarray(epsilon, samples.dtype))
+    denom = ec + ln_eps / thetas[None, :, None]  # [M, T, Y]
+    a = workload_mb[:, None, None]
+    d = jnp.where(denom > 0.0, a / denom, jnp.inf)  # [M, T, Y]
+    bound = jnp.min(d, axis=1)  # [M, Y]
+
+    # Mean-value floor and PropAvg row.
+    mu = jnp.mean(samples, axis=1)  # [M]
+    ys = jnp.arange(1, max_y + 1, dtype=samples.dtype)
+    mean_delay = workload_mb[:, None] * (ys[None, :] ** alpha) / mu[:, None]
+    g = jnp.maximum(bound, mean_delay)
+    # Clamp blow-ups (no positive-denominator theta) to 20x mean delay.
+    g = jnp.minimum(g, 20.0 * mean_delay)
+    # Monotonize along y (contention can only increase the bound).
+    g = jax.lax.associative_scan(jnp.maximum, g, axis=1)
+    return g, mean_delay
+
+
+# ------------------------------------------------------------- qos scores ---
+
+
+@functools.partial(jax.jit, static_argnames=("delta", "lo", "hi"))
+def qos_scores(
+    dpr: jax.Array,
+    z: jax.Array,
+    deadlines: jax.Array,
+    dcu: jax.Array,
+    dsu: jax.Array,
+    group: jax.Array,
+    *,
+    delta: float,
+    lo: float,
+    hi: float,
+):
+    """Apportioned load, urgency and QoS score: ``(zt, dt, q)`` f32[V, C]."""
+    zt, dt = qos_apportion(
+        dpr, z, deadlines, dcu, dsu, group, delta=delta, lo=lo, hi=hi
+    )
+    return zt, dt, zt * dt
+
+
+# ---------------------------------------------------------------- msblock ---
+
+
+def ms_block_params(d_model: int = 256, d_ff: int = 512, seed: int = 0):
+    """Deterministic demo weights for the core-MS transformer block."""
+    k = jax.random.PRNGKey(seed)
+    ks = jax.random.split(k, 6)
+    s = 1.0 / jnp.sqrt(d_model)
+    return {
+        "wq": jax.random.normal(ks[0], (d_model, d_model), jnp.float32) * s,
+        "wk": jax.random.normal(ks[1], (d_model, d_model), jnp.float32) * s,
+        "wv": jax.random.normal(ks[2], (d_model, d_model), jnp.float32) * s,
+        "wo": jax.random.normal(ks[3], (d_model, d_model), jnp.float32) * s,
+        "w1": jax.random.normal(ks[4], (d_model, d_ff), jnp.float32) * s,
+        "w2": jax.random.normal(ks[5], (d_ff, d_model), jnp.float32) * s,
+    }
+
+
+def _layernorm(x, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps)
+
+
+@jax.jit
+def ms_block(params, x):
+    """Single-head attention + MLP block: ``f32[B, L, D] -> f32[B, L, D]``."""
+    h = _layernorm(x)
+    q = h @ params["wq"]
+    k = h @ params["wk"]
+    v = h @ params["wv"]
+    scores = q @ jnp.swapaxes(k, -1, -2) / jnp.sqrt(jnp.float32(q.shape[-1]))
+    attn = jax.nn.softmax(scores, axis=-1) @ v
+    x = x + attn @ params["wo"]
+    h = _layernorm(x)
+    x = x + jax.nn.gelu(h @ params["w1"]) @ params["w2"]
+    return x

@@ -1,0 +1,166 @@
+"""Pallas kernels vs pure-jnp oracles — the core correctness signal.
+
+Hypothesis sweeps shapes and distribution parameters; every case asserts
+allclose between the tiled kernel and the reference, plus analytic checks
+against the Gamma closed form shared with the Rust implementation.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.effcap import effcap_lme
+from compile.kernels.qos import qos_apportion
+from compile.kernels.ref import (
+    effcap_lme_ref,
+    gamma_effective_capacity,
+    qos_apportion_ref,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+HSETTINGS = dict(deadline=None, max_examples=20, derandomize=True)
+
+
+# ------------------------------------------------------------------ effcap --
+
+
+def _samples(m, s, seed=0, shape=1.5, scale=10.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.gamma(shape, scale, size=(m, s)), jnp.float32)
+
+
+def _thetas(t, lo=1e-3, hi=10.0):
+    return jnp.asarray(np.geomspace(lo, hi, t), jnp.float32)
+
+
+@pytest.mark.parametrize("m,s,t,y", [(1, 64, 4, 4), (3, 256, 8, 16), (16, 1024, 32, 16)])
+def test_effcap_matches_ref(m, s, t, y):
+    samples = _samples(m, s)
+    thetas = _thetas(t)
+    got = effcap_lme(samples, thetas, max_y=y, alpha=1.0)
+    want = effcap_lme_ref(samples, thetas, max_y=y, alpha=1.0)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-6)
+
+
+@hypothesis.settings(**HSETTINGS)
+@hypothesis.given(
+    m=st.integers(1, 8),
+    s=st.sampled_from([32, 128, 512]),
+    t=st.integers(2, 16),
+    y=st.integers(1, 16),
+    alpha=st.sampled_from([0.5, 1.0, 1.5]),
+    seed=st.integers(0, 2**16),
+)
+def test_effcap_matches_ref_hypothesis(m, s, t, y, alpha, seed):
+    samples = _samples(m, s, seed=seed)
+    thetas = _thetas(t)
+    got = effcap_lme(samples, thetas, max_y=y, alpha=alpha)
+    want = effcap_lme_ref(samples, thetas, max_y=y, alpha=alpha)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-6)
+
+
+def test_effcap_against_gamma_closed_form():
+    # E^c(theta) = -LME/theta must match k*ln(1+theta*s)/theta at y=1.
+    shape_k, scale_s = 1.5, 10.0
+    samples = _samples(1, 200_000, seed=7, shape=shape_k, scale=scale_s)
+    thetas = _thetas(8, 0.01, 3.0)
+    lme = effcap_lme(samples, thetas, max_y=1, alpha=1.0)  # [1, T, 1]
+    ec = -lme[0, :, 0] / thetas
+    want = gamma_effective_capacity(shape_k, scale_s, thetas)
+    np.testing.assert_allclose(ec, want, rtol=0.03)
+
+
+def test_effcap_monotone_in_y():
+    # Higher contention (larger y) can only shrink E^c => raise LME.
+    samples = _samples(2, 2048, seed=3)
+    thetas = _thetas(6)
+    lme = np.asarray(effcap_lme(samples, thetas, max_y=8, alpha=1.0))
+    diffs = np.diff(lme, axis=2)
+    assert (diffs >= -1e-6).all(), "LME must be nondecreasing in y"
+
+
+def test_effcap_deterministic_rates():
+    # f identically c: LME = -theta*c/y^alpha exactly.
+    c = 5.0
+    samples = jnp.full((1, 128), c, jnp.float32)
+    thetas = _thetas(5)
+    lme = effcap_lme(samples, thetas, max_y=4, alpha=1.0)
+    ys = np.arange(1, 5, dtype=np.float32)
+    want = -np.asarray(thetas)[None, :, None] * c / ys[None, None, :]
+    np.testing.assert_allclose(lme, want, rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------------------- qos --
+
+
+def _qos_inputs(r, v, c, seed=0):
+    rng = np.random.default_rng(seed)
+    dpr = jnp.asarray(rng.uniform(0.5, 30.0, (r, v)), jnp.float32)
+    z = jnp.asarray(rng.uniform(0.0, 1.5, (r,)), jnp.float32)
+    dd = jnp.asarray(rng.uniform(50.0, 100.0, (r,)), jnp.float32)
+    dcu = jnp.asarray(rng.uniform(0.1, 2.0, (r,)), jnp.float32)
+    dsu = jnp.asarray(rng.uniform(0.05, 5.0, (r,)), jnp.float32)
+    onehot = np.zeros((r, c), np.float32)
+    onehot[np.arange(r), rng.integers(0, c, r)] = 1.0
+    return dpr, z, dd, dcu, dsu, jnp.asarray(onehot)
+
+
+@pytest.mark.parametrize("r,v,c,tile", [(64, 8, 4, 64), (256, 32, 8, 64), (128, 16, 6, 32)])
+def test_qos_matches_ref(r, v, c, tile):
+    args = _qos_inputs(r, v, c)
+    kw = dict(delta=0.05, lo=0.05, hi=4.0)
+    zt, dt = qos_apportion(*args, row_tile=tile, **kw)
+    zt_ref, dt_ref = qos_apportion_ref(*args, **kw)
+    np.testing.assert_allclose(zt, zt_ref, rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(dt, dt_ref, rtol=2e-5, atol=2e-5)
+
+
+@hypothesis.settings(**HSETTINGS)
+@hypothesis.given(
+    tiles=st.integers(1, 4),
+    v=st.integers(2, 24),
+    c=st.integers(1, 8),
+    delta=st.sampled_from([0.01, 0.05, 0.5]),
+    seed=st.integers(0, 2**16),
+)
+def test_qos_matches_ref_hypothesis(tiles, v, c, delta, seed):
+    r = 32 * tiles
+    args = _qos_inputs(r, v, c, seed=seed)
+    kw = dict(delta=delta, lo=0.05, hi=4.0)
+    zt, dt = qos_apportion(*args, row_tile=32, **kw)
+    zt_ref, dt_ref = qos_apportion_ref(*args, **kw)
+    np.testing.assert_allclose(zt, zt_ref, rtol=5e-5, atol=5e-6)
+    np.testing.assert_allclose(dt, dt_ref, rtol=5e-5, atol=5e-5)
+
+
+def test_qos_mass_conservation():
+    # Summing zt over nodes recovers the per-core total arrival mass.
+    r, v, c = 128, 16, 4
+    dpr, z, dd, dcu, dsu, group = _qos_inputs(r, v, c, seed=5)
+    zt, _ = qos_apportion(
+        dpr, z, dd, dcu, dsu, group, delta=0.05, lo=0.05, hi=4.0, row_tile=64
+    )
+    want = np.asarray(group).T @ np.asarray(z)
+    np.testing.assert_allclose(np.asarray(zt).sum(axis=0), want, rtol=2e-5)
+
+
+def test_qos_padding_rows_are_inert():
+    r, v, c = 64, 8, 4
+    dpr, z, dd, dcu, dsu, group = _qos_inputs(r, v, c, seed=9)
+    kw = dict(delta=0.05, lo=0.05, hi=4.0, row_tile=64)
+    zt0, dt0 = qos_apportion(dpr, z, dd, dcu, dsu, group, **kw)
+    # Append a tile of padding rows: z=0, group=0.
+    pad = 64
+    dpr2 = jnp.concatenate([dpr, jnp.ones((pad, v), jnp.float32)])
+    z2 = jnp.concatenate([z, jnp.zeros((pad,), jnp.float32)])
+    dd2 = jnp.concatenate([dd, jnp.ones((pad,), jnp.float32)])
+    dcu2 = jnp.concatenate([dcu, jnp.ones((pad,), jnp.float32)])
+    dsu2 = jnp.concatenate([dsu, jnp.ones((pad,), jnp.float32)])
+    group2 = jnp.concatenate([group, jnp.zeros((pad, c), jnp.float32)])
+    zt1, dt1 = qos_apportion(dpr2, z2, dd2, dcu2, dsu2, group2, **kw)
+    np.testing.assert_allclose(zt1, zt0, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(dt1, dt0, rtol=1e-6, atol=1e-7)

@@ -1,0 +1,94 @@
+"""Layer-2 graph tests: g-table semantics and the transformer block."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _samples(m, s, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.gamma(1.5, 10.0, size=(m, s)), jnp.float32)
+
+
+def _thetas(t=16):
+    return jnp.asarray(np.geomspace(1e-3, 10.0, t), jnp.float32)
+
+
+class TestEffcapTable:
+    def test_shapes(self):
+        g, gm = model.effcap_table(
+            _samples(3, 512), _thetas(), jnp.ones((3,), jnp.float32),
+            max_y=8, alpha=1.0, epsilon=0.2,
+        )
+        assert g.shape == (3, 8) and gm.shape == (3, 8)
+
+    def test_bound_dominates_mean(self):
+        g, gm = model.effcap_table(
+            _samples(4, 2048), _thetas(), jnp.ones((4,), jnp.float32),
+            max_y=16, alpha=1.0, epsilon=0.2,
+        )
+        assert (np.asarray(g) >= np.asarray(gm) - 1e-6).all()
+
+    def test_monotone_in_y(self):
+        g, _ = model.effcap_table(
+            _samples(4, 2048), _thetas(), jnp.ones((4,), jnp.float32),
+            max_y=16, alpha=1.0, epsilon=0.2,
+        )
+        assert (np.diff(np.asarray(g), axis=1) >= -1e-6).all()
+
+    def test_epsilon_ordering(self):
+        s = _samples(2, 2048)
+        w = jnp.ones((2,), jnp.float32)
+        strict, _ = model.effcap_table(s, _thetas(), w, max_y=8, alpha=1.0, epsilon=0.05)
+        loose, _ = model.effcap_table(s, _thetas(), w, max_y=8, alpha=1.0, epsilon=0.5)
+        assert (np.asarray(strict) >= np.asarray(loose) - 1e-6).all()
+
+    def test_clamped_at_20x_mean(self):
+        g, gm = model.effcap_table(
+            _samples(2, 256, seed=3), _thetas(4), jnp.ones((2,), jnp.float32),
+            max_y=16, alpha=2.0, epsilon=0.01,
+        )
+        assert np.isfinite(np.asarray(g)).all()
+        assert (np.asarray(g) <= 20.0 * np.asarray(gm) + 1e-5).all()
+
+    def test_deterministic_rates_give_mean_delay(self):
+        s = jnp.full((1, 256), 4.0, jnp.float32)
+        thetas = jnp.asarray(np.geomspace(1e-3, 1e4, 64), jnp.float32)
+        g, gm = model.effcap_table(
+            s, thetas, jnp.asarray([2.0], jnp.float32),
+            max_y=4, alpha=1.0, epsilon=0.2,
+        )
+        np.testing.assert_allclose(gm[0, 0], 0.5, rtol=1e-6)
+        assert 0.5 <= float(g[0, 0]) < 0.502
+
+
+class TestMsBlock:
+    def test_shape_preserved(self):
+        p = model.ms_block_params(64, 128)
+        x = jnp.ones((2, 8, 64), jnp.float32)
+        y = model.ms_block(p, x)
+        assert y.shape == x.shape
+
+    def test_deterministic(self):
+        p = model.ms_block_params(64, 128)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 64))
+        y1 = model.ms_block(p, x)
+        y2 = model.ms_block(p, x)
+        np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+    def test_not_identity(self):
+        p = model.ms_block_params(64, 128)
+        x = jax.random.normal(jax.random.PRNGKey(2), (1, 4, 64))
+        y = model.ms_block(p, x)
+        assert float(jnp.abs(y - x).max()) > 1e-3
+
+    @pytest.mark.parametrize("b,l", [(1, 1), (4, 16)])
+    def test_batch_shapes(self, b, l):
+        p = model.ms_block_params(32, 64)
+        x = jnp.zeros((b, l, 32), jnp.float32)
+        assert model.ms_block(p, x).shape == (b, l, 32)

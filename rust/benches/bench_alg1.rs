@@ -1,0 +1,111 @@
+//! Algorithm 1 per-slot complexity — verifies the paper's
+//! `O(M·(1 + |Jqu|·|V|·|Mlt|))` bound empirically: decision time scales
+//! ~linearly in each of queue length, node count, and light-MS count.
+//!
+//! Run: `cargo bench --bench bench_alg1`.
+
+use std::time::Duration;
+
+use fmedge::benchkit::{bench_budget, print_table, BenchResult};
+use fmedge::config::{ExperimentConfig, NUM_RESOURCES};
+use fmedge::controller::{greedy_light_deployment, LightRequest, OnlineParams};
+use fmedge::effcap::{GTable, GTableParams};
+use fmedge::network::Topology;
+use fmedge::rng::{Distribution, Gamma, Rng, Xoshiro256};
+use fmedge::routing::DistanceMatrix;
+
+struct Fixture {
+    dm: DistanceMatrix,
+    gtable: GTable,
+    resources: Vec<[f64; NUM_RESOURCES]>,
+    costs: Vec<(f64, f64, f64)>,
+    nv: usize,
+}
+
+fn fixture(num_eds: usize, num_ess: usize, nl: usize) -> Fixture {
+    let mut cfg = ExperimentConfig::paper_default();
+    cfg.network.num_eds = num_eds;
+    cfg.network.num_ess = num_ess;
+    let mut rng = Xoshiro256::seed_from(9);
+    let topo = Topology::generate(&cfg, &mut rng);
+    let dm = DistanceMatrix::build(&topo, 1.0);
+    let mut samples = Vec::new();
+    let mut workloads = Vec::new();
+    for i in 0..nl {
+        samples.push(Gamma::new(1.5, 8.0 + i as f64).sample_n(&mut rng, 1024));
+        workloads.push(1.0);
+    }
+    Fixture {
+        nv: topo.num_nodes(),
+        dm,
+        gtable: GTable::build(&samples, &workloads, &GTableParams::default_paper()),
+        resources: vec![[1.0, 0.2, 0.5, 0.1]; nl],
+        costs: vec![(4.0, 1.0, 0.5); nl],
+    }
+}
+
+fn queue(fx: &Fixture, n: usize, nl: usize) -> Vec<LightRequest> {
+    let mut rng = Xoshiro256::seed_from(n as u64);
+    (0..n)
+        .map(|i| LightRequest {
+            task_id: i as u64,
+            light_idx: rng.next_below(nl as u64) as usize,
+            from_node: rng.next_below(fx.nv as u64) as usize,
+            payload_mb: rng.range_f64(0.2, 1.5),
+            h: rng.range_f64(0.5, 20.0),
+            deadline_slack_ms: 50.0,
+        })
+        .collect()
+}
+
+fn run_case(name: &str, fx: &Fixture, nl: usize, qlen: usize) -> BenchResult {
+    let q = queue(fx, qlen, nl);
+    let busy = vec![vec![0u32; nl]; fx.nv];
+    let residual = vec![[16.0, 4.0, 8.0, 2.0]; fx.nv];
+    let params = OnlineParams::from_config(&ExperimentConfig::paper_default().controller);
+    bench_budget(name, Duration::from_millis(300), || {
+        let d = greedy_light_deployment(
+            &q,
+            &busy,
+            &residual,
+            &fx.resources,
+            &fx.costs,
+            &fx.gtable,
+            &fx.dm,
+            &params,
+        );
+        std::hint::black_box(d.stats.objective);
+    })
+}
+
+fn main() {
+    let mut results = Vec::new();
+
+    // Scaling in |Jqu| at the paper's network size.
+    let fx = fixture(12, 4, 9);
+    for qlen in [10usize, 40, 160, 640] {
+        results.push(run_case(&format!("|Jqu|={qlen} (V=16, M=9)"), &fx, 9, qlen));
+    }
+    // Scaling in |V|.
+    for (eds, ess) in [(6usize, 2usize), (12, 4), (24, 8), (48, 16)] {
+        let fx = fixture(eds, ess, 9);
+        results.push(run_case(
+            &format!("V={} (|Jqu|=160, M=9)", eds + ess),
+            &fx,
+            9,
+            160,
+        ));
+    }
+    // Scaling in |Mlt|.
+    for nl in [3usize, 9, 18] {
+        let fx = fixture(12, 4, nl);
+        results.push(run_case(&format!("M={nl} (V=16, |Jqu|=160)"), &fx, nl, 160));
+    }
+    print_table(
+        "Algorithm 1 per-slot decision time — expect ~linear growth per axis (paper: O(M(1+|Jqu||V||Mlt|)))",
+        &results,
+    );
+    // Budget context: a slot is 1 ms of simulated time; the decision must
+    // stay well under typical deadline slack (tens of ms).
+    println!("\ntarget: decision ≪ deadline slack (50–100 ms) at paper scale — see mean column.");
+}

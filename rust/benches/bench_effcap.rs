@@ -1,0 +1,68 @@
+//! E1 — effective-capacity model: estimator accuracy against the Gamma
+//! closed form and g-table build throughput, native vs PJRT-accelerated
+//! (the Layer-1 Pallas kernel through the AOT path).
+//!
+//! Run: `make artifacts && cargo bench --bench bench_effcap`.
+
+use std::time::Duration;
+
+use fmedge::benchkit::{bench_budget, print_data_table, print_table};
+use fmedge::effcap::{effective_capacity, GTable, GTableParams};
+use fmedge::rng::{Distribution, Gamma, Xoshiro256};
+use fmedge::runtime::{EffCapAccel, Runtime};
+
+fn main() {
+    // --- accuracy vs the closed form -------------------------------------
+    let g = Gamma::new(1.5, 10.0);
+    let mut rng = Xoshiro256::seed_from(3);
+    let samples = g.sample_n(&mut rng, 4096);
+    let mut rows = Vec::new();
+    for theta in [0.01, 0.1, 0.5, 1.0, 3.0, 10.0] {
+        let est = effective_capacity(&samples, theta);
+        let exact = g.effective_capacity(theta, 1.0);
+        rows.push(vec![
+            format!("{theta}"),
+            format!("{est:.4}"),
+            format!("{exact:.4}"),
+            format!("{:.2}%", 100.0 * (est - exact).abs() / exact),
+        ]);
+    }
+    print_data_table(
+        "E1 — sampled Ê^c(θ) vs Gamma closed form k·ln(1+θs)/θ (S=4096)",
+        &["theta", "estimate", "closed form", "rel err"],
+        &rows,
+    );
+
+    // --- build throughput: native vs PJRT --------------------------------
+    let params = GTableParams::default_paper();
+    let mut samples9 = Vec::new();
+    let mut workloads = Vec::new();
+    for i in 0..9 {
+        samples9.push(Gamma::new(1.2 + 0.1 * i as f64, 6.0).sample_n(&mut rng, 4096));
+        workloads.push(1.0 + 0.1 * i as f64);
+    }
+    let mut results = Vec::new();
+    results.push(bench_budget(
+        "native g-table (9 MS × 16 y × 32 θ × 4096 samples)",
+        Duration::from_millis(600),
+        || {
+            let t = GTable::build(&samples9, &workloads, &params);
+            std::hint::black_box(t.delay(0, 1));
+        },
+    ));
+    match Runtime::cpu(Runtime::default_dir()).and_then(|rt| EffCapAccel::load(&rt)) {
+        Ok(accel) => {
+            results.push(bench_budget(
+                "PJRT g-table (same workload, AOT Pallas kernel)",
+                Duration::from_millis(600),
+                || {
+                    let t = accel.build_gtable(&samples9, &workloads).expect("accel");
+                    std::hint::black_box(t.delay(0, 1));
+                },
+            ));
+        }
+        Err(e) => println!("(PJRT path skipped: {e})"),
+    }
+    print_table("g-table build time", &results);
+    println!("\ntarget (DESIGN.md §Perf): planning-time rebuild well under a second.");
+}

@@ -1,0 +1,90 @@
+//! Fig. 3 — violin-plot comparison of on-time completion rate and total
+//! system cost across the four deployment strategies.
+//!
+//! Regenerates the figure's data: N independent trials per strategy on
+//! freshly sampled Table-I environments; emits per-strategy summary rows,
+//! the KDE violin series, and a CSV (`target/fig3.csv`) for plotting.
+//!
+//! Run: `cargo bench --bench bench_fig3` (FMEDGE_TRIALS to override N).
+
+use fmedge::baselines::{GaStrategy, LbrrStrategy, PropAvg, Proposal};
+use fmedge::benchkit::print_data_table;
+use fmedge::config::ExperimentConfig;
+use fmedge::metrics::{kde_violin, Summary};
+use fmedge::sim::{run_trial, SimEnv, SimOptions, Strategy};
+
+fn main() {
+    let trials: usize = std::env::var("FMEDGE_TRIALS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(24);
+    let mut cfg = ExperimentConfig::paper_default();
+    cfg.sim.slots = 400;
+    // Fig. 3's operating point: moderate contention. At very light load
+    // every strategy (including deadline-agnostic LBRR) over-provisions
+    // its way to ~99% on-time; the paper's regime separation appears once
+    // capacity is contended (see bench_fig4 for the full load sweep).
+    cfg.sim.load_multiplier = 1.4;
+
+    let mut rows = Vec::new();
+    let mut csv = String::from("strategy,trial,on_time_rate,completion_rate,total_cost\n");
+    for name in ["Proposal", "PropAvg", "LBRR", "GA"] {
+        let mut otr = Vec::new();
+        let mut cost = Vec::new();
+        for trial in 0..trials {
+            let seed = cfg.sim.seed + trial as u64;
+            let env = SimEnv::build(&cfg, seed);
+            let mut s: Box<dyn Strategy> = match name {
+                "Proposal" => Box::new(Proposal::new()),
+                "PropAvg" => Box::new(PropAvg::new()),
+                "LBRR" => Box::new(LbrrStrategy::new()),
+                _ => Box::new(GaStrategy::new(16, 12)),
+            };
+            let m = run_trial(&env, s.as_mut(), seed, &SimOptions::from_config(&cfg));
+            csv.push_str(&format!(
+                "{name},{trial},{:.6},{:.6},{:.2}\n",
+                m.on_time_rate(),
+                m.completion_rate(),
+                m.total_cost
+            ));
+            otr.push(m.on_time_rate());
+            cost.push(m.total_cost);
+        }
+        let so = Summary::of(&otr);
+        let sc = Summary::of(&cost);
+        // Violin compactness: inter-quartile range over the median.
+        let iqr = so.q75 - so.q25;
+        rows.push(vec![
+            name.to_string(),
+            format!("{:.3}", so.mean),
+            format!("{:.3}", so.median),
+            format!("{:.3}", so.q25),
+            format!("{:.3}", so.q75),
+            format!("{:.3}", iqr),
+            format!("{:.0}", sc.mean),
+            format!("{:.0}", sc.std),
+        ]);
+        // Emit the violin density series (16-point summary for the log).
+        let v = kde_violin(&otr, 16);
+        let series: Vec<String> = v
+            .grid
+            .iter()
+            .zip(&v.density)
+            .map(|(g, d)| format!("{g:.2}:{d:.2}"))
+            .collect();
+        println!("violin[{name}] on-time density: {}", series.join(" "));
+    }
+    print_data_table(
+        "Fig. 3 — on-time completion rate & total cost (distribution over trials)",
+        &[
+            "strategy", "mean", "median", "q25", "q75", "IQR", "cost mean", "cost std",
+        ],
+        &rows,
+    );
+    std::fs::create_dir_all("target").ok();
+    std::fs::write("target/fig3.csv", csv).expect("write csv");
+    println!("\nraw data -> target/fig3.csv");
+    println!(
+        "paper shape: Proposal compact & high (>84% on-time, moderate cost);\nLBRR low-cost/low-QoS; GA widest spread; PropAvg cheaper with a longer lower tail."
+    );
+}

@@ -1,0 +1,103 @@
+//! P1 — static placement solver study (§III-A): solve time and objective
+//! across methods (greedy cover, LP+rounding, exact branch-and-bound) and
+//! the κ diversity trade-off the paper discusses after (16).
+//!
+//! Run: `cargo bench --bench bench_ilp`.
+
+use std::time::{Duration, Instant};
+
+use fmedge::benchkit::{bench_budget, fmt_duration, print_data_table, print_table};
+use fmedge::config::ExperimentConfig;
+use fmedge::placement::{solve_static_placement, PlacementParams, QosScores, ScoreParams};
+use fmedge::rng::Xoshiro256;
+use fmedge::sim::SimEnv;
+use fmedge::workload::WorkloadGenerator;
+
+fn scores_for(cfg: &ExperimentConfig, seed: u64) -> (SimEnv, QosScores) {
+    let env = SimEnv::build(cfg, seed);
+    let gen = WorkloadGenerator::new(
+        cfg,
+        &env.app,
+        &env.topo,
+        &mut Xoshiro256::seed_from(env.users_seed),
+    );
+    let scores = QosScores::compute(
+        &env.app,
+        &env.topo,
+        &env.dm,
+        gen.users(),
+        &ScoreParams::from_config(&cfg.controller),
+    );
+    (env, scores)
+}
+
+fn main() {
+    let cfg = ExperimentConfig::paper_default();
+    let (env, scores) = scores_for(&cfg, 7);
+    let base = PlacementParams::from_config(&cfg, cfg.sim.slots);
+
+    // --- method comparison: time + objective + support ------------------
+    let mut rows = Vec::new();
+    for (name, exact, fallback) in [
+        ("greedy cover", false, true),
+        ("LP + rounding (default)", false, false),
+        ("exact B&B (warm-started)", true, false),
+    ] {
+        let mut p = base.clone();
+        p.exact = exact;
+        p.force_fallback = fallback;
+        let t0 = Instant::now();
+        let sol = solve_static_placement(&env.app, &env.topo, &scores, &p);
+        let dt = t0.elapsed();
+        rows.push(vec![
+            name.to_string(),
+            fmt_duration(dt),
+            format!("{:.1}", sol.objective),
+            format!("{}", sol.total_instances()),
+            format!("{}", sol.support),
+        ]);
+    }
+    print_data_table(
+        "P1 — placement methods on the paper-scale instance (16 nodes × 6 core MSs)",
+        &["method", "solve time", "objective (14)", "instances", "support"],
+        &rows,
+    );
+
+    // --- κ trade-off ------------------------------------------------------
+    let mut rows = Vec::new();
+    for kappa in [2usize, 4, 8, 12, 16, 20] {
+        let mut p = base.clone();
+        p.kappa = kappa;
+        let sol = solve_static_placement(&env.app, &env.topo, &scores, &p);
+        rows.push(vec![
+            format!("{kappa}"),
+            format!("{:.1}", sol.objective),
+            format!("{}", sol.total_instances()),
+            format!("{}", sol.support),
+        ]);
+    }
+    print_data_table(
+        "κ (C6) trade-off — diversity vs objective value",
+        &["kappa", "objective (14)", "instances", "support"],
+        &rows,
+    );
+
+    // --- scaling in network size (default pipeline) ----------------------
+    let mut results = Vec::new();
+    for (eds, ess) in [(6usize, 2usize), (12, 4), (24, 8), (48, 16)] {
+        let mut cfg2 = cfg.clone();
+        cfg2.network.num_eds = eds;
+        cfg2.network.num_ess = ess;
+        let (env2, scores2) = scores_for(&cfg2, 11);
+        let p = PlacementParams::from_config(&cfg2, cfg2.sim.slots);
+        results.push(bench_budget(
+            &format!("LP+round V={}", eds + ess),
+            Duration::from_millis(250),
+            || {
+                let s = solve_static_placement(&env2.app, &env2.topo, &scores2, &p);
+                std::hint::black_box(s.objective);
+            },
+        ));
+    }
+    print_table("placement solve time vs network size", &results);
+}

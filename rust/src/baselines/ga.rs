@@ -1,0 +1,477 @@
+//! GA baseline (§IV): a genetic algorithm searching deployment matrices
+//! with a fitness combining total system cost and QoS-violation penalties.
+//!
+//! Chromosome: the flattened core instance matrix `x[v][ci]` (and, for the
+//! dynamic tier, a static light provisioning matrix reused every slot).
+//! Fitness: horizon cost + shortfall penalty (unserved Erlang demand) +
+//! capacity-violation penalty − QoS-score reward. Tournament selection,
+//! uniform crossover, ±1 mutation with repair. The paper observes this
+//! search is high-variance in the stochastic deployment space — exactly
+//! what `bench_fig3` shows.
+
+use crate::config::NUM_RESOURCES;
+use crate::controller::{Assignment, LightDecision, LightRequest};
+use crate::placement::{CorePlacement, QosScores};
+use crate::rng::{Rng, Xoshiro256};
+use crate::sim::SimEnv;
+
+/// GA hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct GaParams {
+    pub population: usize,
+    pub generations: usize,
+    pub tournament: usize,
+    pub crossover_rate: f64,
+    pub mutation_rate: f64,
+    /// Penalty per unit of unserved demand.
+    pub shortfall_penalty: f64,
+    /// Penalty per unit of capacity excess.
+    pub capacity_penalty: f64,
+}
+
+impl Default for GaParams {
+    fn default() -> Self {
+        GaParams {
+            population: 24,
+            generations: 30,
+            tournament: 3,
+            crossover_rate: 0.8,
+            mutation_rate: 0.15,
+            shortfall_penalty: 200.0,
+            capacity_penalty: 100.0,
+        }
+    }
+}
+
+pub struct GaStrategy {
+    params: GaParams,
+    /// Static light provisioning chosen at slot 0, reused every slot.
+    light_plan: Option<Vec<Vec<u32>>>,
+    rr: usize,
+    first_fitness: f64,
+    best_fitness: f64,
+}
+
+impl GaStrategy {
+    pub fn new(population: usize, generations: usize) -> Self {
+        GaStrategy {
+            params: GaParams {
+                population,
+                generations,
+                ..Default::default()
+            },
+            light_plan: None,
+            rr: 0,
+            first_fitness: f64::NAN,
+            best_fitness: f64::NAN,
+        }
+    }
+
+    /// `(initial best, final best)` fitness — convergence diagnostic.
+    pub fn fitness_trajectory(&self) -> (f64, f64) {
+        (self.first_fitness, self.best_fitness)
+    }
+
+    fn evolve<F: Fn(&[u32]) -> f64>(
+        &mut self,
+        len: usize,
+        max_gene: u32,
+        fitness: F,
+        rng: &mut Xoshiro256,
+    ) -> Vec<u32> {
+        let p = &self.params;
+        // Random initial population (sparse: most genes 0).
+        let mut pop: Vec<Vec<u32>> = (0..p.population)
+            .map(|_| {
+                (0..len)
+                    .map(|_| {
+                        if rng.next_f64() < 0.15 {
+                            rng.next_below(max_gene as u64 + 1) as u32
+                        } else {
+                            0
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut fit: Vec<f64> = pop.iter().map(|g| fitness(g)).collect();
+        let best0 = fit.iter().cloned().fold(f64::INFINITY, f64::min);
+        if self.first_fitness.is_nan() {
+            self.first_fitness = best0;
+        }
+
+        for _gen in 0..p.generations {
+            let mut next = Vec::with_capacity(p.population);
+            // Elitism: carry the best genome.
+            let best_idx = (0..pop.len())
+                .min_by(|&a, &b| fit[a].partial_cmp(&fit[b]).unwrap())
+                .unwrap();
+            next.push(pop[best_idx].clone());
+            while next.len() < p.population {
+                let pick = |rng: &mut Xoshiro256| -> usize {
+                    let mut best = rng.next_below(pop.len() as u64) as usize;
+                    for _ in 1..p.tournament {
+                        let c = rng.next_below(pop.len() as u64) as usize;
+                        if fit[c] < fit[best] {
+                            best = c;
+                        }
+                    }
+                    best
+                };
+                let a = pick(rng);
+                let b = pick(rng);
+                let mut child: Vec<u32> = if rng.next_f64() < p.crossover_rate {
+                    (0..len)
+                        .map(|i| if rng.next_f64() < 0.5 { pop[a][i] } else { pop[b][i] })
+                        .collect()
+                } else {
+                    pop[a].clone()
+                };
+                for g in child.iter_mut() {
+                    if rng.next_f64() < p.mutation_rate {
+                        if rng.next_f64() < 0.5 {
+                            *g = g.saturating_sub(1);
+                        } else {
+                            *g = (*g + 1).min(max_gene);
+                        }
+                    }
+                }
+                next.push(child);
+            }
+            pop = next;
+            fit = pop.iter().map(|g| fitness(g)).collect();
+        }
+        let best_idx = (0..pop.len())
+            .min_by(|&a, &b| fit[a].partial_cmp(&fit[b]).unwrap())
+            .unwrap();
+        self.best_fitness = fit[best_idx];
+        pop.swap_remove(best_idx)
+    }
+}
+
+impl crate::sim::Strategy for GaStrategy {
+    fn name(&self) -> &str {
+        "GA"
+    }
+
+    fn place_core(
+        &mut self,
+        env: &SimEnv,
+        scores: &QosScores,
+        rng: &mut Xoshiro256,
+    ) -> CorePlacement {
+        let app = &env.app;
+        let nv = env.topo.num_nodes();
+        let nc = app.catalog.num_core();
+        let demand: Vec<f64> = (0..nc)
+            .map(|ci| {
+                scores
+                    .erlang_demand(
+                        ci,
+                        app.catalog.spec(app.catalog.core_ids()[ci]).mean_proc_delay(),
+                        env.cfg.sim.slot_ms,
+                    )
+                    .ceil()
+                    .max(1.0)
+            })
+            .collect();
+        // Genome ranges over edge servers only (cores live on ESs, §I).
+        let es_nodes: Vec<usize> = env.topo.ess().collect();
+        let genome = {
+            let params = self.params.clone();
+            let demand_f = demand.clone();
+            let es = es_nodes.clone();
+            let f = move |g: &[u32]| fitness_core(g, &es, env, scores, &demand_f, &params);
+            self.evolve(es_nodes.len() * nc, 4, f, rng)
+        };
+        // Repair: enforce per-node capacity by decrementing greedily, then
+        // cover any shortfall on feasible nodes.
+        let mut instances = vec![vec![0u32; nc]; nv];
+        for (ei, &v) in es_nodes.iter().enumerate() {
+            for ci in 0..nc {
+                instances[v][ci] = genome[ei * nc + ci];
+            }
+        }
+        repair_capacity(&mut instances, env);
+        cover_shortfall(&mut instances, env, &demand);
+        let support = instances
+            .iter()
+            .flat_map(|r| r.iter())
+            .filter(|&&x| x > 0)
+            .count();
+        CorePlacement {
+            instances,
+            objective: self.best_fitness,
+            used_fallback: false,
+            support,
+            demand_target: demand,
+        }
+    }
+
+    fn decide_light(
+        &mut self,
+        env: &SimEnv,
+        _slot: usize,
+        queue: &[LightRequest],
+        busy: &[Vec<u32>],
+        residual: &[[f64; NUM_RESOURCES]],
+        rng: &mut Xoshiro256,
+    ) -> LightDecision {
+        let nv = busy.len();
+        let nl = env.light_resources.len();
+        let max_y = env.gtable.max_parallelism().max(1);
+
+        // One-time GA provisioning of the light tier against the average
+        // per-slot demand (queue length as proxy at first decision).
+        if self.light_plan.is_none() {
+            let mut demand = vec![0.0f64; nl];
+            for r in queue {
+                demand[r.light_idx] += 1.0;
+            }
+            for d in demand.iter_mut() {
+                *d = (*d / max_y as f64).ceil().max(1.0);
+            }
+            let costs = env.light_costs.clone();
+            let resources = env.light_resources.clone();
+            let caps: Vec<[f64; NUM_RESOURCES]> = residual.to_vec();
+            let shortfall_penalty = self.params.shortfall_penalty;
+            let capacity_penalty = self.params.capacity_penalty;
+            let f = move |g: &[u32]| -> f64 {
+                let mut cost = 0.0;
+                let mut shortfall = 0.0;
+                let mut excess = 0.0;
+                for m in 0..nl {
+                    let total: u32 = (0..nv).map(|v| g[v * nl + m]).sum();
+                    cost += (costs[m].1 + costs[m].2) * total as f64;
+                    shortfall += (demand[m] - total as f64).max(0.0);
+                }
+                for v in 0..nv {
+                    for k in 0..NUM_RESOURCES {
+                        let used: f64 = (0..nl)
+                            .map(|m| resources[m][k] * g[v * nl + m] as f64)
+                            .sum();
+                        excess += (used - caps[v][k]).max(0.0);
+                    }
+                }
+                cost + shortfall_penalty * shortfall + capacity_penalty * excess
+            };
+            let genome = self.evolve(nv * nl, 3, f, rng);
+            let mut plan = vec![vec![0u32; nl]; nv];
+            for v in 0..nv {
+                for m in 0..nl {
+                    plan[v][m] = genome[v * nl + m];
+                }
+            }
+            self.light_plan = Some(plan);
+        }
+        let plan = self.light_plan.as_ref().unwrap();
+
+        // x = busy ∪ plan, clamped by residual capacity.
+        let mut x = busy.to_vec();
+        let mut residual = residual.to_vec();
+        for v in 0..nv {
+            for m in 0..nl {
+                while x[v][m] < plan[v][m] {
+                    let fits = (0..NUM_RESOURCES)
+                        .all(|k| residual[v][k] >= env.light_resources[m][k]);
+                    if !fits {
+                        break;
+                    }
+                    for k in 0..NUM_RESOURCES {
+                        residual[v][k] -= env.light_resources[m][k];
+                    }
+                    x[v][m] += 1;
+                }
+            }
+        }
+
+        // Round-robin dispatch over the provisioned instances.
+        let mut y = vec![vec![0u32; nl]; nv];
+        let mut assignments: Vec<Option<Assignment>> = vec![None; queue.len()];
+        for (qi, r) in queue.iter().enumerate() {
+            let m = r.light_idx;
+            let hosts: Vec<usize> = (0..nv).filter(|&v| x[v][m] > 0).collect();
+            if hosts.is_empty() {
+                continue;
+            }
+            let mut chosen = None;
+            for off in 0..hosts.len() {
+                let v = hosts[(self.rr + off) % hosts.len()];
+                if y[v][m] < x[v][m] * max_y as u32 {
+                    chosen = Some(v);
+                    break;
+                }
+            }
+            self.rr = self.rr.wrapping_add(1);
+            let Some(v) = chosen else { continue };
+            let per_inst = ((y[v][m] + 1) as usize).div_ceil(x[v][m] as usize);
+            y[v][m] += 1;
+            assignments[qi] = Some(Assignment {
+                node: v,
+                light_idx: m,
+                y: per_inst as u32,
+                transfer_ms: env.dm.latency(r.from_node, v, r.payload_mb),
+                est_proc_ms: env.gtable.mean_delay(m, per_inst),
+            });
+        }
+        LightDecision {
+            x,
+            y,
+            assignments,
+            stats: Default::default(),
+        }
+    }
+}
+
+/// Core-placement fitness: horizon cost + shortfall & capacity penalties
+/// − QoS-score reward (shares the ILP's objective structure). `es_nodes`
+/// maps genome rows to network node ids.
+fn fitness_core(
+    genome: &[u32],
+    es_nodes: &[usize],
+    env: &SimEnv,
+    scores: &QosScores,
+    demand: &[f64],
+    params: &GaParams,
+) -> f64 {
+    let app = &env.app;
+    let topo = &env.topo;
+    let core_ids = app.catalog.core_ids();
+    let nc = core_ids.len();
+    let ne = es_nodes.len();
+    let mut cost = 0.0;
+    let mut reward = 0.0;
+    let mut shortfall = 0.0;
+    let mut cap_excess = 0.0;
+    for ci in 0..nc {
+        let spec = app.catalog.spec(core_ids[ci]);
+        let unit = spec.cost_deploy + spec.cost_maint * env.cfg.sim.slots as f64;
+        let total: u32 = (0..ne).map(|ei| genome[ei * nc + ci]).sum();
+        cost += unit * total as f64;
+        shortfall += (demand[ci] - total as f64).max(0.0);
+        for (ei, &v) in es_nodes.iter().enumerate() {
+            reward += scores.q[v][ci] * genome[ei * nc + ci].min(1) as f64;
+        }
+    }
+    for (ei, &v) in es_nodes.iter().enumerate() {
+        for k in 0..NUM_RESOURCES {
+            let used: f64 = (0..nc)
+                .map(|ci| app.catalog.spec(core_ids[ci]).resources[k] * genome[ei * nc + ci] as f64)
+                .sum();
+            cap_excess += (used - topo.node(v).capacity[k]).max(0.0);
+        }
+    }
+    cost + params.shortfall_penalty * shortfall + params.capacity_penalty * cap_excess - reward
+}
+
+/// Decrement genes until every node fits its capacity.
+fn repair_capacity(instances: &mut [Vec<u32>], env: &SimEnv) {
+    let app = &env.app;
+    let core_ids = app.catalog.core_ids();
+    for (v, row) in instances.iter_mut().enumerate() {
+        loop {
+            let mut worst: Option<(usize, f64)> = None;
+            for k in 0..NUM_RESOURCES {
+                let used: f64 = row
+                    .iter()
+                    .enumerate()
+                    .map(|(ci, &x)| app.catalog.spec(core_ids[ci]).resources[k] * x as f64)
+                    .sum();
+                let cap = env.topo.node(v).capacity[k];
+                if used > cap {
+                    let over = used - cap;
+                    if worst.map_or(true, |(_, w)| over > w) {
+                        worst = Some((k, over));
+                    }
+                }
+            }
+            let Some((k, _)) = worst else { break };
+            // Remove the instance contributing most to resource k.
+            let ci = (0..row.len())
+                .filter(|&ci| row[ci] > 0)
+                .max_by(|&a, &b| {
+                    app.catalog.spec(core_ids[a]).resources[k]
+                        .partial_cmp(&app.catalog.spec(core_ids[b]).resources[k])
+                        .unwrap()
+                });
+            match ci {
+                Some(ci) => row[ci] -= 1,
+                None => break,
+            }
+        }
+    }
+}
+
+/// Add instances on any feasible edge server until each MS covers demand.
+fn cover_shortfall(instances: &mut Vec<Vec<u32>>, env: &SimEnv, demand: &[f64]) {
+    let app = &env.app;
+    let core_ids = app.catalog.core_ids();
+    let nv = env.topo.num_nodes();
+    let es_nodes: Vec<usize> = env.topo.ess().collect();
+    for ci in 0..core_ids.len() {
+        let spec = app.catalog.spec(core_ids[ci]);
+        loop {
+            let total: u32 = (0..nv).map(|v| instances[v][ci]).sum();
+            if (total as f64) >= demand[ci] {
+                break;
+            }
+            // First edge server with room.
+            let mut placed = false;
+            for &v in &es_nodes {
+                let fits = (0..NUM_RESOURCES).all(|k| {
+                    let used: f64 = instances[v]
+                        .iter()
+                        .enumerate()
+                        .map(|(cj, &x)| app.catalog.spec(core_ids[cj]).resources[k] * x as f64)
+                        .sum();
+                    used + spec.resources[k] <= env.topo.node(v).capacity[k]
+                });
+                if fits {
+                    instances[v][ci] += 1;
+                    placed = true;
+                    break;
+                }
+            }
+            if !placed {
+                break;
+            }
+        }
+    }
+    // Coverage guarantee: a service with zero instances is starvation, not
+    // a cost saving. Evict surplus instances of other services until one
+    // instance of the starved MS fits somewhere.
+    for ci in 0..core_ids.len() {
+        let total: u32 = (0..nv).map(|v| instances[v][ci]).sum();
+        if total > 0 {
+            continue;
+        }
+        let spec = app.catalog.spec(core_ids[ci]);
+        'evict: for &v in &es_nodes {
+            loop {
+                let fits = (0..NUM_RESOURCES).all(|k| {
+                    let used: f64 = instances[v]
+                        .iter()
+                        .enumerate()
+                        .map(|(cj, &x)| app.catalog.spec(core_ids[cj]).resources[k] * x as f64)
+                        .sum();
+                    used + spec.resources[k] <= env.topo.node(v).capacity[k]
+                });
+                if fits {
+                    instances[v][ci] += 1;
+                    break 'evict;
+                }
+                // Evict from the most over-provisioned other MS here.
+                let victim = (0..core_ids.len())
+                    .filter(|&cj| cj != ci && instances[v][cj] > 0)
+                    .max_by_key(|&cj| {
+                        let tot: u32 = (0..nv).map(|vv| instances[vv][cj]).sum();
+                        (tot as i64) - (demand[cj].ceil() as i64)
+                    });
+                match victim {
+                    Some(cj) => instances[v][cj] -= 1,
+                    None => break,
+                }
+            }
+        }
+    }
+}

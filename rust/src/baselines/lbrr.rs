@@ -1,0 +1,197 @@
+//! LBRR baseline: least-loaded placement + round-robin dispatch (§IV).
+//!
+//! Core services go to the currently least-loaded node (by normalized
+//! residual capacity) until the demand estimate is met; light demand is
+//! served by instantiating on the least-loaded feasible node and routing
+//! queued tasks round-robin over deployed instances — deadline-agnostic
+//! by design.
+
+use crate::config::NUM_RESOURCES;
+use crate::controller::{Assignment, LightDecision, LightRequest};
+use crate::placement::{CorePlacement, QosScores};
+use crate::rng::Xoshiro256;
+use crate::sim::SimEnv;
+
+pub struct LbrrStrategy {
+    rr_counter: usize,
+}
+
+impl LbrrStrategy {
+    pub fn new() -> Self {
+        LbrrStrategy { rr_counter: 0 }
+    }
+}
+
+impl Default for LbrrStrategy {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Normalized load of a node: max over resources of used/capacity.
+fn norm_load(used: &[f64; NUM_RESOURCES], cap: &[f64; NUM_RESOURCES]) -> f64 {
+    (0..NUM_RESOURCES)
+        .map(|k| if cap[k] > 0.0 { used[k] / cap[k] } else { 0.0 })
+        .fold(0.0, f64::max)
+}
+
+impl crate::sim::Strategy for LbrrStrategy {
+    fn name(&self) -> &str {
+        "LBRR"
+    }
+
+    fn place_core(
+        &mut self,
+        env: &SimEnv,
+        scores: &QosScores,
+        _rng: &mut Xoshiro256,
+    ) -> CorePlacement {
+        let app = &env.app;
+        let topo = &env.topo;
+        let core_ids = app.catalog.core_ids();
+        let nv = topo.num_nodes();
+        let nc = core_ids.len();
+        let mut instances = vec![vec![0u32; nc]; nv];
+        let mut used = vec![[0.0f64; NUM_RESOURCES]; nv];
+
+        // Coverage first: one instance of every MS so no service is
+        // starved, then scale toward the demand estimate least-loaded.
+        for round in 0..2 {
+            for ci in 0..nc {
+            let spec = app.catalog.spec(core_ids[ci]);
+            let demand = if round == 0 {
+                1
+            } else {
+                scores
+                    .erlang_demand(ci, spec.mean_proc_delay(), env.cfg.sim.slot_ms)
+                    .ceil()
+                    .max(1.0) as usize
+            };
+            let have: u32 = (0..nv).map(|v| instances[v][ci]).sum();
+            for _ in (have as usize)..demand {
+                // Least-loaded edge server that fits the instance (core
+                // services live on ESs; see §I and PlacementParams).
+                let mut best: Option<(usize, f64)> = None;
+                for v in topo.ess() {
+                    let cap = topo.node(v).capacity;
+                    let fits = (0..NUM_RESOURCES)
+                        .all(|k| used[v][k] + spec.resources[k] <= cap[k]);
+                    if !fits {
+                        continue;
+                    }
+                    let load = norm_load(&used[v], &cap);
+                    if best.map_or(true, |(_, b)| load < b) {
+                        best = Some((v, load));
+                    }
+                }
+                let Some((v, _)) = best else { break };
+                for k in 0..NUM_RESOURCES {
+                    used[v][k] += spec.resources[k];
+                }
+                instances[v][ci] += 1;
+            }
+            }
+        }
+        let support = instances
+            .iter()
+            .flat_map(|r| r.iter())
+            .filter(|&&x| x > 0)
+            .count();
+        CorePlacement {
+            instances,
+            objective: 0.0,
+            used_fallback: false,
+            support,
+            demand_target: Vec::new(),
+        }
+    }
+
+    fn decide_light(
+        &mut self,
+        env: &SimEnv,
+        _slot: usize,
+        queue: &[LightRequest],
+        busy: &[Vec<u32>],
+        residual: &[[f64; NUM_RESOURCES]],
+        _rng: &mut Xoshiro256,
+    ) -> LightDecision {
+        let nv = busy.len();
+        let nl = env.light_resources.len();
+        let max_y = env.gtable.max_parallelism().max(1);
+        let mut x = busy.to_vec();
+        let mut residual = residual.to_vec();
+        let mut y = vec![vec![0u32; nl]; nv];
+        let mut assignments: Vec<Option<Assignment>> = vec![None; queue.len()];
+
+        // Demand per MS; ensure enough instances exist (least-loaded
+        // placement), then round-robin tasks over them.
+        let mut demand = vec![0usize; nl];
+        for r in queue {
+            demand[r.light_idx] += 1;
+        }
+        for m in 0..nl {
+            let have: usize = x.iter().map(|r| r[m] as usize).sum::<usize>() * max_y;
+            let mut need = demand[m].saturating_sub(have);
+            while need > 0 {
+                // Least-loaded feasible node by residual CPU fraction.
+                let mut best: Option<(usize, f64)> = None;
+                for v in 0..nv {
+                    let fits = (0..NUM_RESOURCES)
+                        .all(|k| residual[v][k] >= env.light_resources[m][k]);
+                    if !fits {
+                        continue;
+                    }
+                    let cap = env.topo.node(v).capacity;
+                    let free: f64 = (0..NUM_RESOURCES)
+                        .map(|k| if cap[k] > 0.0 { residual[v][k] / cap[k] } else { 1.0 })
+                        .sum();
+                    if best.map_or(true, |(_, b)| free > b) {
+                        best = Some((v, free));
+                    }
+                }
+                let Some((v, _)) = best else { break };
+                for k in 0..NUM_RESOURCES {
+                    residual[v][k] -= env.light_resources[m][k];
+                }
+                x[v][m] += 1;
+                need = need.saturating_sub(max_y);
+            }
+        }
+
+        // Round-robin dispatch (deadline-agnostic).
+        for (qi, r) in queue.iter().enumerate() {
+            let m = r.light_idx;
+            let hosts: Vec<usize> = (0..nv).filter(|&v| x[v][m] > 0).collect();
+            if hosts.is_empty() {
+                continue;
+            }
+            // Try each host starting at the RR pointer until one has room.
+            let mut chosen = None;
+            for off in 0..hosts.len() {
+                let v = hosts[(self.rr_counter + off) % hosts.len()];
+                if y[v][m] < x[v][m] * max_y as u32 {
+                    chosen = Some(v);
+                    break;
+                }
+            }
+            self.rr_counter = self.rr_counter.wrapping_add(1);
+            let Some(v) = chosen else { continue };
+            let per_inst = ((y[v][m] + 1) as usize).div_ceil(x[v][m] as usize);
+            y[v][m] += 1;
+            assignments[qi] = Some(Assignment {
+                node: v,
+                light_idx: m,
+                y: per_inst as u32,
+                transfer_ms: env.dm.latency(r.from_node, v, r.payload_mb),
+                est_proc_ms: env.gtable.mean_delay(m, per_inst),
+            });
+        }
+
+        LightDecision {
+            x,
+            y,
+            assignments,
+            stats: Default::default(),
+        }
+    }
+}

@@ -1,0 +1,116 @@
+//! The evaluated strategies (§IV): the paper's **Proposal**, the
+//! **PropAvg** ablation (mean-value delays instead of effective capacity),
+//! **LBRR** (least-loaded placement + round-robin dispatch), and **GA**
+//! (metaheuristic deployment minimizing cost + violation penalty).
+
+mod ga;
+mod lbrr;
+mod proposal;
+
+pub use ga::{GaParams, GaStrategy};
+pub use lbrr::LbrrStrategy;
+pub use proposal::{Proposal, PropAvg};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::placement::{QosScores, ScoreParams};
+    use crate::rng::Xoshiro256;
+    use crate::sim::{SimEnv, Strategy};
+    use crate::workload::WorkloadGenerator;
+
+    fn env_and_scores(seed: u64) -> (SimEnv, QosScores) {
+        let mut cfg = ExperimentConfig::paper_default();
+        cfg.controller.effcap_samples = 512;
+        let env = SimEnv::build(&cfg, seed);
+        let gen = WorkloadGenerator::new(
+            &env.cfg,
+            &env.app,
+            &env.topo,
+            &mut Xoshiro256::seed_from(env.users_seed),
+        );
+        let scores = QosScores::compute(
+            &env.app,
+            &env.topo,
+            &env.dm,
+            gen.users(),
+            &ScoreParams::from_config(&env.cfg.controller),
+        );
+        (env, scores)
+    }
+
+    #[test]
+    fn proposal_and_propavg_share_static_tier() {
+        let (env, scores) = env_and_scores(3);
+        let mut rng1 = Xoshiro256::seed_from(1);
+        let mut rng2 = Xoshiro256::seed_from(1);
+        let p1 = Proposal::new().place_core(&env, &scores, &mut rng1);
+        let p2 = PropAvg::new().place_core(&env, &scores, &mut rng2);
+        assert_eq!(p1.instances, p2.instances, "ablation differs only online");
+    }
+
+    #[test]
+    fn lbrr_places_all_core_services() {
+        let (env, scores) = env_and_scores(4);
+        let mut rng = Xoshiro256::seed_from(2);
+        let p = LbrrStrategy::new().place_core(&env, &scores, &mut rng);
+        for ci in 0..env.app.catalog.num_core() {
+            let total: u32 = p.instances.iter().map(|r| r[ci]).sum();
+            assert!(total >= 1, "core MS {ci} unplaced");
+        }
+    }
+
+    #[test]
+    fn lbrr_respects_capacity() {
+        let (env, scores) = env_and_scores(5);
+        let mut rng = Xoshiro256::seed_from(3);
+        let p = LbrrStrategy::new().place_core(&env, &scores, &mut rng);
+        for (v, row) in p.instances.iter().enumerate() {
+            for k in 0..crate::config::NUM_RESOURCES {
+                let used: f64 = row
+                    .iter()
+                    .enumerate()
+                    .map(|(ci, &x)| {
+                        env.app
+                            .catalog
+                            .spec(env.app.catalog.core_ids()[ci])
+                            .resources[k]
+                            * x as f64
+                    })
+                    .sum();
+                assert!(used <= env.topo.node(v).capacity[k] + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn ga_improves_over_random_start() {
+        let (env, scores) = env_and_scores(6);
+        let mut rng = Xoshiro256::seed_from(4);
+        let mut ga = GaStrategy::new(10, 6);
+        let p = ga.place_core(&env, &scores, &mut rng);
+        // GA must at least cover every service and end with finite fitness.
+        for ci in 0..env.app.catalog.num_core() {
+            let total: u32 = p.instances.iter().map(|r| r[ci]).sum();
+            assert!(total >= 1);
+        }
+        let (first, best) = ga.fitness_trajectory();
+        assert!(best <= first, "GA fitness should not regress");
+    }
+
+    #[test]
+    fn strategy_names_are_distinct() {
+        let names = [
+            Proposal::new().name().to_string(),
+            PropAvg::new().name().to_string(),
+            LbrrStrategy::new().name().to_string(),
+            GaStrategy::new(4, 4).name().to_string(),
+        ];
+        for i in 0..names.len() {
+            for j in (i + 1)..names.len() {
+                assert_ne!(names[i], names[j]);
+            }
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! The paper's two-tier proposal, and its PropAvg ablation.
+
+use crate::config::NUM_RESOURCES;
+use crate::controller::{greedy_light_deployment, LightDecision, LightRequest, OnlineParams};
+use crate::placement::{solve_static_placement, CorePlacement, PlacementParams, QosScores};
+use crate::rng::Xoshiro256;
+use crate::sim::SimEnv;
+
+/// Full proposal: static ILP placement + effective-capacity Lyapunov
+/// greedy controller.
+pub struct Proposal {
+    online: Option<OnlineParams>,
+}
+
+impl Proposal {
+    pub fn new() -> Self {
+        Proposal { online: None }
+    }
+}
+
+impl Default for Proposal {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl crate::sim::Strategy for Proposal {
+    fn name(&self) -> &str {
+        "Proposal"
+    }
+
+    fn place_core(
+        &mut self,
+        env: &SimEnv,
+        scores: &QosScores,
+        _rng: &mut Xoshiro256,
+    ) -> CorePlacement {
+        let params = PlacementParams::from_config(&env.cfg, env.cfg.sim.slots);
+        solve_static_placement(&env.app, &env.topo, scores, &params)
+    }
+
+    fn decide_light(
+        &mut self,
+        env: &SimEnv,
+        _slot: usize,
+        queue: &[LightRequest],
+        busy: &[Vec<u32>],
+        residual: &[[f64; NUM_RESOURCES]],
+        _rng: &mut Xoshiro256,
+    ) -> LightDecision {
+        let params = self
+            .online
+            .get_or_insert_with(|| OnlineParams::from_config(&env.cfg.controller));
+        greedy_light_deployment(
+            queue,
+            busy,
+            residual,
+            &env.light_resources,
+            &env.light_costs,
+            &env.gtable,
+            &env.dm,
+            params,
+        )
+    }
+}
+
+/// PropAvg ablation: identical two-tier logic but mean-value delay
+/// estimates replace the effective-capacity map (§IV).
+pub struct PropAvg {
+    online: Option<OnlineParams>,
+}
+
+impl PropAvg {
+    pub fn new() -> Self {
+        PropAvg { online: None }
+    }
+}
+
+impl Default for PropAvg {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl crate::sim::Strategy for PropAvg {
+    fn name(&self) -> &str {
+        "PropAvg"
+    }
+
+    fn place_core(
+        &mut self,
+        env: &SimEnv,
+        scores: &QosScores,
+        _rng: &mut Xoshiro256,
+    ) -> CorePlacement {
+        let params = PlacementParams::from_config(&env.cfg, env.cfg.sim.slots);
+        solve_static_placement(&env.app, &env.topo, scores, &params)
+    }
+
+    fn decide_light(
+        &mut self,
+        env: &SimEnv,
+        _slot: usize,
+        queue: &[LightRequest],
+        busy: &[Vec<u32>],
+        residual: &[[f64; NUM_RESOURCES]],
+        _rng: &mut Xoshiro256,
+    ) -> LightDecision {
+        let params = self.online.get_or_insert_with(|| {
+            let mut p = OnlineParams::from_config(&env.cfg.controller);
+            p.use_mean_delay = true;
+            p
+        });
+        greedy_light_deployment(
+            queue,
+            busy,
+            residual,
+            &env.light_resources,
+            &env.light_costs,
+            &env.gtable,
+            &env.dm,
+            params,
+        )
+    }
+}

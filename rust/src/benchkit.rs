@@ -1,0 +1,139 @@
+//! Micro/macro benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup + timed iterations with robust statistics, and markdown
+//! table emission so every `cargo bench` target prints the rows of the
+//! paper table/figure it regenerates.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    pub fn mean_ns(&self) -> f64 {
+        self.mean.as_nanos() as f64
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` iterations.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    summarize(name, &mut samples)
+}
+
+/// Auto-calibrating variant: choose an iteration count so the total timed
+/// region is roughly `budget`.
+pub fn bench_budget<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // Calibrate with one run.
+    let t0 = Instant::now();
+    f();
+    let one = t0.elapsed().max(Duration::from_nanos(100));
+    let iters = (budget.as_nanos() / one.as_nanos()).clamp(5, 10_000) as usize;
+    bench(name, (iters / 10).max(1), iters, f)
+}
+
+fn summarize(name: &str, samples: &mut [Duration]) -> BenchResult {
+    samples.sort_unstable();
+    let n = samples.len();
+    let total: Duration = samples.iter().sum();
+    BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean: total / n as u32,
+        median: samples[n / 2],
+        p95: samples[((n as f64 * 0.95) as usize).min(n - 1)],
+        min: samples[0],
+        max: samples[n - 1],
+    }
+}
+
+/// Format a duration human-readably.
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Print a markdown table of results.
+pub fn print_table(title: &str, results: &[BenchResult]) {
+    println!("\n### {title}\n");
+    println!("| case | iters | mean | median | p95 | min | max |");
+    println!("|---|---|---|---|---|---|---|");
+    for r in results {
+        println!(
+            "| {} | {} | {} | {} | {} | {} | {} |",
+            r.name,
+            r.iters,
+            fmt_duration(r.mean),
+            fmt_duration(r.median),
+            fmt_duration(r.p95),
+            fmt_duration(r.min),
+            fmt_duration(r.max),
+        );
+    }
+}
+
+/// Print an arbitrary markdown table (for figure-style data rows).
+pub fn print_data_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    println!("\n### {title}\n");
+    println!("| {} |", headers.join(" | "));
+    println!("|{}|", headers.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+    for row in rows {
+        println!("| {} |", row.join(" | "));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let r = bench("noop-ish", 2, 50, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert_eq!(r.iters, 50);
+        assert!(r.min <= r.median && r.median <= r.max);
+        assert!(r.mean.as_nanos() > 0);
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert!(fmt_duration(Duration::from_nanos(500)).ends_with("ns"));
+        assert!(fmt_duration(Duration::from_micros(50)).ends_with("µs"));
+        assert!(fmt_duration(Duration::from_millis(50)).ends_with("ms"));
+        assert!(fmt_duration(Duration::from_secs(2)).ends_with("s"));
+    }
+
+    #[test]
+    fn bench_budget_calibrates() {
+        let r = bench_budget("calibrated", Duration::from_millis(20), || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.iters >= 5);
+    }
+}

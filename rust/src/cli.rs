@@ -1,0 +1,181 @@
+//! Command-line interface (clap is unavailable offline; this is a small
+//! purpose-built parser). Subcommands:
+//!
+//! * `config --show` — print the Table I parameter set in use.
+//! * `place` — run the static core placement and print the matrix.
+//! * `simulate` — run trials of a strategy and print metrics.
+//! * `gtable` — build and print the effective-capacity delay table
+//!   (native or PJRT-accelerated with `--accel`).
+//! * `serve` — start the serving coordinator on a synthetic open-loop
+//!   workload and print the latency/throughput report.
+
+use std::collections::HashMap;
+
+/// Parsed command line: subcommand + `--key value` / `--flag` options.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+/// Argument errors.
+#[derive(Debug, PartialEq)]
+pub enum ArgError {
+    MissingValue(String),
+    Invalid { key: String, value: String, want: &'static str },
+    UnknownCommand(String),
+}
+
+impl std::fmt::Display for ArgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArgError::MissingValue(k) => write!(f, "option --{k} needs a value"),
+            ArgError::Invalid { key, value, want } => {
+                write!(f, "--{key}={value} is not a valid {want}")
+            }
+            ArgError::UnknownCommand(c) => write!(f, "unknown command `{c}` (try --help)"),
+        }
+    }
+}
+
+impl std::error::Error for ArgError {}
+
+/// Known boolean flags (everything else with `--` expects a value).
+const FLAGS: &[&str] = &["show", "accel", "help", "exact", "fallback", "no-real-compute"];
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self, ArgError> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if FLAGS.contains(&key) {
+                    out.flags.push(key.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| ArgError::MissingValue(key.to_string()))?;
+                    out.opts.insert(key.to_string(), v);
+                }
+            } else if out.command.is_none() {
+                out.command = Some(a);
+            } else {
+                return Err(ArgError::UnknownCommand(a));
+            }
+        }
+        Ok(out)
+    }
+
+    /// From the process arguments.
+    pub fn from_env() -> Result<Self, ArgError> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(String::as_str)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, ArgError> {
+        match self.opts.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| ArgError::Invalid {
+                key: name.to_string(),
+                value: v.clone(),
+                want: "integer",
+            }),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, ArgError> {
+        match self.opts.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| ArgError::Invalid {
+                key: name.to_string(),
+                value: v.clone(),
+                want: "number",
+            }),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, ArgError> {
+        match self.opts.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| ArgError::Invalid {
+                key: name.to_string(),
+                value: v.clone(),
+                want: "integer",
+            }),
+        }
+    }
+}
+
+/// The `--help` text.
+pub const HELP: &str = "\
+fmedge — modular foundation-model inference at the edge
+
+USAGE: fmedge <COMMAND> [OPTIONS]
+
+COMMANDS:
+  config    print the experiment configuration (Table I)
+  place     run the static core placement (--seed N, --kappa K, --exact,
+            --fallback, --config FILE)
+  gtable    print the g_{m,eps}(y) delay table (--seed N, --accel for the
+            PJRT path, --config FILE)
+  simulate  run trials (--strategy proposal|propavg|lbrr|ga, --trials N,
+            --slots N, --load X, --seed N, --config FILE)
+  serve     run the serving coordinator on a synthetic open-loop workload
+            (--requests N, --rate RPS, --workers N, --no-real-compute)
+
+GLOBAL OPTIONS:
+  --config FILE   TOML overrides on top of the paper defaults
+  --help          this text
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_command_options_flags() {
+        let a = parse(&["simulate", "--trials", "7", "--strategy", "lbrr", "--accel"]);
+        assert_eq!(a.command.as_deref(), Some("simulate"));
+        assert_eq!(a.get_usize("trials", 0).unwrap(), 7);
+        assert_eq!(a.get("strategy"), Some("lbrr"));
+        assert!(a.flag("accel"));
+        assert!(!a.flag("show"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["place"]);
+        assert_eq!(a.get_usize("kappa", 8).unwrap(), 8);
+        assert_eq!(a.get_f64("load", 1.0).unwrap(), 1.0);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let e = Args::parse(["place".to_string(), "--seed".to_string()]).unwrap_err();
+        assert_eq!(e, ArgError::MissingValue("seed".into()));
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse(&["place", "--seed", "abc"]);
+        assert!(a.get_u64("seed", 0).is_err());
+    }
+
+    #[test]
+    fn extra_positional_rejected() {
+        assert!(Args::parse(["a".to_string(), "b".to_string()]).is_err());
+    }
+}

@@ -1,0 +1,655 @@
+//! Experiment configuration: Table I parameter ranges, typed config
+//! structs, TOML loading with validation, and the paper's default values.
+//!
+//! "Key parameters are listed in TABLE I; values for each run are sampled
+//! from predefined ranges" (§IV) — [`Range`] models exactly that: each
+//! trial samples concrete values uniformly from its range.
+
+pub mod toml;
+
+use crate::rng::Rng;
+use toml::{TomlError, TomlValue};
+
+/// Number of resource dimensions (CPU, RAM, GPU, VRAM — Table I).
+pub const NUM_RESOURCES: usize = 4;
+
+/// Resource dimension names, index-aligned with all `[f64; NUM_RESOURCES]`.
+pub const RESOURCE_NAMES: [&str; NUM_RESOURCES] = ["CPU", "RAM", "GPU", "VRAM"];
+
+/// Closed interval `[lo, hi]` sampled uniformly per run.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Range {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Range {
+    pub const fn new(lo: f64, hi: f64) -> Self {
+        Range { lo, hi }
+    }
+
+    /// Degenerate single-value range.
+    pub const fn fixed(v: f64) -> Self {
+        Range { lo: v, hi: v }
+    }
+
+    /// Uniform sample.
+    pub fn sample<R: Rng + ?Sized>(&self, rng: &mut R) -> f64 {
+        if self.lo == self.hi {
+            self.lo
+        } else {
+            rng.range_f64(self.lo, self.hi)
+        }
+    }
+
+    /// Midpoint — used by mean-value analyses.
+    pub fn mid(&self) -> f64 {
+        0.5 * (self.lo + self.hi)
+    }
+
+    fn validate(&self, name: &str) -> Result<(), ConfigError> {
+        if !self.lo.is_finite() || !self.hi.is_finite() || self.hi < self.lo {
+            return Err(ConfigError::Invalid(format!(
+                "range `{name}` invalid: [{}, {}]",
+                self.lo, self.hi
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Per-resource sampling ranges.
+pub type ResourceRanges = [Range; NUM_RESOURCES];
+
+/// Processing-rate model of a microservice class (§II-A): deterministic for
+/// core MSs, Gamma-distributed under contention for light MSs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RateSpec {
+    /// Deterministic rate sampled once per run from the range (MB/ms).
+    Deterministic(Range),
+    /// `Gamma(shape, scale)`; both hyper-parameters sampled per MS per run.
+    Gamma { shape: Range, scale: Range },
+}
+
+/// Per-class microservice configuration (Table I rows "Core MS"/"Light MS").
+#[derive(Clone, Copy, Debug)]
+pub struct MsClassConfig {
+    /// Resource requirement ranges `r_{m,k}`.
+    pub resources: ResourceRanges,
+    /// Computational workload `a_m` (MB).
+    pub workload_mb: Range,
+    /// Output size `b_m` (MB).
+    pub output_mb: Range,
+    /// Processing rate `f_m` (MB/ms).
+    pub rate: RateSpec,
+    /// One-time deployment price `c^dp`.
+    pub cost_deploy: f64,
+    /// Per-slot maintenance price `c^mt`.
+    pub cost_maint: f64,
+    /// Per-parallelism price `c^pl` (light MSs only in the paper).
+    pub cost_parallel: f64,
+}
+
+/// Per-class node capacity ranges (Table I rows "ED"/"ES").
+#[derive(Clone, Copy, Debug)]
+pub struct NodeClassConfig {
+    pub resources: ResourceRanges,
+}
+
+/// Edge network shape and link parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct NetworkConfig {
+    /// Number of edge devices (user-facing).
+    pub num_eds: usize,
+    /// Number of edge servers (backbone).
+    pub num_ess: usize,
+    /// Link bandwidth `w` (MB/ms).
+    pub link_bandwidth: Range,
+    /// Link distance `W` (km).
+    pub link_distance_km: Range,
+    /// Propagation speed `l` (km/ms); ~200 km/ms in fiber.
+    pub prop_speed_km_per_ms: f64,
+    /// Extra ED↔ES attachment links per ED beyond its primary (mesh degree).
+    pub ed_extra_links: usize,
+}
+
+/// User population and task-arrival stochastics (Table I bottom row).
+#[derive(Clone, Copy, Debug)]
+pub struct WorkloadConfig {
+    /// Number of users `|U|`.
+    pub num_users: usize,
+    /// Poisson arrival mean `z_{u,n,t}` per slot, per (user, task type).
+    pub arrival_rate: Range,
+    /// End-to-end deadline `D_n` (ms).
+    pub deadline_ms: Range,
+    /// Task input payload `A_n` (MB).
+    pub input_mb: Range,
+    /// Nakagami fading shape `m` for the uplink SNR.
+    pub nakagami_m: Range,
+    /// Nakagami spread Ω (mean channel power).
+    pub nakagami_omega: Range,
+    /// Per-user uplink bandwidth `b_u` (MB/ms at unit spectral efficiency).
+    pub uplink_bandwidth: Range,
+    /// Mean SNR scaling (linear) applied to the fading power.
+    pub mean_snr: Range,
+}
+
+/// Application shape (Fig. 1): task-type DAGs over core + light MSs.
+#[derive(Clone, Copy, Debug)]
+pub struct AppConfig {
+    pub num_task_types: usize,
+    pub num_core_ms: usize,
+    pub num_light_ms: usize,
+    /// Microservices per task DAG (inverse tree), range.
+    pub services_per_task: Range,
+}
+
+/// Two-tier deployment strategy knobs (§III).
+#[derive(Clone, Copy, Debug)]
+pub struct ControllerConfig {
+    /// Latency-violation probability ε for the effective-capacity map.
+    pub epsilon: f64,
+    /// Lyapunov cost weight η in (19).
+    pub eta: f64,
+    /// Virtual-queue floor ζ in (18).
+    pub zeta: f64,
+    /// Task priority weight φ (uniform across tasks by default).
+    pub phi: f64,
+    /// QoS-score weight ξ in (14).
+    pub xi: f64,
+    /// Load-apportionment decay δ in (15).
+    pub delta: f64,
+    /// Urgency cap C1 in (16).
+    pub urgency_cap: f64,
+    /// Minimum distinct core deployments κ (C6).
+    pub kappa: usize,
+    /// Big-M constant C2 (C4) — max instances per (node, MS).
+    pub big_m: f64,
+    /// θ-grid for the effective-capacity search: [lo, hi] with `theta_n`
+    /// log-spaced points.
+    pub theta_lo: f64,
+    pub theta_hi: f64,
+    pub theta_n: usize,
+    /// Monte-Carlo samples per light MS for Ê^c(θ).
+    pub effcap_samples: usize,
+    /// Maximum parallelism level tabulated in `g_{m,ε}(y)`.
+    pub max_parallelism: usize,
+    /// Contention exponent: per-task rate is `f / y^alpha`.
+    pub contention_alpha: f64,
+}
+
+/// Simulation horizon and trial control.
+#[derive(Clone, Copy, Debug)]
+pub struct SimConfig {
+    /// Slots in the horizon |T|.
+    pub slots: usize,
+    /// Slot length (ms).
+    pub slot_ms: f64,
+    /// Base RNG seed; trial `i` uses `seed + i`.
+    pub seed: u64,
+    /// Number of independent trials (Fig. 3 violins).
+    pub trials: usize,
+    /// Arrival-mean multiplier (Fig. 4 escalating load).
+    pub load_multiplier: f64,
+}
+
+/// Root experiment configuration.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub network: NetworkConfig,
+    pub workload: WorkloadConfig,
+    pub app: AppConfig,
+    pub core_ms: MsClassConfig,
+    pub light_ms: MsClassConfig,
+    pub ed: NodeClassConfig,
+    pub es: NodeClassConfig,
+    pub controller: ControllerConfig,
+    pub sim: SimConfig,
+}
+
+/// Configuration errors.
+#[derive(Debug)]
+pub enum ConfigError {
+    Parse(TomlError),
+    Invalid(String),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Parse(e) => write!(f, "{e}"),
+            ConfigError::Invalid(s) => write!(f, "invalid config: {s}"),
+            ConfigError::Io(e) => write!(f, "config io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl From<TomlError> for ConfigError {
+    fn from(e: TomlError) -> Self {
+        ConfigError::Parse(e)
+    }
+}
+
+impl From<std::io::Error> for ConfigError {
+    fn from(e: std::io::Error) -> Self {
+        ConfigError::Io(e)
+    }
+}
+
+impl ExperimentConfig {
+    /// The paper's Table I defaults: 4 task types, 6 core MSs, 9 light MSs,
+    /// ε = 0.2.
+    pub fn paper_default() -> Self {
+        ExperimentConfig {
+            network: NetworkConfig {
+                num_eds: 12,
+                num_ess: 4,
+                link_bandwidth: Range::new(0.1, 1.0),
+                link_distance_km: Range::new(0.2, 5.0),
+                prop_speed_km_per_ms: 200.0,
+                ed_extra_links: 1,
+            },
+            workload: WorkloadConfig {
+                num_users: 10,
+                arrival_rate: Range::new(0.15, 1.5),
+                deadline_ms: Range::new(50.0, 100.0),
+                input_mb: Range::new(0.5, 4.0),
+                nakagami_m: Range::new(1.5, 3.0),
+                nakagami_omega: Range::new(0.5, 1.0),
+                uplink_bandwidth: Range::new(0.5, 2.0),
+                mean_snr: Range::new(10.0, 100.0),
+            },
+            app: AppConfig {
+                num_task_types: 4,
+                num_core_ms: 6,
+                num_light_ms: 9,
+                services_per_task: Range::new(5.0, 8.0),
+            },
+            core_ms: MsClassConfig {
+                resources: [
+                    Range::new(2.0, 16.0),
+                    Range::new(1.0, 4.0),
+                    Range::new(4.0, 32.0),
+                    Range::new(4.0, 32.0),
+                ],
+                workload_mb: Range::new(2.0, 16.0),
+                output_mb: Range::new(0.1, 1.0),
+                rate: RateSpec::Deterministic(Range::new(8.0, 32.0)),
+                cost_deploy: 20.0,
+                cost_maint: 4.0,
+                cost_parallel: 0.0,
+            },
+            light_ms: MsClassConfig {
+                resources: [
+                    Range::new(0.5, 2.0),
+                    Range::new(0.0, 0.5),
+                    Range::new(0.25, 4.0),
+                    Range::new(0.0, 1.0),
+                ],
+                workload_mb: Range::new(0.5, 2.0),
+                output_mb: Range::new(0.25, 1.5),
+                rate: RateSpec::Gamma {
+                    shape: Range::new(1.0, 2.0),
+                    scale: Range::new(1.0, 20.0),
+                },
+                cost_deploy: 4.0,
+                cost_maint: 1.0,
+                cost_parallel: 0.5,
+            },
+            ed: NodeClassConfig {
+                resources: [
+                    Range::new(1.0, 64.0),
+                    Range::new(1.0, 32.0),
+                    Range::new(0.0, 64.0),
+                    Range::new(0.0, 64.0),
+                ],
+            },
+            es: NodeClassConfig {
+                resources: [
+                    Range::new(128.0, 256.0),
+                    Range::new(64.0, 128.0),
+                    Range::new(1024.0, 2048.0),
+                    Range::new(256.0, 512.0),
+                ],
+            },
+            controller: ControllerConfig {
+                epsilon: 0.2,
+                eta: 1.0,
+                zeta: 0.5,
+                phi: 1.0,
+                xi: 1.0,
+                delta: 0.05,
+                urgency_cap: 4.0,
+                kappa: 8,
+                big_m: 64.0,
+                theta_lo: 1e-3,
+                theta_hi: 10.0,
+                theta_n: 32,
+                effcap_samples: 4096,
+                max_parallelism: 16,
+                contention_alpha: 1.0,
+            },
+            sim: SimConfig {
+                slots: 500,
+                slot_ms: 1.0,
+                seed: 2026,
+                trials: 40,
+                load_multiplier: 1.0,
+            },
+        }
+    }
+
+    /// Load from a TOML string, starting from [`Self::paper_default`] and
+    /// overriding any key present in the document.
+    pub fn from_toml_str(doc: &str) -> Result<Self, ConfigError> {
+        let v = toml::parse(doc)?;
+        let mut cfg = Self::paper_default();
+        cfg.apply_overrides(&v)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn from_path(path: &str) -> Result<Self, ConfigError> {
+        let doc = std::fs::read_to_string(path)?;
+        Self::from_toml_str(&doc)
+    }
+
+    fn apply_overrides(&mut self, v: &TomlValue) -> Result<(), ConfigError> {
+        fn set_usize(v: &TomlValue, path: &str, dst: &mut usize) -> Result<(), ConfigError> {
+            if let Some(x) = v.get_path(path) {
+                *dst = x
+                    .as_i64()
+                    .filter(|&i| i >= 0)
+                    .ok_or_else(|| {
+                        ConfigError::Invalid(format!("`{path}` must be a non-negative integer"))
+                    })? as usize;
+            }
+            Ok(())
+        }
+        fn set_f64(v: &TomlValue, path: &str, dst: &mut f64) -> Result<(), ConfigError> {
+            if let Some(x) = v.get_path(path) {
+                *dst = x
+                    .as_f64()
+                    .ok_or_else(|| ConfigError::Invalid(format!("`{path}` must be numeric")))?;
+            }
+            Ok(())
+        }
+        fn set_u64(v: &TomlValue, path: &str, dst: &mut u64) -> Result<(), ConfigError> {
+            if let Some(x) = v.get_path(path) {
+                *dst = x
+                    .as_i64()
+                    .filter(|&i| i >= 0)
+                    .ok_or_else(|| {
+                        ConfigError::Invalid(format!("`{path}` must be a non-negative integer"))
+                    })? as u64;
+            }
+            Ok(())
+        }
+        fn set_range(v: &TomlValue, path: &str, dst: &mut Range) -> Result<(), ConfigError> {
+            if let Some(x) = v.get_path(path) {
+                let (lo, hi) = x
+                    .as_range()
+                    .ok_or_else(|| ConfigError::Invalid(format!("`{path}` must be [lo, hi]")))?;
+                *dst = Range::new(lo, hi);
+            }
+            Ok(())
+        }
+
+        set_usize(v, "network.num_eds", &mut self.network.num_eds)?;
+        set_usize(v, "network.num_ess", &mut self.network.num_ess)?;
+        set_range(v, "network.link_bandwidth", &mut self.network.link_bandwidth)?;
+        set_range(v, "network.link_distance_km", &mut self.network.link_distance_km)?;
+        set_f64(
+            v,
+            "network.prop_speed_km_per_ms",
+            &mut self.network.prop_speed_km_per_ms,
+        )?;
+        set_usize(v, "network.ed_extra_links", &mut self.network.ed_extra_links)?;
+
+        set_usize(v, "workload.num_users", &mut self.workload.num_users)?;
+        set_range(v, "workload.arrival_rate", &mut self.workload.arrival_rate)?;
+        set_range(v, "workload.deadline_ms", &mut self.workload.deadline_ms)?;
+        set_range(v, "workload.input_mb", &mut self.workload.input_mb)?;
+        set_range(v, "workload.nakagami_m", &mut self.workload.nakagami_m)?;
+        set_range(v, "workload.nakagami_omega", &mut self.workload.nakagami_omega)?;
+        set_range(v, "workload.uplink_bandwidth", &mut self.workload.uplink_bandwidth)?;
+        set_range(v, "workload.mean_snr", &mut self.workload.mean_snr)?;
+
+        set_usize(v, "app.num_task_types", &mut self.app.num_task_types)?;
+        set_usize(v, "app.num_core_ms", &mut self.app.num_core_ms)?;
+        set_usize(v, "app.num_light_ms", &mut self.app.num_light_ms)?;
+        set_range(v, "app.services_per_task", &mut self.app.services_per_task)?;
+
+        set_f64(v, "controller.epsilon", &mut self.controller.epsilon)?;
+        set_f64(v, "controller.eta", &mut self.controller.eta)?;
+        set_f64(v, "controller.zeta", &mut self.controller.zeta)?;
+        set_f64(v, "controller.phi", &mut self.controller.phi)?;
+        set_f64(v, "controller.xi", &mut self.controller.xi)?;
+        set_f64(v, "controller.delta", &mut self.controller.delta)?;
+        set_f64(v, "controller.urgency_cap", &mut self.controller.urgency_cap)?;
+        set_usize(v, "controller.kappa", &mut self.controller.kappa)?;
+        set_f64(v, "controller.big_m", &mut self.controller.big_m)?;
+        set_f64(v, "controller.theta_lo", &mut self.controller.theta_lo)?;
+        set_f64(v, "controller.theta_hi", &mut self.controller.theta_hi)?;
+        set_usize(v, "controller.theta_n", &mut self.controller.theta_n)?;
+        set_usize(v, "controller.effcap_samples", &mut self.controller.effcap_samples)?;
+        set_usize(v, "controller.max_parallelism", &mut self.controller.max_parallelism)?;
+        set_f64(
+            v,
+            "controller.contention_alpha",
+            &mut self.controller.contention_alpha,
+        )?;
+
+        set_usize(v, "sim.slots", &mut self.sim.slots)?;
+        set_f64(v, "sim.slot_ms", &mut self.sim.slot_ms)?;
+        set_u64(v, "sim.seed", &mut self.sim.seed)?;
+        set_usize(v, "sim.trials", &mut self.sim.trials)?;
+        set_f64(v, "sim.load_multiplier", &mut self.sim.load_multiplier)?;
+        Ok(())
+    }
+
+    /// Sanity-check all parameters.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let c = &self.controller;
+        if !(0.0 < c.epsilon && c.epsilon < 1.0) {
+            return Err(ConfigError::Invalid(format!(
+                "epsilon must be in (0,1), got {}",
+                c.epsilon
+            )));
+        }
+        if c.zeta < 0.0 || c.eta < 0.0 || c.xi < 0.0 {
+            return Err(ConfigError::Invalid(
+                "eta, zeta, xi must be non-negative".into(),
+            ));
+        }
+        if c.theta_lo <= 0.0 || c.theta_hi <= c.theta_lo || c.theta_n < 2 {
+            return Err(ConfigError::Invalid("bad theta grid".into()));
+        }
+        if c.max_parallelism == 0 || c.effcap_samples == 0 {
+            return Err(ConfigError::Invalid(
+                "max_parallelism and effcap_samples must be positive".into(),
+            ));
+        }
+        if self.network.num_eds == 0 || self.network.num_ess == 0 {
+            return Err(ConfigError::Invalid(
+                "network needs at least 1 ED and 1 ES".into(),
+            ));
+        }
+        if self.app.num_task_types == 0 || self.app.num_core_ms == 0 || self.app.num_light_ms == 0
+        {
+            return Err(ConfigError::Invalid("app shape must be non-zero".into()));
+        }
+        if self.sim.slots == 0 || self.sim.slot_ms <= 0.0 {
+            return Err(ConfigError::Invalid("sim horizon must be positive".into()));
+        }
+        if self.sim.load_multiplier <= 0.0 {
+            return Err(ConfigError::Invalid("load multiplier must be positive".into()));
+        }
+        for (r, name) in [
+            (&self.network.link_bandwidth, "network.link_bandwidth"),
+            (&self.workload.arrival_rate, "workload.arrival_rate"),
+            (&self.workload.deadline_ms, "workload.deadline_ms"),
+            (&self.workload.input_mb, "workload.input_mb"),
+        ] {
+            r.validate(name)?;
+            if r.lo < 0.0 {
+                return Err(ConfigError::Invalid(format!("`{name}` must be non-negative")));
+            }
+        }
+        Ok(())
+    }
+
+    /// Human-readable dump (the `fmedge config --show` output; reproduces
+    /// Table I).
+    pub fn describe(&self) -> String {
+        let mut s = String::new();
+        s.push_str("Table I — experiment parameters (sampled per run)\n");
+        let fmt_r = |r: &Range| format!("[{}, {}]", r.lo, r.hi);
+        s.push_str(&format!(
+            "Core MS : r={:?} a={} b={} f={:?} c=({}, {}, {})\n",
+            self.core_ms.resources.iter().map(fmt_r).collect::<Vec<_>>(),
+            fmt_r(&self.core_ms.workload_mb),
+            fmt_r(&self.core_ms.output_mb),
+            self.core_ms.rate,
+            self.core_ms.cost_deploy,
+            self.core_ms.cost_maint,
+            self.core_ms.cost_parallel
+        ));
+        s.push_str(&format!(
+            "Light MS: r={:?} a={} b={} f={:?} c=({}, {}, {})\n",
+            self.light_ms.resources.iter().map(fmt_r).collect::<Vec<_>>(),
+            fmt_r(&self.light_ms.workload_mb),
+            fmt_r(&self.light_ms.output_mb),
+            self.light_ms.rate,
+            self.light_ms.cost_deploy,
+            self.light_ms.cost_maint,
+            self.light_ms.cost_parallel
+        ));
+        s.push_str(&format!(
+            "ED caps : {:?}\nES caps : {:?}\n",
+            self.ed.resources.iter().map(fmt_r).collect::<Vec<_>>(),
+            self.es.resources.iter().map(fmt_r).collect::<Vec<_>>()
+        ));
+        s.push_str(&format!(
+            "Workload: z~Poisson({}) D={}ms gamma~Nakagami({}, {}) A={}MB\n",
+            fmt_r(&self.workload.arrival_rate),
+            fmt_r(&self.workload.deadline_ms),
+            fmt_r(&self.workload.nakagami_m),
+            fmt_r(&self.workload.nakagami_omega),
+            fmt_r(&self.workload.input_mb)
+        ));
+        s.push_str(&format!(
+            "Network : |ED|={} |ES|={} w={}MB/ms\n",
+            self.network.num_eds,
+            self.network.num_ess,
+            fmt_r(&self.network.link_bandwidth)
+        ));
+        s.push_str(&format!(
+            "Control : eps={} eta={} zeta={} xi={} delta={} kappa={}\n",
+            self.controller.epsilon,
+            self.controller.eta,
+            self.controller.zeta,
+            self.controller.xi,
+            self.controller.delta,
+            self.controller.kappa
+        ));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn paper_default_is_valid() {
+        ExperimentConfig::paper_default().validate().unwrap();
+    }
+
+    #[test]
+    fn paper_default_matches_table_one() {
+        let c = ExperimentConfig::paper_default();
+        assert_eq!(c.app.num_task_types, 4);
+        assert_eq!(c.app.num_core_ms, 6);
+        assert_eq!(c.app.num_light_ms, 9);
+        assert_eq!(c.controller.epsilon, 0.2);
+        assert_eq!(c.core_ms.cost_deploy, 20.0);
+        assert_eq!(c.core_ms.cost_maint, 4.0);
+        assert_eq!(c.light_ms.cost_deploy, 4.0);
+        assert_eq!(c.light_ms.cost_parallel, 0.5);
+        assert_eq!(c.workload.arrival_rate, Range::new(0.15, 1.5));
+        assert_eq!(c.workload.deadline_ms, Range::new(50.0, 100.0));
+        match c.light_ms.rate {
+            RateSpec::Gamma { shape, scale } => {
+                assert_eq!(shape, Range::new(1.0, 2.0));
+                assert_eq!(scale, Range::new(1.0, 20.0));
+            }
+            _ => panic!("light MS rate must be Gamma"),
+        }
+    }
+
+    #[test]
+    fn toml_overrides_apply() {
+        let cfg = ExperimentConfig::from_toml_str(
+            r#"
+[sim]
+slots = 100
+trials = 3
+load_multiplier = 1.5
+
+[controller]
+epsilon = 0.1
+kappa = 5
+
+[workload]
+arrival_rate = [0.3, 0.9]
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.sim.slots, 100);
+        assert_eq!(cfg.sim.trials, 3);
+        assert_eq!(cfg.sim.load_multiplier, 1.5);
+        assert_eq!(cfg.controller.epsilon, 0.1);
+        assert_eq!(cfg.controller.kappa, 5);
+        assert_eq!(cfg.workload.arrival_rate, Range::new(0.3, 0.9));
+        // untouched defaults survive
+        assert_eq!(cfg.app.num_core_ms, 6);
+    }
+
+    #[test]
+    fn invalid_epsilon_rejected() {
+        let r = ExperimentConfig::from_toml_str("[controller]\nepsilon = 1.5");
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn invalid_range_rejected() {
+        let r = ExperimentConfig::from_toml_str("[workload]\narrival_rate = [2.0, 1.0]");
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn range_sampling_within_bounds() {
+        let mut rng = Xoshiro256::seed_from(1);
+        let r = Range::new(3.0, 7.0);
+        for _ in 0..1000 {
+            let v = r.sample(&mut rng);
+            assert!((3.0..7.0).contains(&v));
+        }
+        assert_eq!(Range::fixed(5.0).sample(&mut rng), 5.0);
+        assert_eq!(r.mid(), 5.0);
+    }
+
+    #[test]
+    fn describe_mentions_key_rows() {
+        let d = ExperimentConfig::paper_default().describe();
+        assert!(d.contains("Core MS"));
+        assert!(d.contains("Light MS"));
+        assert!(d.contains("Nakagami"));
+    }
+}

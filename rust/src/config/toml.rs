@@ -1,0 +1,317 @@
+//! Minimal TOML-subset parser (serde/toml unavailable offline).
+//!
+//! Supported: `[table.subtable]` headers, `key = value` pairs with string,
+//! integer, float, boolean and homogeneous-array values, comments (`#`),
+//! and blank lines. This covers everything the experiment configuration
+//! files in `configs/` use.
+
+use std::collections::BTreeMap;
+
+/// Parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    String(String),
+    Integer(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+    Table(BTreeMap<String, TomlValue>),
+}
+
+impl TomlValue {
+    /// Numeric view (integers widen to f64).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Integer(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Integer(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::String(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_table(&self) -> Option<&BTreeMap<String, TomlValue>> {
+        match self {
+            TomlValue::Table(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    /// Dotted-path lookup: `get_path("controller.eta")`.
+    pub fn get_path(&self, path: &str) -> Option<&TomlValue> {
+        let mut cur = self;
+        for part in path.split('.') {
+            cur = cur.as_table()?.get(part)?;
+        }
+        Some(cur)
+    }
+
+    /// `[lo, hi]` two-element numeric array.
+    pub fn as_range(&self) -> Option<(f64, f64)> {
+        let a = self.as_array()?;
+        if a.len() != 2 {
+            return None;
+        }
+        Some((a[0].as_f64()?, a[1].as_f64()?))
+    }
+}
+
+/// Parse error with line information.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TomlError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "TOML parse error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+fn err(line: usize, message: impl Into<String>) -> TomlError {
+    TomlError {
+        line,
+        message: message.into(),
+    }
+}
+
+/// Parse a TOML document into a root table.
+pub fn parse(input: &str) -> Result<TomlValue, TomlError> {
+    let mut root = BTreeMap::new();
+    let mut current_path: Vec<String> = Vec::new();
+
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(header) = line.strip_prefix('[') {
+            let header = header
+                .strip_suffix(']')
+                .ok_or_else(|| err(lineno + 1, "unterminated table header"))?;
+            if header.is_empty() {
+                return Err(err(lineno + 1, "empty table header"));
+            }
+            current_path = header.split('.').map(|s| s.trim().to_string()).collect();
+            if current_path.iter().any(String::is_empty) {
+                return Err(err(lineno + 1, "empty table path component"));
+            }
+            // Materialize intermediate tables.
+            ensure_table(&mut root, &current_path, lineno + 1)?;
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| err(lineno + 1, "expected `key = value`"))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(err(lineno + 1, "empty key"));
+        }
+        let value = parse_value(line[eq + 1..].trim(), lineno + 1)?;
+        let table = ensure_table(&mut root, &current_path, lineno + 1)?;
+        if table.insert(key.to_string(), value).is_some() {
+            return Err(err(lineno + 1, format!("duplicate key `{key}`")));
+        }
+    }
+    Ok(TomlValue::Table(root))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Track whether we are inside a string to avoid cutting "#" in strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn ensure_table<'a>(
+    root: &'a mut BTreeMap<String, TomlValue>,
+    path: &[String],
+    line: usize,
+) -> Result<&'a mut BTreeMap<String, TomlValue>, TomlError> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| TomlValue::Table(BTreeMap::new()));
+        match entry {
+            TomlValue::Table(t) => cur = t,
+            _ => return Err(err(line, format!("`{part}` is not a table"))),
+        }
+    }
+    Ok(cur)
+}
+
+fn parse_value(s: &str, line: usize) -> Result<TomlValue, TomlError> {
+    if s.is_empty() {
+        return Err(err(line, "empty value"));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let end = rest
+            .find('"')
+            .ok_or_else(|| err(line, "unterminated string"))?;
+        if !rest[end + 1..].trim().is_empty() {
+            return Err(err(line, "trailing characters after string"));
+        }
+        return Ok(TomlValue::String(rest[..end].to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| err(line, "unterminated array"))?;
+        let mut items = Vec::new();
+        for part in split_array_items(inner) {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            items.push(parse_value(part, line)?);
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    // Number: integer if no '.', 'e', or 'E'.
+    if s.contains('.') || s.contains('e') || s.contains('E') {
+        s.parse::<f64>()
+            .map(TomlValue::Float)
+            .map_err(|_| err(line, format!("invalid float `{s}`")))
+    } else {
+        s.parse::<i64>()
+            .map(TomlValue::Integer)
+            .map_err(|_| err(line, format!("invalid integer `{s}`")))
+    }
+}
+
+/// Split a (possibly nested) array body on top-level commas.
+fn split_array_items(s: &str) -> Vec<&str> {
+    let mut items = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                items.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    items.push(&s[start..]);
+    items
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_tables() {
+        let doc = r#"
+# experiment config
+title = "paper"
+trials = 40
+eta = 0.5
+flag = true
+
+[network]
+num_eds = 12
+num_ess = 4
+
+[network.wireless]
+bandwidth = [0.1, 1.0]
+"#;
+        let v = parse(doc).unwrap();
+        assert_eq!(v.get_path("title").unwrap().as_str().unwrap(), "paper");
+        assert_eq!(v.get_path("trials").unwrap().as_i64().unwrap(), 40);
+        assert!((v.get_path("eta").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-12);
+        assert_eq!(v.get_path("flag").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get_path("network.num_eds").unwrap().as_i64(), Some(12));
+        let (lo, hi) = v
+            .get_path("network.wireless.bandwidth")
+            .unwrap()
+            .as_range()
+            .unwrap();
+        assert_eq!((lo, hi), (0.1, 1.0));
+    }
+
+    #[test]
+    fn comments_inside_strings_survive() {
+        let v = parse(r##"k = "a # b""##).unwrap();
+        assert_eq!(v.get_path("k").unwrap().as_str().unwrap(), "a # b");
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let v = parse("m = [[1, 2], [3, 4]]").unwrap();
+        let outer = v.get_path("m").unwrap().as_array().unwrap();
+        assert_eq!(outer.len(), 2);
+        assert_eq!(outer[1].as_array().unwrap()[0].as_i64(), Some(3));
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(parse("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn bad_header_rejected() {
+        assert!(parse("[unterminated").is_err());
+        assert!(parse("[]").is_err());
+    }
+
+    #[test]
+    fn missing_equals_rejected() {
+        let e = parse("justakey").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn negative_and_scientific_numbers() {
+        let v = parse("a = -3\nb = 1.5e-3").unwrap();
+        assert_eq!(v.get_path("a").unwrap().as_i64(), Some(-3));
+        assert!((v.get_path("b").unwrap().as_f64().unwrap() - 1.5e-3).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,335 @@
+//! Algorithm 1 — greedy online light-MS deployment.
+//!
+//! Each slot, starting from the busy instances carried over from the
+//! previous slot, the controller repeatedly applies the single incremental
+//! deployment (one instance of light MS `m` on node `v`) with the most
+//! negative marginal drift-plus-penalty `Δ_{v,m}L` (eq. 19), where each
+//! queued task is routed to the instance minimizing its next-hop latency
+//! `ΔT_j = τ_tr + τ_pp + g_{m,ε}(y+1)`. The loop stops when no deployment
+//! is cost-effective. Per-slot complexity is `O(M·(1 + |Jqu|·|V|·|Mlt|))`
+//! with `M` greedy iterations — the paper's bound. (Implementation note:
+//! queued tasks are partitioned by their required service, so after
+//! committing an instance of `m*` only `m*`'s candidates change; the
+//! other services' marginals are cached and only re-validated against the
+//! consumed node capacity, and each candidate is scored in O(|J_m|) via
+//! prefix sums — see EXPERIMENTS.md §Perf.)
+
+use crate::config::NUM_RESOURCES;
+use crate::effcap::GTable;
+use crate::routing::DistanceMatrix;
+
+use super::OnlineParams;
+
+/// A task waiting for its next (light) service.
+#[derive(Clone, Copy, Debug)]
+pub struct LightRequest {
+    pub task_id: u64,
+    /// Dense light-MS index of the needed service.
+    pub light_idx: usize,
+    /// Node currently holding the task's payload (`v_j`).
+    pub from_node: usize,
+    /// Payload size to move (MB).
+    pub payload_mb: f64,
+    /// Lyapunov queue value `H_j(t)`.
+    pub h: f64,
+    /// Remaining deadline budget (ms) — diagnostics only.
+    pub deadline_slack_ms: f64,
+}
+
+/// Final routing of one request.
+#[derive(Clone, Copy, Debug)]
+pub struct Assignment {
+    pub node: usize,
+    pub light_idx: usize,
+    /// Parallelism level of the chosen instance-group *after* assignment —
+    /// the realized contended delay uses this `y`.
+    pub y: u32,
+    /// Network component of ΔT (ms).
+    pub transfer_ms: f64,
+    /// QoS-bound processing estimate `g(y)` used in the decision (ms).
+    pub est_proc_ms: f64,
+}
+
+/// The slot's decision: instance counts, parallelism, routing.
+#[derive(Clone, Debug)]
+pub struct LightDecision {
+    /// `x[v][m]` — light instances this slot (busy carryover + new).
+    pub x: Vec<Vec<u32>>,
+    /// `y[v][m]` — concurrent tasks assigned per (node, MS) this slot.
+    pub y: Vec<Vec<u32>>,
+    /// Per-request routing (same order as the input queue).
+    pub assignments: Vec<Option<Assignment>>,
+    pub stats: GreedyStats,
+}
+
+/// Greedy-loop statistics for `bench_alg1`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GreedyStats {
+    pub iterations: usize,
+    pub instances_added: usize,
+    pub candidates_scanned: usize,
+    /// Final drift-plus-penalty value (19) under the decision.
+    pub objective: f64,
+}
+
+/// Capacity (concurrent tasks) of `x` instances at max parallelism.
+#[inline]
+fn group_capacity(x: u32, max_y: usize) -> u32 {
+    x.saturating_mul(max_y as u32)
+}
+
+/// Run Algorithm 1 for one slot. See module docs; arguments:
+///
+/// * `queue` — tasks awaiting a light service (`J^qu(t)`).
+/// * `busy` — instance counts still processing previous-slot work
+///   (`x^{lt,bs}_{t-1}`); kept deployed for free continuation.
+/// * `residual` — per-node capacity left for *new* instances.
+/// * `resources` — per light MS resource requirement vectors.
+/// * `costs` — per light MS `(c_dp, c_mt, c_pl)`.
+#[allow(clippy::too_many_arguments)]
+pub fn greedy_light_deployment(
+    queue: &[LightRequest],
+    busy: &[Vec<u32>],
+    residual: &[[f64; NUM_RESOURCES]],
+    resources: &[[f64; NUM_RESOURCES]],
+    costs: &[(f64, f64, f64)],
+    gtable: &GTable,
+    dm: &DistanceMatrix,
+    params: &OnlineParams,
+) -> LightDecision {
+    let nv = busy.len();
+    let nl = resources.len();
+    let max_y = gtable.max_parallelism().max(1);
+    let delay = |m: usize, y: usize| -> f64 {
+        if params.use_mean_delay {
+            gtable.mean_delay(m, y)
+        } else {
+            gtable.delay(m, y)
+        }
+    };
+
+    let mut x: Vec<Vec<u32>> = busy.to_vec();
+    let mut residual: Vec<[f64; NUM_RESOURCES]> = residual.to_vec();
+    let mut stats = GreedyStats::default();
+
+    // Queue indices grouped by required MS, H-descending within a group
+    // (urgent tasks claim capacity first).
+    let mut by_ms: Vec<Vec<usize>> = vec![Vec::new(); nl];
+    for (qi, r) in queue.iter().enumerate() {
+        by_ms[r.light_idx].push(qi);
+    }
+    for group in &mut by_ms {
+        group.sort_by(|&a, &b| queue[b].h.partial_cmp(&queue[a].h).unwrap());
+    }
+
+    let fits = |residual: &[[f64; NUM_RESOURCES]], v: usize, m: usize| -> bool {
+        (0..NUM_RESOURCES).all(|k| residual[v][k] >= resources[m][k] - 1e-12)
+    };
+
+    // Current best next-hop latency per queued task under deployment `x`
+    // (penalty when unroutable).
+    let mut current: Vec<f64> = vec![params.unroutable_penalty_ms; queue.len()];
+    let mut route_group = |m: usize,
+                           x: &Vec<Vec<u32>>,
+                           current: &mut Vec<f64>| {
+        // Greedy sequential routing of group m, tracking per-node y.
+        let mut y = vec![0u32; nv];
+        for &qi in &by_ms[m] {
+            let req = &queue[qi];
+            let mut best = params.unroutable_penalty_ms;
+            let mut best_v = usize::MAX;
+            for v in 0..nv {
+                if x[v][m] == 0 || y[v] >= group_capacity(x[v][m], max_y) {
+                    continue;
+                }
+                let per_inst = ((y[v] + 1) as usize).div_ceil(x[v][m] as usize);
+                let t = dm.latency(req.from_node, v, req.payload_mb) + delay(m, per_inst);
+                if t < best {
+                    best = t;
+                    best_v = v;
+                }
+            }
+            if best_v != usize::MAX {
+                y[best_v] += 1;
+            }
+            current[qi] = best;
+        }
+    };
+    for m in 0..nl {
+        route_group(m, &x, &mut current);
+    }
+
+    // Marginal ΔL of adding one instance of m at v, scored with prefix
+    // sums over the group's gains. Returns f64::INFINITY when worthless.
+    let score_candidate = |v: usize,
+                           m: usize,
+                           current: &Vec<f64>,
+                           pairs: &mut Vec<(f64, f64)>|
+     -> f64 {
+        let group = &by_ms[m];
+        if group.is_empty() {
+            return f64::INFINITY;
+        }
+        // gains_j = cur_j − net_j(v); only positive-potential tasks matter.
+        pairs.clear();
+        for &qi in group {
+            let req = &queue[qi];
+            let net = dm.latency(req.from_node, v, req.payload_mb);
+            let gain = current[qi] - net;
+            if gain > 0.0 {
+                pairs.push((params.phi * req.h, gain));
+            }
+        }
+        if pairs.is_empty() {
+            return f64::INFINITY;
+        }
+        pairs.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let (c_dp, c_mt, c_pl) = costs[m];
+        let mut best = f64::INFINITY;
+        let mut w_sum = 0.0; // Σ φH over prefix
+        let mut wg_sum = 0.0; // Σ φH·gain over prefix
+        for (rank, &(w, g)) in pairs.iter().enumerate() {
+            let yy = rank + 1;
+            if yy > max_y {
+                break;
+            }
+            w_sum += w;
+            wg_sum += w * g;
+            let g_y = delay(m, yy);
+            // ΔL(y) = η·cost + Σ_{top y} φH·(g(y) − gain_j)
+            let dl = params.eta * (c_dp + c_mt + c_pl * yy as f64) + g_y * w_sum - wg_sum;
+            if dl < best {
+                best = dl;
+            }
+        }
+        best
+    };
+
+    // Initial candidate table.
+    let mut delta = vec![vec![f64::INFINITY; nl]; nv];
+    let mut scratch: Vec<(f64, f64)> = Vec::new();
+    for m in 0..nl {
+        if by_ms[m].is_empty() {
+            continue;
+        }
+        for v in 0..nv {
+            if fits(&residual, v, m) {
+                stats.candidates_scanned += 1;
+                delta[v][m] = score_candidate(v, m, &current, &mut scratch);
+            }
+        }
+    }
+
+    // Greedy loop: commit the most negative marginal, refresh only the
+    // affected service's candidates (queue groups are disjoint).
+    loop {
+        if stats.iterations >= params.max_iterations {
+            break;
+        }
+        let mut best: Option<(usize, usize, f64)> = None;
+        for v in 0..nv {
+            for m in 0..nl {
+                let d = delta[v][m];
+                if d < 0.0 && best.map_or(true, |(_, _, b)| d < b) {
+                    best = Some((v, m, d));
+                }
+            }
+        }
+        let Some((v, m, _)) = best else { break };
+        // Validate against current capacity (it may have been consumed).
+        if !fits(&residual, v, m) {
+            delta[v][m] = f64::INFINITY;
+            continue;
+        }
+        x[v][m] += 1;
+        for k in 0..NUM_RESOURCES {
+            residual[v][k] -= resources[m][k];
+        }
+        stats.instances_added += 1;
+        stats.iterations += 1;
+        // Re-route group m and refresh its candidate column.
+        route_group(m, &x, &mut current);
+        for vv in 0..nv {
+            delta[vv][m] = if fits(&residual, vv, m) {
+                stats.candidates_scanned += 1;
+                score_candidate(vv, m, &current, &mut scratch)
+            } else {
+                f64::INFINITY
+            };
+        }
+        // Capacity at v shrank: invalidate other services' entries there
+        // if they no longer fit (cheap check).
+        for mm in 0..nl {
+            if mm != m && delta[v][mm].is_finite() && !fits(&residual, v, mm) {
+                delta[v][mm] = f64::INFINITY;
+            }
+        }
+    }
+
+    // Final routing pass against the committed deployment. Unlike the
+    // marginal estimates above (which compare against the waiting
+    // penalty), this pass always uses existing capacity: waiting another
+    // slot never beats starting now under FCFS service.
+    let mut y = vec![vec![0u32; nl]; nv];
+    let mut assignments: Vec<Option<Assignment>> = vec![None; queue.len()];
+    for group in &by_ms {
+        for &qi in group {
+            let req = &queue[qi];
+            let m = req.light_idx;
+            let mut best: Option<Assignment> = None;
+            for v in 0..nv {
+                if x[v][m] == 0 || y[v][m] >= group_capacity(x[v][m], max_y) {
+                    continue;
+                }
+                let per_inst = ((y[v][m] + 1) as usize).div_ceil(x[v][m] as usize);
+                let net = dm.latency(req.from_node, v, req.payload_mb);
+                let est = delay(m, per_inst);
+                let total = net + est;
+                if best
+                    .as_ref()
+                    .map_or(true, |b| total < b.transfer_ms + b.est_proc_ms)
+                {
+                    best = Some(Assignment {
+                        node: v,
+                        light_idx: m,
+                        y: per_inst as u32,
+                        transfer_ms: net,
+                        est_proc_ms: est,
+                    });
+                }
+            }
+            if let Some(a) = best {
+                y[a.node][m] += 1;
+                assignments[qi] = Some(a);
+            }
+        }
+    }
+
+    // Final objective (19) for diagnostics.
+    let mut objective = 0.0;
+    for v in 0..nv {
+        for m in 0..nl {
+            if x[v][m] > busy[v][m] {
+                let (c_dp, c_mt, c_pl) = costs[m];
+                objective += params.eta
+                    * ((c_dp + c_mt) * (x[v][m] - busy[v][m]) as f64 + c_pl * y[v][m] as f64);
+            }
+        }
+    }
+    for (qi, a) in assignments.iter().enumerate() {
+        let req = &queue[qi];
+        let t = match a {
+            Some(a) => a.transfer_ms + a.est_proc_ms,
+            None => params.unroutable_penalty_ms,
+        };
+        objective += params.phi * req.h * t;
+    }
+    stats.objective = objective;
+
+    LightDecision {
+        x,
+        y,
+        assignments,
+        stats,
+    }
+}

@@ -1,0 +1,61 @@
+//! Virtual deadline-violation queues (eq. 18).
+//!
+//! `H_j(t+1) = max{ H_j(t) + T_j(t) − D_n, ζ }` — the floor ζ > 0 keeps
+//! the controller *proactively* latency-averse instead of reacting only
+//! after violations accumulate (the paper's departure from vanilla
+//! drift-plus-penalty).
+
+use std::collections::HashMap;
+
+/// Per-task virtual queues.
+#[derive(Clone, Debug)]
+pub struct VirtualQueues {
+    h: HashMap<u64, f64>,
+    zeta: f64,
+}
+
+impl VirtualQueues {
+    pub fn new(zeta: f64) -> Self {
+        assert!(zeta >= 0.0);
+        VirtualQueues {
+            h: HashMap::new(),
+            zeta,
+        }
+    }
+
+    /// Current queue value; tasks not yet tracked sit at the floor ζ.
+    pub fn value(&self, task_id: u64) -> f64 {
+        *self.h.get(&task_id).unwrap_or(&self.zeta)
+    }
+
+    /// Slot update (eq. 18): `T_j(t)` is the latency the task has
+    /// experienced under decisions made by time `t`.
+    pub fn update(&mut self, task_id: u64, experienced_ms: f64, deadline_ms: f64) {
+        let cur = self.value(task_id);
+        let next = (cur + experienced_ms - deadline_ms).max(self.zeta);
+        self.h.insert(task_id, next);
+    }
+
+    /// Forget a finished/dropped task.
+    pub fn remove(&mut self, task_id: u64) {
+        self.h.remove(&task_id);
+    }
+
+    /// Number of tracked tasks.
+    pub fn len(&self) -> usize {
+        self.h.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.h.is_empty()
+    }
+
+    /// Sum of all queue values (Lyapunov function diagnostic).
+    pub fn total_backlog(&self) -> f64 {
+        self.h.values().sum()
+    }
+
+    pub fn zeta(&self) -> f64 {
+        self.zeta
+    }
+}

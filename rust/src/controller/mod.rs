@@ -1,0 +1,303 @@
+//! Dynamic light-microservice deployment (§III-B): Lyapunov virtual
+//! queues with a proactive floor (eq. 18), the drift-plus-penalty
+//! objective (eq. 19), and the low-complexity greedy online Algorithm 1
+//! driven by the effective-capacity map `g_{m,ε}(y)`.
+
+mod greedy;
+mod lyapunov;
+
+pub use greedy::{greedy_light_deployment, Assignment, GreedyStats, LightDecision, LightRequest};
+pub use lyapunov::VirtualQueues;
+
+/// Per-slot controller configuration shared by the proposal and PropAvg.
+#[derive(Clone, Debug)]
+pub struct OnlineParams {
+    /// Cost weight η of (19).
+    pub eta: f64,
+    /// Priority weight φ (uniform).
+    pub phi: f64,
+    /// Use the mean-value delay column instead of `g_{m,ε}` (PropAvg).
+    pub use_mean_delay: bool,
+    /// Penalty latency (ms) for a task that cannot be routed this slot.
+    pub unroutable_penalty_ms: f64,
+    /// Hard cap on greedy iterations per slot (safety net; `M` in the
+    /// complexity bound).
+    pub max_iterations: usize,
+}
+
+impl OnlineParams {
+    pub fn from_config(c: &crate::config::ControllerConfig) -> Self {
+        OnlineParams {
+            eta: c.eta,
+            phi: c.phi,
+            use_mean_delay: false,
+            unroutable_penalty_ms: 200.0,
+            max_iterations: 256,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, NUM_RESOURCES};
+    use crate::effcap::{GTable, GTableParams};
+    use crate::microservice::build_fig1_application;
+    use crate::network::Topology;
+    use crate::rng::{Distribution, Gamma, Xoshiro256};
+    use crate::routing::DistanceMatrix;
+
+    #[test]
+    fn virtual_queue_floor_and_growth() {
+        let mut q = VirtualQueues::new(0.5);
+        // New task starts at the floor.
+        assert_eq!(q.value(7), 0.5);
+        // Early in its life (elapsed << deadline) the queue stays floored.
+        q.update(7, 10.0, 80.0);
+        assert_eq!(q.value(7), 0.5);
+        // Past the deadline the backlog accumulates.
+        q.update(7, 90.0, 80.0);
+        assert!((q.value(7) - (0.5 + 10.0)).abs() < 1e-12);
+        q.update(7, 100.0, 80.0);
+        assert!((q.value(7) - (10.5 + 20.0)).abs() < 1e-12);
+        q.remove(7);
+        assert_eq!(q.value(7), 0.5);
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn queue_never_drops_below_floor() {
+        let mut q = VirtualQueues::new(2.0);
+        q.update(1, 0.0, 1000.0); // huge slack
+        assert_eq!(q.value(1), 2.0);
+    }
+
+    fn test_env() -> (
+        crate::microservice::Application,
+        Topology,
+        DistanceMatrix,
+        GTable,
+        Vec<[f64; NUM_RESOURCES]>,
+    ) {
+        let cfg = ExperimentConfig::paper_default();
+        let mut rng = Xoshiro256::seed_from(77);
+        let app = build_fig1_application(&cfg, &mut rng);
+        let topo = Topology::generate(&cfg, &mut rng);
+        let dm = DistanceMatrix::build(&topo, 1.0);
+        // g-table from the catalog's light services.
+        let mut samples = Vec::new();
+        let mut workloads = Vec::new();
+        for &m in app.catalog.light_ids() {
+            let spec = app.catalog.spec(m);
+            samples.push(spec.rate.sample_n(&mut rng, 2048));
+            workloads.push(spec.workload_mb);
+        }
+        let gt = GTable::build(&samples, &workloads, &GTableParams::default_paper());
+        let residual: Vec<[f64; NUM_RESOURCES]> =
+            topo.nodes().iter().map(|n| n.capacity).collect();
+        (app, topo, dm, gt, residual)
+    }
+
+    fn mk_request(task: u64, light: usize, node: usize, h: f64) -> LightRequest {
+        LightRequest {
+            task_id: task,
+            light_idx: light,
+            from_node: node,
+            payload_mb: 0.5,
+            h,
+            deadline_slack_ms: 40.0,
+        }
+    }
+
+    #[test]
+    fn empty_queue_deploys_nothing() {
+        let (app, topo, dm, gt, residual) = test_env();
+        let nl = app.catalog.num_light();
+        let busy = vec![vec![0u32; nl]; topo.num_nodes()];
+        let costs = light_costs(&app);
+        let d = greedy_light_deployment(
+            &[],
+            &busy,
+            &residual,
+            &light_resources(&app),
+            &costs,
+            &gt,
+            &dm,
+            &OnlineParams::from_config(&ExperimentConfig::paper_default().controller),
+        );
+        assert_eq!(d.assignments.len(), 0);
+        assert_eq!(
+            d.x.iter().flat_map(|r| r.iter()).sum::<u32>(),
+            0,
+            "no demand, no instances"
+        );
+    }
+
+    fn light_costs(app: &crate::microservice::Application) -> Vec<(f64, f64, f64)> {
+        app.catalog
+            .light_ids()
+            .iter()
+            .map(|&m| {
+                let s = app.catalog.spec(m);
+                (s.cost_deploy, s.cost_maint, s.cost_parallel)
+            })
+            .collect()
+    }
+
+    fn light_resources(
+        app: &crate::microservice::Application,
+    ) -> Vec<[f64; NUM_RESOURCES]> {
+        app.catalog
+            .light_ids()
+            .iter()
+            .map(|&m| app.catalog.spec(m).resources)
+            .collect()
+    }
+
+    #[test]
+    fn queued_tasks_get_assigned_when_capacity_allows() {
+        let (app, topo, dm, gt, residual) = test_env();
+        let nl = app.catalog.num_light();
+        let busy = vec![vec![0u32; nl]; topo.num_nodes()];
+        let reqs: Vec<LightRequest> = (0..6).map(|i| mk_request(i, 0, 0, 5.0)).collect();
+        let d = greedy_light_deployment(
+            &reqs,
+            &busy,
+            &residual,
+            &light_resources(&app),
+            &light_costs(&app),
+            &gt,
+            &dm,
+            &OnlineParams::from_config(&ExperimentConfig::paper_default().controller),
+        );
+        let assigned = d.assignments.iter().filter(|a| a.is_some()).count();
+        assert!(assigned == 6, "all tasks should be served, got {assigned}");
+        // Instances actually deployed for light MS 0 somewhere.
+        let total: u32 = d.x.iter().map(|r| r[0]).sum();
+        assert!(total >= 1);
+        // Parallelism counts match assignments.
+        let y_total: u32 = d.y.iter().map(|r| r[0]).sum();
+        assert_eq!(y_total as usize, assigned);
+    }
+
+    #[test]
+    fn no_capacity_means_no_assignment() {
+        let (app, topo, dm, gt, _) = test_env();
+        let nl = app.catalog.num_light();
+        let busy = vec![vec![0u32; nl]; topo.num_nodes()];
+        let zero = vec![[0.0; NUM_RESOURCES]; topo.num_nodes()];
+        let reqs = vec![mk_request(0, 2, 0, 5.0)];
+        let d = greedy_light_deployment(
+            &reqs,
+            &busy,
+            &zero,
+            &light_resources(&app),
+            &light_costs(&app),
+            &gt,
+            &dm,
+            &OnlineParams::from_config(&ExperimentConfig::paper_default().controller),
+        );
+        assert!(d.assignments[0].is_none());
+    }
+
+    #[test]
+    fn busy_instances_are_reused_without_new_cost() {
+        let (app, topo, dm, gt, residual) = test_env();
+        let nl = app.catalog.num_light();
+        let mut busy = vec![vec![0u32; nl]; topo.num_nodes()];
+        busy[0][1] = 1; // existing instance of light MS 1 at node 0
+        let reqs = vec![mk_request(0, 1, 0, 5.0)];
+        let d = greedy_light_deployment(
+            &reqs,
+            &busy,
+            &residual,
+            &light_resources(&app),
+            &light_costs(&app),
+            &gt,
+            &dm,
+            &OnlineParams::from_config(&ExperimentConfig::paper_default().controller),
+        );
+        let a = d.assignments[0].expect("task served by the busy instance");
+        assert_eq!((a.node, a.light_idx), (0, 1));
+        assert_eq!(d.stats.instances_added, 0, "no new instance needed");
+    }
+
+    #[test]
+    fn urgent_tasks_win_contended_capacity() {
+        let (app, topo, dm, gt, _) = test_env();
+        let nl = app.catalog.num_light();
+        let busy = vec![vec![0u32; nl]; topo.num_nodes()];
+        // Capacity fits exactly one instance of light MS 0 at node 0 only.
+        let mut tight = vec![[0.0; NUM_RESOURCES]; topo.num_nodes()];
+        let res0 = light_resources(&app)[0];
+        tight[0] = res0;
+        let mut reqs = vec![
+            mk_request(0, 0, 0, 1.0),   // low urgency
+            mk_request(1, 0, 0, 100.0), // high urgency
+        ];
+        // One parallel slot only: cap y by building a tiny gtable? Instead
+        // rely on ordering: assignments are made highest-H first.
+        let d = greedy_light_deployment(
+            &reqs,
+            &busy,
+            &tight,
+            &light_resources(&app),
+            &light_costs(&app),
+            &gt,
+            &dm,
+            &OnlineParams::from_config(&ExperimentConfig::paper_default().controller),
+        );
+        // Both may share the instance via parallelism, but the urgent one
+        // must be served.
+        assert!(d.assignments[1].is_some());
+        reqs.clear();
+    }
+
+    #[test]
+    fn decision_respects_resource_budget() {
+        let (app, topo, dm, gt, residual) = test_env();
+        let nl = app.catalog.num_light();
+        let busy = vec![vec![0u32; nl]; topo.num_nodes()];
+        let reqs: Vec<LightRequest> = (0..40)
+            .map(|i| mk_request(i, (i % 3) as usize, (i % 12) as usize, 3.0))
+            .collect();
+        let resources = light_resources(&app);
+        let d = greedy_light_deployment(
+            &reqs,
+            &busy,
+            &residual,
+            &resources,
+            &light_costs(&app),
+            &gt,
+            &dm,
+            &OnlineParams::from_config(&ExperimentConfig::paper_default().controller),
+        );
+        for (v, row) in d.x.iter().enumerate() {
+            for k in 0..NUM_RESOURCES {
+                let used: f64 = row
+                    .iter()
+                    .enumerate()
+                    .map(|(mi, &c)| resources[mi][k] * c as f64)
+                    .sum();
+                assert!(
+                    used <= residual[v][k] + 1e-9,
+                    "node {v} resource {k}: {used} > {}",
+                    residual[v][k]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn propavg_mode_uses_smaller_delays() {
+        // Mean delays are <= QoS bounds, so PropAvg should estimate lower
+        // latency for the same decision.
+        let g = Gamma::new(1.5, 8.0);
+        let mut rng = Xoshiro256::seed_from(3);
+        let samples = g.sample_n(&mut rng, 4096);
+        let gt = GTable::build(&[samples], &[1.0], &GTableParams::default_paper());
+        for y in 1..=16 {
+            assert!(gt.mean_delay(0, y) <= gt.delay(0, y) + 1e-12);
+        }
+    }
+}

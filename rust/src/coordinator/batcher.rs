@@ -1,0 +1,84 @@
+//! Dynamic batching: flush on size or age, whichever comes first.
+
+use std::time::{Duration, Instant};
+
+use super::Request;
+
+/// Batch formation policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Flush as soon as this many requests are pending.
+    pub max_batch: usize,
+    /// Flush once the oldest pending request has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Accumulates requests into batches under a [`BatchPolicy`].
+pub struct Batcher {
+    policy: BatchPolicy,
+    pending: Vec<Request>,
+    oldest: Option<Instant>,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher {
+            policy,
+            pending: Vec::with_capacity(policy.max_batch),
+            oldest: None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Add a request; returns a full batch when the size trigger fires.
+    pub fn push(&mut self, req: Request) -> Option<Vec<Request>> {
+        if self.pending.is_empty() {
+            self.oldest = Some(Instant::now());
+        }
+        self.pending.push(req);
+        if self.pending.len() >= self.policy.max_batch {
+            return self.take();
+        }
+        None
+    }
+
+    /// Returns a batch if the oldest pending request has aged out.
+    pub fn poll(&mut self) -> Option<Vec<Request>> {
+        match self.oldest {
+            Some(t) if t.elapsed() >= self.policy.max_wait && !self.pending.is_empty() => {
+                self.take()
+            }
+            _ => None,
+        }
+    }
+
+    /// Drain whatever is pending (shutdown path).
+    pub fn flush(&mut self) -> Option<Vec<Request>> {
+        if self.pending.is_empty() {
+            None
+        } else {
+            self.take()
+        }
+    }
+
+    fn take(&mut self) -> Option<Vec<Request>> {
+        self.oldest = None;
+        Some(std::mem::take(&mut self.pending))
+    }
+}

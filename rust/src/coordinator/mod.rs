@@ -1,0 +1,88 @@
+//! Serving coordinator: the Layer-3 runtime that serves inference
+//! requests through the AOT-compiled core-MS compute with dynamic
+//! batching — the "beyond-simulation" deployment of the paper's system
+//! (`examples/serve_trace.rs` drives it end-to-end).
+//!
+//! Leader/worker shape (std threads; no async runtime is available
+//! offline): a bounded submission channel feeds a batcher thread that
+//! groups requests by the compiled batch size (or a timeout, whichever
+//! first) and hands batches to worker threads, each owning its own PJRT
+//! executable. Latency/throughput are recorded per request.
+
+mod batcher;
+mod server;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use server::{Coordinator, ServeConfig, ServeError, ServeReport};
+
+/// One inference request travelling through the coordinator.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    /// Flattened `[L, D]` activations (one batch slot).
+    pub data: Vec<f32>,
+    /// Submission timestamp.
+    pub submitted: std::time::Instant,
+    /// Client deadline (for the on-time accounting).
+    pub deadline_ms: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::{Duration, Instant};
+
+    #[test]
+    fn batch_policy_flushes_on_size() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 3,
+            max_wait: Duration::from_secs(10),
+        });
+        assert!(b.push(req(1)).is_none());
+        assert!(b.push(req(2)).is_none());
+        let batch = b.push(req(3)).expect("size trigger");
+        assert_eq!(batch.len(), 3);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn batch_policy_flushes_on_timeout() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 100,
+            max_wait: Duration::from_millis(1),
+        });
+        assert!(b.push(req(1)).is_none());
+        std::thread::sleep(Duration::from_millis(3));
+        let batch = b.poll().expect("timeout trigger");
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn empty_batcher_polls_none() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        assert!(b.poll().is_none());
+        assert!(b.flush().is_none());
+    }
+
+    #[test]
+    fn flush_drains_partial_batch() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 10,
+            max_wait: Duration::from_secs(10),
+        });
+        b.push(req(1));
+        b.push(req(2));
+        let batch = b.flush().expect("explicit flush");
+        assert_eq!(batch.len(), 2);
+        assert!(b.is_empty());
+    }
+
+    fn req(id: u64) -> Request {
+        Request {
+            id,
+            data: vec![0.0; 4],
+            submitted: Instant::now(),
+            deadline_ms: 50.0,
+        }
+    }
+}

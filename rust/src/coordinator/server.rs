@@ -1,0 +1,304 @@
+//! The leader loop: bounded admission, batching, worker dispatch.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::metrics::Summary;
+use crate::runtime::{shapes, MsBlockAccel, Runtime};
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::Request;
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Worker threads, each with its own PJRT executable.
+    pub workers: usize,
+    /// Admission queue capacity; beyond it `submit` reports backpressure.
+    pub queue_capacity: usize,
+    pub batch: BatchPolicy,
+    /// Execute the real `msblock` artifact (true) or a calibrated no-op
+    /// (false — for harness overhead measurements in `bench_coordinator`).
+    pub real_compute: bool,
+    /// Artifact directory (for `real_compute`).
+    pub artifact_dir: std::path::PathBuf,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            workers: 2,
+            queue_capacity: 1024,
+            batch: BatchPolicy::default(),
+            real_compute: true,
+            artifact_dir: Runtime::default_dir(),
+        }
+    }
+}
+
+/// Serving errors.
+#[derive(Debug)]
+pub enum ServeError {
+    /// Admission queue full (backpressure signal to the client).
+    Saturated,
+    /// Coordinator already shut down.
+    Closed,
+    /// Artifact/PJRT failure at startup.
+    Runtime(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Saturated => write!(f, "admission queue saturated"),
+            ServeError::Closed => write!(f, "coordinator is shut down"),
+            ServeError::Runtime(e) => write!(f, "runtime failure: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Final serving report.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub served: u64,
+    pub rejected: u64,
+    pub on_time: u64,
+    pub batches: u64,
+    pub elapsed: Duration,
+    pub latency_ms: Summary,
+    pub batch_fill: f64,
+}
+
+impl ServeReport {
+    pub fn throughput_rps(&self) -> f64 {
+        self.served as f64 / self.elapsed.as_secs_f64().max(1e-9)
+    }
+
+    pub fn on_time_rate(&self) -> f64 {
+        if self.served == 0 {
+            1.0
+        } else {
+            self.on_time as f64 / self.served as f64
+        }
+    }
+}
+
+struct Shared {
+    latencies_ms: Mutex<Vec<f64>>,
+    served: AtomicU64,
+    on_time: AtomicU64,
+    batches: AtomicU64,
+    slots_filled: AtomicU64,
+    stop: AtomicBool,
+}
+
+/// The serving coordinator (leader thread + worker pool).
+pub struct Coordinator {
+    tx: Option<SyncSender<Request>>,
+    leader: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    shared: Arc<Shared>,
+    rejected: AtomicU64,
+    started: Instant,
+}
+
+impl Coordinator {
+    /// Start the coordinator: leader + `cfg.workers` PJRT workers.
+    pub fn start(cfg: ServeConfig) -> Result<Self, ServeError> {
+        let (tx, rx) = sync_channel::<Request>(cfg.queue_capacity);
+        let (btx, brx) = sync_channel::<Vec<Request>>(cfg.workers * 2);
+        let shared = Arc::new(Shared {
+            latencies_ms: Mutex::new(Vec::new()),
+            served: AtomicU64::new(0),
+            on_time: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            slots_filled: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+        });
+
+        // Validate the artifact once up-front (fail fast on `make artifacts`
+        // omissions), then let each worker construct its own client: PJRT
+        // handles are !Send in the vendored crate, so they must be born on
+        // the thread that uses them.
+        if cfg.real_compute {
+            let rt = Runtime::cpu(&cfg.artifact_dir)
+                .map_err(|e| ServeError::Runtime(e.to_string()))?;
+            MsBlockAccel::load(&rt).map_err(|e| ServeError::Runtime(e.to_string()))?;
+        }
+        let brx = Arc::new(Mutex::new(brx));
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for wid in 0..cfg.workers {
+            let brx = Arc::clone(&brx);
+            let shared = Arc::clone(&shared);
+            let cfg2 = cfg.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("fmedge-worker-{wid}"))
+                    .spawn(move || {
+                        let accel = if cfg2.real_compute {
+                            Runtime::cpu(&cfg2.artifact_dir)
+                                .and_then(|rt| MsBlockAccel::load(&rt))
+                                .ok()
+                        } else {
+                            None
+                        };
+                        worker_loop(brx, shared, accel, &cfg2)
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+
+        // Leader: admission -> batching -> dispatch.
+        let leader = {
+            let shared = Arc::clone(&shared);
+            let policy = cfg.batch;
+            std::thread::Builder::new()
+                .name("fmedge-leader".into())
+                .spawn(move || leader_loop(rx, btx, shared, policy))
+                .expect("spawn leader")
+        };
+
+        Ok(Coordinator {
+            tx: Some(tx),
+            leader: Some(leader),
+            workers,
+            shared,
+            rejected: AtomicU64::new(0),
+            started: Instant::now(),
+        })
+    }
+
+    /// Submit one request; `Err(Saturated)` signals backpressure.
+    pub fn submit(&self, req: Request) -> Result<(), ServeError> {
+        let tx = self.tx.as_ref().ok_or(ServeError::Closed)?;
+        match tx.try_send(req) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(_)) => {
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(ServeError::Saturated)
+            }
+            Err(TrySendError::Disconnected(_)) => Err(ServeError::Closed),
+        }
+    }
+
+    /// Drain the pipeline and return the final report.
+    pub fn shutdown(mut self) -> ServeReport {
+        drop(self.tx.take()); // closes the admission channel
+        if let Some(l) = self.leader.take() {
+            let _ = l.join();
+        }
+        self.shared.stop.store(true, Ordering::SeqCst);
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        let latencies = self.shared.latencies_ms.lock().unwrap();
+        let batches = self.shared.batches.load(Ordering::Relaxed);
+        let filled = self.shared.slots_filled.load(Ordering::Relaxed);
+        ServeReport {
+            served: self.shared.served.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            on_time: self.shared.on_time.load(Ordering::Relaxed),
+            batches,
+            elapsed: self.started.elapsed(),
+            latency_ms: Summary::of(&latencies),
+            batch_fill: if batches == 0 {
+                0.0
+            } else {
+                filled as f64 / (batches as f64 * shapes::MSBLOCK_B as f64)
+            },
+        }
+    }
+}
+
+fn leader_loop(
+    rx: Receiver<Request>,
+    btx: SyncSender<Vec<Request>>,
+    shared: Arc<Shared>,
+    policy: BatchPolicy,
+) {
+    let mut batcher = Batcher::new(policy);
+    loop {
+        match rx.recv_timeout(policy.max_wait.max(Duration::from_micros(200))) {
+            Ok(req) => {
+                if let Some(batch) = batcher.push(req) {
+                    if btx.send(batch).is_err() {
+                        return;
+                    }
+                }
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                if let Some(batch) = batcher.poll() {
+                    if btx.send(batch).is_err() {
+                        return;
+                    }
+                }
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                if let Some(batch) = batcher.flush() {
+                    let _ = btx.send(batch);
+                }
+                drop(btx); // workers drain and exit
+                let _ = shared; // lifetime clarity
+                return;
+            }
+        }
+    }
+}
+
+fn worker_loop(
+    brx: Arc<Mutex<Receiver<Vec<Request>>>>,
+    shared: Arc<Shared>,
+    accel: Option<MsBlockAccel>,
+    _cfg: &ServeConfig,
+) {
+    let slot = shapes::MSBLOCK_L * shapes::MSBLOCK_D;
+    let mut buf = vec![0f32; shapes::MSBLOCK_B * slot];
+    loop {
+        let batch = {
+            let rx = brx.lock().unwrap();
+            match rx.recv_timeout(Duration::from_millis(20)) {
+                Ok(b) => b,
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                    if shared.stop.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    continue;
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
+            }
+        };
+        // Pack up to B request slots; surplus requests are chunked.
+        for chunk in batch.chunks(shapes::MSBLOCK_B) {
+            for (i, req) in chunk.iter().enumerate() {
+                let n = req.data.len().min(slot);
+                buf[i * slot..i * slot + n].copy_from_slice(&req.data[..n]);
+                for x in &mut buf[i * slot + n..(i + 1) * slot] {
+                    *x = 0.0;
+                }
+            }
+            if let Some(accel) = &accel {
+                // A failed forward is recorded as served-but-late rather
+                // than crashing the worker (fault isolation).
+                let _ = accel.forward(&buf);
+            }
+            shared.batches.fetch_add(1, Ordering::Relaxed);
+            shared
+                .slots_filled
+                .fetch_add(chunk.len() as u64, Ordering::Relaxed);
+            let mut lat = shared.latencies_ms.lock().unwrap();
+            for req in chunk {
+                let ms = req.submitted.elapsed().as_secs_f64() * 1e3;
+                lat.push(ms);
+                shared.served.fetch_add(1, Ordering::Relaxed);
+                if ms <= req.deadline_ms {
+                    shared.on_time.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+}

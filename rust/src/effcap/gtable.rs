@@ -1,0 +1,160 @@
+//! The `g_{m,ε}(y)` delay-bound table: per light MS × parallelism level.
+
+use super::estimator::EffCapEstimator;
+
+/// Parameters of g-table construction.
+#[derive(Clone, Debug)]
+pub struct GTableParams {
+    /// Latency-violation probability ε.
+    pub epsilon: f64,
+    /// Maximum tabulated parallelism level.
+    pub max_parallelism: usize,
+    /// θ-grid bounds and size.
+    pub theta_lo: f64,
+    pub theta_hi: f64,
+    pub theta_n: usize,
+    /// Contention model: per-task rate is `f / y^alpha`.
+    pub contention_alpha: f64,
+}
+
+impl GTableParams {
+    /// Paper defaults: ε = 0.2, y up to 16, 32-point log θ-grid.
+    pub fn default_paper() -> Self {
+        GTableParams {
+            epsilon: 0.2,
+            max_parallelism: 16,
+            theta_lo: 1e-3,
+            theta_hi: 10.0,
+            theta_n: 32,
+            contention_alpha: 1.0,
+        }
+    }
+
+    /// Derive from the experiment controller config.
+    pub fn from_config(c: &crate::config::ControllerConfig) -> Self {
+        GTableParams {
+            epsilon: c.epsilon,
+            max_parallelism: c.max_parallelism,
+            theta_lo: c.theta_lo,
+            theta_hi: c.theta_hi,
+            theta_n: c.theta_n,
+            contention_alpha: c.contention_alpha,
+        }
+    }
+}
+
+/// Precomputed deterministic mapping `g_{m,ε}(y)` (and the mean-value
+/// variant used by the PropAvg ablation), indexed by **light-MS dense
+/// index** (position in `Catalog::light_ids`) and parallelism `y ∈ [1, Y]`.
+#[derive(Clone, Debug)]
+pub struct GTable {
+    /// `delays[m][y-1]` = ε-quantile delay bound (ms).
+    delays: Vec<Vec<f64>>,
+    /// `mean_delays[m][y-1]` = mean-value delay (ms) — PropAvg's estimate.
+    mean_delays: Vec<Vec<f64>>,
+    pub params_epsilon: f64,
+    pub contention_alpha: f64,
+}
+
+impl GTable {
+    /// Build from per-MS service-rate samples and workloads `a_m`.
+    ///
+    /// `rate_samples[m]` are iid draws of the *uncontended* rate `f_m`;
+    /// parallelism `y` scales each draw by `1/y^alpha` before estimation.
+    pub fn build(rate_samples: &[Vec<f64>], workload_mb: &[f64], params: &GTableParams) -> Self {
+        assert_eq!(rate_samples.len(), workload_mb.len());
+        let est = EffCapEstimator::log_grid(params.theta_lo, params.theta_hi, params.theta_n);
+        let mut delays = Vec::with_capacity(rate_samples.len());
+        let mut mean_delays = Vec::with_capacity(rate_samples.len());
+        for (samples, &a_m) in rate_samples.iter().zip(workload_mb) {
+            assert!(!samples.is_empty(), "need rate samples per light MS");
+            let mu: f64 = samples.iter().sum::<f64>() / samples.len() as f64;
+            let mut row = Vec::with_capacity(params.max_parallelism);
+            let mut mean_row = Vec::with_capacity(params.max_parallelism);
+            let mut scaled = vec![0.0f64; samples.len()];
+            for y in 1..=params.max_parallelism {
+                let scale = (y as f64).powf(params.contention_alpha);
+                for (dst, &f) in scaled.iter_mut().zip(samples.iter()) {
+                    *dst = f / scale;
+                }
+                let bound = est.delay_bound(&scaled, a_m, params.epsilon);
+                row.push(bound);
+                mean_row.push(a_m * scale / mu);
+            }
+            // Clamp: at extreme contention the Chernoff inversion can blow
+            // up (no θ in the grid yields a positive denominator). The
+            // controller still needs a finite, ordered cost signal, so cap
+            // each bound at 20× the mean-value delay for that level.
+            for (y, b) in row.iter_mut().enumerate() {
+                let cap = 20.0 * mean_row[y];
+                if !b.is_finite() || *b > cap {
+                    *b = cap;
+                }
+            }
+            // Monotonize: contention can only increase the bound. (The raw
+            // estimates are already near-monotone; this removes Monte-Carlo
+            // jitter so the controller sees a consistent cost structure.)
+            for y in 1..row.len() {
+                if row[y] < row[y - 1] {
+                    row[y] = row[y - 1];
+                }
+            }
+            delays.push(row);
+            mean_delays.push(mean_row);
+        }
+        GTable {
+            delays,
+            mean_delays,
+            params_epsilon: params.epsilon,
+            contention_alpha: params.contention_alpha,
+        }
+    }
+
+    /// Construct directly from precomputed delay rows (the PJRT-accelerated
+    /// path: rows come out of `artifacts/effcap.hlo.txt`).
+    pub fn from_rows(
+        delays: Vec<Vec<f64>>,
+        mean_delays: Vec<Vec<f64>>,
+        epsilon: f64,
+        contention_alpha: f64,
+    ) -> Self {
+        assert_eq!(delays.len(), mean_delays.len());
+        GTable {
+            delays,
+            mean_delays,
+            params_epsilon: epsilon,
+            contention_alpha,
+        }
+    }
+
+    /// Number of light microservices tabulated.
+    pub fn num_ms(&self) -> usize {
+        self.delays.len()
+    }
+
+    /// Maximum parallelism level tabulated.
+    pub fn max_parallelism(&self) -> usize {
+        self.delays.first().map_or(0, Vec::len)
+    }
+
+    /// QoS-aware delay bound `g_{m,ε}(y)` (ms). `y` is clamped to the
+    /// tabulated range; `y = 0` is treated as 1 (an instance processing a
+    /// single task).
+    pub fn delay(&self, light_idx: usize, y: usize) -> f64 {
+        let row = &self.delays[light_idx];
+        let y = y.clamp(1, row.len());
+        row[y - 1]
+    }
+
+    /// Mean-value delay (PropAvg ablation).
+    pub fn mean_delay(&self, light_idx: usize, y: usize) -> f64 {
+        let row = &self.mean_delays[light_idx];
+        let y = y.clamp(1, row.len());
+        row[y - 1]
+    }
+
+    /// Full row access for benches/diagnostics.
+    pub fn row(&self, light_idx: usize) -> &[f64] {
+        &self.delays[light_idx]
+    }
+}

@@ -1,0 +1,172 @@
+//! Effective-capacity theory (§III-B, eqs. 20–21): the statistical link
+//! between a light microservice's parallelism level `y` and a processing
+//! delay bound that holds with violation probability ε.
+//!
+//! For the paper's iid stationary service process, the effective capacity
+//! of MS `m` at QoS exponent θ reduces to the per-slot form
+//! `E^c_m(θ) = -ln E[e^{-θ f_m}] / θ`, estimated here from Monte-Carlo
+//! samples (and cross-checked against the Gamma closed form
+//! `k·ln(1+θs)/θ` in tests). The tail approximation (21),
+//! `P{d > D} ≈ (E^c(θ)/E[f]) · e^{-θ·E^c(θ)·D/a_m}`, inverted at ε over a
+//! θ-grid, yields the deterministic mapping `d = g_{m,ε}(y)` that the
+//! online controller uses in place of the intractable stochastic latency.
+//!
+//! This exact computation is also implemented as the Layer-1/2 Pallas/JAX
+//! graph (`python/compile/kernels/effcap.py`) and AOT-compiled to
+//! `artifacts/effcap.hlo.txt`; `crate::runtime::EffCapAccel` executes it
+//! via PJRT and integration tests check both paths agree.
+
+mod estimator;
+mod gtable;
+
+pub use estimator::{effective_capacity, log_mean_exp, EffCapEstimator};
+pub use gtable::{GTable, GTableParams};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Distribution, Gamma, Xoshiro256};
+
+    #[test]
+    fn log_mean_exp_is_stable_and_correct() {
+        // Against a direct computation on moderate values.
+        let xs: [f64; 4] = [0.1, -0.3, 0.7, 0.2];
+        let direct = (xs.iter().map(|x| x.exp()).sum::<f64>() / 4.0).ln();
+        assert!((log_mean_exp(&xs) - direct).abs() < 1e-12);
+        // Large negatives must not underflow to -inf incorrectly.
+        let big = [-800.0, -802.0];
+        let v = log_mean_exp(&big);
+        assert!(v.is_finite());
+        assert!((v - (-800.0 + ((1.0 + (-2.0f64).exp()) / 2.0).ln())).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sampled_effcap_matches_gamma_closed_form() {
+        let g = Gamma::new(1.5, 10.0);
+        let mut rng = Xoshiro256::seed_from(7);
+        let samples = g.sample_n(&mut rng, 200_000);
+        for theta in [0.01, 0.1, 0.5, 1.0, 3.0] {
+            let est = effective_capacity(&samples, theta);
+            let exact = g.effective_capacity(theta, 1.0);
+            assert!(
+                (est - exact).abs() / exact < 0.02,
+                "theta={theta}: est={est} exact={exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn effcap_below_mean_and_decreasing() {
+        let g = Gamma::new(2.0, 5.0);
+        let mut rng = Xoshiro256::seed_from(8);
+        let samples = g.sample_n(&mut rng, 50_000);
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let mut prev = f64::INFINITY;
+        for i in 1..=20 {
+            let theta = i as f64 * 0.25;
+            let e = effective_capacity(&samples, theta);
+            assert!(e <= mean + 1e-9, "E^c must not exceed the mean rate");
+            assert!(e <= prev + 1e-9, "E^c must be non-increasing in theta");
+            assert!(e > 0.0);
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn gtable_monotone_in_parallelism() {
+        let params = GTableParams::default_paper();
+        let g = Gamma::new(1.5, 8.0);
+        let mut rng = Xoshiro256::seed_from(9);
+        let samples = g.sample_n(&mut rng, 8192);
+        let table = GTable::build(&[samples], &[1.2], &params);
+        for y in 1..params.max_parallelism {
+            assert!(
+                table.delay(0, y + 1) >= table.delay(0, y) - 1e-12,
+                "more contention cannot reduce the delay bound"
+            );
+        }
+    }
+
+    #[test]
+    fn gtable_bound_dominates_mean_delay() {
+        let params = GTableParams::default_paper();
+        let g = Gamma::new(1.5, 8.0);
+        let mut rng = Xoshiro256::seed_from(10);
+        let samples = g.sample_n(&mut rng, 8192);
+        let a_m = 1.2;
+        let mean_rate = samples.iter().sum::<f64>() / samples.len() as f64;
+        let table = GTable::build(&[samples], &[a_m], &params);
+        for y in 1..=params.max_parallelism {
+            let mean_delay = a_m * (y as f64).powf(params.contention_alpha) / mean_rate;
+            assert!(
+                table.delay(0, y) >= mean_delay - 1e-9,
+                "QoS bound must not undercut the mean-value delay (y={y})"
+            );
+        }
+    }
+
+    #[test]
+    fn gtable_tightens_with_larger_epsilon() {
+        // Larger tolerated violation probability => smaller delay bound.
+        let g = Gamma::new(1.3, 6.0);
+        let mut rng = Xoshiro256::seed_from(11);
+        let samples = g.sample_n(&mut rng, 8192);
+        let mut strict = GTableParams::default_paper();
+        strict.epsilon = 0.05;
+        let mut loose = GTableParams::default_paper();
+        loose.epsilon = 0.5;
+        let t_strict = GTable::build(&[samples.clone()], &[1.0], &strict);
+        let t_loose = GTable::build(&[samples], &[1.0], &loose);
+        for y in 1..=strict.max_parallelism {
+            assert!(
+                t_strict.delay(0, y) >= t_loose.delay(0, y) - 1e-12,
+                "stricter epsilon must give a looser (larger) bound"
+            );
+        }
+    }
+
+    #[test]
+    fn gtable_bound_actually_controls_violations() {
+        // Empirical check of (21): realized delay a/(f/y) exceeds g(y) with
+        // probability <= ~epsilon (approximation slack allowed).
+        let g = Gamma::new(1.5, 10.0);
+        let mut rng = Xoshiro256::seed_from(12);
+        let samples = g.sample_n(&mut rng, 16384);
+        let mut params = GTableParams::default_paper();
+        params.epsilon = 0.2;
+        let a_m = 1.0;
+        let table = GTable::build(&[samples], &[a_m], &params);
+        for y in [1usize, 4, 8] {
+            let bound = table.delay(0, y);
+            let mut violations = 0usize;
+            let trials = 20_000;
+            for _ in 0..trials {
+                let f = g.sample(&mut rng) / (y as f64).powf(params.contention_alpha);
+                if a_m / f > bound {
+                    violations += 1;
+                }
+            }
+            let rate = violations as f64 / trials as f64;
+            assert!(
+                rate <= params.epsilon * 1.5 + 0.02,
+                "y={y}: violation rate {rate} should be ≲ ε={}",
+                params.epsilon
+            );
+        }
+    }
+
+    #[test]
+    fn mean_delay_table_matches_direct_computation() {
+        let g = Gamma::new(2.0, 4.0);
+        let mut rng = Xoshiro256::seed_from(13);
+        let samples = g.sample_n(&mut rng, 4096);
+        let params = GTableParams::default_paper();
+        let a = 1.7;
+        let table = GTable::build(&[samples.clone()], &[a], &params);
+        let mean_rate = samples.iter().sum::<f64>() / samples.len() as f64;
+        for y in [1usize, 3, 16] {
+            let expect = a * (y as f64).powf(params.contention_alpha) / mean_rate;
+            assert!((table.mean_delay(0, y) - expect).abs() < 1e-9);
+        }
+    }
+}

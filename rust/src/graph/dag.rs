@@ -1,0 +1,228 @@
+//! Compact adjacency-list DAG with the traversals the latency model needs.
+
+/// Node identifier within a [`Dag`] (dense `0..n`).
+pub type NodeId = usize;
+
+/// Errors from DAG construction / traversal.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DagError {
+    /// Edge endpoint out of range.
+    NodeOutOfRange { node: NodeId, len: usize },
+    /// A cycle was detected where a DAG was required.
+    Cycle,
+    /// Duplicate edge insertion.
+    DuplicateEdge { from: NodeId, to: NodeId },
+}
+
+impl std::fmt::Display for DagError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DagError::NodeOutOfRange { node, len } => {
+                write!(f, "node {node} out of range (graph has {len} nodes)")
+            }
+            DagError::Cycle => write!(f, "graph contains a cycle"),
+            DagError::DuplicateEdge { from, to } => {
+                write!(f, "duplicate edge {from} -> {to}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DagError {}
+
+/// Directed graph stored as in/out adjacency lists. All public methods that
+/// assume acyclicity return [`DagError::Cycle`] when violated.
+#[derive(Clone, Debug, Default)]
+pub struct Dag {
+    out_edges: Vec<Vec<NodeId>>,
+    in_edges: Vec<Vec<NodeId>>,
+}
+
+impl Dag {
+    /// A graph with `n` isolated nodes.
+    pub fn new(n: usize) -> Self {
+        Dag {
+            out_edges: vec![Vec::new(); n],
+            in_edges: vec![Vec::new(); n],
+        }
+    }
+
+    /// Number of nodes.
+    pub fn len(&self) -> usize {
+        self.out_edges.len()
+    }
+
+    /// True when the graph has no nodes.
+    pub fn is_empty(&self) -> bool {
+        self.out_edges.is_empty()
+    }
+
+    /// Number of edges.
+    pub fn edge_count(&self) -> usize {
+        self.out_edges.iter().map(Vec::len).sum()
+    }
+
+    /// Append a new isolated node, returning its id.
+    pub fn add_node(&mut self) -> NodeId {
+        self.out_edges.push(Vec::new());
+        self.in_edges.push(Vec::new());
+        self.out_edges.len() - 1
+    }
+
+    /// Insert edge `from -> to`.
+    pub fn add_edge(&mut self, from: NodeId, to: NodeId) -> Result<(), DagError> {
+        let len = self.len();
+        if from >= len {
+            return Err(DagError::NodeOutOfRange { node: from, len });
+        }
+        if to >= len {
+            return Err(DagError::NodeOutOfRange { node: to, len });
+        }
+        if self.out_edges[from].contains(&to) {
+            return Err(DagError::DuplicateEdge { from, to });
+        }
+        self.out_edges[from].push(to);
+        self.in_edges[to].push(from);
+        Ok(())
+    }
+
+    /// Direct successors of `n`.
+    pub fn children(&self, n: NodeId) -> &[NodeId] {
+        &self.out_edges[n]
+    }
+
+    /// Direct predecessors of `n` — the `V^pa` sets of eq. (4).
+    pub fn parents(&self, n: NodeId) -> &[NodeId] {
+        &self.in_edges[n]
+    }
+
+    /// Nodes with no incoming edges (task entry points).
+    pub fn sources(&self) -> Vec<NodeId> {
+        (0..self.len()).filter(|&n| self.in_edges[n].is_empty()).collect()
+    }
+
+    /// Nodes with no outgoing edges.
+    pub fn sinks(&self) -> Vec<NodeId> {
+        (0..self.len()).filter(|&n| self.out_edges[n].is_empty()).collect()
+    }
+
+    /// The unique sink of an inverse tree, if it exists.
+    pub fn sink(&self) -> Option<NodeId> {
+        let s = self.sinks();
+        if s.len() == 1 {
+            Some(s[0])
+        } else {
+            None
+        }
+    }
+
+    /// Kahn topological order; `Err(Cycle)` when the graph is cyclic.
+    pub fn topo_order(&self) -> Result<Vec<NodeId>, DagError> {
+        let n = self.len();
+        let mut indeg: Vec<usize> = (0..n).map(|i| self.in_edges[i].len()).collect();
+        let mut queue: Vec<NodeId> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        let mut head = 0;
+        while head < queue.len() {
+            let u = queue[head];
+            head += 1;
+            order.push(u);
+            for &v in &self.out_edges[u] {
+                indeg[v] -= 1;
+                if indeg[v] == 0 {
+                    queue.push(v);
+                }
+            }
+        }
+        if order.len() == n {
+            Ok(order)
+        } else {
+            Err(DagError::Cycle)
+        }
+    }
+
+    /// True when every node has at most one outgoing edge and the graph is
+    /// acyclic with a single sink — the paper's "inverse tree" shape.
+    pub fn is_inverse_tree(&self) -> bool {
+        self.out_edges.iter().all(|es| es.len() <= 1)
+            && self.topo_order().is_ok()
+            && self.sinks().len() == 1
+    }
+
+    /// All nodes reachable from `n` (exclusive), ascending id order.
+    /// This is the `M^de_n(m)` descendant set of §III-A.
+    pub fn descendants(&self, n: NodeId) -> Vec<NodeId> {
+        self.reach(n, &self.out_edges)
+    }
+
+    /// All nodes that reach `n` (exclusive), ascending id order.
+    pub fn ancestors(&self, n: NodeId) -> Vec<NodeId> {
+        self.reach(n, &self.in_edges)
+    }
+
+    fn reach(&self, n: NodeId, adj: &[Vec<NodeId>]) -> Vec<NodeId> {
+        let mut seen = vec![false; self.len()];
+        let mut stack = vec![n];
+        while let Some(u) = stack.pop() {
+            for &v in &adj[u] {
+                if !seen[v] {
+                    seen[v] = true;
+                    stack.push(v);
+                }
+            }
+        }
+        (0..self.len()).filter(|&i| seen[i]).collect()
+    }
+
+    /// Longest node-weighted path; returns `(length, path)`.
+    ///
+    /// Used to lower-bound end-to-end latency (the critical chain of
+    /// processing delays) when profiling task types.
+    pub fn critical_path<F: Fn(NodeId) -> f64>(&self, weight: F) -> (f64, Vec<NodeId>) {
+        let order = match self.topo_order() {
+            Ok(o) => o,
+            Err(_) => return (f64::NAN, Vec::new()),
+        };
+        let n = self.len();
+        let mut dist = vec![f64::NEG_INFINITY; n];
+        let mut pred: Vec<Option<NodeId>> = vec![None; n];
+        for &u in &order {
+            if self.in_edges[u].is_empty() {
+                dist[u] = weight(u);
+            }
+            for &v in &self.out_edges[u] {
+                let cand = dist[u] + weight(v);
+                if cand > dist[v] {
+                    dist[v] = cand;
+                    pred[v] = Some(u);
+                }
+            }
+        }
+        let (best, &len) = dist
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap_or((0, &0.0));
+        let mut path = vec![best];
+        let mut cur = best;
+        while let Some(p) = pred[cur] {
+            path.push(p);
+            cur = p;
+        }
+        path.reverse();
+        (len, path)
+    }
+
+    /// Stage index of each node: the longest hop-distance from any source.
+    /// Stages group microservices that can execute concurrently.
+    pub fn stages(&self) -> Result<Vec<usize>, DagError> {
+        let order = self.topo_order()?;
+        let mut stage = vec![0usize; self.len()];
+        for &u in &order {
+            for &v in &self.out_edges[u] {
+                stage[v] = stage[v].max(stage[u] + 1);
+            }
+        }
+        Ok(stage)
+    }
+}

@@ -1,0 +1,87 @@
+//! Directed-acyclic-graph substrate for task graphs `G_n = (M_n, L_n)`.
+//!
+//! The paper models each inference task type as a DAG over microservices;
+//! "consistent with multimodal data fusion, these graphs typically form
+//! inverse-tree structures, where each node may have multiple incoming but
+//! at most one outgoing edge" (§II-A). This module provides the generic
+//! DAG machinery: topological order, ancestor/descendant sets, inverse-tree
+//! validation, and critical paths — used by the latency model (eq. 4), the
+//! mean-value analysis (§III-A) and the routers.
+
+mod dag;
+
+pub use dag::{Dag, DagError, NodeId};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> Dag {
+        // 0 -> 2, 1 -> 2, 2 -> 3
+        let mut d = Dag::new(4);
+        d.add_edge(0, 2).unwrap();
+        d.add_edge(1, 2).unwrap();
+        d.add_edge(2, 3).unwrap();
+        d
+    }
+
+    #[test]
+    fn topo_order_respects_edges() {
+        let d = diamond();
+        let order = d.topo_order().unwrap();
+        let pos: Vec<usize> = {
+            let mut p = vec![0; 4];
+            for (i, &n) in order.iter().enumerate() {
+                p[n] = i;
+            }
+            p
+        };
+        assert!(pos[0] < pos[2] && pos[1] < pos[2] && pos[2] < pos[3]);
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut d = Dag::new(3);
+        d.add_edge(0, 1).unwrap();
+        d.add_edge(1, 2).unwrap();
+        d.add_edge(2, 0).unwrap();
+        assert!(matches!(d.topo_order(), Err(DagError::Cycle)));
+    }
+
+    #[test]
+    fn inverse_tree_check() {
+        let d = diamond();
+        assert!(d.is_inverse_tree());
+        let mut bad = Dag::new(3);
+        bad.add_edge(0, 1).unwrap();
+        bad.add_edge(0, 2).unwrap(); // node 0 has two outgoing edges
+        assert!(!bad.is_inverse_tree());
+    }
+
+    #[test]
+    fn descendants_and_ancestors() {
+        let d = diamond();
+        assert_eq!(d.descendants(0), vec![2, 3]);
+        assert_eq!(d.descendants(3), Vec::<usize>::new());
+        assert_eq!(d.ancestors(3), vec![0, 1, 2]);
+        assert_eq!(d.ancestors(0), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn sources_and_sink() {
+        let d = diamond();
+        assert_eq!(d.sources(), vec![0, 1]);
+        assert_eq!(d.sinks(), vec![3]);
+        assert_eq!(d.sink().unwrap(), 3);
+    }
+
+    #[test]
+    fn critical_path_weighted() {
+        let d = diamond();
+        // node weights: longest path 1(w5) -> 2(w1) -> 3(w2) = 8
+        let w = [3.0, 5.0, 1.0, 2.0];
+        let (len, path) = d.critical_path(|n| w[n]);
+        assert!((len - 8.0).abs() < 1e-12);
+        assert_eq!(path, vec![1, 2, 3]);
+    }
+}

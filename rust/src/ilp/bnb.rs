@@ -1,0 +1,247 @@
+//! Best-first branch-and-bound over the simplex LP relaxation.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::lp::{LinProg, LpStatus, Relation};
+
+use super::model::{IlpError, IlpModel, IlpSolution, IlpStatus};
+
+/// Branch-and-bound options.
+#[derive(Clone, Debug)]
+pub struct BnbOptions {
+    /// Hard cap on explored nodes (safety net; paper instances need few).
+    pub max_nodes: usize,
+    /// Integrality tolerance.
+    pub int_tol: f64,
+    /// Relative optimality gap at which search stops.
+    pub rel_gap: f64,
+    /// Warm-start incumbent `(x, objective)`; must be feasible. Enables
+    /// aggressive pruning from the first node.
+    pub initial_incumbent: Option<(Vec<f64>, f64)>,
+}
+
+impl Default for BnbOptions {
+    fn default() -> Self {
+        BnbOptions {
+            max_nodes: 200_000,
+            int_tol: 1e-6,
+            rel_gap: 1e-9,
+            initial_incumbent: None,
+        }
+    }
+}
+
+/// Search statistics (exposed to `bench_ilp`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BnbStats {
+    pub nodes_explored: usize,
+    pub lp_solves: usize,
+    pub incumbent_updates: usize,
+    pub best_bound: f64,
+}
+
+#[derive(Clone, Debug)]
+struct Node {
+    /// (var, lower, upper) additional bounds along this branch.
+    bounds: Vec<(usize, f64, f64)>,
+    /// Parent LP bound (priority).
+    bound: f64,
+    depth: usize,
+}
+
+/// Max-heap on -bound => best-first (lowest LP bound first).
+impl PartialEq for Node {
+    fn eq(&self, other: &Self) -> bool {
+        self.bound == other.bound
+    }
+}
+impl Eq for Node {}
+impl PartialOrd for Node {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Node {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse: smaller bound = higher priority.
+        other
+            .bound
+            .partial_cmp(&self.bound)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.depth.cmp(&self.depth))
+    }
+}
+
+fn build_lp(model: &IlpModel, extra: &[(usize, f64, f64)]) -> LinProg {
+    let n = model.num_vars();
+    let mut lp = LinProg::minimize(n);
+    lp.set_objective(&model.objective);
+    for c in &model.constraints {
+        let terms: Vec<(usize, f64)> = c.expr.terms.iter().map(|&(v, co)| (v.0, co)).collect();
+        lp.add_constraint(&terms, c.rel, c.rhs);
+    }
+    // Variable domain upper bounds.
+    let mut lo = vec![0.0f64; n];
+    let mut hi: Vec<f64> = model
+        .kinds
+        .iter()
+        .map(|k| k.upper_bound().unwrap_or(f64::INFINITY))
+        .collect();
+    for &(v, l, u) in extra {
+        lo[v] = lo[v].max(l);
+        hi[v] = hi[v].min(u);
+    }
+    for v in 0..n {
+        if lo[v] > 0.0 {
+            lp.add_constraint(&[(v, 1.0)], Relation::Ge, lo[v]);
+        }
+        if hi[v].is_finite() {
+            lp.set_upper_bound(v, hi[v]);
+        }
+    }
+    lp
+}
+
+/// Solve `model` to optimality (or best feasible within node budget).
+pub fn solve(model: &IlpModel, opts: &BnbOptions) -> Result<IlpSolution, IlpError> {
+    let n = model.num_vars();
+    let mut stats = BnbStats::default();
+
+    if n == 0 {
+        return Ok(IlpSolution {
+            status: IlpStatus::Optimal,
+            x: vec![],
+            objective: 0.0,
+            stats,
+        });
+    }
+
+    let mut heap = BinaryHeap::new();
+    heap.push(Node {
+        bounds: Vec::new(),
+        bound: f64::NEG_INFINITY,
+        depth: 0,
+    });
+
+    let mut incumbent: Option<(Vec<f64>, f64)> = opts.initial_incumbent.clone();
+    let mut truncated = false;
+
+    while let Some(node) = heap.pop() {
+        if stats.nodes_explored >= opts.max_nodes {
+            truncated = true;
+            break;
+        }
+        stats.nodes_explored += 1;
+
+        // Bound pruning against the incumbent.
+        if let Some((_, inc_obj)) = &incumbent {
+            if node.bound > *inc_obj - opts.rel_gap * (1.0 + inc_obj.abs()) {
+                continue;
+            }
+        }
+
+        let lp = build_lp(model, &node.bounds);
+        stats.lp_solves += 1;
+        let sol = lp.solve()?;
+        match sol.status {
+            LpStatus::Infeasible => continue,
+            LpStatus::Unbounded => {
+                // Root unbounded LP with integral vars: report unbounded.
+                if node.depth == 0 && incumbent.is_none() {
+                    return Ok(IlpSolution {
+                        status: IlpStatus::Unbounded,
+                        x: vec![0.0; n],
+                        objective: f64::NEG_INFINITY,
+                        stats,
+                    });
+                }
+                continue;
+            }
+            LpStatus::Optimal => {}
+        }
+        let bound = sol.objective;
+        stats.best_bound = bound;
+        if let Some((_, inc_obj)) = &incumbent {
+            if bound > *inc_obj - opts.rel_gap * (1.0 + inc_obj.abs()) {
+                continue;
+            }
+        }
+
+        // Most-fractional branching variable.
+        let mut branch: Option<(usize, f64)> = None;
+        let mut best_frac = opts.int_tol;
+        for (i, k) in model.kinds.iter().enumerate() {
+            if !k.is_integral() {
+                continue;
+            }
+            let v = sol.x[i];
+            let frac = (v - v.round()).abs();
+            let dist_half = (v - v.floor() - 0.5).abs();
+            if frac > opts.int_tol {
+                let score = 0.5 - dist_half; // closer to .5 = more fractional
+                if branch.is_none() || score > best_frac {
+                    best_frac = score.max(opts.int_tol);
+                    branch = Some((i, v));
+                }
+            }
+        }
+
+        match branch {
+            None => {
+                // Integral solution: candidate incumbent.
+                let mut x = sol.x.clone();
+                for (i, k) in model.kinds.iter().enumerate() {
+                    if k.is_integral() {
+                        x[i] = x[i].round();
+                    }
+                }
+                let obj = model.objective_at(&x);
+                let better = incumbent
+                    .as_ref()
+                    .map(|(_, io)| obj < *io - 1e-12)
+                    .unwrap_or(true);
+                if better {
+                    incumbent = Some((x, obj));
+                    stats.incumbent_updates += 1;
+                }
+            }
+            Some((var, val)) => {
+                let floor = val.floor();
+                let mut lo_bounds = node.bounds.clone();
+                lo_bounds.push((var, 0.0, floor));
+                let mut hi_bounds = node.bounds;
+                hi_bounds.push((var, floor + 1.0, f64::INFINITY));
+                heap.push(Node {
+                    bounds: lo_bounds,
+                    bound,
+                    depth: node.depth + 1,
+                });
+                heap.push(Node {
+                    bounds: hi_bounds,
+                    bound,
+                    depth: node.depth + 1,
+                });
+            }
+        }
+    }
+
+    match incumbent {
+        Some((x, obj)) => Ok(IlpSolution {
+            status: if truncated {
+                IlpStatus::Feasible
+            } else {
+                IlpStatus::Optimal
+            },
+            x,
+            objective: obj,
+            stats,
+        }),
+        None => Ok(IlpSolution {
+            status: IlpStatus::Infeasible,
+            x: vec![0.0; n],
+            objective: 0.0,
+            stats,
+        }),
+    }
+}

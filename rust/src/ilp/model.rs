@@ -1,0 +1,201 @@
+//! MILP modeling API: variables, linear expressions, constraints.
+
+use crate::lp::Relation;
+
+use super::bnb::{self, BnbOptions};
+
+/// Variable handle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct VarId(pub usize);
+
+/// Variable domain.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum VarKind {
+    /// Continuous `0 <= x <= ub`.
+    Continuous { ub: Option<f64> },
+    /// Integer `0 <= x <= ub`.
+    Integer { ub: Option<u64> },
+    /// Binary `x in {0, 1}`.
+    Binary,
+}
+
+impl VarKind {
+    pub fn is_integral(&self) -> bool {
+        matches!(self, VarKind::Integer { .. } | VarKind::Binary)
+    }
+
+    pub fn upper_bound(&self) -> Option<f64> {
+        match self {
+            VarKind::Continuous { ub } => *ub,
+            VarKind::Integer { ub } => ub.map(|u| u as f64),
+            VarKind::Binary => Some(1.0),
+        }
+    }
+}
+
+/// A linear expression `sum coeff_i * var_i`.
+#[derive(Clone, Debug, Default)]
+pub struct LinExpr {
+    pub terms: Vec<(VarId, f64)>,
+}
+
+impl LinExpr {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_terms(terms: &[(VarId, f64)]) -> Self {
+        LinExpr {
+            terms: terms.to_vec(),
+        }
+    }
+
+    /// Append `coeff * var`.
+    pub fn add(&mut self, var: VarId, coeff: f64) -> &mut Self {
+        self.terms.push((var, coeff));
+        self
+    }
+
+    /// Evaluate at a point.
+    pub fn eval(&self, x: &[f64]) -> f64 {
+        self.terms.iter().map(|&(v, c)| c * x[v.0]).sum()
+    }
+}
+
+/// Constraint row.
+#[derive(Clone, Debug)]
+pub struct IlpConstraint {
+    pub expr: LinExpr,
+    pub rel: Relation,
+    pub rhs: f64,
+}
+
+/// Solver status for MILP.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IlpStatus {
+    /// Proven optimal.
+    Optimal,
+    /// Feasible incumbent found but search truncated (node limit).
+    Feasible,
+    Infeasible,
+    Unbounded,
+}
+
+/// MILP errors.
+#[derive(Debug, Clone, PartialEq)]
+pub enum IlpError {
+    Lp(crate::lp::LpError),
+    /// Model has no variables but constraints reference some.
+    Malformed(String),
+}
+
+impl std::fmt::Display for IlpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IlpError::Lp(e) => write!(f, "LP relaxation error: {e}"),
+            IlpError::Malformed(s) => write!(f, "malformed model: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for IlpError {}
+
+impl From<crate::lp::LpError> for IlpError {
+    fn from(e: crate::lp::LpError) -> Self {
+        IlpError::Lp(e)
+    }
+}
+
+/// MILP solution.
+#[derive(Clone, Debug)]
+pub struct IlpSolution {
+    pub status: IlpStatus,
+    pub x: Vec<f64>,
+    pub objective: f64,
+    /// Branch-and-bound statistics for the benches.
+    pub stats: super::BnbStats,
+}
+
+impl IlpSolution {
+    /// Rounded integer value of a variable (valid for integral kinds).
+    pub fn int_value(&self, v: VarId) -> u64 {
+        self.x[v.0].round().max(0.0) as u64
+    }
+}
+
+/// A minimization MILP under construction.
+#[derive(Clone, Debug, Default)]
+pub struct IlpModel {
+    pub(crate) kinds: Vec<VarKind>,
+    pub(crate) objective: Vec<f64>,
+    pub(crate) constraints: Vec<IlpConstraint>,
+}
+
+impl IlpModel {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a variable with the given domain and objective coefficient.
+    pub fn add_var(&mut self, kind: VarKind, obj_coeff: f64) -> VarId {
+        self.kinds.push(kind);
+        self.objective.push(obj_coeff);
+        VarId(self.kinds.len() - 1)
+    }
+
+    pub fn num_vars(&self) -> usize {
+        self.kinds.len()
+    }
+
+    pub fn num_constraints(&self) -> usize {
+        self.constraints.len()
+    }
+
+    /// Add `expr {rel} rhs`.
+    pub fn add_constraint(&mut self, expr: LinExpr, rel: Relation, rhs: f64) {
+        self.constraints.push(IlpConstraint { expr, rel, rhs });
+    }
+
+    /// Solve by branch-and-bound.
+    pub fn solve(&self, opts: &BnbOptions) -> Result<IlpSolution, IlpError> {
+        bnb::solve(self, opts)
+    }
+
+    /// Check a point against all constraints and integrality (used by the
+    /// property tests and the greedy fallback validator).
+    pub fn is_feasible(&self, x: &[f64], tol: f64) -> bool {
+        if x.len() != self.kinds.len() {
+            return false;
+        }
+        for (i, k) in self.kinds.iter().enumerate() {
+            if x[i] < -tol {
+                return false;
+            }
+            if let Some(ub) = k.upper_bound() {
+                if x[i] > ub + tol {
+                    return false;
+                }
+            }
+            if k.is_integral() && (x[i] - x[i].round()).abs() > tol {
+                return false;
+            }
+        }
+        for c in &self.constraints {
+            let lhs = c.expr.eval(x);
+            let ok = match c.rel {
+                Relation::Le => lhs <= c.rhs + tol,
+                Relation::Eq => (lhs - c.rhs).abs() <= tol,
+                Relation::Ge => lhs >= c.rhs - tol,
+            };
+            if !ok {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Objective at a point.
+    pub fn objective_at(&self, x: &[f64]) -> f64 {
+        self.objective.iter().zip(x).map(|(c, v)| c * v).sum()
+    }
+}

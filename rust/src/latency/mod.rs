@@ -1,0 +1,241 @@
+//! End-to-end latency model (§II-B, eqs. 1–5).
+//!
+//! A task's latency is the recursive DAG completion time: uplink delay to
+//! its first node, then per-hop transmission + propagation delays between
+//! assigned nodes, plus each service's processing delay, with every
+//! service waiting for all of its DAG parents (eq. 4).
+
+use crate::graph::Dag;
+use crate::microservice::{Application, TaskType};
+use crate::network::Topology;
+
+/// Node assignment of one task: `assignment[i]` = network node executing
+/// the task DAG's local node `i` (the routing path `P_j`).
+pub type Assignment = Vec<usize>;
+
+/// Per-service realized processing delays (ms), local-node indexed.
+pub type ProcDelays = Vec<f64>;
+
+/// Recursive completion-time calculator for one task (eqs. 4–5).
+///
+/// * `uplink_ms` — `τ_ul`, eq. (1), realized at arrival.
+/// * `assignment` — node executing each local DAG node.
+/// * `proc_ms` — processing delay `τ_pc` of each local node (deterministic
+///   for core services; for light services, the caller supplies either the
+///   realized random delay (simulation ground truth) or the QoS bound
+///   `g_{m,ε}(y)` (controller's estimate)).
+/// * `transfer` — callable `(from_node, to_node, mb) -> latency`, eq. (2);
+///   inject the topology's routed latency or a mock in tests.
+///
+/// Returns per-node completion times `T_j(v_i)`; the end-to-end latency is
+/// the sink's entry — eq. (5).
+pub fn completion_times<F>(
+    dag: &Dag,
+    output_mb: &[f64],
+    uplink_ms: f64,
+    assignment: &Assignment,
+    proc_ms: &ProcDelays,
+    mut transfer: F,
+) -> Vec<f64>
+where
+    F: FnMut(usize, usize, f64) -> f64,
+{
+    let order = dag.topo_order().expect("task graphs are DAGs");
+    let n = dag.len();
+    debug_assert_eq!(assignment.len(), n);
+    debug_assert_eq!(proc_ms.len(), n);
+    debug_assert_eq!(output_mb.len(), n);
+    let mut t = vec![0.0f64; n];
+    for &i in &order {
+        let parents = dag.parents(i);
+        if parents.is_empty() {
+            // Source services ingest the user payload: T = τ_ul + τ_pc.
+            t[i] = uplink_ms + proc_ms[i];
+        } else {
+            let mut ready = f64::NEG_INFINITY;
+            for &p in parents {
+                let tr = transfer(assignment[p], assignment[i], output_mb[p]);
+                ready = ready.max(t[p] + tr);
+            }
+            t[i] = ready + proc_ms[i];
+        }
+    }
+    t
+}
+
+/// End-to-end latency `T^E2E_j` (eq. 5): completion time at the DAG sink.
+pub fn end_to_end<F>(
+    dag: &Dag,
+    output_mb: &[f64],
+    uplink_ms: f64,
+    assignment: &Assignment,
+    proc_ms: &ProcDelays,
+    transfer: F,
+) -> f64
+where
+    F: FnMut(usize, usize, f64) -> f64,
+{
+    let t = completion_times(dag, output_mb, uplink_ms, assignment, proc_ms, transfer);
+    let sink = dag.sink().expect("task DAGs have a unique sink");
+    t[sink]
+}
+
+/// Mean-value latency profile of a task type (§III-A): all random variables
+/// replaced by their means, services placed at their *latency-nearest*
+/// feasible node unknown at profiling time — so this profiles processing
+/// chains only plus an optional fixed network penalty per hop.
+#[derive(Clone, Debug)]
+pub struct MeanProfile {
+    /// Mean processing delay of each local node (ms).
+    pub proc_ms: Vec<f64>,
+    /// Sum of mean processing delays of each node's descendants — the
+    /// `d^su` term of §III-A.
+    pub succ_ms: Vec<f64>,
+    /// Critical-path (longest chain) processing latency from any source to
+    /// each node, *excluding* the node itself — the network-free part of
+    /// `d^pr`.
+    pub pred_ms: Vec<f64>,
+}
+
+impl MeanProfile {
+    /// Build from a task type using mean service rates.
+    pub fn of(app: &Application, tt: &TaskType) -> Self {
+        let n = tt.dag.len();
+        let proc_ms: Vec<f64> = (0..n)
+            .map(|i| app.catalog.spec(tt.services[i]).mean_proc_delay())
+            .collect();
+        let mut succ_ms = vec![0.0; n];
+        for i in 0..n {
+            succ_ms[i] = tt
+                .dag
+                .descendants(i)
+                .into_iter()
+                .map(|d| proc_ms[d])
+                .sum();
+        }
+        let order = tt.dag.topo_order().expect("DAG");
+        let mut pred_ms = vec![0.0f64; n];
+        for &i in &order {
+            for &p in tt.dag.parents(i) {
+                let cand = pred_ms[p] + proc_ms[p];
+                if cand > pred_ms[i] {
+                    pred_ms[i] = cand;
+                }
+            }
+        }
+        MeanProfile {
+            proc_ms,
+            succ_ms,
+            pred_ms,
+        }
+    }
+}
+
+/// Routed transfer function over a topology (shortest-latency multi-hop),
+/// the default `transfer` argument in production paths.
+pub fn routed_transfer(topo: &Topology) -> impl FnMut(usize, usize, f64) -> f64 + '_ {
+    move |a, b, mb| topo.route_latency(a, b, mb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::graph::Dag;
+    use crate::microservice::build_fig1_application;
+    use crate::rng::Xoshiro256;
+
+    fn chain3() -> Dag {
+        let mut d = Dag::new(3);
+        d.add_edge(0, 1).unwrap();
+        d.add_edge(1, 2).unwrap();
+        d
+    }
+
+    #[test]
+    fn chain_latency_sums() {
+        let dag = chain3();
+        let out = [1.0, 1.0, 1.0];
+        // uplink 2, proc 1 each, transfer 0.5 per hop
+        let t = completion_times(&dag, &out, 2.0, &vec![0, 1, 2], &vec![1.0; 3], |a, b, _| {
+            if a == b {
+                0.0
+            } else {
+                0.5
+            }
+        });
+        assert!((t[0] - 3.0).abs() < 1e-12);
+        assert!((t[1] - 4.5).abs() < 1e-12);
+        assert!((t[2] - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn colocated_services_skip_transfer() {
+        let dag = chain3();
+        let out = [1.0, 1.0, 1.0];
+        let t = end_to_end(&dag, &out, 0.0, &vec![5, 5, 5], &vec![1.0; 3], |a, b, _| {
+            assert_eq!(a, b);
+            0.0
+        });
+        assert!((t - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fusion_waits_for_slowest_parent() {
+        // 0 -> 2 <- 1 ; parent 1 is slower.
+        let mut dag = Dag::new(3);
+        dag.add_edge(0, 2).unwrap();
+        dag.add_edge(1, 2).unwrap();
+        let out = [0.5, 2.0, 1.0];
+        let proc = vec![1.0, 5.0, 2.0];
+        let t = completion_times(&dag, &out, 1.0, &vec![0, 1, 2], &proc, |_, _, mb| mb);
+        // parent0 done at 2, +transfer 0.5 => 2.5 ; parent1 done at 6, +2 => 8
+        assert!((t[2] - (8.0 + 2.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn e2e_equals_sink_completion() {
+        let dag = chain3();
+        let out = [1.0; 3];
+        let asn = vec![0, 0, 0];
+        let proc = vec![1.0, 2.0, 3.0];
+        let t = completion_times(&dag, &out, 0.5, &asn, &proc, |_, _, _| 0.0);
+        let e = end_to_end(&dag, &out, 0.5, &asn, &proc, |_, _, _| 0.0);
+        assert_eq!(e, t[2]);
+    }
+
+    #[test]
+    fn transfer_uses_parent_output_size() {
+        let dag = chain3();
+        let out = [3.0, 7.0, 1.0];
+        let mut seen = Vec::new();
+        let _ = completion_times(&dag, &out, 0.0, &vec![0, 1, 2], &vec![0.0; 3], |_, _, mb| {
+            seen.push(mb);
+            0.0
+        });
+        assert_eq!(seen, vec![3.0, 7.0]);
+    }
+
+    #[test]
+    fn mean_profile_consistency() {
+        let cfg = ExperimentConfig::paper_default();
+        let mut rng = Xoshiro256::seed_from(42);
+        let app = build_fig1_application(&cfg, &mut rng);
+        for tt in &app.task_types {
+            let p = MeanProfile::of(&app, tt);
+            let sink = tt.dag.sink().unwrap();
+            // sink has no descendants
+            assert_eq!(p.succ_ms[sink], 0.0);
+            // sources have no predecessors
+            for s in tt.dag.sources() {
+                assert_eq!(p.pred_ms[s], 0.0);
+            }
+            // critical path through the sink >= any single proc delay on it
+            let total_chain = p.pred_ms[sink] + p.proc_ms[sink];
+            let (cp, _) = tt.dag.critical_path(|i| p.proc_ms[i]);
+            assert!((total_chain - cp).abs() < 1e-9);
+            // all positive
+            assert!(p.proc_ms.iter().all(|&d| d > 0.0));
+        }
+    }
+}

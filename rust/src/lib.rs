@@ -1,0 +1,53 @@
+//! # fmedge — Modular Foundation-Model Inference at the Edge
+//!
+//! Production-quality reproduction of *"Modular Foundation Model Inference
+//! at the Edge: Network-Aware Microservice Optimization"* (Zhu et al.,
+//! HKUST, CS.DC 2026): a two-tier deployment framework for foundation
+//! models decomposed into **core** (heavyweight, stateful) and **light**
+//! (stateless, contention-prone) microservices on a heterogeneous edge
+//! network.
+//!
+//! * **Static tier** — core microservices placed once per horizon by a
+//!   sparsity-constrained integer program over a network-aware QoS score
+//!   ([`placement`]).
+//! * **Dynamic tier** — light microservices deployed every slot by a
+//!   Lyapunov drift-plus-penalty controller whose latency bounds come from
+//!   effective-capacity theory ([`controller`], [`effcap`]).
+//!
+//! The crate is the Layer-3 Rust coordinator of a three-layer stack: JAX
+//! (Layer 2) and Pallas kernels (Layer 1) are compiled ahead of time to
+//! HLO-text artifacts that [`runtime`] loads and executes through PJRT —
+//! Python never runs on the request path.
+//!
+//! Substrates (PRNG, DAG, LP/MILP solver, config, CLI, property-test and
+//! bench harnesses) are implemented in-tree; see `DESIGN.md` for the full
+//! inventory and the experiment index.
+
+pub mod benchkit;
+pub mod graph;
+pub mod ilp;
+pub mod lp;
+pub mod rng;
+pub mod testkit;
+
+pub mod config;
+pub mod effcap;
+pub mod latency;
+pub mod metrics;
+pub mod microservice;
+pub mod network;
+pub mod workload;
+
+pub mod baselines;
+pub mod controller;
+pub mod placement;
+pub mod routing;
+pub mod sim;
+
+pub mod coordinator;
+pub mod runtime;
+
+pub mod cli;
+
+/// Crate version string, reported by the CLI.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,102 @@
+//! Linear-programming substrate: a dense two-phase primal simplex solver.
+//!
+//! The paper solves the static core-placement problem (14) with
+//! "off-the-shelf tools"; nothing off-the-shelf is available offline, so
+//! this module provides the LP relaxation engine underneath the in-tree
+//! branch-and-bound MILP solver (`crate::ilp`). Problem sizes are small
+//! (|V|·|Mcr| + |V|·|Mcr| binaries ≈ a few hundred variables), well within
+//! dense-simplex territory.
+
+mod simplex;
+
+pub use simplex::{LinProg, LpError, LpSolution, LpStatus, Relation};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simple_max_problem() {
+        // max 3x + 5y s.t. x <= 4, 2y <= 12, 3x + 2y <= 18  -> (2, 6), obj 36
+        let mut lp = LinProg::minimize(2);
+        lp.set_objective(&[-3.0, -5.0]);
+        lp.add_constraint(&[(0, 1.0)], Relation::Le, 4.0);
+        lp.add_constraint(&[(1, 2.0)], Relation::Le, 12.0);
+        lp.add_constraint(&[(0, 3.0), (1, 2.0)], Relation::Le, 18.0);
+        let sol = lp.solve().unwrap();
+        assert_eq!(sol.status, LpStatus::Optimal);
+        assert!((sol.objective + 36.0).abs() < 1e-7);
+        assert!((sol.x[0] - 2.0).abs() < 1e-7);
+        assert!((sol.x[1] - 6.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn equality_and_ge_constraints() {
+        // min x + y s.t. x + y = 10, x >= 3, y >= 2 -> obj 10
+        let mut lp = LinProg::minimize(2);
+        lp.set_objective(&[1.0, 1.0]);
+        lp.add_constraint(&[(0, 1.0), (1, 1.0)], Relation::Eq, 10.0);
+        lp.add_constraint(&[(0, 1.0)], Relation::Ge, 3.0);
+        lp.add_constraint(&[(1, 1.0)], Relation::Ge, 2.0);
+        let sol = lp.solve().unwrap();
+        assert_eq!(sol.status, LpStatus::Optimal);
+        assert!((sol.objective - 10.0).abs() < 1e-7);
+        assert!((sol.x[0] + sol.x[1] - 10.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let mut lp = LinProg::minimize(1);
+        lp.set_objective(&[1.0]);
+        lp.add_constraint(&[(0, 1.0)], Relation::Le, 1.0);
+        lp.add_constraint(&[(0, 1.0)], Relation::Ge, 2.0);
+        let sol = lp.solve().unwrap();
+        assert_eq!(sol.status, LpStatus::Infeasible);
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        // min -x with x >= 0 and no upper bound.
+        let mut lp = LinProg::minimize(1);
+        lp.set_objective(&[-1.0]);
+        lp.add_constraint(&[(0, 1.0)], Relation::Ge, 0.0);
+        let sol = lp.solve().unwrap();
+        assert_eq!(sol.status, LpStatus::Unbounded);
+    }
+
+    #[test]
+    fn upper_bounds_respected() {
+        // min -x - y with x <= 2.5, y <= 1.5 via variable bounds.
+        let mut lp = LinProg::minimize(2);
+        lp.set_objective(&[-1.0, -1.0]);
+        lp.set_upper_bound(0, 2.5);
+        lp.set_upper_bound(1, 1.5);
+        let sol = lp.solve().unwrap();
+        assert_eq!(sol.status, LpStatus::Optimal);
+        assert!((sol.x[0] - 2.5).abs() < 1e-7);
+        assert!((sol.x[1] - 1.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn degenerate_problem_terminates() {
+        // Klee-Minty-ish degeneracy: many redundant constraints.
+        let mut lp = LinProg::minimize(3);
+        lp.set_objective(&[-1.0, -1.0, -1.0]);
+        for i in 0..3 {
+            lp.add_constraint(&[(i, 1.0)], Relation::Le, 1.0);
+            lp.add_constraint(&[(i, 1.0)], Relation::Le, 1.0); // duplicate
+        }
+        lp.add_constraint(&[(0, 1.0), (1, 1.0), (2, 1.0)], Relation::Le, 3.0);
+        let sol = lp.solve().unwrap();
+        assert_eq!(sol.status, LpStatus::Optimal);
+        assert!((sol.objective + 3.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn zero_variable_problem() {
+        let lp = LinProg::minimize(0);
+        let sol = lp.solve().unwrap();
+        assert_eq!(sol.status, LpStatus::Optimal);
+        assert_eq!(sol.objective, 0.0);
+    }
+}

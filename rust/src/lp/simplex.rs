@@ -1,0 +1,441 @@
+//! Dense two-phase primal simplex with Bland's anti-cycling rule.
+//!
+//! Model: `min c·x` subject to row constraints `a·x {<=,=,>=} b` and
+//! variable bounds `0 <= x_j <= u_j` (upper bounds handled by explicit
+//! constraint rows for simplicity — problem sizes here are small).
+
+/// Constraint relation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Relation {
+    Le,
+    Eq,
+    Ge,
+}
+
+/// Solver status.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LpStatus {
+    Optimal,
+    Infeasible,
+    Unbounded,
+}
+
+/// Errors (malformed model).
+#[derive(Debug, Clone, PartialEq)]
+pub enum LpError {
+    /// A coefficient referenced a variable index out of range.
+    VarOutOfRange { var: usize, nvars: usize },
+    /// Iteration limit hit (anti-cycling failed — should not happen with
+    /// Bland's rule; kept as a hard safety net).
+    IterationLimit,
+}
+
+impl std::fmt::Display for LpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LpError::VarOutOfRange { var, nvars } => {
+                write!(f, "variable {var} out of range ({nvars} vars)")
+            }
+            LpError::IterationLimit => write!(f, "simplex iteration limit exceeded"),
+        }
+    }
+}
+
+impl std::error::Error for LpError {}
+
+/// Solution container.
+#[derive(Clone, Debug)]
+pub struct LpSolution {
+    pub status: LpStatus,
+    /// Primal values (length = number of structural variables).
+    pub x: Vec<f64>,
+    /// Objective value at `x` (undefined unless `status == Optimal`).
+    pub objective: f64,
+}
+
+struct Row {
+    coeffs: Vec<(usize, f64)>,
+    rel: Relation,
+    rhs: f64,
+}
+
+/// A linear program under construction.
+pub struct LinProg {
+    nvars: usize,
+    objective: Vec<f64>,
+    rows: Vec<Row>,
+    upper: Vec<Option<f64>>,
+}
+
+const EPS: f64 = 1e-9;
+
+impl LinProg {
+    /// A minimization problem over `nvars` non-negative variables.
+    pub fn minimize(nvars: usize) -> Self {
+        LinProg {
+            nvars,
+            objective: vec![0.0; nvars],
+            rows: Vec::new(),
+            upper: vec![None; nvars],
+        }
+    }
+
+    /// Number of structural variables.
+    pub fn num_vars(&self) -> usize {
+        self.nvars
+    }
+
+    /// Number of constraint rows added so far.
+    pub fn num_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Set the full objective vector.
+    pub fn set_objective(&mut self, c: &[f64]) {
+        assert_eq!(c.len(), self.nvars, "objective length mismatch");
+        self.objective.copy_from_slice(c);
+    }
+
+    /// Set one objective coefficient.
+    pub fn set_objective_coeff(&mut self, var: usize, c: f64) {
+        self.objective[var] = c;
+    }
+
+    /// Add `sum coeffs {rel} rhs`. Coefficients are `(var, value)` pairs.
+    pub fn add_constraint(&mut self, coeffs: &[(usize, f64)], rel: Relation, rhs: f64) {
+        self.rows.push(Row {
+            coeffs: coeffs.to_vec(),
+            rel,
+            rhs,
+        });
+    }
+
+    /// Impose `x_var <= ub` (in addition to the implicit `x >= 0`).
+    pub fn set_upper_bound(&mut self, var: usize, ub: f64) {
+        self.upper[var] = Some(ub);
+    }
+
+    /// Solve with two-phase simplex.
+    pub fn solve(&self) -> Result<LpSolution, LpError> {
+        // Validate references first.
+        for row in &self.rows {
+            for &(v, _) in &row.coeffs {
+                if v >= self.nvars {
+                    return Err(LpError::VarOutOfRange {
+                        var: v,
+                        nvars: self.nvars,
+                    });
+                }
+            }
+        }
+        if self.nvars == 0 {
+            // Feasible iff every constant row is satisfied by the empty x.
+            for row in &self.rows {
+                let lhs = 0.0;
+                let ok = match row.rel {
+                    Relation::Le => lhs <= row.rhs + EPS,
+                    Relation::Eq => (lhs - row.rhs).abs() <= EPS,
+                    Relation::Ge => lhs >= row.rhs - EPS,
+                };
+                if !ok {
+                    return Ok(LpSolution {
+                        status: LpStatus::Infeasible,
+                        x: vec![],
+                        objective: 0.0,
+                    });
+                }
+            }
+            return Ok(LpSolution {
+                status: LpStatus::Optimal,
+                x: vec![],
+                objective: 0.0,
+            });
+        }
+
+        Tableau::build(self).solve()
+    }
+}
+
+/// Dense simplex tableau. Columns: structural vars, then slack/surplus,
+/// then artificials. Rows: one per constraint, plus the objective row.
+struct Tableau {
+    /// a[r][c] for r in 0..m, c in 0..total_cols; rhs stored separately.
+    a: Vec<Vec<f64>>,
+    rhs: Vec<f64>,
+    /// basis[r] = column basic in row r.
+    basis: Vec<usize>,
+    nstruct: usize,
+    total: usize,
+    art_start: usize,
+    cost: Vec<f64>,
+}
+
+impl Tableau {
+    fn build(lp: &LinProg) -> Self {
+        // Materialize upper bounds as <= rows.
+        let mut rows: Vec<(Vec<f64>, Relation, f64)> = Vec::new();
+        for row in &lp.rows {
+            let mut dense = vec![0.0; lp.nvars];
+            for &(v, c) in &row.coeffs {
+                dense[v] += c;
+            }
+            rows.push((dense, row.rel, row.rhs));
+        }
+        for (v, ub) in lp.upper.iter().enumerate() {
+            if let Some(u) = ub {
+                let mut dense = vec![0.0; lp.nvars];
+                dense[v] = 1.0;
+                rows.push((dense, Relation::Le, *u));
+            }
+        }
+        // Normalize: rhs >= 0.
+        for (dense, rel, rhs) in &mut rows {
+            if *rhs < 0.0 {
+                for c in dense.iter_mut() {
+                    *c = -*c;
+                }
+                *rhs = -*rhs;
+                *rel = match *rel {
+                    Relation::Le => Relation::Ge,
+                    Relation::Eq => Relation::Eq,
+                    Relation::Ge => Relation::Le,
+                };
+            }
+        }
+
+        let m = rows.len();
+        let n = lp.nvars;
+        // Count slack columns (Le: +slack basic; Ge: -surplus + artificial;
+        // Eq: artificial).
+        let mut nslack = 0;
+        for (_, rel, _) in &rows {
+            if matches!(rel, Relation::Le | Relation::Ge) {
+                nslack += 1;
+            }
+        }
+        let mut nart = 0;
+        for (_, rel, _) in &rows {
+            if matches!(rel, Relation::Ge | Relation::Eq) {
+                nart += 1;
+            }
+        }
+        let art_start = n + nslack;
+        let total = n + nslack + nart;
+
+        let mut a = vec![vec![0.0; total]; m];
+        let mut rhs = vec![0.0; m];
+        let mut basis = vec![0usize; m];
+        let mut s = n;
+        let mut t = art_start;
+        for (r, (dense, rel, b)) in rows.iter().enumerate() {
+            a[r][..n].copy_from_slice(dense);
+            rhs[r] = *b;
+            match rel {
+                Relation::Le => {
+                    a[r][s] = 1.0;
+                    basis[r] = s;
+                    s += 1;
+                }
+                Relation::Ge => {
+                    a[r][s] = -1.0;
+                    s += 1;
+                    a[r][t] = 1.0;
+                    basis[r] = t;
+                    t += 1;
+                }
+                Relation::Eq => {
+                    a[r][t] = 1.0;
+                    basis[r] = t;
+                    t += 1;
+                }
+            }
+        }
+
+        let mut cost = vec![0.0; total];
+        cost[..n].copy_from_slice(&lp.objective);
+
+        Tableau {
+            a,
+            rhs,
+            basis,
+            nstruct: n,
+            total,
+            art_start,
+            cost,
+        }
+    }
+
+    fn solve(mut self) -> Result<LpSolution, LpError> {
+        let m = self.a.len();
+        // Phase 1: minimize sum of artificials (when any exist).
+        if self.art_start < self.total {
+            let mut p1 = vec![0.0; self.total];
+            for c in self.art_start..self.total {
+                p1[c] = 1.0;
+            }
+            let status = self.run(&p1)?;
+            if status == LpStatus::Unbounded {
+                // Phase-1 objective is bounded below by 0; cannot happen.
+                unreachable!("phase-1 simplex cannot be unbounded");
+            }
+            let p1_obj = self.objective_value(&p1);
+            if p1_obj > 1e-7 {
+                return Ok(LpSolution {
+                    status: LpStatus::Infeasible,
+                    x: vec![0.0; self.nstruct],
+                    objective: 0.0,
+                });
+            }
+            // Drive any artificial still basic (at zero) out of the basis.
+            for r in 0..m {
+                if self.basis[r] >= self.art_start {
+                    if let Some(c) =
+                        (0..self.art_start).find(|&c| self.a[r][c].abs() > EPS)
+                    {
+                        self.pivot(r, c);
+                    }
+                    // If the entire row is zero, it is redundant; the
+                    // artificial stays basic at value 0 harmlessly.
+                }
+            }
+        }
+
+        // Phase 2: original objective, artificial columns frozen.
+        let frozen_from = self.art_start;
+        let cost = std::mem::take(&mut self.cost);
+        let status = self.run_frozen(&cost, frozen_from)?;
+        let obj = self.objective_value(&cost);
+        let mut x = vec![0.0; self.nstruct];
+        for r in 0..m {
+            if self.basis[r] < self.nstruct {
+                x[self.basis[r]] = self.rhs[r];
+            }
+        }
+        Ok(LpSolution {
+            status,
+            x,
+            objective: obj,
+        })
+    }
+
+    fn objective_value(&self, cost: &[f64]) -> f64 {
+        let mut obj = 0.0;
+        for (r, &b) in self.basis.iter().enumerate() {
+            obj += cost[b] * self.rhs[r];
+        }
+        obj
+    }
+
+    fn run(&mut self, cost: &[f64]) -> Result<LpStatus, LpError> {
+        self.run_frozen(cost, self.total)
+    }
+
+    /// Simplex iterations over columns `< frozen_from` only.
+    fn run_frozen(&mut self, cost: &[f64], frozen_from: usize) -> Result<LpStatus, LpError> {
+        let m = self.a.len();
+        let max_iter = 50 * (m + self.total + 16);
+        for _ in 0..max_iter {
+            // Reduced costs: cj - cB . B^-1 Aj (tableau is kept in
+            // canonical form, so reduced cost = cost[j] - sum over rows of
+            // cost[basis[r]] * a[r][j]).
+            let mut entering = None;
+            let mut best_rc = -1e-9; // Dantzig with Bland fallback
+            let mut bland: Option<usize> = None;
+            for j in 0..frozen_from {
+                if self.basis.contains(&j) {
+                    continue;
+                }
+                let mut rc = cost[j];
+                for r in 0..m {
+                    let cb = cost[self.basis[r]];
+                    if cb != 0.0 {
+                        rc -= cb * self.a[r][j];
+                    }
+                }
+                if rc < -1e-7 {
+                    if bland.is_none() {
+                        bland = Some(j);
+                    }
+                    if rc < best_rc {
+                        best_rc = rc;
+                        entering = Some(j);
+                    }
+                }
+            }
+            let Some(mut j) = entering else {
+                return Ok(LpStatus::Optimal);
+            };
+            // Degeneracy guard: if we are cycling (many zero-ratio pivots),
+            // Bland's rule guarantees termination. Cheap heuristic: always
+            // prefer Bland's column when the best ratio is zero.
+            // Ratio test.
+            let ratio_row = |col: usize, a: &Vec<Vec<f64>>, rhs: &Vec<f64>| -> Option<(usize, f64)> {
+                let mut best: Option<(usize, f64)> = None;
+                for r in 0..m {
+                    let arj = a[r][col];
+                    if arj > EPS {
+                        let ratio = rhs[r] / arj;
+                        match best {
+                            None => best = Some((r, ratio)),
+                            Some((_, br)) if ratio < br - EPS => best = Some((r, ratio)),
+                            _ => {}
+                        }
+                    }
+                }
+                best
+            };
+            let mut leave = ratio_row(j, &self.a, &self.rhs);
+            if leave.is_none() {
+                // Unbounded along j — but in phase 2 only if rc < 0 (it is).
+                return Ok(LpStatus::Unbounded);
+            }
+            if let Some((_, ratio)) = leave {
+                if ratio <= EPS {
+                    if let Some(bj) = bland {
+                        // Switch to Bland's entering column on degenerate step.
+                        if bj != j {
+                            if let Some(l2) = ratio_row(bj, &self.a, &self.rhs) {
+                                j = bj;
+                                leave = Some(l2);
+                            }
+                        }
+                    }
+                }
+            }
+            let (r, _) = leave.unwrap();
+            self.pivot(r, j);
+        }
+        Err(LpError::IterationLimit)
+    }
+
+    /// Gauss-Jordan pivot on (row, col).
+    fn pivot(&mut self, row: usize, col: usize) {
+        let m = self.a.len();
+        let piv = self.a[row][col];
+        debug_assert!(piv.abs() > EPS, "pivot on (near-)zero element");
+        let inv = 1.0 / piv;
+        for c in 0..self.total {
+            self.a[row][c] *= inv;
+        }
+        self.rhs[row] *= inv;
+        let pivot_row = self.a[row].clone();
+        let pivot_rhs = self.rhs[row];
+        for r in 0..m {
+            if r == row {
+                continue;
+            }
+            let factor = self.a[r][col];
+            if factor.abs() <= EPS {
+                continue;
+            }
+            for c in 0..self.total {
+                self.a[r][c] -= factor * pivot_row[c];
+            }
+            self.rhs[r] -= factor * pivot_rhs;
+            if self.rhs[r].abs() < EPS {
+                self.rhs[r] = 0.0;
+            }
+        }
+        self.basis[row] = col;
+    }
+}

@@ -1,0 +1,218 @@
+//! `fmedge` binary: the leader entrypoint. See `cli::HELP`.
+
+use std::time::Instant;
+
+use fmedge::baselines::{GaStrategy, LbrrStrategy, PropAvg, Proposal};
+use fmedge::cli::{Args, HELP};
+use fmedge::config::ExperimentConfig;
+use fmedge::coordinator::{Coordinator, Request, ServeConfig};
+use fmedge::metrics::Summary;
+use fmedge::placement::{solve_static_placement, PlacementParams, QosScores, ScoreParams};
+use fmedge::rng::{Rng, Xoshiro256};
+use fmedge::runtime::{EffCapAccel, Runtime};
+use fmedge::sim::{run_trial, SimEnv, SimOptions, Strategy};
+use fmedge::workload::WorkloadGenerator;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    if args.flag("help") || args.command.is_none() {
+        print!("{HELP}");
+        return;
+    }
+    let result = match args.command.as_deref().unwrap() {
+        "config" => cmd_config(&args),
+        "place" => cmd_place(&args),
+        "gtable" => cmd_gtable(&args),
+        "simulate" => cmd_simulate(&args),
+        "serve" => cmd_serve(&args),
+        other => {
+            eprintln!("unknown command `{other}`\n\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+type AnyError = Box<dyn std::error::Error>;
+
+fn load_config(args: &Args) -> Result<ExperimentConfig, AnyError> {
+    Ok(match args.get("config") {
+        Some(path) => ExperimentConfig::from_path(path)?,
+        None => ExperimentConfig::paper_default(),
+    })
+}
+
+fn cmd_config(args: &Args) -> Result<(), AnyError> {
+    let cfg = load_config(args)?;
+    print!("{}", cfg.describe());
+    Ok(())
+}
+
+fn cmd_place(args: &Args) -> Result<(), AnyError> {
+    let mut cfg = load_config(args)?;
+    cfg.controller.kappa = args.get_usize("kappa", cfg.controller.kappa)?;
+    let seed = args.get_u64("seed", cfg.sim.seed)?;
+    let env = SimEnv::build(&cfg, seed);
+    let gen = WorkloadGenerator::new(
+        &cfg,
+        &env.app,
+        &env.topo,
+        &mut Xoshiro256::seed_from(env.users_seed),
+    );
+    let scores = QosScores::compute(
+        &env.app,
+        &env.topo,
+        &env.dm,
+        gen.users(),
+        &ScoreParams::from_config(&cfg.controller),
+    );
+    let mut params = PlacementParams::from_config(&cfg, cfg.sim.slots);
+    params.exact = args.flag("exact");
+    params.force_fallback = args.flag("fallback");
+    let t0 = Instant::now();
+    let placement = solve_static_placement(&env.app, &env.topo, &scores, &params);
+    println!(
+        "placement solved in {:?} (objective {:.1}, support {}, fallback {})",
+        t0.elapsed(),
+        placement.objective,
+        placement.support,
+        placement.used_fallback
+    );
+    println!("instances[node][core]:");
+    for (v, row) in placement.instances.iter().enumerate() {
+        if row.iter().any(|&x| x > 0) {
+            println!("  node {v:>2}: {row:?}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_gtable(args: &Args) -> Result<(), AnyError> {
+    let cfg = load_config(args)?;
+    let seed = args.get_u64("seed", cfg.sim.seed)?;
+    let env = SimEnv::build(&cfg, seed);
+    let gtable = if args.flag("accel") {
+        let rt = Runtime::cpu(Runtime::default_dir())?;
+        println!("PJRT platform: {}", rt.platform());
+        let workloads: Vec<f64> = env
+            .app
+            .catalog
+            .light_ids()
+            .iter()
+            .map(|&m| env.app.catalog.spec(m).workload_mb)
+            .collect();
+        EffCapAccel::load(&rt)?.build_gtable(&env.light_rate_samples, &workloads)?
+    } else {
+        env.gtable.clone()
+    };
+    println!(
+        "g_{{m,eps}}(y) delay bounds (ms), eps={}",
+        gtable.params_epsilon
+    );
+    print!("      ");
+    for y in 1..=gtable.max_parallelism() {
+        print!("y={y:<7}");
+    }
+    println!();
+    for m in 0..gtable.num_ms() {
+        print!("m={m:<3} ");
+        for y in 1..=gtable.max_parallelism() {
+            print!("{:<8.3}", gtable.delay(m, y));
+        }
+        println!();
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<(), AnyError> {
+    let mut cfg = load_config(args)?;
+    cfg.sim.slots = args.get_usize("slots", cfg.sim.slots)?;
+    cfg.sim.trials = args.get_usize("trials", cfg.sim.trials)?;
+    cfg.sim.load_multiplier = args.get_f64("load", cfg.sim.load_multiplier)?;
+    cfg.sim.seed = args.get_u64("seed", cfg.sim.seed)?;
+    let strat_name = args.get("strategy").unwrap_or("proposal").to_string();
+    let mut otr = Vec::new();
+    let mut cost = Vec::new();
+    let t0 = Instant::now();
+    for trial in 0..cfg.sim.trials {
+        let seed = cfg.sim.seed + trial as u64;
+        let env = SimEnv::build(&cfg, seed);
+        let mut strategy: Box<dyn Strategy> = match strat_name.as_str() {
+            "proposal" => Box::new(Proposal::new()),
+            "propavg" => Box::new(PropAvg::new()),
+            "lbrr" => Box::new(LbrrStrategy::new()),
+            "ga" => Box::new(GaStrategy::new(16, 12)),
+            other => return Err(format!("unknown strategy `{other}`").into()),
+        };
+        let m = run_trial(&env, strategy.as_mut(), seed, &SimOptions::from_config(&cfg));
+        println!(
+            "trial {trial:>3}: tasks={:<6} completion={:.3} on_time={:.3} cost={:.0}",
+            m.total_tasks,
+            m.completion_rate(),
+            m.on_time_rate(),
+            m.total_cost
+        );
+        otr.push(m.on_time_rate());
+        cost.push(m.total_cost);
+    }
+    println!(
+        "\n{} over {} trials in {:?}:\n  on-time  {}\n  cost     {}",
+        strat_name,
+        cfg.sim.trials,
+        t0.elapsed(),
+        Summary::of(&otr).row(),
+        Summary::of(&cost).row()
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<(), AnyError> {
+    let requests = args.get_usize("requests", 2000)?;
+    let rate = args.get_f64("rate", 2000.0)?;
+    let workers = args.get_usize("workers", 2)?;
+    let cfg = ServeConfig {
+        workers,
+        real_compute: !args.flag("no-real-compute"),
+        ..Default::default()
+    };
+    let slot = fmedge::runtime::shapes::MSBLOCK_L * fmedge::runtime::shapes::MSBLOCK_D;
+    let coordinator = Coordinator::start(cfg)?;
+    let mut rng = Xoshiro256::seed_from(7);
+    let gap = std::time::Duration::from_secs_f64(1.0 / rate);
+    let mut rejected = 0u64;
+    for id in 0..requests as u64 {
+        let data: Vec<f32> = (0..slot).map(|_| rng.next_f64() as f32).collect();
+        let req = Request {
+            id,
+            data,
+            submitted: Instant::now(),
+            deadline_ms: 50.0,
+        };
+        if coordinator.submit(req).is_err() {
+            rejected += 1;
+        }
+        std::thread::sleep(gap);
+    }
+    let report = coordinator.shutdown();
+    println!(
+        "served {} / rejected {} (client-side {rejected}) in {:?}",
+        report.served, report.rejected, report.elapsed
+    );
+    println!(
+        "throughput {:.0} rps, on-time {:.3}, batch fill {:.2}",
+        report.throughput_rps(),
+        report.on_time_rate(),
+        report.batch_fill
+    );
+    println!("latency (ms): {}", report.latency_ms.row());
+    Ok(())
+}

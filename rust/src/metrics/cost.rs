@@ -1,0 +1,135 @@
+//! System-cost accounting (eqs. 6–7).
+//!
+//! Core cost: one-time deployment + per-slot maintenance per instance.
+//! Light cost: instantiation on each *increase* of the instance count,
+//! per-slot maintenance, and per-slot parallelism cost.
+
+/// Cost breakdown over one horizon.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CostBreakdown {
+    pub core_deploy: f64,
+    pub core_maintain: f64,
+    pub light_instantiate: f64,
+    pub light_maintain: f64,
+    pub light_parallel: f64,
+}
+
+impl CostBreakdown {
+    pub fn core_total(&self) -> f64 {
+        self.core_deploy + self.core_maintain
+    }
+
+    pub fn light_total(&self) -> f64 {
+        self.light_instantiate + self.light_maintain + self.light_parallel
+    }
+
+    pub fn total(&self) -> f64 {
+        self.core_total() + self.light_total()
+    }
+}
+
+/// Streaming cost accumulator: the simulator calls it once per slot.
+#[derive(Clone, Debug, Default)]
+pub struct CostBook {
+    b: CostBreakdown,
+    /// Previous slot's light instance counts, `[node][light_idx]`.
+    prev_light: Vec<Vec<u32>>,
+}
+
+impl CostBook {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Charge the static core placement (eq. 6): deployment once plus
+    /// maintenance for `slots` slots for every instance.
+    pub fn charge_core_placement(
+        &mut self,
+        instances: &[Vec<u32>],
+        cost_deploy: &[f64],
+        cost_maint: &[f64],
+        slots: usize,
+    ) {
+        for row in instances {
+            for (m, &x) in row.iter().enumerate() {
+                let x = x as f64;
+                self.b.core_deploy += cost_deploy[m] * x;
+                self.b.core_maintain += cost_maint[m] * x * slots as f64;
+            }
+        }
+    }
+
+    /// Charge one slot of light deployment (eq. 7).
+    ///
+    /// * `x[v][m]` — instance counts this slot.
+    /// * `y[v][m]` — total parallelism (concurrent tasks) this slot.
+    pub fn charge_light_slot(
+        &mut self,
+        x: &[Vec<u32>],
+        y: &[Vec<u32>],
+        cost_inst: &[f64],
+        cost_maint: &[f64],
+        cost_par: &[f64],
+    ) {
+        if self.prev_light.is_empty() {
+            self.prev_light = vec![vec![0; x.first().map_or(0, Vec::len)]; x.len()];
+        }
+        for (v, row) in x.iter().enumerate() {
+            for (m, &count) in row.iter().enumerate() {
+                let prev = self.prev_light[v][m];
+                if count > prev {
+                    self.b.light_instantiate += cost_inst[m] * (count - prev) as f64;
+                }
+                self.b.light_maintain += cost_maint[m] * count as f64;
+                self.b.light_parallel += cost_par[m] * y[v][m] as f64;
+            }
+        }
+        self.prev_light = x.to_vec();
+    }
+
+    pub fn breakdown(&self) -> CostBreakdown {
+        self.b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn core_cost_eq6() {
+        let mut book = CostBook::new();
+        // 2 instances of MS0 on node0, 1 of MS1 on node1; 10 slots.
+        let placement = vec![vec![2, 0], vec![0, 1]];
+        book.charge_core_placement(&placement, &[20.0, 20.0], &[4.0, 4.0], 10);
+        let b = book.breakdown();
+        assert_eq!(b.core_deploy, 60.0); // 3 * 20
+        assert_eq!(b.core_maintain, 120.0); // 3 * 4 * 10
+        assert_eq!(b.total(), 180.0);
+    }
+
+    #[test]
+    fn light_instantiation_charged_on_increase_only() {
+        let mut book = CostBook::new();
+        let inst = [4.0];
+        let maint = [1.0];
+        let par = [0.5];
+        // slot 1: 2 instances, parallelism 3
+        book.charge_light_slot(&[vec![2]], &[vec![3]], &inst, &maint, &par);
+        // slot 2: down to 1 instance (no instantiation cost)
+        book.charge_light_slot(&[vec![1]], &[vec![1]], &inst, &maint, &par);
+        // slot 3: back to 3 instances (2 new instantiations)
+        book.charge_light_slot(&[vec![3]], &[vec![4]], &inst, &maint, &par);
+        let b = book.breakdown();
+        assert_eq!(b.light_instantiate, 4.0 * (2 + 0 + 2) as f64);
+        assert_eq!(b.light_maintain, 1.0 * (2 + 1 + 3) as f64);
+        assert_eq!(b.light_parallel, 0.5 * (3 + 1 + 4) as f64);
+    }
+
+    #[test]
+    fn zero_activity_costs_nothing() {
+        let mut book = CostBook::new();
+        book.charge_light_slot(&[vec![0, 0]], &[vec![0, 0]], &[4.0, 4.0], &[1.0, 1.0], &[0.5, 0.5]);
+        assert_eq!(book.breakdown().total(), 0.0);
+    }
+}

@@ -1,0 +1,175 @@
+//! Metrics: the paper's evaluation quantities — on-time task completion
+//! rate, total system cost (eqs. 6–7) — plus the distribution machinery
+//! behind Fig. 3's violins (quantiles, kernel density estimates) and
+//! Fig. 4's error bars (mean ± std over trials).
+
+mod cost;
+mod stats;
+
+pub use cost::{CostBook, CostBreakdown};
+pub use stats::{kde_violin, quantile, Summary, ViolinData};
+
+/// Outcome of one completed (or dropped) task.
+#[derive(Clone, Copy, Debug)]
+pub struct TaskOutcome {
+    pub task_id: u64,
+    /// End-to-end latency (ms); `None` if never completed in-horizon.
+    pub latency_ms: Option<f64>,
+    pub deadline_ms: f64,
+}
+
+impl TaskOutcome {
+    pub fn completed(&self) -> bool {
+        self.latency_ms.is_some()
+    }
+
+    pub fn on_time(&self) -> bool {
+        self.latency_ms.map_or(false, |l| l <= self.deadline_ms)
+    }
+}
+
+/// Aggregated metrics of one simulation trial.
+#[derive(Clone, Debug, Default)]
+pub struct TrialMetrics {
+    pub total_tasks: usize,
+    pub completed: usize,
+    pub on_time: usize,
+    pub total_cost: f64,
+    pub core_cost: f64,
+    pub light_cost: f64,
+    /// Completed-task latencies (ms).
+    pub latencies_ms: Vec<f64>,
+    /// Deadlines of all admitted tasks (for slack analysis).
+    pub mean_deadline_ms: f64,
+}
+
+impl TrialMetrics {
+    /// Fraction of admitted tasks completed within the horizon.
+    pub fn completion_rate(&self) -> f64 {
+        if self.total_tasks == 0 {
+            return 1.0;
+        }
+        self.completed as f64 / self.total_tasks as f64
+    }
+
+    /// Fraction of admitted tasks completed before their deadline — the
+    /// paper's headline metric (>84% for the proposal).
+    pub fn on_time_rate(&self) -> f64 {
+        if self.total_tasks == 0 {
+            return 1.0;
+        }
+        self.on_time as f64 / self.total_tasks as f64
+    }
+
+    /// Latency percentile over completed tasks.
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        let mut v = self.latencies_ms.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        quantile(&v, p)
+    }
+}
+
+/// Accumulates outcomes during a trial.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsCollector {
+    outcomes: Vec<TaskOutcome>,
+}
+
+impl MetricsCollector {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, o: TaskOutcome) {
+        self.outcomes.push(o);
+    }
+
+    pub fn len(&self) -> usize {
+        self.outcomes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.outcomes.is_empty()
+    }
+
+    /// Fold into trial metrics, attaching the cost book's totals.
+    pub fn finish(self, costs: &CostBook) -> TrialMetrics {
+        let total_tasks = self.outcomes.len();
+        let completed = self.outcomes.iter().filter(|o| o.completed()).count();
+        let on_time = self.outcomes.iter().filter(|o| o.on_time()).count();
+        let latencies_ms: Vec<f64> = self
+            .outcomes
+            .iter()
+            .filter_map(|o| o.latency_ms)
+            .collect();
+        let mean_deadline_ms = if total_tasks > 0 {
+            self.outcomes.iter().map(|o| o.deadline_ms).sum::<f64>() / total_tasks as f64
+        } else {
+            0.0
+        };
+        let b = costs.breakdown();
+        TrialMetrics {
+            total_tasks,
+            completed,
+            on_time,
+            total_cost: b.total(),
+            core_cost: b.core_total(),
+            light_cost: b.light_total(),
+            latencies_ms,
+            mean_deadline_ms,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(lat: Option<f64>, dl: f64) -> TaskOutcome {
+        TaskOutcome {
+            task_id: 0,
+            latency_ms: lat,
+            deadline_ms: dl,
+        }
+    }
+
+    #[test]
+    fn rates_computed_correctly() {
+        let mut c = MetricsCollector::new();
+        c.record(outcome(Some(10.0), 20.0)); // on time
+        c.record(outcome(Some(30.0), 20.0)); // late
+        c.record(outcome(None, 20.0)); // dropped
+        let m = c.finish(&CostBook::default());
+        assert_eq!(m.total_tasks, 3);
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.on_time, 1);
+        assert!((m.completion_rate() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((m.on_time_rate() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_trial_has_unit_rates() {
+        let m = MetricsCollector::new().finish(&CostBook::default());
+        assert_eq!(m.completion_rate(), 1.0);
+        assert_eq!(m.on_time_rate(), 1.0);
+    }
+
+    #[test]
+    fn deadline_boundary_counts_on_time() {
+        let o = outcome(Some(20.0), 20.0);
+        assert!(o.on_time());
+        let o2 = outcome(Some(20.000001), 20.0);
+        assert!(!o2.on_time());
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let mut c = MetricsCollector::new();
+        for i in 1..=100 {
+            c.record(outcome(Some(i as f64), 1000.0));
+        }
+        let m = c.finish(&CostBook::default());
+        assert!((m.latency_percentile(0.5) - 50.5).abs() < 1.0);
+        assert!(m.latency_percentile(0.99) >= 99.0);
+    }
+}

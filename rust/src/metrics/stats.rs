@@ -1,0 +1,178 @@
+//! Distribution statistics: quantiles, summaries, and Gaussian KDE for
+//! the violin plots of Fig. 3.
+
+/// Linear-interpolated quantile of a **sorted** slice; `p ∈ [0, 1]`.
+pub fn quantile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let p = p.clamp(0.0, 1.0);
+    let idx = p * (sorted.len() - 1) as f64;
+    let lo = idx.floor() as usize;
+    let hi = idx.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = idx - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Five-number-plus summary of a sample.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub q25: f64,
+    pub median: f64,
+    pub q75: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Self {
+        if xs.is_empty() {
+            return Summary {
+                n: 0,
+                mean: f64::NAN,
+                std: f64::NAN,
+                min: f64::NAN,
+                q25: f64::NAN,
+                median: f64::NAN,
+                q75: f64::NAN,
+                max: f64::NAN,
+            };
+        }
+        let mut s = xs.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        let mean = s.iter().sum::<f64>() / n as f64;
+        let var = s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: s[0],
+            q25: quantile(&s, 0.25),
+            median: quantile(&s, 0.5),
+            q75: quantile(&s, 0.75),
+            max: s[n - 1],
+        }
+    }
+
+    /// One-line report row.
+    pub fn row(&self) -> String {
+        format!(
+            "n={} mean={:.4} std={:.4} min={:.4} q25={:.4} med={:.4} q75={:.4} max={:.4}",
+            self.n, self.mean, self.std, self.min, self.q25, self.median, self.q75, self.max
+        )
+    }
+}
+
+/// Violin-plot data: a Gaussian KDE evaluated on a uniform grid — exactly
+/// what a plotting frontend needs to draw Fig. 3's violins.
+#[derive(Clone, Debug)]
+pub struct ViolinData {
+    pub grid: Vec<f64>,
+    pub density: Vec<f64>,
+    pub summary: Summary,
+}
+
+/// Gaussian KDE with Silverman's rule-of-thumb bandwidth.
+pub fn kde_violin(xs: &[f64], grid_points: usize) -> ViolinData {
+    let summary = Summary::of(xs);
+    if xs.is_empty() || grid_points == 0 {
+        return ViolinData {
+            grid: vec![],
+            density: vec![],
+            summary,
+        };
+    }
+    let n = xs.len() as f64;
+    // Silverman bandwidth; guard zero-variance samples.
+    let h = (1.06 * summary.std * n.powf(-0.2)).max(1e-9);
+    let lo = summary.min - 3.0 * h;
+    let hi = summary.max + 3.0 * h;
+    let grid: Vec<f64> = (0..grid_points)
+        .map(|i| lo + (hi - lo) * i as f64 / (grid_points - 1).max(1) as f64)
+        .collect();
+    let norm = 1.0 / (n * h * (2.0 * std::f64::consts::PI).sqrt());
+    let density: Vec<f64> = grid
+        .iter()
+        .map(|&g| {
+            norm * xs
+                .iter()
+                .map(|&x| (-0.5 * ((g - x) / h).powi(2)).exp())
+                .sum::<f64>()
+        })
+        .collect();
+    ViolinData {
+        grid,
+        density,
+        summary,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantile_interpolates() {
+        let s = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile(&s, 0.0), 1.0);
+        assert_eq!(quantile(&s, 1.0), 4.0);
+        assert!((quantile(&s, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_of_known_sample() {
+        let s = Summary::of(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert_eq!(s.n, 8);
+        assert!((s.mean - 5.0).abs() < 1e-12);
+        assert!((s.std - 2.0).abs() < 1e-12);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 9.0);
+    }
+
+    #[test]
+    fn summary_empty_is_nan() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.n, 0);
+        assert!(s.mean.is_nan());
+    }
+
+    #[test]
+    fn kde_integrates_to_one() {
+        let xs: Vec<f64> = (0..200).map(|i| (i % 13) as f64 * 0.5).collect();
+        let v = kde_violin(&xs, 512);
+        let dx = v.grid[1] - v.grid[0];
+        let integral: f64 = v.density.iter().sum::<f64>() * dx;
+        assert!(
+            (integral - 1.0).abs() < 0.02,
+            "KDE should integrate to ~1, got {integral}"
+        );
+    }
+
+    #[test]
+    fn kde_peak_near_mode() {
+        let xs = vec![5.0; 50];
+        let v = kde_violin(&xs, 101);
+        let peak_idx = v
+            .density
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert!((v.grid[peak_idx] - 5.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn kde_handles_empty() {
+        let v = kde_violin(&[], 64);
+        assert!(v.grid.is_empty());
+    }
+}

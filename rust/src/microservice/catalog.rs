@@ -1,0 +1,216 @@
+//! Concrete microservice specs and the application container.
+
+use crate::graph::Dag;
+use crate::rng::{Distribution, Gamma, Rng};
+
+/// Global microservice identifier (dense index into the catalog).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct MsId(pub usize);
+
+/// Task-type identifier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TaskTypeId(pub usize);
+
+/// Core vs light dichotomy (§II-A).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MsClass {
+    /// Heavyweight, stateful, deterministic rate, strict isolation.
+    Core,
+    /// Stateless, elastic, stochastic rate under contention.
+    Light,
+}
+
+/// Processing-rate model `f_m` (MB/ms): deterministic for core services,
+/// Gamma for light services (Table I).
+#[derive(Clone, Copy, Debug)]
+pub enum RateModel {
+    Deterministic(f64),
+    Gamma { shape: f64, scale: f64 },
+}
+
+impl RateModel {
+    /// Mean rate E[f_m].
+    pub fn mean(&self) -> f64 {
+        match self {
+            RateModel::Deterministic(f) => *f,
+            RateModel::Gamma { shape, scale } => shape * scale,
+        }
+    }
+
+    /// Draw one instantaneous rate.
+    pub fn sample<R: Rng + ?Sized>(&self, rng: &mut R) -> f64 {
+        match self {
+            RateModel::Deterministic(f) => *f,
+            RateModel::Gamma { shape, scale } => Gamma::new(*shape, *scale).sample(rng),
+        }
+    }
+
+    /// Draw `n` rates (used to profile the effective-capacity model).
+    pub fn sample_n<R: Rng + ?Sized>(&self, rng: &mut R, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.sample(rng)).collect()
+    }
+}
+
+/// One microservice's concrete (per-run sampled) specification.
+#[derive(Clone, Debug)]
+pub struct MsSpec {
+    pub id: MsId,
+    pub name: String,
+    pub class: MsClass,
+    /// Resource requirement vector `r_m` (CPU, RAM, GPU, VRAM).
+    pub resources: [f64; crate::config::NUM_RESOURCES],
+    /// Computational workload `a_m` (MB) per invocation.
+    pub workload_mb: f64,
+    /// Output payload `b_m` (MB).
+    pub output_mb: f64,
+    /// Processing rate `f_m`.
+    pub rate: RateModel,
+    /// One-time deployment cost `c^dp_m`.
+    pub cost_deploy: f64,
+    /// Per-slot maintenance cost `c^mt_m`.
+    pub cost_maint: f64,
+    /// Per-parallelism cost `c^pl_m`.
+    pub cost_parallel: f64,
+}
+
+impl MsSpec {
+    /// Mean processing delay `a_m / E[f_m]` (ms), the PropAvg estimate.
+    pub fn mean_proc_delay(&self) -> f64 {
+        self.workload_mb / self.rate.mean()
+    }
+
+    pub fn is_core(&self) -> bool {
+        self.class == MsClass::Core
+    }
+}
+
+/// All microservices of the application.
+#[derive(Clone, Debug, Default)]
+pub struct Catalog {
+    services: Vec<MsSpec>,
+    core: Vec<MsId>,
+    light: Vec<MsId>,
+}
+
+impl Catalog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a spec; its `id` must equal the current length.
+    pub fn push(&mut self, spec: MsSpec) {
+        assert_eq!(spec.id.0, self.services.len(), "MsSpec ids must be dense");
+        match spec.class {
+            MsClass::Core => self.core.push(spec.id),
+            MsClass::Light => self.light.push(spec.id),
+        }
+        self.services.push(spec);
+    }
+
+    pub fn len(&self) -> usize {
+        self.services.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.services.is_empty()
+    }
+
+    pub fn num_core(&self) -> usize {
+        self.core.len()
+    }
+
+    pub fn num_light(&self) -> usize {
+        self.light.len()
+    }
+
+    /// Core MS ids (`M^cr`).
+    pub fn core_ids(&self) -> &[MsId] {
+        &self.core
+    }
+
+    /// Light MS ids (`M^lt`).
+    pub fn light_ids(&self) -> &[MsId] {
+        &self.light
+    }
+
+    pub fn spec(&self, id: MsId) -> &MsSpec {
+        &self.services[id.0]
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &MsSpec> {
+        self.services.iter()
+    }
+
+    /// Position of a light MS id within `light_ids()` (dense light index),
+    /// used by the g-table which is indexed by light MS only.
+    pub fn light_index(&self, id: MsId) -> Option<usize> {
+        self.light.iter().position(|&l| l == id)
+    }
+}
+
+/// One task type `G_n = (M_n, L_n)` plus its workload constants.
+#[derive(Clone, Debug)]
+pub struct TaskType {
+    pub id: TaskTypeId,
+    /// DAG over local node indices; node `i` executes `services[i]`.
+    pub dag: Dag,
+    /// Local-node → catalog MS mapping (`M_n`).
+    pub services: Vec<MsId>,
+    /// End-to-end deadline `D_n` (ms).
+    pub deadline_ms: f64,
+    /// Input payload `A_n` (MB).
+    pub input_mb: f64,
+}
+
+impl TaskType {
+    /// Number of services `I_n`.
+    pub fn num_services(&self) -> usize {
+        self.services.len()
+    }
+
+    /// Local node indices of `ms` within this task DAG (usually one).
+    pub fn local_nodes_of(&self, ms: MsId) -> Vec<usize> {
+        self.services
+            .iter()
+            .enumerate()
+            .filter(|&(_, &s)| s == ms)
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+/// The full FM application: catalog + task types + inverse index.
+#[derive(Clone, Debug)]
+pub struct Application {
+    pub catalog: Catalog,
+    pub task_types: Vec<TaskType>,
+    /// `types_of[m]` = task types requiring MS `m` (the `N_m` sets of §III-A).
+    types_of: Vec<Vec<TaskTypeId>>,
+}
+
+impl Application {
+    pub fn new(catalog: Catalog, task_types: Vec<TaskType>) -> Self {
+        let mut types_of = vec![Vec::new(); catalog.len()];
+        for tt in &task_types {
+            for &m in &tt.services {
+                if !types_of[m.0].contains(&tt.id) {
+                    types_of[m.0].push(tt.id);
+                }
+            }
+        }
+        Application {
+            catalog,
+            task_types,
+            types_of,
+        }
+    }
+
+    /// Task types requiring MS `m` — the set `N_m` of eq. (15).
+    pub fn types_requiring(&self, m: MsId) -> &[TaskTypeId] {
+        &self.types_of[m.0]
+    }
+
+    pub fn task_type(&self, id: TaskTypeId) -> &TaskType {
+        &self.task_types[id.0]
+    }
+}

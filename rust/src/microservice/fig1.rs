@@ -1,0 +1,162 @@
+//! Builders for the Fig. 1 application: 4 task types over 6 core and
+//! 9 light microservices, each task type an inverse tree (multimodal
+//! fusion: many inputs funnel into core models, one final output).
+
+use crate::config::{ExperimentConfig, MsClassConfig, RateSpec};
+use crate::graph::Dag;
+use crate::rng::Rng;
+
+use super::catalog::{
+    Application, Catalog, MsClass, MsId, MsSpec, RateModel, TaskType, TaskTypeId,
+};
+
+fn sample_spec<R: Rng + ?Sized>(
+    id: usize,
+    class: MsClass,
+    cfg: &MsClassConfig,
+    rng: &mut R,
+) -> MsSpec {
+    let mut resources = [0.0; crate::config::NUM_RESOURCES];
+    for (k, r) in cfg.resources.iter().enumerate() {
+        resources[k] = r.sample(rng);
+    }
+    let rate = match cfg.rate {
+        RateSpec::Deterministic(r) => RateModel::Deterministic(r.sample(rng)),
+        RateSpec::Gamma { shape, scale } => RateModel::Gamma {
+            shape: shape.sample(rng),
+            scale: scale.sample(rng),
+        },
+    };
+    let prefix = match class {
+        MsClass::Core => "core",
+        MsClass::Light => "light",
+    };
+    MsSpec {
+        id: MsId(id),
+        name: format!("{prefix}-{id}"),
+        class,
+        resources,
+        workload_mb: cfg.workload_mb.sample(rng),
+        output_mb: cfg.output_mb.sample(rng),
+        rate,
+        cost_deploy: cfg.cost_deploy,
+        cost_maint: cfg.cost_maint,
+        cost_parallel: cfg.cost_parallel,
+    }
+}
+
+/// Sample a catalog of `num_core` + `num_light` services from the config
+/// ranges. Core services occupy ids `0..num_core`.
+pub fn sample_catalog<R: Rng + ?Sized>(cfg: &ExperimentConfig, rng: &mut R) -> Catalog {
+    let mut catalog = Catalog::new();
+    for i in 0..cfg.app.num_core_ms {
+        catalog.push(sample_spec(i, MsClass::Core, &cfg.core_ms, rng));
+    }
+    for i in 0..cfg.app.num_light_ms {
+        catalog.push(sample_spec(
+            cfg.app.num_core_ms + i,
+            MsClass::Light,
+            &cfg.light_ms,
+            rng,
+        ));
+    }
+    catalog
+}
+
+/// Build one inverse-tree task type over a chosen service sequence.
+///
+/// Construction: nodes are ordered `0..n`; every node except the last picks
+/// a successor among the later nodes, giving at most one outgoing edge per
+/// node, a single sink (node `n-1`) and acyclicity by construction. Light
+/// services are biased toward the leaves (pre-processing), core services
+/// toward fusion points and the sink — matching Fig. 1's structure.
+fn build_inverse_tree<R: Rng + ?Sized>(
+    id: usize,
+    services: Vec<MsId>,
+    deadline_ms: f64,
+    input_mb: f64,
+    rng: &mut R,
+) -> TaskType {
+    let n = services.len();
+    let mut dag = Dag::new(n);
+    for i in 0..n.saturating_sub(1) {
+        // Successor biased to be close (chains) but allowed to skip ahead
+        // (fusion): choose among the next 1..=3 nodes, clamped to n-1.
+        let max_skip = 3.min(n - 1 - i);
+        let succ = i + 1 + rng.next_below(max_skip as u64) as usize;
+        dag.add_edge(i, succ.min(n - 1)).expect("forward edge is acyclic");
+    }
+    debug_assert!(dag.is_inverse_tree());
+    TaskType {
+        id: TaskTypeId(id),
+        dag,
+        services,
+        deadline_ms,
+        input_mb,
+    }
+}
+
+/// Sample the service mix of one task type: light services feed toward
+/// core services with the sink always core.
+fn sample_task_services<R: Rng + ?Sized>(
+    catalog: &Catalog,
+    count: usize,
+    rng: &mut R,
+) -> Vec<MsId> {
+    let cores = catalog.core_ids();
+    let lights = catalog.light_ids();
+    // Roughly 40% core (Fig. 1 has 6 core / 9 light shared by 4 types).
+    let num_core = ((count as f64) * 0.4).round().max(1.0) as usize;
+    let num_core = num_core.min(count - 1).min(cores.len()).max(1);
+    let num_light = (count - num_core).min(lights.len());
+
+    let mut chosen_light: Vec<MsId> = {
+        let mut pool = lights.to_vec();
+        rng.shuffle(&mut pool);
+        pool.truncate(num_light);
+        pool
+    };
+    let mut chosen_core: Vec<MsId> = {
+        let mut pool = cores.to_vec();
+        rng.shuffle(&mut pool);
+        pool.truncate(num_core);
+        pool
+    };
+    // Order: lights first (leaves/pre-processing), cores later, core sink.
+    rng.shuffle(&mut chosen_light);
+    rng.shuffle(&mut chosen_core);
+    let mut services = chosen_light;
+    // Interleave non-sink cores into the middle third onward.
+    let sink_core = chosen_core.pop().expect("at least one core service");
+    for (i, c) in chosen_core.into_iter().enumerate() {
+        let pos = (services.len() / 2 + i).min(services.len());
+        services.insert(pos, c);
+    }
+    services.push(sink_core);
+    services
+}
+
+/// Build the paper's evaluation application (Fig. 1): `num_task_types`
+/// inverse-tree DAGs sharing the sampled catalog.
+pub fn build_application<R: Rng + ?Sized>(cfg: &ExperimentConfig, rng: &mut R) -> Application {
+    let catalog = sample_catalog(cfg, rng);
+    let mut task_types = Vec::with_capacity(cfg.app.num_task_types);
+    for n in 0..cfg.app.num_task_types {
+        let lo = cfg.app.services_per_task.lo.round() as usize;
+        let hi = cfg.app.services_per_task.hi.round() as usize;
+        let count = rng.range_usize(lo.max(2), hi.max(lo.max(2)));
+        let services = sample_task_services(&catalog, count, rng);
+        let deadline = cfg.workload.deadline_ms.sample(rng);
+        let input = cfg.workload.input_mb.sample(rng);
+        task_types.push(build_inverse_tree(n, services, deadline, input, rng));
+    }
+    Application::new(catalog, task_types)
+}
+
+/// Alias with the paper's Fig. 1 name.
+pub fn build_fig1_application<R: Rng + ?Sized>(
+    cfg: &ExperimentConfig,
+    rng: &mut R,
+) -> Application {
+    build_application(cfg, rng)
+}

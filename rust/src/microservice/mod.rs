@@ -1,0 +1,148 @@
+//! Microservice specification for FM inference (§II-A).
+//!
+//! An FM application is decomposed into **core** microservices (heavyweight,
+//! stateful, deterministic rate, resource-isolated — transformers, vision
+//! backbones) and **light** microservices (stateless, small footprint,
+//! stochastic rate under contention — pre/post-processing). Task types are
+//! inverse-tree DAGs over these services (Fig. 1).
+
+mod catalog;
+mod fig1;
+
+pub use catalog::{Application, Catalog, MsClass, MsId, MsSpec, RateModel, TaskType, TaskTypeId};
+pub use fig1::{build_application, build_fig1_application};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn fig1_application_shape_matches_paper() {
+        let cfg = ExperimentConfig::paper_default();
+        let mut rng = Xoshiro256::seed_from(1);
+        let app = build_fig1_application(&cfg, &mut rng);
+        assert_eq!(app.catalog.num_core(), 6);
+        assert_eq!(app.catalog.num_light(), 9);
+        assert_eq!(app.task_types.len(), 4);
+    }
+
+    #[test]
+    fn all_task_dags_are_inverse_trees() {
+        let cfg = ExperimentConfig::paper_default();
+        let mut rng = Xoshiro256::seed_from(2);
+        let app = build_fig1_application(&cfg, &mut rng);
+        for tt in &app.task_types {
+            assert!(
+                tt.dag.is_inverse_tree(),
+                "task type {} DAG must be an inverse tree",
+                tt.id.0
+            );
+            assert_eq!(tt.dag.len(), tt.services.len());
+        }
+    }
+
+    #[test]
+    fn task_types_use_both_classes() {
+        let cfg = ExperimentConfig::paper_default();
+        let mut rng = Xoshiro256::seed_from(3);
+        let app = build_fig1_application(&cfg, &mut rng);
+        for tt in &app.task_types {
+            let has_core = tt
+                .services
+                .iter()
+                .any(|&m| app.catalog.spec(m).class == MsClass::Core);
+            let has_light = tt
+                .services
+                .iter()
+                .any(|&m| app.catalog.spec(m).class == MsClass::Light);
+            assert!(has_core && has_light);
+        }
+    }
+
+    #[test]
+    fn sink_service_is_core() {
+        // The final fusion stage of a multimodal pipeline is a core model.
+        let cfg = ExperimentConfig::paper_default();
+        let mut rng = Xoshiro256::seed_from(4);
+        let app = build_fig1_application(&cfg, &mut rng);
+        for tt in &app.task_types {
+            let sink = tt.dag.sink().unwrap();
+            assert_eq!(app.catalog.spec(tt.services[sink]).class, MsClass::Core);
+        }
+    }
+
+    #[test]
+    fn sampled_parameters_respect_ranges() {
+        let cfg = ExperimentConfig::paper_default();
+        let mut rng = Xoshiro256::seed_from(5);
+        let app = build_fig1_application(&cfg, &mut rng);
+        for spec in app.catalog.iter() {
+            let class_cfg = match spec.class {
+                MsClass::Core => &cfg.core_ms,
+                MsClass::Light => &cfg.light_ms,
+            };
+            for k in 0..crate::config::NUM_RESOURCES {
+                assert!(
+                    spec.resources[k] >= class_cfg.resources[k].lo
+                        && spec.resources[k] <= class_cfg.resources[k].hi
+                );
+            }
+            assert!(spec.workload_mb >= class_cfg.workload_mb.lo);
+            assert!(spec.output_mb <= class_cfg.output_mb.hi);
+            match (&spec.rate, spec.class) {
+                (RateModel::Deterministic(_), MsClass::Core) => {}
+                (RateModel::Gamma { .. }, MsClass::Light) => {}
+                _ => panic!("rate model/class mismatch"),
+            }
+        }
+    }
+
+    #[test]
+    fn mean_rate_is_consistent() {
+        let det = RateModel::Deterministic(12.0);
+        assert_eq!(det.mean(), 12.0);
+        let g = RateModel::Gamma {
+            shape: 1.5,
+            scale: 10.0,
+        };
+        assert!((g.mean() - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deterministic_rate_sampling_is_constant() {
+        let mut rng = Xoshiro256::seed_from(6);
+        let det = RateModel::Deterministic(9.0);
+        for _ in 0..10 {
+            assert_eq!(det.sample(&mut rng), 9.0);
+        }
+    }
+
+    #[test]
+    fn catalog_lookup_roundtrip() {
+        let cfg = ExperimentConfig::paper_default();
+        let mut rng = Xoshiro256::seed_from(7);
+        let app = build_fig1_application(&cfg, &mut rng);
+        for (i, spec) in app.catalog.iter().enumerate() {
+            assert_eq!(spec.id.0, i);
+            assert_eq!(app.catalog.spec(MsId(i)).id, MsId(i));
+        }
+        assert_eq!(
+            app.catalog.core_ids().len() + app.catalog.light_ids().len(),
+            app.catalog.len()
+        );
+    }
+
+    #[test]
+    fn types_requiring_service_inverse_index() {
+        let cfg = ExperimentConfig::paper_default();
+        let mut rng = Xoshiro256::seed_from(8);
+        let app = build_fig1_application(&cfg, &mut rng);
+        for m in 0..app.catalog.len() {
+            for &tt in app.types_requiring(MsId(m)) {
+                assert!(app.task_types[tt.0].services.contains(&MsId(m)));
+            }
+        }
+    }
+}

@@ -1,0 +1,56 @@
+//! Wireless uplink channel (eq. 1): `τ_ul = A_n / (b_u · log(1 + γ_u))`
+//! with the SNR `γ_u` fading according to a Nakagami-m envelope (Table I).
+
+use crate::config::WorkloadConfig;
+use crate::rng::{Distribution, Nakagami, Rng};
+
+/// Per-user channel parameters, sampled once per run.
+#[derive(Clone, Copy, Debug)]
+pub struct WirelessChannel {
+    /// Allocated uplink bandwidth `b_u` (MB/ms at unit spectral efficiency).
+    pub bandwidth_mb_ms: f64,
+    /// Nakagami fading of the channel power.
+    pub fading: Nakagami,
+    /// Mean SNR (linear) scaling the fading power.
+    pub mean_snr: f64,
+}
+
+impl WirelessChannel {
+    /// Sample a user's channel from the workload config ranges.
+    pub fn sample<R: Rng + ?Sized>(cfg: &WorkloadConfig, rng: &mut R) -> Self {
+        WirelessChannel {
+            bandwidth_mb_ms: cfg.uplink_bandwidth.sample(rng),
+            fading: Nakagami::new(cfg.nakagami_m.sample(rng), cfg.nakagami_omega.sample(rng)),
+            mean_snr: cfg.mean_snr.sample(rng),
+        }
+    }
+
+    /// Instantaneous SNR `γ_u`: mean SNR scaled by Nakagami channel power.
+    pub fn sample_snr<R: Rng + ?Sized>(&self, rng: &mut R) -> f64 {
+        self.mean_snr * self.fading.sample(rng)
+    }
+
+    /// Achievable uplink rate for a given SNR: `b_u · log2(1 + γ)` (MB/ms).
+    pub fn rate_for_snr(&self, snr: f64) -> f64 {
+        self.bandwidth_mb_ms * (1.0 + snr).log2()
+    }
+
+    /// Draw an instantaneous uplink rate.
+    pub fn sample_uplink_rate<R: Rng + ?Sized>(&self, rng: &mut R) -> f64 {
+        self.rate_for_snr(self.sample_snr(rng))
+    }
+
+    /// Uplink delay (ms) for payload `A_n` (MB) at SNR `γ` — eq. (1).
+    pub fn uplink_delay(&self, input_mb: f64, snr: f64) -> f64 {
+        input_mb / self.rate_for_snr(snr)
+    }
+
+    /// Monte-Carlo mean uplink rate (for the mean-value latency profiles
+    /// of §III-A).
+    pub fn mean_uplink_rate<R: Rng + ?Sized>(&self, samples: usize, rng: &mut R) -> f64 {
+        let sum: f64 = (0..samples)
+            .map(|_| self.sample_uplink_rate(rng))
+            .sum();
+        sum / samples as f64
+    }
+}

@@ -1,0 +1,148 @@
+//! Heterogeneous edge network model (§II): edge devices (EDs) and edge
+//! servers (ESs) with per-resource capacities `R_v`, interconnected by
+//! links with bandwidth `w` and distance `W`, plus the wireless uplink
+//! channel (Nakagami fading) between users and their associated ED.
+
+mod channel;
+mod topology;
+
+pub use channel::WirelessChannel;
+pub use topology::{Link, NodeClass, NodeId, Topology};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::rng::Xoshiro256;
+
+    fn topo(seed: u64) -> Topology {
+        let cfg = ExperimentConfig::paper_default();
+        let mut rng = Xoshiro256::seed_from(seed);
+        Topology::generate(&cfg, &mut rng)
+    }
+
+    #[test]
+    fn generated_topology_shape() {
+        let t = topo(1);
+        assert_eq!(t.num_nodes(), 16);
+        assert_eq!(t.eds().count(), 12);
+        assert_eq!(t.ess().count(), 4);
+    }
+
+    #[test]
+    fn topology_is_connected() {
+        for seed in 1..6 {
+            let t = topo(seed);
+            let dist = t.shortest_paths(0, 1.0);
+            assert!(
+                dist.dist.iter().all(|d| d.is_finite()),
+                "seed {seed}: disconnected topology"
+            );
+        }
+    }
+
+    #[test]
+    fn es_capacities_dominate_ed() {
+        let t = topo(2);
+        let max_ed_cpu = t
+            .eds()
+            .map(|n| t.node(n).capacity[0])
+            .fold(0.0f64, f64::max);
+        let min_es_cpu = t
+            .ess()
+            .map(|n| t.node(n).capacity[0])
+            .fold(f64::INFINITY, f64::min);
+        assert!(min_es_cpu > max_ed_cpu);
+    }
+
+    #[test]
+    fn shortest_path_triangle_inequality_on_metric() {
+        let t = topo(3);
+        let mb = 1.0;
+        for src in 0..t.num_nodes() {
+            let d = t.shortest_paths(src, mb);
+            for l in t.links() {
+                let w = t.link_latency(l, mb);
+                assert!(
+                    d.dist[l.b] <= d.dist[l.a] + w + 1e-9,
+                    "relaxed edge violates optimality"
+                );
+                assert!(d.dist[l.a] <= d.dist[l.b] + w + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn path_reconstruction_reaches_source() {
+        let t = topo(4);
+        let d = t.shortest_paths(2, 1.0);
+        for dst in 0..t.num_nodes() {
+            let p = d.path_to(dst);
+            assert_eq!(*p.first().unwrap(), 2);
+            assert_eq!(*p.last().unwrap(), dst);
+            // consecutive hops are adjacent
+            for w in p.windows(2) {
+                assert!(
+                    t.are_adjacent(w[0], w[1]) || w[0] == w[1],
+                    "hop {w:?} not adjacent"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn transfer_latency_scales_with_payload() {
+        let t = topo(5);
+        let l = &t.links()[0];
+        let lat1 = t.link_latency(l, 1.0);
+        let lat2 = t.link_latency(l, 2.0);
+        assert!(lat2 > lat1);
+        // propagation component is payload-independent
+        let prop = l.distance_km / t.prop_speed_km_per_ms;
+        assert!((lat2 - lat1 - 1.0 / l.bandwidth_mb_ms).abs() < 1e-9);
+        assert!(lat1 > prop);
+    }
+
+    #[test]
+    fn wireless_uplink_rate_positive_and_fading_varies() {
+        let cfg = ExperimentConfig::paper_default();
+        let mut rng = Xoshiro256::seed_from(6);
+        let ch = WirelessChannel::sample(&cfg.workload, &mut rng);
+        let mut rates = Vec::new();
+        for _ in 0..100 {
+            let r = ch.sample_uplink_rate(&mut rng);
+            assert!(r > 0.0);
+            rates.push(r);
+        }
+        let first = rates[0];
+        assert!(rates.iter().any(|&r| (r - first).abs() > 1e-9));
+    }
+
+    #[test]
+    fn uplink_delay_matches_eq1() {
+        let cfg = ExperimentConfig::paper_default();
+        let mut rng = Xoshiro256::seed_from(7);
+        let ch = WirelessChannel::sample(&cfg.workload, &mut rng);
+        let snr: f64 = 10.0;
+        let rate = ch.rate_for_snr(snr);
+        assert!((rate - ch.bandwidth_mb_ms * (1.0 + snr).log2()).abs() < 1e-12);
+        let a_n = 2.0;
+        assert!((ch.uplink_delay(a_n, snr) - a_n / rate).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_rate_estimate_converges() {
+        let cfg = ExperimentConfig::paper_default();
+        let mut rng = Xoshiro256::seed_from(8);
+        let ch = WirelessChannel::sample(&cfg.workload, &mut rng);
+        let est = ch.mean_uplink_rate(4000, &mut Xoshiro256::seed_from(9));
+        let emp: f64 = (0..20_000)
+            .map(|_| ch.sample_uplink_rate(&mut rng))
+            .sum::<f64>()
+            / 20_000.0;
+        assert!(
+            (est - emp).abs() / emp < 0.05,
+            "estimate {est} vs empirical {emp}"
+        );
+    }
+}

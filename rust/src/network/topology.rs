@@ -1,0 +1,243 @@
+//! Edge-network topology: nodes, links, and latency-metric shortest paths.
+
+use crate::config::{ExperimentConfig, NUM_RESOURCES};
+use crate::rng::Rng;
+
+/// Dense node index.
+pub type NodeId = usize;
+
+/// Node class (§II): resource-poor user-facing EDs vs resource-rich ESs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeClass {
+    EdgeDevice,
+    EdgeServer,
+}
+
+/// A network node with capacity vector `R_v`.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: NodeId,
+    pub class: NodeClass,
+    pub capacity: [f64; NUM_RESOURCES],
+}
+
+/// An undirected communication link with bandwidth `w_(i1,i2)` (MB/ms) and
+/// physical distance `W_(i1,i2)` (km).
+#[derive(Clone, Debug)]
+pub struct Link {
+    pub a: NodeId,
+    pub b: NodeId,
+    pub bandwidth_mb_ms: f64,
+    pub distance_km: f64,
+}
+
+/// Shortest-path tree from one source under the latency metric.
+#[derive(Clone, Debug)]
+pub struct ShortestPaths {
+    pub src: NodeId,
+    pub dist: Vec<f64>,
+    prev: Vec<Option<NodeId>>,
+}
+
+impl ShortestPaths {
+    /// Node sequence `src -> ... -> dst` (both inclusive).
+    pub fn path_to(&self, dst: NodeId) -> Vec<NodeId> {
+        let mut path = vec![dst];
+        let mut cur = dst;
+        while let Some(p) = self.prev[cur] {
+            path.push(p);
+            cur = p;
+        }
+        path.reverse();
+        debug_assert_eq!(path[0], self.src);
+        path
+    }
+}
+
+/// The edge network.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    nodes: Vec<Node>,
+    links: Vec<Link>,
+    /// adjacency: node -> [(neighbor, link index)]
+    adj: Vec<Vec<(NodeId, usize)>>,
+    pub prop_speed_km_per_ms: f64,
+}
+
+impl Topology {
+    /// Build from explicit parts (tests / custom scenarios).
+    pub fn from_parts(nodes: Vec<Node>, links: Vec<Link>, prop_speed_km_per_ms: f64) -> Self {
+        let mut adj = vec![Vec::new(); nodes.len()];
+        for (i, l) in links.iter().enumerate() {
+            adj[l.a].push((l.b, i));
+            adj[l.b].push((l.a, i));
+        }
+        Topology {
+            nodes,
+            links,
+            adj,
+            prop_speed_km_per_ms,
+        }
+    }
+
+    /// Generate the evaluation topology: ESs in a full mesh (backbone),
+    /// each ED attached to a primary ES plus `ed_extra_links` extra ESs
+    /// (fault-tolerant multihoming), per Fig. 2.
+    pub fn generate<R: Rng + ?Sized>(cfg: &ExperimentConfig, rng: &mut R) -> Self {
+        let n_ed = cfg.network.num_eds;
+        let n_es = cfg.network.num_ess;
+        let mut nodes = Vec::with_capacity(n_ed + n_es);
+        for i in 0..n_ed {
+            let mut capacity = [0.0; NUM_RESOURCES];
+            for (k, r) in cfg.ed.resources.iter().enumerate() {
+                capacity[k] = r.sample(rng);
+            }
+            nodes.push(Node {
+                id: i,
+                class: NodeClass::EdgeDevice,
+                capacity,
+            });
+        }
+        for j in 0..n_es {
+            let mut capacity = [0.0; NUM_RESOURCES];
+            for (k, r) in cfg.es.resources.iter().enumerate() {
+                capacity[k] = r.sample(rng);
+            }
+            nodes.push(Node {
+                id: n_ed + j,
+                class: NodeClass::EdgeServer,
+                capacity,
+            });
+        }
+
+        let mut links = Vec::new();
+        let sample_link = |a: NodeId, b: NodeId, rng: &mut R| Link {
+            a,
+            b,
+            bandwidth_mb_ms: cfg.network.link_bandwidth.sample(rng),
+            distance_km: cfg.network.link_distance_km.sample(rng),
+        };
+        // ES full mesh.
+        for j1 in 0..n_es {
+            for j2 in (j1 + 1)..n_es {
+                links.push(sample_link(n_ed + j1, n_ed + j2, rng));
+            }
+        }
+        // Each ED: primary ES (round-robin for coverage) + extra random ESs.
+        for i in 0..n_ed {
+            let primary = n_ed + (i % n_es);
+            links.push(sample_link(i, primary, rng));
+            let mut extras: Vec<usize> = (0..n_es)
+                .map(|j| n_ed + j)
+                .filter(|&e| e != primary)
+                .collect();
+            rng.shuffle(&mut extras);
+            for &e in extras.iter().take(cfg.network.ed_extra_links) {
+                links.push(sample_link(i, e, rng));
+            }
+        }
+        Self::from_parts(nodes, links, cfg.network.prop_speed_km_per_ms)
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    pub fn links(&self) -> &[Link] {
+        &self.links
+    }
+
+    /// Edge devices (user-facing ingress nodes).
+    pub fn eds(&self) -> impl Iterator<Item = NodeId> + '_ {
+        self.nodes
+            .iter()
+            .filter(|n| n.class == NodeClass::EdgeDevice)
+            .map(|n| n.id)
+    }
+
+    /// Edge servers.
+    pub fn ess(&self) -> impl Iterator<Item = NodeId> + '_ {
+        self.nodes
+            .iter()
+            .filter(|n| n.class == NodeClass::EdgeServer)
+            .map(|n| n.id)
+    }
+
+    pub fn are_adjacent(&self, a: NodeId, b: NodeId) -> bool {
+        self.adj[a].iter().any(|&(n, _)| n == b)
+    }
+
+    /// One-hop latency for a payload of `mb` megabytes over `link`:
+    /// transmission `mb/w` plus propagation `W/l` — eq. (2).
+    pub fn link_latency(&self, link: &Link, mb: f64) -> f64 {
+        mb / link.bandwidth_mb_ms + link.distance_km / self.prop_speed_km_per_ms
+    }
+
+    /// Latency of moving `mb` from `a` to an adjacent `b`; `None` when not
+    /// adjacent. Zero when `a == b` (co-located services).
+    pub fn hop_latency(&self, a: NodeId, b: NodeId, mb: f64) -> Option<f64> {
+        if a == b {
+            return Some(0.0);
+        }
+        self.adj[a]
+            .iter()
+            .filter(|&&(n, _)| n == b)
+            .map(|&(_, li)| self.link_latency(&self.links[li], mb))
+            .fold(None, |acc: Option<f64>, lat| {
+                Some(acc.map_or(lat, |a| a.min(lat)))
+            })
+    }
+
+    /// Dijkstra under the latency metric for payload `mb`.
+    pub fn shortest_paths(&self, src: NodeId, mb: f64) -> ShortestPaths {
+        let n = self.num_nodes();
+        let mut dist = vec![f64::INFINITY; n];
+        let mut prev = vec![None; n];
+        let mut visited = vec![false; n];
+        dist[src] = 0.0;
+        // O(n^2) Dijkstra: n <= a few hundred, dense-ish graphs.
+        for _ in 0..n {
+            let mut u = usize::MAX;
+            let mut best = f64::INFINITY;
+            for v in 0..n {
+                if !visited[v] && dist[v] < best {
+                    best = dist[v];
+                    u = v;
+                }
+            }
+            if u == usize::MAX {
+                break;
+            }
+            visited[u] = true;
+            for &(v, li) in &self.adj[u] {
+                let w = self.link_latency(&self.links[li], mb);
+                if dist[u] + w < dist[v] {
+                    dist[v] = dist[u] + w;
+                    prev[v] = Some(u);
+                }
+            }
+        }
+        ShortestPaths { src, dist, prev }
+    }
+
+    /// Multi-hop transfer latency along the metric-shortest route.
+    pub fn route_latency(&self, a: NodeId, b: NodeId, mb: f64) -> f64 {
+        if a == b {
+            return 0.0;
+        }
+        self.shortest_paths(a, mb).dist[b]
+    }
+
+    /// Total capacity across nodes for resource `k` (used by validators).
+    pub fn total_capacity(&self, k: usize) -> f64 {
+        self.nodes.iter().map(|n| n.capacity[k]).sum()
+    }
+}

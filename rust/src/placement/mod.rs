@@ -1,0 +1,191 @@
+//! Static core-microservice placement (§III-A).
+//!
+//! A forward-looking, fault-tolerant placement computed once per horizon:
+//! a mean-value latency analysis produces the apportioned load `z̃_{v,m}`
+//! (eq. 15) and QoS score `Q_{v,m}` (eq. 16); a sparsity-constrained
+//! integer program (14) + C4–C6 then trades deployment cost against the
+//! score while enforcing at least κ distinct deployments.
+
+mod qos_score;
+mod static_ilp;
+
+pub use qos_score::{build_rows, QosRowData, QosScores, ScoreParams};
+pub use static_ilp::{solve_static_placement, CorePlacement, PlacementParams};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::microservice::build_fig1_application;
+    use crate::network::Topology;
+    use crate::rng::Xoshiro256;
+    use crate::routing::DistanceMatrix;
+    use crate::workload::WorkloadGenerator;
+
+    fn setup(
+        seed: u64,
+    ) -> (
+        ExperimentConfig,
+        crate::microservice::Application,
+        Topology,
+        WorkloadGenerator,
+        DistanceMatrix,
+    ) {
+        let cfg = ExperimentConfig::paper_default();
+        let mut rng = Xoshiro256::seed_from(seed);
+        let app = build_fig1_application(&cfg, &mut rng);
+        let topo = Topology::generate(&cfg, &mut rng);
+        let gen = WorkloadGenerator::new(&cfg, &app, &topo, &mut rng);
+        let dm = DistanceMatrix::build(&topo, 1.0);
+        (cfg, app, topo, gen, dm)
+    }
+
+    #[test]
+    fn load_apportionment_conserves_mass() {
+        let (cfg, app, topo, gen, dm) = setup(1);
+        let scores = QosScores::compute(
+            &app,
+            &topo,
+            &dm,
+            gen.users(),
+            &ScoreParams::from_config(&cfg.controller),
+        );
+        // eq. (15): summing z̃ over v recovers the total mean arrival rate
+        // of task types requiring m (softmax weights sum to 1 per (u,n)).
+        for (ci, &m) in app.catalog.core_ids().iter().enumerate() {
+            let total: f64 = (0..topo.num_nodes()).map(|v| scores.z_tilde[v][ci]).sum();
+            let mut expect = 0.0;
+            for u in gen.users() {
+                for tt in app.types_requiring(m) {
+                    expect += gen.mean_rate(u.id, *tt);
+                }
+            }
+            assert!(
+                (total - expect).abs() < 1e-6,
+                "core {ci}: apportioned {total} vs expected {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn closer_nodes_get_more_load() {
+        let (cfg, app, topo, gen, dm) = setup(2);
+        let mut params = ScoreParams::from_config(&cfg.controller);
+        params.delta = 1.0; // strong decay: distance matters a lot
+        let scores = QosScores::compute(&app, &topo, &dm, gen.users(), &params);
+        // The ED hosting users should not receive less load than the most
+        // remote node for at least a majority of core MSs.
+        let mut wins = 0;
+        let mut total = 0;
+        for ci in 0..app.catalog.num_core() {
+            let ed_load = scores.z_tilde[0][ci];
+            let far_node = topo.num_nodes() - 1;
+            let far_load = scores.z_tilde[far_node][ci];
+            total += 1;
+            if ed_load >= far_load * 0.5 {
+                wins += 1;
+            }
+        }
+        assert!(wins * 2 >= total, "{wins}/{total}");
+    }
+
+    #[test]
+    fn qos_scores_nonnegative_and_bounded() {
+        let (cfg, app, topo, gen, dm) = setup(3);
+        let params = ScoreParams::from_config(&cfg.controller);
+        let scores = QosScores::compute(&app, &topo, &dm, gen.users(), &params);
+        for v in 0..topo.num_nodes() {
+            for ci in 0..app.catalog.num_core() {
+                assert!(scores.q[v][ci] >= 0.0);
+                assert!(scores.q[v][ci].is_finite());
+            }
+        }
+    }
+
+    #[test]
+    fn placement_meets_demand_and_capacity() {
+        let (cfg, app, topo, gen, dm) = setup(4);
+        let sp = ScoreParams::from_config(&cfg.controller);
+        let scores = QosScores::compute(&app, &topo, &dm, gen.users(), &sp);
+        let params = PlacementParams::from_config(&cfg, cfg.sim.slots);
+        let placement = solve_static_placement(&app, &topo, &scores, &params);
+        // demand: total instances per m cover the (capacity-capped) target
+        for ci in 0..app.catalog.num_core() {
+            let total: u32 = placement.instances.iter().map(|row| row[ci]).sum();
+            let demand = placement.demand_target[ci];
+            assert!(
+                total as f64 >= demand.floor(),
+                "core {ci}: {total} instances for demand {demand}"
+            );
+        }
+        // capacity: per node, core load within the reserved fraction
+        for (v, row) in placement.instances.iter().enumerate() {
+            for k in 0..crate::config::NUM_RESOURCES {
+                let used: f64 = row
+                    .iter()
+                    .enumerate()
+                    .map(|(ci, &x)| {
+                        app.catalog.spec(app.catalog.core_ids()[ci]).resources[k] * x as f64
+                    })
+                    .sum();
+                assert!(
+                    used <= params.core_capacity_fraction * topo.node(v).capacity[k] + 1e-6,
+                    "node {v} resource {k} over capacity"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn diversity_constraint_respected() {
+        let (cfg, app, topo, gen, dm) = setup(5);
+        let sp = ScoreParams::from_config(&cfg.controller);
+        let scores = QosScores::compute(&app, &topo, &dm, gen.users(), &sp);
+        let mut params = PlacementParams::from_config(&cfg, cfg.sim.slots);
+        params.kappa = 10;
+        let placement = solve_static_placement(&app, &topo, &scores, &params);
+        let distinct = placement
+            .instances
+            .iter()
+            .flat_map(|row| row.iter())
+            .filter(|&&x| x > 0)
+            .count();
+        assert!(
+            distinct >= 10,
+            "kappa=10 requires >= 10 distinct deployments, got {distinct}"
+        );
+    }
+
+    #[test]
+    fn higher_kappa_never_cheapens_objective() {
+        let (cfg, app, topo, gen, dm) = setup(6);
+        let sp = ScoreParams::from_config(&cfg.controller);
+        let scores = QosScores::compute(&app, &topo, &dm, gen.users(), &sp);
+        let mut p1 = PlacementParams::from_config(&cfg, cfg.sim.slots);
+        p1.kappa = 2;
+        let mut p2 = p1.clone();
+        p2.kappa = 12;
+        let s1 = solve_static_placement(&app, &topo, &scores, &p1);
+        let s2 = solve_static_placement(&app, &topo, &scores, &p2);
+        // More diversity constraints can only worsen (raise) the optimum.
+        assert!(s2.objective >= s1.objective - 1e-6);
+    }
+
+    #[test]
+    fn fallback_greedy_produces_feasible_placement() {
+        let (cfg, app, topo, gen, dm) = setup(7);
+        let sp = ScoreParams::from_config(&cfg.controller);
+        let scores = QosScores::compute(&app, &topo, &dm, gen.users(), &sp);
+        let mut params = PlacementParams::from_config(&cfg, cfg.sim.slots);
+        params.force_fallback = true;
+        let placement = solve_static_placement(&app, &topo, &scores, &params);
+        assert!(placement.used_fallback);
+        for ci in 0..app.catalog.num_core() {
+            let total: u32 = placement.instances.iter().map(|row| row[ci]).sum();
+            // Best-effort: demand covered unless the joint capacity ran
+            // out first, but never zero instances.
+            assert!(total >= 1, "every core MS must have at least one instance");
+            let _ = placement.demand_target[ci];
+        }
+    }
+}

@@ -1,0 +1,234 @@
+//! Mean-value analysis: apportioned load `z̃` (eq. 15) and QoS score `Q`
+//! (eq. 16) for every (node, core MS) pair.
+//!
+//! For a typical task `j = (u, n, t)` requiring core MS `m` at node `v`,
+//! the estimated end-to-end latency splits into
+//! * `d_pr(v,m)` — preceding latency: mean uplink, network path from the
+//!   user's ED to `v`, and the critical chain of mean processing delays of
+//!   `m`'s DAG ancestors;
+//! * `d_cu(v,m) = a_m / f_m` — processing at `v`;
+//! * `d_su(v,m)` — mean processing of all DAG descendants.
+//!
+//! Load is apportioned by an exponential decay softmax over nodes (15);
+//! the urgency metric is the deadline slack over future work, floored at
+//! `C1` and capped for the sink services whose `d_su → 0` (16).
+//!
+//! This computation is mirrored by the Layer-2 JAX graph
+//! (`python/compile/model.py::qos_scores`) compiled to
+//! `artifacts/qos.hlo.txt`; `runtime::QosAccel` runs it via PJRT and the
+//! integration tests check agreement.
+
+use crate::config::ControllerConfig;
+use crate::latency::MeanProfile;
+use crate::microservice::Application;
+use crate::network::Topology;
+use crate::routing::DistanceMatrix;
+use crate::workload::User;
+
+/// Numerical floor C1 of the urgency ratio (paper's constant).
+pub const URGENCY_FLOOR: f64 = 0.05;
+/// Guard for sink services: `d_su` is floored at this value (ms).
+pub const SUCC_FLOOR_MS: f64 = 0.05;
+
+/// Parameters of the score computation.
+#[derive(Clone, Debug)]
+pub struct ScoreParams {
+    /// Exponential decay δ of eq. (15).
+    pub delta: f64,
+    /// Upper cap on the urgency ratio (numerical guard; the paper caps
+    /// only from below via C1).
+    pub urgency_cap: f64,
+    /// Monte-Carlo samples for mean uplink rate estimation.
+    pub uplink_samples: usize,
+}
+
+impl ScoreParams {
+    pub fn from_config(c: &ControllerConfig) -> Self {
+        ScoreParams {
+            delta: c.delta,
+            urgency_cap: c.urgency_cap,
+            uplink_samples: 512,
+        }
+    }
+}
+
+/// One (user, task-type, core-MS) row of the mean-value analysis — the
+/// shared input of the native computation and the PJRT-accelerated graph
+/// (`artifacts/qos.hlo.txt`).
+#[derive(Clone, Debug)]
+pub struct QosRowData {
+    /// Preceding latency `d_pr` at every node.
+    pub dpr: Vec<f64>,
+    /// Mean arrival rate `E[z_{u,n}]`.
+    pub rate: f64,
+    pub deadline_ms: f64,
+    /// Current-stage mean processing `d_cu`.
+    pub dcu_ms: f64,
+    /// Successor mean processing `d_su` (floored).
+    pub dsu_ms: f64,
+    /// Dense core index of the MS this row concerns.
+    pub core_idx: usize,
+}
+
+/// Build the per-(user, type, core) rows of the mean-value analysis.
+pub fn build_rows(
+    app: &Application,
+    topo: &Topology,
+    dm: &DistanceMatrix,
+    users: &[User],
+    params: &ScoreParams,
+) -> Vec<QosRowData> {
+    let nv = topo.num_nodes();
+    let core_ids = app.catalog.core_ids();
+
+    // Mean-value profiles per task type.
+    let profiles: Vec<MeanProfile> = app
+        .task_types
+        .iter()
+        .map(|tt| MeanProfile::of(app, tt))
+        .collect();
+
+    // Mean uplink delay per user (deterministic estimate).
+    let mut up_rng = crate::rng::Xoshiro256::seed_from(0x5EED_11);
+    let uplink_ms: Vec<f64> = users
+        .iter()
+        .map(|u| {
+            let mean_rate = u
+                .channel
+                .mean_uplink_rate(params.uplink_samples, &mut up_rng);
+            let mean_input: f64 = app
+                .task_types
+                .iter()
+                .map(|tt| tt.input_mb)
+                .sum::<f64>()
+                / app.task_types.len().max(1) as f64;
+            mean_input / mean_rate
+        })
+        .collect();
+
+    // Reference payload for inter-node movement: mean MS output size.
+    let mean_out: f64 =
+        app.catalog.iter().map(|s| s.output_mb).sum::<f64>() / app.catalog.len().max(1) as f64;
+
+    let mut rows = Vec::new();
+    for user in users {
+        for tt in &app.task_types {
+            let profile = &profiles[tt.id.0];
+            let rate = user.rates[tt.id.0];
+            for (ci, &m) in core_ids.iter().enumerate() {
+                let locals = tt.local_nodes_of(m);
+                if locals.is_empty() {
+                    continue;
+                }
+                // If m appears multiple times, use the earliest stage.
+                let local = locals[0];
+                let dpr: Vec<f64> = (0..nv)
+                    .map(|v| {
+                        uplink_ms[user.id]
+                            + dm.latency(user.ed, v, mean_out)
+                            + profile.pred_ms[local]
+                    })
+                    .collect();
+                rows.push(QosRowData {
+                    dpr,
+                    rate,
+                    deadline_ms: tt.deadline_ms,
+                    dcu_ms: profile.proc_ms[local],
+                    dsu_ms: profile.succ_ms[local].max(SUCC_FLOOR_MS),
+                    core_idx: ci,
+                });
+            }
+        }
+    }
+    rows
+}
+
+/// The computed `z̃` and `Q` matrices, `[node][dense core index]`.
+#[derive(Clone, Debug)]
+pub struct QosScores {
+    pub z_tilde: Vec<Vec<f64>>,
+    pub q: Vec<Vec<f64>>,
+    /// Mean urgency component (diagnostics / the PJRT cross-check).
+    pub d_tilde: Vec<Vec<f64>>,
+}
+
+impl QosScores {
+    /// Compute scores for all (v, core m) pairs.
+    pub fn compute(
+        app: &Application,
+        topo: &Topology,
+        dm: &DistanceMatrix,
+        users: &[User],
+        params: &ScoreParams,
+    ) -> Self {
+        let rows = build_rows(app, topo, dm, users, params);
+        Self::compute_from_rows(
+            &rows,
+            topo.num_nodes(),
+            app.catalog.num_core(),
+            params,
+        )
+    }
+
+    /// Native evaluation of eqs. (15)–(16) over prebuilt rows — the exact
+    /// math the `qos.hlo.txt` artifact implements (pytest + the Rust
+    /// integration tests check both paths agree).
+    pub fn compute_from_rows(
+        rows: &[QosRowData],
+        nv: usize,
+        nc: usize,
+        params: &ScoreParams,
+    ) -> Self {
+        let mut z_tilde = vec![vec![0.0f64; nc]; nv];
+        let mut d_tilde = vec![vec![0.0f64; nc]; nv];
+        for row in rows {
+            debug_assert_eq!(row.dpr.len(), nv);
+            let min_d = row.dpr.iter().cloned().fold(f64::INFINITY, f64::min);
+            let mut wsum = 0.0;
+            let weights: Vec<f64> = row
+                .dpr
+                .iter()
+                .map(|&d| {
+                    let w = (-params.delta * (d - min_d)).exp();
+                    wsum += w;
+                    w
+                })
+                .collect();
+            for v in 0..nv {
+                z_tilde[v][row.core_idx] += weights[v] / wsum * row.rate;
+                // Urgency — eq. (16): slack over future work.
+                let slack = row.deadline_ms - row.dpr[v] - row.dcu_ms;
+                let ratio =
+                    (slack / row.dsu_ms).clamp(URGENCY_FLOOR, params.urgency_cap);
+                d_tilde[v][row.core_idx] += ratio;
+            }
+        }
+        let q = z_tilde
+            .iter()
+            .zip(&d_tilde)
+            .map(|(zr, dr)| zr.iter().zip(dr).map(|(z, d)| z * d).collect())
+            .collect();
+        QosScores {
+            z_tilde,
+            q,
+            d_tilde,
+        }
+    }
+
+    /// Demand estimate for the capacity constraint C2: the Erlang load of
+    /// core MS `ci` — mean arrivals per slot × service time in slots —
+    /// i.e. the minimum number of always-busy instances sustaining the
+    /// aggregate load.
+    pub fn erlang_demand(&self, ci: usize, mean_proc_ms: f64, slot_ms: f64) -> f64 {
+        let total_rate: f64 = self.z_tilde.iter().map(|row| row[ci]).sum();
+        total_rate * mean_proc_ms / slot_ms
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.z_tilde.len()
+    }
+
+    pub fn num_core(&self) -> usize {
+        self.z_tilde.first().map_or(0, Vec::len)
+    }
+}

@@ -1,0 +1,468 @@
+//! The stochastic models of Table I.
+//!
+//! * `Poisson` — task arrivals `z_{u,n,t}` (mean in [0.15, 1.5] per ms).
+//! * `Gamma` — light-MS processing rates `f_m ~ Gamma(k∈[1,2], θ∈[1,20])`.
+//! * `Nakagami` — wireless fading; the uplink SNR `γ_u` follows the power
+//!   of a Nakagami-m envelope, i.e. `Gamma(m, Ω/m)`.
+//! * `Normal`, `Exponential`, `LogNormal`, `Uniform` — support/utility.
+
+use super::{Distribution, Rng};
+
+/// Uniform on `[lo, hi)`.
+#[derive(Clone, Copy, Debug)]
+pub struct Uniform {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Uniform {
+    pub fn new(lo: f64, hi: f64) -> Self {
+        assert!(hi >= lo, "Uniform requires hi >= lo, got [{lo}, {hi})");
+        Uniform { lo, hi }
+    }
+}
+
+impl Distribution for Uniform {
+    #[inline]
+    fn sample<R: Rng + ?Sized>(&self, rng: &mut R) -> f64 {
+        rng.range_f64(self.lo, self.hi)
+    }
+    fn mean(&self) -> f64 {
+        0.5 * (self.lo + self.hi)
+    }
+}
+
+/// Exponential with rate `lambda` (mean `1/lambda`).
+#[derive(Clone, Copy, Debug)]
+pub struct Exponential {
+    pub lambda: f64,
+}
+
+impl Exponential {
+    pub fn new(lambda: f64) -> Self {
+        assert!(lambda > 0.0, "Exponential rate must be positive");
+        Exponential { lambda }
+    }
+}
+
+impl Distribution for Exponential {
+    #[inline]
+    fn sample<R: Rng + ?Sized>(&self, rng: &mut R) -> f64 {
+        -rng.next_f64_open().ln() / self.lambda
+    }
+    fn mean(&self) -> f64 {
+        1.0 / self.lambda
+    }
+}
+
+/// Normal(mu, sigma) via Marsaglia polar method.
+#[derive(Clone, Copy, Debug)]
+pub struct Normal {
+    pub mu: f64,
+    pub sigma: f64,
+}
+
+impl Normal {
+    pub fn new(mu: f64, sigma: f64) -> Self {
+        assert!(sigma >= 0.0, "Normal sigma must be non-negative");
+        Normal { mu, sigma }
+    }
+
+    /// One standard-normal variate.
+    #[inline]
+    pub fn standard<R: Rng + ?Sized>(rng: &mut R) -> f64 {
+        loop {
+            let u = 2.0 * rng.next_f64() - 1.0;
+            let v = 2.0 * rng.next_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                return u * (-2.0 * s.ln() / s).sqrt();
+            }
+        }
+    }
+}
+
+impl Distribution for Normal {
+    #[inline]
+    fn sample<R: Rng + ?Sized>(&self, rng: &mut R) -> f64 {
+        self.mu + self.sigma * Normal::standard(rng)
+    }
+    fn mean(&self) -> f64 {
+        self.mu
+    }
+}
+
+/// LogNormal: exp(Normal(mu, sigma)).
+#[derive(Clone, Copy, Debug)]
+pub struct LogNormal {
+    pub mu: f64,
+    pub sigma: f64,
+}
+
+impl LogNormal {
+    pub fn new(mu: f64, sigma: f64) -> Self {
+        LogNormal { mu, sigma }
+    }
+}
+
+impl Distribution for LogNormal {
+    #[inline]
+    fn sample<R: Rng + ?Sized>(&self, rng: &mut R) -> f64 {
+        (self.mu + self.sigma * Normal::standard(rng)).exp()
+    }
+    fn mean(&self) -> f64 {
+        (self.mu + 0.5 * self.sigma * self.sigma).exp()
+    }
+}
+
+/// Gamma with shape `k` and scale `theta` (mean `k*theta`).
+///
+/// Marsaglia–Tsang squeeze method; for k < 1 uses the boost
+/// `Gamma(k) = Gamma(k+1) * U^{1/k}`.
+#[derive(Clone, Copy, Debug)]
+pub struct Gamma {
+    pub shape: f64,
+    pub scale: f64,
+}
+
+impl Gamma {
+    pub fn new(shape: f64, scale: f64) -> Self {
+        assert!(shape > 0.0 && scale > 0.0, "Gamma parameters must be positive");
+        Gamma { shape, scale }
+    }
+
+    fn sample_standard<R: Rng + ?Sized>(k: f64, rng: &mut R) -> f64 {
+        if k < 1.0 {
+            let x = Self::sample_standard(k + 1.0, rng);
+            let u = rng.next_f64_open();
+            return x * u.powf(1.0 / k);
+        }
+        let d = k - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = Normal::standard(rng);
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = rng.next_f64_open();
+            let x2 = x * x;
+            // Squeeze check then full acceptance check.
+            if u < 1.0 - 0.0331 * x2 * x2 {
+                return d * v3;
+            }
+            if u.ln() < 0.5 * x2 + d * (1.0 - v3 + v3.ln()) {
+                return d * v3;
+            }
+        }
+    }
+
+    /// Closed-form effective capacity of an iid Gamma service process
+    /// (rate units per slot of length `dt`):
+    /// `E^c(θ) = k·ln(1 + θ·s·dt) / (θ·dt)`.
+    ///
+    /// Used as the analytic oracle for the sampled estimator and the
+    /// Pallas kernel (DESIGN.md §5).
+    pub fn effective_capacity(&self, theta: f64, dt: f64) -> f64 {
+        assert!(theta > 0.0 && dt > 0.0);
+        self.shape * (1.0 + theta * self.scale * dt).ln() / (theta * dt)
+    }
+
+    pub fn variance(&self) -> f64 {
+        self.shape * self.scale * self.scale
+    }
+}
+
+impl Distribution for Gamma {
+    #[inline]
+    fn sample<R: Rng + ?Sized>(&self, rng: &mut R) -> f64 {
+        self.scale * Self::sample_standard(self.shape, rng)
+    }
+    fn mean(&self) -> f64 {
+        self.shape * self.scale
+    }
+}
+
+/// Poisson with mean `lambda` per slot.
+///
+/// Knuth multiplication for small lambda, PTRS transformed rejection
+/// (Hörmann 1993) for lambda >= 10.
+#[derive(Clone, Copy, Debug)]
+pub struct Poisson {
+    pub lambda: f64,
+}
+
+impl Poisson {
+    pub fn new(lambda: f64) -> Self {
+        assert!(lambda >= 0.0, "Poisson mean must be non-negative");
+        Poisson { lambda }
+    }
+
+    /// Draw one integer count.
+    pub fn sample_count<R: Rng + ?Sized>(&self, rng: &mut R) -> u64 {
+        if self.lambda == 0.0 {
+            return 0;
+        }
+        if self.lambda < 10.0 {
+            // Knuth: multiply uniforms until below e^-lambda.
+            let l = (-self.lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= rng.next_f64_open();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+                // Numerical guard: for lambda < 10 this loop terminates
+                // long before k reaches 1000.
+                if k > 1000 {
+                    return k;
+                }
+            }
+        }
+        self.sample_ptrs(rng)
+    }
+
+    /// PTRS transformed-rejection sampler for large lambda.
+    fn sample_ptrs<R: Rng + ?Sized>(&self, rng: &mut R) -> u64 {
+        let lam = self.lambda;
+        let slam = lam.sqrt();
+        let loglam = lam.ln();
+        let b = 0.931 + 2.53 * slam;
+        let a = -0.059 + 0.02483 * b;
+        let inv_alpha = 1.1239 + 1.1328 / (b - 3.4);
+        let v_r = 0.9277 - 3.6224 / (b - 2.0);
+        loop {
+            let u = rng.next_f64() - 0.5;
+            let v = rng.next_f64_open();
+            let us = 0.5 - u.abs();
+            let k = ((2.0 * a / us + b) * u + lam + 0.43).floor();
+            if us >= 0.07 && v <= v_r && k >= 0.0 {
+                return k as u64;
+            }
+            if k < 0.0 || (us < 0.013 && v > us) {
+                continue;
+            }
+            if v.ln() + inv_alpha.ln() - (a / (us * us) + b).ln()
+                <= k * loglam - lam - ln_factorial(k as u64)
+            {
+                if k >= 0.0 {
+                    return k as u64;
+                }
+            }
+        }
+    }
+}
+
+impl Distribution for Poisson {
+    #[inline]
+    fn sample<R: Rng + ?Sized>(&self, rng: &mut R) -> f64 {
+        self.sample_count(rng) as f64
+    }
+    fn mean(&self) -> f64 {
+        self.lambda
+    }
+}
+
+/// Nakagami-m fading. `sample()` returns the instantaneous channel *power*
+/// (envelope squared), i.e. `Gamma(m, omega/m)`, which scales the SNR in
+/// eq. (1). `sample_envelope()` returns the amplitude.
+#[derive(Clone, Copy, Debug)]
+pub struct Nakagami {
+    /// Shape (fading severity); m >= 0.5. Table I uses m in [1.5, 3].
+    pub m: f64,
+    /// Spread: average power Ω. Table I uses Ω in [0.5, 1].
+    pub omega: f64,
+}
+
+impl Nakagami {
+    pub fn new(m: f64, omega: f64) -> Self {
+        assert!(m >= 0.5, "Nakagami shape must be >= 0.5");
+        assert!(omega > 0.0, "Nakagami spread must be positive");
+        Nakagami { m, omega }
+    }
+
+    fn power_gamma(&self) -> Gamma {
+        Gamma::new(self.m, self.omega / self.m)
+    }
+
+    /// Envelope (amplitude) sample: sqrt of the power sample.
+    pub fn sample_envelope<R: Rng + ?Sized>(&self, rng: &mut R) -> f64 {
+        self.power_gamma().sample(rng).sqrt()
+    }
+}
+
+impl Distribution for Nakagami {
+    /// Instantaneous power sample (mean Ω).
+    #[inline]
+    fn sample<R: Rng + ?Sized>(&self, rng: &mut R) -> f64 {
+        self.power_gamma().sample(rng)
+    }
+    fn mean(&self) -> f64 {
+        self.omega
+    }
+}
+
+/// ln(k!) via Stirling series for large k, table for small.
+pub fn ln_factorial(k: u64) -> f64 {
+    const TABLE: [f64; 16] = [
+        0.0,
+        0.0,
+        0.6931471805599453,
+        1.791759469228055,
+        3.1780538303479458,
+        4.787491742782046,
+        6.579251212010101,
+        8.525161361065415,
+        10.60460290274525,
+        12.801827480081469,
+        15.104412573075516,
+        17.502307845873887,
+        19.987214495661885,
+        22.552163853123425,
+        25.19122118273868,
+        27.89927138384089,
+    ];
+    if (k as usize) < TABLE.len() {
+        return TABLE[k as usize];
+    }
+    let x = (k + 1) as f64;
+    // Stirling: ln Γ(x) ≈ (x-.5)ln x - x + .5 ln 2π + 1/(12x) - 1/(360x^3)
+    (x - 0.5) * x.ln() - x + 0.5 * (2.0 * std::f64::consts::PI).ln() + 1.0 / (12.0 * x)
+        - 1.0 / (360.0 * x * x * x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn mean_var(xs: &[f64]) -> (f64, f64) {
+        let n = xs.len() as f64;
+        let m = xs.iter().sum::<f64>() / n;
+        let v = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / n;
+        (m, v)
+    }
+
+    #[test]
+    fn exponential_moments() {
+        let mut rng = Xoshiro256::seed_from(1);
+        let d = Exponential::new(2.0);
+        let xs = d.sample_n(&mut rng, 200_000);
+        let (m, v) = mean_var(&xs);
+        assert!((m - 0.5).abs() < 0.01, "mean={m}");
+        assert!((v - 0.25).abs() < 0.02, "var={v}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Xoshiro256::seed_from(2);
+        let d = Normal::new(3.0, 2.0);
+        let xs = d.sample_n(&mut rng, 200_000);
+        let (m, v) = mean_var(&xs);
+        assert!((m - 3.0).abs() < 0.03, "mean={m}");
+        assert!((v - 4.0).abs() < 0.1, "var={v}");
+    }
+
+    #[test]
+    fn gamma_moments_shape_above_one() {
+        let mut rng = Xoshiro256::seed_from(3);
+        let d = Gamma::new(1.7, 8.0);
+        let xs = d.sample_n(&mut rng, 200_000);
+        let (m, v) = mean_var(&xs);
+        assert!((m - d.mean()).abs() / d.mean() < 0.01, "mean={m}");
+        assert!((v - d.variance()).abs() / d.variance() < 0.05, "var={v}");
+    }
+
+    #[test]
+    fn gamma_moments_shape_below_one() {
+        let mut rng = Xoshiro256::seed_from(4);
+        let d = Gamma::new(0.5, 2.0);
+        let xs = d.sample_n(&mut rng, 200_000);
+        let (m, _) = mean_var(&xs);
+        assert!((m - 1.0).abs() < 0.02, "mean={m}");
+        assert!(xs.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn poisson_small_lambda_moments() {
+        let mut rng = Xoshiro256::seed_from(5);
+        let d = Poisson::new(0.8);
+        let xs = d.sample_n(&mut rng, 200_000);
+        let (m, v) = mean_var(&xs);
+        assert!((m - 0.8).abs() < 0.01, "mean={m}");
+        assert!((v - 0.8).abs() < 0.02, "var={v}");
+    }
+
+    #[test]
+    fn poisson_large_lambda_moments() {
+        let mut rng = Xoshiro256::seed_from(6);
+        let d = Poisson::new(45.0);
+        let xs = d.sample_n(&mut rng, 100_000);
+        let (m, v) = mean_var(&xs);
+        assert!((m - 45.0).abs() < 0.2, "mean={m}");
+        assert!((v - 45.0).abs() < 1.5, "var={v}");
+    }
+
+    #[test]
+    fn poisson_zero_lambda() {
+        let mut rng = Xoshiro256::seed_from(7);
+        assert_eq!(Poisson::new(0.0).sample_count(&mut rng), 0);
+    }
+
+    #[test]
+    fn nakagami_power_mean_is_omega() {
+        let mut rng = Xoshiro256::seed_from(8);
+        let d = Nakagami::new(2.0, 0.75);
+        let xs = d.sample_n(&mut rng, 200_000);
+        let (m, _) = mean_var(&xs);
+        assert!((m - 0.75).abs() < 0.01, "mean={m}");
+    }
+
+    #[test]
+    fn nakagami_envelope_squared_matches_power_mean() {
+        let mut rng = Xoshiro256::seed_from(9);
+        let d = Nakagami::new(1.5, 1.0);
+        let n = 100_000;
+        let m: f64 = (0..n)
+            .map(|_| {
+                let e = d.sample_envelope(&mut rng);
+                e * e
+            })
+            .sum::<f64>()
+            / n as f64;
+        assert!((m - 1.0).abs() < 0.02, "mean={m}");
+    }
+
+    #[test]
+    fn ln_factorial_matches_direct() {
+        let mut acc = 0.0f64;
+        for k in 1..30u64 {
+            acc += (k as f64).ln();
+            assert!(
+                (ln_factorial(k) - acc).abs() < 1e-8,
+                "k={k} got={} want={acc}",
+                ln_factorial(k)
+            );
+        }
+    }
+
+    #[test]
+    fn gamma_effective_capacity_closed_form_properties() {
+        // E^c(θ) decreases in θ and tends to the mean as θ -> 0.
+        let g = Gamma::new(1.5, 10.0);
+        let dt = 1.0;
+        let e_small = g.effective_capacity(1e-9, dt);
+        assert!((e_small - g.mean()).abs() / g.mean() < 1e-6);
+        let mut prev = f64::INFINITY;
+        for i in 1..50 {
+            let th = i as f64 * 0.05;
+            let e = g.effective_capacity(th, dt);
+            assert!(e <= prev + 1e-12, "E^c must be non-increasing in θ");
+            assert!(e > 0.0);
+            prev = e;
+        }
+    }
+}

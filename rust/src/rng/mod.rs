@@ -1,0 +1,155 @@
+//! Pseudo-random number generation and the stochastic models of Table I.
+//!
+//! Built from scratch (no `rand` crate offline): a xoshiro256++ generator
+//! seeded via splitmix64, plus the distributions the paper's evaluation
+//! draws from — Uniform, Exponential, Normal, Poisson (task arrivals
+//! `z_{u,n,t}`), Gamma (light-MS service rates `f_m`), and Nakagami-m
+//! (wireless fading for the uplink SNR `γ_u`).
+
+mod xoshiro;
+mod distributions;
+
+pub use distributions::{Exponential, Gamma, LogNormal, Nakagami, Normal, Poisson, Uniform};
+pub use xoshiro::Xoshiro256;
+
+/// Minimal RNG interface used across the crate.
+pub trait Rng {
+    /// Next raw 64 random bits.
+    fn next_u64(&mut self) -> u64;
+
+    /// Uniform f64 in `[0, 1)` with 53-bit resolution.
+    #[inline]
+    fn next_f64(&mut self) -> f64 {
+        // Take the top 53 bits -> uniform double in [0,1).
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in `(0, 1]` — safe as a log() argument.
+    #[inline]
+    fn next_f64_open(&mut self) -> f64 {
+        1.0 - self.next_f64()
+    }
+
+    /// Uniform integer in `[0, n)`. `n` must be > 0.
+    #[inline]
+    fn next_below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // Lemire-style rejection to remove modulo bias.
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut lo = m as u64;
+        if lo < n {
+            let t = n.wrapping_neg() % n;
+            while lo < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    #[inline]
+    fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Uniform usize in `[lo, hi]` (inclusive).
+    #[inline]
+    fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi >= lo);
+        lo + self.next_below((hi - lo + 1) as u64) as usize
+    }
+
+    /// Fisher–Yates shuffle.
+    fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a uniformly random element index, or None if empty.
+    #[inline]
+    fn choose_index(&mut self, len: usize) -> Option<usize> {
+        if len == 0 {
+            None
+        } else {
+            Some(self.next_below(len as u64) as usize)
+        }
+    }
+}
+
+/// A distribution that can be sampled with any [`Rng`].
+pub trait Distribution {
+    /// Draw one sample.
+    fn sample<R: Rng + ?Sized>(&self, rng: &mut R) -> f64;
+
+    /// Draw `n` samples into a fresh vector.
+    fn sample_n<R: Rng + ?Sized>(&self, rng: &mut R, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.sample(rng)).collect()
+    }
+
+    /// The distribution mean, used by mean-value baselines (PropAvg).
+    fn mean(&self) -> f64;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn next_below_is_in_range_and_covers() {
+        let mut rng = Xoshiro256::seed_from(7);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = rng.next_below(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues should appear");
+    }
+
+    #[test]
+    fn next_f64_unit_interval() {
+        let mut rng = Xoshiro256::seed_from(3);
+        for _ in 0..10_000 {
+            let v = rng.next_f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn next_f64_open_never_zero() {
+        let mut rng = Xoshiro256::seed_from(11);
+        for _ in 0..10_000 {
+            let v = rng.next_f64_open();
+            assert!(v > 0.0 && v <= 1.0);
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Xoshiro256::seed_from(5);
+        let mut xs: Vec<u32> = (0..50).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn range_usize_inclusive_bounds() {
+        let mut rng = Xoshiro256::seed_from(9);
+        let mut lo_seen = false;
+        let mut hi_seen = false;
+        for _ in 0..2000 {
+            let v = rng.range_usize(3, 6);
+            assert!((3..=6).contains(&v));
+            lo_seen |= v == 3;
+            hi_seen |= v == 6;
+        }
+        assert!(lo_seen && hi_seen);
+    }
+}

@@ -1,0 +1,250 @@
+//! Core-service routing: pick the placed instance minimizing next-hop
+//! completion time (transfer + queueing wait + deterministic processing).
+//!
+//! Core instances run under strict isolation (§II-A), each serving one
+//! task at a time; a per-instance `busy_until` clock models the queue.
+
+use super::DistanceMatrix;
+
+/// Routing decision for one core-stage execution.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CoreAssignment {
+    pub node: usize,
+    /// Instance slot index on that node.
+    pub instance: usize,
+    /// When the instance starts the task (ms, absolute).
+    pub start_ms: f64,
+    /// Completion time (ms, absolute).
+    pub done_ms: f64,
+    /// Transfer latency component (ms).
+    pub transfer_ms: f64,
+}
+
+/// Tracks per-instance availability for every placed core instance.
+#[derive(Clone, Debug)]
+pub struct CoreRouter {
+    /// `busy_until[v][m]` = sorted clock per instance of core MS `m` at `v`.
+    busy_until: Vec<Vec<Vec<f64>>>,
+    num_core: usize,
+}
+
+impl CoreRouter {
+    /// Build from a core placement matrix `instances[v][m]`.
+    pub fn new(instances: &[Vec<u32>]) -> Self {
+        let num_core = instances.first().map_or(0, Vec::len);
+        let busy_until = instances
+            .iter()
+            .map(|row| row.iter().map(|&c| vec![0.0f64; c as usize]).collect())
+            .collect();
+        CoreRouter {
+            busy_until,
+            num_core,
+        }
+    }
+
+    /// Nodes hosting at least one instance of core MS `m` (dense core idx).
+    pub fn nodes_hosting(&self, m: usize) -> impl Iterator<Item = usize> + '_ {
+        self.busy_until
+            .iter()
+            .enumerate()
+            .filter(move |(_, row)| !row[m].is_empty())
+            .map(|(v, _)| v)
+    }
+
+    /// Total placed instances of core MS `m`.
+    pub fn total_instances(&self, m: usize) -> usize {
+        self.busy_until.iter().map(|row| row[m].len()).sum()
+    }
+
+    /// Route a core stage whose input payloads come from multiple DAG
+    /// parents: `parents` holds `(node, ready_ms, payload_mb)` triples and
+    /// the arrival at a candidate node is the max over parents of
+    /// `ready + transfer` (eq. 4's inner max). `now_ms` lower-bounds the
+    /// start (decisions take effect from the current slot).
+    pub fn route_multi(
+        &mut self,
+        m: usize,
+        parents: &[(usize, f64, f64)],
+        proc_ms: f64,
+        now_ms: f64,
+        dm: &DistanceMatrix,
+    ) -> Option<CoreAssignment> {
+        debug_assert!(m < self.num_core);
+        let mut best: Option<CoreAssignment> = None;
+        for (v, row) in self.busy_until.iter().enumerate() {
+            if row[m].is_empty() {
+                continue;
+            }
+            let mut arrive = now_ms;
+            let mut transfer = 0.0f64;
+            for &(pn, ready, mb) in parents {
+                let tr = dm.latency(pn, v, mb);
+                transfer = transfer.max(tr);
+                arrive = arrive.max(ready + tr);
+            }
+            let (idx, &free) = row[m]
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .expect("non-empty");
+            let start = arrive.max(free);
+            let done = start + proc_ms;
+            if best.as_ref().map_or(true, |b| done < b.done_ms) {
+                best = Some(CoreAssignment {
+                    node: v,
+                    instance: idx,
+                    start_ms: start,
+                    done_ms: done,
+                    transfer_ms: transfer,
+                });
+            }
+        }
+        if let Some(a) = &best {
+            self.busy_until[a.node][m][a.instance] = a.done_ms;
+        }
+        best
+    }
+
+    /// Route one execution of core MS `m` (dense core index):
+    ///
+    /// * `from` — node holding the input payload,
+    /// * `ready_ms` — when the payload is ready there,
+    /// * `payload_mb` — size to move,
+    /// * `proc_ms` — deterministic processing delay `a_m / f_m`.
+    ///
+    /// Greedy ΔT rule: minimize completion = max(ready + transfer,
+    /// instance-free) + proc over all placed instances; commits the chosen
+    /// instance's clock. Returns `None` when the MS has no instance.
+    pub fn route(
+        &mut self,
+        m: usize,
+        from: usize,
+        ready_ms: f64,
+        payload_mb: f64,
+        proc_ms: f64,
+        dm: &DistanceMatrix,
+    ) -> Option<CoreAssignment> {
+        debug_assert!(m < self.num_core);
+        let mut best: Option<CoreAssignment> = None;
+        for (v, row) in self.busy_until.iter().enumerate() {
+            if row[m].is_empty() {
+                continue;
+            }
+            let transfer = dm.latency(from, v, payload_mb);
+            let arrive = ready_ms + transfer;
+            // Earliest-free instance on this node.
+            let (idx, &free) = row[m]
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .expect("non-empty");
+            let start = arrive.max(free);
+            let done = start + proc_ms;
+            let better = best.as_ref().map_or(true, |b| done < b.done_ms);
+            if better {
+                best = Some(CoreAssignment {
+                    node: v,
+                    instance: idx,
+                    start_ms: start,
+                    done_ms: done,
+                    transfer_ms: transfer,
+                });
+            }
+        }
+        if let Some(a) = &best {
+            self.busy_until[a.node][m][a.instance] = a.done_ms;
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::network::Topology;
+    use crate::rng::Xoshiro256;
+
+    fn setup() -> (Topology, DistanceMatrix) {
+        let cfg = ExperimentConfig::paper_default();
+        let mut rng = Xoshiro256::seed_from(1);
+        let t = Topology::generate(&cfg, &mut rng);
+        let dm = DistanceMatrix::build(&t, 1.0);
+        (t, dm)
+    }
+
+    #[test]
+    fn routes_to_only_available_instance() {
+        let (t, dm) = setup();
+        let mut inst = vec![vec![0u32; 2]; t.num_nodes()];
+        inst[13][0] = 1;
+        let mut router = CoreRouter::new(&inst);
+        let a = router.route(0, 0, 5.0, 1.0, 2.0, &dm).unwrap();
+        assert_eq!(a.node, 13);
+        assert!((a.done_ms - (5.0 + a.transfer_ms + 2.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn missing_service_returns_none() {
+        let (t, dm) = setup();
+        let inst = vec![vec![0u32; 2]; t.num_nodes()];
+        let mut router = CoreRouter::new(&inst);
+        assert!(router.route(1, 0, 0.0, 1.0, 1.0, &dm).is_none());
+    }
+
+    #[test]
+    fn queueing_serializes_on_one_instance() {
+        let (t, dm) = setup();
+        let mut inst = vec![vec![0u32; 1]; t.num_nodes()];
+        inst[12][0] = 1;
+        let mut router = CoreRouter::new(&inst);
+        let a1 = router.route(0, 12, 0.0, 1.0, 3.0, &dm).unwrap();
+        let a2 = router.route(0, 12, 0.0, 1.0, 3.0, &dm).unwrap();
+        assert_eq!(a1.start_ms, 0.0);
+        assert!((a2.start_ms - 3.0).abs() < 1e-12, "second task must wait");
+        assert!((a2.done_ms - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prefers_idle_replica_over_busy_nearer_one() {
+        let (t, dm) = setup();
+        let mut inst = vec![vec![0u32; 1]; t.num_nodes()];
+        inst[12][0] = 1;
+        inst[15][0] = 1;
+        let mut router = CoreRouter::new(&inst);
+        // Saturate node 12 (co-located with the source).
+        for _ in 0..5 {
+            router.route(0, 12, 0.0, 0.1, 10.0, &dm).unwrap();
+        }
+        let a = router.route(0, 12, 0.0, 0.1, 10.0, &dm).unwrap();
+        assert_eq!(
+            a.node, 15,
+            "busy local replica should lose to an idle remote one"
+        );
+    }
+
+    #[test]
+    fn two_instances_on_same_node_parallelize() {
+        let (t, dm) = setup();
+        let mut inst = vec![vec![0u32; 1]; t.num_nodes()];
+        inst[14][0] = 2;
+        let mut router = CoreRouter::new(&inst);
+        let a1 = router.route(0, 14, 0.0, 1.0, 4.0, &dm).unwrap();
+        let a2 = router.route(0, 14, 0.0, 1.0, 4.0, &dm).unwrap();
+        assert_eq!(a1.start_ms, 0.0);
+        assert_eq!(a2.start_ms, 0.0, "second instance serves in parallel");
+        assert_ne!(a1.instance, a2.instance);
+    }
+
+    #[test]
+    fn total_instances_counts() {
+        let (t, _) = setup();
+        let mut inst = vec![vec![0u32; 3]; t.num_nodes()];
+        inst[1][2] = 2;
+        inst[5][2] = 1;
+        let router = CoreRouter::new(&inst);
+        assert_eq!(router.total_instances(2), 3);
+        assert_eq!(router.nodes_hosting(2).collect::<Vec<_>>(), vec![1, 5]);
+        assert_eq!(router.total_instances(0), 0);
+    }
+}

@@ -1,0 +1,153 @@
+//! Task routing: precomputed network distances and next-hop instance
+//! selection (the `ΔT_j` machinery of §III-B).
+//!
+//! The online controller evaluates `τ_tr + τ_pp` between every (current
+//! node, candidate node) pair inside its greedy loop; doing a Dijkstra per
+//! evaluation would dominate the per-slot budget, so [`DistanceMatrix`]
+//! linearizes routed latency as `base(a,b) + mb · per_mb(a,b)` along the
+//! reference-payload shortest route — exact when the route is payload-
+//! independent, and within a few percent otherwise (see `bench_alg1`).
+
+mod core_router;
+
+pub use core_router::{CoreAssignment, CoreRouter};
+
+use crate::network::Topology;
+
+/// All-pairs routed-latency model, decomposed into a payload-independent
+/// propagation component and a per-MB transmission component.
+#[derive(Clone, Debug)]
+pub struct DistanceMatrix {
+    n: usize,
+    /// Propagation (ms): Σ distance/l along the route.
+    base: Vec<f64>,
+    /// Transmission (ms/MB): Σ 1/w along the route.
+    per_mb: Vec<f64>,
+}
+
+impl DistanceMatrix {
+    /// Build from a topology using `ref_mb` as the payload that defines
+    /// the routes (1 MB by default in callers).
+    pub fn build(topo: &Topology, ref_mb: f64) -> Self {
+        let n = topo.num_nodes();
+        let mut base = vec![0.0; n * n];
+        let mut per_mb = vec![0.0; n * n];
+        for src in 0..n {
+            let sp = topo.shortest_paths(src, ref_mb);
+            for dst in 0..n {
+                if src == dst {
+                    continue;
+                }
+                let path = sp.path_to(dst);
+                let mut b = 0.0;
+                let mut p = 0.0;
+                for w in path.windows(2) {
+                    // Find the best link between consecutive hops.
+                    let mut best: Option<(f64, f64)> = None;
+                    for l in topo.links() {
+                        if (l.a == w[0] && l.b == w[1]) || (l.a == w[1] && l.b == w[0]) {
+                            let cand = (
+                                l.distance_km / topo.prop_speed_km_per_ms,
+                                1.0 / l.bandwidth_mb_ms,
+                            );
+                            let cand_lat = cand.0 + ref_mb * cand.1;
+                            match best {
+                                None => best = Some(cand),
+                                Some(cur) if cand_lat < cur.0 + ref_mb * cur.1 => {
+                                    best = Some(cand)
+                                }
+                                _ => {}
+                            }
+                        }
+                    }
+                    let (db, dp) = best.expect("path hops are adjacent");
+                    b += db;
+                    p += dp;
+                }
+                base[src * n + dst] = b;
+                per_mb[src * n + dst] = p;
+            }
+        }
+        DistanceMatrix { n, base, per_mb }
+    }
+
+    /// Routed latency for payload `mb` from `a` to `b` (ms). Zero when
+    /// `a == b`.
+    #[inline]
+    pub fn latency(&self, a: usize, b: usize, mb: f64) -> f64 {
+        self.base[a * self.n + b] + mb * self.per_mb[a * self.n + b]
+    }
+
+    /// Propagation-only component (payload-independent).
+    #[inline]
+    pub fn propagation(&self, a: usize, b: usize) -> f64 {
+        self.base[a * self.n + b]
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::rng::Xoshiro256;
+
+    fn topo(seed: u64) -> Topology {
+        let cfg = ExperimentConfig::paper_default();
+        let mut rng = Xoshiro256::seed_from(seed);
+        Topology::generate(&cfg, &mut rng)
+    }
+
+    #[test]
+    fn matrix_matches_dijkstra_at_reference_payload() {
+        let t = topo(1);
+        let dm = DistanceMatrix::build(&t, 1.0);
+        for src in 0..t.num_nodes() {
+            let sp = t.shortest_paths(src, 1.0);
+            for dst in 0..t.num_nodes() {
+                assert!(
+                    (dm.latency(src, dst, 1.0) - sp.dist[dst]).abs() < 1e-9,
+                    "({src},{dst}): {} vs {}",
+                    dm.latency(src, dst, 1.0),
+                    sp.dist[dst]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn latency_linear_in_payload() {
+        let t = topo(2);
+        let dm = DistanceMatrix::build(&t, 1.0);
+        let l1 = dm.latency(0, 14, 1.0);
+        let l2 = dm.latency(0, 14, 3.0);
+        let slope = dm.latency(0, 14, 2.0) - l1;
+        assert!((l2 - l1 - 2.0 * slope).abs() < 1e-9);
+    }
+
+    #[test]
+    fn self_latency_is_zero() {
+        let t = topo(3);
+        let dm = DistanceMatrix::build(&t, 1.0);
+        for v in 0..t.num_nodes() {
+            assert_eq!(dm.latency(v, v, 5.0), 0.0);
+        }
+    }
+
+    #[test]
+    fn symmetric_for_undirected_links() {
+        let t = topo(4);
+        let dm = DistanceMatrix::build(&t, 1.0);
+        for a in 0..t.num_nodes() {
+            for b in 0..t.num_nodes() {
+                assert!(
+                    (dm.latency(a, b, 1.0) - dm.latency(b, a, 1.0)).abs() < 1e-9,
+                    "asymmetric routed latency ({a},{b})"
+                );
+            }
+        }
+    }
+}

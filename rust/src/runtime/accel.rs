@@ -1,0 +1,251 @@
+//! Typed wrappers over the compiled artifacts: padding, execution, and
+//! unpadding for each of the three AOT graphs.
+
+use crate::effcap::GTable;
+use crate::placement::QosScores;
+
+use super::client::{ArtifactError, Executable, Runtime};
+use super::shapes;
+
+/// PJRT-accelerated g-table construction (`effcap.hlo.txt`).
+///
+/// The AOT graph is compiled for fixed shapes `[M=16, S=4096]`; fewer
+/// microservices/samples are padded with neutral rows (rate 1.0) that are
+/// dropped on unpadding.
+pub struct EffCapAccel {
+    exe: Executable,
+}
+
+impl EffCapAccel {
+    pub fn load(rt: &Runtime) -> Result<Self, ArtifactError> {
+        Ok(EffCapAccel {
+            exe: rt.load("effcap")?,
+        })
+    }
+
+    /// Build the `(g, g_mean)` rows for `rate_samples.len()` light MSs.
+    ///
+    /// The θ-grid and ε are baked into the artifact
+    /// (`shapes::EFFCAP_EPSILON`, 32-point log grid) — callers needing
+    /// other values use the native `GTable::build`.
+    pub fn build_gtable(
+        &self,
+        rate_samples: &[Vec<f64>],
+        workload_mb: &[f64],
+    ) -> Result<GTable, ArtifactError> {
+        let m_real = rate_samples.len();
+        if m_real > shapes::EFFCAP_M {
+            return Err(ArtifactError::ShapeMismatch {
+                what: format!(
+                    "{m_real} light MSs exceed the compiled capacity {}",
+                    shapes::EFFCAP_M
+                ),
+            });
+        }
+        if m_real != workload_mb.len() {
+            return Err(ArtifactError::ShapeMismatch {
+                what: "rate_samples and workload_mb lengths differ".into(),
+            });
+        }
+        let mut samples = vec![1.0f32; shapes::EFFCAP_M * shapes::EFFCAP_S];
+        for (mi, row) in rate_samples.iter().enumerate() {
+            if row.is_empty() {
+                return Err(ArtifactError::ShapeMismatch {
+                    what: format!("light MS {mi} has no rate samples"),
+                });
+            }
+            for s in 0..shapes::EFFCAP_S {
+                // Cycle when fewer samples were drawn than the slot count.
+                samples[mi * shapes::EFFCAP_S + s] = row[s % row.len()] as f32;
+            }
+        }
+        let thetas: Vec<f32> = log_grid(1e-3, 10.0, shapes::EFFCAP_T);
+        let mut workload = vec![1.0f32; shapes::EFFCAP_M];
+        for (mi, &w) in workload_mb.iter().enumerate() {
+            workload[mi] = w as f32;
+        }
+
+        let outs = self.exe.run_f32(&[
+            (&samples, &[shapes::EFFCAP_M, shapes::EFFCAP_S]),
+            (&thetas, &[shapes::EFFCAP_T]),
+            (&workload, &[shapes::EFFCAP_M]),
+        ])?;
+        let g = &outs[0];
+        let gm = &outs[1];
+        let mut delays = Vec::with_capacity(m_real);
+        let mut mean_delays = Vec::with_capacity(m_real);
+        for mi in 0..m_real {
+            let row =
+                g[mi * shapes::EFFCAP_Y..(mi + 1) * shapes::EFFCAP_Y].to_vec();
+            let mrow =
+                gm[mi * shapes::EFFCAP_Y..(mi + 1) * shapes::EFFCAP_Y].to_vec();
+            delays.push(row.into_iter().map(|x| x as f64).collect());
+            mean_delays.push(mrow.into_iter().map(|x| x as f64).collect());
+        }
+        Ok(GTable::from_rows(
+            delays,
+            mean_delays,
+            shapes::EFFCAP_EPSILON,
+            shapes::EFFCAP_ALPHA,
+        ))
+    }
+}
+
+/// PJRT-accelerated QoS-score apportionment (`qos.hlo.txt`).
+pub struct QosAccel {
+    exe: Executable,
+}
+
+/// Row type shared with the native path.
+pub use crate::placement::QosRowData as QosRow;
+
+impl QosAccel {
+    pub fn load(rt: &Runtime) -> Result<Self, ArtifactError> {
+        Ok(QosAccel { exe: rt.load("qos")? })
+    }
+
+    /// Compute `(z̃, d̃, Q)` for `num_nodes × num_core` from row data.
+    pub fn scores(
+        &self,
+        rows: &[QosRow],
+        num_nodes: usize,
+        num_core: usize,
+    ) -> Result<QosScores, ArtifactError> {
+        if rows.len() > shapes::QOS_R {
+            return Err(ArtifactError::ShapeMismatch {
+                what: format!("{} rows exceed compiled capacity {}", rows.len(), shapes::QOS_R),
+            });
+        }
+        if num_nodes > shapes::QOS_V || num_core > shapes::QOS_C {
+            return Err(ArtifactError::ShapeMismatch {
+                what: "network larger than the compiled QoS shape".into(),
+            });
+        }
+        let (r, v, c) = (shapes::QOS_R, shapes::QOS_V, shapes::QOS_C);
+        // Padding: huge dpr on fake nodes keeps softmax mass ≈ 0 there;
+        // zero rate + zero group rows are fully inert (pytest-verified).
+        let mut dpr = vec![1e9f32; r * v];
+        let mut z = vec![0f32; r];
+        let mut dd = vec![1f32; r];
+        let mut dcu = vec![0f32; r];
+        let mut dsu = vec![1f32; r];
+        let mut group = vec![0f32; r * c];
+        for (ri, row) in rows.iter().enumerate() {
+            debug_assert_eq!(row.dpr.len(), num_nodes);
+            for (vi, &d) in row.dpr.iter().enumerate() {
+                dpr[ri * v + vi] = d as f32;
+            }
+            z[ri] = row.rate as f32;
+            dd[ri] = row.deadline_ms as f32;
+            dcu[ri] = row.dcu_ms as f32;
+            dsu[ri] = row.dsu_ms.max(1e-3) as f32;
+            group[ri * c + row.core_idx] = 1.0;
+        }
+        let outs = self.exe.run_f32(&[
+            (&dpr, &[r, v]),
+            (&z, &[r]),
+            (&dd, &[r]),
+            (&dcu, &[r]),
+            (&dsu, &[r]),
+            (&group, &[r, c]),
+        ])?;
+        let unpad = |flat: &[f32]| -> Vec<Vec<f64>> {
+            (0..num_nodes)
+                .map(|vi| {
+                    (0..num_core)
+                        .map(|ci| flat[vi * c + ci] as f64)
+                        .collect()
+                })
+                .collect()
+        };
+        Ok(QosScores {
+            z_tilde: unpad(&outs[0]),
+            d_tilde: unpad(&outs[1]),
+            q: unpad(&outs[2]),
+        })
+    }
+}
+
+/// PJRT-executed core-MS compute (`msblock.hlo.txt`): the serving demo
+/// runs one transformer block per request batch. Weights travel in the
+/// sidecar `msblock.weights.bin` (raw little-endian f32, order
+/// wq,wk,wv,wo,w1,w2) because `as_hlo_text` elides large constants.
+pub struct MsBlockAccel {
+    exe: Executable,
+    /// `(data, dims)` per weight, in artifact argument order.
+    weights: Vec<(Vec<f32>, Vec<usize>)>,
+}
+
+impl MsBlockAccel {
+    pub fn load(rt: &Runtime) -> Result<Self, ArtifactError> {
+        let exe = rt.load("msblock")?;
+        let d = shapes::MSBLOCK_D;
+        let ff = 2 * d;
+        let dims: Vec<Vec<usize>> = vec![
+            vec![d, d],
+            vec![d, d],
+            vec![d, d],
+            vec![d, d],
+            vec![d, ff],
+            vec![ff, d],
+        ];
+        let path = rt.artifact_dir().join("msblock.weights.bin");
+        let bytes = std::fs::read(&path).map_err(|_| ArtifactError::Missing(path.clone()))?;
+        let total: usize = dims.iter().map(|d| d.iter().product::<usize>()).sum();
+        if bytes.len() != total * 4 {
+            return Err(ArtifactError::ShapeMismatch {
+                what: format!(
+                    "weights file holds {} bytes, expected {}",
+                    bytes.len(),
+                    total * 4
+                ),
+            });
+        }
+        let mut weights = Vec::with_capacity(dims.len());
+        let mut off = 0usize;
+        for dim in dims {
+            let n: usize = dim.iter().product();
+            let mut data = Vec::with_capacity(n);
+            for i in 0..n {
+                let b = &bytes[(off + i) * 4..(off + i) * 4 + 4];
+                data.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            }
+            off += n;
+            weights.push((data, dim));
+        }
+        Ok(MsBlockAccel { exe, weights })
+    }
+
+    /// Number of requests per compiled batch.
+    pub fn batch_size(&self) -> usize {
+        shapes::MSBLOCK_B
+    }
+
+    /// Run the block on a `[B, L, D]` activations buffer (flattened).
+    pub fn forward(&self, x: &[f32]) -> Result<Vec<f32>, ArtifactError> {
+        let want = shapes::MSBLOCK_B * shapes::MSBLOCK_L * shapes::MSBLOCK_D;
+        if x.len() != want {
+            return Err(ArtifactError::ShapeMismatch {
+                what: format!("msblock input length {} != {want}", x.len()),
+            });
+        }
+        let mut inputs: Vec<(&[f32], &[usize])> = self
+            .weights
+            .iter()
+            .map(|(d, s)| (d.as_slice(), s.as_slice()))
+            .collect();
+        let xdims = [shapes::MSBLOCK_B, shapes::MSBLOCK_L, shapes::MSBLOCK_D];
+        inputs.push((x, &xdims));
+        let outs = self.exe.run_f32(&inputs)?;
+        Ok(outs.into_iter().next().expect("one output"))
+    }
+}
+
+/// Log-spaced grid matching `EffCapEstimator::log_grid` and `aot.py`.
+fn log_grid(lo: f64, hi: f64, n: usize) -> Vec<f32> {
+    let llo = lo.ln();
+    let lhi = hi.ln();
+    (0..n)
+        .map(|i| ((llo + (lhi - llo) * i as f64 / (n - 1) as f64).exp()) as f32)
+        .collect()
+}

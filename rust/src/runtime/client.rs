@@ -1,0 +1,118 @@
+//! Thin wrapper over the `xla` crate: PJRT CPU client + HLO-text loading.
+
+use std::path::{Path, PathBuf};
+
+/// Artifact loading/compilation errors.
+#[derive(Debug)]
+pub enum ArtifactError {
+    Missing(PathBuf),
+    Xla(xla::Error),
+    ShapeMismatch { what: String },
+}
+
+impl std::fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArtifactError::Missing(p) => write!(
+                f,
+                "artifact {} not found — run `make artifacts` first",
+                p.display()
+            ),
+            ArtifactError::Xla(e) => write!(f, "XLA error: {e:?}"),
+            ArtifactError::ShapeMismatch { what } => write!(f, "shape mismatch: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {}
+
+impl From<xla::Error> for ArtifactError {
+    fn from(e: xla::Error) -> Self {
+        ArtifactError::Xla(e)
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Executable {
+    /// Execute with f32 input buffers (shapes must match the AOT manifest);
+    /// returns the flattened f32 outputs of the result tuple.
+    pub fn run_f32(
+        &self,
+        inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<Vec<f32>>, ArtifactError> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let lit = xla::Literal::vec1(data);
+            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            literals.push(lit.reshape(&dims_i64)?);
+        }
+        let mut result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True.
+        let tuple = result.decompose_tuple()?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for lit in tuple {
+            out.push(lit.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// PJRT CPU runtime holding the client and compiled artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifact_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at an artifact directory.
+    pub fn cpu(artifact_dir: impl AsRef<Path>) -> Result<Self, ArtifactError> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu()?,
+            artifact_dir: artifact_dir.as_ref().to_path_buf(),
+        })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile `<name>.hlo.txt` from the artifact directory.
+    pub fn load(&self, name: &str) -> Result<Executable, ArtifactError> {
+        let path = self.artifact_dir.join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            return Err(ArtifactError::Missing(path));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().expect("utf-8 artifact path"),
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Executable {
+            exe,
+            name: name.to_string(),
+        })
+    }
+
+    /// The directory this runtime loads artifacts from.
+    pub fn artifact_dir(&self) -> &Path {
+        &self.artifact_dir
+    }
+
+    /// Default artifact directory relative to the repo root, overridable
+    /// via `FMEDGE_ARTIFACTS`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("FMEDGE_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}

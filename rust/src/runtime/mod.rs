@@ -1,0 +1,38 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path. Python
+//! never runs at serving time — the `xla` crate's PJRT CPU client compiles
+//! the HLO once at startup and the executables are called from Rust.
+//!
+//! Artifacts (shapes in `artifacts/manifest.txt`, kept in sync with
+//! `aot.py`):
+//! * `effcap.hlo.txt`  — the g-table builder ([`EffCapAccel`]).
+//! * `qos.hlo.txt`     — the QoS-score apportionment ([`QosAccel`]).
+//! * `msblock.hlo.txt` — a transformer block standing in for core-MS
+//!   compute in the serving demo ([`MsBlockAccel`]).
+
+mod accel;
+mod client;
+
+pub use accel::{EffCapAccel, MsBlockAccel, QosAccel};
+pub use client::{ArtifactError, Executable, Runtime};
+
+/// Compile-time shape constants mirrored from `python/compile/aot.py`.
+pub mod shapes {
+    pub const EFFCAP_M: usize = 16;
+    pub const EFFCAP_S: usize = 4096;
+    pub const EFFCAP_T: usize = 32;
+    pub const EFFCAP_Y: usize = 16;
+    pub const EFFCAP_ALPHA: f64 = 1.0;
+    pub const EFFCAP_EPSILON: f64 = 0.2;
+
+    pub const QOS_R: usize = 512;
+    pub const QOS_V: usize = 32;
+    pub const QOS_C: usize = 8;
+    pub const QOS_DELTA: f64 = 0.05;
+    pub const QOS_LO: f64 = 0.05;
+    pub const QOS_HI: f64 = 4.0;
+
+    pub const MSBLOCK_B: usize = 4;
+    pub const MSBLOCK_L: usize = 16;
+    pub const MSBLOCK_D: usize = 256;
+}

@@ -1,0 +1,502 @@
+//! The trial engine: environment sampling + the slotted event loop.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+use crate::config::{ExperimentConfig, NUM_RESOURCES};
+use crate::controller::{LightRequest, VirtualQueues};
+use crate::effcap::{GTable, GTableParams};
+use crate::metrics::{CostBook, MetricsCollector, TaskOutcome, TrialMetrics};
+use crate::microservice::{build_fig1_application, Application, MsClass};
+use crate::network::Topology;
+use crate::placement::{QosScores, ScoreParams};
+use crate::rng::Xoshiro256;
+use crate::routing::{CoreRouter, DistanceMatrix};
+use crate::workload::WorkloadGenerator;
+
+use super::Strategy;
+
+/// Sampled evaluation environment shared by all strategies of one trial
+/// set: application, topology, users, and the effective-capacity tables.
+pub struct SimEnv {
+    pub cfg: ExperimentConfig,
+    pub app: Application,
+    pub topo: Topology,
+    pub dm: DistanceMatrix,
+    pub gtable: GTable,
+    /// Raw rate samples per light MS (the PJRT path re-derives the g-table
+    /// from these; kept for cross-checks).
+    pub light_rate_samples: Vec<Vec<f64>>,
+    /// Per light MS resource vectors (dense light index).
+    pub light_resources: Vec<[f64; NUM_RESOURCES]>,
+    /// Per light MS `(c_dp, c_mt, c_pl)`.
+    pub light_costs: Vec<(f64, f64, f64)>,
+    /// Per core MS `(c_dp, c_mt)` (dense core index).
+    pub core_costs: Vec<(f64, f64)>,
+    /// The sampled user population (shared across strategies).
+    pub users_seed: u64,
+}
+
+impl SimEnv {
+    /// Sample a full environment from the config at `seed`.
+    pub fn build(cfg: &ExperimentConfig, seed: u64) -> Self {
+        let mut rng = Xoshiro256::seed_from(seed ^ 0xE17E_5EED);
+        let app = build_fig1_application(cfg, &mut rng);
+        let topo = Topology::generate(cfg, &mut rng);
+        let dm = DistanceMatrix::build(&topo, 1.0);
+
+        let mut samples = Vec::new();
+        let mut workloads = Vec::new();
+        for &m in app.catalog.light_ids() {
+            let spec = app.catalog.spec(m);
+            samples.push(spec.rate.sample_n(&mut rng, cfg.controller.effcap_samples));
+            workloads.push(spec.workload_mb);
+        }
+        let gtable = GTable::build(
+            &samples,
+            &workloads,
+            &GTableParams::from_config(&cfg.controller),
+        );
+        let light_resources = app
+            .catalog
+            .light_ids()
+            .iter()
+            .map(|&m| app.catalog.spec(m).resources)
+            .collect();
+        let light_costs = app
+            .catalog
+            .light_ids()
+            .iter()
+            .map(|&m| {
+                let s = app.catalog.spec(m);
+                (s.cost_deploy, s.cost_maint, s.cost_parallel)
+            })
+            .collect();
+        let core_costs = app
+            .catalog
+            .core_ids()
+            .iter()
+            .map(|&m| {
+                let s = app.catalog.spec(m);
+                (s.cost_deploy, s.cost_maint)
+            })
+            .collect();
+        SimEnv {
+            cfg: cfg.clone(),
+            app,
+            topo,
+            dm,
+            gtable,
+            light_rate_samples: samples,
+            light_resources,
+            light_costs,
+            core_costs,
+            users_seed: seed ^ 0x05E5,
+        }
+    }
+
+    /// Replace the g-table (PJRT-accelerated builds inject theirs here).
+    pub fn with_gtable(mut self, gtable: GTable) -> Self {
+        self.gtable = gtable;
+        self
+    }
+}
+
+/// Trial options.
+#[derive(Clone, Debug)]
+pub struct SimOptions {
+    pub slots: usize,
+    pub slot_ms: f64,
+    pub load_multiplier: f64,
+    /// Tasks still unfinished this many deadlines past their own are
+    /// dropped (prevents unbounded queues under overload).
+    pub drop_after_deadlines: f64,
+    /// Arrivals stop at this slot (the tail of the horizon drains the
+    /// system so every admitted task gets a fair shot at its deadline).
+    pub arrival_cutoff: usize,
+}
+
+impl SimOptions {
+    pub fn from_config(cfg: &ExperimentConfig) -> Self {
+        let slots = cfg.sim.slots;
+        // Leave room for the longest deadline plus slack to drain.
+        let drain = (1.5 * cfg.workload.deadline_ms.hi / cfg.sim.slot_ms).ceil() as usize;
+        SimOptions {
+            slots,
+            slot_ms: cfg.sim.slot_ms,
+            load_multiplier: cfg.sim.load_multiplier,
+            drop_after_deadlines: 5.0,
+            arrival_cutoff: slots.saturating_sub(drain).max(slots / 4).max(1),
+        }
+    }
+}
+
+/// Per-task runtime state.
+struct RunTask {
+    task_type: usize,
+    arrival_ms: f64,
+    deadline_ms: f64,
+    uplink_ms: f64,
+    ed: usize,
+    /// Completion time per local DAG node.
+    done: Vec<Option<f64>>,
+    /// Executing network node per local DAG node.
+    node: Vec<Option<usize>>,
+    /// Local nodes already dispatched (running or queued for light).
+    dispatched: Vec<bool>,
+}
+
+impl RunTask {
+    fn stage_ready(&self, app: &Application, local: usize) -> bool {
+        if self.dispatched[local] || self.done[local].is_some() {
+            return false;
+        }
+        let tt = &app.task_types[self.task_type];
+        tt.dag.parents(local).iter().all(|&p| self.done[p].is_some())
+    }
+
+    /// Parent payload sources `(node, done_ms, mb)` of a local stage; for
+    /// source stages this is the user's ED with the uplink-completed time.
+    fn parent_payloads(
+        &self,
+        app: &Application,
+        local: usize,
+    ) -> Vec<(usize, f64, f64)> {
+        let tt = &app.task_types[self.task_type];
+        let parents = tt.dag.parents(local);
+        if parents.is_empty() {
+            vec![(self.ed, self.arrival_ms + self.uplink_ms, tt.input_mb)]
+        } else {
+            parents
+                .iter()
+                .map(|&p| {
+                    let spec = app.catalog.spec(tt.services[p]);
+                    (
+                        self.node[p].expect("parent executed"),
+                        self.done[p].expect("parent done"),
+                        spec.output_mb,
+                    )
+                })
+                .collect()
+        }
+    }
+}
+
+/// Completion event ordered by time.
+#[derive(PartialEq)]
+struct Event {
+    time_ms: f64,
+    task: u64,
+    local: usize,
+    /// Light instance group to release, if any.
+    release: Option<(usize, usize)>,
+}
+
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.time_ms
+            .partial_cmp(&other.time_ms)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| self.task.cmp(&other.task))
+            .then_with(|| self.local.cmp(&other.local))
+    }
+}
+
+/// Run one trial of `strategy` on `env`.
+pub fn run_trial(
+    env: &SimEnv,
+    strategy: &mut dyn Strategy,
+    seed: u64,
+    opts: &SimOptions,
+) -> TrialMetrics {
+    let app = &env.app;
+    let cfg = &env.cfg;
+    let mut rng = Xoshiro256::seed_from(seed ^ 0x7A5C_0FFE);
+    let mut gen = WorkloadGenerator::new(cfg, app, &env.topo, &mut Xoshiro256::seed_from(env.users_seed));
+
+    // --- static tier -----------------------------------------------------
+    let scores = QosScores::compute(
+        app,
+        &env.topo,
+        &env.dm,
+        gen.users(),
+        &ScoreParams::from_config(&cfg.controller),
+    );
+    let placement = strategy.place_core(env, &scores, &mut rng);
+    let mut core_router = CoreRouter::new(&placement.instances);
+    let residual_static = placement.residual_capacity(app, &env.topo);
+
+    let mut costs = CostBook::new();
+    let core_dp: Vec<f64> = env.core_costs.iter().map(|c| c.0).collect();
+    let core_mt: Vec<f64> = env.core_costs.iter().map(|c| c.1).collect();
+    costs.charge_core_placement(&placement.instances, &core_dp, &core_mt, opts.slots);
+    let light_dp: Vec<f64> = env.light_costs.iter().map(|c| c.0).collect();
+    let light_mt: Vec<f64> = env.light_costs.iter().map(|c| c.1).collect();
+    let light_pl: Vec<f64> = env.light_costs.iter().map(|c| c.2).collect();
+
+    // --- dynamic state ---------------------------------------------------
+    let nv = env.topo.num_nodes();
+    let nl = app.catalog.num_light();
+    let max_y = env.gtable.max_parallelism().max(1);
+    let mut tasks: HashMap<u64, RunTask> = HashMap::new();
+    let mut queues = VirtualQueues::new(cfg.controller.zeta);
+    let mut events: BinaryHeap<Reverse<Event>> = BinaryHeap::new();
+    // Light-stage wait queue: (task, local node).
+    let mut light_queue: Vec<(u64, usize)> = Vec::new();
+    // Active light executions per (v, m) — busy instances derive from it.
+    let mut active_light = vec![vec![0u32; nl]; nv];
+    let mut collector = MetricsCollector::new();
+
+    let light_idx_of: Vec<Option<usize>> = (0..app.catalog.len())
+        .map(|m| app.catalog.light_index(crate::microservice::MsId(m)))
+        .collect();
+
+    let mut finish_task =
+        |id: u64,
+         t: &RunTask,
+         done_ms: Option<f64>,
+         collector: &mut MetricsCollector,
+         queues: &mut VirtualQueues| {
+            collector.record(TaskOutcome {
+                task_id: id,
+                latency_ms: done_ms.map(|d| d - t.arrival_ms),
+                deadline_ms: t.deadline_ms,
+            });
+            queues.remove(id);
+        };
+
+    for slot in 0..opts.slots {
+        let now = slot as f64 * opts.slot_ms;
+        let slot_end = now + opts.slot_ms;
+
+        // 1. Arrivals (none past the cutoff: drain phase).
+        let arrivals = if slot < opts.arrival_cutoff {
+            gen.generate_slot(slot, opts.load_multiplier, &mut rng)
+        } else {
+            Vec::new()
+        };
+        for a in arrivals {
+            let tt = &app.task_types[a.task_type.0];
+            let n = tt.dag.len();
+            tasks.insert(
+                a.id.0,
+                RunTask {
+                    task_type: a.task_type.0,
+                    arrival_ms: now,
+                    deadline_ms: tt.deadline_ms,
+                    uplink_ms: a.uplink_delay_ms,
+                    ed: a.ed,
+                    done: vec![None; n],
+                    node: vec![None; n],
+                    dispatched: vec![false; n],
+                },
+            );
+        }
+
+        // 2. Drain events due before the end of this slot.
+        while let Some(Reverse(ev)) = events.peek() {
+            if ev.time_ms > slot_end {
+                break;
+            }
+            let Reverse(ev) = events.pop().unwrap();
+            if let Some((v, m)) = ev.release {
+                active_light[v][m] = active_light[v][m].saturating_sub(1);
+            }
+            if let Some(t) = tasks.get_mut(&ev.task) {
+                t.done[ev.local] = Some(ev.time_ms);
+            }
+        }
+
+        // 3. Dispatch ready stages: core -> router now; light -> queue.
+        let mut sink_done: Vec<(u64, f64)> = Vec::new();
+        // Sorted ids: HashMap order is randomized and dispatch order feeds
+        // the RNG stream — sorting keeps trials reproducible per seed.
+        let mut task_ids: Vec<u64> = tasks.keys().cloned().collect();
+        task_ids.sort_unstable();
+        for id in &task_ids {
+            let ready_locals: Vec<usize> = {
+                let t = &tasks[id];
+                let tt = &app.task_types[t.task_type];
+                (0..tt.dag.len())
+                    .filter(|&l| t.stage_ready(app, l))
+                    .collect()
+            };
+            for local in ready_locals {
+                let (ms_id, is_core, proc_ms, payloads) = {
+                    let t = &tasks[id];
+                    let tt = &app.task_types[t.task_type];
+                    let ms_id = tt.services[local];
+                    let spec = app.catalog.spec(ms_id);
+                    (
+                        ms_id,
+                        spec.class == MsClass::Core,
+                        spec.mean_proc_delay(),
+                        t.parent_payloads(app, local),
+                    )
+                };
+                if is_core {
+                    let ci = app
+                        .catalog
+                        .core_ids()
+                        .iter()
+                        .position(|&c| c == ms_id)
+                        .expect("core id");
+                    if let Some(asn) =
+                        core_router.route_multi(ci, &payloads, proc_ms, now, &env.dm)
+                    {
+                        let t = tasks.get_mut(id).unwrap();
+                        t.dispatched[local] = true;
+                        t.node[local] = Some(asn.node);
+                        events.push(Reverse(Event {
+                            time_ms: asn.done_ms,
+                            task: *id,
+                            local,
+                            release: None,
+                        }));
+                    }
+                    // No instance (shouldn't happen: C2 guarantees >=1).
+                } else {
+                    let t = tasks.get_mut(id).unwrap();
+                    t.dispatched[local] = true;
+                    light_queue.push((*id, local));
+                }
+            }
+        }
+
+        // 4. Build the controller queue and residual capacity.
+        let busy: Vec<Vec<u32>> = active_light
+            .iter()
+            .map(|row| {
+                row.iter()
+                    .map(|&a| (a as usize).div_ceil(max_y) as u32)
+                    .collect()
+            })
+            .collect();
+        let mut residual = residual_static.clone();
+        for v in 0..nv {
+            for m in 0..nl {
+                for k in 0..NUM_RESOURCES {
+                    residual[v][k] =
+                        (residual[v][k] - env.light_resources[m][k] * busy[v][m] as f64).max(0.0);
+                }
+            }
+        }
+        let requests: Vec<LightRequest> = light_queue
+            .iter()
+            .map(|&(id, local)| {
+                let t = &tasks[&id];
+                let tt = &app.task_types[t.task_type];
+                let ms_id = tt.services[local];
+                let m = light_idx_of[ms_id.0].expect("light idx");
+                let payloads = t.parent_payloads(app, local);
+                // Use the latest-finishing parent as the "from" node.
+                let &(from, _, mb) = payloads
+                    .iter()
+                    .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                    .unwrap();
+                LightRequest {
+                    task_id: id,
+                    light_idx: m,
+                    from_node: from,
+                    payload_mb: mb,
+                    h: queues.value(id),
+                    deadline_slack_ms: t.deadline_ms - (now - t.arrival_ms),
+                }
+            })
+            .collect();
+
+        // 5. Strategy decision + execution of assignments.
+        let decision =
+            strategy.decide_light(env, slot, &requests, &busy, &residual, &mut rng);
+        debug_assert_eq!(decision.assignments.len(), requests.len());
+        let mut still_waiting: Vec<(u64, usize)> = Vec::new();
+        for (qi, &(id, local)) in light_queue.iter().enumerate() {
+            match decision.assignments.get(qi).and_then(|a| *a) {
+                Some(asn) => {
+                    let (arrival, proc) = {
+                        let t = &tasks[&id];
+                        let payloads = t.parent_payloads(app, local);
+                        let arrival = payloads
+                            .iter()
+                            .map(|&(pn, pd, mb)| pd + env.dm.latency(pn, asn.node, mb))
+                            .fold(f64::NEG_INFINITY, f64::max);
+                        let tt = &app.task_types[t.task_type];
+                        let spec = app.catalog.spec(tt.services[local]);
+                        // Realized contended rate: f / y^alpha.
+                        let f = spec.rate.sample(&mut rng)
+                            / (asn.y as f64).powf(cfg.controller.contention_alpha);
+                        (arrival, spec.workload_mb / f.max(1e-9))
+                    };
+                    let start = arrival.max(now);
+                    let done = start + proc;
+                    let t = tasks.get_mut(&id).unwrap();
+                    t.node[local] = Some(asn.node);
+                    active_light[asn.node][asn.light_idx] += 1;
+                    events.push(Reverse(Event {
+                        time_ms: done,
+                        task: id,
+                        local,
+                        release: Some((asn.node, asn.light_idx)),
+                    }));
+                }
+                None => still_waiting.push((id, local)),
+            }
+        }
+        light_queue = still_waiting;
+
+        // 6. Charge light costs for this slot.
+        costs.charge_light_slot(&decision.x, &decision.y, &light_dp, &light_mt, &light_pl);
+
+        // Debug telemetry (FMEDGE_DEBUG=1): queue health every 50 slots.
+        if slot % 50 == 0 && std::env::var_os("FMEDGE_DEBUG").is_some() {
+            let active: u32 = active_light.iter().flat_map(|r| r.iter()).sum();
+            let assigned = decision.assignments.iter().filter(|a| a.is_some()).count();
+            eprintln!(
+                "[slot {slot}] in_flight={} light_queue={} assigned={assigned} active_light={active} added={}",
+                tasks.len(),
+                light_queue.len(),
+                decision.stats.instances_added
+            );
+        }
+
+        // 7. Task completion / dropping / queue updates.
+        let mut ids: Vec<u64> = tasks.keys().cloned().collect();
+        ids.sort_unstable();
+        for id in ids {
+            let t = &tasks[&id];
+            let tt = &app.task_types[t.task_type];
+            let sink = tt.dag.sink().expect("inverse tree sink");
+            if let Some(done) = t.done[sink] {
+                sink_done.push((id, done));
+            } else {
+                let age = slot_end - t.arrival_ms;
+                if age > opts.drop_after_deadlines * t.deadline_ms {
+                    let t = tasks.remove(&id).unwrap();
+                    finish_task(id, &t, None, &mut collector, &mut queues);
+                } else {
+                    queues.update(id, age, t.deadline_ms);
+                }
+            }
+        }
+        for (id, done) in sink_done {
+            let t = tasks.remove(&id).unwrap();
+            finish_task(id, &t, Some(done), &mut collector, &mut queues);
+        }
+        // Dropped/finished tasks may still have queued light stages;
+        // purge them so the controller never sees dangling work.
+        light_queue.retain(|(id, _)| tasks.contains_key(id));
+    }
+
+    // Horizon end: everything in flight is incomplete.
+    for (id, t) in tasks.drain() {
+        finish_task(id, &t, None, &mut collector, &mut queues);
+    }
+    let _ = placement.objective;
+    collector.finish(&costs)
+}

@@ -1,0 +1,140 @@
+//! Slotted discrete-event simulation of the edge network (§IV's testbed).
+//!
+//! Each trial samples a concrete application, topology and user population
+//! from the Table I ranges, lets a [`Strategy`] place core services once
+//! and decide light deployments every slot, executes tasks with realized
+//! random uplink/fading/service-rate draws, and reports the paper's
+//! metrics (on-time completion rate, total cost).
+
+mod engine;
+
+pub use engine::{run_trial, SimEnv, SimOptions};
+
+use crate::controller::{LightDecision, LightRequest};
+use crate::config::NUM_RESOURCES;
+use crate::placement::{CorePlacement, QosScores};
+use crate::rng::Xoshiro256;
+
+/// A deployment strategy under evaluation (the proposal or a baseline).
+pub trait Strategy {
+    /// Display name for reports.
+    fn name(&self) -> &str;
+
+    /// Static tier: place core microservices for the whole horizon.
+    fn place_core(
+        &mut self,
+        env: &SimEnv,
+        scores: &QosScores,
+        rng: &mut Xoshiro256,
+    ) -> CorePlacement;
+
+    /// Dynamic tier: decide light instances/parallelism/routing for one
+    /// slot. `busy` carries instances still processing; `residual` is the
+    /// per-node capacity left for new instances.
+    #[allow(clippy::too_many_arguments)]
+    fn decide_light(
+        &mut self,
+        env: &SimEnv,
+        slot: usize,
+        queue: &[LightRequest],
+        busy: &[Vec<u32>],
+        residual: &[[f64; NUM_RESOURCES]],
+        rng: &mut Xoshiro256,
+    ) -> LightDecision;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::{GaStrategy, LbrrStrategy, Proposal, PropAvg};
+    use crate::config::ExperimentConfig;
+
+    fn small_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::paper_default();
+        cfg.sim.slots = 60;
+        cfg.workload.num_users = 8;
+        cfg.controller.effcap_samples = 512;
+        cfg
+    }
+
+    #[test]
+    fn proposal_trial_completes_tasks() {
+        let cfg = small_cfg();
+        let env = SimEnv::build(&cfg, 11);
+        let mut strat = Proposal::new();
+        let m = run_trial(&env, &mut strat, 11, &SimOptions::from_config(&cfg));
+        assert!(m.total_tasks > 0, "workload must generate tasks");
+        assert!(
+            m.completion_rate() > 0.5,
+            "proposal should complete most tasks, got {}",
+            m.completion_rate()
+        );
+        assert!(m.total_cost > 0.0);
+        assert!(m.core_cost > 0.0);
+    }
+
+    #[test]
+    fn same_seed_is_deterministic() {
+        let cfg = small_cfg();
+        let env = SimEnv::build(&cfg, 5);
+        let opts = SimOptions::from_config(&cfg);
+        let m1 = run_trial(&env, &mut Proposal::new(), 5, &opts);
+        let m2 = run_trial(&env, &mut Proposal::new(), 5, &opts);
+        assert_eq!(m1.total_tasks, m2.total_tasks);
+        assert_eq!(m1.completed, m2.completed);
+        assert_eq!(m1.on_time, m2.on_time);
+        assert!((m1.total_cost - m2.total_cost).abs() < 1e-9);
+    }
+
+    #[test]
+    fn all_strategies_run_without_panic() {
+        let cfg = small_cfg();
+        let env = SimEnv::build(&cfg, 7);
+        let opts = SimOptions::from_config(&cfg);
+        let strategies: Vec<Box<dyn Strategy>> = vec![
+            Box::new(Proposal::new()),
+            Box::new(PropAvg::new()),
+            Box::new(LbrrStrategy::new()),
+            Box::new(GaStrategy::new(12, 8)),
+        ];
+        for mut s in strategies {
+            let m = run_trial(&env, s.as_mut(), 7, &opts);
+            assert!(m.total_tasks > 0, "{}: no tasks", s.name());
+        }
+    }
+
+    #[test]
+    fn higher_load_does_not_improve_on_time_rate() {
+        let cfg = small_cfg();
+        let env = SimEnv::build(&cfg, 13);
+        let mut o1 = SimOptions::from_config(&cfg);
+        o1.load_multiplier = 1.0;
+        let mut o2 = o1.clone();
+        o2.load_multiplier = 3.0;
+        let m1 = run_trial(&env, &mut Proposal::new(), 13, &o1);
+        let m2 = run_trial(&env, &mut Proposal::new(), 13, &o2);
+        assert!(m2.total_tasks > m1.total_tasks);
+        assert!(
+            m2.on_time_rate() <= m1.on_time_rate() + 0.1,
+            "3x load should not look better: {} vs {}",
+            m2.on_time_rate(),
+            m1.on_time_rate()
+        );
+    }
+
+    #[test]
+    fn latencies_are_positive_and_bounded() {
+        let cfg = small_cfg();
+        let env = SimEnv::build(&cfg, 17);
+        let m = run_trial(
+            &env,
+            &mut Proposal::new(),
+            17,
+            &SimOptions::from_config(&cfg),
+        );
+        for &l in &m.latencies_ms {
+            assert!(l > 0.0);
+            assert!(l.is_finite());
+        }
+    }
+}

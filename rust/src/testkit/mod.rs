@@ -1,0 +1,289 @@
+//! Minimal property-based testing framework (proptest is unavailable
+//! offline). Provides composable generators over the crate's deterministic
+//! RNG, a runner that reports the failing case, and greedy shrinking for
+//! integers and vectors.
+//!
+//! Usage (`no_run`: doctest binaries don't inherit the libxla rpath):
+//! ```no_run
+//! use fmedge::testkit::{self, Gen};
+//! testkit::check(100, testkit::vec_of(testkit::u64_up_to(50), 0..20), |xs| {
+//!     let mut s = xs.clone();
+//!     s.sort_unstable();
+//!     s.windows(2).all(|w| w[0] <= w[1])
+//! });
+//! ```
+
+use crate::rng::{Rng, Xoshiro256};
+
+/// A value generator with an attached shrinker.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+
+    /// Produce a random value.
+    fn generate<R: Rng + ?Sized>(&self, rng: &mut R) -> Self::Value;
+
+    /// Candidate smaller values (tried in order during shrinking).
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let _ = v;
+        Vec::new()
+    }
+}
+
+/// Run `cases` random cases of `prop` over `gen`; panic with the smallest
+/// failing input found by greedy shrinking.
+pub fn check<G, F>(cases: usize, gen: G, prop: F)
+where
+    G: Gen,
+    F: Fn(&G::Value) -> bool,
+{
+    check_seeded(0xF00D_CAFE, cases, gen, prop)
+}
+
+/// `check` with an explicit seed (tests that want distinct streams).
+pub fn check_seeded<G, F>(seed: u64, cases: usize, gen: G, prop: F)
+where
+    G: Gen,
+    F: Fn(&G::Value) -> bool,
+{
+    let mut rng = Xoshiro256::seed_from(seed);
+    for case in 0..cases {
+        let v = gen.generate(&mut rng);
+        if !prop(&v) {
+            let minimal = shrink_to_minimal(&gen, v, &prop);
+            panic!(
+                "property falsified at case {case}/{cases}; minimal counterexample: {minimal:?}"
+            );
+        }
+    }
+}
+
+fn shrink_to_minimal<G, F>(gen: &G, mut failing: G::Value, prop: &F) -> G::Value
+where
+    G: Gen,
+    F: Fn(&G::Value) -> bool,
+{
+    // Greedy descent, bounded to avoid pathological loops.
+    for _ in 0..10_000 {
+        let mut improved = false;
+        for cand in gen.shrink(&failing) {
+            if !prop(&cand) {
+                failing = cand;
+                improved = true;
+                break;
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    failing
+}
+
+// ---------------------------------------------------------------- generators
+
+/// Uniform u64 in `[0, max]`, shrinking toward 0.
+pub fn u64_up_to(max: u64) -> U64UpTo {
+    U64UpTo { max }
+}
+
+#[derive(Clone, Copy)]
+pub struct U64UpTo {
+    max: u64,
+}
+
+impl Gen for U64UpTo {
+    type Value = u64;
+    fn generate<R: Rng + ?Sized>(&self, rng: &mut R) -> u64 {
+        if self.max == u64::MAX {
+            rng.next_u64()
+        } else {
+            rng.next_below(self.max + 1)
+        }
+    }
+    fn shrink(&self, v: &u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        if *v > 0 {
+            out.push(0);
+            out.push(v / 2);
+            out.push(v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// usize in `[lo, hi]`, shrinking toward `lo`.
+pub fn usize_in(lo: usize, hi: usize) -> UsizeIn {
+    UsizeIn { lo, hi }
+}
+
+#[derive(Clone, Copy)]
+pub struct UsizeIn {
+    lo: usize,
+    hi: usize,
+}
+
+impl Gen for UsizeIn {
+    type Value = usize;
+    fn generate<R: Rng + ?Sized>(&self, rng: &mut R) -> usize {
+        rng.range_usize(self.lo, self.hi)
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (v - self.lo) / 2);
+            out.push(v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// f64 in `[lo, hi)`, shrinking toward `lo`.
+pub fn f64_in(lo: f64, hi: f64) -> F64In {
+    F64In { lo, hi }
+}
+
+#[derive(Clone, Copy)]
+pub struct F64In {
+    lo: f64,
+    hi: f64,
+}
+
+impl Gen for F64In {
+    type Value = f64;
+    fn generate<R: Rng + ?Sized>(&self, rng: &mut R) -> f64 {
+        rng.range_f64(self.lo, self.hi)
+    }
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (v - self.lo) / 2.0);
+        }
+        out
+    }
+}
+
+/// Vector of `inner` with length drawn from `len_range`, shrinking by
+/// removing elements then shrinking elements.
+pub fn vec_of<G: Gen>(inner: G, len_range: std::ops::Range<usize>) -> VecOf<G> {
+    VecOf { inner, len_range }
+}
+
+pub struct VecOf<G: Gen> {
+    inner: G,
+    len_range: std::ops::Range<usize>,
+}
+
+impl<G: Gen> Gen for VecOf<G> {
+    type Value = Vec<G::Value>;
+    fn generate<R: Rng + ?Sized>(&self, rng: &mut R) -> Vec<G::Value> {
+        let lo = self.len_range.start;
+        let hi = self.len_range.end.max(lo + 1) - 1;
+        let n = rng.range_usize(lo, hi);
+        (0..n).map(|_| self.inner.generate(rng)).collect()
+    }
+    fn shrink(&self, v: &Vec<G::Value>) -> Vec<Vec<G::Value>> {
+        let mut out = Vec::new();
+        let min_len = self.len_range.start;
+        // Remove halves, then single elements.
+        if v.len() > min_len {
+            let half = (v.len() + min_len) / 2;
+            out.push(v[..half.max(min_len)].to_vec());
+            for i in 0..v.len() {
+                if v.len() - 1 >= min_len {
+                    let mut c = v.clone();
+                    c.remove(i);
+                    out.push(c);
+                }
+            }
+        }
+        // Shrink each element in place.
+        for (i, elem) in v.iter().enumerate() {
+            for smaller in self.inner.shrink(elem) {
+                let mut c = v.clone();
+                c[i] = smaller;
+                out.push(c);
+            }
+        }
+        out
+    }
+}
+
+/// Pair generator.
+pub fn pair_of<A: Gen, B: Gen>(a: A, b: B) -> PairOf<A, B> {
+    PairOf { a, b }
+}
+
+pub struct PairOf<A: Gen, B: Gen> {
+    a: A,
+    b: B,
+}
+
+impl<A: Gen, B: Gen> Gen for PairOf<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate<R: Rng + ?Sized>(&self, rng: &mut R) -> Self::Value {
+        (self.a.generate(rng), self.b.generate(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .a
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.b.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check(200, u64_up_to(1000), |&v| v <= 1000);
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn failing_property_panics_with_counterexample() {
+        check(200, u64_up_to(1000), |&v| v < 500);
+    }
+
+    #[test]
+    fn shrinking_finds_small_counterexample() {
+        // Catch the panic and verify the shrunk value is the boundary.
+        let result = std::panic::catch_unwind(|| {
+            check(500, u64_up_to(100_000), |&v| v < 777);
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("777"), "expected shrink to 777, got: {msg}");
+    }
+
+    #[test]
+    fn vec_shrinking_reduces_length() {
+        let result = std::panic::catch_unwind(|| {
+            check(300, vec_of(u64_up_to(10), 0..30), |xs| xs.len() < 5);
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // Minimal failing vector has exactly 5 elements.
+        let count = msg.matches(',').count() + 1;
+        assert!(count <= 6, "shrunk vec should be near-minimal: {msg}");
+    }
+
+    #[test]
+    fn pair_generator_shrinks_both_sides() {
+        let result = std::panic::catch_unwind(|| {
+            check(
+                300,
+                pair_of(u64_up_to(100), u64_up_to(100)),
+                |&(a, b)| a + b < 50,
+            );
+        });
+        assert!(result.is_err());
+    }
+}

@@ -1,0 +1,120 @@
+//! Poisson task generation over the user population.
+
+use crate::config::ExperimentConfig;
+use crate::microservice::{Application, TaskTypeId};
+use crate::network::{NodeId, Topology, WirelessChannel};
+use crate::rng::{Poisson, Rng};
+
+use super::TaskId;
+
+/// A user: attachment ED, per-type arrival rates, and channel state.
+#[derive(Clone, Debug)]
+pub struct User {
+    pub id: usize,
+    /// Associated edge device (ingress node).
+    pub ed: NodeId,
+    /// Mean arrivals per slot for each task type (`E[z_{u,n,t}]`).
+    pub rates: Vec<f64>,
+    pub channel: WirelessChannel,
+}
+
+/// One realized task arrival `j = (u, n, t)`.
+#[derive(Clone, Debug)]
+pub struct TaskArrival {
+    pub id: TaskId,
+    pub user: usize,
+    /// Ingress edge device of the user.
+    pub ed: NodeId,
+    pub task_type: TaskTypeId,
+    /// Arrival slot `t`.
+    pub slot: usize,
+    /// Realized uplink SNR `γ_u` at arrival.
+    pub snr: f64,
+    /// Realized uplink delay `τ_ul` (ms) — eq. (1).
+    pub uplink_delay_ms: f64,
+}
+
+/// Stateful generator: draws `z_{u,n,t}` per slot and stamps each arrival
+/// with its realized channel state.
+#[derive(Clone, Debug)]
+pub struct WorkloadGenerator {
+    users: Vec<User>,
+    input_mb: Vec<f64>,
+    next_id: u64,
+}
+
+impl WorkloadGenerator {
+    /// Sample the user population: users attach to EDs round-robin (uniform
+    /// coverage) and draw per-type Poisson rates from the config range.
+    pub fn new<R: Rng + ?Sized>(
+        cfg: &ExperimentConfig,
+        app: &Application,
+        topo: &Topology,
+        rng: &mut R,
+    ) -> Self {
+        let eds: Vec<NodeId> = topo.eds().collect();
+        assert!(!eds.is_empty(), "topology has no edge devices");
+        let users = (0..cfg.workload.num_users)
+            .map(|id| User {
+                id,
+                ed: eds[id % eds.len()],
+                rates: (0..cfg.app.num_task_types)
+                    .map(|_| cfg.workload.arrival_rate.sample(rng))
+                    .collect(),
+                channel: WirelessChannel::sample(&cfg.workload, rng),
+            })
+            .collect();
+        let input_mb = app.task_types.iter().map(|tt| tt.input_mb).collect();
+        WorkloadGenerator {
+            users,
+            input_mb,
+            next_id: 0,
+        }
+    }
+
+    pub fn users(&self) -> &[User] {
+        &self.users
+    }
+
+    /// Draw all arrivals for slot `t` at the given load multiplier
+    /// (Fig. 4's ×1.0/×1.5/×2.0 escalation scales the Poisson means).
+    pub fn generate_slot<R: Rng + ?Sized>(
+        &mut self,
+        slot: usize,
+        load_multiplier: f64,
+        rng: &mut R,
+    ) -> Vec<TaskArrival> {
+        let mut out = Vec::new();
+        for u in &self.users {
+            for (n, &rate) in u.rates.iter().enumerate() {
+                let count = Poisson::new(rate * load_multiplier).sample_count(rng);
+                for _ in 0..count {
+                    let snr = u.channel.sample_snr(rng);
+                    let input = self.input_mb[n];
+                    out.push(TaskArrival {
+                        id: TaskId(self.next_id),
+                        user: u.id,
+                        ed: u.ed,
+                        task_type: TaskTypeId(n),
+                        slot,
+                        snr,
+                        uplink_delay_ms: u.channel.uplink_delay(input, snr),
+                    });
+                    self.next_id += 1;
+                }
+            }
+        }
+        out
+    }
+
+    /// Expected aggregate arrivals per slot (all users, all types) at the
+    /// base load — used by the static placement's capacity constraint C2.
+    pub fn mean_total_rate(&self) -> f64 {
+        self.users.iter().map(|u| u.rates.iter().sum::<f64>()).sum()
+    }
+
+    /// Mean arrival rate of (user, type) — `E[z_{u,n,t}]` in eq. (15).
+    pub fn mean_rate(&self, user: usize, task_type: TaskTypeId) -> f64 {
+        self.users[user].rates[task_type.0]
+    }
+}

@@ -1,0 +1,149 @@
+//! Workload model (§II-B): users stochastically generate tasks of each
+//! type (`z_{t,u,n} ~ Poisson`), transmitted over fading uplinks to their
+//! associated edge device. Includes trace recording/replay so every
+//! strategy in a comparison sees the *same* realized workload.
+
+mod generator;
+mod trace;
+
+pub use generator::{TaskArrival, User, WorkloadGenerator};
+pub use trace::Trace;
+
+/// Globally unique task instance id.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskId(pub u64);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::microservice::build_fig1_application;
+    use crate::network::Topology;
+    use crate::rng::Xoshiro256;
+
+    fn setup(seed: u64) -> (ExperimentConfig, WorkloadGenerator) {
+        let cfg = ExperimentConfig::paper_default();
+        let mut rng = Xoshiro256::seed_from(seed);
+        let app = build_fig1_application(&cfg, &mut rng);
+        let topo = Topology::generate(&cfg, &mut rng);
+        let gen = WorkloadGenerator::new(&cfg, &app, &topo, &mut rng);
+        (cfg, gen)
+    }
+
+    #[test]
+    fn users_are_attached_to_eds() {
+        let (cfg, gen) = setup(1);
+        assert_eq!(gen.users().len(), cfg.workload.num_users);
+        for u in gen.users() {
+            assert!(u.ed < cfg.network.num_eds, "user attached to non-ED node");
+        }
+    }
+
+    #[test]
+    fn arrival_counts_scale_with_multiplier() {
+        let (_, mut g1) = setup(2);
+        let (_, mut g2) = setup(2);
+        let mut rng1 = Xoshiro256::seed_from(10);
+        let mut rng2 = Xoshiro256::seed_from(10);
+        let n1: usize = (0..200).map(|t| g1.generate_slot(t, 1.0, &mut rng1).len()).sum();
+        let n2: usize = (0..200).map(|t| g2.generate_slot(t, 2.0, &mut rng2).len()).sum();
+        assert!(
+            n2 as f64 > 1.5 * n1 as f64,
+            "2x load should produce ~2x arrivals ({n1} vs {n2})"
+        );
+    }
+
+    #[test]
+    fn task_ids_are_unique_and_monotone() {
+        let (_, mut gen) = setup(3);
+        let mut rng = Xoshiro256::seed_from(11);
+        let mut last = None;
+        for t in 0..50 {
+            for a in gen.generate_slot(t, 1.0, &mut rng) {
+                if let Some(prev) = last {
+                    assert!(a.id.0 > prev);
+                }
+                last = Some(a.id.0);
+                assert_eq!(a.slot, t);
+            }
+        }
+    }
+
+    #[test]
+    fn arrivals_have_valid_uplink_snr() {
+        let (_, mut gen) = setup(4);
+        let mut rng = Xoshiro256::seed_from(12);
+        for t in 0..100 {
+            for a in gen.generate_slot(t, 1.0, &mut rng) {
+                assert!(a.snr > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn mean_arrival_rate_matches_config() {
+        let (cfg, mut gen) = setup(5);
+        let mut rng = Xoshiro256::seed_from(13);
+        let slots = 3000;
+        let total: usize = (0..slots)
+            .map(|t| gen.generate_slot(t, 1.0, &mut rng).len())
+            .sum();
+        let per_slot = total as f64 / slots as f64;
+        // Expectation: num_users * num_types * mean(arrival_rate).
+        let expected = cfg.workload.num_users as f64
+            * cfg.app.num_task_types as f64
+            * cfg.workload.arrival_rate.mid();
+        // Per-run rates are sampled from the range; wide tolerance.
+        assert!(
+            per_slot > 0.3 * expected && per_slot < 3.0 * expected,
+            "per_slot={per_slot} expected≈{expected}"
+        );
+    }
+
+    #[test]
+    fn trace_roundtrip() {
+        let (_, mut gen) = setup(6);
+        let mut rng = Xoshiro256::seed_from(14);
+        let mut arrivals = Vec::new();
+        for t in 0..20 {
+            arrivals.extend(gen.generate_slot(t, 1.0, &mut rng));
+        }
+        let trace = Trace::from_arrivals(arrivals.clone());
+        let text = trace.to_text();
+        let back = Trace::from_text(&text).unwrap();
+        assert_eq!(back.arrivals().len(), arrivals.len());
+        for (a, b) in arrivals.iter().zip(back.arrivals()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.user, b.user);
+            assert_eq!(a.task_type.0, b.task_type.0);
+            assert_eq!(a.slot, b.slot);
+            assert!((a.snr - b.snr).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn trace_slot_view() {
+        let (_, mut gen) = setup(7);
+        let mut rng = Xoshiro256::seed_from(15);
+        let mut arrivals = Vec::new();
+        for t in 0..10 {
+            arrivals.extend(gen.generate_slot(t, 1.0, &mut rng));
+        }
+        let trace = Trace::from_arrivals(arrivals.clone());
+        let mut seen = 0;
+        for t in 0..10 {
+            for a in trace.slot(t) {
+                assert_eq!(a.slot, t);
+                seen += 1;
+            }
+        }
+        assert_eq!(seen, arrivals.len());
+        assert!(trace.slot(9999).is_empty());
+    }
+
+    #[test]
+    fn malformed_trace_rejected() {
+        assert!(Trace::from_text("not a trace").is_err());
+        assert!(Trace::from_text("task 1 2").is_err());
+    }
+}

@@ -1,0 +1,128 @@
+//! Plain-text task traces: record a realized workload once, replay it
+//! against every deployment strategy for paired comparisons (Fig. 3/4).
+
+use crate::microservice::TaskTypeId;
+
+use super::generator::TaskArrival;
+use super::TaskId;
+
+/// A recorded sequence of task arrivals, slot-indexed.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    arrivals: Vec<TaskArrival>,
+    /// arrivals index ranges per slot (dense).
+    slot_index: Vec<(usize, usize)>,
+}
+
+impl Trace {
+    /// Build from arrivals (must be sorted by slot — generator output is).
+    pub fn from_arrivals(arrivals: Vec<TaskArrival>) -> Self {
+        let max_slot = arrivals.iter().map(|a| a.slot).max().map_or(0, |s| s + 1);
+        let mut slot_index = vec![(0usize, 0usize); max_slot];
+        let mut i = 0;
+        for s in 0..max_slot {
+            let start = i;
+            while i < arrivals.len() && arrivals[i].slot == s {
+                i += 1;
+            }
+            slot_index[s] = (start, i);
+        }
+        debug_assert_eq!(i, arrivals.len(), "arrivals must be sorted by slot");
+        Trace {
+            arrivals,
+            slot_index,
+        }
+    }
+
+    pub fn arrivals(&self) -> &[TaskArrival] {
+        &self.arrivals
+    }
+
+    pub fn len(&self) -> usize {
+        self.arrivals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arrivals.is_empty()
+    }
+
+    pub fn num_slots(&self) -> usize {
+        self.slot_index.len()
+    }
+
+    /// Arrivals of one slot.
+    pub fn slot(&self, t: usize) -> &[TaskArrival] {
+        match self.slot_index.get(t) {
+            Some(&(a, b)) => &self.arrivals[a..b],
+            None => &[],
+        }
+    }
+
+    /// Serialize to a line-oriented text format:
+    /// `task <id> <user> <ed> <type> <slot> <snr> <uplink_ms>`.
+    pub fn to_text(&self) -> String {
+        let mut s = String::with_capacity(self.arrivals.len() * 48 + 16);
+        s.push_str("# fmedge trace v1\n");
+        for a in &self.arrivals {
+            s.push_str(&format!(
+                "task {} {} {} {} {} {:.9} {:.9}\n",
+                a.id.0, a.user, a.ed, a.task_type.0, a.slot, a.snr, a.uplink_delay_ms
+            ));
+        }
+        s
+    }
+
+    /// Parse the text format produced by [`Self::to_text`].
+    pub fn from_text(text: &str) -> Result<Self, String> {
+        let mut arrivals = Vec::new();
+        let mut saw_header = false;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('#') {
+                if line.contains("fmedge trace") {
+                    saw_header = true;
+                }
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 8 || parts[0] != "task" {
+                return Err(format!("line {}: malformed record", lineno + 1));
+            }
+            let parse_u = |s: &str, what: &str| -> Result<u64, String> {
+                s.parse()
+                    .map_err(|_| format!("line {}: bad {what}", lineno + 1))
+            };
+            let parse_f = |s: &str, what: &str| -> Result<f64, String> {
+                s.parse()
+                    .map_err(|_| format!("line {}: bad {what}", lineno + 1))
+            };
+            arrivals.push(TaskArrival {
+                id: TaskId(parse_u(parts[1], "id")?),
+                user: parse_u(parts[2], "user")? as usize,
+                ed: parse_u(parts[3], "ed")? as usize,
+                task_type: TaskTypeId(parse_u(parts[4], "type")? as usize),
+                slot: parse_u(parts[5], "slot")? as usize,
+                snr: parse_f(parts[6], "snr")?,
+                uplink_delay_ms: parse_f(parts[7], "uplink")?,
+            });
+        }
+        if !saw_header {
+            return Err("missing trace header".to_string());
+        }
+        Ok(Trace::from_arrivals(arrivals))
+    }
+
+    /// Write to a file.
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_text())
+    }
+
+    /// Read from a file.
+    pub fn load(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        Self::from_text(&text)
+    }
+}

@@ -1,0 +1,201 @@
+//! Cross-layer integration tests: the PJRT-compiled artifacts must agree
+//! with the native Rust implementations, and the full pipeline (placement
+//! → controller → simulation) must hold its invariants end-to-end.
+//!
+//! Requires `make artifacts` (the tests skip with a message otherwise —
+//! CI runs them after the artifact step).
+
+use fmedge::baselines::{LbrrStrategy, PropAvg, Proposal};
+use fmedge::config::ExperimentConfig;
+use fmedge::effcap::{GTable, GTableParams};
+use fmedge::placement::{build_rows, QosScores, ScoreParams};
+use fmedge::rng::{Distribution, Gamma, Xoshiro256};
+use fmedge::runtime::{shapes, EffCapAccel, MsBlockAccel, QosAccel, Runtime};
+use fmedge::sim::{run_trial, SimEnv, SimOptions};
+use fmedge::workload::WorkloadGenerator;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Runtime::default_dir();
+    if !dir.join("effcap.hlo.txt").exists() {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::cpu(dir).expect("PJRT CPU client"))
+}
+
+#[test]
+fn pjrt_effcap_matches_native_gtable() {
+    let Some(rt) = runtime() else { return };
+    let accel = EffCapAccel::load(&rt).expect("load effcap artifact");
+
+    let mut rng = Xoshiro256::seed_from(42);
+    let mut samples = Vec::new();
+    let mut workloads = Vec::new();
+    for i in 0..9 {
+        let g = Gamma::new(1.0 + 0.1 * i as f64, 5.0 + i as f64);
+        samples.push(g.sample_n(&mut rng, shapes::EFFCAP_S));
+        workloads.push(0.5 + 0.15 * i as f64);
+    }
+
+    // Native table with the artifact's exact parameters.
+    let params = GTableParams {
+        epsilon: shapes::EFFCAP_EPSILON,
+        max_parallelism: shapes::EFFCAP_Y,
+        theta_lo: 1e-3,
+        theta_hi: 10.0,
+        theta_n: shapes::EFFCAP_T,
+        contention_alpha: shapes::EFFCAP_ALPHA,
+    };
+    let native = GTable::build(&samples, &workloads, &params);
+    let accel_table = accel
+        .build_gtable(&samples, &workloads)
+        .expect("accel gtable");
+
+    assert_eq!(native.num_ms(), accel_table.num_ms());
+    for m in 0..native.num_ms() {
+        for y in 1..=shapes::EFFCAP_Y {
+            let a = native.delay(m, y);
+            let b = accel_table.delay(m, y);
+            assert!(
+                (a - b).abs() / a.max(1e-9) < 2e-3,
+                "g[{m}][{y}]: native {a} vs PJRT {b}"
+            );
+            let am = native.mean_delay(m, y);
+            let bm = accel_table.mean_delay(m, y);
+            assert!(
+                (am - bm).abs() / am.max(1e-9) < 2e-3,
+                "gmean[{m}][{y}]: native {am} vs PJRT {bm}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_qos_matches_native_scores() {
+    let Some(rt) = runtime() else { return };
+    let accel = QosAccel::load(&rt).expect("load qos artifact");
+
+    let cfg = ExperimentConfig::paper_default();
+    let env = SimEnv::build(&cfg, 5);
+    let gen = WorkloadGenerator::new(
+        &cfg,
+        &env.app,
+        &env.topo,
+        &mut Xoshiro256::seed_from(env.users_seed),
+    );
+    // The artifact bakes delta/lo/hi; use matching native params.
+    let params = ScoreParams {
+        delta: shapes::QOS_DELTA,
+        urgency_cap: shapes::QOS_HI,
+        uplink_samples: 512,
+    };
+    let rows = build_rows(&env.app, &env.topo, &env.dm, gen.users(), &params);
+    assert!(rows.len() <= shapes::QOS_R, "row budget: {}", rows.len());
+    let native = QosScores::compute_from_rows(
+        &rows,
+        env.topo.num_nodes(),
+        env.app.catalog.num_core(),
+        &params,
+    );
+    let pjrt = accel
+        .scores(&rows, env.topo.num_nodes(), env.app.catalog.num_core())
+        .expect("accel scores");
+    for v in 0..env.topo.num_nodes() {
+        for c in 0..env.app.catalog.num_core() {
+            let (a, b) = (native.z_tilde[v][c], pjrt.z_tilde[v][c]);
+            assert!(
+                (a - b).abs() < 1e-3 + 1e-3 * a.abs(),
+                "z~[{v}][{c}]: {a} vs {b}"
+            );
+            let (a, b) = (native.q[v][c], pjrt.q[v][c]);
+            assert!(
+                (a - b).abs() < 5e-3 + 2e-3 * a.abs(),
+                "Q[{v}][{c}]: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_msblock_is_deterministic_and_nontrivial() {
+    let Some(rt) = runtime() else { return };
+    let accel = MsBlockAccel::load(&rt).expect("load msblock artifact");
+    let n = shapes::MSBLOCK_B * shapes::MSBLOCK_L * shapes::MSBLOCK_D;
+    let x: Vec<f32> = (0..n).map(|i| ((i % 17) as f32 - 8.0) * 0.1).collect();
+    let y1 = accel.forward(&x).expect("forward");
+    let y2 = accel.forward(&x).expect("forward");
+    assert_eq!(y1, y2, "PJRT execution must be deterministic");
+    assert_eq!(y1.len(), n);
+    let diff: f32 = x.iter().zip(&y1).map(|(a, b)| (a - b).abs()).sum();
+    assert!(diff > 1.0, "block must transform its input");
+    assert!(y1.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn pjrt_gtable_drives_a_full_trial() {
+    let Some(rt) = runtime() else { return };
+    let accel = EffCapAccel::load(&rt).expect("load effcap artifact");
+    let mut cfg = ExperimentConfig::paper_default();
+    cfg.sim.slots = 120;
+    cfg.workload.num_users = 6;
+    cfg.controller.effcap_samples = 1024;
+    let env = SimEnv::build(&cfg, 9);
+    let workloads: Vec<f64> = env
+        .app
+        .catalog
+        .light_ids()
+        .iter()
+        .map(|&m| env.app.catalog.spec(m).workload_mb)
+        .collect();
+    let gtable = accel
+        .build_gtable(&env.light_rate_samples, &workloads)
+        .expect("accel gtable");
+    let env = env.with_gtable(gtable);
+    let m = run_trial(&env, &mut Proposal::new(), 9, &SimOptions::from_config(&cfg));
+    assert!(m.total_tasks > 0);
+    assert!(
+        m.completion_rate() > 0.5,
+        "PJRT-driven trial should complete tasks ({})",
+        m.completion_rate()
+    );
+}
+
+#[test]
+fn proposal_beats_baselines_under_stress() {
+    // The paper's headline ordering under load (Fig. 4 shape), one seed.
+    let mut cfg = ExperimentConfig::paper_default();
+    cfg.sim.slots = 300;
+    let mut opts = SimOptions::from_config(&cfg);
+    opts.load_multiplier = 1.5;
+    let mut otr = |s: &mut dyn fmedge::sim::Strategy| {
+        let env = SimEnv::build(&cfg, 33);
+        run_trial(&env, s, 33, &opts).on_time_rate()
+    };
+    let prop = otr(&mut Proposal::new());
+    let lbrr = otr(&mut LbrrStrategy::new());
+    assert!(
+        prop > lbrr,
+        "proposal ({prop:.3}) must beat LBRR ({lbrr:.3}) under stress"
+    );
+}
+
+#[test]
+fn propavg_is_cheaper_but_not_better_on_time() {
+    let mut cfg = ExperimentConfig::paper_default();
+    cfg.sim.slots = 300;
+    let mut opts = SimOptions::from_config(&cfg);
+    opts.load_multiplier = 1.5;
+    let mut run = |s: &mut dyn fmedge::sim::Strategy| {
+        let env = SimEnv::build(&cfg, 44);
+        run_trial(&env, s, 44, &opts)
+    };
+    let prop = run(&mut Proposal::new());
+    let avg = run(&mut PropAvg::new());
+    // Mean-value ablation under-provisions: never pays more.
+    assert!(
+        avg.total_cost <= prop.total_cost * 1.05,
+        "PropAvg ({}) should not cost much more than the proposal ({})",
+        avg.total_cost,
+        prop.total_cost
+    );
+}

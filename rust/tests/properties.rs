@@ -1,0 +1,345 @@
+//! Property-based tests over the coordinator-facing invariants, using the
+//! in-tree `testkit` (proptest substitute): routing, batching, deployment
+//! and state management must hold for arbitrary generated inputs.
+
+use fmedge::config::{ExperimentConfig, NUM_RESOURCES};
+use fmedge::controller::{greedy_light_deployment, LightRequest, OnlineParams, VirtualQueues};
+use fmedge::effcap::{EffCapEstimator, GTable, GTableParams};
+use fmedge::graph::Dag;
+use fmedge::lp::{LinProg, LpStatus, Relation};
+use fmedge::metrics::{kde_violin, quantile, Summary};
+use fmedge::rng::{Distribution, Gamma, Rng, Xoshiro256};
+use fmedge::routing::DistanceMatrix;
+use fmedge::testkit::{self, Gen};
+
+// --------------------------------------------------------------- helpers --
+
+struct Fixture {
+    dm: DistanceMatrix,
+    gtable: GTable,
+    resources: Vec<[f64; NUM_RESOURCES]>,
+    costs: Vec<(f64, f64, f64)>,
+    nv: usize,
+}
+
+fn fixture() -> Fixture {
+    let cfg = ExperimentConfig::paper_default();
+    let mut rng = Xoshiro256::seed_from(1234);
+    let topo = fmedge::network::Topology::generate(&cfg, &mut rng);
+    let dm = DistanceMatrix::build(&topo, 1.0);
+    let nl = 5;
+    let mut samples = Vec::new();
+    let mut workloads = Vec::new();
+    for i in 0..nl {
+        let g = Gamma::new(1.2 + 0.2 * i as f64, 4.0 + 2.0 * i as f64);
+        samples.push(g.sample_n(&mut rng, 1024));
+        workloads.push(0.5 + 0.3 * i as f64);
+    }
+    let gtable = GTable::build(&samples, &workloads, &GTableParams::default_paper());
+    Fixture {
+        nv: topo.num_nodes(),
+        dm,
+        gtable,
+        resources: vec![[1.0, 0.2, 0.5, 0.1]; nl],
+        costs: vec![(4.0, 1.0, 0.5); nl],
+    }
+}
+
+/// Generator for a queue of light requests.
+struct QueueGen {
+    nv: usize,
+    nl: usize,
+}
+
+impl Gen for QueueGen {
+    type Value = Vec<(usize, usize, f64, f64)>; // (light_idx, node, payload, h)
+    fn generate<R: Rng + ?Sized>(&self, rng: &mut R) -> Self::Value {
+        let n = rng.range_usize(0, 40);
+        (0..n)
+            .map(|_| {
+                (
+                    rng.next_below(self.nl as u64) as usize,
+                    rng.next_below(self.nv as u64) as usize,
+                    rng.range_f64(0.1, 2.0),
+                    rng.range_f64(0.5, 50.0),
+                )
+            })
+            .collect()
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        if !v.is_empty() {
+            out.push(v[..v.len() / 2].to_vec());
+            let mut c = v.clone();
+            c.pop();
+            out.push(c);
+        }
+        out
+    }
+}
+
+fn to_requests(raw: &[(usize, usize, f64, f64)]) -> Vec<LightRequest> {
+    raw.iter()
+        .enumerate()
+        .map(|(i, &(m, v, mb, h))| LightRequest {
+            task_id: i as u64,
+            light_idx: m,
+            from_node: v,
+            payload_mb: mb,
+            h,
+            deadline_slack_ms: 50.0,
+        })
+        .collect()
+}
+
+// ------------------------------------------------------------ controller --
+
+#[test]
+fn prop_deployment_never_exceeds_capacity() {
+    let fx = fixture();
+    let gen = QueueGen { nv: fx.nv, nl: 5 };
+    testkit::check(60, gen, |raw| {
+        let queue = to_requests(raw);
+        let busy = vec![vec![0u32; 5]; fx.nv];
+        let residual = vec![[4.0, 1.0, 2.0, 0.5]; fx.nv];
+        let d = greedy_light_deployment(
+            &queue,
+            &busy,
+            &residual,
+            &fx.resources,
+            &fx.costs,
+            &fx.gtable,
+            &fx.dm,
+            &OnlineParams::from_config(&ExperimentConfig::paper_default().controller),
+        );
+        for v in 0..fx.nv {
+            for k in 0..NUM_RESOURCES {
+                let used: f64 = (0..5)
+                    .map(|m| fx.resources[m][k] * d.x[v][m] as f64)
+                    .sum();
+                if used > residual[v][k] + 1e-9 {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_assignments_target_deployed_instances() {
+    let fx = fixture();
+    let gen = QueueGen { nv: fx.nv, nl: 5 };
+    testkit::check(60, gen, |raw| {
+        let queue = to_requests(raw);
+        let busy = vec![vec![0u32; 5]; fx.nv];
+        let residual = vec![[8.0, 2.0, 4.0, 1.0]; fx.nv];
+        let d = greedy_light_deployment(
+            &queue,
+            &busy,
+            &residual,
+            &fx.resources,
+            &fx.costs,
+            &fx.gtable,
+            &fx.dm,
+            &OnlineParams::from_config(&ExperimentConfig::paper_default().controller),
+        );
+        d.assignments.iter().enumerate().all(|(qi, a)| match a {
+            None => true,
+            Some(a) => {
+                a.light_idx == queue[qi].light_idx
+                    && d.x[a.node][a.light_idx] > 0
+                    && a.y >= 1
+                    && a.y as usize <= fx.gtable.max_parallelism()
+            }
+        })
+    });
+}
+
+#[test]
+fn prop_parallelism_accounting_is_consistent() {
+    let fx = fixture();
+    let gen = QueueGen { nv: fx.nv, nl: 5 };
+    testkit::check(60, gen, |raw| {
+        let queue = to_requests(raw);
+        let busy = vec![vec![0u32; 5]; fx.nv];
+        let residual = vec![[8.0, 2.0, 4.0, 1.0]; fx.nv];
+        let d = greedy_light_deployment(
+            &queue,
+            &busy,
+            &residual,
+            &fx.resources,
+            &fx.costs,
+            &fx.gtable,
+            &fx.dm,
+            &OnlineParams::from_config(&ExperimentConfig::paper_default().controller),
+        );
+        // y[v][m] equals the number of assignments routed there, and never
+        // exceeds instances × max parallelism (constraint C3 of (17)).
+        let mut counted = vec![vec![0u32; 5]; fx.nv];
+        for a in d.assignments.iter().flatten() {
+            counted[a.node][a.light_idx] += 1;
+        }
+        for v in 0..fx.nv {
+            for m in 0..5 {
+                if counted[v][m] != d.y[v][m] {
+                    return false;
+                }
+                if d.y[v][m] > d.x[v][m] * fx.gtable.max_parallelism() as u32 {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_virtual_queue_never_below_floor() {
+    testkit::check(
+        200,
+        testkit::vec_of(
+            testkit::pair_of(testkit::f64_in(0.0, 300.0), testkit::f64_in(10.0, 100.0)),
+            0..50,
+        ),
+        |updates| {
+            let mut q = VirtualQueues::new(0.7);
+            for &(elapsed, deadline) in updates {
+                q.update(1, elapsed, deadline);
+                if q.value(1) < 0.7 - 1e-12 {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+// ---------------------------------------------------------------- effcap --
+
+#[test]
+fn prop_delay_bound_dominates_mean_and_decreases_in_epsilon() {
+    testkit::check(
+        40,
+        testkit::pair_of(testkit::f64_in(0.8, 2.5), testkit::f64_in(2.0, 20.0)),
+        |&(shape, scale)| {
+            let mut rng = Xoshiro256::seed_from((shape * 1000.0) as u64);
+            let samples = Gamma::new(shape, scale).sample_n(&mut rng, 2048);
+            let est = EffCapEstimator::log_grid(1e-3, 10.0, 24);
+            let mu = samples.iter().sum::<f64>() / samples.len() as f64;
+            let d_strict = est.delay_bound(&samples, 1.0, 0.05);
+            let d_loose = est.delay_bound(&samples, 1.0, 0.4);
+            d_strict >= d_loose - 1e-12 && d_loose >= 1.0 / mu - 1e-9
+        },
+    );
+}
+
+// ------------------------------------------------------------- substrate --
+
+#[test]
+fn prop_lp_optimum_is_feasible() {
+    // Random bounded LPs: the reported optimum satisfies every constraint.
+    testkit::check(
+        60,
+        testkit::pair_of(testkit::usize_in(1, 6), testkit::u64_up_to(u64::MAX)),
+        |&(n, seed)| {
+            let mut rng = Xoshiro256::seed_from(seed);
+            let mut lp = LinProg::minimize(n);
+            let c: Vec<f64> = (0..n).map(|_| rng.range_f64(-2.0, 2.0)).collect();
+            lp.set_objective(&c);
+            let mut rows = Vec::new();
+            for _ in 0..rng.range_usize(1, 8) {
+                let coeffs: Vec<(usize, f64)> = (0..n)
+                    .map(|j| (j, rng.range_f64(0.0, 3.0)))
+                    .collect();
+                let rhs = rng.range_f64(1.0, 20.0);
+                lp.add_constraint(&coeffs, Relation::Le, rhs);
+                rows.push((coeffs, rhs));
+            }
+            for j in 0..n {
+                lp.set_upper_bound(j, rng.range_f64(1.0, 10.0));
+            }
+            match lp.solve() {
+                Ok(sol) if sol.status == LpStatus::Optimal => {
+                    sol.x.iter().all(|&x| x >= -1e-7)
+                        && rows.iter().all(|(coeffs, rhs)| {
+                            coeffs.iter().map(|&(j, a)| a * sol.x[j]).sum::<f64>()
+                                <= rhs + 1e-6
+                        })
+                }
+                Ok(_) => true, // infeasible/unbounded are legitimate
+                Err(_) => false,
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_dag_topo_order_is_consistent() {
+    testkit::check(
+        100,
+        testkit::pair_of(testkit::usize_in(2, 12), testkit::u64_up_to(u64::MAX)),
+        |&(n, seed)| {
+            let mut rng = Xoshiro256::seed_from(seed);
+            let mut dag = Dag::new(n);
+            // Forward edges only => acyclic by construction.
+            for i in 0..n - 1 {
+                let succ = i + 1 + rng.next_below((n - 1 - i) as u64) as usize;
+                let _ = dag.add_edge(i, succ);
+            }
+            let Ok(order) = dag.topo_order() else {
+                return false;
+            };
+            let mut pos = vec![0; n];
+            for (i, &x) in order.iter().enumerate() {
+                pos[x] = i;
+            }
+            (0..n).all(|u| dag.children(u).iter().all(|&v| pos[u] < pos[v]))
+        },
+    );
+}
+
+#[test]
+fn prop_quantiles_are_monotone_and_bounded() {
+    testkit::check(
+        150,
+        testkit::vec_of(testkit::f64_in(-100.0, 100.0), 1..80),
+        |xs| {
+            let mut s = xs.clone();
+            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let q1 = quantile(&s, 0.1);
+            let q5 = quantile(&s, 0.5);
+            let q9 = quantile(&s, 0.9);
+            q1 <= q5 && q5 <= q9 && q1 >= s[0] - 1e-12 && q9 <= s[s.len() - 1] + 1e-12
+        },
+    );
+}
+
+#[test]
+fn prop_kde_density_is_nonnegative_and_normalized() {
+    testkit::check(
+        40,
+        testkit::vec_of(testkit::f64_in(0.0, 10.0), 2..60),
+        |xs| {
+            let v = kde_violin(xs, 256);
+            if v.density.iter().any(|&d| d < 0.0) {
+                return false;
+            }
+            let dx = v.grid[1] - v.grid[0];
+            let integral: f64 = v.density.iter().sum::<f64>() * dx;
+            (integral - 1.0).abs() < 0.05
+        },
+    );
+}
+
+#[test]
+fn prop_summary_mean_between_min_max() {
+    testkit::check(
+        150,
+        testkit::vec_of(testkit::f64_in(-50.0, 50.0), 1..60),
+        |xs| {
+            let s = Summary::of(xs);
+            s.min <= s.mean + 1e-12 && s.mean <= s.max + 1e-12 && s.q25 <= s.q75
+        },
+    );
+}
