@@ -8,6 +8,7 @@ use std::time::{Duration, Instant};
 
 use fmedge::benchkit::{bench_budget, fmt_duration, print_data_table, print_table};
 use fmedge::config::ExperimentConfig;
+use fmedge::ilp::NodeLpMode;
 use fmedge::placement::{solve_static_placement, PlacementParams, QosScores, ScoreParams};
 use fmedge::rng::Xoshiro256;
 use fmedge::sim::SimEnv;
@@ -60,6 +61,54 @@ fn main() {
     print_data_table(
         "P1 — placement methods on the paper-scale instance (16 nodes × 6 core MSs)",
         &["method", "solve time", "objective (14)", "instances", "support"],
+        &rows,
+    );
+
+    // --- warm-start A/B: per-node LP cost at equal node budget ----------
+    // The before/after table for the revised-simplex warm-start change:
+    // identical objectives are required; the speedup shows up in total
+    // solve time and in time per branch-and-bound node.
+    let mut rows = Vec::new();
+    for (name, mode) in [
+        ("dense rebuild (baseline)", NodeLpMode::DenseRebuild),
+        ("warm revised (this PR)", NodeLpMode::WarmRevised),
+    ] {
+        let mut p = base.clone();
+        p.exact = true;
+        p.node_lp = mode;
+        let t0 = Instant::now();
+        let sol = solve_static_placement(&env.app, &env.topo, &scores, &p);
+        let dt = t0.elapsed();
+        let (nodes, lp_solves, warm, cold) = sol
+            .stats
+            .map(|s| (s.nodes_explored, s.lp_solves, s.warm_solves, s.cold_solves))
+            .unwrap_or((0, 0, 0, 0));
+        let per_node = if nodes > 0 {
+            fmt_duration(dt / nodes as u32)
+        } else {
+            "-".to_string()
+        };
+        rows.push(vec![
+            name.to_string(),
+            fmt_duration(dt),
+            per_node,
+            format!("{nodes}"),
+            format!("{lp_solves}"),
+            format!("{warm}/{cold}"),
+            format!("{:.1}", sol.objective),
+        ]);
+    }
+    print_data_table(
+        "P1b — exact B&B node-LP engine A/B (equal node budget; objectives must match)",
+        &[
+            "engine",
+            "total",
+            "time/node",
+            "nodes",
+            "LP solves",
+            "warm/cold",
+            "objective (14)",
+        ],
         &rows,
     );
 

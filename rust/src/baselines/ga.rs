@@ -205,6 +205,7 @@ impl crate::sim::Strategy for GaStrategy {
             used_fallback: false,
             support,
             demand_target: demand,
+            stats: None,
         }
     }
 

@@ -103,6 +103,7 @@ impl crate::sim::Strategy for LbrrStrategy {
             used_fallback: false,
             support,
             demand_target: Vec::new(),
+            stats: None,
         }
     }
 

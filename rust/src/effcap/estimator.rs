@@ -1,22 +1,57 @@
 //! Sample-based effective-capacity estimation.
 
+/// Numerically stable `ln( mean( exp(scale * x_i) ) )` in one streaming
+/// pass and with no allocation: the running maximum is carried along and
+/// the partial sum rescaled whenever it moves (online log-sum-exp). The
+/// `scale` factor fuses the `-θ·f` scaling of effective-capacity
+/// estimation so g-table construction (`effcap_samples × θ-grid ×
+/// y-levels` evaluations) never materializes a scaled sample vector.
+pub fn log_mean_exp_scaled(xs: &[f64], scale: f64) -> f64 {
+    assert!(!xs.is_empty(), "log_mean_exp over empty slice");
+    let mut m = f64::NEG_INFINITY;
+    let mut sum = 0.0f64;
+    for &x in xs {
+        let v = scale * x;
+        if v == f64::NEG_INFINITY {
+            continue; // exp(v) contributes exactly zero mass
+        }
+        if v <= m {
+            sum += (v - m).exp();
+        } else {
+            sum = sum * (m - v).exp() + 1.0;
+            m = v;
+        }
+    }
+    if m == f64::NEG_INFINITY {
+        return f64::NEG_INFINITY;
+    }
+    m + (sum / xs.len() as f64).ln()
+}
+
 /// Numerically stable `ln( mean( exp(x_i) ) )`.
 pub fn log_mean_exp(xs: &[f64]) -> f64 {
-    assert!(!xs.is_empty(), "log_mean_exp over empty slice");
-    let m = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-    if m.is_infinite() {
-        return m;
-    }
-    let sum: f64 = xs.iter().map(|&x| (x - m).exp()).sum();
-    m + (sum / xs.len() as f64).ln()
+    log_mean_exp_scaled(xs, 1.0)
 }
 
 /// Per-slot effective capacity `Ê^c(θ) = -ln( mean e^{-θ f_i} ) / θ` from
 /// iid service-rate samples (eq. 20 specialised to iid slots).
 pub fn effective_capacity(rate_samples: &[f64], theta: f64) -> f64 {
     assert!(theta > 0.0, "QoS exponent must be positive");
-    let scaled: Vec<f64> = rate_samples.iter().map(|&f| -theta * f).collect();
-    -log_mean_exp(&scaled) / theta
+    -log_mean_exp_scaled(rate_samples, -theta) / theta
+}
+
+/// Effective capacity of the *contended* rates `f_i / rate_divisor`
+/// (parallelism level `y` scales each draw by `1/y^alpha`), computed
+/// without materializing the scaled samples:
+/// `E^c = -ln mean exp(-θ f_i / divisor) / θ`.
+pub fn effective_capacity_contended(
+    rate_samples: &[f64],
+    theta: f64,
+    rate_divisor: f64,
+) -> f64 {
+    assert!(theta > 0.0, "QoS exponent must be positive");
+    assert!(rate_divisor > 0.0, "rate divisor must be positive");
+    -log_mean_exp_scaled(rate_samples, -theta / rate_divisor) / theta
 }
 
 /// Reusable estimator over a θ-grid; caches the per-θ capacities for one
@@ -61,14 +96,28 @@ impl EffCapEstimator {
     /// bound, realized violations are guaranteed ≤ ε up to Monte-Carlo
     /// error — property-tested in `effcap::tests`.
     pub fn delay_bound(&self, rate_samples: &[f64], workload_mb: f64, epsilon: f64) -> f64 {
+        self.delay_bound_contended(rate_samples, 1.0, workload_mb, epsilon)
+    }
+
+    /// [`Self::delay_bound`] over the contended rates `f_i / rate_divisor`
+    /// — the g-table inner loop — allocation-free: the divisor is fused
+    /// into the streaming log-mean-exp instead of scaling a sample buffer.
+    pub fn delay_bound_contended(
+        &self,
+        rate_samples: &[f64],
+        rate_divisor: f64,
+        workload_mb: f64,
+        epsilon: f64,
+    ) -> f64 {
         assert!((0.0..1.0).contains(&epsilon) && epsilon > 0.0);
+        assert!(rate_divisor > 0.0, "rate divisor must be positive");
         let n = rate_samples.len() as f64;
-        let mu: f64 = rate_samples.iter().sum::<f64>() / n;
+        let mu: f64 = rate_samples.iter().sum::<f64>() / n / rate_divisor;
         let mean_delay = workload_mb / mu;
         let ln_eps = epsilon.ln(); // < 0
         let mut best = f64::INFINITY;
         for &theta in &self.thetas {
-            let ec = effective_capacity(rate_samples, theta);
+            let ec = effective_capacity_contended(rate_samples, theta, rate_divisor);
             let denom = ec + ln_eps / theta;
             if denom <= 0.0 {
                 continue; // θ too small: bound vacuous at this exponent
@@ -133,5 +182,54 @@ mod tests {
     #[should_panic]
     fn zero_theta_rejected() {
         effective_capacity(&[1.0], 0.0);
+    }
+
+    #[test]
+    fn scaled_log_mean_exp_matches_materialized() {
+        let xs: Vec<f64> = (0..257).map(|i| 0.3 + (i % 23) as f64 * 0.7).collect();
+        for scale in [-2.5, -0.01, 0.4, 1.0] {
+            let materialized: Vec<f64> = xs.iter().map(|&x| scale * x).collect();
+            let want = {
+                let m = materialized.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let s: f64 = materialized.iter().map(|&v| (v - m).exp()).sum();
+                m + (s / xs.len() as f64).ln()
+            };
+            let got = log_mean_exp_scaled(&xs, scale);
+            assert!(
+                (got - want).abs() < 1e-12,
+                "scale={scale}: got={got} want={want}"
+            );
+        }
+    }
+
+    #[test]
+    fn contended_capacity_matches_scaled_samples() {
+        let samples: Vec<f64> = (0..1024).map(|i| 1.0 + (i % 13) as f64 * 0.9).collect();
+        for y in [1.0f64, 2.0, 7.5] {
+            let scaled: Vec<f64> = samples.iter().map(|&f| f / y).collect();
+            for theta in [0.05, 0.8, 3.0] {
+                let direct = effective_capacity(&scaled, theta);
+                let fused = effective_capacity_contended(&samples, theta, y);
+                assert!(
+                    (direct - fused).abs() < 1e-10,
+                    "y={y} theta={theta}: {direct} vs {fused}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn contended_delay_bound_matches_scaled_samples() {
+        let samples: Vec<f64> = (0..512).map(|i| 2.0 + (i % 7) as f64).collect();
+        let est = EffCapEstimator::log_grid(1e-3, 10.0, 24);
+        for y in [1.0f64, 3.0, 9.0] {
+            let scaled: Vec<f64> = samples.iter().map(|&f| f / y).collect();
+            let direct = est.delay_bound(&scaled, 1.3, 0.2);
+            let fused = est.delay_bound_contended(&samples, y, 1.3, 0.2);
+            assert!(
+                (direct - fused).abs() < 1e-9,
+                "y={y}: {direct} vs {fused}"
+            );
+        }
     }
 }

@@ -71,13 +71,11 @@ impl GTable {
             let mu: f64 = samples.iter().sum::<f64>() / samples.len() as f64;
             let mut row = Vec::with_capacity(params.max_parallelism);
             let mut mean_row = Vec::with_capacity(params.max_parallelism);
-            let mut scaled = vec![0.0f64; samples.len()];
             for y in 1..=params.max_parallelism {
                 let scale = (y as f64).powf(params.contention_alpha);
-                for (dst, &f) in scaled.iter_mut().zip(samples.iter()) {
-                    *dst = f / scale;
-                }
-                let bound = est.delay_bound(&scaled, a_m, params.epsilon);
+                // Allocation-free inner loop: the contention divisor is
+                // fused into the streaming log-mean-exp.
+                let bound = est.delay_bound_contended(samples, scale, a_m, params.epsilon);
                 row.push(bound);
                 mean_row.push(a_m * scale / mu);
             }

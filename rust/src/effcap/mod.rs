@@ -19,7 +19,10 @@
 mod estimator;
 mod gtable;
 
-pub use estimator::{effective_capacity, log_mean_exp, EffCapEstimator};
+pub use estimator::{
+    effective_capacity, effective_capacity_contended, log_mean_exp, log_mean_exp_scaled,
+    EffCapEstimator,
+};
 pub use gtable::{GTable, GTableParams};
 
 #[cfg(test)]

@@ -1,11 +1,32 @@
 //! Best-first branch-and-bound over the simplex LP relaxation.
+//!
+//! The search is *incremental*: one root LP model is built once, each node
+//! carries only its bound deltas `(var, lo, hi)` plus the parent's optimal
+//! basis, and a child re-optimizes with a dual-simplex pass from that
+//! basis after the branching bound is tightened — no `build_lp` + phase-1
+//! from cold per node. The dense-rebuild behavior is retained behind
+//! [`NodeLpMode::DenseRebuild`] as the benchmark baseline and for
+//! cross-checking (`bench_ilp`, `tests/properties.rs`).
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
-use crate::lp::{LinProg, LpStatus, Relation};
+use crate::lp::{LinProg, LpSolution, LpStatus, Relation, RevisedSimplex, WarmBasis};
 
 use super::model::{IlpError, IlpModel, IlpSolution, IlpStatus};
+
+/// How each node's LP relaxation is solved.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum NodeLpMode {
+    /// Rebuild a dense two-phase simplex from scratch at every node, with
+    /// branching bounds encoded as constraint rows (the pre-warm-start
+    /// baseline; kept for benchmarking and cross-checks).
+    DenseRebuild,
+    /// One root revised-simplex model; children warm-start from the
+    /// parent's basis and re-optimize with a dual-simplex pass.
+    #[default]
+    WarmRevised,
+}
 
 /// Branch-and-bound options.
 #[derive(Clone, Debug)]
@@ -19,6 +40,8 @@ pub struct BnbOptions {
     /// Warm-start incumbent `(x, objective)`; must be feasible. Enables
     /// aggressive pruning from the first node.
     pub initial_incumbent: Option<(Vec<f64>, f64)>,
+    /// Per-node LP engine.
+    pub node_lp: NodeLpMode,
 }
 
 impl Default for BnbOptions {
@@ -28,6 +51,7 @@ impl Default for BnbOptions {
             int_tol: 1e-6,
             rel_gap: 1e-9,
             initial_incumbent: None,
+            node_lp: NodeLpMode::WarmRevised,
         }
     }
 }
@@ -37,14 +61,25 @@ impl Default for BnbOptions {
 pub struct BnbStats {
     pub nodes_explored: usize,
     pub lp_solves: usize,
+    /// Node LPs re-optimized from a parent basis (WarmRevised only).
+    pub warm_solves: usize,
+    /// Node LPs solved from scratch (the root, plus warm-start fallbacks).
+    pub cold_solves: usize,
     pub incumbent_updates: usize,
+    /// Global lower bound on the optimum: min LP bound over open nodes at
+    /// termination (equals the incumbent objective on proven optimality).
     pub best_bound: f64,
+    /// Total primal/dual simplex iterations inside the revised engine.
+    pub simplex_primal_iters: usize,
+    pub simplex_dual_iters: usize,
 }
 
 #[derive(Clone, Debug)]
 struct Node {
     /// (var, lower, upper) additional bounds along this branch.
     bounds: Vec<(usize, f64, f64)>,
+    /// Parent's optimal basis (warm mode; `None` at the root).
+    basis: Option<WarmBasis>,
     /// Parent LP bound (priority).
     bound: f64,
     depth: usize,
@@ -73,6 +108,24 @@ impl Ord for Node {
     }
 }
 
+/// Root LP relaxation with native variable bounds (warm path).
+fn build_root_lp(model: &IlpModel) -> LinProg {
+    let n = model.num_vars();
+    let mut lp = LinProg::minimize(n);
+    lp.set_objective(&model.objective);
+    for c in &model.constraints {
+        let terms: Vec<(usize, f64)> = c.expr.terms.iter().map(|&(v, co)| (v.0, co)).collect();
+        lp.add_constraint(&terms, c.rel, c.rhs);
+    }
+    for (v, k) in model.kinds.iter().enumerate() {
+        if let Some(ub) = k.upper_bound() {
+            lp.set_upper_bound(v, ub);
+        }
+    }
+    lp
+}
+
+/// Per-node LP with branch bounds encoded as rows (dense baseline).
 fn build_lp(model: &IlpModel, extra: &[(usize, f64, f64)]) -> LinProg {
     let n = model.num_vars();
     let mut lp = LinProg::minimize(n);
@@ -103,10 +156,42 @@ fn build_lp(model: &IlpModel, extra: &[(usize, f64, f64)]) -> LinProg {
     lp
 }
 
+/// Solve one node's relaxation on the shared revised engine: reset to the
+/// root bounds, apply this node's deltas, warm-start from the parent basis
+/// when available (falling back to a cold solve on numerical failure).
+fn solve_node_warm(
+    engine: &mut RevisedSimplex,
+    node: &Node,
+    stats: &mut BnbStats,
+) -> Result<LpSolution, IlpError> {
+    engine.reset_bounds();
+    for &(v, l, u) in &node.bounds {
+        engine.tighten_var_bounds(v, l, u);
+    }
+    if let Some(wb) = &node.basis {
+        match engine.solve_warm(wb) {
+            Ok(sol) => {
+                stats.warm_solves += 1;
+                return Ok(sol);
+            }
+            Err(_) => {
+                // Singular or cycling warm basis: re-solve from scratch.
+                stats.cold_solves += 1;
+                return Ok(engine.solve_cold()?);
+            }
+        }
+    }
+    stats.cold_solves += 1;
+    Ok(engine.solve_cold()?)
+}
+
 /// Solve `model` to optimality (or best feasible within node budget).
 pub fn solve(model: &IlpModel, opts: &BnbOptions) -> Result<IlpSolution, IlpError> {
     let n = model.num_vars();
-    let mut stats = BnbStats::default();
+    let mut stats = BnbStats {
+        best_bound: f64::NEG_INFINITY,
+        ..Default::default()
+    };
 
     if n == 0 {
         return Ok(IlpSolution {
@@ -117,9 +202,15 @@ pub fn solve(model: &IlpModel, opts: &BnbOptions) -> Result<IlpSolution, IlpErro
         });
     }
 
+    let mut engine = match opts.node_lp {
+        NodeLpMode::WarmRevised => Some(RevisedSimplex::new(&build_root_lp(model))?),
+        NodeLpMode::DenseRebuild => None,
+    };
+
     let mut heap = BinaryHeap::new();
     heap.push(Node {
         bounds: Vec::new(),
+        basis: None,
         bound: f64::NEG_INFINITY,
         depth: 0,
     });
@@ -129,10 +220,16 @@ pub fn solve(model: &IlpModel, opts: &BnbOptions) -> Result<IlpSolution, IlpErro
 
     while let Some(node) = heap.pop() {
         if stats.nodes_explored >= opts.max_nodes {
+            // Best-first: the node just popped has the minimum bound among
+            // all open nodes, i.e. the global lower bound at truncation.
             truncated = true;
+            stats.best_bound = stats.best_bound.max(node.bound);
             break;
         }
         stats.nodes_explored += 1;
+        if node.bound > stats.best_bound {
+            stats.best_bound = node.bound;
+        }
 
         // Bound pruning against the incumbent.
         if let Some((_, inc_obj)) = &incumbent {
@@ -141,9 +238,11 @@ pub fn solve(model: &IlpModel, opts: &BnbOptions) -> Result<IlpSolution, IlpErro
             }
         }
 
-        let lp = build_lp(model, &node.bounds);
         stats.lp_solves += 1;
-        let sol = lp.solve()?;
+        let sol = match &mut engine {
+            Some(eng) => solve_node_warm(eng, &node, &mut stats)?,
+            None => build_lp(model, &node.bounds).solve_dense()?,
+        };
         match sol.status {
             LpStatus::Infeasible => continue,
             LpStatus::Unbounded => {
@@ -161,7 +260,6 @@ pub fn solve(model: &IlpModel, opts: &BnbOptions) -> Result<IlpSolution, IlpErro
             LpStatus::Optimal => {}
         }
         let bound = sol.objective;
-        stats.best_bound = bound;
         if let Some((_, inc_obj)) = &incumbent {
             if bound > *inc_obj - opts.rel_gap * (1.0 + inc_obj.abs()) {
                 continue;
@@ -214,16 +312,39 @@ pub fn solve(model: &IlpModel, opts: &BnbOptions) -> Result<IlpSolution, IlpErro
                 hi_bounds.push((var, floor + 1.0, f64::INFINITY));
                 heap.push(Node {
                     bounds: lo_bounds,
+                    basis: sol.basis.clone(),
                     bound,
                     depth: node.depth + 1,
                 });
                 heap.push(Node {
                     bounds: hi_bounds,
+                    basis: sol.basis,
                     bound,
                     depth: node.depth + 1,
                 });
             }
         }
+    }
+
+    if let Some(eng) = &engine {
+        let es = eng.stats();
+        stats.simplex_primal_iters = es.primal_iters;
+        stats.simplex_dual_iters = es.dual_iters;
+    }
+    if truncated {
+        // Open nodes whose bound exceeds the incumbent are worthless (the
+        // optimum is the incumbent itself), so the global bound never
+        // exceeds the incumbent objective.
+        if let Some((_, obj)) = &incumbent {
+            stats.best_bound = stats.best_bound.min(*obj);
+        }
+    } else {
+        // Search exhausted: the bound closes onto the incumbent (or +inf
+        // when the program is infeasible).
+        stats.best_bound = match &incumbent {
+            Some((_, obj)) => *obj,
+            None => f64::INFINITY,
+        };
     }
 
     match incumbent {

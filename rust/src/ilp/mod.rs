@@ -5,11 +5,17 @@
 //! sparsity/diversity constraints C4–C6 (big-M indicator coupling and a
 //! minimum-support cardinality bound). Instance sizes are modest, so
 //! best-first branch-and-bound with LP bounding solves them exactly.
+//!
+//! Node relaxations are solved incrementally by default
+//! ([`NodeLpMode::WarmRevised`]): one root revised-simplex model, per-node
+//! bound deltas, and a dual-simplex warm start from the parent's basis.
+//! The per-node dense rebuild is kept as [`NodeLpMode::DenseRebuild`] for
+//! benchmarking and cross-checks.
 
 mod bnb;
 mod model;
 
-pub use bnb::{BnbOptions, BnbStats};
+pub use bnb::{BnbOptions, BnbStats, NodeLpMode};
 pub use model::{IlpError, IlpModel, IlpSolution, IlpStatus, LinExpr, VarId, VarKind};
 
 #[cfg(test)]
@@ -112,6 +118,81 @@ mod tests {
         assert!((sol.objective - 2.5).abs() < 1e-6);
         assert!(sol.x[x.0] + sol.x[y.0] >= 2.5 - 1e-6);
         assert!((sol.x[y.0] - sol.x[y.0].round()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn warm_and_dense_node_lp_modes_agree() {
+        // A branching-heavy instance: near-tie objective over binaries
+        // plus a coupling row, solved exactly under both node-LP engines.
+        let mut m = IlpModel::new();
+        let vars: Vec<_> = (0..10)
+            .map(|i| m.add_var(VarKind::Binary, -(1.0 + 0.013 * i as f64)))
+            .collect();
+        let terms: Vec<_> = vars.iter().map(|&v| (v, 1.0)).collect();
+        m.add_constraint(LinExpr::from_terms(&terms), Relation::Le, 4.0);
+        let w: Vec<_> = vars
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| (v, 1.0 + (i % 3) as f64))
+            .collect();
+        m.add_constraint(LinExpr::from_terms(&w), Relation::Le, 7.0);
+        let warm = m
+            .solve(&BnbOptions {
+                node_lp: NodeLpMode::WarmRevised,
+                ..Default::default()
+            })
+            .unwrap();
+        let dense = m
+            .solve(&BnbOptions {
+                node_lp: NodeLpMode::DenseRebuild,
+                ..Default::default()
+            })
+            .unwrap();
+        assert_eq!(warm.status, IlpStatus::Optimal);
+        assert_eq!(dense.status, IlpStatus::Optimal);
+        assert!(
+            (warm.objective - dense.objective).abs() < 1e-6,
+            "warm={} dense={}",
+            warm.objective,
+            dense.objective
+        );
+        // Proven optimality closes the gap: best bound == objective.
+        assert!((warm.stats.best_bound - warm.objective).abs() < 1e-9);
+        assert!((dense.stats.best_bound - dense.objective).abs() < 1e-9);
+        // The warm path actually warm-started (only the root is cold,
+        // modulo rare numerical fallbacks).
+        if warm.stats.nodes_explored > 1 {
+            assert!(warm.stats.warm_solves > 0, "{:?}", warm.stats);
+        }
+    }
+
+    #[test]
+    fn best_bound_tracks_global_bound_not_node_bound() {
+        // Truncated search must report a lower bound <= the incumbent (the
+        // old code overwrote it with the current node's LP objective).
+        let mut m = IlpModel::new();
+        let vars: Vec<_> = (0..14)
+            .map(|i| m.add_var(VarKind::Binary, -(1.0 + 0.01 * i as f64)))
+            .collect();
+        let terms: Vec<_> = vars.iter().map(|&v| (v, 1.0)).collect();
+        m.add_constraint(LinExpr::from_terms(&terms), Relation::Le, 7.0);
+        let sol = m
+            .solve(&BnbOptions {
+                max_nodes: 4,
+                ..Default::default()
+            })
+            .unwrap();
+        if sol.status == IlpStatus::Feasible {
+            assert!(
+                sol.stats.best_bound <= sol.objective + 1e-9,
+                "bound {} must not exceed incumbent {}",
+                sol.stats.best_bound,
+                sol.objective
+            );
+        } else {
+            assert_eq!(sol.status, IlpStatus::Optimal);
+            assert!((sol.stats.best_bound - sol.objective).abs() < 1e-9);
+        }
     }
 
     #[test]

@@ -1,19 +1,72 @@
-//! Linear-programming substrate: a dense two-phase primal simplex solver.
+//! Linear-programming substrate.
 //!
 //! The paper solves the static core-placement problem (14) with
 //! "off-the-shelf tools"; nothing off-the-shelf is available offline, so
 //! this module provides the LP relaxation engine underneath the in-tree
-//! branch-and-bound MILP solver (`crate::ilp`). Problem sizes are small
-//! (|V|·|Mcr| + |V|·|Mcr| binaries ≈ a few hundred variables), well within
-//! dense-simplex territory.
+//! branch-and-bound MILP solver (`crate::ilp`).
+//!
+//! Two interchangeable backends implement [`LpBackend`]:
+//!
+//! * [`RevisedBackend`] (default, used by [`LinProg::solve`]) — a
+//!   bounded-variable **revised simplex** ([`revised`]): variable bounds
+//!   are handled natively by the ratio tests (no synthetic `x <= u` rows)
+//!   and an optimal [`WarmBasis`] is returned for warm restarts; after a
+//!   bound tightening a **dual simplex** pass re-optimizes in a handful of
+//!   pivots. This is what makes the branch-and-bound incremental.
+//! * [`DenseBackend`] ([`LinProg::solve_dense`]) — the original dense
+//!   two-phase tableau, kept as an independent reference implementation;
+//!   `tests/properties.rs` cross-checks the two on random LPs.
 
+mod revised;
 mod simplex;
 
+pub use revised::{RevisedSimplex, RevisedStats, WarmBasis};
 pub use simplex::{LinProg, LpError, LpSolution, LpStatus, Relation};
+
+/// A pluggable LP solver backend over the shared [`LinProg`] model.
+pub trait LpBackend {
+    fn solve(&self, lp: &LinProg) -> Result<LpSolution, LpError>;
+}
+
+/// The dense two-phase tableau simplex (reference implementation).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DenseBackend;
+
+impl LpBackend for DenseBackend {
+    fn solve(&self, lp: &LinProg) -> Result<LpSolution, LpError> {
+        lp.solve_dense()
+    }
+}
+
+/// The bounded-variable revised simplex (default).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RevisedBackend;
+
+impl LpBackend for RevisedBackend {
+    fn solve(&self, lp: &LinProg) -> Result<LpSolution, LpError> {
+        lp.solve()
+    }
+}
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn both_backends(lp: &LinProg) -> (LpSolution, LpSolution) {
+        let fast = lp.solve().expect("revised solve");
+        let dense = lp.solve_dense().expect("dense solve");
+        assert_eq!(fast.status, dense.status, "backend status mismatch");
+        if fast.status == LpStatus::Optimal {
+            assert!(
+                (fast.objective - dense.objective).abs()
+                    <= 1e-6 * (1.0 + dense.objective.abs()),
+                "objective mismatch: revised={} dense={}",
+                fast.objective,
+                dense.objective
+            );
+        }
+        (fast, dense)
+    }
 
     #[test]
     fn simple_max_problem() {
@@ -23,7 +76,7 @@ mod tests {
         lp.add_constraint(&[(0, 1.0)], Relation::Le, 4.0);
         lp.add_constraint(&[(1, 2.0)], Relation::Le, 12.0);
         lp.add_constraint(&[(0, 3.0), (1, 2.0)], Relation::Le, 18.0);
-        let sol = lp.solve().unwrap();
+        let (sol, _) = both_backends(&lp);
         assert_eq!(sol.status, LpStatus::Optimal);
         assert!((sol.objective + 36.0).abs() < 1e-7);
         assert!((sol.x[0] - 2.0).abs() < 1e-7);
@@ -38,7 +91,7 @@ mod tests {
         lp.add_constraint(&[(0, 1.0), (1, 1.0)], Relation::Eq, 10.0);
         lp.add_constraint(&[(0, 1.0)], Relation::Ge, 3.0);
         lp.add_constraint(&[(1, 1.0)], Relation::Ge, 2.0);
-        let sol = lp.solve().unwrap();
+        let (sol, _) = both_backends(&lp);
         assert_eq!(sol.status, LpStatus::Optimal);
         assert!((sol.objective - 10.0).abs() < 1e-7);
         assert!((sol.x[0] + sol.x[1] - 10.0).abs() < 1e-7);
@@ -50,7 +103,7 @@ mod tests {
         lp.set_objective(&[1.0]);
         lp.add_constraint(&[(0, 1.0)], Relation::Le, 1.0);
         lp.add_constraint(&[(0, 1.0)], Relation::Ge, 2.0);
-        let sol = lp.solve().unwrap();
+        let (sol, _) = both_backends(&lp);
         assert_eq!(sol.status, LpStatus::Infeasible);
     }
 
@@ -60,7 +113,7 @@ mod tests {
         let mut lp = LinProg::minimize(1);
         lp.set_objective(&[-1.0]);
         lp.add_constraint(&[(0, 1.0)], Relation::Ge, 0.0);
-        let sol = lp.solve().unwrap();
+        let (sol, _) = both_backends(&lp);
         assert_eq!(sol.status, LpStatus::Unbounded);
     }
 
@@ -71,10 +124,36 @@ mod tests {
         lp.set_objective(&[-1.0, -1.0]);
         lp.set_upper_bound(0, 2.5);
         lp.set_upper_bound(1, 1.5);
-        let sol = lp.solve().unwrap();
+        let (sol, _) = both_backends(&lp);
         assert_eq!(sol.status, LpStatus::Optimal);
         assert!((sol.x[0] - 2.5).abs() < 1e-7);
         assert!((sol.x[1] - 1.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn lower_bounds_respected() {
+        // min x + 2y with x >= 1.5, y >= 0.5, x + y >= 3 -> (2.5, 0.5).
+        let mut lp = LinProg::minimize(2);
+        lp.set_objective(&[1.0, 2.0]);
+        lp.set_lower_bound(0, 1.5);
+        lp.set_lower_bound(1, 0.5);
+        lp.add_constraint(&[(0, 1.0), (1, 1.0)], Relation::Ge, 3.0);
+        let (sol, _) = both_backends(&lp);
+        assert_eq!(sol.status, LpStatus::Optimal);
+        assert!((sol.objective - 3.5).abs() < 1e-7, "obj={}", sol.objective);
+        assert!(sol.x[0] >= 1.5 - 1e-7 && sol.x[1] >= 0.5 - 1e-7);
+    }
+
+    #[test]
+    fn crossed_bounds_are_infeasible() {
+        let mut lp = LinProg::minimize(1);
+        lp.set_objective(&[1.0]);
+        lp.set_lower_bound(0, 2.0);
+        lp.set_upper_bound(0, 1.0);
+        let sol = lp.solve().unwrap();
+        assert_eq!(sol.status, LpStatus::Infeasible);
+        let dense = lp.solve_dense().unwrap();
+        assert_eq!(dense.status, LpStatus::Infeasible);
     }
 
     #[test]
@@ -87,7 +166,7 @@ mod tests {
             lp.add_constraint(&[(i, 1.0)], Relation::Le, 1.0); // duplicate
         }
         lp.add_constraint(&[(0, 1.0), (1, 1.0), (2, 1.0)], Relation::Le, 3.0);
-        let sol = lp.solve().unwrap();
+        let (sol, _) = both_backends(&lp);
         assert_eq!(sol.status, LpStatus::Optimal);
         assert!((sol.objective + 3.0).abs() < 1e-7);
     }
@@ -98,5 +177,89 @@ mod tests {
         let sol = lp.solve().unwrap();
         assert_eq!(sol.status, LpStatus::Optimal);
         assert_eq!(sol.objective, 0.0);
+    }
+
+    #[test]
+    fn warm_basis_reoptimizes_after_bound_tightening() {
+        // max x + y s.t. x + 2y <= 4, 3x + y <= 6, x,y in [0, 3]:
+        // optimum at the row intersection (1.6, 1.2), obj -2.8.
+        let mut lp = LinProg::minimize(2);
+        lp.set_objective(&[-1.0, -1.0]);
+        lp.add_constraint(&[(0, 1.0), (1, 2.0)], Relation::Le, 4.0);
+        lp.add_constraint(&[(0, 3.0), (1, 1.0)], Relation::Le, 6.0);
+        lp.set_upper_bound(0, 3.0);
+        lp.set_upper_bound(1, 3.0);
+        let mut eng = RevisedSimplex::new(&lp).unwrap();
+        let root = eng.solve_cold().unwrap();
+        assert_eq!(root.status, LpStatus::Optimal);
+        assert!((root.objective + 2.8).abs() < 1e-7, "obj={}", root.objective);
+        let warm = root.basis.clone().expect("optimal root must carry a basis");
+
+        // Tighten x <= 1 (a branch-down step) and warm re-solve: the LP
+        // optimum moves to (1, 1.5), obj -2.5.
+        eng.reset_bounds();
+        eng.tighten_var_bounds(0, 0.0, 1.0);
+        let child = eng.solve_warm(&warm).unwrap();
+        assert_eq!(child.status, LpStatus::Optimal);
+        assert!(
+            (child.objective + 2.5).abs() < 1e-7,
+            "obj={}",
+            child.objective
+        );
+        assert!(child.x[0] <= 1.0 + 1e-7);
+
+        // And against the dense backend on the same tightened model.
+        let mut tight = LinProg::minimize(2);
+        tight.set_objective(&[-1.0, -1.0]);
+        tight.add_constraint(&[(0, 1.0), (1, 2.0)], Relation::Le, 4.0);
+        tight.add_constraint(&[(0, 3.0), (1, 1.0)], Relation::Le, 6.0);
+        tight.set_upper_bound(0, 1.0);
+        tight.set_upper_bound(1, 3.0);
+        let dense = tight.solve_dense().unwrap();
+        assert!((dense.objective - child.objective).abs() < 1e-7);
+
+        // Raising a lower bound re-optimizes too: x >= 1.8 forces
+        // (1.8, 0.6) via row 2, obj -2.4.
+        eng.reset_bounds();
+        eng.tighten_var_bounds(0, 1.8, f64::INFINITY);
+        let up = eng.solve_warm(&warm).unwrap();
+        assert_eq!(up.status, LpStatus::Optimal);
+        assert!(up.x[0] >= 1.8 - 1e-7);
+        assert!((up.objective + 2.4).abs() < 1e-6, "obj={}", up.objective);
+    }
+
+    #[test]
+    fn warm_infeasible_bound_combination_detected() {
+        // x + y >= 4 with both variables boxed to [0, 1] after tightening.
+        let mut lp = LinProg::minimize(2);
+        lp.set_objective(&[1.0, 1.0]);
+        lp.add_constraint(&[(0, 1.0), (1, 1.0)], Relation::Ge, 4.0);
+        lp.set_upper_bound(0, 3.0);
+        lp.set_upper_bound(1, 3.0);
+        let mut eng = RevisedSimplex::new(&lp).unwrap();
+        let root = eng.solve_cold().unwrap();
+        assert_eq!(root.status, LpStatus::Optimal);
+        let warm = root.basis.clone().unwrap();
+        eng.reset_bounds();
+        eng.tighten_var_bounds(0, 0.0, 1.0);
+        eng.tighten_var_bounds(1, 0.0, 1.0);
+        let child = eng.solve_warm(&warm).unwrap();
+        assert_eq!(child.status, LpStatus::Infeasible);
+    }
+
+    #[test]
+    fn backend_trait_objects_agree() {
+        let mut lp = LinProg::minimize(2);
+        lp.set_objective(&[2.0, 3.0]);
+        lp.add_constraint(&[(0, 1.0), (1, 1.0)], Relation::Ge, 5.0);
+        lp.set_upper_bound(0, 10.0);
+        lp.set_upper_bound(1, 10.0);
+        let backends: [&dyn LpBackend; 2] = [&DenseBackend, &RevisedBackend];
+        let objs: Vec<f64> = backends
+            .iter()
+            .map(|b| b.solve(&lp).unwrap().objective)
+            .collect();
+        assert!((objs[0] - objs[1]).abs() < 1e-7);
+        assert!((objs[0] - 10.0).abs() < 1e-7);
     }
 }

@@ -1,0 +1,833 @@
+//! Bounded-variable revised simplex with warm starts.
+//!
+//! The engine keeps the constraint matrix in sparse column form and works
+//! on the computational standard form `A x + s = b`, one slack column per
+//! row (`<=`: `s in [0, inf)`, `>=`: `s in (-inf, 0]`, `=`: `s` fixed at
+//! zero). Variable bounds `l <= x <= u` are handled *natively* by the
+//! ratio tests — nonbasic variables rest at one of their bounds and may
+//! "bound-flip" without a basis change — so tightening a bound (the
+//! branch-and-bound case) never adds a row.
+//!
+//! Three solve paths:
+//!
+//! * **Cold** ([`RevisedSimplex::solve_cold`]) — slack basis, phase-1
+//!   artificials on rows whose residual the slack cannot absorb, then
+//!   phase 2 with the true costs. Dantzig pricing with a Bland fallback
+//!   after a run of degenerate pivots (anti-cycling).
+//! * **Warm** ([`RevisedSimplex::solve_warm`]) — restore a parent
+//!   [`WarmBasis`], refactorize `B^{-1}`, and run the *dual* simplex:
+//!   after a bound tightening the parent basis stays dual-feasible, so a
+//!   handful of dual pivots restore primal feasibility. A primal cleanup
+//!   loop then certifies optimality (it is a no-op in the common case).
+//! * Bound edits ([`RevisedSimplex::reset_bounds`] /
+//!   [`RevisedSimplex::tighten_var_bounds`]) — per-node deltas applied on
+//!   top of the root bounds; the matrix and its factorization are reused
+//!   across the whole branch-and-bound tree.
+//!
+//! `B^{-1}` is kept explicitly (dense, row-major) and updated by
+//! product-form pivots with a periodic full refactorization — the paper's
+//! placement LPs have at most a few hundred rows, where an explicit
+//! inverse is both simple and fast.
+
+use super::simplex::{LinProg, LpError, LpSolution, LpStatus, Relation};
+
+const FEAS_TOL: f64 = 1e-7;
+const DUAL_TOL: f64 = 1e-7;
+const PIV_TOL: f64 = 1e-8;
+const REFACTOR_EVERY: usize = 64;
+/// Consecutive (near-)degenerate pivots before switching to Bland's rule.
+const DEGEN_SWITCH: usize = 100;
+
+/// Opaque snapshot of an optimal basis: the basic column of every row plus
+/// the bound each nonbasic column rests at. Cheap to clone; stored on
+/// branch-and-bound nodes to warm-start children.
+#[derive(Clone, Debug)]
+pub struct WarmBasis {
+    pub(super) basis: Vec<usize>,
+    pub(super) at_upper: Vec<bool>,
+}
+
+/// Iteration counters, aggregated across all solves on one engine.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RevisedStats {
+    pub primal_iters: usize,
+    pub dual_iters: usize,
+    pub refactorizations: usize,
+}
+
+/// Reusable bounded-variable revised simplex over one constraint matrix.
+pub struct RevisedSimplex {
+    m: usize,
+    nstruct: usize,
+    /// Total columns: structural, then `m` slacks, then `m` artificials.
+    ncols: usize,
+    art_start: usize,
+    /// Sparse columns of `[A | I | I_art]` (artificial signs set per cold
+    /// solve).
+    cols: Vec<Vec<(usize, f64)>>,
+    b: Vec<f64>,
+    /// Phase-2 costs (structural = objective, slack/artificial = 0).
+    cost: Vec<f64>,
+    lower: Vec<f64>,
+    upper: Vec<f64>,
+    /// Root bounds, restored by [`Self::reset_bounds`]. Artificial columns
+    /// are fixed `[0, 0]` here; cold solves re-open them transiently.
+    root_lower: Vec<f64>,
+    root_upper: Vec<f64>,
+    // ---- working state -------------------------------------------------
+    basis: Vec<usize>,
+    in_basis: Vec<bool>,
+    at_upper: Vec<bool>,
+    /// Explicit `B^{-1}`, row-major `m x m`.
+    binv: Vec<f64>,
+    /// Values of the basic variables, `xb[r]` belongs to `basis[r]`.
+    xb: Vec<f64>,
+    pivots_since_refactor: usize,
+    stats: RevisedStats,
+}
+
+impl RevisedSimplex {
+    /// Build the engine from a model. Fails on out-of-range variable
+    /// references; requires at least one structural variable.
+    pub fn new(lp: &LinProg) -> Result<Self, LpError> {
+        let n = lp.nvars;
+        let m = lp.rows.len();
+        for row in &lp.rows {
+            for &(v, _) in &row.coeffs {
+                if v >= n {
+                    return Err(LpError::VarOutOfRange { var: v, nvars: n });
+                }
+            }
+        }
+        let art_start = n + m;
+        let ncols = n + 2 * m;
+
+        let mut cols: Vec<Vec<(usize, f64)>> = vec![Vec::new(); ncols];
+        let mut b = vec![0.0; m];
+        let mut lower = vec![0.0; ncols];
+        let mut upper = vec![f64::INFINITY; ncols];
+        for (j, (&lo, up)) in lp.lower.iter().zip(lp.upper.iter()).enumerate() {
+            lower[j] = lo;
+            upper[j] = up.unwrap_or(f64::INFINITY);
+        }
+        for (r, row) in lp.rows.iter().enumerate() {
+            b[r] = row.rhs;
+            for &(v, c) in &row.coeffs {
+                // Merge duplicate (row, var) coefficients: entries for the
+                // same row are pushed consecutively into the column.
+                if let Some(last) = cols[v].last_mut() {
+                    if last.0 == r {
+                        last.1 += c;
+                        continue;
+                    }
+                }
+                cols[v].push((r, c));
+            }
+            let s = n + r;
+            cols[s].push((r, 1.0));
+            let (slo, sup) = match row.rel {
+                Relation::Le => (0.0, f64::INFINITY),
+                Relation::Ge => (f64::NEG_INFINITY, 0.0),
+                Relation::Eq => (0.0, 0.0),
+            };
+            lower[s] = slo;
+            upper[s] = sup;
+            // Artificial: entry sign assigned at cold-solve time; fixed at
+            // zero until then.
+            lower[art_start + r] = 0.0;
+            upper[art_start + r] = 0.0;
+        }
+
+        let mut cost = vec![0.0; ncols];
+        cost[..n].copy_from_slice(&lp.objective);
+
+        Ok(RevisedSimplex {
+            m,
+            nstruct: n,
+            ncols,
+            art_start,
+            cols,
+            b,
+            cost,
+            root_lower: lower.clone(),
+            root_upper: upper.clone(),
+            lower,
+            upper,
+            basis: vec![0; m],
+            in_basis: vec![false; ncols],
+            at_upper: vec![false; ncols],
+            binv: vec![0.0; m * m],
+            xb: vec![0.0; m],
+            pivots_since_refactor: 0,
+            stats: RevisedStats::default(),
+        })
+    }
+
+    /// Restore all variable bounds to the root model's.
+    pub fn reset_bounds(&mut self) {
+        self.lower.copy_from_slice(&self.root_lower);
+        self.upper.copy_from_slice(&self.root_upper);
+    }
+
+    /// Intersect the bounds of structural variable `var` with `[lo, hi]`.
+    pub fn tighten_var_bounds(&mut self, var: usize, lo: f64, hi: f64) {
+        debug_assert!(var < self.nstruct);
+        if lo > self.lower[var] {
+            self.lower[var] = lo;
+        }
+        if hi < self.upper[var] {
+            self.upper[var] = hi;
+        }
+    }
+
+    /// Aggregate iteration counters.
+    pub fn stats(&self) -> RevisedStats {
+        self.stats
+    }
+
+    // ------------------------------------------------------------ values --
+
+    /// Rest value of a nonbasic column under the current bounds.
+    fn nonbasic_value(&self, j: usize) -> f64 {
+        let (lo, up) = (self.lower[j], self.upper[j]);
+        if lo == up {
+            return lo;
+        }
+        if self.at_upper[j] {
+            if up.is_finite() {
+                up
+            } else if lo.is_finite() {
+                lo
+            } else {
+                0.0
+            }
+        } else if lo.is_finite() {
+            lo
+        } else if up.is_finite() {
+            up
+        } else {
+            0.0
+        }
+    }
+
+    /// Make a nonbasic column's bound status consistent with its bounds
+    /// (used when warm bounds differ from the ones the status was saved
+    /// under).
+    fn normalize_status(&mut self, j: usize) {
+        if self.lower[j] == self.upper[j] {
+            self.at_upper[j] = false;
+            return;
+        }
+        if self.at_upper[j] && !self.upper[j].is_finite() {
+            self.at_upper[j] = false;
+        }
+        if !self.at_upper[j] && !self.lower[j].is_finite() && self.upper[j].is_finite() {
+            self.at_upper[j] = true;
+        }
+    }
+
+    // ---------------------------------------------------- linear algebra --
+
+    /// `y = c_B^T B^{-1}` (simplex duals for the given cost vector).
+    fn duals(&self, cost: &[f64], y: &mut [f64]) {
+        for v in y.iter_mut() {
+            *v = 0.0;
+        }
+        for r in 0..self.m {
+            let cb = cost[self.basis[r]];
+            if cb != 0.0 {
+                let row = &self.binv[r * self.m..(r + 1) * self.m];
+                for (yi, &bi) in y.iter_mut().zip(row) {
+                    *yi += cb * bi;
+                }
+            }
+        }
+    }
+
+    fn reduced_cost(&self, cost: &[f64], y: &[f64], j: usize) -> f64 {
+        let mut d = cost[j];
+        for &(i, a) in &self.cols[j] {
+            d -= y[i] * a;
+        }
+        d
+    }
+
+    /// `w = B^{-1} A_j`.
+    fn ftran(&self, j: usize, w: &mut [f64]) {
+        for v in w.iter_mut() {
+            *v = 0.0;
+        }
+        for &(i, a) in &self.cols[j] {
+            if a == 0.0 {
+                continue;
+            }
+            for r in 0..self.m {
+                w[r] += self.binv[r * self.m + i] * a;
+            }
+        }
+    }
+
+    /// Product-form update of `B^{-1}` after `basis[r]` is replaced by the
+    /// column whose basis representation is `w` (so `w[r]` is the pivot).
+    fn update_binv(&mut self, r: usize, w: &[f64]) {
+        let m = self.m;
+        let inv = 1.0 / w[r];
+        let mut prow = vec![0.0; m];
+        for k in 0..m {
+            prow[k] = self.binv[r * m + k] * inv;
+        }
+        for i in 0..m {
+            let f = if i == r { 0.0 } else { w[i] };
+            if f.abs() > 1e-13 {
+                for k in 0..m {
+                    self.binv[i * m + k] -= f * prow[k];
+                }
+            }
+        }
+        self.binv[r * m..(r + 1) * m].copy_from_slice(&prow);
+        self.pivots_since_refactor += 1;
+    }
+
+    /// Rebuild `B^{-1}` from scratch (Gauss-Jordan with partial pivoting).
+    fn refactorize(&mut self) -> Result<(), LpError> {
+        let m = self.m;
+        if m == 0 {
+            return Ok(());
+        }
+        // aug = [B | I], row-major with width 2m.
+        let w = 2 * m;
+        let mut aug = vec![0.0; m * w];
+        for (c, &bj) in self.basis.iter().enumerate() {
+            for &(i, a) in &self.cols[bj] {
+                aug[i * w + c] = a;
+            }
+        }
+        for r in 0..m {
+            aug[r * w + m + r] = 1.0;
+        }
+        for c in 0..m {
+            // Partial pivot.
+            let mut p = c;
+            let mut best = aug[c * w + c].abs();
+            for r in c + 1..m {
+                let v = aug[r * w + c].abs();
+                if v > best {
+                    best = v;
+                    p = r;
+                }
+            }
+            if best < 1e-11 {
+                return Err(LpError::SingularBasis);
+            }
+            if p != c {
+                for k in 0..w {
+                    aug.swap(c * w + k, p * w + k);
+                }
+            }
+            let inv = 1.0 / aug[c * w + c];
+            for k in 0..w {
+                aug[c * w + k] *= inv;
+            }
+            for r in 0..m {
+                if r == c {
+                    continue;
+                }
+                let f = aug[r * w + c];
+                if f.abs() > 1e-13 {
+                    for k in 0..w {
+                        aug[r * w + k] -= f * aug[c * w + k];
+                    }
+                }
+            }
+        }
+        for r in 0..m {
+            self.binv[r * m..(r + 1) * m].copy_from_slice(&aug[r * w + m..r * w + 2 * m]);
+        }
+        self.pivots_since_refactor = 0;
+        self.stats.refactorizations += 1;
+        Ok(())
+    }
+
+    /// `xb = B^{-1} (b - N x_N)` from the current nonbasic rest values.
+    fn compute_xb(&mut self) {
+        let m = self.m;
+        let mut rhs = self.b.clone();
+        for j in 0..self.ncols {
+            if self.in_basis[j] {
+                continue;
+            }
+            let v = self.nonbasic_value(j);
+            if v != 0.0 {
+                for &(i, a) in &self.cols[j] {
+                    rhs[i] -= a * v;
+                }
+            }
+        }
+        for r in 0..m {
+            let row = &self.binv[r * m..(r + 1) * m];
+            self.xb[r] = row.iter().zip(&rhs).map(|(&bi, &ri)| bi * ri).sum();
+        }
+    }
+
+    fn maybe_refactor(&mut self) -> Result<(), LpError> {
+        if self.pivots_since_refactor >= REFACTOR_EVERY {
+            self.refactorize()?;
+            self.compute_xb();
+        }
+        Ok(())
+    }
+
+    // -------------------------------------------------------- primal loop --
+
+    /// Primal bounded simplex under `cost`, from a primal-feasible basis.
+    /// When `fix_leaving_artificials` is set (phase 1), any artificial that
+    /// leaves the basis is fixed at zero so it can never re-enter.
+    fn primal_loop(
+        &mut self,
+        cost: &[f64],
+        fix_leaving_artificials: bool,
+    ) -> Result<LpStatus, LpError> {
+        let m = self.m;
+        let max_iter = 1000 + 100 * (m + self.ncols);
+        let mut y = vec![0.0; m];
+        let mut w = vec![0.0; m];
+        let mut bland = false;
+        let mut degen_streak = 0usize;
+
+        for _ in 0..max_iter {
+            self.duals(cost, &mut y);
+
+            // Pricing: nonbasic at lower may increase (d < 0 improves), at
+            // upper may decrease (d > 0 improves). Fixed columns never move.
+            let mut entering: Option<(usize, f64)> = None; // (col, |d|)
+            for j in 0..self.ncols {
+                if self.in_basis[j] || self.lower[j] == self.upper[j] {
+                    continue;
+                }
+                let d = self.reduced_cost(cost, &y, j);
+                let eligible = if self.at_upper[j] {
+                    d > DUAL_TOL
+                } else {
+                    d < -DUAL_TOL
+                };
+                if !eligible {
+                    continue;
+                }
+                if bland {
+                    entering = Some((j, d.abs()));
+                    break; // smallest index
+                }
+                match entering {
+                    Some((_, best)) if d.abs() <= best => {}
+                    _ => entering = Some((j, d.abs())),
+                }
+            }
+            let Some((j, _)) = entering else {
+                return Ok(LpStatus::Optimal);
+            };
+            self.stats.primal_iters += 1;
+
+            let dir = if self.at_upper[j] { -1.0 } else { 1.0 };
+            self.ftran(j, &mut w);
+
+            // Bounded ratio test: the entering step is limited by its own
+            // bound range (flip) and by every basic variable hitting one of
+            // its bounds.
+            let mut t_best = self.upper[j] - self.lower[j]; // may be +inf
+            let mut leaving: Option<(usize, bool, f64)> = None; // (row, at_upper, |delta|)
+            for r in 0..m {
+                let delta = -w[r] * dir; // d xb[r] / d t
+                let bv = self.basis[r];
+                let (t_r, hits_upper) = if delta > PIV_TOL {
+                    let room = self.upper[bv] - self.xb[r];
+                    if !room.is_finite() {
+                        continue;
+                    }
+                    ((room / delta).max(0.0), true)
+                } else if delta < -PIV_TOL {
+                    let room = self.xb[r] - self.lower[bv];
+                    if !room.is_finite() {
+                        continue;
+                    }
+                    ((room / -delta).max(0.0), false)
+                } else {
+                    continue;
+                };
+                // Monotone: never accept a larger step; among (near-)ties
+                // prefer the larger pivot magnitude for stability.
+                let take = match leaving {
+                    None => t_r < t_best - 1e-12,
+                    Some((_, _, best_mag)) => {
+                        t_r < t_best - 1e-10 || (t_r <= t_best && delta.abs() > best_mag)
+                    }
+                };
+                if take {
+                    t_best = t_r.min(t_best);
+                    leaving = Some((r, hits_upper, delta.abs()));
+                }
+            }
+
+            if !t_best.is_finite() {
+                return Ok(LpStatus::Unbounded);
+            }
+            if t_best <= 1e-10 {
+                degen_streak += 1;
+                if degen_streak > DEGEN_SWITCH {
+                    bland = true;
+                }
+            } else {
+                degen_streak = 0;
+                bland = false;
+            }
+
+            match leaving {
+                None => {
+                    // Bound flip: no basis change.
+                    for r in 0..m {
+                        self.xb[r] -= w[r] * dir * t_best;
+                    }
+                    self.at_upper[j] = !self.at_upper[j];
+                }
+                Some((r, hits_upper, _)) => {
+                    let enter_val = self.nonbasic_value(j) + dir * t_best;
+                    for i in 0..m {
+                        self.xb[i] -= w[i] * dir * t_best;
+                    }
+                    let lv = self.basis[r];
+                    self.basis[r] = j;
+                    self.in_basis[j] = true;
+                    self.in_basis[lv] = false;
+                    self.at_upper[lv] = hits_upper;
+                    self.xb[r] = enter_val;
+                    self.update_binv(r, &w);
+                    if fix_leaving_artificials && lv >= self.art_start {
+                        self.lower[lv] = 0.0;
+                        self.upper[lv] = 0.0;
+                        self.at_upper[lv] = false;
+                    }
+                    self.maybe_refactor()?;
+                }
+            }
+        }
+        Err(LpError::IterationLimit)
+    }
+
+    // ---------------------------------------------------------- dual loop --
+
+    /// Dual bounded simplex under the phase-2 costs, from a dual-feasible
+    /// basis. Returns `Ok(true)` when primal feasibility is restored and
+    /// `Ok(false)` on a primal-infeasibility certificate (a row whose basic
+    /// variable cannot be brought inside its bounds by any admissible
+    /// column — independent of the costs, so always sound).
+    fn dual_loop(&mut self) -> Result<bool, LpError> {
+        let m = self.m;
+        let max_iter = 1000 + 100 * (m + self.ncols);
+        let cost = self.cost.clone();
+        let mut y = vec![0.0; m];
+        let mut w = vec![0.0; m];
+        let mut bland = false;
+        let mut degen_streak = 0usize;
+
+        for _ in 0..max_iter {
+            // Leaving row: most violated basic variable.
+            let mut leave: Option<(usize, bool)> = None; // (row, below_lower)
+            let mut worst = 0.0;
+            for r in 0..m {
+                let bv = self.basis[r];
+                let v = self.xb[r];
+                let tol = FEAS_TOL * (1.0 + v.abs());
+                if v < self.lower[bv] - tol {
+                    let viol = self.lower[bv] - v;
+                    if viol > worst {
+                        worst = viol;
+                        leave = Some((r, true));
+                    }
+                } else if v > self.upper[bv] + tol {
+                    let viol = v - self.upper[bv];
+                    if viol > worst {
+                        worst = viol;
+                        leave = Some((r, false));
+                    }
+                }
+            }
+            let Some((r, below)) = leave else {
+                return Ok(true);
+            };
+            self.stats.dual_iters += 1;
+
+            self.duals(&cost, &mut y);
+            let rho = self.binv[r * m..(r + 1) * m].to_vec();
+
+            // Dual ratio test: pick the admissible entering column with the
+            // smallest |d_j / alpha_j| (preserves dual feasibility).
+            let mut best: Option<(usize, f64, f64)> = None; // (col, ratio, |alpha|)
+            for j in 0..self.ncols {
+                if self.in_basis[j] || self.lower[j] == self.upper[j] {
+                    continue;
+                }
+                let mut alpha = 0.0;
+                for &(i, a) in &self.cols[j] {
+                    alpha += rho[i] * a;
+                }
+                if alpha.abs() <= PIV_TOL {
+                    continue;
+                }
+                let at_up = self.at_upper[j];
+                let admissible = if below {
+                    (!at_up && alpha < 0.0) || (at_up && alpha > 0.0)
+                } else {
+                    (!at_up && alpha > 0.0) || (at_up && alpha < 0.0)
+                };
+                if !admissible {
+                    continue;
+                }
+                let d = self.reduced_cost(&cost, &y, j);
+                let num = if at_up { (-d).max(0.0) } else { d.max(0.0) };
+                let ratio = num / alpha.abs();
+                let take = match best {
+                    None => true,
+                    Some(_) if bland => false, // first (smallest) index wins
+                    Some((_, br, ba)) => {
+                        ratio < br - 1e-9 || (ratio < br + 1e-9 && alpha.abs() > ba)
+                    }
+                };
+                if take {
+                    best = Some((j, ratio, alpha.abs()));
+                }
+            }
+            let Some((j, _, _)) = best else {
+                return Ok(false);
+            };
+
+            self.ftran(j, &mut w);
+            let piv = w[r];
+            if piv.abs() <= PIV_TOL * 0.5 {
+                // Factorization drift: rebuild and retry the iteration.
+                self.refactorize()?;
+                self.compute_xb();
+                continue;
+            }
+            let lv = self.basis[r];
+            let target = if below {
+                self.lower[lv]
+            } else {
+                self.upper[lv]
+            };
+            let dx_j = (self.xb[r] - target) / piv;
+            if dx_j.abs() <= 1e-10 {
+                degen_streak += 1;
+                if degen_streak > DEGEN_SWITCH {
+                    bland = true;
+                }
+            } else {
+                degen_streak = 0;
+                bland = false;
+            }
+
+            let enter_val = self.nonbasic_value(j) + dx_j;
+            for i in 0..m {
+                self.xb[i] -= w[i] * dx_j;
+            }
+            self.basis[r] = j;
+            self.in_basis[j] = true;
+            self.in_basis[lv] = false;
+            // The leaving variable exits at the bound it violated.
+            self.at_upper[lv] = !below;
+            self.normalize_status(lv);
+            self.xb[r] = enter_val;
+            self.update_binv(r, &w);
+            self.maybe_refactor()?;
+        }
+        Err(LpError::IterationLimit)
+    }
+
+    // -------------------------------------------------------------- solves --
+
+    fn bounds_consistent(&self) -> bool {
+        (0..self.ncols).all(|j| self.lower[j] <= self.upper[j] + FEAS_TOL)
+    }
+
+    fn infeasible_solution(&self) -> LpSolution {
+        LpSolution {
+            status: LpStatus::Infeasible,
+            x: vec![0.0; self.nstruct],
+            objective: 0.0,
+            basis: None,
+        }
+    }
+
+    fn extract(&self, status: LpStatus) -> LpSolution {
+        let mut x = vec![0.0; self.nstruct];
+        for (j, xj) in x.iter_mut().enumerate() {
+            if !self.in_basis[j] {
+                *xj = self.nonbasic_value(j);
+            }
+        }
+        for r in 0..self.m {
+            if self.basis[r] < self.nstruct {
+                x[self.basis[r]] = self.xb[r];
+            }
+        }
+        let objective = x
+            .iter()
+            .zip(&self.cost[..self.nstruct])
+            .map(|(xi, ci)| xi * ci)
+            .sum();
+        let basis = if status == LpStatus::Optimal {
+            Some(WarmBasis {
+                basis: self.basis.clone(),
+                at_upper: self.at_upper.clone(),
+            })
+        } else {
+            None
+        };
+        LpSolution {
+            status,
+            x,
+            objective,
+            basis,
+        }
+    }
+
+    /// Two-phase cold solve from the slack basis.
+    pub fn solve_cold(&mut self) -> Result<LpSolution, LpError> {
+        if !self.bounds_consistent() {
+            return Ok(self.infeasible_solution());
+        }
+        let m = self.m;
+        let n = self.nstruct;
+
+        // Close any artificials left open by a previous aborted solve and
+        // reset the nonbasic rest state.
+        for a in self.art_start..self.ncols {
+            self.lower[a] = 0.0;
+            self.upper[a] = 0.0;
+        }
+        for j in 0..self.ncols {
+            self.in_basis[j] = false;
+            self.at_upper[j] = false;
+            self.normalize_status(j);
+        }
+        // Slacks of `>=` rows rest at their upper bound (zero).
+        // (normalize_status already moved -inf-lower columns to upper.)
+
+        // Residuals with every column nonbasic.
+        let mut r_vec = self.b.clone();
+        for j in 0..n {
+            let v = self.nonbasic_value(j);
+            if v != 0.0 {
+                for &(i, a) in &self.cols[j] {
+                    r_vec[i] -= a * v;
+                }
+            }
+        }
+
+        // Initial basis: the slack where it can absorb the residual, else
+        // an artificial carrying |residual|.
+        let mut any_artificial = false;
+        let mut phase1_cost = vec![0.0; self.ncols];
+        for i in 0..m {
+            let s = n + i;
+            let ri = r_vec[i];
+            let tol = FEAS_TOL * (1.0 + ri.abs());
+            if ri >= self.lower[s] - tol && ri <= self.upper[s] + tol {
+                self.basis[i] = s;
+                self.in_basis[s] = true;
+                self.xb[i] = ri;
+            } else {
+                let a = self.art_start + i;
+                let sign = if ri >= 0.0 { 1.0 } else { -1.0 };
+                self.cols[a] = vec![(i, sign)];
+                self.lower[a] = 0.0;
+                self.upper[a] = f64::INFINITY;
+                self.basis[i] = a;
+                self.in_basis[a] = true;
+                self.xb[i] = ri.abs();
+                phase1_cost[a] = 1.0;
+                any_artificial = true;
+            }
+        }
+        // Diagonal B^{-1}: +1 for slacks, the artificial's sign otherwise.
+        for v in self.binv.iter_mut() {
+            *v = 0.0;
+        }
+        for i in 0..m {
+            let bj = self.basis[i];
+            let diag = if bj >= self.art_start {
+                self.cols[bj][0].1
+            } else {
+                1.0
+            };
+            self.binv[i * m + i] = diag;
+        }
+        self.pivots_since_refactor = 0;
+
+        if any_artificial {
+            let status = self.primal_loop(&phase1_cost, true)?;
+            debug_assert!(
+                status != LpStatus::Unbounded,
+                "phase-1 objective is bounded below"
+            );
+            let mut infeas = 0.0;
+            for r in 0..m {
+                if phase1_cost[self.basis[r]] != 0.0 {
+                    infeas += self.xb[r].max(0.0);
+                }
+            }
+            let bscale = self.b.iter().fold(0.0f64, |acc, &v| acc.max(v.abs()));
+            if infeas > 1e-7 * (1.0 + bscale) {
+                return Ok(self.infeasible_solution());
+            }
+            // Phase 2 must not touch the artificials again.
+            for a in self.art_start..self.ncols {
+                self.lower[a] = 0.0;
+                self.upper[a] = 0.0;
+                if !self.in_basis[a] {
+                    self.at_upper[a] = false;
+                }
+            }
+        }
+
+        let cost = self.cost.clone();
+        let status = self.primal_loop(&cost, false)?;
+        Ok(self.extract(status))
+    }
+
+    /// Warm re-solve from a saved basis after bound edits: dual simplex to
+    /// restore primal feasibility, then a primal cleanup pass.
+    pub fn solve_warm(&mut self, warm: &WarmBasis) -> Result<LpSolution, LpError> {
+        if warm.basis.len() != self.m || warm.at_upper.len() != self.ncols {
+            return Err(LpError::SingularBasis);
+        }
+        if !self.bounds_consistent() {
+            return Ok(self.infeasible_solution());
+        }
+        for f in self.in_basis.iter_mut() {
+            *f = false;
+        }
+        for (r, &bj) in warm.basis.iter().enumerate() {
+            if bj >= self.ncols || self.in_basis[bj] {
+                return Err(LpError::SingularBasis);
+            }
+            self.basis[r] = bj;
+            self.in_basis[bj] = true;
+        }
+        self.at_upper.copy_from_slice(&warm.at_upper);
+        for j in 0..self.ncols {
+            if !self.in_basis[j] {
+                self.normalize_status(j);
+            }
+        }
+        self.refactorize()?;
+        self.compute_xb();
+
+        if !self.dual_loop()? {
+            return Ok(self.infeasible_solution());
+        }
+        // Dual feasibility was maintained, so this is usually a no-op; it
+        // also certifies optimality after numerical drift.
+        let cost = self.cost.clone();
+        let status = self.primal_loop(&cost, false)?;
+        Ok(self.extract(status))
+    }
+}

@@ -1,8 +1,15 @@
-//! Dense two-phase primal simplex with Bland's anti-cycling rule.
+//! The LP model container plus the dense two-phase primal simplex
+//! (Bland's anti-cycling rule), kept as the reference backend.
 //!
 //! Model: `min c·x` subject to row constraints `a·x {<=,=,>=} b` and
-//! variable bounds `0 <= x_j <= u_j` (upper bounds handled by explicit
-//! constraint rows for simplicity — problem sizes here are small).
+//! variable bounds `l_j <= x_j <= u_j` (`l_j >= 0`).
+//!
+//! [`LinProg::solve`] dispatches to the bounded-variable *revised* simplex
+//! in [`super::revised`], which treats the bounds natively and supports
+//! warm starts. The dense tableau here materializes bounds as extra
+//! constraint rows; it is retained behind [`LinProg::solve_dense`] (and the
+//! `DenseBackend` of the [`super::LpBackend`] trait) so property tests can
+//! cross-check the two implementations.
 
 /// Constraint relation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -28,6 +35,9 @@ pub enum LpError {
     /// Iteration limit hit (anti-cycling failed — should not happen with
     /// Bland's rule; kept as a hard safety net).
     IterationLimit,
+    /// A (warm-start) basis matrix was numerically singular; callers
+    /// should fall back to a cold solve.
+    SingularBasis,
 }
 
 impl std::fmt::Display for LpError {
@@ -37,6 +47,7 @@ impl std::fmt::Display for LpError {
                 write!(f, "variable {var} out of range ({nvars} vars)")
             }
             LpError::IterationLimit => write!(f, "simplex iteration limit exceeded"),
+            LpError::SingularBasis => write!(f, "singular (warm-start) basis"),
         }
     }
 }
@@ -51,20 +62,24 @@ pub struct LpSolution {
     pub x: Vec<f64>,
     /// Objective value at `x` (undefined unless `status == Optimal`).
     pub objective: f64,
+    /// Optimal basis snapshot for warm restarts (revised backend only;
+    /// `None` from the dense backend or on non-optimal statuses).
+    pub basis: Option<super::revised::WarmBasis>,
 }
 
-struct Row {
-    coeffs: Vec<(usize, f64)>,
-    rel: Relation,
-    rhs: f64,
+pub(super) struct Row {
+    pub(super) coeffs: Vec<(usize, f64)>,
+    pub(super) rel: Relation,
+    pub(super) rhs: f64,
 }
 
 /// A linear program under construction.
 pub struct LinProg {
-    nvars: usize,
-    objective: Vec<f64>,
-    rows: Vec<Row>,
-    upper: Vec<Option<f64>>,
+    pub(super) nvars: usize,
+    pub(super) objective: Vec<f64>,
+    pub(super) rows: Vec<Row>,
+    pub(super) lower: Vec<f64>,
+    pub(super) upper: Vec<Option<f64>>,
 }
 
 const EPS: f64 = 1e-9;
@@ -76,6 +91,7 @@ impl LinProg {
             nvars,
             objective: vec![0.0; nvars],
             rows: Vec::new(),
+            lower: vec![0.0; nvars],
             upper: vec![None; nvars],
         }
     }
@@ -110,14 +126,19 @@ impl LinProg {
         });
     }
 
-    /// Impose `x_var <= ub` (in addition to the implicit `x >= 0`).
+    /// Impose `x_var <= ub` (in addition to the default `x >= 0`).
     pub fn set_upper_bound(&mut self, var: usize, ub: f64) {
         self.upper[var] = Some(ub);
     }
 
-    /// Solve with two-phase simplex.
-    pub fn solve(&self) -> Result<LpSolution, LpError> {
-        // Validate references first.
+    /// Impose `x_var >= lb` (replacing the default `x >= 0`). Must be
+    /// non-negative: the dense backend keeps the implicit `x >= 0` domain.
+    pub fn set_lower_bound(&mut self, var: usize, lb: f64) {
+        assert!(lb >= 0.0 && lb.is_finite(), "lower bound must be finite and >= 0");
+        self.lower[var] = lb;
+    }
+
+    fn validate(&self) -> Result<(), LpError> {
         for row in &self.rows {
             for &(v, _) in &row.coeffs {
                 if v >= self.nvars {
@@ -128,30 +149,51 @@ impl LinProg {
                 }
             }
         }
-        if self.nvars == 0 {
-            // Feasible iff every constant row is satisfied by the empty x.
-            for row in &self.rows {
-                let lhs = 0.0;
-                let ok = match row.rel {
-                    Relation::Le => lhs <= row.rhs + EPS,
-                    Relation::Eq => (lhs - row.rhs).abs() <= EPS,
-                    Relation::Ge => lhs >= row.rhs - EPS,
-                };
-                if !ok {
-                    return Ok(LpSolution {
-                        status: LpStatus::Infeasible,
-                        x: vec![],
-                        objective: 0.0,
-                    });
-                }
-            }
-            return Ok(LpSolution {
-                status: LpStatus::Optimal,
-                x: vec![],
-                objective: 0.0,
-            });
-        }
+        Ok(())
+    }
 
+    /// Constant problem (no variables): feasible iff every row holds at 0.
+    fn solve_empty(&self) -> LpSolution {
+        for row in &self.rows {
+            let lhs = 0.0;
+            let ok = match row.rel {
+                Relation::Le => lhs <= row.rhs + EPS,
+                Relation::Eq => (lhs - row.rhs).abs() <= EPS,
+                Relation::Ge => lhs >= row.rhs - EPS,
+            };
+            if !ok {
+                return LpSolution {
+                    status: LpStatus::Infeasible,
+                    x: vec![],
+                    objective: 0.0,
+                    basis: None,
+                };
+            }
+        }
+        LpSolution {
+            status: LpStatus::Optimal,
+            x: vec![],
+            objective: 0.0,
+            basis: None,
+        }
+    }
+
+    /// Solve with the bounded-variable revised simplex (default backend).
+    pub fn solve(&self) -> Result<LpSolution, LpError> {
+        self.validate()?;
+        if self.nvars == 0 {
+            return Ok(self.solve_empty());
+        }
+        super::revised::RevisedSimplex::new(self)?.solve_cold()
+    }
+
+    /// Solve with the dense two-phase tableau simplex (reference backend;
+    /// variable bounds are materialized as constraint rows).
+    pub fn solve_dense(&self) -> Result<LpSolution, LpError> {
+        self.validate()?;
+        if self.nvars == 0 {
+            return Ok(self.solve_empty());
+        }
         Tableau::build(self).solve()
     }
 }
@@ -186,6 +228,13 @@ impl Tableau {
                 let mut dense = vec![0.0; lp.nvars];
                 dense[v] = 1.0;
                 rows.push((dense, Relation::Le, *u));
+            }
+        }
+        for (v, &lb) in lp.lower.iter().enumerate() {
+            if lb > 0.0 {
+                let mut dense = vec![0.0; lp.nvars];
+                dense[v] = 1.0;
+                rows.push((dense, Relation::Ge, lb));
             }
         }
         // Normalize: rhs >= 0.
@@ -284,6 +333,7 @@ impl Tableau {
                     status: LpStatus::Infeasible,
                     x: vec![0.0; self.nstruct],
                     objective: 0.0,
+                    basis: None,
                 });
             }
             // Drive any artificial still basic (at zero) out of the basis.
@@ -315,6 +365,7 @@ impl Tableau {
             status,
             x,
             objective: obj,
+            basis: None,
         })
     }
 

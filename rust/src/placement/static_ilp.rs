@@ -2,7 +2,7 @@
 //! fallback.
 
 use crate::config::{ExperimentConfig, NUM_RESOURCES};
-use crate::ilp::{BnbOptions, IlpModel, IlpStatus, LinExpr, VarKind};
+use crate::ilp::{BnbOptions, BnbStats, IlpModel, IlpStatus, LinExpr, NodeLpMode, VarKind};
 use crate::lp::Relation;
 use crate::microservice::Application;
 use crate::network::Topology;
@@ -35,6 +35,10 @@ pub struct PlacementParams {
     pub exact: bool,
     /// Branch-and-bound node budget (exact mode).
     pub max_nodes: usize,
+    /// Per-node LP engine for the exact solver: warm-started revised
+    /// simplex (default) or the dense-rebuild baseline (benchmarks and
+    /// cross-checks only).
+    pub node_lp: NodeLpMode,
     /// Restrict core candidates to edge servers (§I: "computationally
     /// lightweight and heavyweight MSs deployed onto edge devices and edge
     /// servers, respectively"). Keeps the integer program at the paper's
@@ -54,6 +58,7 @@ impl PlacementParams {
             force_fallback: false,
             exact: false,
             max_nodes: 5_000,
+            node_lp: NodeLpMode::WarmRevised,
             core_on_es_only: true,
         }
     }
@@ -72,6 +77,9 @@ pub struct CorePlacement {
     pub support: usize,
     /// The (capacity-capped) demand target per core MS that C2 enforced.
     pub demand_target: Vec<f64>,
+    /// Branch-and-bound statistics (exact mode only; `None` for the
+    /// greedy and LP+rounding pipelines).
+    pub stats: Option<BnbStats>,
 }
 
 impl CorePlacement {
@@ -417,6 +425,7 @@ fn lp_round(
         used_fallback: false,
         support,
         demand_target: demand.to_vec(),
+        stats: None,
     })
 }
 
@@ -554,6 +563,7 @@ fn try_ilp(
     let opts = BnbOptions {
         max_nodes: params.max_nodes,
         initial_incumbent,
+        node_lp: params.node_lp,
         ..Default::default()
     };
     let sol = model.solve(&opts).ok()?;
@@ -579,6 +589,7 @@ fn try_ilp(
         used_fallback: false,
         support: supp,
         demand_target: demand.to_vec(),
+        stats: Some(sol.stats),
     })
 }
 
@@ -707,5 +718,6 @@ fn greedy_fallback(
         used_fallback: true,
         support,
         demand_target: demand.to_vec(),
+        stats: None,
     }
 }

@@ -6,11 +6,15 @@ use fmedge::config::{ExperimentConfig, NUM_RESOURCES};
 use fmedge::controller::{greedy_light_deployment, LightRequest, OnlineParams, VirtualQueues};
 use fmedge::effcap::{EffCapEstimator, GTable, GTableParams};
 use fmedge::graph::Dag;
+use fmedge::ilp::{BnbOptions, IlpModel, IlpStatus, LinExpr, NodeLpMode, VarKind};
 use fmedge::lp::{LinProg, LpStatus, Relation};
 use fmedge::metrics::{kde_violin, quantile, Summary};
+use fmedge::microservice::build_fig1_application;
+use fmedge::placement::{solve_static_placement, PlacementParams, QosScores, ScoreParams};
 use fmedge::rng::{Distribution, Gamma, Rng, Xoshiro256};
 use fmedge::routing::DistanceMatrix;
 use fmedge::testkit::{self, Gen};
+use fmedge::workload::WorkloadGenerator;
 
 // --------------------------------------------------------------- helpers --
 
@@ -272,6 +276,185 @@ fn prop_lp_optimum_is_feasible() {
             }
         },
     );
+}
+
+/// Build a random bounded LP exercising all relation kinds plus native
+/// lower/upper variable bounds. Every variable is boxed, so the LP is
+/// never unbounded and both backends must agree on Optimal/Infeasible.
+fn random_boxed_lp(n: usize, rng: &mut Xoshiro256) -> LinProg {
+    let mut lp = LinProg::minimize(n);
+    let c: Vec<f64> = (0..n).map(|_| rng.range_f64(-3.0, 3.0)).collect();
+    lp.set_objective(&c);
+    for j in 0..n {
+        let lo = if rng.next_below(3) == 0 {
+            rng.range_f64(0.0, 2.0)
+        } else {
+            0.0
+        };
+        let hi = lo + rng.range_f64(0.5, 8.0);
+        if lo > 0.0 {
+            lp.set_lower_bound(j, lo);
+        }
+        lp.set_upper_bound(j, hi);
+    }
+    for _ in 0..rng.range_usize(1, 6) {
+        let coeffs: Vec<(usize, f64)> = (0..n)
+            .map(|j| (j, rng.range_f64(0.2, 3.0)))
+            .collect();
+        match rng.next_below(5) {
+            0 => lp.add_constraint(&coeffs, Relation::Ge, rng.range_f64(0.0, 4.0)),
+            1 => lp.add_constraint(&coeffs, Relation::Eq, rng.range_f64(0.5, 6.0)),
+            _ => lp.add_constraint(&coeffs, Relation::Le, rng.range_f64(2.0, 25.0)),
+        }
+    }
+    lp
+}
+
+#[test]
+fn prop_revised_simplex_matches_dense_on_random_lps() {
+    // The acceptance bar: >= 100 random LPs where the warm-startable
+    // revised simplex and the dense reference tableau agree on status and
+    // optimal objective.
+    testkit::check(
+        150,
+        testkit::pair_of(testkit::usize_in(1, 7), testkit::u64_up_to(u64::MAX)),
+        |&(n, seed)| {
+            let mut rng = Xoshiro256::seed_from(seed);
+            let lp = random_boxed_lp(n, &mut rng);
+            let (dense, fast) = match (lp.solve_dense(), lp.solve()) {
+                (Ok(d), Ok(f)) => (d, f),
+                _ => return false,
+            };
+            if dense.status != fast.status {
+                return false;
+            }
+            if dense.status != LpStatus::Optimal {
+                return true;
+            }
+            if (dense.objective - fast.objective).abs() > 1e-6 * (1.0 + dense.objective.abs()) {
+                return false;
+            }
+            // The revised optimum must be a real point.
+            fast.x.iter().all(|x| x.is_finite())
+        },
+    );
+}
+
+#[test]
+fn prop_bnb_warm_start_matches_dense_rebuild() {
+    // Random boxed MILPs solved to proven optimality under both node-LP
+    // engines must agree on status and objective: warm-starting is a pure
+    // performance change.
+    testkit::check(
+        50,
+        testkit::pair_of(testkit::usize_in(2, 8), testkit::u64_up_to(u64::MAX)),
+        |&(n, seed)| {
+            let mut rng = Xoshiro256::seed_from(seed ^ 0x9e3779b97f4a7c15);
+            let mut m = IlpModel::new();
+            let vars: Vec<_> = (0..n)
+                .map(|_| {
+                    let kind = if rng.next_below(2) == 0 {
+                        VarKind::Binary
+                    } else {
+                        VarKind::Integer {
+                            ub: Some(1 + rng.next_below(4)),
+                        }
+                    };
+                    m.add_var(kind, rng.range_f64(-5.0, 5.0))
+                })
+                .collect();
+            for _ in 0..rng.range_usize(1, 3) {
+                let terms: Vec<_> = vars
+                    .iter()
+                    .map(|&v| (v, rng.range_f64(0.0, 3.0)))
+                    .collect();
+                m.add_constraint(
+                    LinExpr::from_terms(&terms),
+                    Relation::Le,
+                    rng.range_f64(1.0, 2.0 * n as f64),
+                );
+            }
+            if rng.next_below(2) == 0 {
+                let terms: Vec<_> = vars
+                    .iter()
+                    .map(|&v| (v, rng.range_f64(0.5, 2.0)))
+                    .collect();
+                m.add_constraint(
+                    LinExpr::from_terms(&terms),
+                    Relation::Ge,
+                    rng.range_f64(0.0, 2.0),
+                );
+            }
+            let solve_with = |mode: NodeLpMode| {
+                m.solve(&BnbOptions {
+                    node_lp: mode,
+                    ..Default::default()
+                })
+            };
+            let (warm, dense) = match (
+                solve_with(NodeLpMode::WarmRevised),
+                solve_with(NodeLpMode::DenseRebuild),
+            ) {
+                (Ok(w), Ok(d)) => (w, d),
+                _ => return false,
+            };
+            if warm.status != dense.status {
+                return false;
+            }
+            match warm.status {
+                IlpStatus::Optimal => {
+                    (warm.objective - dense.objective).abs()
+                        <= 1e-6 * (1.0 + dense.objective.abs())
+                        && m.is_feasible(&warm.x, 1e-6)
+                }
+                IlpStatus::Infeasible => true,
+                // Boxed vars: never unbounded; node budget is generous.
+                _ => false,
+            }
+        },
+    );
+}
+
+#[test]
+fn bnb_warm_start_is_objective_invariant_on_placement_instances() {
+    // Exact static placement on (reduced-size) seed instances: the
+    // warm-started engine must reproduce the dense-rebuild objective, so
+    // warm-starting cannot change placement results.
+    for seed in [4u64, 5, 6] {
+        let mut cfg = ExperimentConfig::paper_default();
+        cfg.network.num_eds = 4;
+        cfg.network.num_ess = 2;
+        let mut rng = Xoshiro256::seed_from(seed);
+        let app = build_fig1_application(&cfg, &mut rng);
+        let topo = fmedge::network::Topology::generate(&cfg, &mut rng);
+        let gen = WorkloadGenerator::new(&cfg, &app, &topo, &mut rng);
+        let dm = DistanceMatrix::build(&topo, 1.0);
+        let scores = QosScores::compute(
+            &app,
+            &topo,
+            &dm,
+            gen.users(),
+            &ScoreParams::from_config(&cfg.controller),
+        );
+        let mut p = PlacementParams::from_config(&cfg, cfg.sim.slots);
+        p.exact = true;
+        p.max_nodes = 20_000;
+        p.node_lp = NodeLpMode::WarmRevised;
+        let warm = solve_static_placement(&app, &topo, &scores, &p);
+        p.node_lp = NodeLpMode::DenseRebuild;
+        let dense = solve_static_placement(&app, &topo, &scores, &p);
+        assert_eq!(
+            warm.used_fallback, dense.used_fallback,
+            "seed {seed}: engines disagree on ILP success"
+        );
+        assert!(
+            (warm.objective - dense.objective).abs()
+                <= 1e-6 * (1.0 + dense.objective.abs()),
+            "seed {seed}: warm objective {} != dense objective {}",
+            warm.objective,
+            dense.objective
+        );
+    }
 }
 
 #[test]
