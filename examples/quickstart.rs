@@ -4,16 +4,19 @@
 //! static tier, runs the online controller for a short horizon, and
 //! prints the paper's two headline metrics.
 //!
-//! Run: `cargo run --release --example quickstart`
+//! Run: `cargo run --release --example quickstart [-- --slots N]`
+//! (`--slots` shrinks the horizon — CI smoke-runs it tiny.)
 
 use fmedge::baselines::Proposal;
+use fmedge::cli::Args;
 use fmedge::config::ExperimentConfig;
 use fmedge::sim::{run_trial, SimEnv, SimOptions};
 
 fn main() {
+    let args = Args::parse(std::env::args().skip(1)).unwrap_or_default();
     // 1. Configuration — Table I defaults; tweak anything via TOML or code.
     let mut cfg = ExperimentConfig::paper_default();
-    cfg.sim.slots = 300;
+    cfg.sim.slots = args.get_usize("slots", 300).unwrap_or(300);
     println!("{}", cfg.describe());
 
     // 2. Environment — application (Fig. 1), topology (Fig. 2), users,

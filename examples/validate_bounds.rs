@@ -1,0 +1,83 @@
+//! Measured-vs-analytic bound validation on a paired trace (EXPERIMENTS
+//! §P2): record one realized workload, run the *slotted* engine (which
+//! assumes the effective-capacity bound `g_{m,ε}(y)`) and the *DES*
+//! engine (which measures real per-replica queueing) on the same trace,
+//! and report per-light-service empirical violation rates against ε.
+//!
+//! Run: `cargo run --release --example validate_bounds`
+//! Options: `-- --seeds N --slots N --epsilon X --load X`
+
+use fmedge::baselines::Proposal;
+use fmedge::cli::Args;
+use fmedge::config::ExperimentConfig;
+use fmedge::des::{pool, report, run_des_trial, validate_bounds, DesOptions};
+use fmedge::sim::{record_trace, run_trial_traced, SimEnv, SimOptions};
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1)).unwrap_or_default();
+    let seeds = args.get_usize("seeds", 3).unwrap_or(3);
+    let mut cfg = ExperimentConfig::paper_default();
+    cfg.sim.slots = args.get_usize("slots", 300).unwrap_or(300);
+    cfg.controller.epsilon = args.get_f64("epsilon", cfg.controller.epsilon).unwrap();
+    cfg.sim.load_multiplier = args.get_f64("load", cfg.sim.load_multiplier).unwrap();
+    println!(
+        "bound validation: eps={} slots={} load={} seeds={seeds}",
+        cfg.controller.epsilon, cfg.sim.slots, cfg.sim.load_multiplier
+    );
+
+    let mut per_trial = Vec::new();
+    println!("\nseed   tasks   on-time slotted   on-time DES   sojourns measured");
+    for i in 0..seeds {
+        let seed = cfg.sim.seed + i as u64;
+        let env = SimEnv::build(&cfg, seed);
+        let opts = SimOptions::from_config(&cfg);
+        let trace = record_trace(&env, seed, &opts);
+
+        // Paired comparison: both engines admit exactly this workload.
+        let slotted = run_trial_traced(&env, &mut Proposal::new(), seed, &opts, &trace);
+        let des = run_des_trial(
+            &env,
+            &mut Proposal::new(),
+            seed,
+            &DesOptions::from_sim(&opts),
+            &trace,
+        );
+        let measured: usize = des.service_obs.iter().map(|o| o.samples.len()).sum();
+        println!(
+            "{seed:<6} {:<7} {:<17.3} {:<13.3} {measured}",
+            des.total_tasks,
+            slotted.on_time_rate(),
+            des.on_time_rate(),
+        );
+        per_trial.push(validate_bounds(&env.gtable, &des));
+    }
+
+    let pooled = pool(&per_trial);
+    println!(
+        "\nmeasured P(sojourn > g_{{m,eps}}(y)) per light service, eps={} (pooled over {} seeds):",
+        cfg.controller.epsilon, seeds
+    );
+    println!("{}", report(&pooled));
+
+    let total: usize = pooled.iter().map(|v| v.samples).sum();
+    let violations: usize = pooled.iter().map(|v| v.violations).sum();
+    let worst = pooled
+        .iter()
+        .filter(|v| v.samples > 0)
+        .map(|v| v.violation_rate())
+        .fold(0.0f64, f64::max);
+    let all_hold = pooled.iter().all(|v| v.holds(0.0));
+    println!(
+        "aggregate: {}/{} violations ({:.4}); worst service {:.4}; guarantee {} at eps={}",
+        violations,
+        total,
+        if total > 0 {
+            violations as f64 / total as f64
+        } else {
+            0.0
+        },
+        worst,
+        if all_hold { "HOLDS" } else { "VIOLATED" },
+        cfg.controller.epsilon
+    );
+}

@@ -4,6 +4,8 @@
 //! * `config --show` — print the Table I parameter set in use.
 //! * `place` — run the static core placement and print the matrix.
 //! * `simulate` — run trials of a strategy and print metrics.
+//! * `des` — run the discrete-event queueing engine on a recorded trace
+//!   and (optionally) validate measured sojourns against `g_{m,ε}(y)`.
 //! * `gtable` — build and print the effective-capacity delay table
 //!   (native or PJRT-accelerated with `--accel`).
 //! * `serve` — start the serving coordinator on a synthetic open-loop
@@ -42,7 +44,15 @@ impl std::fmt::Display for ArgError {
 impl std::error::Error for ArgError {}
 
 /// Known boolean flags (everything else with `--` expects a value).
-const FLAGS: &[&str] = &["show", "accel", "help", "exact", "fallback", "no-real-compute"];
+const FLAGS: &[&str] = &[
+    "show",
+    "accel",
+    "help",
+    "exact",
+    "fallback",
+    "no-real-compute",
+    "validate",
+];
 
 impl Args {
     /// Parse from an iterator of arguments (without argv[0]).
@@ -129,6 +139,11 @@ COMMANDS:
             PJRT path, --config FILE)
   simulate  run trials (--strategy proposal|propavg|lbrr|ga, --trials N,
             --slots N, --load X, --seed N, --config FILE)
+  des       run the discrete-event queueing engine on a recorded trace
+            (--strategy ..., --trials N, --slots N, --load X, --seed N,
+            --trace FILE to replay, --save-trace FILE, --validate for the
+            measured-vs-g_{m,eps} bound report, --batch N --batch-wait MS
+            for sim-time station batching)
   serve     run the serving coordinator on a synthetic open-loop workload
             (--requests N, --rate RPS, --workers N, --no-real-compute)
 

@@ -1,4 +1,10 @@
 //! Dynamic batching: flush on size or age, whichever comes first.
+//!
+//! The age trigger runs on an explicit millisecond clock (`*_at` methods)
+//! so the same batcher serves two worlds: the serving runtime feeds it
+//! wall-clock time (the convenience `push`/`poll` methods measure from an
+//! internal origin), while the DES engine feeds it *simulated* time and
+//! gets deterministic, reproducible age-based flushes.
 
 use std::time::{Duration, Instant};
 
@@ -22,19 +28,42 @@ impl Default for BatchPolicy {
     }
 }
 
-/// Accumulates requests into batches under a [`BatchPolicy`].
-pub struct Batcher {
-    policy: BatchPolicy,
-    pending: Vec<Request>,
-    oldest: Option<Instant>,
+impl BatchPolicy {
+    /// Policy from a simulated-milliseconds wait (DES path).
+    pub fn with_wait_ms(max_batch: usize, max_wait_ms: f64) -> Self {
+        BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_secs_f64((max_wait_ms.max(0.0)) * 1e-3),
+        }
+    }
+
+    /// The age trigger in milliseconds.
+    pub fn max_wait_ms(&self) -> f64 {
+        self.max_wait.as_secs_f64() * 1e3
+    }
 }
 
-impl Batcher {
+/// Accumulates items into batches under a [`BatchPolicy`].
+///
+/// Generic over the item type: the serving coordinator batches
+/// [`Request`]s (the default), the DES engine batches `(task, stage)`
+/// keys per light-service station.
+pub struct Batcher<T = Request> {
+    policy: BatchPolicy,
+    pending: Vec<T>,
+    /// Clock reading (ms) when the oldest pending item was pushed.
+    oldest_ms: Option<f64>,
+    /// Origin for the wall-clock convenience methods.
+    origin: Instant,
+}
+
+impl<T> Batcher<T> {
     pub fn new(policy: BatchPolicy) -> Self {
         Batcher {
             policy,
             pending: Vec::with_capacity(policy.max_batch),
-            oldest: None,
+            oldest_ms: None,
+            origin: Instant::now(),
         }
     }
 
@@ -46,30 +75,50 @@ impl Batcher {
         self.pending.is_empty()
     }
 
-    /// Add a request; returns a full batch when the size trigger fires.
-    pub fn push(&mut self, req: Request) -> Option<Vec<Request>> {
+    /// Add an item at explicit time `now_ms`; returns a full batch when
+    /// the size trigger fires.
+    pub fn push_at(&mut self, item: T, now_ms: f64) -> Option<Vec<T>> {
         if self.pending.is_empty() {
-            self.oldest = Some(Instant::now());
+            self.oldest_ms = Some(now_ms);
         }
-        self.pending.push(req);
+        self.pending.push(item);
         if self.pending.len() >= self.policy.max_batch {
             return self.take();
         }
         None
     }
 
-    /// Returns a batch if the oldest pending request has aged out.
-    pub fn poll(&mut self) -> Option<Vec<Request>> {
-        match self.oldest {
-            Some(t) if t.elapsed() >= self.policy.max_wait && !self.pending.is_empty() => {
+    /// Returns a batch if, at explicit time `now_ms`, the oldest pending
+    /// item has aged out.
+    pub fn poll_at(&mut self, now_ms: f64) -> Option<Vec<T>> {
+        match self.oldest_ms {
+            Some(t) if now_ms - t >= self.policy.max_wait_ms() && !self.pending.is_empty() => {
                 self.take()
             }
             _ => None,
         }
     }
 
+    /// Absolute time (ms, same clock as the pushes) when the age trigger
+    /// fires — the DES schedules its batch-flush event here.
+    pub fn age_deadline_ms(&self) -> Option<f64> {
+        self.oldest_ms.map(|t| t + self.policy.max_wait_ms())
+    }
+
+    /// Add an item on the wall clock (serving runtime path).
+    pub fn push(&mut self, item: T) -> Option<Vec<T>> {
+        let now_ms = self.origin.elapsed().as_secs_f64() * 1e3;
+        self.push_at(item, now_ms)
+    }
+
+    /// Age-poll on the wall clock (serving runtime path).
+    pub fn poll(&mut self) -> Option<Vec<T>> {
+        let now_ms = self.origin.elapsed().as_secs_f64() * 1e3;
+        self.poll_at(now_ms)
+    }
+
     /// Drain whatever is pending (shutdown path).
-    pub fn flush(&mut self) -> Option<Vec<Request>> {
+    pub fn flush(&mut self) -> Option<Vec<T>> {
         if self.pending.is_empty() {
             None
         } else {
@@ -77,8 +126,8 @@ impl Batcher {
         }
     }
 
-    fn take(&mut self) -> Option<Vec<Request>> {
-        self.oldest = None;
+    fn take(&mut self) -> Option<Vec<T>> {
+        self.oldest_ms = None;
         Some(std::mem::take(&mut self.pending))
     }
 }

@@ -58,6 +58,23 @@ mod tests {
     }
 
     #[test]
+    fn sim_time_batcher_is_deterministic() {
+        // DES path: explicit clock, no sleeping, generic item type.
+        let mut b: Batcher<u64> = Batcher::new(BatchPolicy::with_wait_ms(8, 2.0));
+        assert!(b.push_at(1, 100.0).is_none());
+        assert_eq!(b.age_deadline_ms(), Some(102.0));
+        assert!(b.poll_at(101.9).is_none(), "not aged yet");
+        let batch = b.poll_at(102.0).expect("age trigger at exactly max_wait");
+        assert_eq!(batch, vec![1]);
+        assert!(b.age_deadline_ms().is_none());
+        // Size trigger fires regardless of the clock.
+        let mut b: Batcher<u64> = Batcher::new(BatchPolicy::with_wait_ms(2, 1000.0));
+        assert!(b.push_at(1, 0.0).is_none());
+        let batch = b.push_at(2, 0.0).expect("size trigger");
+        assert_eq!(batch, vec![1, 2]);
+    }
+
+    #[test]
     fn empty_batcher_polls_none() {
         let mut b = Batcher::new(BatchPolicy::default());
         assert!(b.poll().is_none());

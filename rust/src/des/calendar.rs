@@ -1,0 +1,162 @@
+//! The event calendar: a monotone priority queue of typed simulation
+//! events, ordered by `(time, insertion sequence)` — ties resolve FIFO,
+//! so a run is reproducible bit-for-bit from its seed.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Everything that can happen in the discrete-event simulation.
+#[derive(Clone, Debug)]
+pub enum EventKind {
+    /// A task is admitted (trace replay): run state is created and the
+    /// uplink transmission starts.
+    Arrival { arrival: crate::workload::TaskArrival },
+    /// The uplink finished; the task's source stages become ready at the
+    /// user's edge device.
+    UplinkDone { task: u64 },
+    /// An intermediate hop of a light-stage payload transfer completed;
+    /// the payload sits at an interior node of its route.
+    HopDone { task: u64, local: usize },
+    /// The final transfer hop landed: the payload reached its assigned
+    /// light station and joins the replica FIFO (or the batcher).
+    StationJoin { task: u64, local: usize },
+    /// A core stage finished executing.
+    CoreDone { task: u64, local: usize, node: usize },
+    /// A light stage finished at station `(node, light_idx)`; `y` and
+    /// `join_ms` carry the decision parallelism and station-join time for
+    /// the sojourn record.
+    LightDone {
+        task: u64,
+        local: usize,
+        node: usize,
+        light_idx: usize,
+        y: u32,
+        join_ms: f64,
+    },
+    /// Invoke the deployment strategy over the pending light queue.
+    Decide,
+    /// Slot boundary: virtual-queue updates, drop checks, cost charging,
+    /// queue-depth telemetry.
+    Tick { slot: usize },
+    /// A station batcher's age trigger fired.
+    BatchFlush {
+        node: usize,
+        light_idx: usize,
+        epoch: u64,
+    },
+}
+
+/// A scheduled event.
+#[derive(Clone, Debug)]
+pub struct Scheduled {
+    pub time_ms: f64,
+    seq: u64,
+    pub kind: EventKind,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+impl Eq for Scheduled {}
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.time_ms
+            .partial_cmp(&other.time_ms)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| self.seq.cmp(&other.seq))
+    }
+}
+
+/// Monotone event calendar.
+#[derive(Debug, Default)]
+pub struct Calendar {
+    heap: BinaryHeap<Reverse<Scheduled>>,
+    seq: u64,
+    /// Time of the last popped event; scheduling earlier than this clamps
+    /// forward (float round-off guard — the simulation never goes back).
+    watermark: f64,
+    processed: u64,
+}
+
+impl Calendar {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule `kind` at `time_ms` (clamped to the watermark so the
+    /// calendar stays monotone under float round-off).
+    pub fn schedule(&mut self, time_ms: f64, kind: EventKind) {
+        debug_assert!(time_ms.is_finite(), "event time must be finite");
+        let t = if time_ms < self.watermark {
+            self.watermark
+        } else {
+            time_ms
+        };
+        self.seq += 1;
+        self.heap.push(Reverse(Scheduled {
+            time_ms: t,
+            seq: self.seq,
+            kind,
+        }));
+    }
+
+    /// Pop the next event (earliest time, FIFO among ties).
+    pub fn pop(&mut self) -> Option<Scheduled> {
+        let Reverse(ev) = self.heap.pop()?;
+        debug_assert!(ev.time_ms >= self.watermark, "calendar must be monotone");
+        self.watermark = ev.time_ms;
+        self.processed += 1;
+        Some(ev)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Number of events dispatched so far.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_pop_in_time_order_fifo_on_ties() {
+        let mut c = Calendar::new();
+        c.schedule(5.0, EventKind::Decide);
+        c.schedule(1.0, EventKind::UplinkDone { task: 1 });
+        c.schedule(5.0, EventKind::Tick { slot: 0 });
+        let e1 = c.pop().unwrap();
+        assert_eq!(e1.time_ms, 1.0);
+        let e2 = c.pop().unwrap();
+        assert!(matches!(e2.kind, EventKind::Decide), "FIFO among ties");
+        let e3 = c.pop().unwrap();
+        assert!(matches!(e3.kind, EventKind::Tick { slot: 0 }));
+        assert!(c.pop().is_none());
+        assert_eq!(c.processed(), 3);
+    }
+
+    #[test]
+    fn past_scheduling_clamps_to_watermark() {
+        let mut c = Calendar::new();
+        c.schedule(10.0, EventKind::Decide);
+        c.pop().unwrap();
+        c.schedule(3.0, EventKind::Tick { slot: 1 }); // in the past: clamps
+        let e = c.pop().unwrap();
+        assert_eq!(e.time_ms, 10.0);
+    }
+}

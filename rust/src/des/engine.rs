@@ -1,0 +1,745 @@
+//! The continuous-time engine: replays a [`Trace`] through real queues.
+//!
+//! Where the slotted engine advances in `slot_ms` quanta and *assumes*
+//! the effective-capacity bound for light-service delays, this engine is
+//! a classic discrete-event simulation: a monotone calendar of arrival /
+//! uplink / hop-transfer / service events, per-instance FIFO serialization
+//! for core services (via [`CoreRouter`]'s busy clocks), and per-replica
+//! FIFO stations with *sampled* service times for light services. The
+//! deployment [`Strategy`] runs unmodified: it is invoked event-driven —
+//! immediately when light work becomes ready, plus at every slot boundary
+//! — and its instance decisions set the station concurrency caps.
+//!
+//! Semantics shared with the slotted engine (so paired traces compare
+//! apples to apples): transfers follow the [`crate::routing::HopTable`] routes whose
+//! summed latency equals `DistanceMatrix::latency` exactly; light service
+//! times are drawn as `a_m / (f / y^alpha)` at the controller's committed
+//! parallelism; busy accounting is `ceil(in_flight / Y)` instance groups.
+//! What differs is what the paper's bound is *about*: here tasks may
+//! actually wait in FIFO queues, and every light execution yields a
+//! measured sojourn `(y, wait + service)` for `des::validate`.
+
+use std::collections::HashMap;
+
+use crate::config::NUM_RESOURCES;
+use crate::controller::{LightRequest, VirtualQueues};
+use crate::coordinator::BatchPolicy;
+use crate::metrics::{CostBook, MetricsCollector, TaskOutcome, TrialMetrics};
+use crate::microservice::{Application, MsClass};
+use crate::placement::{QosScores, ScoreParams};
+use crate::routing::CoreRouter;
+use crate::rng::Xoshiro256;
+use crate::sim::{SimEnv, SimOptions, Strategy};
+use crate::workload::{Trace, WorkloadGenerator};
+
+use super::calendar::{Calendar, EventKind};
+use super::stations::{Joined, LightStations, Waiting};
+
+/// DES run options.
+#[derive(Clone, Debug)]
+pub struct DesOptions {
+    /// Horizon in slots (the calendar runs to `slots * slot_ms`).
+    pub slots: usize,
+    /// Controller tick period (ms) — the strategy's decision cadence.
+    pub slot_ms: f64,
+    /// Tasks unfinished this many deadlines past their own are dropped.
+    pub drop_after_deadlines: f64,
+    /// Optional station batching: arrivals at a light station accumulate
+    /// and flush on size or (simulated) age.
+    pub batching: Option<BatchPolicy>,
+}
+
+impl DesOptions {
+    pub fn from_sim(o: &SimOptions) -> Self {
+        DesOptions {
+            slots: o.slots,
+            slot_ms: o.slot_ms,
+            drop_after_deadlines: o.drop_after_deadlines,
+            batching: None,
+        }
+    }
+
+    pub fn from_config(cfg: &crate::config::ExperimentConfig) -> Self {
+        Self::from_sim(&SimOptions::from_config(cfg))
+    }
+}
+
+/// Per-task execution record (optional output for validation tooling).
+#[derive(Clone, Debug)]
+pub struct TaskRecord {
+    pub id: u64,
+    pub task_type: usize,
+    pub arrival_ms: f64,
+    pub deadline_ms: f64,
+    /// Completion time of each local DAG stage (ms, absolute).
+    pub stage_done: Vec<Option<f64>>,
+    /// Network node that executed each stage.
+    pub stage_node: Vec<Option<usize>>,
+    /// End-to-end latency; `None` for dropped/unfinished tasks.
+    pub latency_ms: Option<f64>,
+}
+
+/// Task runtime state.
+struct DesTask {
+    task_type: usize,
+    arrival_ms: f64,
+    deadline_ms: f64,
+    uplink_ms: f64,
+    ed: usize,
+    done: Vec<Option<f64>>,
+    node: Vec<Option<usize>>,
+    dispatched: Vec<bool>,
+}
+
+impl DesTask {
+    /// Delegates to the engine-shared rule ([`crate::sim`]'s
+    /// `stage_ready`) so paired runs can never disagree on readiness.
+    fn stage_ready(&self, app: &Application, local: usize) -> bool {
+        crate::sim::stage_ready(app, self.task_type, &self.done, &self.dispatched, local)
+    }
+
+    /// Parent payload sources `(node, done_ms, mb)`; source stages read
+    /// the user payload at the ED once the uplink lands. Shared with the
+    /// slotted engine.
+    fn parent_payloads(&self, app: &Application, local: usize) -> Vec<(usize, f64, f64)> {
+        crate::sim::parent_payloads(
+            app,
+            self.task_type,
+            &self.done,
+            &self.node,
+            self.ed,
+            self.arrival_ms + self.uplink_ms,
+            local,
+        )
+    }
+}
+
+/// An assigned light payload in transit: the remaining hop-completion
+/// times (absolute ms; the last entry is the station join). Kept outside
+/// the task map so a dropped task's transfer can still release its busy
+/// accounting when it lands.
+struct TransferPlan {
+    node: usize,
+    light_idx: usize,
+    y: u32,
+    proc_ms: f64,
+    hop_times: Vec<f64>,
+    next: usize,
+}
+
+struct Des<'a> {
+    env: &'a SimEnv,
+    opts: &'a DesOptions,
+    rng: Xoshiro256,
+    cal: Calendar,
+    tasks: HashMap<u64, DesTask>,
+    plans: HashMap<(u64, usize), TransferPlan>,
+    queues: VirtualQueues,
+    /// Light work awaiting a controller assignment: `(task, local)`.
+    pending: Vec<(u64, usize)>,
+    decide_scheduled: bool,
+    stations: LightStations,
+    core_router: CoreRouter,
+    residual_static: Vec<[f64; NUM_RESOURCES]>,
+    collector: MetricsCollector,
+    costs: CostBook,
+    light_idx_of: Vec<Option<usize>>,
+    light_dp: Vec<f64>,
+    light_mt: Vec<f64>,
+    light_pl: Vec<f64>,
+    horizon_ms: f64,
+    record: bool,
+    records: Vec<TaskRecord>,
+}
+
+impl<'a> Des<'a> {
+    fn request_decide(&mut self, now: f64) {
+        if !self.decide_scheduled {
+            self.decide_scheduled = true;
+            self.cal.schedule(now, EventKind::Decide);
+        }
+    }
+
+    fn finish_task(&mut self, id: u64, t: DesTask, done_ms: Option<f64>) {
+        let latency_ms = done_ms.map(|d| d - t.arrival_ms);
+        self.collector.record(TaskOutcome {
+            task_id: id,
+            latency_ms,
+            deadline_ms: t.deadline_ms,
+        });
+        self.queues.remove(id);
+        if self.record {
+            self.records.push(TaskRecord {
+                id,
+                task_type: t.task_type,
+                arrival_ms: t.arrival_ms,
+                deadline_ms: t.deadline_ms,
+                stage_done: t.done,
+                stage_node: t.node,
+                latency_ms,
+            });
+        }
+    }
+
+    fn handle_arrival(&mut self, a: crate::workload::TaskArrival, now: f64) {
+        let app = &self.env.app;
+        // A trace recorded under a different application would silently
+        // skew every paired metric — fail loudly instead (the slotted
+        // engine panics on the same mismatch).
+        assert!(
+            a.task_type.0 < app.task_types.len(),
+            "trace task {} has task type {} but the application defines {}",
+            a.id.0,
+            a.task_type.0,
+            app.task_types.len()
+        );
+        let n = app.task_types[a.task_type.0].dag.len();
+        let deadline_ms = app.task_types[a.task_type.0].deadline_ms;
+        self.tasks.insert(
+            a.id.0,
+            DesTask {
+                task_type: a.task_type.0,
+                arrival_ms: now,
+                deadline_ms,
+                uplink_ms: a.uplink_delay_ms,
+                ed: a.ed,
+                done: vec![None; n],
+                node: vec![None; n],
+                dispatched: vec![false; n],
+            },
+        );
+        self.cal
+            .schedule(now + a.uplink_delay_ms, EventKind::UplinkDone { task: a.id.0 });
+    }
+
+    fn ready_stages(&self, id: u64) -> Vec<usize> {
+        let app = &self.env.app;
+        match self.tasks.get(&id) {
+            None => Vec::new(),
+            Some(t) => {
+                let tt = &app.task_types[t.task_type];
+                (0..tt.dag.len())
+                    .filter(|&l| t.stage_ready(app, l))
+                    .collect()
+            }
+        }
+    }
+
+    fn handle_uplink_done(&mut self, id: u64, now: f64) {
+        for local in self.ready_stages(id) {
+            self.dispatch_stage(id, local, now);
+        }
+    }
+
+    /// Dispatch a ready stage: core stages route immediately to the
+    /// completion-minimizing placed instance (FIFO per instance via the
+    /// router's busy clocks); light stages enter the controller queue.
+    fn dispatch_stage(&mut self, id: u64, local: usize, now: f64) {
+        let env = self.env;
+        let app = &env.app;
+        let (ms_id, is_core, proc_ms, payloads) = {
+            let t = match self.tasks.get(&id) {
+                Some(t) => t,
+                None => return,
+            };
+            let tt = &app.task_types[t.task_type];
+            let ms_id = tt.services[local];
+            let spec = app.catalog.spec(ms_id);
+            (
+                ms_id,
+                spec.class == MsClass::Core,
+                spec.mean_proc_delay(),
+                t.parent_payloads(app, local),
+            )
+        };
+        if is_core {
+            let ci = app
+                .catalog
+                .core_ids()
+                .iter()
+                .position(|&c| c == ms_id)
+                .expect("core id");
+            if let Some(asn) = self
+                .core_router
+                .route_multi(ci, &payloads, proc_ms, now, &env.dm)
+            {
+                let t = self.tasks.get_mut(&id).unwrap();
+                t.dispatched[local] = true;
+                t.node[local] = Some(asn.node);
+                self.cal.schedule(
+                    asn.done_ms,
+                    EventKind::CoreDone {
+                        task: id,
+                        local,
+                        node: asn.node,
+                    },
+                );
+            }
+        } else {
+            let t = self.tasks.get_mut(&id).unwrap();
+            t.dispatched[local] = true;
+            self.pending.push((id, local));
+            self.request_decide(now);
+        }
+    }
+
+    /// A stage finished: record it, complete the task at the sink, and
+    /// dispatch any children that became ready.
+    fn handle_stage_done(&mut self, id: u64, local: usize, node: usize, now: f64) {
+        let app = &self.env.app;
+        let is_sink = {
+            let t = match self.tasks.get_mut(&id) {
+                Some(t) => t,
+                None => return, // dropped while executing
+            };
+            t.done[local] = Some(now);
+            t.node[local] = Some(node);
+            app.task_types[t.task_type].dag.sink() == Some(local)
+        };
+        if is_sink {
+            let t = self.tasks.remove(&id).unwrap();
+            self.finish_task(id, t, Some(now));
+            return;
+        }
+        let children: Vec<usize> = {
+            let t = &self.tasks[&id];
+            app.task_types[t.task_type]
+                .dag
+                .children(local)
+                .iter()
+                .filter(|&&c| t.stage_ready(app, c))
+                .cloned()
+                .collect()
+        };
+        for c in children {
+            self.dispatch_stage(id, c, now);
+        }
+    }
+
+    /// Begin serving `w` at station `(v, m)`: completion scheduled after
+    /// its sampled service time.
+    fn start_service(&mut self, v: usize, m: usize, w: Waiting, now: f64) {
+        self.cal.schedule(
+            now + w.proc_ms,
+            EventKind::LightDone {
+                task: w.task,
+                local: w.local,
+                node: v,
+                light_idx: m,
+                y: w.y,
+                join_ms: w.join_ms,
+            },
+        );
+    }
+
+    fn handle_hop_done(&mut self, id: u64, local: usize) {
+        let plan = match self.plans.get_mut(&(id, local)) {
+            Some(p) => p,
+            None => return,
+        };
+        plan.next += 1;
+        let i = plan.next;
+        debug_assert!(i < plan.hop_times.len());
+        let t = plan.hop_times[i];
+        let kind = if i + 1 == plan.hop_times.len() {
+            EventKind::StationJoin { task: id, local }
+        } else {
+            EventKind::HopDone { task: id, local }
+        };
+        self.cal.schedule(t, kind);
+    }
+
+    fn handle_station_join(&mut self, id: u64, local: usize, now: f64) {
+        let plan = match self.plans.remove(&(id, local)) {
+            Some(p) => p,
+            None => return,
+        };
+        if !self.tasks.contains_key(&id) {
+            // Dropped mid-transfer: never joins, release the commitment.
+            self.stations.abort_assignment(plan.node, plan.light_idx);
+            return;
+        }
+        let w = Waiting {
+            task: id,
+            local,
+            proc_ms: plan.proc_ms,
+            y: plan.y,
+            join_ms: now,
+        };
+        match self.stations.join(plan.node, plan.light_idx, w, now) {
+            Joined::Start(list) => {
+                for w in list {
+                    self.start_service(plan.node, plan.light_idx, w, now);
+                }
+            }
+            Joined::Queued => {}
+            Joined::Batched(Some((t, epoch))) => {
+                self.cal.schedule(
+                    t,
+                    EventKind::BatchFlush {
+                        node: plan.node,
+                        light_idx: plan.light_idx,
+                        epoch,
+                    },
+                );
+            }
+            Joined::Batched(None) => {}
+        }
+    }
+
+    fn handle_batch_flush(&mut self, node: usize, light_idx: usize, epoch: u64, now: f64) {
+        let started = self.stations.age_flush(node, light_idx, epoch, now);
+        for w in started {
+            self.start_service(node, light_idx, w, now);
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn handle_light_done(
+        &mut self,
+        id: u64,
+        local: usize,
+        node: usize,
+        light_idx: usize,
+        y: u32,
+        join_ms: f64,
+        now: f64,
+    ) {
+        // The measured quantity the g-bound is about: wait + service.
+        self.collector.record_sojourn(light_idx, y, now - join_ms);
+        if let Some(next) = self.stations.complete(node, light_idx) {
+            self.start_service(node, light_idx, next, now);
+        }
+        self.handle_stage_done(id, local, node, now);
+    }
+
+    /// Invoke the deployment strategy on the pending light queue.
+    fn handle_decide(&mut self, strategy: &mut dyn Strategy, now: f64) {
+        self.decide_scheduled = false;
+        {
+            let tasks = &self.tasks;
+            self.pending.retain(|(id, _)| tasks.contains_key(id));
+        }
+        if self.pending.is_empty() {
+            return;
+        }
+        let env = self.env;
+        let app = &env.app;
+        let slot = ((now / self.opts.slot_ms).floor() as usize)
+            .min(self.opts.slots.saturating_sub(1));
+
+        let busy = self.stations.busy_matrix();
+        let residual =
+            crate::sim::residual_after_busy(&self.residual_static, &env.light_resources, &busy);
+        let requests: Vec<LightRequest> = self
+            .pending
+            .iter()
+            .map(|&(id, local)| {
+                let t = &self.tasks[&id];
+                let tt = &app.task_types[t.task_type];
+                let ms_id = tt.services[local];
+                let m = self.light_idx_of[ms_id.0].expect("light idx");
+                let payloads = t.parent_payloads(app, local);
+                let &(from, _, mb) = payloads
+                    .iter()
+                    .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                    .unwrap();
+                LightRequest {
+                    task_id: id,
+                    light_idx: m,
+                    from_node: from,
+                    payload_mb: mb,
+                    h: self.queues.value(id),
+                    deadline_slack_ms: t.deadline_ms - (now - t.arrival_ms),
+                }
+            })
+            .collect();
+
+        let decision = strategy.decide_light(env, slot, &requests, &busy, &residual, &mut self.rng);
+        debug_assert_eq!(decision.assignments.len(), requests.len());
+
+        // New instance counts may free FIFO'd work immediately.
+        let promoted = self.stations.on_decision(&decision.x);
+        for (v, m, w) in promoted {
+            self.start_service(v, m, w, now);
+        }
+
+        let alpha = env.cfg.controller.contention_alpha;
+        let pending = std::mem::take(&mut self.pending);
+        let mut still = Vec::new();
+        for (qi, (id, local)) in pending.into_iter().enumerate() {
+            let asn = match decision.assignments.get(qi).and_then(|a| *a) {
+                Some(a) => a,
+                None => {
+                    still.push((id, local));
+                    continue;
+                }
+            };
+            // Sampled contended service time — same draw semantics as the
+            // slotted engine.
+            let (proc_ms, critical, mb) = {
+                let t = &self.tasks[&id];
+                let tt = &app.task_types[t.task_type];
+                let spec = app.catalog.spec(tt.services[local]);
+                let f = spec.rate.sample(&mut self.rng) / (asn.y as f64).powf(alpha);
+                let payloads = t.parent_payloads(app, local);
+                let &(pn, pd, mb) = payloads
+                    .iter()
+                    .max_by(|a, b| {
+                        let la = a.1 + env.dm.latency(a.0, asn.node, a.2);
+                        let lb = b.1 + env.dm.latency(b.0, asn.node, b.2);
+                        la.partial_cmp(&lb).unwrap()
+                    })
+                    .unwrap();
+                (spec.workload_mb / f.max(1e-9), (pn, pd), mb)
+            };
+            let t = self.tasks.get_mut(&id).unwrap();
+            t.node[local] = Some(asn.node);
+            self.stations.note_assigned(asn.node, asn.light_idx);
+
+            // Hop-by-hop transfer of the latest-arriving parent payload:
+            // hops that analytically completed while the request waited
+            // are skipped (the transfer overlapped the controller wait,
+            // matching the slotted engine's `max(arrival, now)`).
+            let (pn, pd) = critical;
+            let mut hop_times = Vec::new();
+            let mut cum = pd;
+            for h in env.hops.hops(pn, asn.node) {
+                cum += h.latency(mb);
+                if cum > now {
+                    hop_times.push(cum);
+                }
+            }
+            if hop_times.is_empty() {
+                self.plans.insert(
+                    (id, local),
+                    TransferPlan {
+                        node: asn.node,
+                        light_idx: asn.light_idx,
+                        y: asn.y,
+                        proc_ms,
+                        hop_times: vec![now],
+                        next: 0,
+                    },
+                );
+                self.cal.schedule(now, EventKind::StationJoin { task: id, local });
+            } else {
+                let first = hop_times[0];
+                let single = hop_times.len() == 1;
+                self.plans.insert(
+                    (id, local),
+                    TransferPlan {
+                        node: asn.node,
+                        light_idx: asn.light_idx,
+                        y: asn.y,
+                        proc_ms,
+                        hop_times,
+                        next: 0,
+                    },
+                );
+                let kind = if single {
+                    EventKind::StationJoin { task: id, local }
+                } else {
+                    EventKind::HopDone { task: id, local }
+                };
+                self.cal.schedule(first, kind);
+            }
+        }
+        self.pending = still;
+    }
+
+    /// Slot boundary: virtual-queue aging, drop checks, per-slot cost
+    /// charging, queue-depth telemetry, and a decision retry for work the
+    /// controller previously declined.
+    fn handle_tick(&mut self, _slot: usize, now: f64) {
+        let slot_end = now + self.opts.slot_ms;
+        let mut ids: Vec<u64> = self.tasks.keys().cloned().collect();
+        ids.sort_unstable();
+        for id in ids {
+            let (age, deadline) = {
+                let t = &self.tasks[&id];
+                (slot_end - t.arrival_ms, t.deadline_ms)
+            };
+            if age > self.opts.drop_after_deadlines * deadline {
+                let t = self.tasks.remove(&id).unwrap();
+                self.finish_task(id, t, None);
+            } else {
+                self.queues.update(id, age, deadline);
+            }
+        }
+        {
+            let tasks = &self.tasks;
+            self.pending.retain(|(id, _)| tasks.contains_key(id));
+        }
+        // Per-slot light cost: maintenance on busy instance-groups,
+        // parallelism on in-flight work (eq. 7 under continuous time).
+        let x_now = self.stations.busy_matrix();
+        let y_now = self.stations.in_flight_matrix();
+        self.costs
+            .charge_light_slot(&x_now, &y_now, &self.light_dp, &self.light_mt, &self.light_pl);
+        self.collector.record_queue_depth(self.pending.len() + self.stations.waiting_total());
+        if !self.pending.is_empty() {
+            self.request_decide(now);
+        }
+    }
+}
+
+/// Run one DES trial of `strategy` over a recorded trace.
+pub fn run_des_trial(
+    env: &SimEnv,
+    strategy: &mut dyn Strategy,
+    seed: u64,
+    opts: &DesOptions,
+    trace: &Trace,
+) -> TrialMetrics {
+    run_des_inner(env, strategy, seed, opts, trace, false).0
+}
+
+/// Like [`run_des_trial`], additionally returning per-task execution
+/// records (stage nodes and completion times) for validation tooling.
+pub fn run_des_trial_recorded(
+    env: &SimEnv,
+    strategy: &mut dyn Strategy,
+    seed: u64,
+    opts: &DesOptions,
+    trace: &Trace,
+) -> (TrialMetrics, Vec<TaskRecord>) {
+    run_des_inner(env, strategy, seed, opts, trace, true)
+}
+
+fn run_des_inner(
+    env: &SimEnv,
+    strategy: &mut dyn Strategy,
+    seed: u64,
+    opts: &DesOptions,
+    trace: &Trace,
+    record: bool,
+) -> (TrialMetrics, Vec<TaskRecord>) {
+    let app = &env.app;
+    let cfg = &env.cfg;
+    let mut rng = Xoshiro256::seed_from(seed ^ 0xDE5E_7E17);
+    let gen = WorkloadGenerator::new(
+        cfg,
+        app,
+        &env.topo,
+        &mut Xoshiro256::seed_from(env.users_seed),
+    );
+
+    // Static tier — identical to the slotted engine.
+    let scores = QosScores::compute(
+        app,
+        &env.topo,
+        &env.dm,
+        gen.users(),
+        &ScoreParams::from_config(&cfg.controller),
+    );
+    let placement = strategy.place_core(env, &scores, &mut rng);
+    let core_router = CoreRouter::new(&placement.instances);
+    let residual_static = placement.residual_capacity(app, &env.topo);
+
+    let mut costs = CostBook::new();
+    let core_dp: Vec<f64> = env.core_costs.iter().map(|c| c.0).collect();
+    let core_mt: Vec<f64> = env.core_costs.iter().map(|c| c.1).collect();
+    costs.charge_core_placement(&placement.instances, &core_dp, &core_mt, opts.slots);
+
+    let nv = env.topo.num_nodes();
+    let nl = app.catalog.num_light();
+    let max_y = env.gtable.max_parallelism().max(1);
+    let mut collector = MetricsCollector::new();
+    collector.enable_service_obs(nl);
+
+    let light_idx_of: Vec<Option<usize>> = (0..app.catalog.len())
+        .map(|m| app.catalog.light_index(crate::microservice::MsId(m)))
+        .collect();
+
+    let mut d = Des {
+        env,
+        opts,
+        rng,
+        cal: Calendar::new(),
+        tasks: HashMap::new(),
+        plans: HashMap::new(),
+        queues: VirtualQueues::new(cfg.controller.zeta),
+        pending: Vec::new(),
+        decide_scheduled: false,
+        stations: LightStations::new(nv, nl, max_y, opts.batching),
+        core_router,
+        residual_static,
+        collector,
+        costs,
+        light_idx_of,
+        light_dp: env.light_costs.iter().map(|c| c.0).collect(),
+        light_mt: env.light_costs.iter().map(|c| c.1).collect(),
+        light_pl: env.light_costs.iter().map(|c| c.2).collect(),
+        horizon_ms: opts.slots as f64 * opts.slot_ms,
+        record,
+        records: Vec::new(),
+    };
+
+    // Seed the calendar: trace arrivals (slots beyond the horizon are
+    // ignored) and one controller tick per slot.
+    for slot in 0..opts.slots {
+        let t = slot as f64 * opts.slot_ms;
+        for a in trace.slot(slot) {
+            d.cal.schedule(t, EventKind::Arrival { arrival: a.clone() });
+        }
+        d.cal.schedule(t, EventKind::Tick { slot });
+    }
+
+    while let Some(ev) = d.cal.pop() {
+        if ev.time_ms > d.horizon_ms {
+            break;
+        }
+        let now = ev.time_ms;
+        match ev.kind {
+            EventKind::Arrival { arrival } => d.handle_arrival(arrival, now),
+            EventKind::UplinkDone { task } => d.handle_uplink_done(task, now),
+            EventKind::HopDone { task, local } => d.handle_hop_done(task, local),
+            EventKind::StationJoin { task, local } => d.handle_station_join(task, local, now),
+            EventKind::CoreDone { task, local, node } => {
+                d.handle_stage_done(task, local, node, now)
+            }
+            EventKind::LightDone {
+                task,
+                local,
+                node,
+                light_idx,
+                y,
+                join_ms,
+            } => d.handle_light_done(task, local, node, light_idx, y, join_ms, now),
+            EventKind::Decide => d.handle_decide(strategy, now),
+            EventKind::Tick { slot } => d.handle_tick(slot, now),
+            EventKind::BatchFlush {
+                node,
+                light_idx,
+                epoch,
+            } => d.handle_batch_flush(node, light_idx, epoch, now),
+        }
+    }
+
+    if std::env::var_os("FMEDGE_DEBUG").is_some() {
+        eprintln!(
+            "[des] events={} unfinished={} pending={} station_wait={}",
+            d.cal.processed(),
+            d.tasks.len(),
+            d.pending.len(),
+            d.stations.waiting_total()
+        );
+    }
+
+    // Horizon end: everything still in flight is incomplete.
+    let mut ids: Vec<u64> = d.tasks.keys().cloned().collect();
+    ids.sort_unstable();
+    for id in ids {
+        let t = d.tasks.remove(&id).unwrap();
+        d.finish_task(id, t, None);
+    }
+    let _ = placement.objective;
+    let Des {
+        collector,
+        costs,
+        records,
+        ..
+    } = d;
+    (collector.finish(&costs), records)
+}

@@ -1,0 +1,355 @@
+//! Discrete-event queueing simulation (`des`): measured ground truth for
+//! the paper's probabilistic QoS claims.
+//!
+//! The slotted trial engine ([`crate::sim`]) *assumes* the effective-
+//! capacity bound `g_{m,ε}(y)` when it executes light services; this
+//! subsystem replays the exact same [`crate::workload::Trace`] in
+//! continuous time with real queues and *measures* instead:
+//!
+//! * [`calendar`] — a monotone event calendar (arrival, uplink-complete,
+//!   hop-transfer-complete, station-join, service-complete, controller
+//!   decision, slot tick, batch-flush), FIFO among time ties, fully
+//!   deterministic per seed.
+//! * [`stations`] — per-(node, light-service) replica stations with FIFO
+//!   queues, concurrency caps from the controller's instance decisions,
+//!   and optional sim-time batching through the coordinator's
+//!   [`crate::coordinator::Batcher`]. Core services reuse
+//!   [`crate::routing::CoreRouter`]'s per-instance busy clocks.
+//! * [`engine`] — the event loop. Any [`crate::sim::Strategy`] runs
+//!   unmodified: it is invoked event-driven (immediately when light work
+//!   becomes ready, plus every slot boundary) and its decisions set
+//!   station capacities. Light service times are *sampled* from each
+//!   service's rate distribution at the controller's committed
+//!   parallelism; transfers replay the [`crate::routing::HopTable`] hop
+//!   chain whose total equals the analytic `DistanceMatrix` latency.
+//! * [`validate`] — empirical delay-violation rates and CCDFs per light
+//!   service against `g_{m,ε}(y)`: the paper's guarantee holds iff
+//!   `P(sojourn > g_{m,ε}(y)) ≤ ε`.
+//!
+//! `examples/validate_bounds.rs` runs both engines on a paired trace and
+//! prints the comparison; `fmedge des` is the CLI entry point.
+
+mod calendar;
+mod engine;
+mod stations;
+pub mod validate;
+
+pub use calendar::{Calendar, EventKind, Scheduled};
+pub use engine::{run_des_trial, run_des_trial_recorded, DesOptions, TaskRecord};
+pub use stations::{Joined, LightStations, Waiting};
+pub use validate::{pool, report, sojourn_ccdf, validate_bounds, ServiceValidation};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::{LbrrStrategy, Proposal};
+    use crate::config::ExperimentConfig;
+    use crate::effcap::{GTable, GTableParams};
+    use crate::graph::Dag;
+    use crate::latency;
+    use crate::microservice::{
+        Application, Catalog, MsClass, MsId, MsSpec, RateModel, TaskType, TaskTypeId,
+    };
+    use crate::network::Topology;
+    use crate::rng::Xoshiro256;
+    use crate::routing::{DistanceMatrix, HopTable};
+    use crate::sim::{record_trace, run_trial_traced, SimEnv, SimOptions};
+    use crate::workload::{TaskArrival, TaskId, Trace};
+
+    fn small_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::paper_default();
+        cfg.sim.slots = 80;
+        cfg.workload.num_users = 8;
+        cfg.controller.effcap_samples = 512;
+        cfg
+    }
+
+    #[test]
+    fn des_trial_completes_tasks() {
+        let cfg = small_cfg();
+        let env = SimEnv::build(&cfg, 21);
+        let opts = SimOptions::from_config(&cfg);
+        let trace = record_trace(&env, 21, &opts);
+        let m = run_des_trial(
+            &env,
+            &mut Proposal::new(),
+            21,
+            &DesOptions::from_sim(&opts),
+            &trace,
+        );
+        assert_eq!(m.total_tasks, trace.len());
+        assert!(
+            m.completion_rate() > 0.5,
+            "DES under the proposal should complete most tasks, got {}",
+            m.completion_rate()
+        );
+        assert!(m.total_cost > 0.0);
+        // DES actually measured light executions.
+        let measured: usize = m.service_obs.iter().map(|o| o.samples.len()).sum();
+        assert!(measured > 0, "no sojourns measured");
+        assert!(m.queue_depth.count() > 0, "no queue-depth samples");
+    }
+
+    #[test]
+    fn des_same_seed_is_deterministic() {
+        let cfg = small_cfg();
+        let env = SimEnv::build(&cfg, 22);
+        let opts = SimOptions::from_config(&cfg);
+        let trace = record_trace(&env, 22, &opts);
+        let d = DesOptions::from_sim(&opts);
+        let m1 = run_des_trial(&env, &mut Proposal::new(), 22, &d, &trace);
+        let m2 = run_des_trial(&env, &mut Proposal::new(), 22, &d, &trace);
+        assert_eq!(m1.total_tasks, m2.total_tasks);
+        assert_eq!(m1.completed, m2.completed);
+        assert_eq!(m1.on_time, m2.on_time);
+        assert!((m1.total_cost - m2.total_cost).abs() < 1e-9);
+        let s1: Vec<usize> = m1.service_obs.iter().map(|o| o.samples.len()).collect();
+        let s2: Vec<usize> = m2.service_obs.iter().map(|o| o.samples.len()).collect();
+        assert_eq!(s1, s2);
+    }
+
+    #[test]
+    fn des_and_slotted_run_the_same_paired_trace() {
+        let cfg = small_cfg();
+        let env = SimEnv::build(&cfg, 23);
+        let opts = SimOptions::from_config(&cfg);
+        let trace = record_trace(&env, 23, &opts);
+        let slotted = run_trial_traced(&env, &mut Proposal::new(), 23, &opts, &trace);
+        let des = run_des_trial(
+            &env,
+            &mut Proposal::new(),
+            23,
+            &DesOptions::from_sim(&opts),
+            &trace,
+        );
+        assert_eq!(slotted.total_tasks, des.total_tasks, "paired admission");
+        assert!(des.completion_rate() > 0.5);
+        // Both engines should be in the same ballpark on the headline
+        // metric under moderate load (DES is finer-grained, not wildly
+        // different).
+        assert!(
+            (slotted.on_time_rate() - des.on_time_rate()).abs() < 0.45,
+            "slotted {} vs DES {}",
+            slotted.on_time_rate(),
+            des.on_time_rate()
+        );
+    }
+
+    #[test]
+    fn des_strategies_run_without_panic() {
+        let cfg = small_cfg();
+        let env = SimEnv::build(&cfg, 24);
+        let opts = SimOptions::from_config(&cfg);
+        let trace = record_trace(&env, 24, &opts);
+        let d = DesOptions::from_sim(&opts);
+        let m = run_des_trial(&env, &mut LbrrStrategy::new(), 24, &d, &trace);
+        assert_eq!(m.total_tasks, trace.len());
+    }
+
+    #[test]
+    fn des_with_batching_still_completes() {
+        let cfg = small_cfg();
+        let env = SimEnv::build(&cfg, 25);
+        let opts = SimOptions::from_config(&cfg);
+        let trace = record_trace(&env, 25, &opts);
+        let mut d = DesOptions::from_sim(&opts);
+        d.batching = Some(crate::coordinator::BatchPolicy::with_wait_ms(4, 0.5));
+        let m = run_des_trial(&env, &mut Proposal::new(), 25, &d, &trace);
+        assert_eq!(m.total_tasks, trace.len());
+        assert!(
+            m.completion_rate() > 0.4,
+            "batched DES should still complete tasks, got {}",
+            m.completion_rate()
+        );
+    }
+
+    /// Build a hand-made environment whose every rate is deterministic
+    /// (zero variance) plus a single-task trace — the analytic latency
+    /// recursion and the DES must then agree exactly.
+    fn deterministic_env() -> (SimEnv, Trace) {
+        let mut cfg = ExperimentConfig::paper_default();
+        cfg.workload.num_users = 1;
+        cfg.app.num_task_types = 1;
+        cfg.controller.kappa = 2;
+        cfg.controller.eta = 0.01; // cheap deployments: always serve
+        let mut rng = Xoshiro256::seed_from(4242);
+        let topo = Topology::generate(&cfg, &mut rng);
+        let hops = HopTable::build(&topo, 1.0);
+        let dm = DistanceMatrix::from_hops(&hops);
+
+        let mut cat = Catalog::new();
+        cat.push(MsSpec {
+            id: MsId(0),
+            name: "core-src".into(),
+            class: MsClass::Core,
+            resources: [2.0, 1.0, 2.0, 1.0],
+            workload_mb: 4.0,
+            output_mb: 0.8,
+            rate: RateModel::Deterministic(8.0),
+            cost_deploy: 20.0,
+            cost_maint: 4.0,
+            cost_parallel: 0.0,
+        });
+        cat.push(MsSpec {
+            id: MsId(1),
+            name: "light-mid".into(),
+            class: MsClass::Light,
+            resources: [0.5, 0.1, 0.5, 0.1],
+            workload_mb: 1.0,
+            output_mb: 0.6,
+            rate: RateModel::Deterministic(5.0),
+            cost_deploy: 4.0,
+            cost_maint: 1.0,
+            cost_parallel: 0.5,
+        });
+        cat.push(MsSpec {
+            id: MsId(2),
+            name: "core-sink".into(),
+            class: MsClass::Core,
+            resources: [2.0, 1.0, 2.0, 1.0],
+            workload_mb: 6.0,
+            output_mb: 0.3,
+            rate: RateModel::Deterministic(12.0),
+            cost_deploy: 20.0,
+            cost_maint: 4.0,
+            cost_parallel: 0.0,
+        });
+        let mut dag = Dag::new(3);
+        dag.add_edge(0, 1).unwrap();
+        dag.add_edge(1, 2).unwrap();
+        let tt = TaskType {
+            id: TaskTypeId(0),
+            dag,
+            services: vec![MsId(0), MsId(1), MsId(2)],
+            deadline_ms: 500.0,
+            input_mb: 1.5,
+        };
+        let app = Application::new(cat, vec![tt]);
+
+        let samples = vec![vec![5.0; 128]];
+        let gtable = GTable::build(
+            &samples,
+            &[1.0],
+            &GTableParams::from_config(&cfg.controller),
+        );
+        let env = SimEnv {
+            cfg: cfg.clone(),
+            app,
+            topo,
+            dm,
+            hops,
+            gtable,
+            light_rate_samples: samples,
+            light_resources: vec![[0.5, 0.1, 0.5, 0.1]],
+            light_costs: vec![(4.0, 1.0, 0.5)],
+            core_costs: vec![(20.0, 4.0), (20.0, 4.0)],
+            users_seed: 7,
+        };
+        let trace = Trace::from_arrivals(vec![TaskArrival {
+            id: TaskId(0),
+            user: 0,
+            ed: 0,
+            task_type: TaskTypeId(0),
+            slot: 0,
+            snr: 20.0,
+            uplink_delay_ms: 2.25,
+        }]);
+        (env, trace)
+    }
+
+    #[test]
+    fn deterministic_single_task_matches_analytic_completion_times() {
+        // Property (satellite): zero-variance service times, zero
+        // contention, single task => DES end-to-end latency equals the
+        // eq. 4/5 recursion on the realized assignment, to 1e-9.
+        let (env, trace) = deterministic_env();
+        let opts = DesOptions {
+            slots: 600,
+            slot_ms: 1.0,
+            drop_after_deadlines: 50.0,
+            batching: None,
+        };
+        let (m, records) = run_des_trial_recorded(&env, &mut Proposal::new(), 77, &opts, &trace);
+        assert_eq!(m.total_tasks, 1);
+        assert_eq!(m.completed, 1, "single task must complete");
+        let rec = &records[0];
+        let lat = rec.latency_ms.expect("completed");
+
+        let tt = &env.app.task_types[0];
+        let assignment: Vec<usize> = rec
+            .stage_node
+            .iter()
+            .map(|n| n.expect("all stages executed"))
+            .collect();
+        let proc: Vec<f64> = (0..3)
+            .map(|i| {
+                let s = env.app.catalog.spec(tt.services[i]);
+                s.workload_mb / s.rate.mean()
+            })
+            .collect();
+        let out: Vec<f64> = (0..3)
+            .map(|i| env.app.catalog.spec(tt.services[i]).output_mb)
+            .collect();
+        // The analytic recursion folds the ED->source transfer into the
+        // uplink term (its transfer closure only sees DAG edges).
+        let uplink_eff = 2.25 + env.dm.latency(0, assignment[0], tt.input_mb);
+        let expected = latency::end_to_end(
+            &tt.dag,
+            &out,
+            uplink_eff,
+            &assignment,
+            &proc,
+            |a, b, mb| env.dm.latency(a, b, mb),
+        );
+        assert!(
+            (lat - expected).abs() < 1e-9,
+            "DES {lat} vs analytic {expected}"
+        );
+        // And the stage completion times agree too.
+        let times = latency::completion_times(
+            &tt.dag,
+            &out,
+            uplink_eff,
+            &assignment,
+            &proc,
+            |a, b, mb| env.dm.latency(a, b, mb),
+        );
+        for (i, t) in times.iter().enumerate() {
+            let got = rec.stage_done[i].expect("done") - rec.arrival_ms;
+            assert!(
+                (got - t).abs() < 1e-9,
+                "stage {i}: DES {got} vs analytic {t}"
+            );
+        }
+    }
+
+    #[test]
+    fn validation_layer_reports_on_seed_config() {
+        let cfg = small_cfg();
+        let env = SimEnv::build(&cfg, 29);
+        let opts = SimOptions::from_config(&cfg);
+        let trace = record_trace(&env, 29, &opts);
+        let m = run_des_trial(
+            &env,
+            &mut Proposal::new(),
+            29,
+            &DesOptions::from_sim(&opts),
+            &trace,
+        );
+        let vals = validate_bounds(&env.gtable, &m);
+        assert_eq!(vals.len(), env.app.catalog.num_light());
+        let total: usize = vals.iter().map(|v| v.samples).sum();
+        assert!(total > 0, "no light executions measured");
+        let text = report(&vals);
+        assert!(text.contains("measured"));
+        // The paper-default eps = 0.2; a Chernoff-true bound should hold
+        // comfortably in aggregate.
+        let violations: usize = vals.iter().map(|v| v.violations).sum();
+        let rate = violations as f64 / total as f64;
+        assert!(
+            rate <= env.gtable.params_epsilon + 0.05,
+            "aggregate violation rate {rate} vs eps {}",
+            env.gtable.params_epsilon
+        );
+    }
+}

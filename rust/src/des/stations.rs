@@ -1,0 +1,377 @@
+//! Light-service stations: per-(node, service) replica groups with real
+//! FIFO queues, concurrency caps derived from the controller's instance
+//! decisions, and optional sim-time batching.
+//!
+//! Core services need no station type of their own — the existing
+//! [`crate::routing::CoreRouter`] already models per-instance FIFO
+//! serialization through its `busy_until` clocks, and the DES reuses it.
+
+use std::collections::VecDeque;
+
+use crate::coordinator::{BatchPolicy, Batcher};
+
+/// A task waiting at (or being served by) a station.
+#[derive(Clone, Debug)]
+pub struct Waiting {
+    pub task: u64,
+    /// Local DAG node of the task executing here.
+    pub local: usize,
+    /// Realized (sampled) service time, drawn at assignment.
+    pub proc_ms: f64,
+    /// Parallelism level the controller committed to.
+    pub y: u32,
+    /// When the payload joined the station (sojourn starts here).
+    pub join_ms: f64,
+}
+
+/// Outcome of a station join.
+pub enum Joined {
+    /// Begin serving these now (the engine schedules their completions).
+    Start(Vec<Waiting>),
+    /// Parked in the replica FIFO until a service slot frees.
+    Queued,
+    /// Parked in the batcher; `Some((t, epoch))` asks the engine to
+    /// schedule a batch-flush event at absolute time `t`.
+    Batched(Option<(f64, u64)>),
+}
+
+#[derive(Debug, Default)]
+struct Station {
+    /// Concurrent-service cap: instances × max parallelism from the most
+    /// recent decision, floored at the running work plus one group's
+    /// drain capacity while commitments remain (see `on_decision`).
+    cap: u32,
+    in_service: u32,
+    /// Assigned-but-not-completed tasks (the controller's busy signal —
+    /// mirrors the slotted engine's `active_light`).
+    in_flight: u32,
+    fifo: VecDeque<Waiting>,
+    batcher: Option<Batcher<Waiting>>,
+    /// Age-window epoch: a batch-flush event is valid only for the
+    /// window it was scheduled in.
+    epoch: u64,
+}
+
+impl Station {
+    /// Start `w` if a service slot is free, else park it in the FIFO.
+    fn try_start(&mut self, w: Waiting) -> Option<Waiting> {
+        if self.in_service < self.cap {
+            self.in_service += 1;
+            Some(w)
+        } else {
+            self.fifo.push_back(w);
+            None
+        }
+    }
+
+    /// Release a batch into service, FIFO-parking what exceeds the cap.
+    fn release(&mut self, batch: Vec<Waiting>) -> Vec<Waiting> {
+        let mut started = Vec::with_capacity(batch.len());
+        for w in batch {
+            if let Some(w) = self.try_start(w) {
+                started.push(w);
+            }
+        }
+        started
+    }
+
+    fn waiting(&self) -> usize {
+        self.fifo.len() + self.batcher.as_ref().map_or(0, Batcher::len)
+    }
+}
+
+/// All light stations of one trial, indexed `(node, dense light idx)`.
+pub struct LightStations {
+    nv: usize,
+    nl: usize,
+    max_y: usize,
+    st: Vec<Station>,
+}
+
+impl LightStations {
+    pub fn new(nv: usize, nl: usize, max_y: usize, batching: Option<BatchPolicy>) -> Self {
+        let st = (0..nv * nl)
+            .map(|_| Station {
+                batcher: batching.map(Batcher::new),
+                ..Station::default()
+            })
+            .collect();
+        LightStations {
+            nv,
+            nl,
+            max_y: max_y.max(1),
+            st,
+        }
+    }
+
+    #[inline]
+    fn at(&mut self, v: usize, m: usize) -> &mut Station {
+        &mut self.st[v * self.nl + m]
+    }
+
+    /// Apply a controller decision's instance counts: update caps and
+    /// start FIFO work that newly fits. Returns the started entries as
+    /// `(node, light_idx, waiting)`.
+    ///
+    /// The cap is the decided capacity, floored at (a) `in_service` —
+    /// running work is never preempted — and (b) *one* instance-group's
+    /// worth while commitments remain, so a strategy that zeroes a
+    /// station with outstanding work cannot strand its FIFO (the group
+    /// stays alive and drains at its own rate). Crucially the floor is
+    /// NOT the whole backlog: queued work above the cap keeps waiting,
+    /// which is exactly the FIFO queueing this engine exists to measure.
+    pub fn on_decision(&mut self, x: &[Vec<u32>]) -> Vec<(usize, usize, Waiting)> {
+        let mut started = Vec::new();
+        for v in 0..self.nv {
+            for m in 0..self.nl {
+                let max_y = self.max_y as u32;
+                let s = self.at(v, m);
+                let decided = x[v][m].saturating_mul(max_y);
+                let drain_floor = if s.in_flight > 0 { max_y } else { 0 };
+                s.cap = decided.max(s.in_service).max(drain_floor);
+                while s.in_service < s.cap {
+                    match s.fifo.pop_front() {
+                        Some(w) => {
+                            s.in_service += 1;
+                            started.push((v, m, w));
+                        }
+                        None => break,
+                    }
+                }
+            }
+        }
+        started
+    }
+
+    /// Register an assignment decided by the controller (payload may
+    /// still be in transfer).
+    pub fn note_assigned(&mut self, v: usize, m: usize) {
+        self.at(v, m).in_flight += 1;
+    }
+
+    /// The assignment never reached the station (task dropped mid-
+    /// transfer): release its busy accounting.
+    pub fn abort_assignment(&mut self, v: usize, m: usize) {
+        let s = self.at(v, m);
+        s.in_flight = s.in_flight.saturating_sub(1);
+    }
+
+    /// A payload arrived at its station.
+    pub fn join(&mut self, v: usize, m: usize, w: Waiting, now_ms: f64) -> Joined {
+        let s = self.at(v, m);
+        if s.batcher.is_some() {
+            let was_empty = s.batcher.as_ref().unwrap().is_empty();
+            match s.batcher.as_mut().unwrap().push_at(w, now_ms) {
+                Some(batch) => Joined::Start(s.release(batch)),
+                None => {
+                    if was_empty {
+                        s.epoch += 1;
+                        let deadline = s
+                            .batcher
+                            .as_ref()
+                            .unwrap()
+                            .age_deadline_ms()
+                            .expect("non-empty batcher has an age window");
+                        Joined::Batched(Some((deadline, s.epoch)))
+                    } else {
+                        Joined::Batched(None)
+                    }
+                }
+            }
+        } else {
+            match s.try_start(w) {
+                Some(w) => Joined::Start(vec![w]),
+                None => Joined::Queued,
+            }
+        }
+    }
+
+    /// An age-trigger batch-flush event fired; stale epochs are ignored.
+    /// A matching epoch means the event belongs to the *current* age
+    /// window (size flushes open a fresh epoch), so the batch is drained
+    /// unconditionally — re-deriving the age here could round down under
+    /// f64 addition and strand the window forever.
+    pub fn age_flush(&mut self, v: usize, m: usize, epoch: u64, _now_ms: f64) -> Vec<Waiting> {
+        let s = self.at(v, m);
+        if s.epoch != epoch {
+            return Vec::new();
+        }
+        match s.batcher.as_mut().and_then(Batcher::flush) {
+            Some(batch) => s.release(batch),
+            None => Vec::new(),
+        }
+    }
+
+    /// A service completed: free the slot, promote the FIFO head if one
+    /// fits (the engine schedules its completion; its service starts now).
+    pub fn complete(&mut self, v: usize, m: usize) -> Option<Waiting> {
+        let s = self.at(v, m);
+        s.in_service = s.in_service.saturating_sub(1);
+        s.in_flight = s.in_flight.saturating_sub(1);
+        if s.in_service < s.cap {
+            if let Some(w) = s.fifo.pop_front() {
+                s.in_service += 1;
+                return Some(w);
+            }
+        }
+        None
+    }
+
+    /// Controller busy signal: instance-groups still working, per
+    /// `(node, light idx)` — `ceil(in_flight / max_y)`, exactly the
+    /// slotted engine's convention.
+    pub fn busy_matrix(&self) -> Vec<Vec<u32>> {
+        (0..self.nv)
+            .map(|v| {
+                (0..self.nl)
+                    .map(|m| {
+                        let f = self.st[v * self.nl + m].in_flight as usize;
+                        f.div_ceil(self.max_y) as u32
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Assigned-but-uncompleted work per `(node, light idx)` — the
+    /// continuous-time counterpart of the slotted decision's `y[v][m]`
+    /// (concurrent tasks), used for per-slot parallelism cost charging.
+    pub fn in_flight_matrix(&self) -> Vec<Vec<u32>> {
+        (0..self.nv)
+            .map(|v| (0..self.nl).map(|m| self.st[v * self.nl + m].in_flight).collect())
+            .collect()
+    }
+
+    /// Tasks parked in FIFOs and batchers across all stations.
+    pub fn waiting_total(&self) -> usize {
+        self.st.iter().map(Station::waiting).sum()
+    }
+
+    /// Tasks assigned but not yet completed, across all stations.
+    pub fn in_flight_total(&self) -> usize {
+        self.st.iter().map(|s| s.in_flight as usize).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn w(task: u64) -> Waiting {
+        Waiting {
+            task,
+            local: 0,
+            proc_ms: 1.0,
+            y: 1,
+            join_ms: 0.0,
+        }
+    }
+
+    #[test]
+    fn fifo_queues_when_over_cap() {
+        let mut st = LightStations::new(2, 1, 2, None);
+        // one instance, max_y 2 => cap 2
+        let started = st.on_decision(&[vec![1], vec![0]]);
+        assert!(started.is_empty());
+        st.note_assigned(0, 0);
+        st.note_assigned(0, 0);
+        st.note_assigned(0, 0);
+        assert!(matches!(st.join(0, 0, w(1), 0.0), Joined::Start(v) if v.len() == 1));
+        assert!(matches!(st.join(0, 0, w(2), 0.0), Joined::Start(v) if v.len() == 1));
+        assert!(matches!(st.join(0, 0, w(3), 0.0), Joined::Queued));
+        assert_eq!(st.waiting_total(), 1);
+        // completion promotes the FIFO head
+        let next = st.complete(0, 0).expect("queued task starts");
+        assert_eq!(next.task, 3);
+        assert_eq!(st.waiting_total(), 0);
+        // busy: 3 assigned, 1 completed => 2 in flight => ceil(2/2)=1 group
+        assert_eq!(st.busy_matrix()[0][0], 1);
+    }
+
+    #[test]
+    fn cap_never_drops_below_commitments() {
+        let mut st = LightStations::new(1, 1, 4, None);
+        st.on_decision(&[vec![1]]);
+        for _ in 0..4 {
+            st.note_assigned(0, 0);
+        }
+        // controller zeroes the station while work is still committed
+        st.on_decision(&[vec![0]]);
+        assert!(matches!(st.join(0, 0, w(1), 0.0), Joined::Start(_)));
+        assert_eq!(st.busy_matrix()[0][0], 1);
+    }
+
+    #[test]
+    fn decision_does_not_promote_backlog_beyond_capacity() {
+        let mut st = LightStations::new(1, 1, 2, None);
+        st.on_decision(&[vec![1]]); // one instance, max_y 2 => cap 2
+        for _ in 0..6 {
+            st.note_assigned(0, 0);
+        }
+        assert!(matches!(st.join(0, 0, w(1), 0.0), Joined::Start(_)));
+        assert!(matches!(st.join(0, 0, w(2), 0.0), Joined::Start(_)));
+        for t in 3..=6 {
+            assert!(matches!(st.join(0, 0, w(t), 0.0), Joined::Queued));
+        }
+        // Re-deciding the same x must NOT inflate the cap to the backlog:
+        // the queue above capacity is real queueing to be measured.
+        let started = st.on_decision(&[vec![1]]);
+        assert!(started.is_empty(), "backlog must stay queued at capacity");
+        assert_eq!(st.waiting_total(), 4);
+        // Completions drain the FIFO one service slot at a time.
+        assert!(st.complete(0, 0).is_some());
+        assert_eq!(st.waiting_total(), 3);
+    }
+
+    #[test]
+    fn abort_releases_busy_accounting() {
+        let mut st = LightStations::new(1, 1, 4, None);
+        st.on_decision(&[vec![1]]);
+        st.note_assigned(0, 0);
+        assert_eq!(st.busy_matrix()[0][0], 1);
+        st.abort_assignment(0, 0);
+        assert_eq!(st.busy_matrix()[0][0], 0);
+        assert_eq!(st.in_flight_total(), 0);
+    }
+
+    #[test]
+    fn batcher_flushes_on_size_and_age() {
+        let mut st = LightStations::new(1, 1, 8, Some(BatchPolicy::with_wait_ms(2, 5.0)));
+        st.on_decision(&[vec![1]]);
+        st.note_assigned(0, 0);
+        st.note_assigned(0, 0);
+        st.note_assigned(0, 0);
+        // first join opens an age window
+        match st.join(0, 0, w(1), 10.0) {
+            Joined::Batched(Some((t, epoch))) => {
+                assert_eq!(t, 15.0);
+                assert_eq!(epoch, 1);
+                // stale epoch is ignored
+                assert!(st.age_flush(0, 0, epoch + 1, 20.0).is_empty());
+                // valid epoch flushes the batch
+                let started = st.age_flush(0, 0, epoch, 15.0);
+                assert_eq!(started.len(), 1);
+            }
+            _ => panic!("first join must open an age window"),
+        }
+        // size trigger: second window fills to max_batch
+        assert!(matches!(st.join(0, 0, w(2), 16.0), Joined::Batched(Some(_))));
+        match st.join(0, 0, w(3), 16.5) {
+            Joined::Start(v) => assert_eq!(v.len(), 2),
+            _ => panic!("size trigger must flush"),
+        }
+    }
+
+    #[test]
+    fn decision_growth_promotes_fifo() {
+        let mut st = LightStations::new(1, 1, 1, None);
+        st.on_decision(&[vec![1]]);
+        st.note_assigned(0, 0);
+        st.note_assigned(0, 0);
+        assert!(matches!(st.join(0, 0, w(1), 0.0), Joined::Start(_)));
+        assert!(matches!(st.join(0, 0, w(2), 0.0), Joined::Queued));
+        let started = st.on_decision(&[vec![2]]);
+        assert_eq!(started.len(), 1);
+        assert_eq!(started[0].2.task, 2);
+    }
+}

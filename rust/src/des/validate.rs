@@ -1,0 +1,254 @@
+//! Measured-vs-analytic bound validation.
+//!
+//! The controller's QoS machinery promises that a light service deployed
+//! at parallelism `y` exceeds the delay bound `g_{m,ε}(y)` with
+//! probability at most ε. The DES engine measures what actually happened
+//! — per-execution sojourn `(y, wait + service)` samples — and this layer
+//! turns them into per-service empirical violation rates and CCDF points:
+//! the paper's guarantee holds iff `P(sojourn > g_{m,ε}(y)) ≤ ε` for
+//! every light service.
+
+use crate::effcap::GTable;
+use crate::metrics::TrialMetrics;
+
+/// Empirical bound check for one light service.
+#[derive(Clone, Debug)]
+pub struct ServiceValidation {
+    /// Dense light-MS index.
+    pub light_idx: usize,
+    /// Number of measured executions.
+    pub samples: usize,
+    /// Executions whose sojourn exceeded `g_{m,ε}(y)` at their own `y`.
+    pub violations: usize,
+    /// The ε the bound was built for.
+    pub epsilon: f64,
+    /// Mean measured sojourn (ms).
+    pub mean_sojourn_ms: f64,
+    /// Mean bound across the same executions (ms).
+    pub mean_bound_ms: f64,
+    /// Worst observed sojourn (ms).
+    pub max_sojourn_ms: f64,
+}
+
+impl ServiceValidation {
+    /// Empirical `P(sojourn > g_{m,ε}(y))`.
+    pub fn violation_rate(&self) -> f64 {
+        if self.samples == 0 {
+            0.0
+        } else {
+            self.violations as f64 / self.samples as f64
+        }
+    }
+
+    /// Does the guarantee hold within `tolerance` (slack for Monte-Carlo
+    /// noise at finite sample sizes)?
+    pub fn holds(&self, tolerance: f64) -> bool {
+        self.violation_rate() <= self.epsilon + tolerance
+    }
+}
+
+/// Compare every measured sojourn in `metrics` against the g-table bound
+/// at its own decision parallelism. Services with no executions yield a
+/// zero-sample entry (trivially holding).
+pub fn validate_bounds(gtable: &GTable, metrics: &TrialMetrics) -> Vec<ServiceValidation> {
+    metrics
+        .service_obs
+        .iter()
+        .enumerate()
+        .map(|(m, obs)| {
+            let mut violations = 0usize;
+            let mut sum_s = 0.0;
+            let mut sum_g = 0.0;
+            let mut max_s = 0.0f64;
+            for &(y, sojourn) in &obs.samples {
+                let g = gtable.delay(m, y as usize);
+                if sojourn > g {
+                    violations += 1;
+                }
+                sum_s += sojourn;
+                sum_g += g;
+                max_s = max_s.max(sojourn);
+            }
+            let n = obs.samples.len();
+            ServiceValidation {
+                light_idx: m,
+                samples: n,
+                violations,
+                epsilon: gtable.params_epsilon,
+                mean_sojourn_ms: if n > 0 { sum_s / n as f64 } else { 0.0 },
+                mean_bound_ms: if n > 0 { sum_g / n as f64 } else { 0.0 },
+                max_sojourn_ms: max_s,
+            }
+        })
+        .collect()
+}
+
+/// Pool several trials' validations (same g-table) into one per-service
+/// aggregate — the multi-seed acceptance check.
+pub fn pool(per_trial: &[Vec<ServiceValidation>]) -> Vec<ServiceValidation> {
+    let nl = per_trial.iter().map(Vec::len).max().unwrap_or(0);
+    (0..nl)
+        .map(|m| {
+            let mut samples = 0usize;
+            let mut violations = 0usize;
+            let mut sum_s = 0.0;
+            let mut sum_g = 0.0;
+            let mut max_s = 0.0f64;
+            let mut epsilon = 0.0;
+            for trial in per_trial {
+                if let Some(v) = trial.get(m) {
+                    samples += v.samples;
+                    violations += v.violations;
+                    sum_s += v.mean_sojourn_ms * v.samples as f64;
+                    sum_g += v.mean_bound_ms * v.samples as f64;
+                    max_s = max_s.max(v.max_sojourn_ms);
+                    epsilon = v.epsilon;
+                }
+            }
+            ServiceValidation {
+                light_idx: m,
+                samples,
+                violations,
+                epsilon,
+                mean_sojourn_ms: if samples > 0 { sum_s / samples as f64 } else { 0.0 },
+                mean_bound_ms: if samples > 0 { sum_g / samples as f64 } else { 0.0 },
+                max_sojourn_ms: max_s,
+            }
+        })
+        .collect()
+}
+
+/// Empirical CCDF of one service's sojourns evaluated at `t` ms:
+/// `P(sojourn > t)` (exact, from the raw samples).
+pub fn sojourn_ccdf(metrics: &TrialMetrics, light_idx: usize, t: f64) -> f64 {
+    match metrics.service_obs.get(light_idx) {
+        None => 0.0,
+        Some(obs) => {
+            if obs.samples.is_empty() {
+                return 0.0;
+            }
+            let above = obs.samples.iter().filter(|&&(_, s)| s > t).count();
+            above as f64 / obs.samples.len() as f64
+        }
+    }
+}
+
+/// Formatted per-service table for CLI / example output.
+pub fn report(validations: &[ServiceValidation]) -> String {
+    let mut s = String::new();
+    s.push_str(
+        "light  samples  violations  measured   eps     mean sojourn  mean bound  max sojourn  status\n",
+    );
+    for v in validations {
+        s.push_str(&format!(
+            "m={:<4} {:>7}  {:>10}  {:>8.4}  {:>6.3}  {:>10.3}ms  {:>8.3}ms  {:>9.3}ms  {}\n",
+            v.light_idx,
+            v.samples,
+            v.violations,
+            v.violation_rate(),
+            v.epsilon,
+            v.mean_sojourn_ms,
+            v.mean_bound_ms,
+            v.max_sojourn_ms,
+            if v.holds(0.0) { "OK" } else { "VIOLATED" }
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::effcap::{GTable, GTableParams};
+    use crate::metrics::MetricsCollector;
+
+    fn flat_gtable(bound: f64, eps: f64) -> GTable {
+        // One light service, constant bound across y.
+        GTable::from_rows(vec![vec![bound; 4]], vec![vec![bound; 4]], eps, 1.0)
+    }
+
+    fn metrics_with(samples: Vec<(u32, f64)>) -> crate::metrics::TrialMetrics {
+        let mut c = MetricsCollector::new();
+        c.enable_service_obs(1);
+        for (y, s) in samples {
+            c.record_sojourn(0, y, s);
+        }
+        c.finish(&crate::metrics::CostBook::default())
+    }
+
+    #[test]
+    fn violation_rate_counts_exceedances() {
+        let gt = flat_gtable(10.0, 0.2);
+        let m = metrics_with(vec![(1, 5.0), (2, 9.0), (1, 11.0), (3, 20.0)]);
+        let v = validate_bounds(&gt, &m);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].samples, 4);
+        assert_eq!(v[0].violations, 2);
+        assert!((v[0].violation_rate() - 0.5).abs() < 1e-12);
+        assert!(!v[0].holds(0.1));
+        assert!(v[0].holds(0.31));
+        assert_eq!(v[0].max_sojourn_ms, 20.0);
+    }
+
+    #[test]
+    fn empty_service_trivially_holds() {
+        let gt = flat_gtable(10.0, 0.2);
+        let m = metrics_with(vec![]);
+        let v = validate_bounds(&gt, &m);
+        assert_eq!(v[0].samples, 0);
+        assert!(v[0].holds(0.0));
+    }
+
+    #[test]
+    fn pooling_aggregates_counts() {
+        let gt = flat_gtable(10.0, 0.2);
+        let a = validate_bounds(&gt, &metrics_with(vec![(1, 5.0), (1, 15.0)]));
+        let b = validate_bounds(&gt, &metrics_with(vec![(1, 5.0), (1, 5.0)]));
+        let pooled = pool(&[a, b]);
+        assert_eq!(pooled[0].samples, 4);
+        assert_eq!(pooled[0].violations, 1);
+        assert!((pooled[0].violation_rate() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ccdf_from_raw_samples() {
+        let m = metrics_with(vec![(1, 1.0), (1, 2.0), (1, 3.0), (1, 4.0)]);
+        assert!((sojourn_ccdf(&m, 0, 2.5) - 0.5).abs() < 1e-12);
+        assert_eq!(sojourn_ccdf(&m, 0, 100.0), 0.0);
+        assert_eq!(sojourn_ccdf(&m, 5, 1.0), 0.0);
+    }
+
+    #[test]
+    fn bounds_built_from_samples_hold_at_their_epsilon() {
+        // End-to-end statistical check of the estimator itself: draw
+        // Gamma service rates, build the table, then measure violation
+        // frequency of fresh draws against g at several parallelism
+        // levels — must be ≤ eps (plus MC slack).
+        use crate::rng::{Distribution, Gamma, Xoshiro256};
+        let g = Gamma::new(1.7, 9.0);
+        let mut rng = Xoshiro256::seed_from(99);
+        let train = g.sample_n(&mut rng, 8192);
+        let a_m = 1.3;
+        let mut params = GTableParams::default_paper();
+        params.epsilon = 0.05;
+        let gt = GTable::build(&[train], &[a_m], &params);
+        for y in [1usize, 2, 4] {
+            let bound = gt.delay(0, y);
+            let scale = (y as f64).powf(params.contention_alpha);
+            let mut viol = 0usize;
+            let n = 20000;
+            for _ in 0..n {
+                let service = a_m * scale / g.sample(&mut rng).max(1e-12);
+                if service > bound {
+                    viol += 1;
+                }
+            }
+            let rate = viol as f64 / n as f64;
+            assert!(
+                rate <= params.epsilon + 0.02,
+                "y={y}: measured {rate} > eps {}",
+                params.epsilon
+            );
+        }
+    }
+}

@@ -13,6 +13,10 @@
 //! * **Dynamic tier** — light microservices deployed every slot by a
 //!   Lyapunov drift-plus-penalty controller whose latency bounds come from
 //!   effective-capacity theory ([`controller`], [`effcap`]).
+//! * **Ground truth** — a continuous-time discrete-event queueing
+//!   simulator replays the same traces with real per-replica FIFO queues
+//!   and validates the measured delay-violation rates against the
+//!   analytic `g_{m,ε}(y)` bounds ([`des`]).
 //!
 //! The crate is the Layer-3 Rust coordinator of a three-layer stack: JAX
 //! (Layer 2) and Pallas kernels (Layer 1) are compiled ahead of time to
@@ -40,6 +44,7 @@ pub mod workload;
 
 pub mod baselines;
 pub mod controller;
+pub mod des;
 pub mod placement;
 pub mod routing;
 pub mod sim;

@@ -5,13 +5,14 @@ use std::time::Instant;
 use fmedge::baselines::{GaStrategy, LbrrStrategy, PropAvg, Proposal};
 use fmedge::cli::{Args, HELP};
 use fmedge::config::ExperimentConfig;
-use fmedge::coordinator::{Coordinator, Request, ServeConfig};
+use fmedge::coordinator::{BatchPolicy, Coordinator, Request, ServeConfig};
+use fmedge::des::{pool, report, run_des_trial, validate_bounds, DesOptions};
 use fmedge::metrics::Summary;
 use fmedge::placement::{solve_static_placement, PlacementParams, QosScores, ScoreParams};
 use fmedge::rng::{Rng, Xoshiro256};
 use fmedge::runtime::{EffCapAccel, Runtime};
-use fmedge::sim::{run_trial, SimEnv, SimOptions, Strategy};
-use fmedge::workload::WorkloadGenerator;
+use fmedge::sim::{record_trace, run_trial, SimEnv, SimOptions, Strategy};
+use fmedge::workload::{Trace, WorkloadGenerator};
 
 fn main() {
     let args = match Args::from_env() {
@@ -30,6 +31,7 @@ fn main() {
         "place" => cmd_place(&args),
         "gtable" => cmd_gtable(&args),
         "simulate" => cmd_simulate(&args),
+        "des" => cmd_des(&args),
         "serve" => cmd_serve(&args),
         other => {
             eprintln!("unknown command `{other}`\n\n{HELP}");
@@ -133,6 +135,16 @@ fn cmd_gtable(args: &Args) -> Result<(), AnyError> {
     Ok(())
 }
 
+fn make_strategy(name: &str) -> Result<Box<dyn Strategy>, AnyError> {
+    Ok(match name {
+        "proposal" => Box::new(Proposal::new()),
+        "propavg" => Box::new(PropAvg::new()),
+        "lbrr" => Box::new(LbrrStrategy::new()),
+        "ga" => Box::new(GaStrategy::new(16, 12)),
+        other => return Err(format!("unknown strategy `{other}`").into()),
+    })
+}
+
 fn cmd_simulate(args: &Args) -> Result<(), AnyError> {
     let mut cfg = load_config(args)?;
     cfg.sim.slots = args.get_usize("slots", cfg.sim.slots)?;
@@ -146,13 +158,7 @@ fn cmd_simulate(args: &Args) -> Result<(), AnyError> {
     for trial in 0..cfg.sim.trials {
         let seed = cfg.sim.seed + trial as u64;
         let env = SimEnv::build(&cfg, seed);
-        let mut strategy: Box<dyn Strategy> = match strat_name.as_str() {
-            "proposal" => Box::new(Proposal::new()),
-            "propavg" => Box::new(PropAvg::new()),
-            "lbrr" => Box::new(LbrrStrategy::new()),
-            "ga" => Box::new(GaStrategy::new(16, 12)),
-            other => return Err(format!("unknown strategy `{other}`").into()),
-        };
+        let mut strategy = make_strategy(&strat_name)?;
         let m = run_trial(&env, strategy.as_mut(), seed, &SimOptions::from_config(&cfg));
         println!(
             "trial {trial:>3}: tasks={:<6} completion={:.3} on_time={:.3} cost={:.0}",
@@ -172,6 +178,99 @@ fn cmd_simulate(args: &Args) -> Result<(), AnyError> {
         Summary::of(&otr).row(),
         Summary::of(&cost).row()
     );
+    Ok(())
+}
+
+/// `fmedge des`: the discrete-event queueing engine over recorded traces,
+/// with optional measured-vs-analytic bound validation.
+fn cmd_des(args: &Args) -> Result<(), AnyError> {
+    let mut cfg = load_config(args)?;
+    cfg.sim.slots = args.get_usize("slots", cfg.sim.slots)?;
+    cfg.sim.trials = args.get_usize("trials", cfg.sim.trials)?;
+    cfg.sim.load_multiplier = args.get_f64("load", cfg.sim.load_multiplier)?;
+    cfg.sim.seed = args.get_u64("seed", cfg.sim.seed)?;
+    let strat_name = args.get("strategy").unwrap_or("proposal").to_string();
+    let batch = args.get_usize("batch", 0)?;
+    let batch_wait = args.get_f64("batch-wait", 1.0)?;
+    let mut otr = Vec::new();
+    let mut lat_p95 = Vec::new();
+    let mut per_trial_vals = Vec::new();
+    // --trace replays one saved realization across every trial
+    // (cross-process pairing); parse it once up front. A trace is only
+    // meaningful against the environment it was recorded in, so replay
+    // pins the env to the base seed and varies only the engine rng —
+    // fresh per-trial envs would silently unpair arrivals from their
+    // topology, DAGs, and g-table.
+    let loaded_trace = match args.get("trace") {
+        Some(path) => Some(Trace::load(path)?),
+        None => None,
+    };
+    let paired_env = loaded_trace
+        .as_ref()
+        .map(|_| SimEnv::build(&cfg, cfg.sim.seed));
+    let t0 = Instant::now();
+    for trial in 0..cfg.sim.trials {
+        let seed = cfg.sim.seed + trial as u64;
+        let built_env;
+        let env: &SimEnv = match &paired_env {
+            Some(e) => e,
+            None => {
+                built_env = SimEnv::build(&cfg, seed);
+                &built_env
+            }
+        };
+        let opts = SimOptions::from_config(&cfg);
+        let recorded;
+        let trace: &Trace = match &loaded_trace {
+            Some(t) => t,
+            None => {
+                recorded = record_trace(env, seed, &opts);
+                &recorded
+            }
+        };
+        if trial == 0 {
+            if let Some(path) = args.get("save-trace") {
+                trace.save(path)?;
+                println!("trace saved to {path} ({} arrivals)", trace.len());
+            }
+        }
+        let mut dopts = DesOptions::from_sim(&opts);
+        if batch > 1 {
+            dopts.batching = Some(BatchPolicy::with_wait_ms(batch, batch_wait));
+        }
+        let mut strategy = make_strategy(&strat_name)?;
+        let m = run_des_trial(env, strategy.as_mut(), seed, &dopts, trace);
+        let measured: usize = m.service_obs.iter().map(|o| o.samples.len()).sum();
+        println!(
+            "trial {trial:>3}: tasks={:<6} completion={:.3} on_time={:.3} cost={:.0} sojourns={measured} queue {}",
+            m.total_tasks,
+            m.completion_rate(),
+            m.on_time_rate(),
+            m.total_cost,
+            m.queue_depth.row(),
+        );
+        otr.push(m.on_time_rate());
+        lat_p95.push(m.latency_percentile(0.95));
+        if args.flag("validate") {
+            per_trial_vals.push(validate_bounds(&env.gtable, &m));
+        }
+    }
+    println!(
+        "\ndes/{} over {} trials in {:?}:\n  on-time  {}\n  lat p95  {}",
+        strat_name,
+        cfg.sim.trials,
+        t0.elapsed(),
+        Summary::of(&otr).row(),
+        Summary::of(&lat_p95).row()
+    );
+    if args.flag("validate") {
+        let pooled = pool(&per_trial_vals);
+        println!(
+            "\nmeasured vs g_{{m,eps}}(y), eps={} (pooled over trials):\n{}",
+            cfg.controller.epsilon,
+            report(&pooled)
+        );
+    }
     Ok(())
 }
 

@@ -1,0 +1,317 @@
+//! Fixed-bin histograms for streaming latency / queue-depth observation.
+//!
+//! The DES engine records one sojourn sample per light-service execution
+//! and one queue-depth sample per controller tick; a trial can easily
+//! produce 10^5+ of each, so the collector keeps O(bins) state with exact
+//! count/sum and approximate quantiles (linear interpolation inside the
+//! owning bin).
+
+/// Bin-edge layout.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Scale {
+    Linear,
+    Log,
+}
+
+/// A fixed-bin histogram over `[lo, hi)` with under/overflow buckets.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    scale: Scale,
+    counts: Vec<u64>,
+    underflow: u64,
+    overflow: u64,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    /// Empty single-bin placeholder — for trials that collect no service
+    /// observations (e.g. the slotted engine).
+    fn default() -> Self {
+        Histogram::linear(0.0, 1.0, 1)
+    }
+}
+
+impl Histogram {
+    /// Linearly spaced bins over `[lo, hi)`.
+    pub fn linear(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0, "need hi > lo and at least one bin");
+        Histogram {
+            lo,
+            hi,
+            scale: Scale::Linear,
+            counts: vec![0; bins],
+            underflow: 0,
+            overflow: 0,
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Log-spaced bins over `[lo, hi)` (`lo > 0`) — the latency default:
+    /// constant relative resolution from sub-ms to the deadline scale.
+    pub fn log(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(lo > 0.0 && hi > lo && bins > 0, "log bins need 0 < lo < hi");
+        Histogram {
+            lo,
+            hi,
+            scale: Scale::Log,
+            counts: vec![0; bins],
+            underflow: 0,
+            overflow: 0,
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Latency default: 64 log bins from 10 µs to 10 s.
+    pub fn latency_ms() -> Self {
+        Histogram::log(1e-2, 1e4, 64)
+    }
+
+    fn bin_of(&self, x: f64) -> Option<usize> {
+        if x < self.lo {
+            return None;
+        }
+        let n = self.counts.len() as f64;
+        let frac = match self.scale {
+            Scale::Linear => (x - self.lo) / (self.hi - self.lo),
+            Scale::Log => (x / self.lo).ln() / (self.hi / self.lo).ln(),
+        };
+        let i = (frac * n).floor() as usize;
+        if i >= self.counts.len() {
+            None
+        } else {
+            Some(i)
+        }
+    }
+
+    /// Lower edge of bin `i`.
+    fn edge(&self, i: usize) -> f64 {
+        let frac = i as f64 / self.counts.len() as f64;
+        match self.scale {
+            Scale::Linear => self.lo + frac * (self.hi - self.lo),
+            Scale::Log => self.lo * (self.hi / self.lo).powf(frac),
+        }
+    }
+
+    /// Record one observation.
+    pub fn record(&mut self, x: f64) {
+        if !x.is_finite() {
+            return;
+        }
+        self.count += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        if x < self.lo {
+            self.underflow += 1;
+        } else {
+            match self.bin_of(x) {
+                Some(i) => self.counts[i] += 1,
+                None => self.overflow += 1,
+            }
+        }
+    }
+
+    /// Merge another histogram with identical layout.
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.lo, other.lo);
+        assert_eq!(self.hi, other.hi);
+        assert_eq!(self.scale, other.scale);
+        assert_eq!(self.counts.len(), other.counts.len());
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.underflow += other.underflow;
+        self.overflow += other.overflow;
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Approximate p-quantile (p in [0,1]): linear interpolation within
+    /// the bin holding the target rank. Under/overflow resolve to the
+    /// recorded min/max.
+    pub fn quantile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (p.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = self.underflow;
+        if target <= seen {
+            return self.min();
+        }
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if target <= seen + c {
+                let lo_edge = self.edge(i);
+                let hi_edge = self.edge(i + 1);
+                let within = (target - seen) as f64 / c as f64;
+                return lo_edge + within * (hi_edge - lo_edge);
+            }
+            seen += c;
+        }
+        self.max()
+    }
+
+    /// Empirical complementary CDF at `t`: fraction of observations
+    /// strictly greater than `t`, resolved at bin granularity (samples in
+    /// the bin containing `t` count partially via linear interpolation).
+    pub fn ccdf(&self, t: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        if t < self.lo {
+            return (self.count - self.underflow) as f64 / self.count as f64;
+        }
+        let mut above = self.overflow;
+        if let Some(bt) = self.bin_of(t) {
+            for (i, &c) in self.counts.iter().enumerate() {
+                if i > bt {
+                    above += c;
+                } else if i == bt {
+                    let lo_edge = self.edge(i);
+                    let hi_edge = self.edge(i + 1);
+                    let frac_above = ((hi_edge - t) / (hi_edge - lo_edge)).clamp(0.0, 1.0);
+                    above += (c as f64 * frac_above).round() as u64;
+                }
+            }
+        }
+        above as f64 / self.count as f64
+    }
+
+    /// One-line summary for reports.
+    pub fn row(&self) -> String {
+        format!(
+            "n={} mean={:.2} p50={:.2} p95={:.2} p99={:.2} max={:.2}",
+            self.count,
+            self.mean(),
+            self.quantile(0.5),
+            self.quantile(0.95),
+            self.quantile(0.99),
+            self.max()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_bins_count_and_mean() {
+        let mut h = Histogram::linear(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.record(i as f64 + 0.5);
+        }
+        assert_eq!(h.count(), 10);
+        assert!((h.mean() - 5.0).abs() < 1e-12);
+        assert_eq!(h.min(), 0.5);
+        assert_eq!(h.max(), 9.5);
+    }
+
+    #[test]
+    fn under_and_overflow_tracked() {
+        let mut h = Histogram::linear(1.0, 2.0, 4);
+        h.record(0.5);
+        h.record(1.5);
+        h.record(5.0);
+        assert_eq!(h.count(), 3);
+        // quantiles resolve to recorded extremes at the tails
+        assert_eq!(h.quantile(0.0), 0.5);
+        assert_eq!(h.quantile(1.0), 5.0);
+    }
+
+    #[test]
+    fn quantiles_are_ordered_and_bracketed() {
+        let mut h = Histogram::log(0.1, 1000.0, 48);
+        for i in 1..=1000 {
+            h.record(i as f64 * 0.1);
+        }
+        let p50 = h.quantile(0.5);
+        let p95 = h.quantile(0.95);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p95 && p95 <= p99);
+        assert!((p50 - 50.0).abs() < 5.0, "p50≈50, got {p50}");
+        assert!((p95 - 95.0).abs() < 8.0, "p95≈95, got {p95}");
+    }
+
+    #[test]
+    fn ccdf_decreases() {
+        let mut h = Histogram::log(0.1, 100.0, 32);
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        let a = h.ccdf(10.0);
+        let b = h.ccdf(50.0);
+        let c = h.ccdf(90.0);
+        assert!(a > b && b > c);
+        assert!((a - 0.9).abs() < 0.05, "ccdf(10)≈0.9, got {a}");
+        assert_eq!(h.ccdf(1e9), 0.0);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = Histogram::linear(0.0, 10.0, 5);
+        let mut b = Histogram::linear(0.0, 10.0, 5);
+        a.record(1.0);
+        b.record(9.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.max(), 9.0);
+        assert!((a.mean() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_histogram_is_benign() {
+        let h = Histogram::default();
+        assert!(h.is_empty());
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.ccdf(1.0), 0.0);
+    }
+}

@@ -4,10 +4,40 @@
 //! Fig. 4's error bars (mean ± std over trials).
 
 mod cost;
+mod histogram;
 mod stats;
 
 pub use cost::{CostBook, CostBreakdown};
+pub use histogram::Histogram;
 pub use stats::{kde_violin, quantile, Summary, ViolinData};
+
+/// Per-light-service sojourn observations: what a task actually
+/// experienced at its assigned replica (queue wait + service), the
+/// measured counterpart of the analytic bound `g_{m,ε}(y)`. Populated by
+/// the DES engine; the slotted engine leaves these empty.
+#[derive(Clone, Debug, Default)]
+pub struct ServiceObs {
+    /// Sojourn-time distribution (ms).
+    pub sojourn: Histogram,
+    /// Raw `(decision parallelism y, sojourn ms)` pairs — the bound
+    /// validation compares each sample against `g_{m,ε}(y)` at its own y.
+    pub samples: Vec<(u32, f64)>,
+}
+
+impl ServiceObs {
+    /// Fresh observation set with the latency-scaled histogram.
+    pub fn new() -> Self {
+        ServiceObs {
+            sojourn: Histogram::latency_ms(),
+            samples: Vec::new(),
+        }
+    }
+
+    pub fn record(&mut self, y: u32, sojourn_ms: f64) {
+        self.sojourn.record(sojourn_ms);
+        self.samples.push((y, sojourn_ms));
+    }
+}
 
 /// Outcome of one completed (or dropped) task.
 #[derive(Clone, Copy, Debug)]
@@ -41,6 +71,12 @@ pub struct TrialMetrics {
     pub latencies_ms: Vec<f64>,
     /// Deadlines of all admitted tasks (for slack analysis).
     pub mean_deadline_ms: f64,
+    /// Per-light-service sojourn observations (DES engine; empty under
+    /// the slotted engine).
+    pub service_obs: Vec<ServiceObs>,
+    /// Pending-work depth (controller queue + station FIFOs), sampled per
+    /// controller tick (DES engine; empty under the slotted engine).
+    pub queue_depth: Histogram,
 }
 
 impl TrialMetrics {
@@ -73,11 +109,33 @@ impl TrialMetrics {
 #[derive(Clone, Debug, Default)]
 pub struct MetricsCollector {
     outcomes: Vec<TaskOutcome>,
+    service_obs: Vec<ServiceObs>,
+    queue_depth: Histogram,
 }
 
 impl MetricsCollector {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Turn on per-light-service sojourn + queue-depth collection (the
+    /// DES engine calls this once; the slotted engine never does).
+    pub fn enable_service_obs(&mut self, num_light: usize) {
+        self.service_obs = (0..num_light).map(|_| ServiceObs::new()).collect();
+        self.queue_depth = Histogram::linear(0.0, 512.0, 128);
+    }
+
+    /// Record one measured light-service sojourn (wait + service, ms) at
+    /// the parallelism level `y` the controller committed to.
+    pub fn record_sojourn(&mut self, light_idx: usize, y: u32, sojourn_ms: f64) {
+        if let Some(obs) = self.service_obs.get_mut(light_idx) {
+            obs.record(y, sojourn_ms);
+        }
+    }
+
+    /// Sample the current pending-work depth (one call per tick).
+    pub fn record_queue_depth(&mut self, depth: usize) {
+        self.queue_depth.record(depth as f64);
     }
 
     pub fn record(&mut self, o: TaskOutcome) {
@@ -117,6 +175,8 @@ impl MetricsCollector {
             light_cost: b.light_total(),
             latencies_ms,
             mean_deadline_ms,
+            service_obs: self.service_obs,
+            queue_depth: self.queue_depth,
         }
     }
 }
@@ -160,6 +220,31 @@ mod tests {
         assert!(o.on_time());
         let o2 = outcome(Some(20.000001), 20.0);
         assert!(!o2.on_time());
+    }
+
+    #[test]
+    fn service_obs_collected_when_enabled() {
+        let mut c = MetricsCollector::new();
+        c.enable_service_obs(2);
+        c.record_sojourn(0, 1, 5.0);
+        c.record_sojourn(0, 2, 9.0);
+        c.record_sojourn(1, 1, 3.0);
+        c.record_sojourn(99, 1, 1.0); // out of range: ignored
+        c.record_queue_depth(4);
+        let m = c.finish(&CostBook::default());
+        assert_eq!(m.service_obs.len(), 2);
+        assert_eq!(m.service_obs[0].samples, vec![(1, 5.0), (2, 9.0)]);
+        assert_eq!(m.service_obs[0].sojourn.count(), 2);
+        assert_eq!(m.service_obs[1].sojourn.count(), 1);
+        assert_eq!(m.queue_depth.count(), 1);
+        assert!((m.queue_depth.mean() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn service_obs_empty_by_default() {
+        let m = MetricsCollector::new().finish(&CostBook::default());
+        assert!(m.service_obs.is_empty());
+        assert!(m.queue_depth.is_empty());
     }
 
     #[test]

@@ -14,24 +14,43 @@ pub use core_router::{CoreAssignment, CoreRouter};
 
 use crate::network::Topology;
 
-/// All-pairs routed-latency model, decomposed into a payload-independent
-/// propagation component and a per-MB transmission component.
-#[derive(Clone, Debug)]
-pub struct DistanceMatrix {
-    n: usize,
-    /// Propagation (ms): Σ distance/l along the route.
-    base: Vec<f64>,
-    /// Transmission (ms/MB): Σ 1/w along the route.
-    per_mb: Vec<f64>,
+/// One hop of a routed path: destination node plus the latency split into
+/// a payload-independent propagation part and a per-MB transmission part.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Hop {
+    /// Node reached after traversing this hop.
+    pub to: usize,
+    /// Propagation delay (ms): distance / l.
+    pub base_ms: f64,
+    /// Transmission delay per MB (ms/MB): 1 / w.
+    pub per_mb_ms: f64,
 }
 
-impl DistanceMatrix {
+impl Hop {
+    /// Latency of this hop for a `mb`-sized payload.
+    #[inline]
+    pub fn latency(&self, mb: f64) -> f64 {
+        self.base_ms + mb * self.per_mb_ms
+    }
+}
+
+/// All-pairs hop-level routing table: for each (src, dst) pair the sequence
+/// of hops along the reference-payload shortest route. [`DistanceMatrix`]
+/// is the summed view of this table, so hop-by-hop replay (the DES
+/// transfer chain) lands on exactly the same total latency the analytic
+/// engines use.
+#[derive(Clone, Debug)]
+pub struct HopTable {
+    n: usize,
+    hops: Vec<Vec<Hop>>,
+}
+
+impl HopTable {
     /// Build from a topology using `ref_mb` as the payload that defines
     /// the routes (1 MB by default in callers).
     pub fn build(topo: &Topology, ref_mb: f64) -> Self {
         let n = topo.num_nodes();
-        let mut base = vec![0.0; n * n];
-        let mut per_mb = vec![0.0; n * n];
+        let mut hops = vec![Vec::new(); n * n];
         for src in 0..n {
             let sp = topo.shortest_paths(src, ref_mb);
             for dst in 0..n {
@@ -39,8 +58,7 @@ impl DistanceMatrix {
                     continue;
                 }
                 let path = sp.path_to(dst);
-                let mut b = 0.0;
-                let mut p = 0.0;
+                let mut seq = Vec::with_capacity(path.len().saturating_sub(1));
                 for w in path.windows(2) {
                     // Find the best link between consecutive hops.
                     let mut best: Option<(f64, f64)> = None;
@@ -60,12 +78,66 @@ impl DistanceMatrix {
                             }
                         }
                     }
-                    let (db, dp) = best.expect("path hops are adjacent");
-                    b += db;
-                    p += dp;
+                    let (base_ms, per_mb_ms) = best.expect("path hops are adjacent");
+                    seq.push(Hop {
+                        to: w[1],
+                        base_ms,
+                        per_mb_ms,
+                    });
                 }
-                base[src * n + dst] = b;
-                per_mb[src * n + dst] = p;
+                hops[src * n + dst] = seq;
+            }
+        }
+        HopTable { n, hops }
+    }
+
+    /// Hop sequence from `a` to `b` (empty when `a == b`).
+    #[inline]
+    pub fn hops(&self, a: usize, b: usize) -> &[Hop] {
+        &self.hops[a * self.n + b]
+    }
+
+    /// Total routed latency for payload `mb` — identical to the summed
+    /// [`DistanceMatrix::latency`].
+    pub fn latency(&self, a: usize, b: usize, mb: f64) -> f64 {
+        self.hops(a, b).iter().map(|h| h.latency(mb)).sum()
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.n
+    }
+}
+
+/// All-pairs routed-latency model, decomposed into a payload-independent
+/// propagation component and a per-MB transmission component.
+#[derive(Clone, Debug)]
+pub struct DistanceMatrix {
+    n: usize,
+    /// Propagation (ms): Σ distance/l along the route.
+    base: Vec<f64>,
+    /// Transmission (ms/MB): Σ 1/w along the route.
+    per_mb: Vec<f64>,
+}
+
+impl DistanceMatrix {
+    /// Build from a topology using `ref_mb` as the payload that defines
+    /// the routes (1 MB by default in callers).
+    pub fn build(topo: &Topology, ref_mb: f64) -> Self {
+        Self::from_hops(&HopTable::build(topo, ref_mb))
+    }
+
+    /// Summed view of a hop table: `latency(a, b, mb)` equals the sum of
+    /// the per-hop latencies, term for term.
+    pub fn from_hops(ht: &HopTable) -> Self {
+        let n = ht.num_nodes();
+        let mut base = vec![0.0; n * n];
+        let mut per_mb = vec![0.0; n * n];
+        for src in 0..n {
+            for dst in 0..n {
+                for h in ht.hops(src, dst) {
+                    base[src * n + dst] += h.base_ms;
+                    per_mb[src * n + dst] += h.per_mb_ms;
+                }
             }
         }
         DistanceMatrix { n, base, per_mb }
@@ -134,6 +206,39 @@ mod tests {
         let dm = DistanceMatrix::build(&t, 1.0);
         for v in 0..t.num_nodes() {
             assert_eq!(dm.latency(v, v, 5.0), 0.0);
+        }
+    }
+
+    #[test]
+    fn hop_table_sums_to_distance_matrix() {
+        let t = topo(5);
+        let ht = HopTable::build(&t, 1.0);
+        let dm = DistanceMatrix::from_hops(&ht);
+        for a in 0..t.num_nodes() {
+            for b in 0..t.num_nodes() {
+                for &mb in &[0.25, 1.0, 4.0] {
+                    assert!(
+                        (ht.latency(a, b, mb) - dm.latency(a, b, mb)).abs() < 1e-12,
+                        "hop-by-hop total must equal the summed matrix ({a},{b})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hop_paths_end_at_destination() {
+        let t = topo(6);
+        let ht = HopTable::build(&t, 1.0);
+        for a in 0..t.num_nodes() {
+            for b in 0..t.num_nodes() {
+                let hops = ht.hops(a, b);
+                if a == b {
+                    assert!(hops.is_empty());
+                } else {
+                    assert_eq!(hops.last().expect("connected").to, b);
+                }
+            }
         }
     }
 

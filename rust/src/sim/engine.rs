@@ -11,8 +11,8 @@ use crate::microservice::{build_fig1_application, Application, MsClass};
 use crate::network::Topology;
 use crate::placement::{QosScores, ScoreParams};
 use crate::rng::Xoshiro256;
-use crate::routing::{CoreRouter, DistanceMatrix};
-use crate::workload::WorkloadGenerator;
+use crate::routing::{CoreRouter, DistanceMatrix, HopTable};
+use crate::workload::{Trace, WorkloadGenerator};
 
 use super::Strategy;
 
@@ -23,6 +23,9 @@ pub struct SimEnv {
     pub app: Application,
     pub topo: Topology,
     pub dm: DistanceMatrix,
+    /// Hop-level decomposition of the same routes `dm` sums over — the
+    /// DES replays transfers hop by hop and the totals match exactly.
+    pub hops: HopTable,
     pub gtable: GTable,
     /// Raw rate samples per light MS (the PJRT path re-derives the g-table
     /// from these; kept for cross-checks).
@@ -43,7 +46,8 @@ impl SimEnv {
         let mut rng = Xoshiro256::seed_from(seed ^ 0xE17E_5EED);
         let app = build_fig1_application(cfg, &mut rng);
         let topo = Topology::generate(cfg, &mut rng);
-        let dm = DistanceMatrix::build(&topo, 1.0);
+        let hops = HopTable::build(&topo, 1.0);
+        let dm = DistanceMatrix::from_hops(&hops);
 
         let mut samples = Vec::new();
         let mut workloads = Vec::new();
@@ -86,6 +90,7 @@ impl SimEnv {
             app,
             topo,
             dm,
+            hops,
             gtable,
             light_rate_samples: samples,
             light_resources,
@@ -131,6 +136,74 @@ impl SimOptions {
     }
 }
 
+/// Shared stage-readiness rule for both engines: a stage is dispatchable
+/// once every DAG parent has completed and it has not been dispatched.
+/// The slotted and DES engines must agree on this (and on
+/// [`parent_payloads`]) for paired-trace comparisons to be meaningful —
+/// keep the logic here, in one place.
+pub(crate) fn stage_ready(
+    app: &Application,
+    task_type: usize,
+    done: &[Option<f64>],
+    dispatched: &[bool],
+    local: usize,
+) -> bool {
+    if dispatched[local] || done[local].is_some() {
+        return false;
+    }
+    let tt = &app.task_types[task_type];
+    tt.dag.parents(local).iter().all(|&p| done[p].is_some())
+}
+
+/// Shared parent-payload rule: `(node, ready_ms, mb)` triples feeding a
+/// stage. Source stages read the user payload at the ED once the uplink
+/// lands (`input_ready_ms`).
+pub(crate) fn parent_payloads(
+    app: &Application,
+    task_type: usize,
+    done: &[Option<f64>],
+    node: &[Option<usize>],
+    ed: usize,
+    input_ready_ms: f64,
+    local: usize,
+) -> Vec<(usize, f64, f64)> {
+    let tt = &app.task_types[task_type];
+    let parents = tt.dag.parents(local);
+    if parents.is_empty() {
+        vec![(ed, input_ready_ms, tt.input_mb)]
+    } else {
+        parents
+            .iter()
+            .map(|&p| {
+                let spec = app.catalog.spec(tt.services[p]);
+                (
+                    node[p].expect("parent executed"),
+                    done[p].expect("parent done"),
+                    spec.output_mb,
+                )
+            })
+            .collect()
+    }
+}
+
+/// Shared residual-capacity rule: static residual minus the resources of
+/// busy light instance-groups, floored at zero.
+pub(crate) fn residual_after_busy(
+    residual_static: &[[f64; NUM_RESOURCES]],
+    light_resources: &[[f64; NUM_RESOURCES]],
+    busy: &[Vec<u32>],
+) -> Vec<[f64; NUM_RESOURCES]> {
+    let mut residual = residual_static.to_vec();
+    for (v, row) in busy.iter().enumerate() {
+        for (m, &b) in row.iter().enumerate() {
+            for k in 0..NUM_RESOURCES {
+                residual[v][k] = (residual[v][k] - light_resources[m][k] * b as f64).max(0.0);
+            }
+        }
+    }
+    residual
+}
+
 /// Per-task runtime state.
 struct RunTask {
     task_type: usize,
@@ -148,37 +221,21 @@ struct RunTask {
 
 impl RunTask {
     fn stage_ready(&self, app: &Application, local: usize) -> bool {
-        if self.dispatched[local] || self.done[local].is_some() {
-            return false;
-        }
-        let tt = &app.task_types[self.task_type];
-        tt.dag.parents(local).iter().all(|&p| self.done[p].is_some())
+        stage_ready(app, self.task_type, &self.done, &self.dispatched, local)
     }
 
     /// Parent payload sources `(node, done_ms, mb)` of a local stage; for
     /// source stages this is the user's ED with the uplink-completed time.
-    fn parent_payloads(
-        &self,
-        app: &Application,
-        local: usize,
-    ) -> Vec<(usize, f64, f64)> {
-        let tt = &app.task_types[self.task_type];
-        let parents = tt.dag.parents(local);
-        if parents.is_empty() {
-            vec![(self.ed, self.arrival_ms + self.uplink_ms, tt.input_mb)]
-        } else {
-            parents
-                .iter()
-                .map(|&p| {
-                    let spec = app.catalog.spec(tt.services[p]);
-                    (
-                        self.node[p].expect("parent executed"),
-                        self.done[p].expect("parent done"),
-                        spec.output_mb,
-                    )
-                })
-                .collect()
-        }
+    fn parent_payloads(&self, app: &Application, local: usize) -> Vec<(usize, f64, f64)> {
+        parent_payloads(
+            app,
+            self.task_type,
+            &self.done,
+            &self.node,
+            self.ed,
+            self.arrival_ms + self.uplink_ms,
+            local,
+        )
     }
 }
 
@@ -208,12 +265,55 @@ impl Ord for Event {
     }
 }
 
-/// Run one trial of `strategy` on `env`.
+/// Record a realized workload trace for `env` at `seed`: the arrivals an
+/// engine run would admit (Poisson draws per slot up to the cutoff, with
+/// realized uplink SNR/delay stamped per task). Both the slotted engine
+/// ([`run_trial_traced`]) and the DES engine replay the same trace for
+/// paired engine-vs-engine comparisons.
+pub fn record_trace(env: &SimEnv, seed: u64, opts: &SimOptions) -> Trace {
+    let mut rng = Xoshiro256::seed_from(seed ^ 0x7124_CE00);
+    let mut gen = WorkloadGenerator::new(
+        &env.cfg,
+        &env.app,
+        &env.topo,
+        &mut Xoshiro256::seed_from(env.users_seed),
+    );
+    let mut arrivals = Vec::new();
+    for slot in 0..opts.slots.min(opts.arrival_cutoff) {
+        arrivals.extend(gen.generate_slot(slot, opts.load_multiplier, &mut rng));
+    }
+    Trace::from_arrivals(arrivals)
+}
+
+/// Run one trial of `strategy` on `env`, drawing arrivals live.
 pub fn run_trial(
     env: &SimEnv,
     strategy: &mut dyn Strategy,
     seed: u64,
     opts: &SimOptions,
+) -> TrialMetrics {
+    run_trial_inner(env, strategy, seed, opts, None)
+}
+
+/// Run one trial replaying a recorded [`Trace`] instead of drawing
+/// arrivals — every strategy (and every engine) sees the same realized
+/// workload.
+pub fn run_trial_traced(
+    env: &SimEnv,
+    strategy: &mut dyn Strategy,
+    seed: u64,
+    opts: &SimOptions,
+    trace: &Trace,
+) -> TrialMetrics {
+    run_trial_inner(env, strategy, seed, opts, Some(trace))
+}
+
+fn run_trial_inner(
+    env: &SimEnv,
+    strategy: &mut dyn Strategy,
+    seed: u64,
+    opts: &SimOptions,
+    trace: Option<&Trace>,
 ) -> TrialMetrics {
     let app = &env.app;
     let cfg = &env.cfg;
@@ -275,11 +375,15 @@ pub fn run_trial(
         let now = slot as f64 * opts.slot_ms;
         let slot_end = now + opts.slot_ms;
 
-        // 1. Arrivals (none past the cutoff: drain phase).
-        let arrivals = if slot < opts.arrival_cutoff {
-            gen.generate_slot(slot, opts.load_multiplier, &mut rng)
-        } else {
-            Vec::new()
+        // 1. Arrivals (none past the cutoff: drain phase). A replayed
+        //    trace is authoritative: its recorded slots are admitted
+        //    verbatim and the live generator is bypassed.
+        let arrivals = match trace {
+            Some(tr) => tr.slot(slot).to_vec(),
+            None if slot < opts.arrival_cutoff => {
+                gen.generate_slot(slot, opts.load_multiplier, &mut rng)
+            }
+            None => Vec::new(),
         };
         for a in arrivals {
             let tt = &app.task_types[a.task_type.0];
@@ -378,15 +482,7 @@ pub fn run_trial(
                     .collect()
             })
             .collect();
-        let mut residual = residual_static.clone();
-        for v in 0..nv {
-            for m in 0..nl {
-                for k in 0..NUM_RESOURCES {
-                    residual[v][k] =
-                        (residual[v][k] - env.light_resources[m][k] * busy[v][m] as f64).max(0.0);
-                }
-            }
-        }
+        let residual = residual_after_busy(&residual_static, &env.light_resources, &busy);
         let requests: Vec<LightRequest> = light_queue
             .iter()
             .map(|&(id, local)| {

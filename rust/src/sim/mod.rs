@@ -8,7 +8,8 @@
 
 mod engine;
 
-pub use engine::{run_trial, SimEnv, SimOptions};
+pub use engine::{record_trace, run_trial, run_trial_traced, SimEnv, SimOptions};
+pub(crate) use engine::{parent_payloads, residual_after_busy, stage_ready};
 
 use crate::controller::{LightDecision, LightRequest};
 use crate::config::NUM_RESOURCES;
@@ -101,6 +102,24 @@ mod tests {
             let m = run_trial(&env, s.as_mut(), 7, &opts);
             assert!(m.total_tasks > 0, "{}: no tasks", s.name());
         }
+    }
+
+    #[test]
+    fn traced_replay_is_deterministic_and_paired() {
+        let cfg = small_cfg();
+        let env = SimEnv::build(&cfg, 19);
+        let opts = SimOptions::from_config(&cfg);
+        let trace = record_trace(&env, 19, &opts);
+        assert!(!trace.is_empty(), "seed config must admit tasks");
+        // Same trace, same strategy: identical outcomes.
+        let m1 = run_trial_traced(&env, &mut Proposal::new(), 19, &opts, &trace);
+        let m2 = run_trial_traced(&env, &mut Proposal::new(), 19, &opts, &trace);
+        assert_eq!(m1.total_tasks, m2.total_tasks);
+        assert_eq!(m1.on_time, m2.on_time);
+        // Every strategy admits exactly the traced workload (paired).
+        assert_eq!(m1.total_tasks, trace.len());
+        let m3 = run_trial_traced(&env, &mut LbrrStrategy::new(), 19, &opts, &trace);
+        assert_eq!(m3.total_tasks, trace.len());
     }
 
     #[test]

@@ -122,6 +122,32 @@ mod tests {
     }
 
     #[test]
+    fn trace_file_roundtrip() {
+        let (_, mut gen) = setup(8);
+        let mut rng = Xoshiro256::seed_from(16);
+        let mut arrivals = Vec::new();
+        for t in 0..15 {
+            arrivals.extend(gen.generate_slot(t, 1.0, &mut rng));
+        }
+        let trace = Trace::from_arrivals(arrivals);
+        let path = std::env::temp_dir().join(format!(
+            "fmedge_trace_roundtrip_{}.txt",
+            std::process::id()
+        ));
+        let path = path.to_str().unwrap().to_string();
+        trace.save(&path).unwrap();
+        let back = Trace::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(back.len(), trace.len());
+        assert_eq!(back.num_slots(), trace.num_slots());
+        for (a, b) in trace.arrivals().iter().zip(back.arrivals()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.ed, b.ed);
+            assert!((a.uplink_delay_ms - b.uplink_delay_ms).abs() < 1e-9);
+        }
+    }
+
+    #[test]
     fn trace_slot_view() {
         let (_, mut gen) = setup(7);
         let mut rng = Xoshiro256::seed_from(15);

@@ -1,0 +1,106 @@
+//! Integration test for the acceptance criterion of the DES subsystem:
+//! with the controller's admissions active, the measured per-light-service
+//! delay-violation rate must respect the effective-capacity guarantee —
+//! `P(sojourn > g_{m,ε}(y)) ≤ ε` — at ε = 0.05 across multiple seeds,
+//! within a small Monte-Carlo tolerance.
+
+use fmedge::baselines::Proposal;
+use fmedge::config::ExperimentConfig;
+use fmedge::des::{pool, run_des_trial, validate_bounds, DesOptions};
+use fmedge::sim::{record_trace, run_trial_traced, SimEnv, SimOptions};
+
+fn eps005_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper_default();
+    cfg.controller.epsilon = 0.05;
+    cfg.sim.slots = 200;
+    cfg.workload.num_users = 8;
+    cfg.controller.effcap_samples = 2048;
+    cfg
+}
+
+#[test]
+fn measured_violation_rates_respect_eps_005_across_seeds() {
+    let cfg = eps005_cfg();
+    let eps = cfg.controller.epsilon;
+    let mut per_trial = Vec::new();
+    let mut total_tasks = 0usize;
+    for seed in [11u64, 23, 37] {
+        let env = SimEnv::build(&cfg, seed);
+        let opts = SimOptions::from_config(&cfg);
+        let trace = record_trace(&env, seed, &opts);
+        assert!(!trace.is_empty(), "seed {seed}: empty trace");
+        total_tasks += trace.len();
+        let m = run_des_trial(
+            &env,
+            &mut Proposal::new(),
+            seed,
+            &DesOptions::from_sim(&opts),
+            &trace,
+        );
+        assert_eq!(m.total_tasks, trace.len());
+        let vals = validate_bounds(&env.gtable, &m);
+        // Per-seed, per-service check with sample-size-aware Monte-Carlo
+        // slack (two binomial sigmas on top of a fixed margin): services
+        // with enough executions must sit at or below eps + tolerance.
+        for v in &vals {
+            if v.samples >= 50 {
+                let sigma = (eps * (1.0 - eps) / v.samples as f64).sqrt();
+                assert!(
+                    v.holds(0.05 + 2.0 * sigma),
+                    "seed {seed} light {}: measured {:.4} vs eps {eps} over {} samples",
+                    v.light_idx,
+                    v.violation_rate(),
+                    v.samples
+                );
+            }
+        }
+        per_trial.push(vals);
+    }
+    assert!(total_tasks > 100, "workload too small to be meaningful");
+
+    // Pooled across seeds the estimate is much tighter: the Chernoff
+    // bound is conservative, so the aggregate must clear eps with a
+    // small tolerance only.
+    let pooled = pool(&per_trial);
+    let samples: usize = pooled.iter().map(|v| v.samples).sum();
+    let violations: usize = pooled.iter().map(|v| v.violations).sum();
+    assert!(samples > 300, "too few measured sojourns: {samples}");
+    let aggregate = violations as f64 / samples as f64;
+    assert!(
+        aggregate <= eps + 0.02,
+        "aggregate violation rate {aggregate:.4} exceeds eps {eps}"
+    );
+}
+
+#[test]
+fn paired_trace_on_time_rates_are_comparable_across_engines() {
+    // The DES is the ground truth for the slotted engine's assumptions:
+    // on the same trace both engines must admit identical workloads and
+    // land in the same regime on the headline metric.
+    let mut cfg = ExperimentConfig::paper_default();
+    cfg.sim.slots = 150;
+    cfg.workload.num_users = 8;
+    cfg.controller.effcap_samples = 1024;
+    let seed = 2026;
+    let env = SimEnv::build(&cfg, seed);
+    let opts = SimOptions::from_config(&cfg);
+    let trace = record_trace(&env, seed, &opts);
+    let slotted = run_trial_traced(&env, &mut Proposal::new(), seed, &opts, &trace);
+    let des = run_des_trial(
+        &env,
+        &mut Proposal::new(),
+        seed,
+        &DesOptions::from_sim(&opts),
+        &trace,
+    );
+    assert_eq!(slotted.total_tasks, des.total_tasks);
+    assert_eq!(slotted.total_tasks, trace.len());
+    assert!(slotted.completion_rate() > 0.5);
+    assert!(des.completion_rate() > 0.5);
+    assert!(
+        (slotted.on_time_rate() - des.on_time_rate()).abs() < 0.45,
+        "engines diverge: slotted {} vs DES {}",
+        slotted.on_time_rate(),
+        des.on_time_rate()
+    );
+}
