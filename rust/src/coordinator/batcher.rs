@@ -48,6 +48,7 @@ impl BatchPolicy {
 /// Generic over the item type: the serving coordinator batches
 /// [`Request`]s (the default), the DES engine batches `(task, stage)`
 /// keys per light-service station.
+#[derive(Debug)]
 pub struct Batcher<T = Request> {
     policy: BatchPolicy,
     pending: Vec<T>,

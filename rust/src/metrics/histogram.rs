@@ -173,15 +173,16 @@ impl Histogram {
 
     /// Approximate p-quantile (p in [0,1]): linear interpolation within
     /// the bin holding the target rank. Under/overflow resolve to the
-    /// recorded min/max.
-    pub fn quantile(&self, p: f64) -> f64 {
+    /// recorded min/max. `None` when the histogram is empty — a rank
+    /// target of at least one observation is meaningless at zero count.
+    pub fn quantile(&self, p: f64) -> Option<f64> {
         if self.count == 0 {
-            return 0.0;
+            return None;
         }
         let target = (p.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
         let mut seen = self.underflow;
         if target <= seen {
-            return self.min();
+            return Some(self.min());
         }
         for (i, &c) in self.counts.iter().enumerate() {
             if c == 0 {
@@ -191,11 +192,11 @@ impl Histogram {
                 let lo_edge = self.edge(i);
                 let hi_edge = self.edge(i + 1);
                 let within = (target - seen) as f64 / c as f64;
-                return lo_edge + within * (hi_edge - lo_edge);
+                return Some(lo_edge + within * (hi_edge - lo_edge));
             }
             seen += c;
         }
-        self.max()
+        Some(self.max())
     }
 
     /// Empirical complementary CDF at `t`: fraction of observations
@@ -226,13 +227,14 @@ impl Histogram {
 
     /// One-line summary for reports.
     pub fn row(&self) -> String {
+        let q = |p: f64| self.quantile(p).unwrap_or(0.0);
         format!(
             "n={} mean={:.2} p50={:.2} p95={:.2} p99={:.2} max={:.2}",
             self.count,
             self.mean(),
-            self.quantile(0.5),
-            self.quantile(0.95),
-            self.quantile(0.99),
+            q(0.5),
+            q(0.95),
+            q(0.99),
             self.max()
         )
     }
@@ -262,8 +264,8 @@ mod tests {
         h.record(5.0);
         assert_eq!(h.count(), 3);
         // quantiles resolve to recorded extremes at the tails
-        assert_eq!(h.quantile(0.0), 0.5);
-        assert_eq!(h.quantile(1.0), 5.0);
+        assert_eq!(h.quantile(0.0), Some(0.5));
+        assert_eq!(h.quantile(1.0), Some(5.0));
     }
 
     #[test]
@@ -272,9 +274,9 @@ mod tests {
         for i in 1..=1000 {
             h.record(i as f64 * 0.1);
         }
-        let p50 = h.quantile(0.5);
-        let p95 = h.quantile(0.95);
-        let p99 = h.quantile(0.99);
+        let p50 = h.quantile(0.5).expect("non-empty");
+        let p95 = h.quantile(0.95).expect("non-empty");
+        let p99 = h.quantile(0.99).expect("non-empty");
         assert!(p50 <= p95 && p95 <= p99);
         assert!((p50 - 50.0).abs() < 5.0, "p50≈50, got {p50}");
         assert!((p95 - 95.0).abs() < 8.0, "p95≈95, got {p95}");
@@ -311,7 +313,25 @@ mod tests {
         let h = Histogram::default();
         assert!(h.is_empty());
         assert_eq!(h.mean(), 0.0);
-        assert_eq!(h.quantile(0.5), 0.0);
         assert_eq!(h.ccdf(1.0), 0.0);
+        // row() must not panic on an empty histogram.
+        assert!(h.row().contains("n=0"));
+    }
+
+    #[test]
+    fn empty_histogram_quantiles_are_none() {
+        // Regression: the rank target used to be forced to >= 1 even at
+        // zero count, which made empty-histogram quantiles meaningless.
+        let h = Histogram::log(0.1, 100.0, 16);
+        for p in [0.0, 0.5, 0.95, 1.0] {
+            assert_eq!(h.quantile(p), None, "p={p} on an empty histogram");
+        }
+        // One observation: every quantile resolves to it.
+        let mut h = Histogram::log(0.1, 100.0, 16);
+        h.record(7.0);
+        for p in [0.0, 0.5, 1.0] {
+            let q = h.quantile(p).expect("single-sample quantile");
+            assert!(q > 0.0 && q.is_finite());
+        }
     }
 }
