@@ -216,6 +216,7 @@ impl crate::sim::Strategy for GaStrategy {
         queue: &[LightRequest],
         busy: &[Vec<u32>],
         residual: &[[f64; NUM_RESOURCES]],
+        dm: &crate::routing::DistanceMatrix,
         rng: &mut Xoshiro256,
     ) -> LightDecision {
         let nv = busy.len();
@@ -311,7 +312,7 @@ impl crate::sim::Strategy for GaStrategy {
                 node: v,
                 light_idx: m,
                 y: per_inst as u32,
-                transfer_ms: env.dm.latency(r.from_node, v, r.payload_mb),
+                transfer_ms: dm.latency(r.from_node, v, r.payload_mb),
                 est_proc_ms: env.gtable.mean_delay(m, per_inst),
             });
         }

@@ -114,6 +114,7 @@ impl crate::sim::Strategy for LbrrStrategy {
         queue: &[LightRequest],
         busy: &[Vec<u32>],
         residual: &[[f64; NUM_RESOURCES]],
+        dm: &crate::routing::DistanceMatrix,
         _rng: &mut Xoshiro256,
     ) -> LightDecision {
         let nv = busy.len();
@@ -183,7 +184,7 @@ impl crate::sim::Strategy for LbrrStrategy {
                 node: v,
                 light_idx: m,
                 y: per_inst as u32,
-                transfer_ms: env.dm.latency(r.from_node, v, r.payload_mb),
+                transfer_ms: dm.latency(r.from_node, v, r.payload_mb),
                 est_proc_ms: env.gtable.mean_delay(m, per_inst),
             });
         }

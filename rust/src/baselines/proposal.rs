@@ -46,6 +46,7 @@ impl crate::sim::Strategy for Proposal {
         queue: &[LightRequest],
         busy: &[Vec<u32>],
         residual: &[[f64; NUM_RESOURCES]],
+        dm: &crate::routing::DistanceMatrix,
         _rng: &mut Xoshiro256,
     ) -> LightDecision {
         let params = self
@@ -58,7 +59,7 @@ impl crate::sim::Strategy for Proposal {
             &env.light_resources,
             &env.light_costs,
             &env.gtable,
-            &env.dm,
+            dm,
             params,
         )
     }
@@ -104,6 +105,7 @@ impl crate::sim::Strategy for PropAvg {
         queue: &[LightRequest],
         busy: &[Vec<u32>],
         residual: &[[f64; NUM_RESOURCES]],
+        dm: &crate::routing::DistanceMatrix,
         _rng: &mut Xoshiro256,
     ) -> LightDecision {
         let params = self.online.get_or_insert_with(|| {
@@ -118,7 +120,7 @@ impl crate::sim::Strategy for PropAvg {
             &env.light_resources,
             &env.light_costs,
             &env.gtable,
-            &env.dm,
+            dm,
             params,
         )
     }

@@ -123,6 +123,37 @@ impl Args {
             }),
         }
     }
+
+    /// Comma-separated number list, e.g. `--rates 0,0.002,0.01`.
+    pub fn get_f64_list(&self, name: &str, default: &[f64]) -> Result<Vec<f64>, ArgError> {
+        match self.opts.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.trim().is_empty())
+                .map(|s| {
+                    s.trim().parse().map_err(|_| ArgError::Invalid {
+                        key: name.to_string(),
+                        value: v.clone(),
+                        want: "comma-separated numbers",
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    /// Comma-separated string list, e.g. `--strategies proposal,lbrr`.
+    pub fn get_str_list(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.opts.get(name) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(str::to_string)
+                .collect(),
+        }
+    }
 }
 
 /// The `--help` text.
@@ -144,6 +175,12 @@ COMMANDS:
             --trace FILE to replay, --save-trace FILE, --validate for the
             measured-vs-g_{m,eps} bound report, --batch N --batch-wait MS
             for sim-time station batching)
+  faults    robustness sweep: replay seeded fault schedules (server
+            outages, link outages/degradation, replica fail-stop) over a
+            failure-rate x load grid and compare strategies' on-time
+            degradation vs the no-fault baseline (--rates R1,R2,...,
+            --loads L1,L2,..., --strategies s1,s2,..., --trials N,
+            --slots N, --seed N, --engine slotted|des, --config FILE)
   serve     run the serving coordinator on a synthetic open-loop workload
             (--requests N, --rate RPS, --workers N, --no-real-compute)
 
@@ -175,6 +212,17 @@ mod tests {
         let a = parse(&["place"]);
         assert_eq!(a.get_usize("kappa", 8).unwrap(), 8);
         assert_eq!(a.get_f64("load", 1.0).unwrap(), 1.0);
+    }
+
+    #[test]
+    fn list_options_parse() {
+        let a = parse(&["faults", "--rates", "0,0.002, 0.01", "--strategies", "proposal,lbrr"]);
+        assert_eq!(a.get_f64_list("rates", &[1.0]).unwrap(), vec![0.0, 0.002, 0.01]);
+        assert_eq!(a.get_str_list("strategies", &["proposal"]), vec!["proposal", "lbrr"]);
+        assert_eq!(a.get_f64_list("loads", &[1.0, 2.0]).unwrap(), vec![1.0, 2.0]);
+        assert_eq!(a.get_str_list("engine", &["slotted"]), vec!["slotted"]);
+        let bad = parse(&["faults", "--rates", "0,x"]);
+        assert!(bad.get_f64_list("rates", &[]).is_err());
     }
 
     #[test]

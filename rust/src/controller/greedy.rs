@@ -285,6 +285,11 @@ pub fn greedy_light_deployment(
                 let net = dm.latency(req.from_node, v, req.payload_mb);
                 let est = delay(m, per_inst);
                 let total = net + est;
+                // Unreachable under the current fault state (infinite
+                // routed latency): waiting beats routing into a void.
+                if !total.is_finite() {
+                    continue;
+                }
                 if best
                     .as_ref()
                     .map_or(true, |b| total < b.transfer_ms + b.est_proc_ms)

@@ -15,16 +15,26 @@ pub enum EventKind {
     /// user's edge device.
     UplinkDone { task: u64 },
     /// An intermediate hop of a light-stage payload transfer completed;
-    /// the payload sits at an interior node of its route.
-    HopDone { task: u64, local: usize },
+    /// the payload sits at an interior node of its route. `token` pins the
+    /// event to the dispatch that scheduled it: a fault cancellation bumps
+    /// the stage token, so stale transfer events no-op.
+    HopDone { task: u64, local: usize, token: u64 },
     /// The final transfer hop landed: the payload reached its assigned
     /// light station and joins the replica FIFO (or the batcher).
-    StationJoin { task: u64, local: usize },
-    /// A core stage finished executing.
-    CoreDone { task: u64, local: usize, node: usize },
+    StationJoin { task: u64, local: usize, token: u64 },
+    /// A core stage finished executing. `token` pins the event to its
+    /// dispatch (see [`EventKind::HopDone`]).
+    CoreDone {
+        task: u64,
+        local: usize,
+        node: usize,
+        token: u64,
+    },
     /// A light stage finished at station `(node, light_idx)`; `y` and
     /// `join_ms` carry the decision parallelism and station-join time for
-    /// the sojourn record.
+    /// the sojourn record. `gen` is the station generation at service
+    /// start — a node outage resets the station and bumps it, so the
+    /// completion of an execution the outage killed is ignored.
     LightDone {
         task: u64,
         local: usize,
@@ -32,6 +42,7 @@ pub enum EventKind {
         light_idx: usize,
         y: u32,
         join_ms: f64,
+        gen: u64,
     },
     /// Invoke the deployment strategy over the pending light queue.
     Decide,
@@ -44,6 +55,10 @@ pub enum EventKind {
         light_idx: usize,
         epoch: u64,
     },
+    /// Apply entry `idx` of the trial's fault schedule at its exact
+    /// timestamp (seeded into the calendar up front; absent without
+    /// fault injection, keeping fault-free runs bit-identical).
+    Fault { idx: usize },
 }
 
 /// A scheduled event.

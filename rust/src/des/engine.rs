@@ -24,10 +24,11 @@ use std::collections::HashMap;
 use crate::config::NUM_RESOURCES;
 use crate::controller::{LightRequest, VirtualQueues};
 use crate::coordinator::BatchPolicy;
+use crate::faults::{DynamicTopology, FaultKind, FaultSchedule};
 use crate::metrics::{CostBook, MetricsCollector, TaskOutcome, TrialMetrics};
 use crate::microservice::{Application, MsClass};
 use crate::placement::{QosScores, ScoreParams};
-use crate::routing::CoreRouter;
+use crate::routing::{CoreRouter, DistanceMatrix};
 use crate::rng::Xoshiro256;
 use crate::sim::{SimEnv, SimOptions, Strategy};
 use crate::workload::{Trace, WorkloadGenerator};
@@ -89,6 +90,14 @@ struct DesTask {
     done: Vec<Option<f64>>,
     node: Vec<Option<usize>>,
     dispatched: Vec<bool>,
+    /// Per-stage dispatch token: bumped on every dispatch and on every
+    /// fault cancellation, so calendar events from a superseded dispatch
+    /// are recognizably stale.
+    token: Vec<u64>,
+    /// A completed stage's output was lost with its node — permanent:
+    /// recovery restores capacity, not data (shared rule:
+    /// [`crate::sim`]'s `stage_inputs_destroyed`).
+    destroyed: Vec<bool>,
 }
 
 impl DesTask {
@@ -125,11 +134,24 @@ struct TransferPlan {
     proc_ms: f64,
     hop_times: Vec<f64>,
     next: usize,
+    /// Dispatch token of the stage when the plan was made; hop events
+    /// carry it so a plan created by a later re-dispatch is never driven
+    /// by a stale event.
+    token: u64,
 }
 
 struct Des<'a> {
     env: &'a SimEnv,
     opts: &'a DesOptions,
+    /// The replayed fault schedule ([`EventKind::Fault`] indexes into it).
+    faults: &'a FaultSchedule,
+    /// Fault-aware network view; `None` without fault injection (the
+    /// fault-free path stays bit-identical to pre-fault builds).
+    dynt: Option<DynamicTopology>,
+    node_up: Vec<bool>,
+    /// Stages cancelled by the current same-timestamp fault batch,
+    /// re-dispatched once the batch's routing rebuild has committed.
+    fault_resets: Vec<(u64, usize)>,
     rng: Xoshiro256,
     cal: Calendar,
     tasks: HashMap<u64, DesTask>,
@@ -206,6 +228,8 @@ impl<'a> Des<'a> {
                 done: vec![None; n],
                 node: vec![None; n],
                 dispatched: vec![false; n],
+                token: vec![0; n],
+                destroyed: vec![false; n],
             },
         );
         self.cal
@@ -234,6 +258,8 @@ impl<'a> Des<'a> {
     /// Dispatch a ready stage: core stages route immediately to the
     /// completion-minimizing placed instance (FIFO per instance via the
     /// router's busy clocks); light stages enter the controller queue.
+    /// Under faults, a stage whose input payload died with its node drops
+    /// the task (unrecoverable casualty).
     fn dispatch_stage(&mut self, id: u64, local: usize, now: f64) {
         let env = self.env;
         let app = &env.app;
@@ -252,6 +278,21 @@ impl<'a> Des<'a> {
                 t.parent_payloads(app, local),
             )
         };
+        if self.dynt.is_some() {
+            let t = &self.tasks[&id];
+            // Destroyed inputs are unrecoverable; a down ED merely delays
+            // the source stage (the device retains the user payload).
+            if crate::sim::stage_inputs_destroyed(app, t.task_type, &t.destroyed, local) {
+                let t = self.tasks.remove(&id).unwrap();
+                self.collector.record_fault_drop();
+                self.finish_task(id, t, None);
+                return;
+            }
+            if !self.node_up[t.ed] && app.task_types[t.task_type].dag.parents(local).is_empty()
+            {
+                return; // retried at the next tick once the ED recovers
+            }
+        }
         if is_core {
             let ci = app
                 .catalog
@@ -259,22 +300,32 @@ impl<'a> Des<'a> {
                 .iter()
                 .position(|&c| c == ms_id)
                 .expect("core id");
+            let dm = match &self.dynt {
+                Some(d) => d.dm(),
+                None => &env.dm,
+            };
             if let Some(asn) = self
                 .core_router
-                .route_multi(ci, &payloads, proc_ms, now, &env.dm)
+                .route_multi(ci, &payloads, proc_ms, now, dm)
             {
                 let t = self.tasks.get_mut(&id).unwrap();
                 t.dispatched[local] = true;
                 t.node[local] = Some(asn.node);
+                t.token[local] += 1;
+                let token = t.token[local];
                 self.cal.schedule(
                     asn.done_ms,
                     EventKind::CoreDone {
                         task: id,
                         local,
                         node: asn.node,
+                        token,
                     },
                 );
             }
+            // No instance: every replica may be down or unreachable under
+            // faults — the stage stays undispatched and is retried when
+            // the next decision or recovery comes around (see tick).
         } else {
             let t = self.tasks.get_mut(&id).unwrap();
             t.dispatched[local] = true;
@@ -317,8 +368,10 @@ impl<'a> Des<'a> {
     }
 
     /// Begin serving `w` at station `(v, m)`: completion scheduled after
-    /// its sampled service time.
+    /// its sampled service time, stamped with the station's current
+    /// outage generation.
     fn start_service(&mut self, v: usize, m: usize, w: Waiting, now: f64) {
+        let gen = self.stations.gen(v, m);
         self.cal.schedule(
             now + w.proc_ms,
             EventKind::LightDone {
@@ -328,32 +381,37 @@ impl<'a> Des<'a> {
                 light_idx: m,
                 y: w.y,
                 join_ms: w.join_ms,
+                gen,
             },
         );
     }
 
-    fn handle_hop_done(&mut self, id: u64, local: usize) {
+    fn handle_hop_done(&mut self, id: u64, local: usize, token: u64) {
         let plan = match self.plans.get_mut(&(id, local)) {
             Some(p) => p,
             None => return,
         };
+        if plan.token != token {
+            return; // stale event from a cancelled dispatch
+        }
         plan.next += 1;
         let i = plan.next;
         debug_assert!(i < plan.hop_times.len());
         let t = plan.hop_times[i];
         let kind = if i + 1 == plan.hop_times.len() {
-            EventKind::StationJoin { task: id, local }
+            EventKind::StationJoin { task: id, local, token }
         } else {
-            EventKind::HopDone { task: id, local }
+            EventKind::HopDone { task: id, local, token }
         };
         self.cal.schedule(t, kind);
     }
 
-    fn handle_station_join(&mut self, id: u64, local: usize, now: f64) {
-        let plan = match self.plans.remove(&(id, local)) {
-            Some(p) => p,
-            None => return,
-        };
+    fn handle_station_join(&mut self, id: u64, local: usize, token: u64, now: f64) {
+        match self.plans.get(&(id, local)) {
+            Some(p) if p.token == token => {}
+            _ => return, // stale event from a cancelled dispatch
+        }
+        let plan = self.plans.remove(&(id, local)).unwrap();
         if !self.tasks.contains_key(&id) {
             // Dropped mid-transfer: never joins, release the commitment.
             self.stations.abort_assignment(plan.node, plan.light_idx);
@@ -403,8 +461,12 @@ impl<'a> Des<'a> {
         light_idx: usize,
         y: u32,
         join_ms: f64,
+        gen: u64,
         now: f64,
     ) {
+        if self.stations.gen(node, light_idx) != gen {
+            return; // the execution died with its node
+        }
         // The measured quantity the g-bound is about: wait + service.
         self.collector.record_sojourn(light_idx, y, now - join_ms);
         if let Some(next) = self.stations.complete(node, light_idx) {
@@ -420,6 +482,29 @@ impl<'a> Des<'a> {
             let tasks = &self.tasks;
             self.pending.retain(|(id, _)| tasks.contains_key(id));
         }
+        if self.dynt.is_some() {
+            // Queued work whose input payload was destroyed is an
+            // unrecoverable casualty — drop before building requests
+            // (unreachable-but-alive inputs keep waiting).
+            let app = &self.env.app;
+            let mut casualties: Vec<u64> = Vec::new();
+            for &(id, local) in &self.pending {
+                if let Some(t) = self.tasks.get(&id) {
+                    if crate::sim::stage_inputs_destroyed(app, t.task_type, &t.destroyed, local)
+                    {
+                        casualties.push(id);
+                    }
+                }
+            }
+            for id in casualties {
+                if let Some(t) = self.tasks.remove(&id) {
+                    self.collector.record_fault_drop();
+                    self.finish_task(id, t, None);
+                }
+            }
+            let tasks = &self.tasks;
+            self.pending.retain(|(id, _)| tasks.contains_key(id));
+        }
         if self.pending.is_empty() {
             return;
         }
@@ -429,8 +514,15 @@ impl<'a> Des<'a> {
             .min(self.opts.slots.saturating_sub(1));
 
         let busy = self.stations.busy_matrix();
-        let residual =
+        let mut residual =
             crate::sim::residual_after_busy(&self.residual_static, &env.light_resources, &busy);
+        if self.dynt.is_some() {
+            for (v, res) in residual.iter_mut().enumerate() {
+                if !self.node_up[v] {
+                    *res = [0.0; NUM_RESOURCES];
+                }
+            }
+        }
         let requests: Vec<LightRequest> = self
             .pending
             .iter()
@@ -455,7 +547,13 @@ impl<'a> Des<'a> {
             })
             .collect();
 
-        let decision = strategy.decide_light(env, slot, &requests, &busy, &residual, &mut self.rng);
+        let decision = {
+            let dm: &DistanceMatrix = match &self.dynt {
+                Some(d) => d.dm(),
+                None => &env.dm,
+            };
+            strategy.decide_light(env, slot, &requests, &busy, &residual, dm, &mut self.rng)
+        };
         debug_assert_eq!(decision.assignments.len(), requests.len());
 
         // New instance counts may free FIFO'd work immediately.
@@ -475,9 +573,19 @@ impl<'a> Des<'a> {
                     continue;
                 }
             };
+            // A fault-oblivious strategy may route onto a dead node; the
+            // engine refuses and the work keeps waiting.
+            if self.dynt.is_some() && !self.node_up[asn.node] {
+                still.push((id, local));
+                continue;
+            }
             // Sampled contended service time — same draw semantics as the
             // slotted engine.
-            let (proc_ms, critical, mb) = {
+            let (proc_ms, critical, mb, arrive) = {
+                let dm: &DistanceMatrix = match &self.dynt {
+                    Some(d) => d.dm(),
+                    None => &env.dm,
+                };
                 let t = &self.tasks[&id];
                 let tt = &app.task_types[t.task_type];
                 let spec = app.catalog.spec(tt.services[local]);
@@ -486,15 +594,24 @@ impl<'a> Des<'a> {
                 let &(pn, pd, mb) = payloads
                     .iter()
                     .max_by(|a, b| {
-                        let la = a.1 + env.dm.latency(a.0, asn.node, a.2);
-                        let lb = b.1 + env.dm.latency(b.0, asn.node, b.2);
+                        let la = a.1 + dm.latency(a.0, asn.node, a.2);
+                        let lb = b.1 + dm.latency(b.0, asn.node, b.2);
                         la.partial_cmp(&lb).unwrap()
                     })
                     .unwrap();
-                (spec.workload_mb / f.max(1e-9), (pn, pd), mb)
+                let arrive = pd + dm.latency(pn, asn.node, mb);
+                (spec.workload_mb / f.max(1e-9), (pn, pd), mb, arrive)
             };
+            // No surviving route from the payload to the chosen node:
+            // keep waiting (links may recover; the age drop bounds it).
+            if !arrive.is_finite() {
+                still.push((id, local));
+                continue;
+            }
             let t = self.tasks.get_mut(&id).unwrap();
             t.node[local] = Some(asn.node);
+            t.token[local] += 1;
+            let token = t.token[local];
             self.stations.note_assigned(asn.node, asn.light_idx);
 
             // Hop-by-hop transfer of the latest-arriving parent payload:
@@ -504,7 +621,11 @@ impl<'a> Des<'a> {
             let (pn, pd) = critical;
             let mut hop_times = Vec::new();
             let mut cum = pd;
-            for h in env.hops.hops(pn, asn.node) {
+            let hops = match &self.dynt {
+                Some(d) => d.hops(),
+                None => &env.hops,
+            };
+            for h in hops.hops(pn, asn.node) {
                 cum += h.latency(mb);
                 if cum > now {
                     hop_times.push(cum);
@@ -520,9 +641,11 @@ impl<'a> Des<'a> {
                         proc_ms,
                         hop_times: vec![now],
                         next: 0,
+                        token,
                     },
                 );
-                self.cal.schedule(now, EventKind::StationJoin { task: id, local });
+                self.cal
+                    .schedule(now, EventKind::StationJoin { task: id, local, token });
             } else {
                 let first = hop_times[0];
                 let single = hop_times.len() == 1;
@@ -535,17 +658,99 @@ impl<'a> Des<'a> {
                         proc_ms,
                         hop_times,
                         next: 0,
+                        token,
                     },
                 );
                 let kind = if single {
-                    EventKind::StationJoin { task: id, local }
+                    EventKind::StationJoin { task: id, local, token }
                 } else {
-                    EventKind::HopDone { task: id, local }
+                    EventKind::HopDone { task: id, local, token }
                 };
                 self.cal.schedule(first, kind);
             }
         }
         self.pending = still;
+    }
+
+    /// Apply fault-schedule entry `idx` at its exact timestamp. Schedule
+    /// entries sharing one timestamp pop consecutively (they are seeded
+    /// first, in index order), so state changes are applied per event but
+    /// the routing rebuild and the cancelled-stage re-dispatch run once
+    /// per timestamp group — after its last entry.
+    fn handle_fault(&mut self, idx: usize, now: f64) {
+        let fev = self.faults.events()[idx];
+        match fev.kind {
+            FaultKind::NodeDown { node } => {
+                self.node_up[node] = false;
+                if let Some(d) = self.dynt.as_mut() {
+                    d.apply_deferred(&fev.kind);
+                }
+                self.core_router.set_node_down(node);
+                self.stations.fail_node(node);
+                // Payloads in transit toward the dead station never land.
+                let doomed: Vec<(u64, usize)> = self
+                    .plans
+                    .iter()
+                    .filter(|(_, p)| p.node == node)
+                    .map(|(&k, _)| k)
+                    .collect();
+                for k in &doomed {
+                    self.plans.remove(k);
+                }
+                // Completed outputs resident on the node are destroyed
+                // (permanent — recovery restores capacity, not data);
+                // in-flight executions are cancelled and their stages
+                // re-dispatch after the batch commit (dispatch drops
+                // tasks whose inputs died with the node).
+                for (&id, t) in self.tasks.iter_mut() {
+                    for local in 0..t.done.len() {
+                        if t.node[local] != Some(node) {
+                            continue;
+                        }
+                        if t.done[local].is_some() {
+                            t.destroyed[local] = true;
+                        } else if t.dispatched[local] {
+                            t.dispatched[local] = false;
+                            t.node[local] = None;
+                            t.token[local] += 1;
+                            self.fault_resets.push((id, local));
+                        }
+                    }
+                }
+            }
+            FaultKind::NodeUp { node } => {
+                self.node_up[node] = true;
+                if let Some(d) = self.dynt.as_mut() {
+                    d.apply_deferred(&fev.kind);
+                }
+                self.core_router.set_node_up(node, now);
+            }
+            FaultKind::CoreReplicaFail { node, core_idx } => {
+                self.core_router.kill_instance(node, core_idx);
+            }
+            link_event => {
+                if let Some(d) = self.dynt.as_mut() {
+                    d.apply_deferred(&link_event);
+                }
+            }
+        }
+        let group_continues = self
+            .faults
+            .events()
+            .get(idx + 1)
+            .map_or(false, |next| next.time_ms == fev.time_ms);
+        if !group_continues {
+            if let Some(d) = self.dynt.as_mut() {
+                d.commit();
+            }
+            // Sorted for determinism: dispatch order feeds the pending
+            // queue and the RNG stream.
+            let mut resets = std::mem::take(&mut self.fault_resets);
+            resets.sort_unstable();
+            for (id, local) in resets {
+                self.dispatch_stage(id, local, now);
+            }
+        }
     }
 
     /// Slot boundary: virtual-queue aging, drop checks, per-slot cost
@@ -571,6 +776,25 @@ impl<'a> Des<'a> {
             let tasks = &self.tasks;
             self.pending.retain(|(id, _)| tasks.contains_key(id));
         }
+        // Under faults a core stage can fail to route (all replicas down
+        // or unreachable): it stays ready-but-undispatched and is retried
+        // each tick until a replica or route comes back.
+        if self.dynt.is_some() {
+            let app = &self.env.app;
+            let mut retry: Vec<(u64, usize)> = Vec::new();
+            for (&id, t) in &self.tasks {
+                let tt = &app.task_types[t.task_type];
+                for local in 0..tt.dag.len() {
+                    if t.stage_ready(app, local) {
+                        retry.push((id, local));
+                    }
+                }
+            }
+            retry.sort_unstable();
+            for (id, local) in retry {
+                self.dispatch_stage(id, local, now);
+            }
+        }
         // Per-slot light cost: maintenance on busy instance-groups,
         // parallelism on in-flight work (eq. 7 under continuous time).
         let x_now = self.stations.busy_matrix();
@@ -592,7 +816,8 @@ pub fn run_des_trial(
     opts: &DesOptions,
     trace: &Trace,
 ) -> TrialMetrics {
-    run_des_inner(env, strategy, seed, opts, trace, false).0
+    let none = FaultSchedule::none();
+    run_des_inner(env, strategy, seed, opts, trace, false, &none).0
 }
 
 /// Like [`run_des_trial`], additionally returning per-task execution
@@ -604,7 +829,22 @@ pub fn run_des_trial_recorded(
     opts: &DesOptions,
     trace: &Trace,
 ) -> (TrialMetrics, Vec<TaskRecord>) {
-    run_des_inner(env, strategy, seed, opts, trace, true)
+    let none = FaultSchedule::none();
+    run_des_inner(env, strategy, seed, opts, trace, true, &none)
+}
+
+/// Run one DES trial while replaying a [`FaultSchedule`] at its exact
+/// event timestamps. With an empty schedule this is bit-identical to
+/// [`run_des_trial`].
+pub fn run_des_trial_faulted(
+    env: &SimEnv,
+    strategy: &mut dyn Strategy,
+    seed: u64,
+    opts: &DesOptions,
+    trace: &Trace,
+    faults: &FaultSchedule,
+) -> TrialMetrics {
+    run_des_inner(env, strategy, seed, opts, trace, false, faults).0
 }
 
 fn run_des_inner(
@@ -614,6 +854,7 @@ fn run_des_inner(
     opts: &DesOptions,
     trace: &Trace,
     record: bool,
+    faults: &FaultSchedule,
 ) -> (TrialMetrics, Vec<TaskRecord>) {
     let app = &env.app;
     let cfg = &env.cfg;
@@ -652,9 +893,14 @@ fn run_des_inner(
         .map(|m| app.catalog.light_index(crate::microservice::MsId(m)))
         .collect();
 
+    let has_faults = !faults.is_empty();
     let mut d = Des {
         env,
         opts,
+        faults,
+        dynt: has_faults.then(|| DynamicTopology::new(&env.topo, 1.0)),
+        node_up: vec![true; nv],
+        fault_resets: Vec::new(),
         rng,
         cal: Calendar::new(),
         tasks: HashMap::new(),
@@ -676,8 +922,16 @@ fn run_des_inner(
         records: Vec::new(),
     };
 
-    // Seed the calendar: trace arrivals (slots beyond the horizon are
-    // ignored) and one controller tick per slot.
+    // Seed the calendar. Fault events go in first so that, at equal
+    // timestamps, the fault applies before the slot tick and before
+    // arrivals — matching the slotted engine's start-of-slot application.
+    for (idx, fev) in faults.events().iter().enumerate() {
+        if fev.time_ms <= d.horizon_ms {
+            d.cal.schedule(fev.time_ms, EventKind::Fault { idx });
+        }
+    }
+    // Trace arrivals (slots beyond the horizon are ignored) and one
+    // controller tick per slot.
     for slot in 0..opts.slots {
         let t = slot as f64 * opts.slot_ms;
         for a in trace.slot(slot) {
@@ -694,10 +948,24 @@ fn run_des_inner(
         match ev.kind {
             EventKind::Arrival { arrival } => d.handle_arrival(arrival, now),
             EventKind::UplinkDone { task } => d.handle_uplink_done(task, now),
-            EventKind::HopDone { task, local } => d.handle_hop_done(task, local),
-            EventKind::StationJoin { task, local } => d.handle_station_join(task, local, now),
-            EventKind::CoreDone { task, local, node } => {
-                d.handle_stage_done(task, local, node, now)
+            EventKind::HopDone { task, local, token } => d.handle_hop_done(task, local, token),
+            EventKind::StationJoin { task, local, token } => {
+                d.handle_station_join(task, local, token, now)
+            }
+            EventKind::CoreDone {
+                task,
+                local,
+                node,
+                token,
+            } => {
+                // Stale when the dispatch was cancelled by a fault.
+                let valid = d
+                    .tasks
+                    .get(&task)
+                    .map_or(false, |t| t.token[local] == token && t.done[local].is_none());
+                if valid {
+                    d.handle_stage_done(task, local, node, now)
+                }
             }
             EventKind::LightDone {
                 task,
@@ -706,7 +974,8 @@ fn run_des_inner(
                 light_idx,
                 y,
                 join_ms,
-            } => d.handle_light_done(task, local, node, light_idx, y, join_ms, now),
+                gen,
+            } => d.handle_light_done(task, local, node, light_idx, y, join_ms, gen, now),
             EventKind::Decide => d.handle_decide(strategy, now),
             EventKind::Tick { slot } => d.handle_tick(slot, now),
             EventKind::BatchFlush {
@@ -714,6 +983,7 @@ fn run_des_inner(
                 light_idx,
                 epoch,
             } => d.handle_batch_flush(node, light_idx, epoch, now),
+            EventKind::Fault { idx } => d.handle_fault(idx, now),
         }
     }
 
@@ -739,7 +1009,15 @@ fn run_des_inner(
         collector,
         costs,
         records,
+        queues,
         ..
     } = d;
-    (collector.finish(&costs), records)
+    debug_assert!(
+        queues.is_empty(),
+        "virtual-queue leak: {} entries after drain",
+        queues.len()
+    );
+    let mut metrics = collector.finish(&costs);
+    metrics.vq_residual = queues.len();
+    (metrics, records)
 }

@@ -35,7 +35,9 @@ mod stations;
 pub mod validate;
 
 pub use calendar::{Calendar, EventKind, Scheduled};
-pub use engine::{run_des_trial, run_des_trial_recorded, DesOptions, TaskRecord};
+pub use engine::{
+    run_des_trial, run_des_trial_faulted, run_des_trial_recorded, DesOptions, TaskRecord,
+};
 pub use stations::{Joined, LightStations, Waiting};
 pub use validate::{pool, report, sojourn_ccdf, validate_bounds, ServiceValidation};
 
@@ -133,6 +135,27 @@ mod tests {
             slotted.on_time_rate(),
             des.on_time_rate()
         );
+    }
+
+    #[test]
+    fn des_virtual_queues_drain_to_empty_after_trial() {
+        // Regression (VirtualQueues lifecycle): a task that is dropped —
+        // including mid-transfer — must release its virtual-queue entry;
+        // run under overload so drops actually happen.
+        let mut cfg = small_cfg();
+        cfg.sim.load_multiplier = 3.0;
+        let env = SimEnv::build(&cfg, 26);
+        let opts = SimOptions::from_config(&cfg);
+        let trace = record_trace(&env, 26, &opts);
+        let m = run_des_trial(
+            &env,
+            &mut Proposal::new(),
+            26,
+            &DesOptions::from_sim(&opts),
+            &trace,
+        );
+        assert!(m.total_tasks > 0);
+        assert_eq!(m.vq_residual, 0, "virtual-queue entries leaked");
     }
 
     #[test]

@@ -50,6 +50,9 @@ struct Station {
     /// Age-window epoch: a batch-flush event is valid only for the
     /// window it was scheduled in.
     epoch: u64,
+    /// Outage generation: bumped when the hosting node fails, so
+    /// completion events of executions the failure killed are ignored.
+    gen: u64,
 }
 
 impl Station {
@@ -199,6 +202,35 @@ impl LightStations {
         match s.batcher.as_mut().and_then(Batcher::flush) {
             Some(batch) => s.release(batch),
             None => Vec::new(),
+        }
+    }
+
+    /// Outage generation of station `(v, m)` — stamped into `LightDone`
+    /// events so completions of executions killed by a node failure are
+    /// recognizably stale.
+    pub fn gen(&self, v: usize, m: usize) -> u64 {
+        self.st[v * self.nl + m].gen
+    }
+
+    /// Fault injection: the hosting node died. Every station on it loses
+    /// its queue, batcher contents, and in-service work; caps drop to
+    /// zero (a fresh controller decision re-opens capacity after
+    /// recovery) and the generation advances so in-flight completion
+    /// events go stale. The engine is responsible for re-dispatching or
+    /// dropping the affected tasks — it can enumerate them from its own
+    /// per-task state, so nothing is returned here.
+    pub fn fail_node(&mut self, v: usize) {
+        for m in 0..self.nl {
+            let s = self.at(v, m);
+            s.cap = 0;
+            s.in_service = 0;
+            s.in_flight = 0;
+            s.fifo.clear();
+            if let Some(b) = s.batcher.as_mut() {
+                let _ = b.flush();
+            }
+            s.epoch += 1;
+            s.gen += 1;
         }
     }
 
@@ -360,6 +392,31 @@ mod tests {
             Joined::Start(v) => assert_eq!(v.len(), 2),
             _ => panic!("size trigger must flush"),
         }
+    }
+
+    #[test]
+    fn fail_node_clears_state_and_bumps_generation() {
+        let mut st = LightStations::new(2, 1, 2, None);
+        st.on_decision(&[vec![1], vec![0]]);
+        for _ in 0..4 {
+            st.note_assigned(0, 0);
+        }
+        assert!(matches!(st.join(0, 0, w(1), 0.0), Joined::Start(_)));
+        assert!(matches!(st.join(0, 0, w(2), 0.0), Joined::Start(_)));
+        assert!(matches!(st.join(0, 0, w(3), 0.0), Joined::Queued));
+        let g0 = st.gen(0, 0);
+        st.fail_node(0);
+        assert_eq!(st.gen(0, 0), g0 + 1);
+        assert_eq!(st.waiting_total(), 0, "FIFO lost with the node");
+        assert_eq!(st.in_flight_total(), 0, "busy accounting released");
+        assert_eq!(st.busy_matrix()[0][0], 0);
+        // A completion of pre-failure work is stale by generation; the
+        // engine checks gen() and never calls complete() for it. New work
+        // after recovery behaves normally once a decision re-opens caps.
+        let started = st.on_decision(&[vec![1], vec![0]]);
+        assert!(started.is_empty());
+        st.note_assigned(0, 0);
+        assert!(matches!(st.join(0, 0, w(9), 5.0), Joined::Start(_)));
     }
 
     #[test]

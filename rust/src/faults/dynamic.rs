@@ -1,0 +1,225 @@
+//! A fault-aware view of the network: applies [`FaultKind`] events and
+//! re-derives the routing state every consumer shares.
+
+use crate::network::{Link, Topology};
+use crate::routing::{DistanceMatrix, HopTable};
+
+use super::schedule::FaultKind;
+
+/// Mutable network view: base topology + current fault state + the
+/// routing tables derived from the *surviving* links.
+///
+/// Both engines hold one of these and apply the same [`super::FaultSchedule`];
+/// `dm()` / `hops()` replace `SimEnv::{dm, hops}` wherever routing is
+/// consulted. Pairs with no surviving route report `f64::INFINITY`
+/// latency, which the controller and the core router treat as
+/// "unreachable" (see [`HopTable`] docs).
+#[derive(Clone, Debug)]
+pub struct DynamicTopology {
+    base: Topology,
+    node_up: Vec<bool>,
+    link_up: Vec<bool>,
+    bw_factor: Vec<f64>,
+    ref_mb: f64,
+    hops: HopTable,
+    dm: DistanceMatrix,
+    /// Fault state changed but the routing tables have not been rebuilt
+    /// yet (deferred-application batching).
+    dirty: bool,
+}
+
+impl DynamicTopology {
+    /// Start from a fully healthy copy of `topo`. `ref_mb` is the payload
+    /// defining the routes (1.0 everywhere in this crate).
+    pub fn new(topo: &Topology, ref_mb: f64) -> Self {
+        let hops = HopTable::build(topo, ref_mb);
+        let dm = DistanceMatrix::from_hops(&hops);
+        DynamicTopology {
+            base: topo.clone(),
+            node_up: vec![true; topo.num_nodes()],
+            link_up: vec![true; topo.links().len()],
+            bw_factor: vec![1.0; topo.links().len()],
+            ref_mb,
+            hops,
+            dm,
+            dirty: false,
+        }
+    }
+
+    /// Apply one fault event and rebuild the routing tables immediately.
+    /// Returns `true` when routing was affected; `CoreReplicaFail` is not
+    /// a topology event — the engines forward it to their `CoreRouter`.
+    pub fn apply(&mut self, kind: &FaultKind) -> bool {
+        let routed = self.apply_deferred(kind);
+        self.commit();
+        routed
+    }
+
+    /// Record one fault event's state change *without* rebuilding routes.
+    /// The rebuild is all-pairs Dijkstra, so engines applying a batch of
+    /// events with one effective timestamp (a slot boundary, or several
+    /// schedule entries at the same instant) call this per event and
+    /// [`Self::commit`] once. Reading `dm()`/`hops()` before the commit
+    /// returns the pre-batch view.
+    pub fn apply_deferred(&mut self, kind: &FaultKind) -> bool {
+        match *kind {
+            FaultKind::NodeDown { node } => self.node_up[node] = false,
+            FaultKind::NodeUp { node } => self.node_up[node] = true,
+            FaultKind::LinkDown { link } => self.link_up[link] = false,
+            FaultKind::LinkUp { link } => self.link_up[link] = true,
+            FaultKind::LinkBandwidth { link, factor } => {
+                self.bw_factor[link] = factor.max(1e-6)
+            }
+            FaultKind::CoreReplicaFail { .. } => return false,
+        }
+        self.dirty = true;
+        true
+    }
+
+    /// Rebuild the routing tables if any deferred event is outstanding.
+    pub fn commit(&mut self) {
+        if self.dirty {
+            self.dirty = false;
+            self.rebuild();
+        }
+    }
+
+    /// Re-derive routing from the surviving links: a link carries traffic
+    /// only when it is up and both endpoints are up; degraded links keep
+    /// their distance but scale bandwidth.
+    fn rebuild(&mut self) {
+        let links: Vec<Link> = self
+            .base
+            .links()
+            .iter()
+            .enumerate()
+            .filter(|(i, l)| self.link_up[*i] && self.node_up[l.a] && self.node_up[l.b])
+            .map(|(i, l)| Link {
+                a: l.a,
+                b: l.b,
+                bandwidth_mb_ms: l.bandwidth_mb_ms * self.bw_factor[i],
+                distance_km: l.distance_km,
+            })
+            .collect();
+        let effective = Topology::from_parts(
+            self.base.nodes().to_vec(),
+            links,
+            self.base.prop_speed_km_per_ms,
+        );
+        self.hops = HopTable::build(&effective, self.ref_mb);
+        self.dm = DistanceMatrix::from_hops(&self.hops);
+    }
+
+    /// Current routed-latency model (∞ for unreachable pairs).
+    pub fn dm(&self) -> &DistanceMatrix {
+        &self.dm
+    }
+
+    /// Current hop decomposition (empty for unreachable pairs).
+    pub fn hops(&self) -> &HopTable {
+        &self.hops
+    }
+
+    pub fn is_node_up(&self, v: usize) -> bool {
+        self.node_up[v]
+    }
+
+    pub fn node_up_mask(&self) -> &[bool] {
+        &self.node_up
+    }
+
+    /// Nodes currently down (diagnostics / under-failure scoring).
+    pub fn down_nodes(&self) -> Vec<usize> {
+        self.node_up
+            .iter()
+            .enumerate()
+            .filter(|(_, &up)| !up)
+            .map(|(v, _)| v)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::rng::Xoshiro256;
+
+    fn topo(seed: u64) -> Topology {
+        let cfg = ExperimentConfig::paper_default();
+        let mut rng = Xoshiro256::seed_from(seed);
+        Topology::generate(&cfg, &mut rng)
+    }
+
+    #[test]
+    fn healthy_view_matches_static_tables() {
+        let t = topo(1);
+        let d = DynamicTopology::new(&t, 1.0);
+        let dm = DistanceMatrix::build(&t, 1.0);
+        for a in 0..t.num_nodes() {
+            for b in 0..t.num_nodes() {
+                assert!((d.dm().latency(a, b, 1.5) - dm.latency(a, b, 1.5)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn node_outage_makes_node_unreachable_and_recovers() {
+        let cfg = ExperimentConfig::paper_default();
+        let t = topo(2);
+        let mut d = DynamicTopology::new(&t, 1.0);
+        let es = cfg.network.num_eds; // first edge server
+        let before = d.dm().latency(0, es, 1.0);
+        assert!(before.is_finite());
+        assert!(d.apply(&FaultKind::NodeDown { node: es }));
+        assert!(!d.is_node_up(es));
+        assert!(d.dm().latency(0, es, 1.0).is_infinite());
+        assert!(d.hops().hops(0, es).is_empty());
+        assert_eq!(d.down_nodes(), vec![es]);
+        d.apply(&FaultKind::NodeUp { node: es });
+        assert!((d.dm().latency(0, es, 1.0) - before).abs() < 1e-12);
+    }
+
+    #[test]
+    fn link_outage_reroutes_or_disconnects() {
+        let t = topo(3);
+        let mut d = DynamicTopology::new(&t, 1.0);
+        let (a, b) = (t.links()[0].a, t.links()[0].b);
+        let before = d.dm().latency(a, b, 1.0);
+        d.apply(&FaultKind::LinkDown { link: 0 });
+        let after = d.dm().latency(a, b, 1.0);
+        // Either a detour (strictly worse or equal via another parallel
+        // link) or a disconnect — never a speedup.
+        assert!(after >= before - 1e-12, "link loss cannot speed up routes");
+        d.apply(&FaultKind::LinkUp { link: 0 });
+        assert!((d.dm().latency(a, b, 1.0) - before).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bandwidth_degradation_slows_only_transmission() {
+        let t = topo(4);
+        let mut d = DynamicTopology::new(&t, 1.0);
+        let nv = t.num_nodes();
+        // Compare at the reference payload, where route optimality makes
+        // "every link weakly slower" imply "every pair weakly slower".
+        let snapshot: Vec<f64> = (0..nv).map(|b| d.dm().latency(0, b, 1.0)).collect();
+        d.apply(&FaultKind::LinkBandwidth { link: 2, factor: 0.25 });
+        for b in 0..nv {
+            assert!(
+                d.dm().latency(0, b, 1.0) >= snapshot[b] - 1e-12,
+                "degradation cannot speed up routes"
+            );
+        }
+        d.apply(&FaultKind::LinkBandwidth { link: 2, factor: 1.0 });
+        for (b, &s) in snapshot.iter().enumerate() {
+            assert!((d.dm().latency(0, b, 1.0) - s).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn replica_fail_is_not_a_topology_event() {
+        let t = topo(5);
+        let mut d = DynamicTopology::new(&t, 1.0);
+        assert!(!d.apply(&FaultKind::CoreReplicaFail { node: 12, core_idx: 0 }));
+    }
+}

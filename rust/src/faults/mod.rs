@@ -1,0 +1,156 @@
+//! Fault injection and network dynamics: the missing robustness layer.
+//!
+//! The paper's central claim is that core services form a *fault-tolerant
+//! backbone* (κ-diversity, C6) and that the online controller "maintains
+//! strong robustness as the system load scales" — yet a static
+//! [`crate::network::Topology`] cannot even express a failed link. This
+//! subsystem makes the claim measurable:
+//!
+//! * [`FaultSchedule`] — a seeded, replayable sequence of timed events
+//!   (edge-server outage/recovery, link outage/recovery, bandwidth
+//!   degradation, core-replica failure). Both the slotted engine and the
+//!   DES replay the *identical* schedule, so paired engine-vs-engine and
+//!   strategy-vs-strategy comparisons stay apples-to-apples.
+//! * [`DynamicTopology`] — a mutable view over the base topology that
+//!   applies fault events and re-derives the routing state
+//!   ([`crate::routing::HopTable`] / [`crate::routing::DistanceMatrix`])
+//!   the engines and the controller consult. Unreachable pairs report
+//!   infinite latency, which the greedy controller and the core router
+//!   treat as "not a candidate".
+//!
+//! Failure semantics (shared by both engines, documented here once):
+//!
+//! * **Node outage** — everything resident on the node dies: light
+//!   stations lose queued and in-service work, core replicas go offline,
+//!   in-flight executions are cancelled, and *completed stage outputs*
+//!   stored on the node are destroyed **permanently** (recovery restores
+//!   capacity, not data — a destruction flag, not current liveness,
+//!   decides drops, so outage timing relative to sibling stages cannot
+//!   resurrect a lost payload). Stages whose inputs survive elsewhere
+//!   are re-dispatched (requeue); a stage with a destroyed input loses
+//!   the task (drop, virtual-queue entry released,
+//!   `TrialMetrics::fault_drops`). The user payload at an edge device
+//!   survives outages — the device re-transmits — so ED downtime delays
+//!   source stages instead of dropping them.
+//! * **Link outage / degradation** — routes are recomputed; transfers
+//!   already in flight complete at their committed latency (the payload
+//!   left before the event), new transfers see the degraded network.
+//! * **Core-replica failure** — fail-stop after finishing current work:
+//!   the replica accepts no new tasks. Permanent within a trial; the
+//!   κ-diversity constraint is what keeps the service reachable.
+//!
+//! Entry points: `fmedge faults` (CLI sweep over failure rate × load),
+//! `examples/fault_sweep.rs`, and `run_trial_faulted` /
+//! `run_des_trial_faulted` on the engines.
+
+mod dynamic;
+mod schedule;
+
+pub use dynamic::DynamicTopology;
+pub use schedule::{FaultEvent, FaultKind, FaultParams, FaultSchedule};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::network::Topology;
+    use crate::rng::Xoshiro256;
+
+    fn topo(seed: u64) -> Topology {
+        let cfg = ExperimentConfig::paper_default();
+        let mut rng = Xoshiro256::seed_from(seed);
+        Topology::generate(&cfg, &mut rng)
+    }
+
+    #[test]
+    fn schedule_generation_is_deterministic() {
+        let t = topo(1);
+        let p = FaultParams::from_rate(0.02);
+        let a = FaultSchedule::generate(&t, 200, 1.0, 6, &p, 99);
+        let b = FaultSchedule::generate(&t, 200, 1.0, 6, &p, 99);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.events().iter().zip(b.events()) {
+            assert_eq!(x.time_ms, y.time_ms);
+            assert_eq!(x.kind, y.kind);
+        }
+        let c = FaultSchedule::generate(&t, 200, 1.0, 6, &p, 100);
+        // Different seed: almost surely a different realization.
+        let same = a.len() == c.len()
+            && a.events()
+                .iter()
+                .zip(c.events())
+                .all(|(x, y)| x.kind == y.kind && x.time_ms == y.time_ms);
+        assert!(!same, "seed must matter");
+    }
+
+    #[test]
+    fn zero_rate_schedule_is_empty() {
+        let t = topo(2);
+        let p = FaultParams::from_rate(0.0);
+        let s = FaultSchedule::generate(&t, 500, 1.0, 6, &p, 7);
+        assert!(s.is_empty());
+        assert!(FaultSchedule::none().is_empty());
+    }
+
+    #[test]
+    fn schedule_is_time_sorted_and_outages_recover() {
+        let t = topo(3);
+        let p = FaultParams::from_rate(0.05);
+        let s = FaultSchedule::generate(&t, 300, 1.0, 6, &p, 11);
+        assert!(!s.is_empty(), "rate 0.05 over 300 slots must fire");
+        let mut last = 0.0;
+        let mut down = std::collections::HashSet::new();
+        for ev in s.events() {
+            assert!(ev.time_ms >= last, "events must be time-sorted");
+            last = ev.time_ms;
+            match ev.kind {
+                FaultKind::NodeDown { node } => {
+                    assert!(down.insert(node), "double outage of node {node}");
+                }
+                FaultKind::NodeUp { node } => {
+                    assert!(down.remove(&node), "recovery without outage");
+                }
+                _ => {}
+            }
+        }
+        // Every outage inside the horizon recovers by the schedule's end.
+        assert!(down.is_empty(), "unrecovered outages: {down:?}");
+    }
+
+    #[test]
+    fn node_outages_only_hit_edge_servers() {
+        let cfg = ExperimentConfig::paper_default();
+        let t = topo(4);
+        let p = FaultParams::from_rate(0.1);
+        let s = FaultSchedule::generate(&t, 200, 1.0, 6, &p, 13);
+        for ev in s.events() {
+            if let FaultKind::NodeDown { node } = ev.kind {
+                assert!(
+                    node >= cfg.network.num_eds,
+                    "EDs are user ingress, never faulted by the generator"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn outage_cap_keeps_a_backbone_majority() {
+        let cfg = ExperimentConfig::paper_default();
+        let t = topo(5);
+        let mut p = FaultParams::from_rate(0.5); // absurdly aggressive
+        p.mean_outage_slots = 50.0;
+        let s = FaultSchedule::generate(&t, 400, 1.0, 6, &p, 17);
+        let cap = (cfg.network.num_ess - 1) / 2;
+        let mut down = 0usize;
+        for ev in s.events() {
+            match ev.kind {
+                FaultKind::NodeDown { .. } => {
+                    down += 1;
+                    assert!(down <= cap.max(1), "too many concurrent outages");
+                }
+                FaultKind::NodeUp { .. } => down -= 1,
+                _ => {}
+            }
+        }
+    }
+}

@@ -1,0 +1,261 @@
+//! Seeded, replayable schedules of timed fault events.
+
+use crate::network::{NodeClass, Topology};
+use crate::rng::{Rng, Xoshiro256};
+
+/// One kind of network/service fault.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// An edge server goes dark: resident services, queues, and in-flight
+    /// executions are lost.
+    NodeDown { node: usize },
+    /// The server comes back with empty capacity.
+    NodeUp { node: usize },
+    /// Link `link` (index into [`Topology::links`]) stops carrying
+    /// traffic.
+    LinkDown { link: usize },
+    /// The link is restored at its base bandwidth.
+    LinkUp { link: usize },
+    /// Bandwidth fluctuation: the link's bandwidth is scaled by `factor`
+    /// (`1.0` restores nominal capacity).
+    LinkBandwidth { link: usize, factor: f64 },
+    /// One replica of dense core MS `core_idx` at `node` fail-stops: it
+    /// finishes its current task and accepts no new work. Permanent
+    /// within the trial. A no-op when no replica is placed there.
+    CoreReplicaFail { node: usize, core_idx: usize },
+}
+
+/// A fault event stamped with its absolute simulation time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    pub time_ms: f64,
+    pub kind: FaultKind,
+}
+
+/// Generation knobs. All probabilities are per slot; durations are in
+/// slots. `from_rate` scales a coherent mix from one headline failure
+/// rate, which is what the `fmedge faults` sweep varies.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultParams {
+    /// Per-edge-server outage probability per slot.
+    pub node_outage_per_slot: f64,
+    /// Per-link outage probability per slot.
+    pub link_outage_per_slot: f64,
+    /// Per-link bandwidth-fluctuation probability per slot.
+    pub degrade_per_slot: f64,
+    /// Global core-replica fail-stop probability per slot.
+    pub replica_fail_per_slot: f64,
+    /// Mean outage/degradation duration (geometric, at least one slot).
+    pub mean_outage_slots: f64,
+    /// Bandwidth scale drawn uniformly from this range on degradation.
+    pub degrade_factor_lo: f64,
+    pub degrade_factor_hi: f64,
+}
+
+impl FaultParams {
+    /// A coherent fault mix parameterized by one headline rate λ:
+    /// node outages at λ, link outages at 2λ, bandwidth fluctuation at
+    /// 4λ, replica fail-stop at λ/2. `from_rate(0.0)` generates nothing.
+    pub fn from_rate(rate: f64) -> Self {
+        FaultParams {
+            node_outage_per_slot: rate,
+            link_outage_per_slot: 2.0 * rate,
+            degrade_per_slot: 4.0 * rate,
+            replica_fail_per_slot: 0.5 * rate,
+            mean_outage_slots: 20.0,
+            degrade_factor_lo: 0.2,
+            degrade_factor_hi: 0.7,
+        }
+    }
+}
+
+/// A time-sorted, replayable fault schedule.
+#[derive(Clone, Debug, Default)]
+pub struct FaultSchedule {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultSchedule {
+    /// The empty schedule: engines running it behave bit-identically to
+    /// their fault-free entry points.
+    pub fn none() -> Self {
+        FaultSchedule::default()
+    }
+
+    /// Build from explicit events (tests / handcrafted scenarios); sorts
+    /// by time, stable for ties.
+    pub fn from_events(mut events: Vec<FaultEvent>) -> Self {
+        events.sort_by(|a, b| a.time_ms.partial_cmp(&b.time_ms).unwrap());
+        FaultSchedule { events }
+    }
+
+    /// Generate a random schedule over `slots × slot_ms` for `topo`.
+    ///
+    /// Deterministic per seed, independent of any engine RNG stream.
+    /// Invariants the engines rely on:
+    /// * only edge servers suffer node outages (EDs are user ingress),
+    /// * at most `(num_es - 1) / 2` (min 1) servers are down at once, so
+    ///   a backbone majority always survives,
+    /// * every outage/degradation that starts inside the horizon also
+    ///   has its recovery event emitted (possibly past the horizon —
+    ///   engines simply never reach it),
+    /// * one concurrent fault per node/link (no double-down).
+    pub fn generate(
+        topo: &Topology,
+        slots: usize,
+        slot_ms: f64,
+        num_core: usize,
+        params: &FaultParams,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Xoshiro256::seed_from(seed ^ 0xFA17_5EED);
+        let ess: Vec<usize> = topo
+            .nodes()
+            .iter()
+            .filter(|n| n.class == NodeClass::EdgeServer)
+            .map(|n| n.id)
+            .collect();
+        let max_down = ((ess.len().saturating_sub(1)) / 2).max(1);
+        let nl = topo.links().len();
+
+        let mut events = Vec::new();
+        // node -> recovery slot (exclusive) while down.
+        let mut node_until = vec![0usize; topo.num_nodes()];
+        let mut link_until = vec![0usize; nl];
+        let mut degrade_until = vec![0usize; nl];
+        let mut down_now = 0usize;
+
+        let duration = |rng: &mut Xoshiro256| -> usize {
+            // Geometric with the configured mean, floored at one slot.
+            let u = rng.next_f64_open();
+            let mean = params.mean_outage_slots.max(1.0);
+            ((-u.ln() * mean).ceil() as usize).max(1)
+        };
+
+        for slot in 0..slots {
+            let t = slot as f64 * slot_ms;
+            // Node outages.
+            for &v in &ess {
+                if node_until[v] > slot {
+                    continue; // still down
+                }
+                if down_now >= max_down {
+                    break;
+                }
+                if rng.next_f64() < params.node_outage_per_slot {
+                    let dur = duration(&mut rng);
+                    node_until[v] = slot + dur;
+                    down_now += 1;
+                    events.push(FaultEvent {
+                        time_ms: t,
+                        kind: FaultKind::NodeDown { node: v },
+                    });
+                }
+            }
+            // Link outages and bandwidth fluctuation.
+            for l in 0..nl {
+                if link_until[l] > slot {
+                    continue;
+                }
+                if rng.next_f64() < params.link_outage_per_slot {
+                    let dur = duration(&mut rng);
+                    link_until[l] = slot + dur;
+                    events.push(FaultEvent {
+                        time_ms: t,
+                        kind: FaultKind::LinkDown { link: l },
+                    });
+                    continue;
+                }
+                if degrade_until[l] <= slot && rng.next_f64() < params.degrade_per_slot {
+                    let dur = duration(&mut rng);
+                    degrade_until[l] = slot + dur;
+                    let factor =
+                        rng.range_f64(params.degrade_factor_lo, params.degrade_factor_hi);
+                    events.push(FaultEvent {
+                        time_ms: t,
+                        kind: FaultKind::LinkBandwidth { link: l, factor },
+                    });
+                }
+            }
+            // Core-replica fail-stop (placement-agnostic: engines no-op
+            // when nothing is placed at the drawn location).
+            if !ess.is_empty() && num_core > 0 && rng.next_f64() < params.replica_fail_per_slot {
+                let node = ess[rng.range_usize(0, ess.len() - 1)];
+                let core_idx = rng.range_usize(0, num_core - 1);
+                events.push(FaultEvent {
+                    time_ms: t,
+                    kind: FaultKind::CoreReplicaFail { node, core_idx },
+                });
+            }
+            // Emit recoveries that become due at the next slot boundary.
+            let next = slot + 1;
+            let tn = next as f64 * slot_ms;
+            for &v in &ess {
+                if node_until[v] == next {
+                    node_until[v] = 0;
+                    down_now -= 1;
+                    events.push(FaultEvent {
+                        time_ms: tn,
+                        kind: FaultKind::NodeUp { node: v },
+                    });
+                }
+            }
+            for l in 0..nl {
+                if link_until[l] == next {
+                    link_until[l] = 0;
+                    events.push(FaultEvent {
+                        time_ms: tn,
+                        kind: FaultKind::LinkUp { link: l },
+                    });
+                }
+                if degrade_until[l] == next {
+                    degrade_until[l] = 0;
+                    events.push(FaultEvent {
+                        time_ms: tn,
+                        kind: FaultKind::LinkBandwidth { link: l, factor: 1.0 },
+                    });
+                }
+            }
+        }
+        // Outstanding recoveries past the horizon: emit so replays on a
+        // longer horizon stay well-formed.
+        let mut tail: Vec<FaultEvent> = Vec::new();
+        for &v in &ess {
+            if node_until[v] > slots {
+                tail.push(FaultEvent {
+                    time_ms: node_until[v] as f64 * slot_ms,
+                    kind: FaultKind::NodeUp { node: v },
+                });
+            }
+        }
+        for l in 0..nl {
+            if link_until[l] > slots {
+                tail.push(FaultEvent {
+                    time_ms: link_until[l] as f64 * slot_ms,
+                    kind: FaultKind::LinkUp { link: l },
+                });
+            }
+            if degrade_until[l] > slots {
+                tail.push(FaultEvent {
+                    time_ms: degrade_until[l] as f64 * slot_ms,
+                    kind: FaultKind::LinkBandwidth { link: l, factor: 1.0 },
+                });
+            }
+        }
+        tail.sort_by(|a, b| a.time_ms.partial_cmp(&b.time_ms).unwrap());
+        events.extend(tail);
+        FaultSchedule { events }
+    }
+
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}

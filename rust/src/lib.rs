@@ -45,6 +45,7 @@ pub mod workload;
 pub mod baselines;
 pub mod controller;
 pub mod des;
+pub mod faults;
 pub mod placement;
 pub mod routing;
 pub mod sim;

@@ -6,12 +6,13 @@ use fmedge::baselines::{GaStrategy, LbrrStrategy, PropAvg, Proposal};
 use fmedge::cli::{Args, HELP};
 use fmedge::config::ExperimentConfig;
 use fmedge::coordinator::{BatchPolicy, Coordinator, Request, ServeConfig};
-use fmedge::des::{pool, report, run_des_trial, validate_bounds, DesOptions};
+use fmedge::des::{pool, report, run_des_trial, run_des_trial_faulted, validate_bounds, DesOptions};
+use fmedge::faults::{FaultParams, FaultSchedule};
 use fmedge::metrics::Summary;
 use fmedge::placement::{solve_static_placement, PlacementParams, QosScores, ScoreParams};
 use fmedge::rng::{Rng, Xoshiro256};
 use fmedge::runtime::{EffCapAccel, Runtime};
-use fmedge::sim::{record_trace, run_trial, SimEnv, SimOptions, Strategy};
+use fmedge::sim::{record_trace, run_trial, run_trial_faulted, SimEnv, SimOptions, Strategy};
 use fmedge::workload::{Trace, WorkloadGenerator};
 
 fn main() {
@@ -32,6 +33,7 @@ fn main() {
         "gtable" => cmd_gtable(&args),
         "simulate" => cmd_simulate(&args),
         "des" => cmd_des(&args),
+        "faults" => cmd_faults(&args),
         "serve" => cmd_serve(&args),
         other => {
             eprintln!("unknown command `{other}`\n\n{HELP}");
@@ -271,6 +273,113 @@ fn cmd_des(args: &Args) -> Result<(), AnyError> {
             report(&pooled)
         );
     }
+    Ok(())
+}
+
+/// `fmedge faults`: the robustness sweep (EXPERIMENTS §P4). For every
+/// (load, failure-rate) grid point, every strategy replays the *same*
+/// recorded trace under the *same* seeded fault schedule; rate 0 uses an
+/// empty schedule and therefore reproduces the no-fault on-time rate
+/// exactly. Reported per strategy: mean on-time rate and the retained
+/// fraction of its own rate-0 baseline.
+fn cmd_faults(args: &Args) -> Result<(), AnyError> {
+    let mut cfg = load_config(args)?;
+    cfg.sim.slots = args.get_usize("slots", 200)?;
+    cfg.sim.trials = args.get_usize("trials", 3)?;
+    cfg.sim.seed = args.get_u64("seed", cfg.sim.seed)?;
+    let mut rates = args.get_f64_list("rates", &[0.0, 0.002, 0.01])?;
+    // Ascending order puts rate 0 (when present) first, so its baseline
+    // exists before any nonzero row needs a "retained" value.
+    rates.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let loads = args.get_f64_list("loads", &[1.0, 2.0])?;
+    let strategies = args.get_str_list("strategies", &["proposal", "lbrr"]);
+    let engine = args.get("engine").unwrap_or("slotted").to_string();
+    if engine != "slotted" && engine != "des" {
+        return Err(format!("unknown engine `{engine}` (slotted|des)").into());
+    }
+    println!(
+        "fault sweep ({engine} engine): rates {rates:?} x loads {loads:?}, {} trials x {} slots",
+        cfg.sim.trials, cfg.sim.slots
+    );
+
+    let t0 = Instant::now();
+    for &load in &loads {
+        cfg.sim.load_multiplier = load;
+        // Environment and trace depend only on (load, seed): build once
+        // per trial and reuse across every strategy and failure rate —
+        // this is also what makes the comparison paired.
+        let mut fixtures = Vec::with_capacity(cfg.sim.trials);
+        for trial in 0..cfg.sim.trials {
+            let seed = cfg.sim.seed + trial as u64;
+            let env = SimEnv::build(&cfg, seed);
+            let opts = SimOptions::from_config(&cfg);
+            let trace = record_trace(&env, seed, &opts);
+            fixtures.push((seed, env, opts, trace));
+        }
+        println!("\n== load x{load} ==");
+        println!(
+            "{:<10} {:>10}  {:>9}  {:>9}  {:>11}  {:>11}",
+            "strategy", "fail rate", "on-time", "retained", "fault drops", "tasks"
+        );
+        for name in &strategies {
+            let mut baseline: Option<f64> = None;
+            for &rate in &rates {
+                let mut otr = Vec::new();
+                let mut drops = 0usize;
+                let mut tasks = 0usize;
+                for (seed, env, opts, trace) in &fixtures {
+                    let schedule = if rate > 0.0 {
+                        FaultSchedule::generate(
+                            &env.topo,
+                            opts.slots,
+                            opts.slot_ms,
+                            env.app.catalog.num_core(),
+                            &FaultParams::from_rate(rate),
+                            // Same schedule for every strategy at this
+                            // (trial, rate): paired comparison.
+                            seed ^ (rate.to_bits().rotate_left(17)),
+                        )
+                    } else {
+                        FaultSchedule::none()
+                    };
+                    let mut strategy = make_strategy(name)?;
+                    let m = if engine == "des" {
+                        run_des_trial_faulted(
+                            env,
+                            strategy.as_mut(),
+                            *seed,
+                            &DesOptions::from_sim(opts),
+                            trace,
+                            &schedule,
+                        )
+                    } else {
+                        run_trial_faulted(env, strategy.as_mut(), *seed, opts, trace, &schedule)
+                    };
+                    otr.push(m.on_time_rate());
+                    drops += m.fault_drops;
+                    tasks += m.total_tasks;
+                }
+                let mean = otr.iter().sum::<f64>() / otr.len().max(1) as f64;
+                // "retained" is defined against the rate-0 baseline
+                // (EXPERIMENTS §P4); without a 0 in the sorted rate list
+                // the metric is undefined — print a dash rather than a
+                // robustness number measured against the wrong floor.
+                if rate == 0.0 {
+                    baseline = Some(mean);
+                }
+                let retained = match baseline {
+                    Some(base) if base > 0.0 => format!("{:.3}", mean / base),
+                    Some(_) => "1.000".to_string(),
+                    None => "-".to_string(),
+                };
+                println!(
+                    "{:<10} {:>10.4}  {:>9.3}  {:>9}  {:>11}  {:>11}",
+                    name, rate, mean, retained, drops, tasks
+                );
+            }
+        }
+    }
+    println!("\nsweep finished in {:?}", t0.elapsed());
     Ok(())
 }
 

@@ -77,6 +77,15 @@ pub struct TrialMetrics {
     /// Pending-work depth (controller queue + station FIFOs), sampled per
     /// controller tick (DES engine; empty under the slotted engine).
     pub queue_depth: Histogram,
+    /// Virtual-queue entries still tracked after the end-of-horizon drain.
+    /// Every admitted task — finished, dropped, or faulted — must have
+    /// been `remove()`d from [`crate::controller::VirtualQueues`] by then,
+    /// so anything nonzero is a controller-state leak.
+    pub vq_residual: usize,
+    /// Tasks dropped because a fault destroyed state they could not
+    /// recover from (an input payload lost with its node). Zero without
+    /// fault injection.
+    pub fault_drops: usize,
 }
 
 impl TrialMetrics {
@@ -111,6 +120,7 @@ pub struct MetricsCollector {
     outcomes: Vec<TaskOutcome>,
     service_obs: Vec<ServiceObs>,
     queue_depth: Histogram,
+    fault_drops: usize,
 }
 
 impl MetricsCollector {
@@ -140,6 +150,12 @@ impl MetricsCollector {
 
     pub fn record(&mut self, o: TaskOutcome) {
         self.outcomes.push(o);
+    }
+
+    /// Count one unrecoverable fault casualty (the task outcome itself is
+    /// still recorded through [`Self::record`]).
+    pub fn record_fault_drop(&mut self) {
+        self.fault_drops += 1;
     }
 
     pub fn len(&self) -> usize {
@@ -177,6 +193,8 @@ impl MetricsCollector {
             mean_deadline_ms,
             service_obs: self.service_obs,
             queue_depth: self.queue_depth,
+            vq_residual: 0,
+            fault_drops: self.fault_drops,
         }
     }
 }

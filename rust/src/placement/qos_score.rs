@@ -232,3 +232,68 @@ impl QosScores {
         self.z_tilde.first().map_or(0, Vec::len)
     }
 }
+
+/// How much of a core placement's value survives a set of node outages —
+/// the quantitative form of the paper's "fault-tolerant backbone" claim.
+#[derive(Clone, Debug)]
+pub struct FailureImpact {
+    /// Σ Q·x over surviving nodes.
+    pub surviving_score: f64,
+    /// Σ Q·x over all nodes (healthy baseline).
+    pub total_score: f64,
+    /// Core MSs left with zero live replicas (service outage).
+    pub services_lost: usize,
+    /// Replica instances lost with the failed nodes.
+    pub replicas_lost: u32,
+}
+
+impl FailureImpact {
+    /// Fraction of the placement's QoS-weighted value still standing in
+    /// `[0, 1]`; `1.0` for an empty placement (nothing to lose).
+    pub fn survival_fraction(&self) -> f64 {
+        if self.total_score <= 0.0 {
+            1.0
+        } else {
+            self.surviving_score / self.total_score
+        }
+    }
+}
+
+/// Evaluate a core placement under failure: `down[v]` marks dead nodes.
+/// A κ-diverse placement should keep `services_lost == 0` and a high
+/// survival fraction for any minority outage — that is the backbone
+/// property the static ILP's C6 constraint buys.
+pub fn placement_under_failure(
+    instances: &[Vec<u32>],
+    scores: &QosScores,
+    down: &[bool],
+) -> FailureImpact {
+    let nc = scores.num_core();
+    let mut surviving_score = 0.0;
+    let mut total_score = 0.0;
+    let mut replicas_lost = 0u32;
+    let mut live = vec![0u32; nc];
+    for (v, row) in instances.iter().enumerate() {
+        let dead = down.get(v).copied().unwrap_or(false);
+        for (ci, &x) in row.iter().enumerate() {
+            if x == 0 {
+                continue;
+            }
+            let q = scores.q[v][ci] * x as f64;
+            total_score += q;
+            if dead {
+                replicas_lost += x;
+            } else {
+                surviving_score += q;
+                live[ci] += x;
+            }
+        }
+    }
+    let services_lost = live.iter().filter(|&&n| n == 0).count();
+    FailureImpact {
+        surviving_score,
+        total_score,
+        services_lost,
+        replicas_lost,
+    }
+}

@@ -25,6 +25,9 @@ pub struct CoreAssignment {
 pub struct CoreRouter {
     /// `busy_until[v][m]` = sorted clock per instance of core MS `m` at `v`.
     busy_until: Vec<Vec<Vec<f64>>>,
+    /// Instance counts stashed while a node is down (fault injection);
+    /// restored — with fresh clocks — on recovery.
+    offline: Vec<Vec<u32>>,
     num_core: usize,
 }
 
@@ -32,14 +35,54 @@ impl CoreRouter {
     /// Build from a core placement matrix `instances[v][m]`.
     pub fn new(instances: &[Vec<u32>]) -> Self {
         let num_core = instances.first().map_or(0, Vec::len);
-        let busy_until = instances
+        let busy_until: Vec<Vec<Vec<f64>>> = instances
             .iter()
             .map(|row| row.iter().map(|&c| vec![0.0f64; c as usize]).collect())
             .collect();
+        let offline = vec![vec![0u32; num_core]; busy_until.len()];
         CoreRouter {
             busy_until,
+            offline,
             num_core,
         }
+    }
+
+    /// Fault injection: the node went dark. Resident replicas go offline
+    /// (their in-flight work is cancelled by the engine) and are stashed
+    /// for recovery.
+    pub fn set_node_down(&mut self, v: usize) {
+        for m in 0..self.num_core {
+            self.offline[v][m] += self.busy_until[v][m].len() as u32;
+            self.busy_until[v][m].clear();
+        }
+    }
+
+    /// Fault injection: the node recovered — replicas come back idle from
+    /// `now_ms` (restart semantics: no pre-outage queue state survives).
+    pub fn set_node_up(&mut self, v: usize, now_ms: f64) {
+        for m in 0..self.num_core {
+            let count = self.offline[v][m] as usize;
+            self.offline[v][m] = 0;
+            self.busy_until[v][m].extend(std::iter::repeat(now_ms).take(count));
+        }
+    }
+
+    /// Fault injection: one replica of core MS `m` at `v` fail-stops (it
+    /// finishes its current task but accepts no new work). Returns whether
+    /// a replica was actually present — a miss is a schedule no-op.
+    pub fn kill_instance(&mut self, v: usize, m: usize) -> bool {
+        if m >= self.num_core {
+            return false;
+        }
+        if self.busy_until[v][m].pop().is_some() {
+            return true;
+        }
+        // Node currently down: decommission one stashed replica instead.
+        if self.offline[v][m] > 0 {
+            self.offline[v][m] -= 1;
+            return true;
+        }
+        false
     }
 
     /// Nodes hosting at least one instance of core MS `m` (dense core idx).
@@ -81,6 +124,10 @@ impl CoreRouter {
                 let tr = dm.latency(pn, v, mb);
                 transfer = transfer.max(tr);
                 arrive = arrive.max(ready + tr);
+            }
+            // Unreachable under the current fault state: not a candidate.
+            if !arrive.is_finite() {
+                continue;
             }
             let (idx, &free) = row[m]
                 .iter()
@@ -132,6 +179,10 @@ impl CoreRouter {
             }
             let transfer = dm.latency(from, v, payload_mb);
             let arrive = ready_ms + transfer;
+            // Unreachable under the current fault state: not a candidate.
+            if !arrive.is_finite() {
+                continue;
+            }
             // Earliest-free instance on this node.
             let (idx, &free) = row[m]
                 .iter()
@@ -234,6 +285,65 @@ mod tests {
         assert_eq!(a1.start_ms, 0.0);
         assert_eq!(a2.start_ms, 0.0, "second instance serves in parallel");
         assert_ne!(a1.instance, a2.instance);
+    }
+
+    #[test]
+    fn node_down_diverts_and_recovery_restores() {
+        let (t, dm) = setup();
+        let mut inst = vec![vec![0u32; 1]; t.num_nodes()];
+        inst[12][0] = 1;
+        inst[15][0] = 1;
+        let mut router = CoreRouter::new(&inst);
+        router.set_node_down(12);
+        assert_eq!(router.total_instances(0), 1);
+        let a = router.route(0, 12, 0.0, 1.0, 2.0, &dm).unwrap();
+        assert_eq!(a.node, 15, "dead node must not be routed to");
+        router.set_node_up(12, 100.0);
+        assert_eq!(router.total_instances(0), 2);
+        // The recovered replica is idle from its restart time.
+        let b = router.route(0, 12, 200.0, 0.01, 2.0, &dm).unwrap();
+        assert_eq!(b.node, 12);
+    }
+
+    #[test]
+    fn kill_instance_decommissions_one_replica() {
+        let (t, dm) = setup();
+        let mut inst = vec![vec![0u32; 1]; t.num_nodes()];
+        inst[13][0] = 2;
+        let mut router = CoreRouter::new(&inst);
+        assert!(router.kill_instance(13, 0));
+        assert_eq!(router.total_instances(0), 1);
+        assert!(router.route(0, 13, 0.0, 1.0, 1.0, &dm).is_some());
+        assert!(router.kill_instance(13, 0));
+        assert!(!router.kill_instance(13, 0), "nothing left to kill");
+        assert!(router.route(0, 13, 0.0, 1.0, 1.0, &dm).is_none());
+        assert!(!router.kill_instance(13, 9), "bad core idx is a no-op");
+    }
+
+    #[test]
+    fn unreachable_candidates_are_skipped() {
+        let (t, _) = setup();
+        let mut inst = vec![vec![0u32; 1]; t.num_nodes()];
+        inst[12][0] = 1;
+        let mut router = CoreRouter::new(&inst);
+        // A distance matrix where node 12 is unreachable from everywhere.
+        let topo_links: Vec<crate::network::Link> = t
+            .links()
+            .iter()
+            .filter(|l| l.a != 12 && l.b != 12)
+            .cloned()
+            .collect();
+        let cut = crate::network::Topology::from_parts(
+            t.nodes().to_vec(),
+            topo_links,
+            t.prop_speed_km_per_ms,
+        );
+        let dm_cut = DistanceMatrix::build(&cut, 1.0);
+        assert!(dm_cut.latency(0, 12, 1.0).is_infinite());
+        assert!(
+            router.route(0, 0, 0.0, 1.0, 1.0, &dm_cut).is_none(),
+            "only instance is unreachable: no route"
+        );
     }
 
     #[test]

@@ -57,6 +57,12 @@ impl HopTable {
                 if src == dst {
                     continue;
                 }
+                // Disconnected pairs (possible under fault injection, never
+                // in the generated healthy mesh) keep an empty hop list;
+                // the summed views report infinite latency for them.
+                if !sp.dist[dst].is_finite() {
+                    continue;
+                }
                 let path = sp.path_to(dst);
                 let mut seq = Vec::with_capacity(path.len().saturating_sub(1));
                 for w in path.windows(2) {
@@ -91,15 +97,25 @@ impl HopTable {
         HopTable { n, hops }
     }
 
-    /// Hop sequence from `a` to `b` (empty when `a == b`).
+    /// Hop sequence from `a` to `b` (empty when `a == b` or when no
+    /// route survives the current fault state).
     #[inline]
     pub fn hops(&self, a: usize, b: usize) -> &[Hop] {
         &self.hops[a * self.n + b]
     }
 
+    /// Whether a route exists (trivially true for `a == b`).
+    #[inline]
+    pub fn is_reachable(&self, a: usize, b: usize) -> bool {
+        a == b || !self.hops(a, b).is_empty()
+    }
+
     /// Total routed latency for payload `mb` — identical to the summed
-    /// [`DistanceMatrix::latency`].
+    /// [`DistanceMatrix::latency`]; `f64::INFINITY` when unreachable.
     pub fn latency(&self, a: usize, b: usize, mb: f64) -> f64 {
+        if !self.is_reachable(a, b) {
+            return f64::INFINITY;
+        }
         self.hops(a, b).iter().map(|h| h.latency(mb)).sum()
     }
 
@@ -127,13 +143,19 @@ impl DistanceMatrix {
     }
 
     /// Summed view of a hop table: `latency(a, b, mb)` equals the sum of
-    /// the per-hop latencies, term for term.
+    /// the per-hop latencies, term for term. Pairs without a route (fault
+    /// injection) get an infinite base so every latency query reports
+    /// unreachability instead of a silent zero.
     pub fn from_hops(ht: &HopTable) -> Self {
         let n = ht.num_nodes();
         let mut base = vec![0.0; n * n];
         let mut per_mb = vec![0.0; n * n];
         for src in 0..n {
             for dst in 0..n {
+                if src != dst && !ht.is_reachable(src, dst) {
+                    base[src * n + dst] = f64::INFINITY;
+                    continue;
+                }
                 for h in ht.hops(src, dst) {
                     base[src * n + dst] += h.base_ms;
                     per_mb[src * n + dst] += h.per_mb_ms;

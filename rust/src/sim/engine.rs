@@ -6,6 +6,7 @@ use std::collections::{BinaryHeap, HashMap};
 use crate::config::{ExperimentConfig, NUM_RESOURCES};
 use crate::controller::{LightRequest, VirtualQueues};
 use crate::effcap::{GTable, GTableParams};
+use crate::faults::{DynamicTopology, FaultKind, FaultSchedule};
 use crate::metrics::{CostBook, MetricsCollector, TaskOutcome, TrialMetrics};
 use crate::microservice::{build_fig1_application, Application, MsClass};
 use crate::network::Topology;
@@ -186,6 +187,27 @@ pub(crate) fn parent_payloads(
     }
 }
 
+/// Shared input-survival rule for fault injection: a stage's inputs are
+/// irrecoverably gone when any parent stage's output was destroyed (its
+/// node died after the parent completed — recovery restores capacity,
+/// not server-resident intermediate data). Source stages read the user
+/// payload from the edge device, which retains it across outages: an
+/// ED being down is a *wait* condition at dispatch, never destruction.
+/// Both engines consult this one rule so paired fault replays agree on
+/// what is recoverable.
+pub(crate) fn stage_inputs_destroyed(
+    app: &Application,
+    task_type: usize,
+    destroyed: &[bool],
+    local: usize,
+) -> bool {
+    app.task_types[task_type]
+        .dag
+        .parents(local)
+        .iter()
+        .any(|&p| destroyed[p])
+}
+
 /// Shared residual-capacity rule: static residual minus the resources of
 /// busy light instance-groups, floored at zero.
 pub(crate) fn residual_after_busy(
@@ -217,6 +239,13 @@ struct RunTask {
     node: Vec<Option<usize>>,
     /// Local nodes already dispatched (running or queued for light).
     dispatched: Vec<bool>,
+    /// Sequence of the outstanding completion event per stage. A fault
+    /// that kills the execution clears this, making the in-flight event
+    /// stale; a re-dispatch records a fresh sequence.
+    ev_seq: Vec<Option<u64>>,
+    /// A completed stage's output was lost with its node — permanent:
+    /// node recovery does not restore it (see `stage_inputs_destroyed`).
+    destroyed: Vec<bool>,
 }
 
 impl RunTask {
@@ -245,8 +274,14 @@ struct Event {
     time_ms: f64,
     task: u64,
     local: usize,
-    /// Light instance group to release, if any.
-    release: Option<(usize, usize)>,
+    /// Unique dispatch sequence; a fault that cancels the execution makes
+    /// the task's recorded sequence diverge, so the event is ignored.
+    seq: u64,
+    /// Light busy accounting to release: `(node, light_idx, generation)`.
+    /// The generation is matched against the station's — a node outage
+    /// zeroes the busy count and bumps the generation, so stale releases
+    /// from before the outage cannot underflow the revived station.
+    release: Option<(usize, usize, u64)>,
 }
 
 impl Eq for Event {}
@@ -262,6 +297,7 @@ impl Ord for Event {
             .unwrap_or(std::cmp::Ordering::Equal)
             .then_with(|| self.task.cmp(&other.task))
             .then_with(|| self.local.cmp(&other.local))
+            .then_with(|| self.seq.cmp(&other.seq))
     }
 }
 
@@ -292,7 +328,7 @@ pub fn run_trial(
     seed: u64,
     opts: &SimOptions,
 ) -> TrialMetrics {
-    run_trial_inner(env, strategy, seed, opts, None)
+    run_trial_inner(env, strategy, seed, opts, None, &FaultSchedule::none())
 }
 
 /// Run one trial replaying a recorded [`Trace`] instead of drawing
@@ -305,7 +341,21 @@ pub fn run_trial_traced(
     opts: &SimOptions,
     trace: &Trace,
 ) -> TrialMetrics {
-    run_trial_inner(env, strategy, seed, opts, Some(trace))
+    run_trial_inner(env, strategy, seed, opts, Some(trace), &FaultSchedule::none())
+}
+
+/// Run one traced trial while replaying a [`FaultSchedule`]: events are
+/// applied at the first slot boundary at or after their timestamp. With
+/// an empty schedule this is bit-identical to [`run_trial_traced`].
+pub fn run_trial_faulted(
+    env: &SimEnv,
+    strategy: &mut dyn Strategy,
+    seed: u64,
+    opts: &SimOptions,
+    trace: &Trace,
+    faults: &FaultSchedule,
+) -> TrialMetrics {
+    run_trial_inner(env, strategy, seed, opts, Some(trace), faults)
 }
 
 fn run_trial_inner(
@@ -314,6 +364,7 @@ fn run_trial_inner(
     seed: u64,
     opts: &SimOptions,
     trace: Option<&Trace>,
+    faults: &FaultSchedule,
 ) -> TrialMetrics {
     let app = &env.app;
     let cfg = &env.cfg;
@@ -353,6 +404,19 @@ fn run_trial_inner(
     let mut active_light = vec![vec![0u32; nl]; nv];
     let mut collector = MetricsCollector::new();
 
+    // --- fault state ------------------------------------------------------
+    // With an empty schedule none of this is ever touched and the run is
+    // bit-identical to the fault-free path (same RNG stream, same events).
+    let has_faults = !faults.is_empty();
+    let mut dynt: Option<DynamicTopology> =
+        has_faults.then(|| DynamicTopology::new(&env.topo, 1.0));
+    let mut fault_cursor = 0usize;
+    let mut node_up = vec![true; nv];
+    // Busy-accounting generation per station; bumped when an outage zeroes
+    // the count so stale release events cannot underflow it.
+    let mut light_gen = vec![vec![0u64; nl]; nv];
+    let mut next_seq: u64 = 0;
+
     let light_idx_of: Vec<Option<usize>> = (0..app.catalog.len())
         .map(|m| app.catalog.light_index(crate::microservice::MsId(m)))
         .collect();
@@ -374,6 +438,71 @@ fn run_trial_inner(
     for slot in 0..opts.slots {
         let now = slot as f64 * opts.slot_ms;
         let slot_end = now + opts.slot_ms;
+
+        // 0. Apply fault events due by this slot boundary (the slotted
+        //    engine quantizes the schedule to its decision cadence; the
+        //    DES applies the same events at their exact timestamps).
+        while fault_cursor < faults.len() && faults.events()[fault_cursor].time_ms <= now {
+            let fev = faults.events()[fault_cursor];
+            fault_cursor += 1;
+            match fev.kind {
+                FaultKind::NodeDown { node } => {
+                    node_up[node] = false;
+                    if let Some(d) = dynt.as_mut() {
+                        d.apply_deferred(&fev.kind);
+                    }
+                    core_router.set_node_down(node);
+                    for m in 0..nl {
+                        active_light[node][m] = 0;
+                        light_gen[node][m] += 1;
+                    }
+                    // Completed outputs resident on the node are destroyed
+                    // (permanently — recovery restores capacity, not
+                    // data); in-flight executions are cancelled, their
+                    // completion events go stale, and the dispatch scan
+                    // below re-dispatches them (or drops tasks whose
+                    // inputs died with the node).
+                    for t in tasks.values_mut() {
+                        for local in 0..t.done.len() {
+                            if t.node[local] != Some(node) {
+                                continue;
+                            }
+                            if t.done[local].is_some() {
+                                t.destroyed[local] = true;
+                            } else if t.dispatched[local] {
+                                t.dispatched[local] = false;
+                                t.node[local] = None;
+                                t.ev_seq[local] = None;
+                            }
+                        }
+                    }
+                }
+                FaultKind::NodeUp { node } => {
+                    node_up[node] = true;
+                    if let Some(d) = dynt.as_mut() {
+                        d.apply_deferred(&fev.kind);
+                    }
+                    core_router.set_node_up(node, now);
+                }
+                FaultKind::CoreReplicaFail { node, core_idx } => {
+                    core_router.kill_instance(node, core_idx);
+                }
+                link_event => {
+                    if let Some(d) = dynt.as_mut() {
+                        d.apply_deferred(&link_event);
+                    }
+                }
+            }
+        }
+        // One routing rebuild per boundary, however many events landed.
+        if let Some(d) = dynt.as_mut() {
+            d.commit();
+        }
+        // The routed-latency view every consumer of this slot shares.
+        let dm_cur: &DistanceMatrix = match &dynt {
+            Some(d) => d.dm(),
+            None => &env.dm,
+        };
 
         // 1. Arrivals (none past the cutoff: drain phase). A replayed
         //    trace is authoritative: its recorded slots are admitted
@@ -399,21 +528,31 @@ fn run_trial_inner(
                     done: vec![None; n],
                     node: vec![None; n],
                     dispatched: vec![false; n],
+                    ev_seq: vec![None; n],
+                    destroyed: vec![false; n],
                 },
             );
         }
 
-        // 2. Drain events due before the end of this slot.
+        // 2. Drain events due before the end of this slot. An event is
+        //    acted on only if its dispatch sequence is still the stage's
+        //    current one — a fault cancellation makes it stale. Busy
+        //    releases are matched by station generation the same way.
         while let Some(Reverse(ev)) = events.peek() {
             if ev.time_ms > slot_end {
                 break;
             }
             let Reverse(ev) = events.pop().unwrap();
-            if let Some((v, m)) = ev.release {
-                active_light[v][m] = active_light[v][m].saturating_sub(1);
+            if let Some((v, m, gen)) = ev.release {
+                if light_gen[v][m] == gen {
+                    active_light[v][m] = active_light[v][m].saturating_sub(1);
+                }
             }
             if let Some(t) = tasks.get_mut(&ev.task) {
-                t.done[ev.local] = Some(ev.time_ms);
+                if t.ev_seq[ev.local] == Some(ev.seq) {
+                    t.done[ev.local] = Some(ev.time_ms);
+                    t.ev_seq[ev.local] = None;
+                }
             }
         }
 
@@ -432,6 +571,9 @@ fn run_trial_inner(
                     .collect()
             };
             for local in ready_locals {
+                if !tasks.contains_key(id) {
+                    break; // dropped by a fault casualty below
+                }
                 let (ms_id, is_core, proc_ms, payloads) = {
                     let t = &tasks[id];
                     let tt = &app.task_types[t.task_type];
@@ -444,6 +586,24 @@ fn run_trial_inner(
                         t.parent_payloads(app, local),
                     )
                 };
+                // A stage whose input payload was destroyed by an outage
+                // cannot execute: the task is an unrecoverable fault
+                // casualty. An ED-down source input merely waits (the
+                // device retains the user payload across outages).
+                if has_faults {
+                    let t = &tasks[id];
+                    if stage_inputs_destroyed(app, t.task_type, &t.destroyed, local) {
+                        let t = tasks.remove(id).unwrap();
+                        collector.record_fault_drop();
+                        finish_task(*id, &t, None, &mut collector, &mut queues);
+                        break;
+                    }
+                    if !node_up[t.ed]
+                        && app.task_types[t.task_type].dag.parents(local).is_empty()
+                    {
+                        continue; // wait for the user's ED to recover
+                    }
+                }
                 if is_core {
                     let ci = app
                         .catalog
@@ -452,25 +612,52 @@ fn run_trial_inner(
                         .position(|&c| c == ms_id)
                         .expect("core id");
                     if let Some(asn) =
-                        core_router.route_multi(ci, &payloads, proc_ms, now, &env.dm)
+                        core_router.route_multi(ci, &payloads, proc_ms, now, dm_cur)
                     {
+                        let seq = next_seq;
+                        next_seq += 1;
                         let t = tasks.get_mut(id).unwrap();
                         t.dispatched[local] = true;
                         t.node[local] = Some(asn.node);
+                        t.ev_seq[local] = Some(seq);
                         events.push(Reverse(Event {
                             time_ms: asn.done_ms,
                             task: *id,
                             local,
+                            seq,
                             release: None,
                         }));
                     }
-                    // No instance (shouldn't happen: C2 guarantees >=1).
+                    // No instance: under faults every replica may be down
+                    // or unreachable — the stage stays ready and retries
+                    // next slot (fault-free, C2 guarantees >= 1).
                 } else {
                     let t = tasks.get_mut(id).unwrap();
                     t.dispatched[local] = true;
                     light_queue.push((*id, local));
                 }
             }
+        }
+        // Fault drops above may have left dangling queued stages.
+        if has_faults {
+            light_queue.retain(|(id, _)| tasks.contains_key(id));
+            // Queued light work whose input payload was destroyed is
+            // equally lost (unreachable-but-alive inputs keep waiting).
+            let mut casualties: Vec<u64> = Vec::new();
+            for &(id, local) in &light_queue {
+                if let Some(t) = tasks.get(&id) {
+                    if stage_inputs_destroyed(app, t.task_type, &t.destroyed, local) {
+                        casualties.push(id);
+                    }
+                }
+            }
+            for id in casualties {
+                if let Some(t) = tasks.remove(&id) {
+                    collector.record_fault_drop();
+                    finish_task(id, &t, None, &mut collector, &mut queues);
+                }
+            }
+            light_queue.retain(|(id, _)| tasks.contains_key(id));
         }
 
         // 4. Build the controller queue and residual capacity.
@@ -482,7 +669,15 @@ fn run_trial_inner(
                     .collect()
             })
             .collect();
-        let residual = residual_after_busy(&residual_static, &env.light_resources, &busy);
+        let mut residual = residual_after_busy(&residual_static, &env.light_resources, &busy);
+        if has_faults {
+            // Dead nodes host nothing new.
+            for (v, res) in residual.iter_mut().enumerate() {
+                if !node_up[v] {
+                    *res = [0.0; NUM_RESOURCES];
+                }
+            }
+        }
         let requests: Vec<LightRequest> = light_queue
             .iter()
             .map(|&(id, local)| {
@@ -509,18 +704,26 @@ fn run_trial_inner(
 
         // 5. Strategy decision + execution of assignments.
         let decision =
-            strategy.decide_light(env, slot, &requests, &busy, &residual, &mut rng);
+            strategy.decide_light(env, slot, &requests, &busy, &residual, dm_cur, &mut rng);
         debug_assert_eq!(decision.assignments.len(), requests.len());
         let mut still_waiting: Vec<(u64, usize)> = Vec::new();
         for (qi, &(id, local)) in light_queue.iter().enumerate() {
             match decision.assignments.get(qi).and_then(|a| *a) {
                 Some(asn) => {
+                    // A strategy oblivious to the fault state (LBRR's
+                    // round-robin, GA's frozen plan) may route onto a dead
+                    // or unreachable node — the engine refuses and the
+                    // task waits for a later slot (or its age drop).
+                    if has_faults && !node_up[asn.node] {
+                        still_waiting.push((id, local));
+                        continue;
+                    }
                     let (arrival, proc) = {
                         let t = &tasks[&id];
                         let payloads = t.parent_payloads(app, local);
                         let arrival = payloads
                             .iter()
-                            .map(|&(pn, pd, mb)| pd + env.dm.latency(pn, asn.node, mb))
+                            .map(|&(pn, pd, mb)| pd + dm_cur.latency(pn, asn.node, mb))
                             .fold(f64::NEG_INFINITY, f64::max);
                         let tt = &app.task_types[t.task_type];
                         let spec = app.catalog.spec(tt.services[local]);
@@ -531,14 +734,26 @@ fn run_trial_inner(
                     };
                     let start = arrival.max(now);
                     let done = start + proc;
+                    if !done.is_finite() {
+                        still_waiting.push((id, local));
+                        continue;
+                    }
+                    let seq = next_seq;
+                    next_seq += 1;
                     let t = tasks.get_mut(&id).unwrap();
                     t.node[local] = Some(asn.node);
+                    t.ev_seq[local] = Some(seq);
                     active_light[asn.node][asn.light_idx] += 1;
                     events.push(Reverse(Event {
                         time_ms: done,
                         task: id,
                         local,
-                        release: Some((asn.node, asn.light_idx)),
+                        seq,
+                        release: Some((
+                            asn.node,
+                            asn.light_idx,
+                            light_gen[asn.node][asn.light_idx],
+                        )),
                     }));
                 }
                 None => still_waiting.push((id, local)),
@@ -594,5 +809,15 @@ fn run_trial_inner(
         finish_task(id, &t, None, &mut collector, &mut queues);
     }
     let _ = placement.objective;
-    collector.finish(&costs)
+    let mut metrics = collector.finish(&costs);
+    // Lifecycle invariant: every admitted task was removed from the
+    // virtual queues on its finish/drop path. Surfaced in the metrics so
+    // regression tests can assert it stays zero on long trials.
+    debug_assert!(
+        queues.is_empty(),
+        "virtual-queue leak: {} entries after drain",
+        queues.len()
+    );
+    metrics.vq_residual = queues.len();
+    metrics
 }

@@ -8,13 +8,16 @@
 
 mod engine;
 
-pub use engine::{record_trace, run_trial, run_trial_traced, SimEnv, SimOptions};
-pub(crate) use engine::{parent_payloads, residual_after_busy, stage_ready};
+pub use engine::{record_trace, run_trial, run_trial_faulted, run_trial_traced, SimEnv, SimOptions};
+pub(crate) use engine::{
+    parent_payloads, residual_after_busy, stage_inputs_destroyed, stage_ready,
+};
 
 use crate::controller::{LightDecision, LightRequest};
 use crate::config::NUM_RESOURCES;
 use crate::placement::{CorePlacement, QosScores};
 use crate::rng::Xoshiro256;
+use crate::routing::DistanceMatrix;
 
 /// A deployment strategy under evaluation (the proposal or a baseline).
 pub trait Strategy {
@@ -31,7 +34,10 @@ pub trait Strategy {
 
     /// Dynamic tier: decide light instances/parallelism/routing for one
     /// slot. `busy` carries instances still processing; `residual` is the
-    /// per-node capacity left for new instances.
+    /// per-node capacity left for new instances; `dm` is the *current*
+    /// routed-latency view — under fault injection it reflects outages
+    /// and degraded links (unreachable pairs report infinite latency)
+    /// and may differ from `env.dm`.
     #[allow(clippy::too_many_arguments)]
     fn decide_light(
         &mut self,
@@ -40,6 +46,7 @@ pub trait Strategy {
         queue: &[LightRequest],
         busy: &[Vec<u32>],
         residual: &[[f64; NUM_RESOURCES]],
+        dm: &DistanceMatrix,
         rng: &mut Xoshiro256,
     ) -> LightDecision;
 }
@@ -139,6 +146,20 @@ mod tests {
             m2.on_time_rate(),
             m1.on_time_rate()
         );
+    }
+
+    #[test]
+    fn virtual_queues_drain_to_empty_after_trial() {
+        // Regression (VirtualQueues lifecycle): finished AND dropped tasks
+        // must both be remove()d, so nothing is tracked after the horizon
+        // drain even under overload where many tasks are dropped.
+        let cfg = small_cfg();
+        let env = SimEnv::build(&cfg, 31);
+        let mut opts = SimOptions::from_config(&cfg);
+        opts.load_multiplier = 3.0; // force drops
+        let m = run_trial(&env, &mut Proposal::new(), 31, &opts);
+        assert!(m.total_tasks > 0);
+        assert_eq!(m.vq_residual, 0, "virtual-queue entries leaked");
     }
 
     #[test]

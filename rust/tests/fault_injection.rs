@@ -1,0 +1,218 @@
+//! Integration tests for the fault-injection subsystem: replay
+//! determinism, zero-fault equivalence with the fault-free entry points,
+//! and slotted-vs-DES agreement on a fixed schedule.
+
+use fmedge::baselines::{LbrrStrategy, Proposal};
+use fmedge::config::ExperimentConfig;
+use fmedge::des::{run_des_trial, run_des_trial_faulted, DesOptions};
+use fmedge::faults::{FaultEvent, FaultKind, FaultParams, FaultSchedule};
+use fmedge::metrics::TrialMetrics;
+use fmedge::sim::{record_trace, run_trial_faulted, run_trial_traced, SimEnv, SimOptions};
+
+fn small_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper_default();
+    cfg.sim.slots = 120;
+    cfg.workload.num_users = 8;
+    cfg.controller.effcap_samples = 512;
+    cfg
+}
+
+/// Field-by-field identity on everything a trial measures (metrics do not
+/// implement `PartialEq`; latency vectors make this byte-level in effect).
+fn assert_identical(a: &TrialMetrics, b: &TrialMetrics, what: &str) {
+    assert_eq!(a.total_tasks, b.total_tasks, "{what}: total_tasks");
+    assert_eq!(a.completed, b.completed, "{what}: completed");
+    assert_eq!(a.on_time, b.on_time, "{what}: on_time");
+    assert_eq!(a.fault_drops, b.fault_drops, "{what}: fault_drops");
+    assert_eq!(a.vq_residual, b.vq_residual, "{what}: vq_residual");
+    assert!(
+        (a.total_cost - b.total_cost).abs() < 1e-12,
+        "{what}: total_cost {} vs {}",
+        a.total_cost,
+        b.total_cost
+    );
+    assert_eq!(
+        a.latencies_ms.len(),
+        b.latencies_ms.len(),
+        "{what}: latency count"
+    );
+    for (i, (x, y)) in a.latencies_ms.iter().zip(&b.latencies_ms).enumerate() {
+        assert!((x - y).abs() < 1e-12, "{what}: latency[{i}] {x} vs {y}");
+    }
+}
+
+fn mid_trial_schedule(env: &SimEnv, opts: &SimOptions, rate: f64, seed: u64) -> FaultSchedule {
+    FaultSchedule::generate(
+        &env.topo,
+        opts.slots,
+        opts.slot_ms,
+        env.app.catalog.num_core(),
+        &FaultParams::from_rate(rate),
+        seed,
+    )
+}
+
+#[test]
+fn fault_replay_is_deterministic_on_both_engines() {
+    let cfg = small_cfg();
+    let seed = 41;
+    let env = SimEnv::build(&cfg, seed);
+    let opts = SimOptions::from_config(&cfg);
+    let trace = record_trace(&env, seed, &opts);
+    let schedule = mid_trial_schedule(&env, &opts, 0.01, 77);
+    assert!(!schedule.is_empty(), "rate 0.01 must generate events");
+
+    let s1 = run_trial_faulted(&env, &mut Proposal::new(), seed, &opts, &trace, &schedule);
+    let s2 = run_trial_faulted(&env, &mut Proposal::new(), seed, &opts, &trace, &schedule);
+    assert_identical(&s1, &s2, "slotted");
+
+    let dopts = DesOptions::from_sim(&opts);
+    let d1 = run_des_trial_faulted(&env, &mut Proposal::new(), seed, &dopts, &trace, &schedule);
+    let d2 = run_des_trial_faulted(&env, &mut Proposal::new(), seed, &dopts, &trace, &schedule);
+    assert_identical(&d1, &d2, "des");
+}
+
+#[test]
+fn zero_fault_schedule_changes_nothing() {
+    // The acceptance criterion behind `fmedge faults --rates 0,...`: an
+    // empty schedule reproduces the fault-free run exactly, per engine.
+    let cfg = small_cfg();
+    let seed = 43;
+    let env = SimEnv::build(&cfg, seed);
+    let opts = SimOptions::from_config(&cfg);
+    let trace = record_trace(&env, seed, &opts);
+    let empty = FaultSchedule::none();
+
+    let plain = run_trial_traced(&env, &mut Proposal::new(), seed, &opts, &trace);
+    let faulted = run_trial_faulted(&env, &mut Proposal::new(), seed, &opts, &trace, &empty);
+    assert_identical(&plain, &faulted, "slotted zero-fault");
+
+    let dopts = DesOptions::from_sim(&opts);
+    let dplain = run_des_trial(&env, &mut Proposal::new(), seed, &dopts, &trace);
+    let dfaulted = run_des_trial_faulted(&env, &mut Proposal::new(), seed, &dopts, &trace, &empty);
+    assert_identical(&dplain, &dfaulted, "des zero-fault");
+    assert_eq!(dplain.fault_drops, 0);
+}
+
+#[test]
+fn both_engines_agree_on_a_fixed_schedule() {
+    // The tentpole's paired check: identical admission and the same
+    // regime on the headline metric when both engines replay one
+    // handcrafted outage scenario (an ES dies mid-trial and recovers,
+    // a link flaps, a replica fail-stops).
+    let cfg = small_cfg();
+    let seed = 47;
+    let env = SimEnv::build(&cfg, seed);
+    let opts = SimOptions::from_config(&cfg);
+    let trace = record_trace(&env, seed, &opts);
+    let es = cfg.network.num_eds; // first edge server
+    let ms = opts.slot_ms;
+    let schedule = FaultSchedule::from_events(vec![
+        FaultEvent {
+            time_ms: 30.0 * ms,
+            kind: FaultKind::NodeDown { node: es },
+        },
+        FaultEvent {
+            time_ms: 40.0 * ms,
+            kind: FaultKind::LinkBandwidth { link: 0, factor: 0.3 },
+        },
+        FaultEvent {
+            time_ms: 55.0 * ms,
+            kind: FaultKind::CoreReplicaFail {
+                node: es + 1,
+                core_idx: 0,
+            },
+        },
+        FaultEvent {
+            time_ms: 60.0 * ms,
+            kind: FaultKind::NodeUp { node: es },
+        },
+        FaultEvent {
+            time_ms: 70.0 * ms,
+            kind: FaultKind::LinkBandwidth { link: 0, factor: 1.0 },
+        },
+    ]);
+
+    let dopts = DesOptions::from_sim(&opts);
+    let slotted_base = run_trial_traced(&env, &mut Proposal::new(), seed, &opts, &trace);
+    let des_base = run_des_trial(&env, &mut Proposal::new(), seed, &dopts, &trace);
+    let slotted = run_trial_faulted(&env, &mut Proposal::new(), seed, &opts, &trace, &schedule);
+    let des = run_des_trial_faulted(&env, &mut Proposal::new(), seed, &dopts, &trace, &schedule);
+    assert_eq!(slotted.total_tasks, trace.len(), "paired admission");
+    assert_eq!(des.total_tasks, trace.len(), "paired admission");
+    assert!(slotted.completion_rate() > 0.3, "slotted must keep serving");
+    assert!(des.completion_rate() > 0.3, "DES must keep serving");
+    // The meaningful agreement check is baseline-relative: each engine's
+    // *degradation* from its own no-fault run on this trace. The absolute
+    // rates legitimately differ between engines (the DES measures real
+    // queueing the slotted engine only bounds), but the damage a
+    // mid-trial outage does must land in the same regime — a broken
+    // fault path in either engine (e.g. silently losing or duplicating
+    // work) shows up here long before it would trip an absolute bound.
+    let slotted_drop = slotted_base.on_time_rate() - slotted.on_time_rate();
+    let des_drop = des_base.on_time_rate() - des.on_time_rate();
+    assert!(
+        slotted_drop > -0.10 && des_drop > -0.10,
+        "an outage must not improve an engine: slotted drop {slotted_drop}, DES drop {des_drop}"
+    );
+    assert!(
+        (slotted_drop - des_drop).abs() < 0.35,
+        "engines disagree on fault damage: slotted drop {slotted_drop} vs DES drop {des_drop}"
+    );
+    assert!(
+        (slotted.on_time_rate() - des.on_time_rate()).abs() < 0.45,
+        "engines diverge under faults: slotted {} vs DES {}",
+        slotted.on_time_rate(),
+        des.on_time_rate()
+    );
+    // Virtual queues still drain to empty with faults active.
+    assert_eq!(slotted.vq_residual, 0);
+    assert_eq!(des.vq_residual, 0);
+}
+
+#[test]
+fn outages_do_not_improve_on_time_rate() {
+    let cfg = small_cfg();
+    let seed = 53;
+    let env = SimEnv::build(&cfg, seed);
+    let opts = SimOptions::from_config(&cfg);
+    let trace = record_trace(&env, seed, &opts);
+    let baseline = run_trial_traced(&env, &mut Proposal::new(), seed, &opts, &trace);
+    let schedule = mid_trial_schedule(&env, &opts, 0.02, 101);
+    let faulted = run_trial_faulted(&env, &mut Proposal::new(), seed, &opts, &trace, &schedule);
+    assert_eq!(faulted.total_tasks, baseline.total_tasks);
+    // Fault handling re-randomizes some service draws, so allow noise —
+    // but a hostile schedule must not look materially better.
+    assert!(
+        faulted.on_time_rate() <= baseline.on_time_rate() + 0.10,
+        "faults cannot help: {} vs baseline {}",
+        faulted.on_time_rate(),
+        baseline.on_time_rate()
+    );
+}
+
+#[test]
+fn fault_oblivious_baseline_survives_replay() {
+    // LBRR never looks at the fault state; the engines must still refuse
+    // its dead-node routing and finish the trial cleanly.
+    let cfg = small_cfg();
+    let seed = 59;
+    let env = SimEnv::build(&cfg, seed);
+    let opts = SimOptions::from_config(&cfg);
+    let trace = record_trace(&env, seed, &opts);
+    let schedule = mid_trial_schedule(&env, &opts, 0.02, 303);
+    let slotted =
+        run_trial_faulted(&env, &mut LbrrStrategy::new(), seed, &opts, &trace, &schedule);
+    assert_eq!(slotted.total_tasks, trace.len());
+    assert_eq!(slotted.vq_residual, 0);
+    let des = run_des_trial_faulted(
+        &env,
+        &mut LbrrStrategy::new(),
+        seed,
+        &DesOptions::from_sim(&opts),
+        &trace,
+        &schedule,
+    );
+    assert_eq!(des.total_tasks, trace.len());
+    assert_eq!(des.vq_residual, 0);
+}
