@@ -8,6 +8,10 @@
 //!   and (optionally) validate measured sojourns against `g_{m,ε}(y)`.
 //! * `gtable` — build and print the effective-capacity delay table
 //!   (native or PJRT-accelerated with `--accel`).
+//! * `faults` — sweep failure rate × load grids under fault injection
+//!   and report degradation vs the no-fault baseline.
+//! * `sweep` — parallel experiment orchestrator for the EXPERIMENTS.md
+//!   grids (p1b/p2/p4/p5) with CSV/JSON artifacts.
 //! * `serve` — start the serving coordinator on a synthetic open-loop
 //!   workload and print the latency/throughput report.
 
@@ -181,6 +185,14 @@ COMMANDS:
             degradation vs the no-fault baseline (--rates R1,R2,...,
             --loads L1,L2,..., --strategies s1,s2,..., --trials N,
             --slots N, --seed N, --engine slotted|des, --config FILE)
+  sweep     parallel experiment orchestrator: run an EXPERIMENTS.md grid
+            end-to-end and write CSV/JSON artifacts
+            (--experiment p1b|p2|p4|p5, --threads N [bit-identical for
+            any N], --trials N, --slots N, --seed N, --out FILE.csv,
+            --json FILE.json; grid axes: --loads, --rates, --strategies,
+            --engines slotted,des, --epsilons, --scenarios; p5 scenario
+            names: baseline, diurnal, mmpp, flash-crowd, mobility,
+            commuter, zone-outage, cascade, rush-hour)
   serve     run the serving coordinator on a synthetic open-loop workload
             (--requests N, --rate RPS, --workers N, --no-real-compute)
 

@@ -1,0 +1,803 @@
+//! Experiment orchestration: seeded sweep grids, parallel execution, and
+//! artifact writers — `fmedge sweep` turns the EXPERIMENTS.md fill-in
+//! tables into one command.
+//!
+//! * [`runner::run_cells`] — scoped worker threads over grid cells; every
+//!   cell derives all of its randomness statelessly from
+//!   `(sweep_seed, grid coordinates, trial)` via [`stream_seed`], so the
+//!   output is **bit-identical for any `--threads`** (asserted in
+//!   `rust/tests/sweep.rs`).
+//! * [`stats::Welford`] — streaming mean/CI95 per reported column. The
+//!   orchestrator itself aggregates each cell's trials inline in the
+//!   owning worker (no cross-worker merging happens here); the exact
+//!   [`Welford::merge`] / [`Histogram::merge`] methods exist for pooling
+//!   partial aggregates across *separate runs* and are exercised in
+//!   tests.
+//! * [`table::Table`] — CSV/JSON artifact writers plus the NaN/empty-cell
+//!   gate CI enforces.
+//!
+//! Experiments ([`Experiment`]):
+//! * `p1b` — exact-placement node-LP A/B (dense rebuild vs warm revised
+//!   simplex) per seed. The `solve_ms` column is wall-clock and therefore
+//!   excluded from the bit-identity guarantee (it varies run to run even
+//!   serially); all solution columns are deterministic.
+//! * `p2`  — measured-vs-analytic bound validation: paired slotted + DES
+//!   runs per ε, pooled per-service violation rates.
+//! * `p4`  — fault-injection robustness grid
+//!   (engine × load × strategy × failure rate), with the retained-vs-rate-0
+//!   fraction computed per strategy.
+//! * `p5`  — scenario-robustness ensemble over the
+//!   [`crate::scenarios`] library (non-stationary arrivals, ED churn,
+//!   correlated outages) under both engines.
+
+mod runner;
+mod stats;
+mod table;
+
+pub use runner::{run_cells, run_grid2};
+pub use stats::{t_critical_95, Welford};
+pub use table::Table;
+
+use crate::baselines::{GaStrategy, LbrrStrategy, PropAvg, Proposal};
+use crate::config::ExperimentConfig;
+use crate::des::{pool, run_des_trial, run_des_trial_faulted, validate_bounds, DesOptions};
+use crate::faults::{FaultParams, FaultSchedule};
+use crate::ilp::NodeLpMode;
+use crate::metrics::Histogram;
+use crate::placement::{solve_static_placement, PlacementParams, QosScores, ScoreParams};
+use crate::rng::{stream_seed, Xoshiro256};
+use crate::scenarios::{CompiledScenario, ScenarioSpec};
+use crate::sim::{record_trace, run_trial_faulted, run_trial_traced, SimEnv, SimOptions, Strategy};
+use crate::workload::{Trace, WorkloadGenerator};
+
+/// Which EXPERIMENTS.md grid to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Experiment {
+    P1b,
+    P2,
+    P4,
+    P5,
+}
+
+impl Experiment {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "p1b" => Ok(Experiment::P1b),
+            "p2" => Ok(Experiment::P2),
+            "p4" => Ok(Experiment::P4),
+            "p5" => Ok(Experiment::P5),
+            other => Err(format!("unknown experiment `{other}` (p1b|p2|p4|p5)")),
+        }
+    }
+
+    /// Grid axes this experiment does NOT consume (lives next to the
+    /// `sweep_*` implementations so it can't drift from them — the CLI
+    /// warns rather than silently dropping an explicitly passed axis).
+    pub fn ignored_axes(self) -> &'static [&'static str] {
+        match self {
+            Experiment::P1b => &[
+                "loads",
+                "rates",
+                "epsilons",
+                "strategies",
+                "engines",
+                "scenarios",
+                "slots",
+            ],
+            Experiment::P2 => &["loads", "rates", "strategies", "engines", "scenarios"],
+            Experiment::P4 => &["epsilons", "scenarios"],
+            Experiment::P5 => &["loads", "rates", "epsilons"],
+        }
+    }
+}
+
+/// Simulation engine selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Engine {
+    Slotted,
+    Des,
+}
+
+impl Engine {
+    fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "slotted" => Ok(Engine::Slotted),
+            "des" => Ok(Engine::Des),
+            other => Err(format!("unknown engine `{other}` (slotted|des)")),
+        }
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            Engine::Slotted => "slotted",
+            Engine::Des => "des",
+        }
+    }
+}
+
+/// Instantiate a deployment strategy by its CLI name.
+pub fn strategy_by_name(name: &str) -> Result<Box<dyn Strategy>, String> {
+    Ok(match name {
+        "proposal" => Box::new(Proposal::new()),
+        "propavg" => Box::new(PropAvg::new()),
+        "lbrr" => Box::new(LbrrStrategy::new()),
+        "ga" => Box::new(GaStrategy::new(16, 12)),
+        other => return Err(format!("unknown strategy `{other}`")),
+    })
+}
+
+/// Sweep parameters (grid axes default per experiment; see
+/// [`SweepConfig::for_experiment`]).
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    pub experiment: Experiment,
+    /// Trials (p1b: solver instances) per grid cell.
+    pub trials: usize,
+    /// Horizon per trial, in slots.
+    pub slots: usize,
+    /// Root seed every per-cell/per-trial stream derives from.
+    pub seed: u64,
+    /// Worker threads (1 = the reference serial order).
+    pub threads: usize,
+    pub loads: Vec<f64>,
+    pub rates: Vec<f64>,
+    pub strategies: Vec<String>,
+    pub engines: Vec<String>,
+    /// p5: library scenario names (empty = full library).
+    pub scenarios: Vec<String>,
+    /// p2: ε targets.
+    pub epsilons: Vec<f64>,
+}
+
+impl SweepConfig {
+    /// The EXPERIMENTS.md grid for `experiment`.
+    pub fn for_experiment(experiment: Experiment) -> Self {
+        let base = SweepConfig {
+            experiment,
+            trials: 3,
+            slots: 200,
+            seed: 7,
+            threads: 1,
+            loads: vec![1.0, 2.0],
+            rates: vec![0.0, 0.002, 0.01],
+            strategies: vec!["proposal".into(), "lbrr".into(), "ga".into()],
+            engines: vec!["slotted".into(), "des".into()],
+            scenarios: Vec::new(),
+            epsilons: vec![0.05, 0.2],
+        };
+        match experiment {
+            Experiment::P1b => SweepConfig {
+                trials: 5,
+                ..base
+            },
+            Experiment::P2 => SweepConfig {
+                slots: 300,
+                strategies: vec!["proposal".into()],
+                ..base
+            },
+            Experiment::P4 => base,
+            // 400 slots -> arrivals run to slot 250, long enough for a
+            // full diurnal cycle, the flash crowd, and the commuter /
+            // rush-hour flips (at slots 60/100+) to land inside the
+            // arrival window rather than in the drain tail.
+            Experiment::P5 => SweepConfig {
+                slots: 400,
+                strategies: vec!["proposal".into()],
+                ..base
+            },
+        }
+    }
+}
+
+/// Stream tags (see [`stream_seed`]): the `stream` coordinate combines a
+/// per-purpose tag with the *values* of the grid axes a fixture depends
+/// on (load bits, rate bits, ε bits, scenario-name hash) — never with
+/// axis indices. Paired cells (same trace/schedule, different strategy
+/// or engine) therefore derive identical fixtures, distinct fixtures
+/// stay independent, and a named cell realizes the same trace/schedule
+/// whatever other axis entries the grid happens to contain (so a single
+/// row can be re-run in isolation and reproduced exactly).
+const TAG_P1B: u64 = 0x1B00;
+const TAG_P2: u64 = 0x2000;
+const TAG_P4_FIXTURE: u64 = 0x4000;
+const TAG_P4_SCHEDULE: u64 = 0x4500;
+const TAG_P5_ENV: u64 = 0x5000;
+const TAG_P5_SCENARIO: u64 = 0x5100;
+
+/// Tag-seeded FNV-1a fold: one definition so value-keyed and name-keyed
+/// stream coordinates cannot drift apart.
+fn fnv_stream(tag: u64, bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64 ^ tag;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
+
+/// Stream coordinate for a numeric axis *value* (load/rate/ε bits).
+fn axis_stream(tag: u64, value_bits: u64) -> u64 {
+    fnv_stream(tag, &value_bits.to_le_bytes())
+}
+
+/// Stream coordinate for a named axis entry (scenarios).
+fn name_stream(tag: u64, name: &str) -> u64 {
+    fnv_stream(tag, name.as_bytes())
+}
+
+/// Run the configured sweep and return its result table. Grid axes are
+/// validated up front; cells then run (possibly in parallel) and rows are
+/// assembled in grid order.
+pub fn run_sweep(base: &ExperimentConfig, sc: &SweepConfig) -> Result<Table, String> {
+    if sc.trials == 0 {
+        return Err("need at least one trial per cell".into());
+    }
+    // Rust's float parser accepts "nan"/"inf" and nothing downstream
+    // rejects a negative rate or an out-of-range ε until a worker panics
+    // deep inside SimEnv::build — validate the axes up front instead.
+    for (axis, vals) in [
+        ("loads", &sc.loads),
+        ("rates", &sc.rates),
+        ("epsilons", &sc.epsilons),
+    ] {
+        if let Some(bad) = vals.iter().find(|x| !x.is_finite() || **x < 0.0) {
+            return Err(format!(
+                "--{axis} contains an invalid value `{bad}` (need finite and >= 0)"
+            ));
+        }
+    }
+    if let Some(bad) = sc.epsilons.iter().find(|e| **e <= 0.0 || **e >= 1.0) {
+        return Err(format!("--epsilons must lie in (0, 1), got `{bad}`"));
+    }
+    match sc.experiment {
+        Experiment::P1b => sweep_p1b(base, sc),
+        Experiment::P2 => sweep_p2(base, sc),
+        Experiment::P4 => sweep_p4(base, sc),
+        Experiment::P5 => sweep_p5(base, sc),
+    }
+}
+
+fn f6(x: f64) -> String {
+    format!("{x:.6}")
+}
+
+// ---------------------------------------------------------------------
+// p1b — exact placement node-LP A/B (dense rebuild vs warm revised)
+// ---------------------------------------------------------------------
+
+fn sweep_p1b(base: &ExperimentConfig, sc: &SweepConfig) -> Result<Table, String> {
+    let modes = [
+        ("dense-rebuild", NodeLpMode::DenseRebuild),
+        ("warm-revised", NodeLpMode::WarmRevised),
+    ];
+    let cells: Vec<(usize, usize)> = (0..modes.len())
+        .flat_map(|m| (0..sc.trials).map(move |t| (m, t)))
+        .collect();
+    // The (env, scores) fixture depends only on the trial — build it
+    // once and share it across both mode cells (SimEnv::build includes
+    // the expensive g-table sampling; the A/B only varies the node-LP
+    // engine of the solve).
+    struct Fixture {
+        env: SimEnv,
+        scores: QosScores,
+    }
+    let fixtures = run_cells(sc.trials, sc.threads, |trial| {
+        let fseed = stream_seed(sc.seed, TAG_P1B, trial as u64);
+        let env = SimEnv::build(base, fseed);
+        let gen = WorkloadGenerator::new(
+            base,
+            &env.app,
+            &env.topo,
+            &mut Xoshiro256::seed_from(env.users_seed),
+        );
+        let scores = QosScores::compute(
+            &env.app,
+            &env.topo,
+            &env.dm,
+            gen.users(),
+            &ScoreParams::from_config(&base.controller),
+        );
+        Fixture { env, scores }
+    });
+    let results = run_cells(cells.len(), sc.threads, |i| {
+        let (mi, trial) = cells[i];
+        let fx = &fixtures[trial];
+        let mut params = PlacementParams::from_config(base, base.sim.slots);
+        params.exact = true;
+        params.node_lp = modes[mi].1;
+        let t0 = std::time::Instant::now();
+        let sol = solve_static_placement(&fx.env.app, &fx.env.topo, &fx.scores, &params);
+        let dt = t0.elapsed();
+        vec![
+            modes[mi].0.to_string(),
+            trial.to_string(),
+            format!("{:.3}", sol.objective),
+            sol.total_instances().to_string(),
+            sol.support.to_string(),
+            format!("{:.3}", dt.as_secs_f64() * 1e3),
+        ]
+    });
+    let mut table = Table::new(
+        "p1b — exact placement: dense-rebuild vs warm-revised node LPs",
+        &["mode", "instance", "objective", "instances", "support", "solve_ms"],
+    );
+    for row in results {
+        table.push_row(row);
+    }
+    Ok(table)
+}
+
+// ---------------------------------------------------------------------
+// p2 — measured-vs-analytic bound validation (paired slotted + DES)
+// ---------------------------------------------------------------------
+
+fn sweep_p2(base: &ExperimentConfig, sc: &SweepConfig) -> Result<Table, String> {
+    // Parallelize over (epsilon, trial) — the paired slotted+DES runs
+    // are the expensive part, and each has its own stateless stream, so
+    // flattening keeps bit-identity while actually using the workers
+    // (per-epsilon cells alone would cap concurrency at the handful of
+    // ε targets). Per-epsilon aggregation below is exact merging.
+    struct TrialOut {
+        vals: Vec<crate::des::ServiceValidation>,
+        slotted: f64,
+        des: f64,
+    }
+    let groups = run_grid2(sc.epsilons.len(), sc.trials, sc.threads, |ei, trial| {
+        let mut cfg = base.clone();
+        cfg.sim.slots = sc.slots;
+        cfg.controller.epsilon = sc.epsilons[ei];
+        let fseed = stream_seed(
+            sc.seed,
+            axis_stream(TAG_P2, sc.epsilons[ei].to_bits()),
+            trial as u64,
+        );
+        let env = SimEnv::build(&cfg, fseed);
+        let opts = SimOptions::from_config(&cfg);
+        let trace = record_trace(&env, fseed, &opts);
+        let s = run_trial_traced(&env, &mut Proposal::new(), fseed, &opts, &trace);
+        let d = run_des_trial(
+            &env,
+            &mut Proposal::new(),
+            fseed,
+            &DesOptions::from_sim(&opts),
+            &trace,
+        );
+        TrialOut {
+            vals: validate_bounds(&env.gtable, &d),
+            slotted: s.on_time_rate(),
+            des: d.on_time_rate(),
+        }
+    });
+
+    struct Cell {
+        services: usize,
+        holding: usize,
+        worst_rate: f64,
+        slotted: Welford,
+        des: Welford,
+    }
+    let results: Vec<Cell> = groups
+        .iter()
+        .map(|group| {
+            let vals: Vec<Vec<crate::des::ServiceValidation>> =
+                group.iter().map(|t| t.vals.clone()).collect();
+            let pooled = pool(&vals);
+            // Zero-sample services are trivially holding (violation rate
+            // 0), so holds() alone covers them.
+            let holding = pooled.iter().filter(|v| v.holds(0.05)).count();
+            let worst = pooled
+                .iter()
+                .map(|v| v.violation_rate())
+                .fold(0.0f64, f64::max);
+            let mut slotted_w = Welford::new();
+            let mut des_w = Welford::new();
+            for t in group {
+                slotted_w.push(t.slotted);
+                des_w.push(t.des);
+            }
+            Cell {
+                services: pooled.len(),
+                holding,
+                worst_rate: worst,
+                slotted: slotted_w,
+                des: des_w,
+            }
+        })
+        .collect();
+    let mut table = Table::new(
+        "p2 — measured-vs-analytic delay bounds (paired engines)",
+        &[
+            "epsilon",
+            "trials",
+            "services",
+            "holding",
+            "worst_rate",
+            "slotted_on_time",
+            "slotted_ci95",
+            "des_on_time",
+            "des_ci95",
+        ],
+    );
+    for (ei, c) in results.into_iter().enumerate() {
+        table.push_row(vec![
+            format!("{:.3}", sc.epsilons[ei]),
+            sc.trials.to_string(),
+            c.services.to_string(),
+            c.holding.to_string(),
+            f6(c.worst_rate),
+            f6(c.slotted.mean()),
+            f6(c.slotted.ci95_half()),
+            f6(c.des.mean()),
+            f6(c.des.ci95_half()),
+        ]);
+    }
+    Ok(table)
+}
+
+// ---------------------------------------------------------------------
+// p4 — fault-injection robustness grid
+// ---------------------------------------------------------------------
+
+fn sweep_p4(base: &ExperimentConfig, sc: &SweepConfig) -> Result<Table, String> {
+    let engines: Vec<Engine> = sc
+        .engines
+        .iter()
+        .map(|e| Engine::parse(e))
+        .collect::<Result<_, _>>()?;
+    for s in &sc.strategies {
+        strategy_by_name(s)?; // validate names before spawning workers
+    }
+    let mut rates = sc.rates.clone();
+    rates.sort_by(f64::total_cmp);
+
+    // Grid order (also row order): engine, load, strategy, rate.
+    let mut cells = Vec::new();
+    for ei in 0..engines.len() {
+        for li in 0..sc.loads.len() {
+            for si in 0..sc.strategies.len() {
+                for ri in 0..rates.len() {
+                    cells.push((ei, li, si, ri));
+                }
+            }
+        }
+    }
+    // Fixture (env + trace) is keyed by (load, trial) only, so every
+    // engine, strategy, and rate replays the same realized workload —
+    // the §P4 pairing. Build each fixture once and share it by reference
+    // across cells instead of rebuilding it in all of them; the builds
+    // themselves go through `run_cells` (SimEnv::build includes the
+    // expensive g-table sampling, and the seeds are stateless, so
+    // building in parallel changes nothing).
+    struct Fixture {
+        seed: u64,
+        env: SimEnv,
+        opts: SimOptions,
+        trace: Trace,
+    }
+    let fixtures = run_grid2(sc.loads.len(), sc.trials, sc.threads, |li, trial| {
+        let mut cfg = base.clone();
+        cfg.sim.slots = sc.slots;
+        cfg.sim.load_multiplier = sc.loads[li];
+        let fseed = stream_seed(
+            sc.seed,
+            axis_stream(TAG_P4_FIXTURE, sc.loads[li].to_bits()),
+            trial as u64,
+        );
+        let env = SimEnv::build(&cfg, fseed);
+        let opts = SimOptions::from_config(&cfg);
+        let trace = record_trace(&env, fseed, &opts);
+        Fixture {
+            seed: fseed,
+            env,
+            opts,
+            trace,
+        }
+    });
+
+    struct Cell {
+        on_time: Welford,
+        drops: usize,
+        tasks: usize,
+    }
+    let results = run_cells(cells.len(), sc.threads, |i| {
+        let (ei, li, si, ri) = cells[i];
+        let rate = rates[ri];
+        // Schedule stream root keyed by the (rate, load) *values* through
+        // a nested stream_seed — value keys cannot alias across cells and
+        // keep a cell's schedule stable whatever else is in the grid.
+        let sched_root = stream_seed(
+            sc.seed,
+            axis_stream(TAG_P4_SCHEDULE, rate.to_bits()),
+            sc.loads[li].to_bits(),
+        );
+        let mut on_time = Welford::new();
+        let mut drops = 0usize;
+        let mut tasks = 0usize;
+        for (trial, fx) in fixtures[li].iter().enumerate() {
+            // The schedule adds the rate key on top of the shared fixture.
+            let schedule = if rate > 0.0 {
+                FaultSchedule::generate(
+                    &fx.env.topo,
+                    fx.opts.slots,
+                    fx.opts.slot_ms,
+                    fx.env.app.catalog.num_core(),
+                    &FaultParams::from_rate(rate),
+                    stream_seed(sched_root, 0, trial as u64),
+                )
+            } else {
+                FaultSchedule::none()
+            };
+            let mut strategy = strategy_by_name(&sc.strategies[si]).expect("validated");
+            let m = match engines[ei] {
+                Engine::Slotted => run_trial_faulted(
+                    &fx.env,
+                    strategy.as_mut(),
+                    fx.seed,
+                    &fx.opts,
+                    &fx.trace,
+                    &schedule,
+                ),
+                Engine::Des => run_des_trial_faulted(
+                    &fx.env,
+                    strategy.as_mut(),
+                    fx.seed,
+                    &DesOptions::from_sim(&fx.opts),
+                    &fx.trace,
+                    &schedule,
+                ),
+            };
+            on_time.push(m.on_time_rate());
+            drops += m.fault_drops;
+            tasks += m.total_tasks;
+        }
+        Cell {
+            on_time,
+            drops,
+            tasks,
+        }
+    });
+
+    // "retained" = mean on-time at rate r over the same (engine, load,
+    // strategy)'s rate-0 baseline — "-" when the grid has no rate 0.
+    let mut table = Table::new(
+        "p4 — robustness grid (failure rate x load, paired traces)",
+        &[
+            "engine",
+            "load",
+            "fail_rate",
+            "strategy",
+            "trials",
+            "tasks",
+            "on_time_mean",
+            "on_time_ci95",
+            "retained",
+            "fault_drops",
+        ],
+    );
+    for (i, c) in results.iter().enumerate() {
+        let (ei, li, si, ri) = cells[i];
+        let baseline = cells
+            .iter()
+            .position(|&(e2, l2, s2, r2)| {
+                e2 == ei && l2 == li && s2 == si && rates[r2] == 0.0
+            })
+            .map(|j| results[j].on_time.mean());
+        // Undefined ("-") when the grid has no rate-0 anchor OR the
+        // anchor itself completed nothing on time — a 0/0 ratio must not
+        // masquerade as full retention.
+        let retained = match baseline {
+            Some(b) if b > 0.0 => format!("{:.4}", c.on_time.mean() / b),
+            _ => "-".to_string(),
+        };
+        table.push_row(vec![
+            engines[ei].name().to_string(),
+            format!("{:.2}", sc.loads[li]),
+            format!("{:.4}", rates[ri]),
+            sc.strategies[si].clone(),
+            sc.trials.to_string(),
+            c.tasks.to_string(),
+            f6(c.on_time.mean()),
+            f6(c.on_time.ci95_half()),
+            retained,
+            c.drops.to_string(),
+        ]);
+    }
+    Ok(table)
+}
+
+// ---------------------------------------------------------------------
+// p5 — scenario-robustness ensemble (the scenario library, both engines)
+// ---------------------------------------------------------------------
+
+fn sweep_p5(base: &ExperimentConfig, sc: &SweepConfig) -> Result<Table, String> {
+    let engines: Vec<Engine> = sc
+        .engines
+        .iter()
+        .map(|e| Engine::parse(e))
+        .collect::<Result<_, _>>()?;
+    for s in &sc.strategies {
+        strategy_by_name(s)?;
+    }
+    let specs: Vec<ScenarioSpec> = if sc.scenarios.is_empty() {
+        ScenarioSpec::library()
+    } else {
+        sc.scenarios
+            .iter()
+            .map(|n| {
+                ScenarioSpec::by_name(n).ok_or_else(|| format!("unknown scenario `{n}`"))
+            })
+            .collect::<Result<_, _>>()?
+    };
+
+    let mut cells = Vec::new();
+    for sci in 0..specs.len() {
+        for ei in 0..engines.len() {
+            for si in 0..sc.strategies.len() {
+                cells.push((sci, ei, si));
+            }
+        }
+    }
+    // One environment per trial, shared by EVERY scenario (and engine
+    // and strategy): §P5 compares each scenario's row against the
+    // baseline scenario's, so rows must differ only by scenario, never
+    // by environment realization. Only the scenario compilation stream
+    // is keyed by the scenario index. Builds go through `run_cells`
+    // (stateless seeds, so parallel building changes nothing).
+    let mut cfg = base.clone();
+    cfg.sim.slots = sc.slots;
+    let envs = run_cells(sc.trials, sc.threads, |trial| {
+        let eseed = stream_seed(sc.seed, TAG_P5_ENV, trial as u64);
+        let env = SimEnv::build(&cfg, eseed);
+        let opts = SimOptions::from_config(&cfg);
+        (eseed, env, opts)
+    });
+    // Compile streams are keyed by the scenario *name*, so one scenario's
+    // rows reproduce exactly under any --scenarios subset.
+    let compiled: Vec<Vec<CompiledScenario>> =
+        run_grid2(specs.len(), sc.trials, sc.threads, |sci, trial| {
+            let (_, env, opts) = &envs[trial];
+            let cseed = stream_seed(
+                sc.seed,
+                name_stream(TAG_P5_SCENARIO, &specs[sci].name),
+                trial as u64,
+            );
+            specs[sci].compile(env, opts, cseed)
+        });
+
+    struct Cell {
+        on_time: Welford,
+        completion: Welford,
+        drops: usize,
+        tasks: usize,
+        moves: usize,
+        latency: Histogram,
+    }
+    let results = run_cells(cells.len(), sc.threads, |i| {
+        let (sci, ei, si) = cells[i];
+        let mut on_time = Welford::new();
+        let mut completion = Welford::new();
+        let mut drops = 0usize;
+        let mut tasks = 0usize;
+        let mut moves = 0usize;
+        let mut latency = Histogram::latency_ms();
+        for (trial, cs) in compiled[sci].iter().enumerate() {
+            let (eseed, env, opts) = &envs[trial];
+            let mut strategy = strategy_by_name(&sc.strategies[si]).expect("validated");
+            let m = match engines[ei] {
+                Engine::Slotted => run_trial_faulted(
+                    env,
+                    strategy.as_mut(),
+                    *eseed,
+                    opts,
+                    &cs.trace,
+                    &cs.faults,
+                ),
+                Engine::Des => run_des_trial_faulted(
+                    env,
+                    strategy.as_mut(),
+                    *eseed,
+                    &DesOptions::from_sim(opts),
+                    &cs.trace,
+                    &cs.faults,
+                ),
+            };
+            on_time.push(m.on_time_rate());
+            completion.push(m.completion_rate());
+            drops += m.fault_drops;
+            tasks += m.total_tasks;
+            moves += cs.user_moves;
+            for &l in &m.latencies_ms {
+                latency.record(l);
+            }
+        }
+        Cell {
+            on_time,
+            completion,
+            drops,
+            tasks,
+            moves,
+            latency,
+        }
+    });
+    let mut table = Table::new(
+        "p5 — scenario robustness (non-stationary arrivals, churn, correlated outages)",
+        &[
+            "scenario",
+            "engine",
+            "strategy",
+            "trials",
+            "tasks",
+            "on_time_mean",
+            "on_time_ci95",
+            "completion_mean",
+            "fault_drops",
+            "user_moves",
+            "lat_p95_ms",
+        ],
+    );
+    for (i, c) in results.iter().enumerate() {
+        let (sci, ei, si) = cells[i];
+        table.push_row(vec![
+            specs[sci].name.clone(),
+            engines[ei].name().to_string(),
+            sc.strategies[si].clone(),
+            sc.trials.to_string(),
+            c.tasks.to_string(),
+            f6(c.on_time.mean()),
+            f6(c.on_time.ci95_half()),
+            f6(c.completion.mean()),
+            c.drops.to_string(),
+            c.moves.to_string(),
+            // "-" when no task completed in the cell — 0.000 would read
+            // as an (impossibly) perfect p95 rather than "no data".
+            match c.latency.quantile(0.95) {
+                Some(q) => format!("{q:.3}"),
+                None => "-".to_string(),
+            },
+        ]);
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn experiment_names_parse() {
+        assert_eq!(Experiment::parse("p1b").unwrap(), Experiment::P1b);
+        assert_eq!(Experiment::parse("P4").unwrap(), Experiment::P4);
+        assert!(Experiment::parse("p3").is_err());
+    }
+
+    #[test]
+    fn strategy_factory_covers_the_cli_names() {
+        for name in ["proposal", "propavg", "lbrr", "ga"] {
+            assert!(strategy_by_name(name).is_ok(), "{name}");
+        }
+        assert!(strategy_by_name("nope").is_err());
+    }
+
+    #[test]
+    fn default_grids_are_nonempty() {
+        for e in [Experiment::P1b, Experiment::P2, Experiment::P4, Experiment::P5] {
+            let sc = SweepConfig::for_experiment(e);
+            assert!(sc.trials > 0);
+            assert!(!sc.engines.is_empty());
+        }
+    }
+
+    #[test]
+    fn bad_axis_names_error_before_running() {
+        let cfg = ExperimentConfig::paper_default();
+        let mut sc = SweepConfig::for_experiment(Experiment::P4);
+        sc.strategies = vec!["bogus".into()];
+        assert!(run_sweep(&cfg, &sc).unwrap_err().contains("bogus"));
+        let mut sc = SweepConfig::for_experiment(Experiment::P5);
+        sc.scenarios = vec!["no-such".into()];
+        assert!(run_sweep(&cfg, &sc).unwrap_err().contains("no-such"));
+        let mut sc = SweepConfig::for_experiment(Experiment::P4);
+        sc.engines = vec!["warp".into()];
+        assert!(run_sweep(&cfg, &sc).unwrap_err().contains("warp"));
+    }
+}

@@ -1,0 +1,102 @@
+//! The parallel cell runner: scoped worker threads over a seeded grid.
+//!
+//! Determinism contract: the cell function receives only its cell index,
+//! and every random stream a cell uses must be derived statelessly from
+//! `(sweep_seed, cell coordinates, trial)` via [`crate::rng::stream_seed`].
+//! Under that contract `run_cells` returns bit-identical results for any
+//! thread count — workers race only over *which* cell they pull next,
+//! never over what a cell computes, and results are re-ordered by cell
+//! index before returning.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Evaluate `f(0..n)` with up to `threads` workers; results in cell
+/// order. `threads <= 1` runs inline (the reference serial order). A
+/// panic in any cell propagates (the scope joins all workers first).
+pub fn run_cells<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = threads.max(1).min(n.max(1));
+    if workers <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<(usize, T)>> = Mutex::new(Vec::with_capacity(n));
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i);
+                results.lock().unwrap().push((i, r));
+            });
+        }
+    });
+    let mut v = results.into_inner().unwrap();
+    v.sort_by_key(|&(i, _)| i);
+    debug_assert_eq!(v.len(), n);
+    v.into_iter().map(|(_, r)| r).collect()
+}
+
+/// Evaluate `f(outer, inner)` over the full `outer x inner` grid with up
+/// to `threads` workers, returning results grouped by outer index (each
+/// group in inner order). Encodes the flatten/re-chunk pairing in one
+/// place so callers cannot misalign the two sides. `inner` must be > 0.
+pub fn run_grid2<T, F>(outer: usize, inner: usize, threads: usize, f: F) -> Vec<Vec<T>>
+where
+    T: Send,
+    F: Fn(usize, usize) -> T + Sync,
+{
+    assert!(inner > 0, "run_grid2 needs a nonempty inner axis");
+    let flat = run_cells(outer * inner, threads, |i| f(i / inner, i % inner));
+    let mut it = flat.into_iter();
+    (0..outer)
+        .map(|_| it.by_ref().take(inner).collect())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_matches_serial_in_order() {
+        let f = |i: usize| (i as u64).wrapping_mul(0x9E37_79B9) % 1013;
+        let serial = run_cells(57, 1, f);
+        for threads in [2, 4, 8] {
+            let par = run_cells(57, threads, f);
+            assert_eq!(serial, par, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_grid_is_fine() {
+        let v: Vec<u32> = run_cells(0, 4, |_| 1);
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn more_threads_than_cells_is_fine() {
+        let v = run_cells(3, 64, |i| i * 2);
+        assert_eq!(v, vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn grid2_groups_align_with_coordinates() {
+        let g = run_grid2(3, 4, 4, |o, i| (o, i));
+        assert_eq!(g.len(), 3);
+        for (o, group) in g.iter().enumerate() {
+            assert_eq!(group.len(), 4);
+            for (i, &cell) in group.iter().enumerate() {
+                assert_eq!(cell, (o, i), "misaligned at ({o},{i})");
+            }
+        }
+        // Degenerate outer axis is fine.
+        assert!(run_grid2(0, 2, 2, |o, i| (o, i)).is_empty());
+    }
+}

@@ -1,0 +1,169 @@
+//! Streaming trial statistics: Welford accumulation with exact merging
+//! and Student-t 95% confidence intervals.
+//!
+//! The sweep orchestrator aggregates per-trial metrics without keeping
+//! the raw samples: one [`Welford`] per reported column. Accumulators are
+//! mergeable (Chan et al.'s pairwise update), so partial aggregates
+//! computed anywhere can be combined without changing the result — the
+//! same property [`crate::metrics::Histogram::merge`] gives the latency
+//! distributions.
+
+/// Streaming mean/variance accumulator (Welford's algorithm).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+/// Two-sided 97.5% Student-t critical values for 1..=30 degrees of
+/// freedom; larger dof use the normal approximation.
+const T_975: [f64; 30] = [
+    12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228, 2.201, 2.179, 2.160,
+    2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086, 2.080, 2.074, 2.069, 2.064, 2.060, 2.056,
+    2.052, 2.048, 2.045, 2.042,
+];
+
+/// t-critical value for a 95% CI at `dof` degrees of freedom.
+pub fn t_critical_95(dof: u64) -> f64 {
+    match dof {
+        0 => f64::INFINITY,
+        d if d <= 30 => T_975[(d - 1) as usize],
+        _ => 1.96,
+    }
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Accumulate one observation.
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    /// Merge another accumulator (Chan et al.): the result is exactly the
+    /// accumulator of the concatenated sample, up to float rounding.
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = *other;
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        self.mean += d * other.n as f64 / n as f64;
+        self.m2 += other.m2 + d * d * (self.n as f64 * other.n as f64) / n as f64;
+        self.n = n;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+
+    /// Sample variance (n-1 denominator); 0 for fewer than two samples.
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            // m2 can go infinitesimally negative through float rounding.
+            (self.m2 / (self.n - 1) as f64).max(0.0)
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    /// Half-width of the 95% confidence interval on the mean (Student-t);
+    /// 0 for fewer than two samples.
+    pub fn ci95_half(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        t_critical_95(self.n - 1) * (self.var() / self.n as f64).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_direct_mean_and_variance() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert_eq!(w.count(), 8);
+        assert!((w.mean() - 5.0).abs() < 1e-12);
+        // Sample variance of this classic set is 32/7.
+        assert!((w.var() - 32.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_equals_pooled_stream() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64 * 0.37).sin() * 3.0 + 1.0).collect();
+        let mut pooled = Welford::new();
+        for &x in &xs {
+            pooled.push(x);
+        }
+        let mut a = Welford::new();
+        let mut b = Welford::new();
+        for &x in &xs[..33] {
+            a.push(x);
+        }
+        for &x in &xs[33..] {
+            b.push(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), pooled.count());
+        assert!((a.mean() - pooled.mean()).abs() < 1e-12);
+        assert!((a.var() - pooled.var()).abs() < 1e-9);
+        // Merging an empty accumulator changes nothing, either way.
+        let mut c = Welford::new();
+        c.merge(&pooled);
+        assert!((c.mean() - pooled.mean()).abs() < 1e-12);
+        pooled.merge(&Welford::new());
+        assert!((pooled.mean() - c.mean()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ci_is_zero_then_shrinks() {
+        let mut w = Welford::new();
+        w.push(1.0);
+        assert_eq!(w.ci95_half(), 0.0, "one sample: no interval");
+        w.push(3.0);
+        let wide = w.ci95_half();
+        assert!(wide > 0.0);
+        // More samples at the same spread tighten the interval.
+        for _ in 0..50 {
+            w.push(1.0);
+            w.push(3.0);
+        }
+        assert!(w.ci95_half() < wide / 3.0);
+    }
+
+    #[test]
+    fn t_table_edges() {
+        assert_eq!(t_critical_95(0), f64::INFINITY);
+        assert!((t_critical_95(1) - 12.706).abs() < 1e-9);
+        assert!((t_critical_95(30) - 2.042).abs() < 1e-9);
+        assert!((t_critical_95(1000) - 1.96).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,207 @@
+//! Result tables: the sweep's artifact format.
+//!
+//! A [`Table`] is the deterministic, schedule-independent product of a
+//! sweep: rows are assembled in grid order whatever the thread count, and
+//! every value is pre-formatted text, so "parallel equals serial" can be
+//! asserted byte-for-byte on [`Table::to_csv`]. Writers cover CSV (the
+//! CI artifact) and JSON (machine consumption); [`Table::validate`] is
+//! the NaN/empty gate the `fmedge sweep` command enforces before writing
+//! anything.
+
+/// A named result table with a fixed column schema.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Table {
+    pub name: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(name: &str, headers: &[&str]) -> Self {
+        Table {
+            name: name.to_string(),
+            headers: headers.iter().map(|h| h.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append one row (must match the header arity — checked by
+    /// [`Table::validate`], not here, so partially-built tables can be
+    /// inspected).
+    pub fn push_row(&mut self, row: Vec<String>) {
+        self.rows.push(row);
+    }
+
+    /// Well-formedness gate: every row matches the header arity, no cell
+    /// is empty, and no numeric cell is NaN/inf. A sweep whose table
+    /// fails this must not publish artifacts — an empty or NaN cell means
+    /// a grid point silently produced garbage.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.rows.is_empty() {
+            return Err(format!("table `{}` has no rows", self.name));
+        }
+        for (i, row) in self.rows.iter().enumerate() {
+            if row.len() != self.headers.len() {
+                return Err(format!(
+                    "table `{}` row {i}: {} cells, expected {}",
+                    self.name,
+                    row.len(),
+                    self.headers.len()
+                ));
+            }
+            for (j, cell) in row.iter().enumerate() {
+                if cell.trim().is_empty() {
+                    return Err(format!(
+                        "table `{}` row {i} column `{}`: empty cell",
+                        self.name, self.headers[j]
+                    ));
+                }
+                let lower = cell.to_ascii_lowercase();
+                if lower.contains("nan") || lower.contains("inf") {
+                    return Err(format!(
+                        "table `{}` row {i} column `{}`: non-finite value `{cell}`",
+                        self.name, self.headers[j]
+                    ));
+                }
+                if cell.contains(',') || cell.contains('\n') {
+                    return Err(format!(
+                        "table `{}` row {i} column `{}`: `{cell}` would corrupt CSV",
+                        self.name, self.headers[j]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Plain CSV (no quoting — [`Table::validate`] rejects cells that
+    /// would need it).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&self.headers.join(","));
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&row.join(","));
+            s.push('\n');
+        }
+        s
+    }
+
+    /// JSON array of objects, all values as strings.
+    pub fn to_json(&self) -> String {
+        let esc = |v: &str| v.replace('\\', "\\\\").replace('"', "\\\"");
+        let mut s = String::from("[\n");
+        for (i, row) in self.rows.iter().enumerate() {
+            s.push_str("  {");
+            for (j, (h, v)) in self.headers.iter().zip(row).enumerate() {
+                if j > 0 {
+                    s.push_str(", ");
+                }
+                s.push_str(&format!("\"{}\": \"{}\"", esc(h), esc(v)));
+            }
+            s.push('}');
+            if i + 1 < self.rows.len() {
+                s.push(',');
+            }
+            s.push('\n');
+        }
+        s.push(']');
+        s
+    }
+
+    /// Column-aligned text for terminal reports.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (j, cell) in row.iter().enumerate() {
+                if j < widths.len() {
+                    widths[j] = widths[j].max(cell.len());
+                }
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::new();
+            for (j, cell) in cells.iter().enumerate() {
+                let w = widths.get(j).copied().unwrap_or(cell.len());
+                line.push_str(&format!("{cell:<w$}"));
+                if j + 1 < cells.len() {
+                    line.push_str("  ");
+                }
+            }
+            line.trim_end().to_string()
+        };
+        let mut out = format!("== {} ==\n", self.name);
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len().saturating_sub(1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the CSV artifact.
+    pub fn save_csv(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_csv())
+    }
+
+    /// Write the JSON artifact.
+    pub fn save_json(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.push_row(vec!["1".into(), "2.50".into()]);
+        t.push_row(vec!["x".into(), "0.000001".into()]);
+        t
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let t = sample();
+        assert!(t.validate().is_ok());
+        let csv = t.to_csv();
+        assert_eq!(csv, "a,b\n1,2.50\nx,0.000001\n");
+    }
+
+    #[test]
+    fn json_is_an_object_array() {
+        let j = sample().to_json();
+        assert!(j.starts_with('['));
+        assert!(j.contains("\"a\": \"1\""));
+        assert!(j.trim_end().ends_with(']'));
+    }
+
+    #[test]
+    fn validate_catches_nan_empty_and_arity() {
+        let mut t = sample();
+        t.push_row(vec!["NaN".into(), "3".into()]);
+        assert!(t.validate().unwrap_err().contains("non-finite"));
+        let mut t = sample();
+        t.push_row(vec!["".into(), "3".into()]);
+        assert!(t.validate().unwrap_err().contains("empty cell"));
+        let mut t = sample();
+        t.push_row(vec!["only-one".into()]);
+        assert!(t.validate().unwrap_err().contains("expected 2"));
+        let t = Table::new("hollow", &["a"]);
+        assert!(t.validate().unwrap_err().contains("no rows"));
+        let mut t = sample();
+        t.push_row(vec!["a,b".into(), "3".into()]);
+        assert!(t.validate().unwrap_err().contains("corrupt CSV"));
+    }
+
+    #[test]
+    fn render_aligns_columns() {
+        let r = sample().render();
+        assert!(r.contains("== demo =="));
+        assert!(r.lines().count() >= 4);
+    }
+}

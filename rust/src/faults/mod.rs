@@ -47,6 +47,7 @@ mod dynamic;
 mod schedule;
 
 pub use dynamic::DynamicTopology;
+pub(crate) use schedule::geometric_slots;
 pub use schedule::{FaultEvent, FaultKind, FaultParams, FaultSchedule};
 
 #[cfg(test)]

@@ -69,6 +69,14 @@ impl FaultParams {
     }
 }
 
+/// Geometric-ish duration draw: ceil of an exponential with the given
+/// mean (mean floored at 1), at least one slot. Shared by the
+/// independent generator below, the scenarios' correlated fault
+/// templates, and the mobility dwell times.
+pub(crate) fn geometric_slots<R: Rng + ?Sized>(rng: &mut R, mean: f64) -> usize {
+    ((-rng.next_f64_open().ln() * mean.max(1.0)).ceil() as usize).max(1)
+}
+
 /// A time-sorted, replayable fault schedule.
 #[derive(Clone, Debug, Default)]
 pub struct FaultSchedule {
@@ -125,12 +133,8 @@ impl FaultSchedule {
         let mut degrade_until = vec![0usize; nl];
         let mut down_now = 0usize;
 
-        let duration = |rng: &mut Xoshiro256| -> usize {
-            // Geometric with the configured mean, floored at one slot.
-            let u = rng.next_f64_open();
-            let mean = params.mean_outage_slots.max(1.0);
-            ((-u.ln() * mean).ceil() as usize).max(1)
-        };
+        let duration =
+            |rng: &mut Xoshiro256| geometric_slots(rng, params.mean_outage_slots);
 
         for slot in 0..slots {
             let t = slot as f64 * slot_ms;

@@ -50,6 +50,9 @@ pub mod placement;
 pub mod routing;
 pub mod sim;
 
+pub mod exp;
+pub mod scenarios;
+
 pub mod coordinator;
 pub mod runtime;
 

@@ -2,11 +2,11 @@
 
 use std::time::Instant;
 
-use fmedge::baselines::{GaStrategy, LbrrStrategy, PropAvg, Proposal};
 use fmedge::cli::{Args, HELP};
 use fmedge::config::ExperimentConfig;
 use fmedge::coordinator::{BatchPolicy, Coordinator, Request, ServeConfig};
 use fmedge::des::{pool, report, run_des_trial, run_des_trial_faulted, validate_bounds, DesOptions};
+use fmedge::exp::{run_sweep, strategy_by_name, Experiment, SweepConfig};
 use fmedge::faults::{FaultParams, FaultSchedule};
 use fmedge::metrics::Summary;
 use fmedge::placement::{solve_static_placement, PlacementParams, QosScores, ScoreParams};
@@ -34,6 +34,7 @@ fn main() {
         "simulate" => cmd_simulate(&args),
         "des" => cmd_des(&args),
         "faults" => cmd_faults(&args),
+        "sweep" => cmd_sweep(&args),
         "serve" => cmd_serve(&args),
         other => {
             eprintln!("unknown command `{other}`\n\n{HELP}");
@@ -138,13 +139,7 @@ fn cmd_gtable(args: &Args) -> Result<(), AnyError> {
 }
 
 fn make_strategy(name: &str) -> Result<Box<dyn Strategy>, AnyError> {
-    Ok(match name {
-        "proposal" => Box::new(Proposal::new()),
-        "propavg" => Box::new(PropAvg::new()),
-        "lbrr" => Box::new(LbrrStrategy::new()),
-        "ga" => Box::new(GaStrategy::new(16, 12)),
-        other => return Err(format!("unknown strategy `{other}`").into()),
-    })
+    strategy_by_name(name).map_err(Into::into)
 }
 
 fn cmd_simulate(args: &Args) -> Result<(), AnyError> {
@@ -380,6 +375,70 @@ fn cmd_faults(args: &Args) -> Result<(), AnyError> {
         }
     }
     println!("\nsweep finished in {:?}", t0.elapsed());
+    Ok(())
+}
+
+/// `fmedge sweep`: the parallel experiment orchestrator. Runs one of the
+/// EXPERIMENTS.md grids (p1b/p2/p4/p5) end-to-end over scoped worker
+/// threads and writes CSV/JSON artifacts. Every per-cell/per-trial RNG
+/// stream is derived statelessly from `--seed` and the grid coordinates,
+/// so the output is bit-identical for any `--threads` (wall-clock
+/// columns like p1b's `solve_ms` excepted — those vary run to run even
+/// serially).
+fn cmd_sweep(args: &Args) -> Result<(), AnyError> {
+    let cfg = load_config(args)?;
+    let experiment = Experiment::parse(args.get("experiment").unwrap_or("p4"))?;
+    // Each experiment consumes a subset of the grid axes; an explicitly
+    // passed axis outside that subset would otherwise be silently
+    // dropped and the user could misattribute the published numbers.
+    for axis in experiment.ignored_axes() {
+        if args.get(axis).is_some() {
+            eprintln!("warning: --{axis} is not an axis of experiment {experiment:?}; ignoring it");
+        }
+    }
+    let mut sc = SweepConfig::for_experiment(experiment);
+    sc.trials = args.get_usize("trials", sc.trials)?;
+    sc.slots = args.get_usize("slots", sc.slots)?;
+    sc.seed = args.get_u64("seed", sc.seed)?;
+    let default_threads = std::thread::available_parallelism()
+        .map(|n| n.get().min(8))
+        .unwrap_or(1);
+    sc.threads = args.get_usize("threads", default_threads)?;
+    sc.loads = args.get_f64_list("loads", &sc.loads)?;
+    sc.rates = args.get_f64_list("rates", &sc.rates)?;
+    sc.epsilons = args.get_f64_list("epsilons", &sc.epsilons)?;
+    let strat_default: Vec<&str> = sc.strategies.iter().map(String::as_str).collect();
+    sc.strategies = args.get_str_list("strategies", &strat_default);
+    let engine_default: Vec<&str> = sc.engines.iter().map(String::as_str).collect();
+    sc.engines = args.get_str_list("engines", &engine_default);
+    // `fmedge faults` takes --engine (singular); accept it here too so
+    // the familiar spelling doesn't silently run both engines.
+    if args.get("engines").is_none() {
+        if let Some(e) = args.get("engine") {
+            sc.engines = vec![e.to_string()];
+        }
+    }
+    sc.scenarios = args.get_str_list("scenarios", &[]);
+
+    println!(
+        "sweep {experiment:?}: {} trials/cell x {} slots, seed {}, {} threads",
+        sc.trials, sc.slots, sc.seed, sc.threads
+    );
+    let t0 = Instant::now();
+    let table = run_sweep(&cfg, &sc)?;
+    // The NaN/empty gate: a malformed grid point must fail the run (and
+    // CI) rather than publish a hollow table.
+    table.validate()?;
+    print!("{}", table.render());
+    println!("{} rows in {:?}", table.rows.len(), t0.elapsed());
+    if let Some(path) = args.get("out") {
+        table.save_csv(path)?;
+        println!("csv written to {path}");
+    }
+    if let Some(path) = args.get("json") {
+        table.save_json(path)?;
+        println!("json written to {path}");
+    }
     Ok(())
 }
 

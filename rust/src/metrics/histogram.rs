@@ -309,6 +309,24 @@ mod tests {
     }
 
     #[test]
+    #[should_panic]
+    fn merge_rejects_mismatched_bounds() {
+        // Silently merging histograms with different bin layouts would
+        // corrupt quantiles — mismatches must refuse loudly.
+        let mut a = Histogram::linear(0.0, 10.0, 5);
+        let b = Histogram::linear(0.0, 20.0, 5);
+        a.merge(&b);
+    }
+
+    #[test]
+    #[should_panic]
+    fn merge_rejects_mismatched_scale() {
+        let mut a = Histogram::linear(1.0, 10.0, 5);
+        let b = Histogram::log(1.0, 10.0, 5);
+        a.merge(&b);
+    }
+
+    #[test]
     fn empty_histogram_is_benign() {
         let h = Histogram::default();
         assert!(h.is_empty());

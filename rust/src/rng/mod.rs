@@ -10,7 +10,7 @@ mod xoshiro;
 mod distributions;
 
 pub use distributions::{Exponential, Gamma, LogNormal, Nakagami, Normal, Poisson, Uniform};
-pub use xoshiro::Xoshiro256;
+pub use xoshiro::{stream_seed, Xoshiro256};
 
 /// Minimal RNG interface used across the crate.
 pub trait Rng {

@@ -1,0 +1,188 @@
+//! Non-stationary arrival processes: per-slot rate multipliers layered on
+//! top of the stationary Poisson workload of §II-B.
+//!
+//! Edge workloads are not stationary — diurnal cycles, bursty on-off
+//! sources, and flash crowds are the regimes the robustness claims must
+//! survive. Each family realizes a deterministic-per-seed multiplier
+//! curve `c[t]`; the scenario compiler then draws slot `t`'s arrivals as
+//! `Poisson(rate * load * c[t])` through the unchanged
+//! [`crate::workload::WorkloadGenerator`], so both engines ingest the
+//! resulting [`crate::workload::Trace`] with no engine changes.
+
+use crate::rng::Rng;
+
+/// A non-stationary arrival-rate modulation family.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// The paper's baseline: constant multiplier 1.
+    Stationary,
+    /// Diurnal sinusoid: `1 + amplitude * sin(2π (t / period + phase))`,
+    /// floored at 0.05 (a quiet hour still trickles).
+    Diurnal {
+        period_slots: usize,
+        /// Peak-to-mean swing, in (0, 1) for a non-degenerate trough.
+        amplitude: f64,
+        /// Phase offset as a fraction of the period.
+        phase: f64,
+    },
+    /// Two-state Markov-modulated Poisson process (bursty on-off): the
+    /// multiplier alternates between `burst_mult` and `quiet_mult`, with
+    /// geometric state holding times (means in slots).
+    Mmpp {
+        burst_mult: f64,
+        quiet_mult: f64,
+        mean_burst_slots: f64,
+        mean_quiet_slots: f64,
+    },
+    /// Flash crowd: baseline 1 until `start_frac * slots`, linear ramp to
+    /// `peak_mult` over `ramp_slots`, hold for `hold_slots`, linear decay
+    /// back to 1 over `decay_slots`.
+    FlashCrowd {
+        start_frac: f64,
+        ramp_slots: usize,
+        peak_mult: f64,
+        hold_slots: usize,
+        decay_slots: usize,
+    },
+}
+
+impl ArrivalProcess {
+    /// Realize the multiplier curve for `slots` slots. Stochastic
+    /// families (MMPP state path) draw from `rng`; deterministic families
+    /// ignore it, so the curve is reproducible per scenario seed either
+    /// way.
+    pub fn multipliers<R: Rng + ?Sized>(&self, slots: usize, rng: &mut R) -> Vec<f64> {
+        match *self {
+            ArrivalProcess::Stationary => vec![1.0; slots],
+            ArrivalProcess::Diurnal {
+                period_slots,
+                amplitude,
+                phase,
+            } => {
+                let period = period_slots.max(1) as f64;
+                (0..slots)
+                    .map(|t| {
+                        let x = 2.0 * std::f64::consts::PI * (t as f64 / period + phase);
+                        (1.0 + amplitude * x.sin()).max(0.05)
+                    })
+                    .collect()
+            }
+            ArrivalProcess::Mmpp {
+                burst_mult,
+                quiet_mult,
+                mean_burst_slots,
+                mean_quiet_slots,
+            } => {
+                let p_leave_burst = 1.0 / mean_burst_slots.max(1.0);
+                let p_leave_quiet = 1.0 / mean_quiet_slots.max(1.0);
+                let mut bursting = false;
+                (0..slots)
+                    .map(|_| {
+                        let p = if bursting { p_leave_burst } else { p_leave_quiet };
+                        if rng.next_f64() < p {
+                            bursting = !bursting;
+                        }
+                        if bursting {
+                            burst_mult
+                        } else {
+                            quiet_mult
+                        }
+                    })
+                    .collect()
+            }
+            ArrivalProcess::FlashCrowd {
+                start_frac,
+                ramp_slots,
+                peak_mult,
+                hold_slots,
+                decay_slots,
+            } => {
+                let start = (start_frac.clamp(0.0, 1.0) * slots as f64) as usize;
+                let ramp = ramp_slots.max(1);
+                let decay = decay_slots.max(1);
+                (0..slots)
+                    .map(|t| {
+                        if t < start {
+                            1.0
+                        } else if t < start + ramp {
+                            let f = (t - start) as f64 / ramp as f64;
+                            1.0 + f * (peak_mult - 1.0)
+                        } else if t < start + ramp + hold_slots {
+                            peak_mult
+                        } else if t < start + ramp + hold_slots + decay {
+                            let f = (t - start - ramp - hold_slots) as f64 / decay as f64;
+                            peak_mult + f * (1.0 - peak_mult)
+                        } else {
+                            1.0
+                        }
+                    })
+                    .collect()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn stationary_is_flat_unit() {
+        let mut rng = Xoshiro256::seed_from(1);
+        let c = ArrivalProcess::Stationary.multipliers(50, &mut rng);
+        assert_eq!(c, vec![1.0; 50]);
+    }
+
+    #[test]
+    fn diurnal_oscillates_around_one_with_positive_floor() {
+        let mut rng = Xoshiro256::seed_from(2);
+        let p = ArrivalProcess::Diurnal {
+            period_slots: 100,
+            amplitude: 0.6,
+            phase: 0.0,
+        };
+        let c = p.multipliers(200, &mut rng);
+        let mean = c.iter().sum::<f64>() / c.len() as f64;
+        assert!((mean - 1.0).abs() < 0.05, "mean≈1, got {mean}");
+        assert!(c.iter().all(|&x| x > 0.0));
+        let max = c.iter().cloned().fold(0.0f64, f64::max);
+        let min = c.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max > 1.5 && min < 0.5, "swing missing: [{min}, {max}]");
+    }
+
+    #[test]
+    fn mmpp_visits_both_states_and_is_seed_deterministic() {
+        let p = ArrivalProcess::Mmpp {
+            burst_mult: 2.5,
+            quiet_mult: 0.4,
+            mean_burst_slots: 10.0,
+            mean_quiet_slots: 20.0,
+        };
+        let c1 = p.multipliers(500, &mut Xoshiro256::seed_from(3));
+        let c2 = p.multipliers(500, &mut Xoshiro256::seed_from(3));
+        assert_eq!(c1, c2, "same seed must replay the same state path");
+        assert!(c1.iter().any(|&x| x == 2.5), "never bursts");
+        assert!(c1.iter().any(|&x| x == 0.4), "never quiets");
+        let c3 = p.multipliers(500, &mut Xoshiro256::seed_from(4));
+        assert_ne!(c1, c3, "seed must matter");
+    }
+
+    #[test]
+    fn flash_crowd_has_the_expected_shape() {
+        let mut rng = Xoshiro256::seed_from(5);
+        let p = ArrivalProcess::FlashCrowd {
+            start_frac: 0.25,
+            ramp_slots: 10,
+            peak_mult: 3.0,
+            hold_slots: 20,
+            decay_slots: 10,
+        };
+        let c = p.multipliers(200, &mut rng);
+        assert_eq!(c[0], 1.0);
+        assert_eq!(c[49], 1.0); // just before the 25% mark
+        assert_eq!(c[60], 3.0); // inside the hold
+        assert_eq!(c[199], 1.0); // long after the decay
+        assert!(c[55] > 1.0 && c[55] < 3.0, "mid-ramp");
+    }
+}

@@ -1,0 +1,208 @@
+//! User mobility / ED churn: re-home a user's task stream between edge
+//! devices mid-trial.
+//!
+//! A mobility model compiles to a [`MobilityTimeline`] — a slot-sorted
+//! list of `(slot, user, new_ed)` moves — that the scenario compiler
+//! applies while generating the trace: each arrival is stamped with the
+//! user's *current* ingress ED, so the engines replay churn through the
+//! trace alone and need no knowledge of the model.
+
+use crate::faults::geometric_slots;
+use crate::network::NodeId;
+use crate::rng::Rng;
+
+/// A user-mobility family.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MobilityModel {
+    /// No movement (the paper's implicit baseline).
+    Static,
+    /// Random waypoint over EDs: each user dwells a geometric number of
+    /// slots (given mean), then re-homes to a uniformly random *other*
+    /// edge device.
+    RandomWaypoint { mean_dwell_slots: f64 },
+    /// Commuter oscillation: each user flips between its home ED and one
+    /// fixed "work" ED every `half_period_slots` slots (rush-hour churn —
+    /// many users re-home at the same instants).
+    Commuter { half_period_slots: usize },
+}
+
+/// One re-homing event.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct UserMove {
+    /// The move takes effect at the start of this slot.
+    pub slot: usize,
+    pub user: usize,
+    pub new_ed: NodeId,
+}
+
+/// Slot-sorted, replayable re-homing schedule.
+#[derive(Clone, Debug, Default)]
+pub struct MobilityTimeline {
+    moves: Vec<UserMove>,
+}
+
+impl MobilityTimeline {
+    pub fn moves(&self) -> &[UserMove] {
+        &self.moves
+    }
+
+    pub fn len(&self) -> usize {
+        self.moves.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.moves.is_empty()
+    }
+}
+
+impl MobilityModel {
+    /// Compile the per-user move schedule over `slots` slots.
+    /// `initial_homes[u]` is user `u`'s starting ED (the workload
+    /// generator's round-robin attachment); `eds` is the ED population.
+    /// Deterministic per `rng` state; moves are sorted by `(slot, user)`.
+    pub fn compile<R: Rng + ?Sized>(
+        &self,
+        initial_homes: &[NodeId],
+        eds: &[NodeId],
+        slots: usize,
+        rng: &mut R,
+    ) -> MobilityTimeline {
+        let mut moves = Vec::new();
+        match *self {
+            MobilityModel::Static => {}
+            MobilityModel::RandomWaypoint { mean_dwell_slots } => {
+                if eds.len() < 2 {
+                    return MobilityTimeline::default();
+                }
+                for (u, &home) in initial_homes.iter().enumerate() {
+                    let mut cur = home;
+                    let mut t = 0usize;
+                    loop {
+                        let dwell = geometric_slots(rng, mean_dwell_slots);
+                        t += dwell;
+                        if t >= slots {
+                            break;
+                        }
+                        // Uniform over the *other* EDs.
+                        let mut pick = eds[rng.range_usize(0, eds.len() - 1)];
+                        while pick == cur {
+                            pick = eds[rng.range_usize(0, eds.len() - 1)];
+                        }
+                        cur = pick;
+                        moves.push(UserMove {
+                            slot: t,
+                            user: u,
+                            new_ed: cur,
+                        });
+                    }
+                }
+            }
+            MobilityModel::Commuter { half_period_slots } => {
+                if eds.len() < 2 {
+                    return MobilityTimeline::default();
+                }
+                let half = half_period_slots.max(1);
+                // One fixed "work" ED per user, distinct from home.
+                let works: Vec<NodeId> = initial_homes
+                    .iter()
+                    .map(|&home| {
+                        let mut pick = eds[rng.range_usize(0, eds.len() - 1)];
+                        while pick == home {
+                            pick = eds[rng.range_usize(0, eds.len() - 1)];
+                        }
+                        pick
+                    })
+                    .collect();
+                let mut t = half;
+                let mut at_work = false;
+                while t < slots {
+                    at_work = !at_work;
+                    for (u, &home) in initial_homes.iter().enumerate() {
+                        moves.push(UserMove {
+                            slot: t,
+                            user: u,
+                            new_ed: if at_work { works[u] } else { home },
+                        });
+                    }
+                    t += half;
+                }
+            }
+        }
+        moves.sort_by_key(|m| (m.slot, m.user));
+        MobilityTimeline { moves }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn homes(n: usize, eds: &[NodeId]) -> Vec<NodeId> {
+        (0..n).map(|u| eds[u % eds.len()]).collect()
+    }
+
+    #[test]
+    fn static_model_never_moves() {
+        let eds = [0, 1, 2, 3];
+        let tl = MobilityModel::Static.compile(
+            &homes(6, &eds),
+            &eds,
+            500,
+            &mut Xoshiro256::seed_from(1),
+        );
+        assert!(tl.is_empty());
+    }
+
+    #[test]
+    fn random_waypoint_moves_to_other_eds_and_is_deterministic() {
+        let eds = [0, 1, 2, 3];
+        let h = homes(6, &eds);
+        let model = MobilityModel::RandomWaypoint {
+            mean_dwell_slots: 20.0,
+        };
+        let a = model.compile(&h, &eds, 400, &mut Xoshiro256::seed_from(2));
+        let b = model.compile(&h, &eds, 400, &mut Xoshiro256::seed_from(2));
+        assert_eq!(a.moves(), b.moves(), "same seed ⇒ same timeline");
+        assert!(!a.is_empty(), "400 slots at mean dwell 20 must move");
+        // Moves are sorted, in-horizon, and each user's chain never
+        // "moves" to the ED it is already on.
+        let mut cur = h.clone();
+        let mut last_slot = 0;
+        for m in a.moves() {
+            assert!(m.slot >= last_slot);
+            last_slot = m.slot;
+            assert!(m.slot < 400);
+            assert!(eds.contains(&m.new_ed));
+            assert_ne!(cur[m.user], m.new_ed, "no-op move for user {}", m.user);
+            cur[m.user] = m.new_ed;
+        }
+    }
+
+    #[test]
+    fn commuter_flips_everyone_in_lockstep_and_returns_home() {
+        let eds = [0, 1, 2];
+        let h = homes(4, &eds);
+        let model = MobilityModel::Commuter {
+            half_period_slots: 50,
+        };
+        let tl = model.compile(&h, &eds, 200, &mut Xoshiro256::seed_from(3));
+        // Flips at slots 50, 100, 150 — every user each time.
+        assert_eq!(tl.len(), 3 * 4);
+        let back_home: Vec<&UserMove> =
+            tl.moves().iter().filter(|m| m.slot == 100).collect();
+        for m in back_home {
+            assert_eq!(m.new_ed, h[m.user], "even flips return home");
+        }
+    }
+
+    #[test]
+    fn single_ed_degenerates_to_static() {
+        let eds = [0];
+        let model = MobilityModel::RandomWaypoint {
+            mean_dwell_slots: 5.0,
+        };
+        let tl = model.compile(&homes(3, &eds), &eds, 100, &mut Xoshiro256::seed_from(4));
+        assert!(tl.is_empty(), "nowhere to move");
+    }
+}

@@ -1,0 +1,406 @@
+//! Scenario library: composable, seeded workload/fault ensembles.
+//!
+//! The paper's headline claims (>84% on-time completion, robustness as
+//! load scales) are statements about *ensembles* of conditions, not one
+//! hand-built workload/fault pair. A [`ScenarioSpec`] composes three
+//! orthogonal axes —
+//!
+//! * a non-stationary [`ArrivalProcess`] (diurnal sinusoid, MMPP
+//!   burstiness, flash crowd) modulating the Poisson workload,
+//! * a [`MobilityModel`] (random waypoint, commuter) that re-homes users'
+//!   task streams between edge devices mid-trial,
+//! * a correlated [`FaultTemplate`] (zone/rack outages, cascading link
+//!   failures, load-correlated fail-stop)
+//!
+//! — and [`ScenarioSpec::compile`]s them into exactly the two artifacts
+//! both engines already ingest: a [`Trace`] and a
+//! [`crate::faults::FaultSchedule`]. The slotted engine and the DES
+//! therefore replay *identical* scenarios with no engine changes, via
+//! [`crate::sim::run_trial_faulted`] / [`crate::des::run_des_trial_faulted`].
+//!
+//! All randomness derives statelessly from the scenario seed through
+//! [`crate::rng::stream_seed`], so compiling scenario `k` of a sweep never
+//! depends on how many scenarios were compiled before it.
+
+mod arrivals;
+mod mobility;
+mod outages;
+
+pub use arrivals::ArrivalProcess;
+pub use mobility::{MobilityModel, MobilityTimeline, UserMove};
+pub use outages::FaultTemplate;
+
+use crate::faults::FaultSchedule;
+use crate::rng::{stream_seed, Xoshiro256};
+use crate::sim::{SimEnv, SimOptions};
+use crate::workload::{Trace, WorkloadGenerator};
+
+/// Stream tags for [`stream_seed`] (arbitrary distinct constants).
+const STREAM_CURVE: u64 = 0x01;
+const STREAM_ARRIVALS: u64 = 0x02;
+const STREAM_MOBILITY: u64 = 0x03;
+const STREAM_FAULTS: u64 = 0x04;
+
+/// One member of the scenario library.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioSpec {
+    /// Library name (kebab-case, stable — CLI and CSV key).
+    pub name: String,
+    pub arrivals: ArrivalProcess,
+    pub mobility: MobilityModel,
+    pub faults: FaultTemplate,
+}
+
+/// A realized scenario: everything an engine needs to replay it.
+#[derive(Clone, Debug)]
+pub struct CompiledScenario {
+    pub trace: Trace,
+    pub faults: FaultSchedule,
+    /// Realized per-slot arrival multiplier (full horizon).
+    pub load_curve: Vec<f64>,
+    /// User re-homings applied while generating the trace.
+    pub user_moves: usize,
+}
+
+impl ScenarioSpec {
+    fn new(
+        name: &str,
+        arrivals: ArrivalProcess,
+        mobility: MobilityModel,
+        faults: FaultTemplate,
+    ) -> Self {
+        ScenarioSpec {
+            name: name.to_string(),
+            arrivals,
+            mobility,
+            faults,
+        }
+    }
+
+    /// Stationary Poisson, static users, no faults — the seed repo's
+    /// implicit scenario, kept as the ensemble's control.
+    pub fn baseline() -> Self {
+        Self::new(
+            "baseline",
+            ArrivalProcess::Stationary,
+            MobilityModel::Static,
+            FaultTemplate::None,
+        )
+    }
+
+    /// Day/night sinusoid (period spans the horizon's order of magnitude).
+    pub fn diurnal() -> Self {
+        Self::new(
+            "diurnal",
+            ArrivalProcess::Diurnal {
+                period_slots: 200,
+                amplitude: 0.6,
+                phase: 0.0,
+            },
+            MobilityModel::Static,
+            FaultTemplate::None,
+        )
+    }
+
+    /// Bursty on-off (MMPP) arrivals.
+    pub fn mmpp() -> Self {
+        Self::new(
+            "mmpp",
+            ArrivalProcess::Mmpp {
+                burst_mult: 2.5,
+                quiet_mult: 0.4,
+                mean_burst_slots: 20.0,
+                mean_quiet_slots: 40.0,
+            },
+            MobilityModel::Static,
+            FaultTemplate::None,
+        )
+    }
+
+    /// Sudden 3x flash crowd a quarter into the horizon.
+    pub fn flash_crowd() -> Self {
+        Self::new(
+            "flash-crowd",
+            ArrivalProcess::FlashCrowd {
+                start_frac: 0.25,
+                ramp_slots: 10,
+                peak_mult: 3.0,
+                hold_slots: 30,
+                decay_slots: 20,
+            },
+            MobilityModel::Static,
+            FaultTemplate::None,
+        )
+    }
+
+    /// Random-waypoint ED churn under stationary load.
+    pub fn mobility() -> Self {
+        Self::new(
+            "mobility",
+            ArrivalProcess::Stationary,
+            MobilityModel::RandomWaypoint {
+                mean_dwell_slots: 40.0,
+            },
+            FaultTemplate::None,
+        )
+    }
+
+    /// Lock-step commuter churn (everyone re-homes at once).
+    pub fn commuter() -> Self {
+        Self::new(
+            "commuter",
+            ArrivalProcess::Stationary,
+            MobilityModel::Commuter {
+                half_period_slots: 60,
+            },
+            FaultTemplate::None,
+        )
+    }
+
+    /// Rack-correlated server outages under stationary load.
+    ///
+    /// The engines cap concurrent ES downs at `(num_ess - 1) / 2` (min
+    /// 1) so a backbone majority survives; rack *correlation* is only
+    /// observable when a whole zone fits under that cap. The paper
+    /// default's 4 ESs cap at 1 — there this template degenerates to
+    /// independent single-server outages. Run §P5 with a config of
+    /// `network.num_ess >= 8` to actually measure correlated damage.
+    pub fn zone_outage() -> Self {
+        Self::new(
+            "zone-outage",
+            ArrivalProcess::Stationary,
+            MobilityModel::Static,
+            FaultTemplate::ZoneOutage {
+                zones: 3,
+                zone_outage_per_slot: 0.004,
+                mean_outage_slots: 20.0,
+            },
+        )
+    }
+
+    /// Cascading link failures under stationary load.
+    pub fn cascade() -> Self {
+        Self::new(
+            "cascade",
+            ArrivalProcess::Stationary,
+            MobilityModel::Static,
+            FaultTemplate::CascadingLinks {
+                trigger_per_slot: 0.003,
+                cascade_p: 0.35,
+                max_depth: 2,
+                mean_outage_slots: 15.0,
+            },
+        )
+    }
+
+    /// The composite stress case: diurnal load, commuter churn, and
+    /// load-correlated replica fail-stop — failures cluster at rush hour.
+    pub fn rush_hour() -> Self {
+        Self::new(
+            "rush-hour",
+            ArrivalProcess::Diurnal {
+                period_slots: 200,
+                amplitude: 0.6,
+                phase: 0.75,
+            },
+            MobilityModel::Commuter {
+                half_period_slots: 100,
+            },
+            FaultTemplate::LoadCorrelated { base_rate: 0.01 },
+        )
+    }
+
+    /// The full library, in presentation order.
+    pub fn library() -> Vec<ScenarioSpec> {
+        vec![
+            Self::baseline(),
+            Self::diurnal(),
+            Self::mmpp(),
+            Self::flash_crowd(),
+            Self::mobility(),
+            Self::commuter(),
+            Self::zone_outage(),
+            Self::cascade(),
+            Self::rush_hour(),
+        ]
+    }
+
+    /// Look up a library scenario by its stable name.
+    pub fn by_name(name: &str) -> Option<ScenarioSpec> {
+        Self::library().into_iter().find(|s| s.name == name)
+    }
+
+    /// Realize the scenario against an environment: generate the trace
+    /// (arrivals stop at `opts.arrival_cutoff`, mirroring
+    /// [`crate::sim::record_trace`]) and compile the fault schedule over
+    /// the full horizon. Deterministic per `(env, opts, seed)`; every
+    /// random sub-stream is derived statelessly from `seed` via
+    /// [`stream_seed`].
+    pub fn compile(&self, env: &SimEnv, opts: &SimOptions, seed: u64) -> CompiledScenario {
+        let mut curve_rng = Xoshiro256::seed_from(stream_seed(seed, STREAM_CURVE, 0));
+        let load_curve = self.arrivals.multipliers(opts.slots, &mut curve_rng);
+
+        // Same user population every engine and the placement scorer see.
+        let mut gen = WorkloadGenerator::new(
+            &env.cfg,
+            &env.app,
+            &env.topo,
+            &mut Xoshiro256::seed_from(env.users_seed),
+        );
+        let eds: Vec<usize> = env.topo.eds().collect();
+        let initial_homes: Vec<usize> = gen.users().iter().map(|u| u.ed).collect();
+        let mut mob_rng = Xoshiro256::seed_from(stream_seed(seed, STREAM_MOBILITY, 0));
+        let timeline = self
+            .mobility
+            .compile(&initial_homes, &eds, opts.slots, &mut mob_rng);
+
+        let mut arr_rng = Xoshiro256::seed_from(stream_seed(seed, STREAM_ARRIVALS, 0));
+        let cutoff = opts.slots.min(opts.arrival_cutoff);
+        let mut arrivals = Vec::new();
+        let mut cursor = 0usize;
+        let mut applied = 0usize;
+        for slot in 0..cutoff {
+            while cursor < timeline.len() && timeline.moves()[cursor].slot <= slot {
+                let m = timeline.moves()[cursor];
+                gen.set_user_ed(m.user, m.new_ed);
+                cursor += 1;
+                applied += 1;
+            }
+            let mult = opts.load_multiplier * load_curve[slot];
+            arrivals.extend(gen.generate_slot(slot, mult, &mut arr_rng));
+        }
+
+        let faults = self.faults.compile(
+            &env.topo,
+            opts.slots,
+            opts.slot_ms,
+            env.app.catalog.num_core(),
+            &load_curve,
+            stream_seed(seed, STREAM_FAULTS, 0),
+        );
+
+        CompiledScenario {
+            trace: Trace::from_arrivals(arrivals),
+            faults,
+            load_curve,
+            user_moves: applied,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    fn small_env(seed: u64) -> (SimEnv, SimOptions) {
+        let mut cfg = ExperimentConfig::paper_default();
+        cfg.sim.slots = 100;
+        cfg.workload.num_users = 8;
+        cfg.controller.effcap_samples = 256;
+        let env = SimEnv::build(&cfg, seed);
+        let opts = SimOptions::from_config(&cfg);
+        (env, opts)
+    }
+
+    #[test]
+    fn library_names_are_unique_and_resolvable() {
+        let lib = ScenarioSpec::library();
+        let mut names = std::collections::HashSet::new();
+        for s in &lib {
+            assert!(names.insert(s.name.clone()), "duplicate {}", s.name);
+            assert_eq!(ScenarioSpec::by_name(&s.name).as_ref(), Some(s));
+        }
+        assert!(ScenarioSpec::by_name("no-such-scenario").is_none());
+    }
+
+    #[test]
+    fn compile_is_deterministic_per_seed() {
+        let (env, opts) = small_env(1);
+        for spec in ScenarioSpec::library() {
+            let a = spec.compile(&env, &opts, 42);
+            let b = spec.compile(&env, &opts, 42);
+            assert_eq!(a.trace.len(), b.trace.len(), "{}", spec.name);
+            for (x, y) in a.trace.arrivals().iter().zip(b.trace.arrivals()) {
+                assert_eq!(x.id, y.id);
+                assert_eq!(x.ed, y.ed);
+                assert_eq!(x.slot, y.slot);
+                assert_eq!(x.snr.to_bits(), y.snr.to_bits(), "{}", spec.name);
+            }
+            assert_eq!(a.faults.events(), b.faults.events(), "{}", spec.name);
+            assert_eq!(a.user_moves, b.user_moves);
+            assert_eq!(a.load_curve, b.load_curve);
+        }
+    }
+
+    #[test]
+    fn seed_matters() {
+        let (env, opts) = small_env(2);
+        let spec = ScenarioSpec::mmpp();
+        let a = spec.compile(&env, &opts, 1);
+        let b = spec.compile(&env, &opts, 2);
+        let same = a.trace.len() == b.trace.len()
+            && a.trace
+                .arrivals()
+                .iter()
+                .zip(b.trace.arrivals())
+                .all(|(x, y)| x.slot == y.slot && x.snr == y.snr);
+        assert!(!same, "different seeds must realize different traces");
+    }
+
+    #[test]
+    fn mobility_rehomes_arrivals_mid_trace() {
+        let (env, mut opts) = small_env(3);
+        // Horizon wide enough that the commuter flips (every 60 slots)
+        // land inside the arrival window — at 100 slots the cutoff is 25
+        // and no move would ever be applied.
+        opts.slots = 300;
+        opts.arrival_cutoff = 250;
+        let cs = ScenarioSpec::commuter().compile(&env, &opts, 7);
+        assert!(cs.user_moves > 0, "commuter must move users");
+        // Some user's arrivals must appear at two different EDs.
+        let mut seen: std::collections::HashMap<usize, std::collections::HashSet<usize>> =
+            std::collections::HashMap::new();
+        for a in cs.trace.arrivals() {
+            seen.entry(a.user).or_default().insert(a.ed);
+        }
+        assert!(
+            seen.values().any(|eds| eds.len() > 1),
+            "no arrival stream actually re-homed"
+        );
+    }
+
+    #[test]
+    fn baseline_matches_stationary_static_faultless() {
+        let (env, opts) = small_env(4);
+        let cs = ScenarioSpec::baseline().compile(&env, &opts, 9);
+        assert!(cs.faults.is_empty());
+        assert_eq!(cs.user_moves, 0);
+        assert!(cs.load_curve.iter().all(|&c| c == 1.0));
+        assert!(!cs.trace.is_empty());
+    }
+
+    #[test]
+    fn flash_crowd_concentrates_arrivals() {
+        let (mut env, mut opts) = small_env(5);
+        // Long horizon so the crowd window is wide and inside the cutoff.
+        env.cfg.sim.slots = 300;
+        opts.slots = 300;
+        opts.arrival_cutoff = 280;
+        let cs = ScenarioSpec::flash_crowd().compile(&env, &opts, 11);
+        // Peak window [75, 115) vs an equal-width quiet window [200, 240).
+        let count = |lo: usize, hi: usize| {
+            cs.trace
+                .arrivals()
+                .iter()
+                .filter(|a| a.slot >= lo && a.slot < hi)
+                .count()
+        };
+        let peak = count(75, 115);
+        let quiet = count(200, 240);
+        assert!(
+            peak as f64 > 1.6 * quiet as f64,
+            "flash crowd must dominate: peak {peak} vs quiet {quiet}"
+        );
+    }
+}

@@ -76,6 +76,14 @@ impl WorkloadGenerator {
         &self.users
     }
 
+    /// Re-home a user to a new ingress edge device (user mobility / ED
+    /// churn): subsequent arrivals of `user` are stamped with `ed`. The
+    /// caller is responsible for passing a valid edge-device node id —
+    /// the scenario compiler draws from [`crate::network::Topology::eds`].
+    pub fn set_user_ed(&mut self, user: usize, ed: NodeId) {
+        self.users[user].ed = ed;
+    }
+
     /// Draw all arrivals for slot `t` at the given load multiplier
     /// (Fig. 4's ×1.0/×1.5/×2.0 escalation scales the Poisson means).
     pub fn generate_slot<R: Rng + ?Sized>(

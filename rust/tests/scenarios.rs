@@ -1,0 +1,228 @@
+//! Integration tests for the scenario library: compile determinism,
+//! trial-stream independence, and — the tentpole acceptance criterion —
+//! the new scenario families (diurnal, MMPP, zone-outage, and friends)
+//! replayed under BOTH engines with engine agreement asserted.
+
+use fmedge::baselines::Proposal;
+use fmedge::config::ExperimentConfig;
+use fmedge::des::{run_des_trial_faulted, DesOptions};
+use fmedge::faults::FaultKind;
+use fmedge::metrics::TrialMetrics;
+use fmedge::rng::stream_seed;
+use fmedge::scenarios::{CompiledScenario, ScenarioSpec};
+use fmedge::sim::{run_trial_faulted, SimEnv, SimOptions};
+
+fn small_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper_default();
+    cfg.sim.slots = 100;
+    cfg.workload.num_users = 8;
+    cfg.controller.effcap_samples = 512;
+    cfg
+}
+
+fn build(seed: u64) -> (SimEnv, SimOptions) {
+    let cfg = small_cfg();
+    let env = SimEnv::build(&cfg, seed);
+    let opts = SimOptions::from_config(&cfg);
+    (env, opts)
+}
+
+fn assert_same_compile(a: &CompiledScenario, b: &CompiledScenario, what: &str) {
+    assert_eq!(a.trace.len(), b.trace.len(), "{what}: trace length");
+    for (x, y) in a.trace.arrivals().iter().zip(b.trace.arrivals()) {
+        assert_eq!(x.id, y.id, "{what}");
+        assert_eq!(x.user, y.user, "{what}");
+        assert_eq!(x.ed, y.ed, "{what}");
+        assert_eq!(x.slot, y.slot, "{what}");
+        assert_eq!(x.snr.to_bits(), y.snr.to_bits(), "{what}");
+        assert_eq!(
+            x.uplink_delay_ms.to_bits(),
+            y.uplink_delay_ms.to_bits(),
+            "{what}"
+        );
+    }
+    assert_eq!(a.faults.events(), b.faults.events(), "{what}: schedule");
+    assert_eq!(a.user_moves, b.user_moves, "{what}: moves");
+}
+
+#[test]
+fn every_library_scenario_compiles_deterministically() {
+    let (env, opts) = build(61);
+    for spec in ScenarioSpec::library() {
+        let a = spec.compile(&env, &opts, 1234);
+        let b = spec.compile(&env, &opts, 1234);
+        assert_same_compile(&a, &b, &spec.name);
+        assert!(!a.trace.is_empty(), "{}: empty trace", spec.name);
+    }
+}
+
+#[test]
+fn trial_streams_are_independent_of_preceding_trials() {
+    // Regression for the sequential-reseed antipattern: trial k's
+    // realization must not depend on how many trials ran before it.
+    // The sweep derives every trial seed statelessly via stream_seed, so
+    // compiling trials {0,1,2} first and then trial 3 must produce the
+    // same trial-3 scenario as compiling trial 3 alone.
+    let (env, opts) = build(62);
+    let spec = ScenarioSpec::mmpp();
+    let sweep_seed = 99u64;
+    let cell = 5u64;
+
+    // "Sequential" path: compile everything in order.
+    let mut sequential = Vec::new();
+    for trial in 0..4u64 {
+        sequential.push(spec.compile(&env, &opts, stream_seed(sweep_seed, cell, trial)));
+    }
+    // "Direct" path: trial 3 alone, no predecessors.
+    let direct = spec.compile(&env, &opts, stream_seed(sweep_seed, cell, 3));
+    assert_same_compile(&sequential[3], &direct, "trial 3");
+
+    // And the trials must actually differ from each other.
+    let t0 = &sequential[0].trace;
+    let t3 = &sequential[3].trace;
+    let same = t0.len() == t3.len()
+        && t0
+            .arrivals()
+            .iter()
+            .zip(t3.arrivals())
+            .all(|(x, y)| x.slot == y.slot && x.snr == y.snr);
+    assert!(!same, "distinct trials must realize distinct traces");
+}
+
+/// Shared engine-agreement check: identical admission (both engines
+/// replay the compiled trace verbatim), a sane completion floor, and
+/// headline on-time rates in the same regime (the DES measures real
+/// queueing the slotted engine only bounds, so exact equality is not
+/// expected — gross divergence means one engine mishandled the
+/// scenario's trace or schedule).
+fn assert_engines_agree(spec: &ScenarioSpec, seed: u64) -> (TrialMetrics, TrialMetrics) {
+    let (env, opts) = build(seed);
+    let cs = spec.compile(&env, &opts, seed);
+    assert!(!cs.trace.is_empty(), "{}: empty trace", spec.name);
+    let slotted = run_trial_faulted(
+        &env,
+        &mut Proposal::new(),
+        seed,
+        &opts,
+        &cs.trace,
+        &cs.faults,
+    );
+    let des = run_des_trial_faulted(
+        &env,
+        &mut Proposal::new(),
+        seed,
+        &DesOptions::from_sim(&opts),
+        &cs.trace,
+        &cs.faults,
+    );
+    assert_eq!(
+        slotted.total_tasks,
+        cs.trace.len(),
+        "{}: slotted admission",
+        spec.name
+    );
+    assert_eq!(
+        des.total_tasks,
+        cs.trace.len(),
+        "{}: DES admission",
+        spec.name
+    );
+    assert!(
+        slotted.completion_rate() > 0.3,
+        "{}: slotted completion {}",
+        spec.name,
+        slotted.completion_rate()
+    );
+    assert!(
+        des.completion_rate() > 0.3,
+        "{}: DES completion {}",
+        spec.name,
+        des.completion_rate()
+    );
+    assert!(
+        (slotted.on_time_rate() - des.on_time_rate()).abs() < 0.45,
+        "{}: engines diverge — slotted {} vs DES {}",
+        spec.name,
+        slotted.on_time_rate(),
+        des.on_time_rate()
+    );
+    (slotted, des)
+}
+
+#[test]
+fn engines_agree_on_diurnal() {
+    assert_engines_agree(&ScenarioSpec::diurnal(), 71);
+}
+
+#[test]
+fn engines_agree_on_mmpp() {
+    assert_engines_agree(&ScenarioSpec::mmpp(), 72);
+}
+
+#[test]
+fn engines_agree_on_zone_outage() {
+    let (slotted, des) = assert_engines_agree(&ScenarioSpec::zone_outage(), 73);
+    // Fault damage must be in the same regime across engines too
+    // (mirrors rust/tests/fault_injection.rs's baseline-relative check).
+    let sd = slotted.fault_drops as f64 / slotted.total_tasks.max(1) as f64;
+    let dd = des.fault_drops as f64 / des.total_tasks.max(1) as f64;
+    assert!(
+        (sd - dd).abs() < 0.25,
+        "fault-drop fractions diverge: slotted {sd} vs DES {dd}"
+    );
+}
+
+#[test]
+fn engines_agree_on_mobility_and_flash_crowd() {
+    assert_engines_agree(&ScenarioSpec::mobility(), 74);
+    assert_engines_agree(&ScenarioSpec::flash_crowd(), 75);
+}
+
+#[test]
+fn zone_outage_takes_whole_racks_down_and_recovers() {
+    let (env, opts) = build(76);
+    let cfg = small_cfg();
+    let cs = ScenarioSpec::zone_outage().compile(&env, &opts, 77);
+    // Over this horizon the template is stochastic; assert structural
+    // invariants on whatever was generated.
+    let mut down = std::collections::HashSet::new();
+    let cap = ((cfg.network.num_ess - 1) / 2).max(1);
+    for ev in cs.faults.events() {
+        match ev.kind {
+            FaultKind::NodeDown { node } => {
+                assert!(node >= cfg.network.num_eds, "EDs never fault");
+                assert!(down.insert(node), "double-down");
+                assert!(down.len() <= cap, "backbone majority violated");
+            }
+            FaultKind::NodeUp { node } => {
+                assert!(down.remove(&node));
+            }
+            other => panic!("zone template emitted {other:?}"),
+        }
+    }
+    assert!(down.is_empty(), "unrecovered outages");
+}
+
+#[test]
+fn rush_hour_composes_all_three_axes() {
+    let (env, mut opts) = build(78);
+    // The commuter axis flips every 100 slots — the arrival window must
+    // reach past the first flip for any churn to be observable.
+    opts.slots = 300;
+    opts.arrival_cutoff = 250;
+    let cs = ScenarioSpec::rush_hour().compile(&env, &opts, 79);
+    // Non-stationary load curve…
+    let min = cs.load_curve.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = cs.load_curve.iter().cloned().fold(0.0f64, f64::max);
+    assert!(max > 1.2 && min < 0.8, "diurnal swing missing");
+    // …commuter churn…
+    assert!(cs.user_moves > 0, "no churn");
+    // …and load-correlated fail-stop events.
+    assert!(
+        cs.faults
+            .events()
+            .iter()
+            .all(|e| matches!(e.kind, FaultKind::CoreReplicaFail { .. })),
+        "unexpected event kinds"
+    );
+}

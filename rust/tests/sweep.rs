@@ -1,0 +1,170 @@
+//! Integration tests for the sweep orchestrator: parallel output must be
+//! bit-identical to serial, grids must be well-formed (no NaN/empty
+//! cells), and the §P4 retained column must anchor at the rate-0
+//! baseline.
+
+use fmedge::config::ExperimentConfig;
+use fmedge::exp::{run_sweep, Experiment, SweepConfig};
+
+fn small_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper_default();
+    cfg.workload.num_users = 8;
+    cfg.controller.effcap_samples = 512;
+    cfg
+}
+
+fn tiny_p4() -> SweepConfig {
+    let mut sc = SweepConfig::for_experiment(Experiment::P4);
+    sc.trials = 2;
+    sc.slots = 60;
+    sc.seed = 11;
+    sc.loads = vec![1.0, 2.0];
+    sc.rates = vec![0.0, 0.01];
+    sc.strategies = vec!["proposal".into()];
+    sc.engines = vec!["slotted".into()];
+    sc
+}
+
+#[test]
+fn p4_parallel_is_bit_identical_to_serial() {
+    let cfg = small_cfg();
+    let mut sc = tiny_p4();
+    sc.threads = 1;
+    let serial = run_sweep(&cfg, &sc).expect("serial sweep");
+    serial.validate().expect("well-formed");
+    for threads in [2, 4] {
+        sc.threads = threads;
+        let par = run_sweep(&cfg, &sc).expect("parallel sweep");
+        assert_eq!(
+            serial.to_csv(),
+            par.to_csv(),
+            "threads={threads} must be bit-identical to serial"
+        );
+    }
+}
+
+#[test]
+fn p4_grid_shape_and_retained_baseline() {
+    let cfg = small_cfg();
+    let mut sc = tiny_p4();
+    sc.threads = 2;
+    let table = run_sweep(&cfg, &sc).expect("sweep");
+    table.validate().expect("well-formed");
+    // engines(1) x loads(2) x strategies(1) x rates(2).
+    assert_eq!(table.rows.len(), 4);
+    let col = |name: &str| {
+        table
+            .headers
+            .iter()
+            .position(|h| h == name)
+            .unwrap_or_else(|| panic!("missing column {name}"))
+    };
+    let (rate_c, ret_c, ot_c, tasks_c) = (
+        col("fail_rate"),
+        col("retained"),
+        col("on_time_mean"),
+        col("tasks"),
+    );
+    for row in &table.rows {
+        let tasks: usize = row[tasks_c].parse().expect("tasks integer");
+        assert!(tasks > 0, "a grid point admitted no tasks");
+        let ot: f64 = row[ot_c].parse().expect("on-time number");
+        assert!((0.0..=1.0).contains(&ot));
+        if row[rate_c].parse::<f64>().unwrap() == 0.0 {
+            assert_eq!(row[ret_c], "1.0000", "rate-0 anchors retained");
+        } else {
+            let r: f64 = row[ret_c].parse().expect("retained number");
+            assert!(r > 0.0 && r <= 1.5, "implausible retained {r}");
+        }
+    }
+}
+
+#[test]
+fn p5_runs_scenarios_under_both_engines_bit_identically() {
+    let cfg = small_cfg();
+    let mut sc = SweepConfig::for_experiment(Experiment::P5);
+    sc.trials = 2;
+    // 100 slots -> arrivals to slot 25: wide enough that the mobility
+    // scenario's waypoint churn (mean dwell 40 slots, 8 users, summed
+    // over both trials) registers moves with near-certainty.
+    sc.slots = 100;
+    sc.seed = 13;
+    sc.scenarios = vec!["baseline".into(), "zone-outage".into(), "mobility".into()];
+    sc.engines = vec!["slotted".into(), "des".into()];
+    sc.strategies = vec!["proposal".into()];
+    sc.threads = 1;
+    let serial = run_sweep(&cfg, &sc).expect("serial p5");
+    serial.validate().expect("well-formed");
+    assert_eq!(serial.rows.len(), 3 * 2);
+    sc.threads = 4;
+    let par = run_sweep(&cfg, &sc).expect("parallel p5");
+    assert_eq!(serial.to_csv(), par.to_csv(), "p5 parallel != serial");
+
+    // Paired fixtures: both engines of one scenario admit the same tasks.
+    let col = |name: &str| serial.headers.iter().position(|h| h == name).unwrap();
+    let (scen_c, tasks_c, moves_c) = (col("scenario"), col("tasks"), col("user_moves"));
+    for scen in ["baseline", "zone-outage", "mobility"] {
+        let tasks: Vec<&str> = serial
+            .rows
+            .iter()
+            .filter(|r| r[scen_c] == scen)
+            .map(|r| r[tasks_c].as_str())
+            .collect();
+        assert_eq!(tasks.len(), 2);
+        assert_eq!(tasks[0], tasks[1], "{scen}: engines saw different traces");
+    }
+    // The mobility scenario actually re-homed users; baseline did not.
+    let moves_of = |scen: &str| -> usize {
+        serial
+            .rows
+            .iter()
+            .find(|r| r[scen_c] == scen)
+            .unwrap()[moves_c]
+            .parse()
+            .unwrap()
+    };
+    assert_eq!(moves_of("baseline"), 0);
+    assert!(moves_of("mobility") > 0);
+}
+
+#[test]
+fn p2_tiny_grid_is_well_formed() {
+    let cfg = small_cfg();
+    let mut sc = SweepConfig::for_experiment(Experiment::P2);
+    sc.trials = 1;
+    sc.slots = 60;
+    sc.seed = 17;
+    sc.epsilons = vec![0.2];
+    sc.threads = 1;
+    let table = run_sweep(&cfg, &sc).expect("p2 sweep");
+    table.validate().expect("well-formed");
+    assert_eq!(table.rows.len(), 1);
+    let col = |name: &str| table.headers.iter().position(|h| h == name).unwrap();
+    let services: usize = table.rows[0][col("services")].parse().unwrap();
+    let holding: usize = table.rows[0][col("holding")].parse().unwrap();
+    assert!(services > 0);
+    assert!(holding <= services);
+}
+
+#[test]
+fn p1b_solution_columns_are_mode_invariant() {
+    // Warm-started node LPs must not change the solved placement — only
+    // the (wall-clock, excluded-from-bit-identity) solve_ms column may
+    // differ between runs.
+    let cfg = small_cfg();
+    let mut sc = SweepConfig::for_experiment(Experiment::P1b);
+    sc.trials = 1;
+    sc.seed = 19;
+    sc.threads = 2;
+    let table = run_sweep(&cfg, &sc).expect("p1b sweep");
+    table.validate().expect("well-formed");
+    assert_eq!(table.rows.len(), 2, "one instance x two modes");
+    let col = |name: &str| table.headers.iter().position(|h| h == name).unwrap();
+    for name in ["objective", "instances", "support"] {
+        let c = col(name);
+        assert_eq!(
+            table.rows[0][c], table.rows[1][c],
+            "{name} differs between dense-rebuild and warm-revised"
+        );
+    }
+}
