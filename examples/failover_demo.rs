@@ -1,0 +1,130 @@
+//! End-to-end failover demo: the serving path survives a zone outage.
+//!
+//! Three views of the same robustness layer:
+//!   1. the deterministic virtual-time serving replay (`ReplayServer`)
+//!      under an edge-zone outage — run twice to show the failover
+//!      counters are bit-stable,
+//!   2. both simulation engines replaying one seeded fault schedule with
+//!      checkpoint/restart-paired replica fail-stops, reporting the
+//!      retry/re-route/restore ledger next to the casualty count,
+//!   3. the degradation contract: accepted work is either served or
+//!      provably payload-destroyed — nothing is silently dropped.
+//!
+//! Run: `cargo run --release --example failover_demo`
+//! Options: `-- --slots N --seed N --load X --outage-ms D`
+
+use fmedge::baselines::Proposal;
+use fmedge::cli::Args;
+use fmedge::config::ExperimentConfig;
+use fmedge::coordinator::{
+    parse_fault_spec, FailoverPolicy, ReplayConfig, ReplayServer, VirtualRequest,
+};
+use fmedge::des::{run_des_trial_faulted, DesOptions};
+use fmedge::faults::{FaultParams, FaultSchedule};
+use fmedge::metrics::TrialMetrics;
+use fmedge::sim::{record_trace, run_trial_faulted, SimEnv, SimOptions};
+
+fn ledger(name: &str, m: &TrialMetrics) {
+    println!(
+        "{:<8} on-time {:.3}  completed {}/{}  retries {}  rerouted {}  hedges {}  restores {}  payload-destroyed {}",
+        name,
+        m.on_time_rate(),
+        m.completed,
+        m.total_tasks,
+        m.retries,
+        m.reroute_recovered,
+        m.hedges,
+        m.checkpoint_restores,
+        m.fault_drops
+    );
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1)).unwrap_or_default();
+    let mut cfg = ExperimentConfig::paper_default();
+    cfg.sim.slots = args.get_usize("slots", 300).unwrap_or(300);
+    cfg.sim.load_multiplier = args.get_f64("load", 1.5).unwrap_or(1.5);
+    let seed = args.get_u64("seed", 2026).unwrap_or(2026);
+    let outage_ms = args.get_f64("outage-ms", 60.0).unwrap_or(60.0);
+    let (num_eds, num_ess) = (cfg.network.num_eds, cfg.network.num_ess);
+
+    // -- 1. Virtual-time serving replay: a zone outage mid-run ----------
+    let spec = format!("zone@40+{outage_ms}");
+    let schedule = parse_fault_spec(&spec, num_eds, num_ess).expect("spec");
+    let rcfg = ReplayConfig {
+        workers: 4,
+        ..Default::default()
+    };
+    let server = ReplayServer::new(rcfg, &schedule, num_eds);
+    let arrivals: Vec<VirtualRequest> = (0..600)
+        .map(|id| VirtualRequest {
+            id,
+            arrive_ms: id as f64 * 0.5,
+            deadline_ms: 50.0,
+        })
+        .collect();
+    let a = server.run(&arrivals);
+    let b = server.run(&arrivals);
+    println!("virtual serve under `{spec}` ({} workers):", 4);
+    println!(
+        "  accepted {}  served {}  on-time {}  {}",
+        a.accepted,
+        a.served,
+        a.on_time,
+        a.stats.line()
+    );
+    assert_eq!(a.stats, b.stats, "failover counters must be bit-stable");
+    assert_eq!(a.served, b.served);
+    assert_eq!(
+        a.stats.abandoned, 0,
+        "degradation contract: accepted work is never abandoned"
+    );
+    println!("  second run: identical counters (bit-deterministic) ✓\n");
+
+    // -- 2. Both engines replay one schedule with paired restarts -------
+    let env = SimEnv::build(&cfg, seed);
+    let mut opts = SimOptions::from_config(&cfg);
+    // Tighter checkpoint cadence so restores are visible in a short run.
+    opts.failover.checkpoint.period_ms = 20.0;
+    let trace = record_trace(&env, seed, &opts);
+    let params = FaultParams::from_rate(0.01).with_replica_restart(25.0);
+    let faults = FaultSchedule::generate(
+        &env.topo,
+        opts.slots,
+        opts.slot_ms,
+        env.app.catalog.num_core(),
+        &params,
+        seed,
+    );
+    println!(
+        "engine replay: {} tasks, {} fault events (replica fail-stops paired with restarts)",
+        trace.len(),
+        faults.len()
+    );
+    let slotted =
+        run_trial_faulted(&env, &mut Proposal::new(), seed, &opts, &trace, &faults);
+    let des = run_des_trial_faulted(
+        &env,
+        &mut Proposal::new(),
+        seed,
+        &DesOptions::from_sim(&opts),
+        &trace,
+        &faults,
+    );
+    ledger("slotted", &slotted);
+    ledger("des", &des);
+
+    // -- 3. The degradation contract, stated on the numbers -------------
+    let accounted = slotted.completed + slotted.fault_drops;
+    println!(
+        "\ncontract: {} completed + {} payload-destroyed = {} of {} admitted accounted for",
+        slotted.completed, slotted.fault_drops, accounted, slotted.total_tasks
+    );
+    println!(
+        "(the remainder, {}, aged out past {}x their deadline under outage pressure — \
+         dropped by the age bound, not silently lost)",
+        slotted.total_tasks - accounted,
+        opts.drop_after_deadlines
+    );
+    let _ = FailoverPolicy::default(); // the policy object both paths share
+}

@@ -6,7 +6,7 @@
 
 use std::time::{Duration, Instant};
 
-use fmedge::benchkit::{bench, print_data_table, print_table};
+use fmedge::benchkit::{bench, print_data_table, print_table, save_json};
 use fmedge::coordinator::{BatchPolicy, Batcher, Coordinator, Request, ServeConfig};
 use fmedge::rng::{Rng, Xoshiro256};
 use fmedge::runtime::shapes;
@@ -83,17 +83,26 @@ fn main() {
             format!("{fill:.2}"),
         ]);
     }
-    print_data_table(
-        "C1 — serving coordinator under open-loop load",
-        &[
-            "case",
-            "offered rps",
-            "served rps",
-            "p50 ms",
-            "p75 ms",
-            "batch fill",
-        ],
-        &rows,
-    );
+    let headers = [
+        "case",
+        "offered rps",
+        "served rps",
+        "p50 ms",
+        "p75 ms",
+        "batch fill",
+    ];
+    print_data_table("C1 — serving coordinator under open-loop load", &headers, &rows);
+    // `FMEDGE_BENCH_JSON=BENCH_serve.json cargo bench --bench
+    // bench_coordinator` records the rows as a perf-trajectory artifact.
+    if let Ok(path) = std::env::var("FMEDGE_BENCH_JSON") {
+        save_json(
+            &path,
+            "C1 — serving coordinator under open-loop load",
+            &headers,
+            &rows,
+        )
+        .expect("write bench json");
+        println!("\nbench rows saved to {path}");
+    }
     println!("\ntarget: harness overhead ≪ 1 ms median; PJRT path p50 in single-digit ms off saturation.");
 }

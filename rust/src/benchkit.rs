@@ -107,6 +107,58 @@ pub fn print_data_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
     }
 }
 
+fn json_escape(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => "\\\"".chars().collect::<Vec<_>>(),
+            '\\' => "\\\\".chars().collect(),
+            '\n' => "\\n".chars().collect(),
+            c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
+            c => vec![c],
+        })
+        .collect()
+}
+
+/// Persist a bench table as a `BENCH_*.json` artifact so later PRs have a
+/// perf trajectory to compare against. The schema is one object per data
+/// row keyed by the table headers; numeric-looking cells are emitted as
+/// numbers. Benches opt in by calling this when the environment variable
+/// named by `env_var` (conventionally `FMEDGE_BENCH_JSON`) is set to the
+/// output path.
+pub fn save_json(
+    path: &str,
+    title: &str,
+    headers: &[&str],
+    rows: &[Vec<String>],
+) -> std::io::Result<()> {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!("  \"title\": \"{}\",\n", json_escape(title)));
+    out.push_str("  \"rows\": [\n");
+    for (i, row) in rows.iter().enumerate() {
+        out.push_str("    {");
+        for (j, (h, cell)) in headers.iter().zip(row).enumerate() {
+            if j > 0 {
+                out.push_str(", ");
+            }
+            let is_num = !cell.is_empty() && cell.parse::<f64>().is_ok();
+            if is_num {
+                out.push_str(&format!("\"{}\": {}", json_escape(h), cell.trim()));
+            } else {
+                out.push_str(&format!(
+                    "\"{}\": \"{}\"",
+                    json_escape(h),
+                    json_escape(cell)
+                ));
+            }
+        }
+        out.push('}');
+        out.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write(path, out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -127,6 +179,30 @@ mod tests {
         assert!(fmt_duration(Duration::from_micros(50)).ends_with("µs"));
         assert!(fmt_duration(Duration::from_millis(50)).ends_with("ms"));
         assert!(fmt_duration(Duration::from_secs(2)).ends_with("s"));
+    }
+
+    #[test]
+    fn save_json_emits_typed_cells() {
+        let dir = std::env::temp_dir().join("fmedge_benchkit_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        let rows = vec![vec![
+            "case \"a\"".to_string(),
+            "12.5".to_string(),
+            "n/a".to_string(),
+        ]];
+        save_json(
+            path.to_str().unwrap(),
+            "t",
+            &["case", "rps", "note"],
+            &rows,
+        )
+        .unwrap();
+        let got = std::fs::read_to_string(&path).unwrap();
+        assert!(got.contains("\"rps\": 12.5"), "numeric cell unquoted: {got}");
+        assert!(got.contains("\"note\": \"n/a\""), "text cell quoted: {got}");
+        assert!(got.contains("case \\\"a\\\""), "escaping: {got}");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -56,6 +56,7 @@ const FLAGS: &[&str] = &[
     "fallback",
     "no-real-compute",
     "validate",
+    "virtual",
 ];
 
 impl Args {
@@ -194,7 +195,12 @@ COMMANDS:
             names: baseline, diurnal, mmpp, flash-crowd, mobility,
             commuter, zone-outage, cascade, rush-hour)
   serve     run the serving coordinator on a synthetic open-loop workload
-            (--requests N, --rate RPS, --workers N, --no-real-compute)
+            (--requests N, --rate RPS, --workers N, --no-real-compute;
+            failover: --faults SPEC with SPEC = `zone@START+DUR` or
+            `esK@START+DUR[,...]` (ms) arms checkpoint/restart + retry
+            re-routing, --virtual replays the same workload + policy on
+            the deterministic virtual-time server [bit-stable counters],
+            --deadline-ms X, --seed N)
 
 GLOBAL OPTIONS:
   --config FILE   TOML overrides on top of the paper defaults

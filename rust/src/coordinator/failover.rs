@@ -1,0 +1,848 @@
+//! Failover policy for the serving path: retry/backoff/hedging, core
+//! checkpoint clocks, and the fault-schedule → worker-outage compiler.
+//!
+//! One recovery semantics, three consumers:
+//!
+//! * the live [`super::Coordinator`] (wall-clock threads) re-routes
+//!   batches off dying workers and sheds *new* admissions first;
+//! * the [`ReplayServer`] here replays the same policy in virtual time —
+//!   single-threaded and bit-deterministic, so tests and CI can assert
+//!   exact counter equality across runs;
+//! * both simulation engines ([`crate::sim`], [`crate::des`]) replay the
+//!   same [`RetryPolicy`]/[`CheckpointConfig`] deterministically, so
+//!   slotted-vs-DES agreement extends to retried executions.
+//!
+//! The degradation contract (tentpole acceptance): accepted work is never
+//! abandoned unless its payload is provably destroyed. Bounded here means
+//! the *backoff growth* and the `retry_exhausted` accounting are bounded
+//! by `max_attempts`; persistence is not — the age/deadline drop is the
+//! hard lifetime bound, so nothing is ever silently lost.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+use std::time::Duration;
+
+use crate::faults::{FaultEvent, FaultKind, FaultSchedule};
+use crate::metrics::Summary;
+
+use super::server::ServeReport;
+
+/// SplitMix64 — the deterministic jitter source. Retries key it by
+/// `(task/request id, attempt)`, so every engine and every repeat of a
+/// run draws the identical jitter without touching any engine RNG stream.
+pub fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Uniform in `[0, 1)` from a splitmix draw (53-bit mantissa).
+fn unit_f64(key: u64) -> f64 {
+    (splitmix64(key) >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// Bounded retry with jittered exponential backoff + optional hedging.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RetryPolicy {
+    /// Attempts after which backoff stops growing and the retry is
+    /// counted as exhausted (the work itself keeps its age-drop bound).
+    pub max_attempts: u32,
+    /// First-retry backoff (ms).
+    pub base_backoff_ms: f64,
+    /// Geometric growth factor per attempt.
+    pub multiplier: f64,
+    /// Backoff ceiling (ms).
+    pub max_backoff_ms: f64,
+    /// Jitter: the backoff is scaled by `1 - jitter_frac * U[0,1)`,
+    /// keyed deterministically by `(id, attempt)`.
+    pub jitter_frac: f64,
+    /// Hedge a second attempt when the remaining deadline slack falls
+    /// below this fraction of the deadline; `0.0` disables hedging.
+    pub hedge_slack_frac: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 4,
+            base_backoff_ms: 5.0,
+            multiplier: 2.0,
+            max_backoff_ms: 80.0,
+            jitter_frac: 0.5,
+            hedge_slack_frac: 0.25,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry number `attempt` (1-based), deterministically
+    /// jittered by `key` (callers pass the task/request id).
+    pub fn backoff_ms(&self, attempt: u32, key: u64) -> f64 {
+        let a = attempt.clamp(1, self.max_attempts.max(1));
+        let raw = self.base_backoff_ms * self.multiplier.powi(a as i32 - 1);
+        let capped = raw.min(self.max_backoff_ms).max(0.0);
+        capped * (1.0 - self.jitter_frac.clamp(0.0, 1.0) * unit_f64(key ^ ((a as u64) << 32)))
+    }
+
+    /// Has the bounded-retry budget been spent? (Accounting only — the
+    /// caller keeps retrying at the capped backoff until the age drop.)
+    pub fn exhausted(&self, attempt: u32) -> bool {
+        attempt > self.max_attempts
+    }
+
+    /// Hedge decision at dispatch time: fire a duplicate attempt when the
+    /// remaining slack is below `hedge_slack_frac` of the deadline.
+    pub fn should_hedge(&self, slack_ms: f64, deadline_ms: f64) -> bool {
+        self.hedge_slack_frac > 0.0 && slack_ms < self.hedge_slack_frac * deadline_ms
+    }
+
+    /// Per-attempt timeout derived from the stage's effective-capacity
+    /// budget `g_bound_ms` (the `g_{m,ε}(y)` value the controller
+    /// committed to): an attempt gets 1.5× its analytic budget, never
+    /// more than the whole task deadline.
+    pub fn attempt_timeout_ms(&self, deadline_ms: f64, g_bound_ms: f64) -> f64 {
+        (1.5 * g_bound_ms.max(0.0)).min(deadline_ms.max(0.0))
+    }
+}
+
+/// Checkpoint/restart clocks for core replicas: a periodic lightweight
+/// snapshot lets a fail-stopped replica rejoin after `restore_ms`; one
+/// that never checkpointed pays the full `cold_start_ms`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CheckpointConfig {
+    /// Snapshot cadence (ms); `0.0` disables checkpointing.
+    pub period_ms: f64,
+    /// Rejoin delay from the last checkpoint.
+    pub restore_ms: f64,
+    /// Rejoin delay without any checkpoint (full cold start).
+    pub cold_start_ms: f64,
+}
+
+impl Default for CheckpointConfig {
+    fn default() -> Self {
+        CheckpointConfig {
+            period_ms: 50.0,
+            restore_ms: 5.0,
+            cold_start_ms: 25.0,
+        }
+    }
+}
+
+impl CheckpointConfig {
+    pub fn enabled(&self) -> bool {
+        self.period_ms > 0.0 && self.period_ms.is_finite()
+    }
+}
+
+/// The policy pair the engines replay (options structs embed this; the
+/// default reproduces the serving coordinator's defaults).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FailoverPolicy {
+    pub retry: RetryPolicy,
+    pub checkpoint: CheckpointConfig,
+}
+
+/// Full failover configuration of the live coordinator: the fault
+/// schedule to replay plus the recovery policy.
+#[derive(Clone, Debug)]
+pub struct FailoverConfig {
+    pub schedule: FaultSchedule,
+    pub policy: FailoverPolicy,
+    /// Edge devices precede edge servers in the paper topology's node
+    /// numbering; ES node ids map onto worker indices round-robin.
+    pub num_eds: usize,
+}
+
+/// Failover counters surfaced on [`ServeReport`]. `abandoned` counts
+/// accepted requests dropped without service — the degradation contract
+/// keeps it at zero (asserted by tests and the CI smoke).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FailoverStats {
+    /// Requests completed by a different worker than their first dispatch.
+    pub reroutes: u64,
+    /// Retry dispatches scheduled after a fault cancellation.
+    pub retries: u64,
+    /// Hedged duplicate attempts fired near the deadline.
+    pub hedges: u64,
+    /// New admissions shed while degraded (graceful degradation sheds
+    /// *new* work first; accepted work is never abandoned).
+    pub shed: u64,
+    /// Replica rejoins served from a checkpoint snapshot.
+    pub checkpoint_restores: u64,
+    /// Requests whose bounded retry budget ran out (still served late,
+    /// never dropped).
+    pub retry_exhausted: u64,
+    /// Accepted requests dropped without service — must stay zero.
+    pub abandoned: u64,
+}
+
+impl FailoverStats {
+    /// One-line report form (printed by `fmedge serve --faults`).
+    pub fn line(&self) -> String {
+        format!(
+            "rerouted {} retries {} hedges {} shed {} restores {} exhausted {} abandoned {}",
+            self.reroutes,
+            self.retries,
+            self.hedges,
+            self.shed,
+            self.checkpoint_restores,
+            self.retry_exhausted,
+            self.abandoned
+        )
+    }
+}
+
+/// One compiled worker-pool outage transition.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WorkerEvent {
+    pub at_ms: f64,
+    pub worker: usize,
+    pub up: bool,
+}
+
+/// Compile a [`FaultSchedule`] onto a worker pool: ES node outages map
+/// round-robin onto worker indices (`worker = (node - num_eds) %
+/// workers`); a core-replica fail-stop becomes a worker restart whose
+/// duration is the checkpoint restore clock (cold start when
+/// checkpointing is disabled). Link events and ED nodes do not exist on
+/// the serving path and are ignored.
+pub fn compile_worker_events(
+    schedule: &FaultSchedule,
+    workers: usize,
+    num_eds: usize,
+    checkpoint: &CheckpointConfig,
+) -> Vec<WorkerEvent> {
+    let mut out = Vec::new();
+    if workers == 0 {
+        return out;
+    }
+    let map = |node: usize| -> Option<usize> {
+        (node >= num_eds).then(|| (node - num_eds) % workers)
+    };
+    for ev in schedule.events() {
+        match ev.kind {
+            FaultKind::NodeDown { node } => {
+                if let Some(w) = map(node) {
+                    out.push(WorkerEvent { at_ms: ev.time_ms, worker: w, up: false });
+                }
+            }
+            FaultKind::NodeUp { node } => {
+                if let Some(w) = map(node) {
+                    out.push(WorkerEvent { at_ms: ev.time_ms, worker: w, up: true });
+                }
+            }
+            FaultKind::CoreReplicaFail { node, .. } => {
+                if let Some(w) = map(node) {
+                    let restart = if checkpoint.enabled() {
+                        checkpoint.restore_ms
+                    } else {
+                        checkpoint.cold_start_ms
+                    };
+                    out.push(WorkerEvent { at_ms: ev.time_ms, worker: w, up: false });
+                    out.push(WorkerEvent {
+                        at_ms: ev.time_ms + restart.max(0.0),
+                        worker: w,
+                        up: true,
+                    });
+                }
+            }
+            // Replica restarts pair with the engines' checkpoint/rejoin
+            // path; on the worker pool the synthesized pair above already
+            // models the restart. Link faults have no serving analogue.
+            FaultKind::CoreReplicaRestart { .. }
+            | FaultKind::LinkDown { .. }
+            | FaultKind::LinkUp { .. }
+            | FaultKind::LinkBandwidth { .. } => {}
+        }
+    }
+    out.sort_by(|a, b| {
+        a.at_ms
+            .partial_cmp(&b.at_ms)
+            .unwrap()
+            .then_with(|| a.worker.cmp(&b.worker))
+            .then_with(|| a.up.cmp(&b.up))
+    });
+    out
+}
+
+/// Parse a `--faults` spec into a [`FaultSchedule`] over the paper
+/// topology's node numbering (EDs `0..num_eds`, ESs following).
+///
+/// Comma-separated forms, times in ms:
+/// * `zone@START+DUR` — a contiguous half of the edge servers (at least
+///   one, never all when more than one exists) goes down at `START` and
+///   recovers `DUR` later;
+/// * `esK@START+DUR` — edge server `K` (0-based) alone.
+pub fn parse_fault_spec(
+    spec: &str,
+    num_eds: usize,
+    num_ess: usize,
+) -> Result<FaultSchedule, String> {
+    if num_ess == 0 {
+        return Err("topology has no edge servers to fault".into());
+    }
+    let mut events = Vec::new();
+    let mut outage = |nodes: &[usize], start: f64, dur: f64| {
+        for &v in nodes {
+            events.push(FaultEvent { time_ms: start, kind: FaultKind::NodeDown { node: v } });
+            events.push(FaultEvent {
+                time_ms: start + dur,
+                kind: FaultKind::NodeUp { node: v },
+            });
+        }
+    };
+    for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let (head, times) = part
+            .split_once('@')
+            .ok_or_else(|| format!("`{part}`: expected FORM@START+DUR"))?;
+        let (start, dur) = times
+            .split_once('+')
+            .ok_or_else(|| format!("`{part}`: expected START+DUR after `@`"))?;
+        let start: f64 = start
+            .trim()
+            .parse()
+            .map_err(|_| format!("`{part}`: bad start time `{start}`"))?;
+        let dur: f64 = dur
+            .trim()
+            .parse()
+            .map_err(|_| format!("`{part}`: bad duration `{dur}`"))?;
+        if !(start >= 0.0 && dur > 0.0 && start.is_finite() && dur.is_finite()) {
+            return Err(format!("`{part}`: times must be finite, start >= 0, dur > 0"));
+        }
+        if head == "zone" {
+            let mut k = (num_ess / 2).max(1);
+            if num_ess > 1 {
+                k = k.min(num_ess - 1);
+            }
+            let zone: Vec<usize> = (0..k).map(|i| num_eds + i).collect();
+            outage(&zone, start, dur);
+        } else if let Some(idx) = head.strip_prefix("es") {
+            let k: usize = idx
+                .parse()
+                .map_err(|_| format!("`{part}`: bad edge-server index `{idx}`"))?;
+            if k >= num_ess {
+                return Err(format!(
+                    "`{part}`: edge server {k} out of range (topology has {num_ess})"
+                ));
+            }
+            outage(&[num_eds + k], start, dur);
+        } else {
+            return Err(format!("`{part}`: unknown form `{head}` (zone|esK)"));
+        }
+    }
+    if events.is_empty() {
+        return Err("empty fault spec".into());
+    }
+    Ok(FaultSchedule::from_events(events))
+}
+
+// ---------------------------------------------------------------------------
+// Virtual-time replay server
+// ---------------------------------------------------------------------------
+
+/// One request of a virtual serving run.
+#[derive(Clone, Copy, Debug)]
+pub struct VirtualRequest {
+    pub id: u64,
+    pub arrive_ms: f64,
+    pub deadline_ms: f64,
+}
+
+/// Replay-server configuration (the virtual analogue of
+/// [`super::ServeConfig`]).
+#[derive(Clone, Debug)]
+pub struct ReplayConfig {
+    pub workers: usize,
+    /// Waiting-queue bound; arrivals beyond it are shed.
+    pub queue_capacity: usize,
+    /// Deterministic per-request service time (ms) — stands in for the
+    /// `g_{m,ε}` budget of the one serving stage.
+    pub proc_ms: f64,
+    pub policy: FailoverPolicy,
+}
+
+impl Default for ReplayConfig {
+    fn default() -> Self {
+        ReplayConfig {
+            workers: 2,
+            queue_capacity: 1024,
+            proc_ms: 2.0,
+            policy: FailoverPolicy::default(),
+        }
+    }
+}
+
+/// Outcome of a virtual serving run. Bit-deterministic: identical inputs
+/// produce identical counters and latencies, which is what
+/// `rust/tests/failover.rs` asserts across repeated runs.
+#[derive(Clone, Debug)]
+pub struct ReplayReport {
+    pub accepted: u64,
+    pub served: u64,
+    pub on_time: u64,
+    pub latencies_ms: Vec<f64>,
+    /// Virtual time of the last completion.
+    pub horizon_ms: f64,
+    pub stats: FailoverStats,
+}
+
+impl ReplayReport {
+    /// Project onto the live coordinator's report type (virtual time
+    /// becomes the elapsed duration; batching is per-request here).
+    pub fn to_serve_report(&self) -> ServeReport {
+        ServeReport {
+            served: self.served,
+            rejected: self.stats.shed,
+            on_time: self.on_time,
+            batches: self.served,
+            elapsed: Duration::from_secs_f64(self.horizon_ms.max(0.0) / 1e3),
+            latency_ms: Summary::of(&self.latencies_ms),
+            batch_fill: 1.0,
+            failover: self.stats,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Ev {
+    Arrive(usize),
+    Net(usize),
+    /// Attempt completion: `(worker, assignment generation)`.
+    Done(usize, u64),
+    /// Backoff expiry / restart-ready: re-enqueue request `idx`.
+    Wake(usize),
+}
+
+#[derive(Clone, Copy)]
+struct Timed {
+    at_ms: f64,
+    seq: u64,
+    ev: Ev,
+}
+
+impl PartialEq for Timed {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+impl Eq for Timed {}
+impl PartialOrd for Timed {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Timed {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.at_ms
+            .partial_cmp(&other.at_ms)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| self.seq.cmp(&other.seq))
+    }
+}
+
+struct ReqState {
+    arrive_ms: f64,
+    deadline_ms: f64,
+    id: u64,
+    attempts: u32,
+    completed: bool,
+    /// This request was cancelled off a dying worker at least once.
+    rerouted: bool,
+    exhausted_counted: bool,
+}
+
+struct WorkerState {
+    /// Outage depth (overlapping down events nest); up iff zero.
+    down: u32,
+    /// Current assignment: `(request index, assignment generation)`.
+    serving: Option<(usize, u64)>,
+    /// Not dispatchable before this (restart clock after recovery).
+    free_at: f64,
+}
+
+/// Deterministic single-threaded replay of the serving path under a
+/// fault schedule: same retry/backoff/hedge/shed semantics as the live
+/// coordinator, in virtual time. See the module docs for the role split.
+pub struct ReplayServer {
+    cfg: ReplayConfig,
+    outages: Vec<WorkerEvent>,
+}
+
+impl ReplayServer {
+    pub fn new(cfg: ReplayConfig, schedule: &FaultSchedule, num_eds: usize) -> Self {
+        let outages =
+            compile_worker_events(schedule, cfg.workers, num_eds, &cfg.policy.checkpoint);
+        ReplayServer { cfg, outages }
+    }
+
+    /// Serve `arrivals` (sorted by arrival time) to completion.
+    pub fn run(&self, arrivals: &[VirtualRequest]) -> ReplayReport {
+        let retry = self.cfg.policy.retry;
+        let checkpoint = self.cfg.policy.checkpoint;
+        let mut heap: BinaryHeap<Reverse<Timed>> = BinaryHeap::new();
+        let mut seq = 0u64;
+        let mut push = |heap: &mut BinaryHeap<Reverse<Timed>>, seq: &mut u64, at: f64, ev: Ev| {
+            *seq += 1;
+            heap.push(Reverse(Timed { at_ms: at, seq: *seq, ev }));
+        };
+        for (i, a) in arrivals.iter().enumerate() {
+            push(&mut heap, &mut seq, a.arrive_ms, Ev::Arrive(i));
+        }
+        for (i, o) in self.outages.iter().enumerate() {
+            push(&mut heap, &mut seq, o.at_ms, Ev::Net(i));
+        }
+
+        let mut reqs: Vec<ReqState> = arrivals
+            .iter()
+            .map(|a| ReqState {
+                arrive_ms: a.arrive_ms,
+                deadline_ms: a.deadline_ms,
+                id: a.id,
+                attempts: 0,
+                completed: false,
+                rerouted: false,
+                exhausted_counted: false,
+            })
+            .collect();
+        let mut workers: Vec<WorkerState> = (0..self.cfg.workers.max(1))
+            .map(|_| WorkerState { down: 0, serving: None, free_at: 0.0 })
+            .collect();
+        let mut queue: VecDeque<usize> = VecDeque::new();
+        let mut stats = FailoverStats::default();
+        let mut accepted = 0u64;
+        let mut served = 0u64;
+        let mut on_time = 0u64;
+        let mut latencies = Vec::new();
+        let mut gen = 0u64;
+        let mut horizon = 0.0f64;
+
+        // Dispatch as much queued work as free, healthy workers allow.
+        // Hedging fires a duplicate on a second free worker when slack
+        // is short; the first completion wins, the duplicate is ignored.
+        fn dispatch(
+            now: f64,
+            queue: &mut VecDeque<usize>,
+            reqs: &mut [ReqState],
+            workers: &mut [WorkerState],
+            heap: &mut BinaryHeap<Reverse<Timed>>,
+            seq: &mut u64,
+            gen: &mut u64,
+            stats: &mut FailoverStats,
+            retry: &RetryPolicy,
+            proc_ms: f64,
+        ) {
+            loop {
+                let free: Vec<usize> = workers
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, w)| w.down == 0 && w.serving.is_none() && w.free_at <= now)
+                    .map(|(i, _)| i)
+                    .collect();
+                if free.is_empty() {
+                    break;
+                }
+                let ri = loop {
+                    match queue.pop_front() {
+                        None => return,
+                        Some(ri) if !reqs[ri].completed => break ri,
+                        Some(_) => continue, // completed by a hedge
+                    }
+                };
+                let slack = reqs[ri].deadline_ms - (now - reqs[ri].arrive_ms);
+                // Hedge when the relative slack is short, or when even a
+                // single attempt's g-derived budget may no longer fit.
+                let hedge = free.len() > 1
+                    && (retry.should_hedge(slack, reqs[ri].deadline_ms)
+                        || slack < retry.attempt_timeout_ms(reqs[ri].deadline_ms, proc_ms));
+                let n_attempts = if hedge { 2 } else { 1 };
+                if hedge {
+                    stats.hedges += 1;
+                }
+                for &w in free.iter().take(n_attempts) {
+                    *gen += 1;
+                    workers[w].serving = Some((ri, *gen));
+                    *seq += 1;
+                    heap.push(Reverse(Timed {
+                        at_ms: now + proc_ms,
+                        seq: *seq,
+                        ev: Ev::Done(w, *gen),
+                    }));
+                }
+            }
+        }
+
+        while let Some(Reverse(t)) = heap.pop() {
+            let now = t.at_ms;
+            horizon = horizon.max(now);
+            match t.ev {
+                Ev::Arrive(i) => {
+                    if queue.len() >= self.cfg.queue_capacity {
+                        // Graceful degradation: shed the NEW admission.
+                        stats.shed += 1;
+                    } else {
+                        accepted += 1;
+                        queue.push_back(i);
+                    }
+                }
+                Ev::Net(i) => {
+                    let o = self.outages[i];
+                    let w = &mut workers[o.worker];
+                    if !o.up {
+                        w.down += 1;
+                        if w.down == 1 {
+                            if let Some((ri, _)) = w.serving.take() {
+                                // In-flight on a dying worker: re-route,
+                                // not drop. Backoff before re-dispatch.
+                                let r = &mut reqs[ri];
+                                if !r.completed {
+                                    r.attempts += 1;
+                                    r.rerouted = true;
+                                    stats.retries += 1;
+                                    if retry.exhausted(r.attempts) && !r.exhausted_counted {
+                                        r.exhausted_counted = true;
+                                        stats.retry_exhausted += 1;
+                                    }
+                                    let back = retry.backoff_ms(r.attempts, r.id);
+                                    push(&mut heap, &mut seq, now + back, Ev::Wake(ri));
+                                }
+                            }
+                        }
+                    } else {
+                        w.down = w.down.saturating_sub(1);
+                        if w.down == 0 {
+                            // Restart clock: checkpointed restore vs cold
+                            // start (mirrors `CoreRouter::rejoin`).
+                            if checkpoint.enabled() {
+                                stats.checkpoint_restores += 1;
+                                w.free_at = now + checkpoint.restore_ms;
+                            } else {
+                                w.free_at = now + checkpoint.cold_start_ms;
+                            }
+                            let at = w.free_at;
+                            // A Wake with no request re-enqueues nothing
+                            // but triggers a dispatch pass: reuse the
+                            // sentinel usize::MAX.
+                            push(&mut heap, &mut seq, at, Ev::Wake(usize::MAX));
+                        }
+                    }
+                }
+                Ev::Done(w, g) => {
+                    let matched = workers[w].serving.map_or(false, |(_, cur)| cur == g);
+                    if matched {
+                        let (ri, _) = workers[w].serving.take().unwrap();
+                        let r = &mut reqs[ri];
+                        if !r.completed {
+                            r.completed = true;
+                            served += 1;
+                            let lat = now - r.arrive_ms;
+                            latencies.push(lat);
+                            if lat <= r.deadline_ms {
+                                on_time += 1;
+                            }
+                            if r.rerouted {
+                                stats.reroutes += 1;
+                            }
+                        }
+                        // else: the hedge partner won — just free up.
+                    }
+                }
+                Ev::Wake(ri) => {
+                    if ri != usize::MAX && !reqs[ri].completed {
+                        queue.push_back(ri);
+                    }
+                }
+            }
+            dispatch(
+                now,
+                &mut queue,
+                &mut reqs,
+                &mut workers,
+                &mut heap,
+                &mut seq,
+                &mut gen,
+                &mut stats,
+                &retry,
+                self.cfg.proc_ms,
+            );
+            // Drain-phase fast-forward: if nothing is scheduled but
+            // accepted work remains (every worker down past the last
+            // recovery event), force-recover the pool so accepted work is
+            // served, never abandoned.
+            if heap.is_empty() && !queue.is_empty() {
+                for w in workers.iter_mut() {
+                    w.down = 0;
+                    w.free_at = now;
+                }
+                dispatch(
+                    now,
+                    &mut queue,
+                    &mut reqs,
+                    &mut workers,
+                    &mut heap,
+                    &mut seq,
+                    &mut gen,
+                    &mut stats,
+                    &retry,
+                    self.cfg.proc_ms,
+                );
+            }
+        }
+
+        stats.abandoned = accepted - served;
+        ReplayReport {
+            accepted,
+            served,
+            on_time,
+            latencies_ms: latencies,
+            horizon_ms: horizon,
+            stats,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_grows_capped_and_jitter_is_deterministic() {
+        let p = RetryPolicy::default();
+        let b1 = p.backoff_ms(1, 42);
+        let b2 = p.backoff_ms(2, 42);
+        let b9 = p.backoff_ms(9, 42);
+        assert!(b1 > 0.0);
+        assert!(b2 > b1 * 1.2, "second retry backs off further: {b1} -> {b2}");
+        assert!(b9 <= p.max_backoff_ms, "capped at the ceiling");
+        assert_eq!(p.backoff_ms(3, 7), p.backoff_ms(3, 7), "deterministic");
+        assert_ne!(p.backoff_ms(3, 7), p.backoff_ms(3, 8), "keyed by id");
+        assert!(p.exhausted(p.max_attempts + 1));
+        assert!(!p.exhausted(p.max_attempts));
+    }
+
+    #[test]
+    fn hedge_fires_only_near_deadline() {
+        let p = RetryPolicy::default();
+        assert!(!p.should_hedge(50.0, 100.0));
+        assert!(p.should_hedge(10.0, 100.0));
+        let off = RetryPolicy { hedge_slack_frac: 0.0, ..p };
+        assert!(!off.should_hedge(1.0, 100.0));
+    }
+
+    #[test]
+    fn attempt_timeout_tracks_g_budget() {
+        let p = RetryPolicy::default();
+        assert!((p.attempt_timeout_ms(100.0, 10.0) - 15.0).abs() < 1e-12);
+        assert!((p.attempt_timeout_ms(12.0, 10.0) - 12.0).abs() < 1e-12, "deadline-capped");
+    }
+
+    #[test]
+    fn spec_parser_builds_paired_outages() {
+        let s = parse_fault_spec("zone@100+50", 10, 6).unwrap();
+        // half of 6 ESs = 3 nodes, down + up each.
+        assert_eq!(s.len(), 6);
+        assert!(matches!(
+            s.events()[0].kind,
+            FaultKind::NodeDown { node } if node >= 10
+        ));
+        let s1 = parse_fault_spec("es2@10+5", 10, 6).unwrap();
+        assert_eq!(s1.len(), 2);
+        assert!(matches!(s1.events()[0].kind, FaultKind::NodeDown { node: 12 }));
+        assert!(parse_fault_spec("es9@10+5", 10, 6).is_err());
+        assert!(parse_fault_spec("zone@10", 10, 6).is_err());
+        assert!(parse_fault_spec("bogus@1+1", 10, 6).is_err());
+        assert!(parse_fault_spec("", 10, 6).is_err());
+    }
+
+    #[test]
+    fn worker_compiler_maps_es_nodes_and_synthesizes_restarts() {
+        let sched = FaultSchedule::from_events(vec![
+            FaultEvent { time_ms: 10.0, kind: FaultKind::NodeDown { node: 10 } },
+            FaultEvent { time_ms: 20.0, kind: FaultKind::NodeUp { node: 10 } },
+            FaultEvent {
+                time_ms: 15.0,
+                kind: FaultKind::CoreReplicaFail { node: 11, core_idx: 0 },
+            },
+            FaultEvent { time_ms: 5.0, kind: FaultKind::LinkDown { link: 0 } },
+            FaultEvent { time_ms: 6.0, kind: FaultKind::NodeDown { node: 3 } }, // ED: ignored
+        ]);
+        let cp = CheckpointConfig::default();
+        let evs = compile_worker_events(&sched, 2, 10, &cp);
+        // node 10 -> worker 0 (down+up), replica fail at 11 -> worker 1
+        // down + synthesized up after restore_ms.
+        assert_eq!(evs.len(), 4);
+        assert_eq!(evs[0], WorkerEvent { at_ms: 10.0, worker: 0, up: false });
+        assert!(evs
+            .iter()
+            .any(|e| e.worker == 1 && !e.up && (e.at_ms - 15.0).abs() < 1e-12));
+        assert!(evs
+            .iter()
+            .any(|e| e.worker == 1 && e.up && (e.at_ms - (15.0 + cp.restore_ms)).abs() < 1e-12));
+    }
+
+    fn open_loop(n: usize, gap_ms: f64, deadline_ms: f64) -> Vec<VirtualRequest> {
+        (0..n)
+            .map(|i| VirtualRequest {
+                id: i as u64,
+                arrive_ms: i as f64 * gap_ms,
+                deadline_ms,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fault_free_replay_serves_everything_on_time() {
+        let cfg = ReplayConfig { workers: 2, proc_ms: 1.0, ..Default::default() };
+        let server = ReplayServer::new(cfg, &FaultSchedule::none(), 10);
+        let r = server.run(&open_loop(100, 1.0, 50.0));
+        assert_eq!(r.accepted, 100);
+        assert_eq!(r.served, 100);
+        assert_eq!(r.on_time, 100);
+        assert_eq!(r.stats, FailoverStats::default());
+    }
+
+    #[test]
+    fn outage_reroutes_in_flight_work_and_abandons_nothing() {
+        let sched = parse_fault_spec("es0@20+100", 10, 4).unwrap();
+        let cfg = ReplayConfig { workers: 2, proc_ms: 5.0, ..Default::default() };
+        let server = ReplayServer::new(cfg, &sched, 10);
+        let r = server.run(&open_loop(200, 1.0, 40.0));
+        assert_eq!(r.accepted, 200);
+        assert_eq!(r.served, 200, "every accepted request is served");
+        assert_eq!(r.stats.abandoned, 0);
+        assert!(r.stats.retries > 0, "in-flight work on the dying worker retried");
+        assert!(r.stats.reroutes > 0, "retried work completes elsewhere");
+        assert!(r.on_time < r.served, "a long outage costs some deadlines");
+    }
+
+    #[test]
+    fn replay_is_bit_deterministic() {
+        let sched = parse_fault_spec("zone@30+60,es1@150+40", 10, 4).unwrap();
+        let cfg = ReplayConfig { workers: 3, proc_ms: 2.5, ..Default::default() };
+        let server = ReplayServer::new(cfg, &sched, 10);
+        let arr = open_loop(500, 0.7, 30.0);
+        let a = server.run(&arr);
+        let b = server.run(&arr);
+        assert_eq!(a.stats, b.stats);
+        assert_eq!(a.served, b.served);
+        assert_eq!(a.on_time, b.on_time);
+        assert_eq!(a.latencies_ms, b.latencies_ms);
+    }
+
+    #[test]
+    fn saturation_sheds_new_admissions_first() {
+        let sched = parse_fault_spec("zone@0+500", 10, 2).unwrap();
+        let cfg = ReplayConfig {
+            workers: 1,
+            queue_capacity: 8,
+            proc_ms: 10.0,
+            ..Default::default()
+        };
+        let server = ReplayServer::new(cfg, &sched, 10);
+        let r = server.run(&open_loop(100, 1.0, 50.0));
+        assert!(r.stats.shed > 0, "overload under outage sheds new work");
+        assert_eq!(r.accepted, r.served, "accepted work is never abandoned");
+        assert_eq!(r.stats.abandoned, 0);
+    }
+}

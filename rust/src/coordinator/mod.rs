@@ -10,9 +10,15 @@
 //! executable. Latency/throughput are recorded per request.
 
 mod batcher;
+mod failover;
 mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
+pub use failover::{
+    compile_worker_events, parse_fault_spec, CheckpointConfig, FailoverConfig, FailoverPolicy,
+    FailoverStats, ReplayConfig, ReplayReport, ReplayServer, RetryPolicy, VirtualRequest,
+    WorkerEvent,
+};
 pub use server::{Coordinator, ServeConfig, ServeError, ServeReport};
 
 /// One inference request travelling through the coordinator.
@@ -92,6 +98,25 @@ mod tests {
         let batch = b.flush().expect("explicit flush");
         assert_eq!(batch.len(), 2);
         assert!(b.is_empty());
+    }
+
+    #[test]
+    fn empty_report_rates_are_defined_zero() {
+        // Regression: a run that served nothing used to report a 100%
+        // on-time rate (0/0 defaulting to 1.0) and an elapsed-dependent
+        // throughput. Both are defined as exactly 0.0.
+        let r = ServeReport {
+            served: 0,
+            rejected: 7,
+            on_time: 0,
+            batches: 0,
+            elapsed: Duration::from_secs(0),
+            latency_ms: crate::metrics::Summary::of(&[]),
+            batch_fill: 0.0,
+            failover: FailoverStats::default(),
+        };
+        assert_eq!(r.on_time_rate(), 0.0);
+        assert_eq!(r.throughput_rps(), 0.0);
     }
 
     fn req(id: u64) -> Request {

@@ -1,6 +1,11 @@
-//! The leader loop: bounded admission, batching, worker dispatch.
+//! The leader loop: bounded admission, batching, worker dispatch — and,
+//! when a [`FailoverConfig`] is armed, fault-aware re-routing: a worker
+//! that "dies" mid-batch (its mapped edge server is down in the replayed
+//! schedule) loses its results and re-routes the batch to the surviving
+//! pool with bounded, jittered backoff; new admissions are shed first and
+//! accepted work is never abandoned (`in_flight` gates shutdown).
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -10,6 +15,7 @@ use crate::metrics::Summary;
 use crate::runtime::{shapes, MsBlockAccel, Runtime};
 
 use super::batcher::{BatchPolicy, Batcher};
+use super::failover::{compile_worker_events, FailoverConfig, FailoverStats, WorkerEvent};
 use super::Request;
 
 /// Coordinator configuration.
@@ -25,6 +31,9 @@ pub struct ServeConfig {
     pub real_compute: bool,
     /// Artifact directory (for `real_compute`).
     pub artifact_dir: std::path::PathBuf,
+    /// Fault schedule + retry/checkpoint policy; `None` serves exactly as
+    /// before this field existed (the fault-free path is untouched).
+    pub failover: Option<FailoverConfig>,
 }
 
 impl Default for ServeConfig {
@@ -35,6 +44,7 @@ impl Default for ServeConfig {
             batch: BatchPolicy::default(),
             real_compute: true,
             artifact_dir: Runtime::default_dir(),
+            failover: None,
         }
     }
 }
@@ -72,20 +82,49 @@ pub struct ServeReport {
     pub elapsed: Duration,
     pub latency_ms: Summary,
     pub batch_fill: f64,
+    /// Failover counters; all-zero without a [`FailoverConfig`].
+    pub failover: FailoverStats,
 }
 
 impl ServeReport {
+    /// Served requests per second; a run that served nothing has, by
+    /// definition, zero throughput (not a 0/0 artifact).
     pub fn throughput_rps(&self) -> f64 {
+        if self.served == 0 {
+            return 0.0;
+        }
         self.served as f64 / self.elapsed.as_secs_f64().max(1e-9)
     }
 
+    /// On-time fraction over *served* requests. Zero served means zero
+    /// demonstrated timeliness — defined as `0.0`, never a divide by
+    /// zero (and no longer the misleading `1.0` it used to report).
     pub fn on_time_rate(&self) -> f64 {
         if self.served == 0 {
-            1.0
-        } else {
-            self.on_time as f64 / self.served as f64
+            return 0.0;
         }
+        self.on_time as f64 / self.served as f64
     }
+}
+
+/// Failover runtime state shared by leader, workers, and the timeline
+/// thread. Absent (`None`) on the fault-free path.
+struct FailShared {
+    /// Per-worker outage depth (overlapping outages nest); up iff 0.
+    down: Vec<AtomicU32>,
+    reroutes: AtomicU64,
+    retries: AtomicU64,
+    shed: AtomicU64,
+    restores: AtomicU64,
+    exhausted: AtomicU64,
+    /// Batches handed to the dispatch channel and not yet fully served;
+    /// shutdown refuses to stop workers until this drains to zero — the
+    /// "never abandon accepted work" guarantee.
+    in_flight: AtomicU64,
+    /// Drain phase: outages are no longer honored (the schedule's
+    /// recoveries all fire eventually; shutdown fast-forwards them so
+    /// accepted work completes).
+    drain: AtomicBool,
 }
 
 struct Shared {
@@ -95,12 +134,14 @@ struct Shared {
     batches: AtomicU64,
     slots_filled: AtomicU64,
     stop: AtomicBool,
+    fail: Option<Arc<FailShared>>,
 }
 
 /// The serving coordinator (leader thread + worker pool).
 pub struct Coordinator {
     tx: Option<SyncSender<Request>>,
     leader: Option<JoinHandle<()>>,
+    timeline: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     shared: Arc<Shared>,
     rejected: AtomicU64,
@@ -108,10 +149,31 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start the coordinator: leader + `cfg.workers` PJRT workers.
+    /// Start the coordinator: leader + `cfg.workers` PJRT workers (+ a
+    /// fault-timeline thread when failover is armed).
     pub fn start(cfg: ServeConfig) -> Result<Self, ServeError> {
         let (tx, rx) = sync_channel::<Request>(cfg.queue_capacity);
-        let (btx, brx) = sync_channel::<Vec<Request>>(cfg.workers * 2);
+        let (btx, brx) = sync_channel::<(Vec<Request>, u32)>(cfg.workers * 2);
+        let fail: Option<(Arc<FailShared>, Vec<WorkerEvent>)> =
+            cfg.failover.as_ref().map(|fo| {
+                let f = Arc::new(FailShared {
+                    down: (0..cfg.workers).map(|_| AtomicU32::new(0)).collect(),
+                    reroutes: AtomicU64::new(0),
+                    retries: AtomicU64::new(0),
+                    shed: AtomicU64::new(0),
+                    restores: AtomicU64::new(0),
+                    exhausted: AtomicU64::new(0),
+                    in_flight: AtomicU64::new(0),
+                    drain: AtomicBool::new(false),
+                });
+                let events = compile_worker_events(
+                    &fo.schedule,
+                    cfg.workers,
+                    fo.num_eds,
+                    &fo.policy.checkpoint,
+                );
+                (f, events)
+            });
         let shared = Arc::new(Shared {
             latencies_ms: Mutex::new(Vec::new()),
             served: AtomicU64::new(0),
@@ -119,6 +181,7 @@ impl Coordinator {
             batches: AtomicU64::new(0),
             slots_filled: AtomicU64::new(0),
             stop: AtomicBool::new(false),
+            fail: fail.as_ref().map(|(f, _)| Arc::clone(f)),
         });
 
         // Validate the artifact once up-front (fail fast on `make artifacts`
@@ -136,22 +199,43 @@ impl Coordinator {
             let brx = Arc::clone(&brx);
             let shared = Arc::clone(&shared);
             let cfg2 = cfg.clone();
+            // Only failover workers hold a dispatch sender (to re-route);
+            // on the fault-free path the channel must disconnect when the
+            // leader drops it, exactly as before.
+            let wtx = shared.fail.is_some().then(|| btx.clone());
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("fmedge-worker-{wid}"))
                     .spawn(move || {
                         let accel = if cfg2.real_compute {
                             Runtime::cpu(&cfg2.artifact_dir)
-                                .and_then(|rt| MsBlockAccel::load(&rt))
+                                .and_then(|rt| MsBlockAccel::load_with_retry(&rt, 3))
                                 .ok()
                         } else {
                             None
                         };
-                        worker_loop(brx, shared, accel, &cfg2)
+                        worker_loop(wid, brx, shared, accel, &cfg2, wtx)
                     })
                     .expect("spawn worker"),
             );
         }
+
+        // Fault timeline: replays the compiled worker outages in wall
+        // time, flipping per-worker down flags. Sleeps in short steps so
+        // the drain phase can fast-forward it.
+        let started = Instant::now();
+        let timeline = fail.as_ref().map(|(f, events)| {
+            let f = Arc::clone(f);
+            let events = events.clone();
+            let checkpointing = cfg
+                .failover
+                .as_ref()
+                .map_or(false, |fo| fo.policy.checkpoint.enabled());
+            std::thread::Builder::new()
+                .name("fmedge-faultline".into())
+                .spawn(move || timeline_loop(f, events, started, checkpointing))
+                .expect("spawn timeline")
+        });
 
         // Leader: admission -> batching -> dispatch.
         let leader = {
@@ -166,31 +250,49 @@ impl Coordinator {
         Ok(Coordinator {
             tx: Some(tx),
             leader: Some(leader),
+            timeline,
             workers,
             shared,
             rejected: AtomicU64::new(0),
-            started: Instant::now(),
+            started,
         })
     }
 
-    /// Submit one request; `Err(Saturated)` signals backpressure.
+    /// Submit one request; `Err(Saturated)` signals backpressure (counted
+    /// as shed load when failover is armed: degradation rejects *new*
+    /// admissions first).
     pub fn submit(&self, req: Request) -> Result<(), ServeError> {
         let tx = self.tx.as_ref().ok_or(ServeError::Closed)?;
         match tx.try_send(req) {
             Ok(()) => Ok(()),
             Err(TrySendError::Full(_)) => {
                 self.rejected.fetch_add(1, Ordering::Relaxed);
+                if let Some(f) = &self.shared.fail {
+                    f.shed.fetch_add(1, Ordering::Relaxed);
+                }
                 Err(ServeError::Saturated)
             }
             Err(TrySendError::Disconnected(_)) => Err(ServeError::Closed),
         }
     }
 
-    /// Drain the pipeline and return the final report.
+    /// Drain the pipeline and return the final report. With failover
+    /// armed, shutdown enters the drain phase (outages fast-forwarded to
+    /// their recoveries) and waits for every accepted batch to be served
+    /// before stopping the pool — accepted work is never abandoned.
     pub fn shutdown(mut self) -> ServeReport {
         drop(self.tx.take()); // closes the admission channel
         if let Some(l) = self.leader.take() {
             let _ = l.join();
+        }
+        if let Some(f) = &self.shared.fail {
+            f.drain.store(true, Ordering::SeqCst);
+            if let Some(t) = self.timeline.take() {
+                let _ = t.join();
+            }
+            while f.in_flight.load(Ordering::SeqCst) > 0 {
+                std::thread::sleep(Duration::from_millis(1));
+            }
         }
         self.shared.stop.store(true, Ordering::SeqCst);
         for w in self.workers.drain(..) {
@@ -199,6 +301,19 @@ impl Coordinator {
         let latencies = self.shared.latencies_ms.lock().unwrap();
         let batches = self.shared.batches.load(Ordering::Relaxed);
         let filled = self.shared.slots_filled.load(Ordering::Relaxed);
+        let failover = match &self.shared.fail {
+            None => FailoverStats::default(),
+            Some(f) => FailoverStats {
+                reroutes: f.reroutes.load(Ordering::Relaxed),
+                retries: f.retries.load(Ordering::Relaxed),
+                hedges: 0, // wall-clock pool work-steals; hedging is
+                // exercised by the virtual replay and both engines
+                shed: f.shed.load(Ordering::Relaxed),
+                checkpoint_restores: f.restores.load(Ordering::Relaxed),
+                retry_exhausted: f.exhausted.load(Ordering::Relaxed),
+                abandoned: f.in_flight.load(Ordering::SeqCst),
+            },
+        };
         ServeReport {
             served: self.shared.served.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
@@ -211,55 +326,122 @@ impl Coordinator {
             } else {
                 filled as f64 / (batches as f64 * shapes::MSBLOCK_B as f64)
             },
+            failover,
+        }
+    }
+}
+
+/// Replay the compiled worker outages in wall time. Short sleep steps so
+/// `drain` can cut the replay off at shutdown (remaining recoveries are
+/// implied: the drain phase treats every worker as up).
+fn timeline_loop(
+    f: Arc<FailShared>,
+    events: Vec<WorkerEvent>,
+    started: Instant,
+    checkpointing: bool,
+) {
+    for ev in events {
+        loop {
+            if f.drain.load(Ordering::SeqCst) {
+                return;
+            }
+            let now_ms = started.elapsed().as_secs_f64() * 1e3;
+            if now_ms >= ev.at_ms {
+                break;
+            }
+            let wait = (ev.at_ms - now_ms).min(5.0);
+            std::thread::sleep(Duration::from_secs_f64(wait.max(0.05) / 1e3));
+        }
+        let w = &f.down[ev.worker];
+        if ev.up {
+            let prev = w.load(Ordering::SeqCst);
+            w.store(prev.saturating_sub(1), Ordering::SeqCst);
+            if prev == 1 && checkpointing {
+                f.restores.fetch_add(1, Ordering::Relaxed);
+            }
+        } else {
+            w.fetch_add(1, Ordering::SeqCst);
         }
     }
 }
 
 fn leader_loop(
     rx: Receiver<Request>,
-    btx: SyncSender<Vec<Request>>,
+    btx: SyncSender<(Vec<Request>, u32)>,
     shared: Arc<Shared>,
     policy: BatchPolicy,
 ) {
     let mut batcher = Batcher::new(policy);
+    let send = |batch: Vec<Request>| -> Result<(), ()> {
+        if let Some(f) = &shared.fail {
+            f.in_flight.fetch_add(1, Ordering::SeqCst);
+        }
+        match btx.send((batch, 0)) {
+            Ok(()) => Ok(()),
+            Err(_) => {
+                if let Some(f) = &shared.fail {
+                    f.in_flight.fetch_sub(1, Ordering::SeqCst);
+                }
+                Err(())
+            }
+        }
+    };
     loop {
         match rx.recv_timeout(policy.max_wait.max(Duration::from_micros(200))) {
             Ok(req) => {
                 if let Some(batch) = batcher.push(req) {
-                    if btx.send(batch).is_err() {
+                    if send(batch).is_err() {
                         return;
                     }
                 }
             }
             Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
                 if let Some(batch) = batcher.poll() {
-                    if btx.send(batch).is_err() {
+                    if send(batch).is_err() {
                         return;
                     }
                 }
             }
             Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
                 if let Some(batch) = batcher.flush() {
-                    let _ = btx.send(batch);
+                    let _ = send(batch);
                 }
-                drop(btx); // workers drain and exit
-                let _ = shared; // lifetime clarity
-                return;
+                return; // drops btx: fault-free workers drain and exit
             }
         }
     }
 }
 
 fn worker_loop(
-    brx: Arc<Mutex<Receiver<Vec<Request>>>>,
+    wid: usize,
+    brx: Arc<Mutex<Receiver<(Vec<Request>, u32)>>>,
     shared: Arc<Shared>,
     accel: Option<MsBlockAccel>,
-    _cfg: &ServeConfig,
+    cfg: &ServeConfig,
+    wtx: Option<SyncSender<(Vec<Request>, u32)>>,
 ) {
     let slot = shapes::MSBLOCK_L * shapes::MSBLOCK_D;
     let mut buf = vec![0f32; shapes::MSBLOCK_B * slot];
+    let retry = cfg.failover.as_ref().map(|fo| fo.policy.retry);
+    let is_down = |shared: &Shared| -> bool {
+        match &shared.fail {
+            Some(f) if !f.drain.load(Ordering::SeqCst) => {
+                f.down[wid].load(Ordering::SeqCst) > 0
+            }
+            _ => false,
+        }
+    };
     loop {
-        let batch = {
+        // A down worker takes no new work (its mapped edge server is
+        // dark); the surviving pool keeps draining the shared channel.
+        if is_down(&shared) {
+            std::thread::sleep(Duration::from_micros(250));
+            if shared.stop.load(Ordering::SeqCst) {
+                return;
+            }
+            continue;
+        }
+        let (batch, attempts) = {
             let rx = brx.lock().unwrap();
             match rx.recv_timeout(Duration::from_millis(20)) {
                 Ok(b) => b,
@@ -270,6 +452,25 @@ fn worker_loop(
                     continue;
                 }
                 Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
+            }
+        };
+        // Failover defers result recording until the batch is known to
+        // have completed on a live node; the fault-free path records
+        // inline per chunk, exactly as it always has.
+        let deferred = shared.fail.is_some();
+        let record = |chunk: &[Request]| {
+            shared.batches.fetch_add(1, Ordering::Relaxed);
+            shared
+                .slots_filled
+                .fetch_add(chunk.len() as u64, Ordering::Relaxed);
+            let mut lat = shared.latencies_ms.lock().unwrap();
+            for req in chunk {
+                let ms = req.submitted.elapsed().as_secs_f64() * 1e3;
+                lat.push(ms);
+                shared.served.fetch_add(1, Ordering::Relaxed);
+                if ms <= req.deadline_ms {
+                    shared.on_time.fetch_add(1, Ordering::Relaxed);
+                }
             }
         };
         // Pack up to B request slots; surplus requests are chunked.
@@ -286,19 +487,39 @@ fn worker_loop(
                 // than crashing the worker (fault isolation).
                 let _ = accel.forward(&buf);
             }
-            shared.batches.fetch_add(1, Ordering::Relaxed);
-            shared
-                .slots_filled
-                .fetch_add(chunk.len() as u64, Ordering::Relaxed);
-            let mut lat = shared.latencies_ms.lock().unwrap();
-            for req in chunk {
-                let ms = req.submitted.elapsed().as_secs_f64() * 1e3;
-                lat.push(ms);
-                shared.served.fetch_add(1, Ordering::Relaxed);
-                if ms <= req.deadline_ms {
-                    shared.on_time.fetch_add(1, Ordering::Relaxed);
-                }
+            if !deferred {
+                record(chunk);
             }
+        }
+        if !deferred {
+            continue;
+        }
+        // The node died while this batch executed: its results are lost
+        // with it. Re-route to the surviving pool after a bounded,
+        // jittered backoff — the request is retried, never dropped.
+        if is_down(&shared) {
+            if let (Some(f), Some(tx), Some(rp)) = (&shared.fail, &wtx, &retry) {
+                let next = attempts + 1;
+                f.retries.fetch_add(1, Ordering::Relaxed);
+                f.reroutes.fetch_add(batch.len() as u64, Ordering::Relaxed);
+                if next == rp.max_attempts + 1 {
+                    f.exhausted.fetch_add(batch.len() as u64, Ordering::Relaxed);
+                }
+                let key = batch.first().map_or(wid as u64, |r| r.id);
+                let back = rp.backoff_ms(next, key);
+                std::thread::sleep(Duration::from_secs_f64(back.max(0.0) / 1e3));
+                if tx.send((batch, next)).is_ok() {
+                    continue;
+                }
+                // Channel gone (cannot happen while the pool lives): fall
+                // through and serve locally rather than abandon the batch.
+            }
+        }
+        for chunk in batch.chunks(shapes::MSBLOCK_B) {
+            record(chunk);
+        }
+        if let Some(f) = &shared.fail {
+            f.in_flight.fetch_sub(1, Ordering::SeqCst);
         }
     }
 }

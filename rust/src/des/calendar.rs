@@ -59,6 +59,11 @@ pub enum EventKind {
     /// timestamp (seeded into the calendar up front; absent without
     /// fault injection, keeping fault-free runs bit-identical).
     Fault { idx: usize },
+    /// Re-dispatch a fault-cancelled stage once its jittered backoff
+    /// window closes (scheduled only under fault injection). A no-op if
+    /// the stage was meanwhile dispatched, completed, or its task
+    /// dropped.
+    Retry { task: u64, local: usize },
 }
 
 /// A scheduled event.

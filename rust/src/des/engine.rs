@@ -23,7 +23,7 @@ use std::collections::HashMap;
 
 use crate::config::NUM_RESOURCES;
 use crate::controller::{LightRequest, VirtualQueues};
-use crate::coordinator::BatchPolicy;
+use crate::coordinator::{BatchPolicy, FailoverPolicy};
 use crate::faults::{DynamicTopology, FaultKind, FaultSchedule};
 use crate::metrics::{CostBook, MetricsCollector, TaskOutcome, TrialMetrics};
 use crate::microservice::{Application, MsClass};
@@ -48,6 +48,10 @@ pub struct DesOptions {
     /// Optional station batching: arrivals at a light station accumulate
     /// and flush on size or (simulated) age.
     pub batching: Option<BatchPolicy>,
+    /// Retry/backoff + checkpoint policy replayed under faults — the
+    /// same object the slotted engine and the serving coordinator use,
+    /// so agreement extends to retried executions. Inert without faults.
+    pub failover: FailoverPolicy,
 }
 
 impl DesOptions {
@@ -57,6 +61,7 @@ impl DesOptions {
             slot_ms: o.slot_ms,
             drop_after_deadlines: o.drop_after_deadlines,
             batching: None,
+            failover: o.failover,
         }
     }
 
@@ -98,6 +103,17 @@ struct DesTask {
     /// recovery restores capacity, not data (shared rule:
     /// [`crate::sim`]'s `stage_inputs_destroyed`).
     destroyed: Vec<bool>,
+    /// Fault-cancelled dispatch attempts per stage (drives the backoff).
+    attempts: Vec<u32>,
+    /// Earliest re-dispatch time per stage after a fault cancellation.
+    retry_at: Vec<f64>,
+    /// Cancelled by a fault; counted as a re-route recovery on the next
+    /// successful dispatch (or hedge promotion).
+    rerouted: Vec<bool>,
+    /// Standby hedged execution per stage: `(node, token)`. Promoted if
+    /// the primary's node dies; dropped when its own node dies or the
+    /// primary completes first.
+    hedge: Vec<Option<(usize, u64)>>,
 }
 
 impl DesTask {
@@ -230,6 +246,10 @@ impl<'a> Des<'a> {
                 dispatched: vec![false; n],
                 token: vec![0; n],
                 destroyed: vec![false; n],
+                attempts: vec![0; n],
+                retry_at: vec![0.0; n],
+                rerouted: vec![false; n],
+                hedge: vec![None; n],
             },
         );
         self.cal
@@ -292,6 +312,9 @@ impl<'a> Des<'a> {
             {
                 return; // retried at the next tick once the ED recovers
             }
+            if now < t.retry_at[local] {
+                return; // backoff window; the Retry event re-dispatches
+            }
         }
         if is_core {
             let ci = app
@@ -308,7 +331,30 @@ impl<'a> Des<'a> {
                 .core_router
                 .route_multi(ci, &payloads, proc_ms, now, dm)
             {
+                // Hedged second attempt: a stage that already lost one
+                // execution to a fault and is near its deadline books a
+                // standby replica on a *different* node; it is promoted
+                // if the primary's node dies mid-execution.
+                let hedge_asn = if self.dynt.is_some() {
+                    let t = &self.tasks[&id];
+                    let slack = t.arrival_ms + t.deadline_ms - now;
+                    if t.rerouted[local]
+                        && self.opts.failover.retry.should_hedge(slack, t.deadline_ms)
+                    {
+                        self.core_router
+                            .route_multi(ci, &payloads, proc_ms, now, dm)
+                            .filter(|h| h.node != asn.node)
+                    } else {
+                        None
+                    }
+                } else {
+                    None
+                };
                 let t = self.tasks.get_mut(&id).unwrap();
+                if t.rerouted[local] {
+                    t.rerouted[local] = false;
+                    self.collector.record_reroute();
+                }
                 t.dispatched[local] = true;
                 t.node[local] = Some(asn.node);
                 t.token[local] += 1;
@@ -322,6 +368,23 @@ impl<'a> Des<'a> {
                         token,
                     },
                 );
+                if let Some(h) = hedge_asn {
+                    // The hedge carries token + 1; only a promotion (the
+                    // primary's node dying) makes it the live token.
+                    let t = self.tasks.get_mut(&id).unwrap();
+                    let htoken = token + 1;
+                    t.hedge[local] = Some((h.node, htoken));
+                    self.collector.record_hedge();
+                    self.cal.schedule(
+                        h.done_ms,
+                        EventKind::CoreDone {
+                            task: id,
+                            local,
+                            node: h.node,
+                            token: htoken,
+                        },
+                    );
+                }
             }
             // No instance: every replica may be down or unreachable under
             // faults — the stage stays undispatched and is retried when
@@ -609,6 +672,12 @@ impl<'a> Des<'a> {
                 continue;
             }
             let t = self.tasks.get_mut(&id).unwrap();
+            if t.rerouted[local] {
+                // A fault-cancelled execution has found a surviving
+                // replica: recovered, not dropped.
+                t.rerouted[local] = false;
+                self.collector.record_reroute();
+            }
             t.node[local] = Some(asn.node);
             t.token[local] += 1;
             let token = t.token[local];
@@ -672,6 +741,19 @@ impl<'a> Des<'a> {
         self.pending = still;
     }
 
+    /// A fault-cancelled stage's backoff window closed: re-dispatch if it
+    /// is still waiting (the per-tick rescan may have beaten us to it, or
+    /// the task may have finished or been dropped meanwhile).
+    fn handle_retry(&mut self, id: u64, local: usize, now: f64) {
+        let ready = match self.tasks.get(&id) {
+            Some(t) => t.stage_ready(&self.env.app, local),
+            None => return,
+        };
+        if ready {
+            self.dispatch_stage(id, local, now);
+        }
+    }
+
     /// Apply fault-schedule entry `idx` at its exact timestamp. Schedule
     /// entries sharing one timestamp pop consecutively (they are seeded
     /// first, in index order), so state changes are applied per event but
@@ -702,18 +784,52 @@ impl<'a> Des<'a> {
                 // in-flight executions are cancelled and their stages
                 // re-dispatch after the batch commit (dispatch drops
                 // tasks whose inputs died with the node).
+                let retry = self.opts.failover.retry;
                 for (&id, t) in self.tasks.iter_mut() {
                     for local in 0..t.done.len() {
-                        if t.node[local] != Some(node) {
+                        if t.done[local].is_some() {
+                            if t.node[local] == Some(node) {
+                                t.destroyed[local] = true;
+                            }
                             continue;
                         }
-                        if t.done[local].is_some() {
-                            t.destroyed[local] = true;
-                        } else if t.dispatched[local] {
+                        if t.node[local] == Some(node) && t.dispatched[local] {
+                            // Primary execution dies with the node. A live
+                            // hedged standby is promoted in place: its
+                            // token becomes the stage's live token, so its
+                            // CoreDone completes the stage and the dead
+                            // primary's event goes stale.
+                            if let Some((hn, ht)) =
+                                t.hedge[local].filter(|&(hn, _)| hn != node)
+                            {
+                                t.node[local] = Some(hn);
+                                t.token[local] = ht;
+                                t.hedge[local] = None;
+                                self.collector.record_reroute();
+                                continue;
+                            }
                             t.dispatched[local] = false;
                             t.node[local] = None;
-                            t.token[local] += 1;
+                            // Skip past any booked hedge token so a stale
+                            // hedge event can never match a later dispatch.
+                            t.token[local] =
+                                t.token[local].max(t.hedge[local].map_or(0, |(_, ht)| ht)) + 1;
+                            t.hedge[local] = None;
+                            // Jittered exponential backoff, deterministic
+                            // per (task, stage, attempt) — the engine RNG
+                            // stream is never consumed.
+                            t.attempts[local] += 1;
+                            t.rerouted[local] = true;
+                            t.retry_at[local] = now
+                                + retry.backoff_ms(
+                                    t.attempts[local],
+                                    id ^ ((local as u64) << 40),
+                                );
+                            self.collector.record_retry();
                             self.fault_resets.push((id, local));
+                        } else if t.hedge[local].map(|(hn, _)| hn) == Some(node) {
+                            // The standby died; the primary continues.
+                            t.hedge[local] = None;
                         }
                     }
                 }
@@ -727,6 +843,21 @@ impl<'a> Des<'a> {
             }
             FaultKind::CoreReplicaFail { node, core_idx } => {
                 self.core_router.kill_instance(node, core_idx);
+            }
+            FaultKind::CoreReplicaRestart { node, core_idx } => {
+                // Rejoin from the last checkpoint (fast clock) or cold.
+                // While the node itself is down the restart is folded into
+                // the node's own recovery instead.
+                if self.node_up[node] {
+                    let cp = self.opts.failover.checkpoint;
+                    if self
+                        .core_router
+                        .rejoin(node, core_idx, now, cp.restore_ms, cp.cold_start_ms)
+                        .is_some()
+                    {
+                        self.collector.record_restore();
+                    }
+                }
             }
             link_event => {
                 if let Some(d) = self.dynt.as_mut() {
@@ -743,12 +874,17 @@ impl<'a> Des<'a> {
             if let Some(d) = self.dynt.as_mut() {
                 d.commit();
             }
-            // Sorted for determinism: dispatch order feeds the pending
-            // queue and the RNG stream.
+            // Sorted for determinism: calendar sequence numbers are
+            // assigned in schedule order, and the cancellation loop above
+            // walks a HashMap.
             let mut resets = std::mem::take(&mut self.fault_resets);
             resets.sort_unstable();
             for (id, local) in resets {
-                self.dispatch_stage(id, local, now);
+                // Re-dispatch after the backoff window, not immediately:
+                // the jittered delay spreads the retry burst a zone
+                // outage would otherwise synchronize.
+                let at = self.tasks[&id].retry_at[local].max(now);
+                self.cal.schedule(at, EventKind::Retry { task: id, local });
             }
         }
     }
@@ -756,7 +892,17 @@ impl<'a> Des<'a> {
     /// Slot boundary: virtual-queue aging, drop checks, per-slot cost
     /// charging, queue-depth telemetry, and a decision retry for work the
     /// controller previously declined.
-    fn handle_tick(&mut self, _slot: usize, now: f64) {
+    fn handle_tick(&mut self, slot: usize, now: f64) {
+        // Periodic core-state checkpoints (only meaningful under faults:
+        // the stamps exist to make replica restarts fast). Same cadence
+        // arithmetic as the slotted engine.
+        let cp = self.opts.failover.checkpoint;
+        if self.dynt.is_some() && cp.enabled() {
+            let every = (cp.period_ms / self.opts.slot_ms).ceil().max(1.0) as usize;
+            if slot % every == 0 {
+                self.core_router.checkpoint(now);
+            }
+        }
         let slot_end = now + self.opts.slot_ms;
         let mut ids: Vec<u64> = self.tasks.keys().cloned().collect();
         ids.sort_unstable();
@@ -984,6 +1130,7 @@ fn run_des_inner(
                 epoch,
             } => d.handle_batch_flush(node, light_idx, epoch, now),
             EventKind::Fault { idx } => d.handle_fault(idx, now),
+            EventKind::Retry { task, local } => d.handle_retry(task, local, now),
         }
     }
 

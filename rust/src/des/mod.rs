@@ -291,6 +291,7 @@ mod tests {
             slot_ms: 1.0,
             drop_after_deadlines: 50.0,
             batching: None,
+            failover: crate::coordinator::FailoverPolicy::default(),
         };
         let (m, records) = run_des_trial_recorded(&env, &mut Proposal::new(), 77, &opts, &trace);
         assert_eq!(m.total_tasks, 1);

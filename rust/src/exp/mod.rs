@@ -497,6 +497,7 @@ fn sweep_p4(base: &ExperimentConfig, sc: &SweepConfig) -> Result<Table, String> 
     struct Cell {
         on_time: Welford,
         drops: usize,
+        reroutes: usize,
         tasks: usize,
     }
     let results = run_cells(cells.len(), sc.threads, |i| {
@@ -512,6 +513,7 @@ fn sweep_p4(base: &ExperimentConfig, sc: &SweepConfig) -> Result<Table, String> 
         );
         let mut on_time = Welford::new();
         let mut drops = 0usize;
+        let mut reroutes = 0usize;
         let mut tasks = 0usize;
         for (trial, fx) in fixtures[li].iter().enumerate() {
             // The schedule adds the rate key on top of the shared fixture.
@@ -548,11 +550,13 @@ fn sweep_p4(base: &ExperimentConfig, sc: &SweepConfig) -> Result<Table, String> 
             };
             on_time.push(m.on_time_rate());
             drops += m.fault_drops;
+            reroutes += m.reroute_recovered;
             tasks += m.total_tasks;
         }
         Cell {
             on_time,
             drops,
+            reroutes,
             tasks,
         }
     });
@@ -572,6 +576,7 @@ fn sweep_p4(base: &ExperimentConfig, sc: &SweepConfig) -> Result<Table, String> 
             "on_time_ci95",
             "retained",
             "fault_drops",
+            "reroutes",
         ],
     );
     for (i, c) in results.iter().enumerate() {
@@ -600,6 +605,7 @@ fn sweep_p4(base: &ExperimentConfig, sc: &SweepConfig) -> Result<Table, String> 
             f6(c.on_time.ci95_half()),
             retained,
             c.drops.to_string(),
+            c.reroutes.to_string(),
         ]);
     }
     Ok(table)

@@ -70,7 +70,9 @@ impl DynamicTopology {
             FaultKind::LinkBandwidth { link, factor } => {
                 self.bw_factor[link] = factor.max(1e-6)
             }
+            // Replica lifecycle events are router-level, not topology.
             FaultKind::CoreReplicaFail { .. } => return false,
+            FaultKind::CoreReplicaRestart { .. } => return false,
         }
         self.dirty = true;
         true

@@ -21,8 +21,14 @@ pub enum FaultKind {
     LinkBandwidth { link: usize, factor: f64 },
     /// One replica of dense core MS `core_idx` at `node` fail-stops: it
     /// finishes its current task and accepts no new work. Permanent
-    /// within the trial. A no-op when no replica is placed there.
+    /// within the trial unless a later [`FaultKind::CoreReplicaRestart`]
+    /// brings it back. A no-op when no replica is placed there.
     CoreReplicaFail { node: usize, core_idx: usize },
+    /// A fail-stopped replica of `core_idx` at `node` restarts: it
+    /// rejoins from its last checkpoint (fast restore clock) or cold
+    /// (no checkpoint taken). A no-op when nothing failed there or the
+    /// node itself is down (it rejoins with the node instead).
+    CoreReplicaRestart { node: usize, core_idx: usize },
 }
 
 /// A fault event stamped with its absolute simulation time.
@@ -50,6 +56,12 @@ pub struct FaultParams {
     /// Bandwidth scale drawn uniformly from this range on degradation.
     pub degrade_factor_lo: f64,
     pub degrade_factor_hi: f64,
+    /// When `Some(mean)`, every replica fail-stop is paired with a
+    /// [`FaultKind::CoreReplicaRestart`] a geometric number of slots
+    /// later (checkpoint/restart semantics). `None` keeps fail-stops
+    /// permanent — and generated schedules byte-identical to before this
+    /// knob existed.
+    pub replica_restart_slots: Option<f64>,
 }
 
 impl FaultParams {
@@ -65,7 +77,14 @@ impl FaultParams {
             mean_outage_slots: 20.0,
             degrade_factor_lo: 0.2,
             degrade_factor_hi: 0.7,
+            replica_restart_slots: None,
         }
+    }
+
+    /// Enable paired replica restarts with the given mean delay (slots).
+    pub fn with_replica_restart(mut self, mean_slots: f64) -> Self {
+        self.replica_restart_slots = Some(mean_slots);
+        self
     }
 }
 
@@ -127,6 +146,9 @@ impl FaultSchedule {
         let nl = topo.links().len();
 
         let mut events = Vec::new();
+        // Paired replica restarts (merged at the end; only populated when
+        // `replica_restart_slots` is set).
+        let mut restarts: Vec<FaultEvent> = Vec::new();
         // node -> recovery slot (exclusive) while down.
         let mut node_until = vec![0usize; topo.num_nodes()];
         let mut link_until = vec![0usize; nl];
@@ -190,6 +212,16 @@ impl FaultSchedule {
                     time_ms: t,
                     kind: FaultKind::CoreReplicaFail { node, core_idx },
                 });
+                // Checkpoint/restart: pair the fail-stop with a restart.
+                // The extra RNG draw only happens when the knob is on, so
+                // schedules generated without it are byte-identical.
+                if let Some(mean) = params.replica_restart_slots {
+                    let dur = geometric_slots(&mut rng, mean);
+                    restarts.push(FaultEvent {
+                        time_ms: (slot + dur) as f64 * slot_ms,
+                        kind: FaultKind::CoreReplicaRestart { node, core_idx },
+                    });
+                }
             }
             // Emit recoveries that become due at the next slot boundary.
             let next = slot + 1;
@@ -248,6 +280,13 @@ impl FaultSchedule {
         }
         tail.sort_by(|a, b| a.time_ms.partial_cmp(&b.time_ms).unwrap());
         events.extend(tail);
+        if !restarts.is_empty() {
+            // Restarts land mid-stream; a single stable sort restores the
+            // time order (skipped entirely when the knob is off, keeping
+            // pre-existing schedules byte-identical).
+            events.extend(restarts);
+            events.sort_by(|a, b| a.time_ms.partial_cmp(&b.time_ms).unwrap());
+        }
         FaultSchedule { events }
     }
 

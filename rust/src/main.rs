@@ -4,7 +4,10 @@ use std::time::Instant;
 
 use fmedge::cli::{Args, HELP};
 use fmedge::config::ExperimentConfig;
-use fmedge::coordinator::{BatchPolicy, Coordinator, Request, ServeConfig};
+use fmedge::coordinator::{
+    parse_fault_spec, BatchPolicy, Coordinator, FailoverConfig, FailoverPolicy, ReplayConfig,
+    ReplayServer, Request, ServeConfig, VirtualRequest,
+};
 use fmedge::des::{pool, report, run_des_trial, run_des_trial_faulted, validate_bounds, DesOptions};
 use fmedge::exp::{run_sweep, strategy_by_name, Experiment, SweepConfig};
 use fmedge::faults::{FaultParams, FaultSchedule};
@@ -313,14 +316,15 @@ fn cmd_faults(args: &Args) -> Result<(), AnyError> {
         }
         println!("\n== load x{load} ==");
         println!(
-            "{:<10} {:>10}  {:>9}  {:>9}  {:>11}  {:>11}",
-            "strategy", "fail rate", "on-time", "retained", "fault drops", "tasks"
+            "{:<10} {:>10}  {:>9}  {:>9}  {:>11}  {:>9}  {:>11}",
+            "strategy", "fail rate", "on-time", "retained", "fault drops", "reroutes", "tasks"
         );
         for name in &strategies {
             let mut baseline: Option<f64> = None;
             for &rate in &rates {
                 let mut otr = Vec::new();
                 let mut drops = 0usize;
+                let mut reroutes = 0usize;
                 let mut tasks = 0usize;
                 for (seed, env, opts, trace) in &fixtures {
                     let schedule = if rate > 0.0 {
@@ -352,6 +356,7 @@ fn cmd_faults(args: &Args) -> Result<(), AnyError> {
                     };
                     otr.push(m.on_time_rate());
                     drops += m.fault_drops;
+                    reroutes += m.reroute_recovered;
                     tasks += m.total_tasks;
                 }
                 let mean = otr.iter().sum::<f64>() / otr.len().max(1) as f64;
@@ -368,8 +373,8 @@ fn cmd_faults(args: &Args) -> Result<(), AnyError> {
                     None => "-".to_string(),
                 };
                 println!(
-                    "{:<10} {:>10.4}  {:>9.3}  {:>9}  {:>11}  {:>11}",
-                    name, rate, mean, retained, drops, tasks
+                    "{:<10} {:>10.4}  {:>9.3}  {:>9}  {:>11}  {:>9}  {:>11}",
+                    name, rate, mean, retained, drops, reroutes, tasks
                 );
             }
         }
@@ -442,18 +447,75 @@ fn cmd_sweep(args: &Args) -> Result<(), AnyError> {
     Ok(())
 }
 
+/// `fmedge serve`: the serving coordinator on a synthetic open-loop
+/// workload. `--faults SPEC` arms the failover layer (checkpoint/restart
+/// worker outages + retry re-routing); `--virtual` replays the same
+/// workload and policy on the deterministic virtual-time server instead
+/// of the threaded pool, so the failover counters are bit-stable run to
+/// run (the CI smoke and the robustness tests key on this). Without
+/// `--faults` the output is unchanged from the fault-oblivious server.
 fn cmd_serve(args: &Args) -> Result<(), AnyError> {
     let requests = args.get_usize("requests", 2000)?;
     let rate = args.get_f64("rate", 2000.0)?;
     let workers = args.get_usize("workers", 2)?;
+    let deadline_ms = args.get_f64("deadline-ms", 50.0)?;
+    let seed = args.get_u64("seed", 7)?;
+    let failover = match args.get("faults") {
+        Some(spec) => {
+            let net = load_config(args)?.network;
+            let schedule = parse_fault_spec(spec, net.num_eds, net.num_ess)?;
+            Some(FailoverConfig {
+                schedule,
+                policy: FailoverPolicy::default(),
+                num_eds: net.num_eds,
+            })
+        }
+        None => None,
+    };
+
+    if args.flag("virtual") {
+        // Virtual-time replay: same arrival pattern and failover policy,
+        // no wall-clock nondeterminism.
+        let fo = failover.unwrap_or_else(|| FailoverConfig {
+            schedule: FaultSchedule::none(),
+            policy: FailoverPolicy::default(),
+            num_eds: 0,
+        });
+        let rcfg = ReplayConfig {
+            workers,
+            policy: fo.policy,
+            ..Default::default()
+        };
+        let server = ReplayServer::new(rcfg, &fo.schedule, fo.num_eds);
+        let gap_ms = 1000.0 / rate;
+        let arrivals: Vec<VirtualRequest> = (0..requests as u64)
+            .map(|id| VirtualRequest {
+                id,
+                arrive_ms: id as f64 * gap_ms,
+                deadline_ms,
+            })
+            .collect();
+        let rep = server.run(&arrivals);
+        println!(
+            "virtual serve: accepted {} served {} on-time {} horizon {:.1} ms",
+            rep.accepted, rep.served, rep.on_time, rep.horizon_ms
+        );
+        let sr = rep.to_serve_report();
+        println!("latency (ms): {}", sr.latency_ms.row());
+        println!("failover: {}", sr.failover.line());
+        return Ok(());
+    }
+
+    let has_faults = failover.is_some();
     let cfg = ServeConfig {
         workers,
         real_compute: !args.flag("no-real-compute"),
+        failover,
         ..Default::default()
     };
     let slot = fmedge::runtime::shapes::MSBLOCK_L * fmedge::runtime::shapes::MSBLOCK_D;
     let coordinator = Coordinator::start(cfg)?;
-    let mut rng = Xoshiro256::seed_from(7);
+    let mut rng = Xoshiro256::seed_from(seed);
     let gap = std::time::Duration::from_secs_f64(1.0 / rate);
     let mut rejected = 0u64;
     for id in 0..requests as u64 {
@@ -462,7 +524,7 @@ fn cmd_serve(args: &Args) -> Result<(), AnyError> {
             id,
             data,
             submitted: Instant::now(),
-            deadline_ms: 50.0,
+            deadline_ms,
         };
         if coordinator.submit(req).is_err() {
             rejected += 1;
@@ -481,5 +543,8 @@ fn cmd_serve(args: &Args) -> Result<(), AnyError> {
         report.batch_fill
     );
     println!("latency (ms): {}", report.latency_ms.row());
+    if has_faults {
+        println!("failover: {}", report.failover.line());
+    }
     Ok(())
 }

@@ -84,8 +84,20 @@ pub struct TrialMetrics {
     pub vq_residual: usize,
     /// Tasks dropped because a fault destroyed state they could not
     /// recover from (an input payload lost with its node). Zero without
-    /// fault injection.
+    /// fault injection. Recoverable casualties are *not* counted here —
+    /// see [`Self::reroute_recovered`].
     pub fault_drops: usize,
+    /// Stage executions cancelled by a fault and successfully
+    /// re-dispatched to a surviving replica (including hedge
+    /// promotions). The recoverable counterpart of `fault_drops`.
+    pub reroute_recovered: usize,
+    /// Fault-triggered retry cycles entered (each backoff wait counts
+    /// once; a stage cancelled twice counts twice).
+    pub retries: usize,
+    /// Hedged standby executions booked near the deadline.
+    pub hedges: usize,
+    /// Core replicas brought back through checkpoint/restart.
+    pub checkpoint_restores: usize,
 }
 
 impl TrialMetrics {
@@ -121,6 +133,10 @@ pub struct MetricsCollector {
     service_obs: Vec<ServiceObs>,
     queue_depth: Histogram,
     fault_drops: usize,
+    reroute_recovered: usize,
+    retries: usize,
+    hedges: usize,
+    checkpoint_restores: usize,
 }
 
 impl MetricsCollector {
@@ -156,6 +172,26 @@ impl MetricsCollector {
     /// still recorded through [`Self::record`]).
     pub fn record_fault_drop(&mut self) {
         self.fault_drops += 1;
+    }
+
+    /// Count one fault-cancelled execution recovered on another replica.
+    pub fn record_reroute(&mut self) {
+        self.reroute_recovered += 1;
+    }
+
+    /// Count one retry cycle (cancellation + backoff) entered.
+    pub fn record_retry(&mut self) {
+        self.retries += 1;
+    }
+
+    /// Count one hedged standby execution booked.
+    pub fn record_hedge(&mut self) {
+        self.hedges += 1;
+    }
+
+    /// Count one checkpoint/restart rejoin completed.
+    pub fn record_restore(&mut self) {
+        self.checkpoint_restores += 1;
     }
 
     pub fn len(&self) -> usize {
@@ -195,6 +231,10 @@ impl MetricsCollector {
             queue_depth: self.queue_depth,
             vq_residual: 0,
             fault_drops: self.fault_drops,
+            reroute_recovered: self.reroute_recovered,
+            retries: self.retries,
+            hedges: self.hedges,
+            checkpoint_restores: self.checkpoint_restores,
         }
     }
 }
@@ -230,6 +270,26 @@ mod tests {
         let m = MetricsCollector::new().finish(&CostBook::default());
         assert_eq!(m.completion_rate(), 1.0);
         assert_eq!(m.on_time_rate(), 1.0);
+    }
+
+    #[test]
+    fn failover_counters_flow_through() {
+        // Recoverable (rerouted) and fatal (payload-destroyed) casualties
+        // are tracked independently — the §P4/§P6 tables depend on the
+        // distinction.
+        let mut c = MetricsCollector::new();
+        c.record_retry();
+        c.record_retry();
+        c.record_reroute();
+        c.record_hedge();
+        c.record_restore();
+        c.record_fault_drop();
+        let m = c.finish(&CostBook::default());
+        assert_eq!(m.retries, 2);
+        assert_eq!(m.reroute_recovered, 1);
+        assert_eq!(m.hedges, 1);
+        assert_eq!(m.checkpoint_restores, 1);
+        assert_eq!(m.fault_drops, 1);
     }
 
     #[test]

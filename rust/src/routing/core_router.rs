@@ -28,6 +28,14 @@ pub struct CoreRouter {
     /// Instance counts stashed while a node is down (fault injection);
     /// restored — with fresh clocks — on recovery.
     offline: Vec<Vec<u32>>,
+    /// Replicas fail-stopped by `kill_instance`, eligible to `rejoin`
+    /// from their last checkpoint (or a cold start if none was taken).
+    failed: Vec<Vec<u32>>,
+    /// Last checkpoint time per `(v, m)` service state; `None` until the
+    /// first `checkpoint` call covers that pair.
+    checkpoint_ms: Vec<Vec<Option<f64>>>,
+    /// Completed checkpoint-restores (telemetry for `TrialMetrics`).
+    restores: u64,
     num_core: usize,
 }
 
@@ -40,11 +48,75 @@ impl CoreRouter {
             .map(|row| row.iter().map(|&c| vec![0.0f64; c as usize]).collect())
             .collect();
         let offline = vec![vec![0u32; num_core]; busy_until.len()];
+        let failed = offline.clone();
+        let checkpoint_ms = vec![vec![None; num_core]; busy_until.len()];
         CoreRouter {
             busy_until,
             offline,
+            failed,
+            checkpoint_ms,
+            restores: 0,
             num_core,
         }
+    }
+
+    /// Periodic lightweight snapshot: stamp every `(v, m)` pair that has
+    /// at least one live replica. A later `rejoin` at that pair restores
+    /// from this stamp on the fast clock instead of cold-starting.
+    /// Returns how many pairs were stamped.
+    pub fn checkpoint(&mut self, now_ms: f64) -> usize {
+        let mut stamped = 0;
+        for (v, row) in self.busy_until.iter().enumerate() {
+            for m in 0..self.num_core {
+                if !row[m].is_empty() {
+                    self.checkpoint_ms[v][m] = Some(now_ms);
+                    stamped += 1;
+                }
+            }
+        }
+        stamped
+    }
+
+    /// Bring one fail-stopped replica of `(v, m)` back into service with
+    /// its clock free from `ready_ms`. Returns `false` when nothing is
+    /// waiting to be restored there (a schedule no-op).
+    pub fn restore(&mut self, v: usize, m: usize, ready_ms: f64) -> bool {
+        if m >= self.num_core || self.failed[v][m] == 0 {
+            return false;
+        }
+        self.failed[v][m] -= 1;
+        self.busy_until[v][m].push(ready_ms);
+        self.restores += 1;
+        true
+    }
+
+    /// Checkpoint/restart: a fail-stopped replica of `(v, m)` rejoins at
+    /// `now_ms + restore_ms` when a checkpoint covers the pair, or
+    /// `now_ms + cold_start_ms` when it must rebuild state from scratch.
+    /// Returns the readiness time, or `None` when no replica is waiting.
+    pub fn rejoin(
+        &mut self,
+        v: usize,
+        m: usize,
+        now_ms: f64,
+        restore_ms: f64,
+        cold_start_ms: f64,
+    ) -> Option<f64> {
+        if m >= self.num_core || self.failed[v][m] == 0 {
+            return None;
+        }
+        let delay = if self.checkpoint_ms[v][m].is_some() {
+            restore_ms
+        } else {
+            cold_start_ms
+        };
+        let ready = now_ms + delay;
+        self.restore(v, m, ready).then_some(ready)
+    }
+
+    /// Checkpoint-restores completed so far.
+    pub fn restores(&self) -> u64 {
+        self.restores
     }
 
     /// Fault injection: the node went dark. Resident replicas go offline
@@ -75,11 +147,13 @@ impl CoreRouter {
             return false;
         }
         if self.busy_until[v][m].pop().is_some() {
+            self.failed[v][m] += 1;
             return true;
         }
         // Node currently down: decommission one stashed replica instead.
         if self.offline[v][m] > 0 {
             self.offline[v][m] -= 1;
+            self.failed[v][m] += 1;
             return true;
         }
         false
@@ -344,6 +418,59 @@ mod tests {
             router.route(0, 0, 0.0, 1.0, 1.0, &dm_cut).is_none(),
             "only instance is unreachable: no route"
         );
+    }
+
+    #[test]
+    fn rejoin_uses_checkpoint_clock_when_available() {
+        let (t, dm) = setup();
+        let mut inst = vec![vec![0u32; 1]; t.num_nodes()];
+        inst[13][0] = 1;
+        let mut router = CoreRouter::new(&inst);
+        // No checkpoint yet: a killed replica rejoins on the cold clock.
+        assert!(router.kill_instance(13, 0));
+        assert_eq!(router.total_instances(0), 0);
+        let ready = router.rejoin(13, 0, 100.0, 5.0, 25.0).unwrap();
+        assert!((ready - 125.0).abs() < 1e-12, "cold start: {ready}");
+        assert_eq!(router.total_instances(0), 1);
+        assert_eq!(router.restores(), 1);
+        // With a checkpoint covering (13, 0), rejoin is fast.
+        assert_eq!(router.checkpoint(150.0), 1);
+        assert!(router.kill_instance(13, 0));
+        let ready = router.rejoin(13, 0, 200.0, 5.0, 25.0).unwrap();
+        assert!((ready - 205.0).abs() < 1e-12, "restore: {ready}");
+        assert_eq!(router.restores(), 2);
+        // The rejoined replica is routable and free from its ready time.
+        let a = router.route(0, 13, 0.0, 0.01, 2.0, &dm).unwrap();
+        assert!(a.start_ms >= 205.0, "busy until rejoin completes");
+    }
+
+    #[test]
+    fn rejoin_without_failed_replica_is_noop() {
+        let (t, _) = setup();
+        let mut inst = vec![vec![0u32; 1]; t.num_nodes()];
+        inst[12][0] = 1;
+        let mut router = CoreRouter::new(&inst);
+        assert!(router.rejoin(12, 0, 0.0, 5.0, 25.0).is_none());
+        assert!(!router.restore(12, 0, 0.0));
+        assert!(router.rejoin(12, 9, 0.0, 5.0, 25.0).is_none(), "bad idx");
+        assert_eq!(router.restores(), 0);
+        assert_eq!(router.total_instances(0), 1, "nothing double-added");
+    }
+
+    #[test]
+    fn kill_while_node_down_still_rejoins() {
+        let (t, _) = setup();
+        let mut inst = vec![vec![0u32; 1]; t.num_nodes()];
+        inst[14][0] = 2;
+        let mut router = CoreRouter::new(&inst);
+        router.checkpoint(10.0);
+        router.set_node_down(14);
+        assert!(router.kill_instance(14, 0), "kills a stashed replica");
+        router.set_node_up(14, 50.0);
+        assert_eq!(router.total_instances(0), 1, "one survived the outage");
+        let ready = router.rejoin(14, 0, 60.0, 5.0, 25.0).unwrap();
+        assert!((ready - 65.0).abs() < 1e-12, "checkpointed fast restore");
+        assert_eq!(router.total_instances(0), 2);
     }
 
     #[test]

@@ -177,6 +177,21 @@ pub struct MsBlockAccel {
 }
 
 impl MsBlockAccel {
+    /// `load` with bounded compile retries — serving workers all compile
+    /// the artifact at startup and transient PJRT races must not take a
+    /// replica out of the pool before it ever serves.
+    pub fn load_with_retry(rt: &Runtime, attempts: u32) -> Result<Self, ArtifactError> {
+        let mut last = None;
+        for _ in 0..attempts.max(1) {
+            match Self::load(rt) {
+                Ok(a) => return Ok(a),
+                Err(e @ ArtifactError::Missing(_)) => return Err(e),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.expect("at least one attempt"))
+    }
+
     pub fn load(rt: &Runtime) -> Result<Self, ArtifactError> {
         let exe = rt.load("msblock")?;
         let d = shapes::MSBLOCK_D;

@@ -103,6 +103,27 @@ impl Runtime {
         })
     }
 
+    /// `load` with bounded retries for transient PJRT compile failures
+    /// (many workers compiling the same artifact concurrently can race on
+    /// plugin init). A `Missing` artifact is permanent and not retried;
+    /// the last error is returned once attempts are exhausted.
+    pub fn load_with_retry(
+        &self,
+        name: &str,
+        attempts: u32,
+    ) -> Result<Executable, ArtifactError> {
+        let mut last = None;
+        for i in 0..attempts.max(1) {
+            match self.load(name) {
+                Ok(exe) => return Ok(exe),
+                Err(e @ ArtifactError::Missing(_)) => return Err(e),
+                Err(e) => last = Some(e),
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2u64 << i));
+        }
+        Err(last.expect("at least one attempt"))
+    }
+
     /// The directory this runtime loads artifacts from.
     pub fn artifact_dir(&self) -> &Path {
         &self.artifact_dir

@@ -4,6 +4,7 @@ use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
 
 use crate::config::{ExperimentConfig, NUM_RESOURCES};
+use crate::coordinator::FailoverPolicy;
 use crate::controller::{LightRequest, VirtualQueues};
 use crate::effcap::{GTable, GTableParams};
 use crate::faults::{DynamicTopology, FaultKind, FaultSchedule};
@@ -120,6 +121,10 @@ pub struct SimOptions {
     /// Arrivals stop at this slot (the tail of the horizon drains the
     /// system so every admitted task gets a fair shot at its deadline).
     pub arrival_cutoff: usize,
+    /// Retry/backoff + checkpoint policy replayed when a fault schedule
+    /// is active. Inert (never consulted) on fault-free runs, so the
+    /// zero-fault bit-identity invariant is unaffected.
+    pub failover: FailoverPolicy,
 }
 
 impl SimOptions {
@@ -133,6 +138,7 @@ impl SimOptions {
             load_multiplier: cfg.sim.load_multiplier,
             drop_after_deadlines: 5.0,
             arrival_cutoff: slots.saturating_sub(drain).max(slots / 4).max(1),
+            failover: FailoverPolicy::default(),
         }
     }
 }
@@ -246,6 +252,18 @@ struct RunTask {
     /// A completed stage's output was lost with its node — permanent:
     /// node recovery does not restore it (see `stage_inputs_destroyed`).
     destroyed: Vec<bool>,
+    /// Fault-cancelled dispatch attempts per stage (drives the backoff).
+    attempts: Vec<u32>,
+    /// Earliest re-dispatch time per stage (jittered exponential backoff
+    /// after a fault cancellation; `0.0` = immediately eligible).
+    retry_at: Vec<f64>,
+    /// The stage's previous execution was cancelled by a fault; counted
+    /// as a re-route recovery when it next dispatches successfully.
+    rerouted: Vec<bool>,
+    /// Standby hedged execution per stage: `(node, seq)`. Promoted to the
+    /// primary if the primary's node dies; discarded when its own node
+    /// dies or the primary completes first.
+    hedge: Vec<Option<(usize, u64)>>,
 }
 
 impl RunTask {
@@ -416,6 +434,12 @@ fn run_trial_inner(
     // the count so stale release events cannot underflow it.
     let mut light_gen = vec![vec![0u64; nl]; nv];
     let mut next_seq: u64 = 0;
+    // Checkpoint cadence in slots (>= 1 when enabled).
+    let checkpoint_every = if opts.failover.checkpoint.enabled() {
+        (opts.failover.checkpoint.period_ms / opts.slot_ms).ceil().max(1.0) as usize
+    } else {
+        0
+    };
 
     let light_idx_of: Vec<Option<usize>> = (0..app.catalog.len())
         .map(|m| app.catalog.light_index(crate::microservice::MsId(m)))
@@ -462,17 +486,46 @@ fn run_trial_inner(
                     // completion events go stale, and the dispatch scan
                     // below re-dispatches them (or drops tasks whose
                     // inputs died with the node).
-                    for t in tasks.values_mut() {
+                    for (id, t) in tasks.iter_mut() {
                         for local in 0..t.done.len() {
-                            if t.node[local] != Some(node) {
+                            if t.done[local].is_some() {
+                                if t.node[local] == Some(node) {
+                                    t.destroyed[local] = true;
+                                }
                                 continue;
                             }
-                            if t.done[local].is_some() {
-                                t.destroyed[local] = true;
-                            } else if t.dispatched[local] {
+                            if t.node[local] == Some(node) && t.dispatched[local] {
+                                // Primary execution dies with the node. A
+                                // live hedged standby is promoted in place
+                                // — the stage recovers without a retry
+                                // cycle (its event carries the hedge seq).
+                                if let Some((hn, hs)) =
+                                    t.hedge[local].filter(|&(hn, _)| hn != node)
+                                {
+                                    t.node[local] = Some(hn);
+                                    t.ev_seq[local] = Some(hs);
+                                    t.hedge[local] = None;
+                                    collector.record_reroute();
+                                    continue;
+                                }
                                 t.dispatched[local] = false;
                                 t.node[local] = None;
                                 t.ev_seq[local] = None;
+                                t.hedge[local] = None;
+                                // Retry with jittered exponential backoff
+                                // (deterministic per (task, stage, attempt)
+                                // — no engine RNG stream is consumed).
+                                t.attempts[local] += 1;
+                                t.rerouted[local] = true;
+                                t.retry_at[local] = now
+                                    + opts.failover.retry.backoff_ms(
+                                        t.attempts[local],
+                                        *id ^ ((local as u64) << 40),
+                                    );
+                                collector.record_retry();
+                            } else if t.hedge[local].map(|(hn, _)| hn) == Some(node) {
+                                // The standby died; the primary continues.
+                                t.hedge[local] = None;
                             }
                         }
                     }
@@ -487,6 +540,20 @@ fn run_trial_inner(
                 FaultKind::CoreReplicaFail { node, core_idx } => {
                     core_router.kill_instance(node, core_idx);
                 }
+                FaultKind::CoreReplicaRestart { node, core_idx } => {
+                    // Rejoin from the last checkpoint (fast clock) or cold.
+                    // While the node itself is down the restart is folded
+                    // into the node's own recovery instead.
+                    if node_up[node] {
+                        let cp = opts.failover.checkpoint;
+                        if core_router
+                            .rejoin(node, core_idx, now, cp.restore_ms, cp.cold_start_ms)
+                            .is_some()
+                        {
+                            collector.record_restore();
+                        }
+                    }
+                }
                 link_event => {
                     if let Some(d) = dynt.as_mut() {
                         d.apply_deferred(&link_event);
@@ -497,6 +564,13 @@ fn run_trial_inner(
         // One routing rebuild per boundary, however many events landed.
         if let Some(d) = dynt.as_mut() {
             d.commit();
+        }
+        // Periodic core-state checkpoints (only meaningful under faults:
+        // the stamps exist to make replica restarts fast).
+        if has_faults && opts.failover.checkpoint.enabled() && checkpoint_every > 0 {
+            if slot % checkpoint_every == 0 {
+                core_router.checkpoint(now);
+            }
         }
         // The routed-latency view every consumer of this slot shares.
         let dm_cur: &DistanceMatrix = match &dynt {
@@ -530,6 +604,10 @@ fn run_trial_inner(
                     dispatched: vec![false; n],
                     ev_seq: vec![None; n],
                     destroyed: vec![false; n],
+                    attempts: vec![0; n],
+                    retry_at: vec![0.0; n],
+                    rerouted: vec![false; n],
+                    hedge: vec![None; n],
                 },
             );
         }
@@ -603,6 +681,9 @@ fn run_trial_inner(
                     {
                         continue; // wait for the user's ED to recover
                     }
+                    if now < t.retry_at[local] {
+                        continue; // backoff window after a cancellation
+                    }
                 }
                 if is_core {
                     let ci = app
@@ -616,7 +697,30 @@ fn run_trial_inner(
                     {
                         let seq = next_seq;
                         next_seq += 1;
+                        // Hedged second attempt: a stage that already lost
+                        // one execution to a fault and is close to its
+                        // deadline books a standby replica too (promoted
+                        // if the primary's node dies mid-execution).
+                        let hedge_asn = if has_faults {
+                            let t = &tasks[id];
+                            let slack = t.arrival_ms + t.deadline_ms - now;
+                            if t.rerouted[local]
+                                && opts.failover.retry.should_hedge(slack, t.deadline_ms)
+                            {
+                                core_router
+                                    .route_multi(ci, &payloads, proc_ms, now, dm_cur)
+                                    .filter(|h| h.node != asn.node)
+                            } else {
+                                None
+                            }
+                        } else {
+                            None
+                        };
                         let t = tasks.get_mut(id).unwrap();
+                        if has_faults && t.rerouted[local] {
+                            t.rerouted[local] = false;
+                            collector.record_reroute();
+                        }
                         t.dispatched[local] = true;
                         t.node[local] = Some(asn.node);
                         t.ev_seq[local] = Some(seq);
@@ -627,6 +731,20 @@ fn run_trial_inner(
                             seq,
                             release: None,
                         }));
+                        if let Some(h) = hedge_asn {
+                            let hseq = next_seq;
+                            next_seq += 1;
+                            tasks.get_mut(id).unwrap().hedge[local] =
+                                Some((h.node, hseq));
+                            collector.record_hedge();
+                            events.push(Reverse(Event {
+                                time_ms: h.done_ms,
+                                task: *id,
+                                local,
+                                seq: hseq,
+                                release: None,
+                            }));
+                        }
                     }
                     // No instance: under faults every replica may be down
                     // or unreachable — the stage stays ready and retries
@@ -741,6 +859,10 @@ fn run_trial_inner(
                     let seq = next_seq;
                     next_seq += 1;
                     let t = tasks.get_mut(&id).unwrap();
+                    if has_faults && t.rerouted[local] {
+                        t.rerouted[local] = false;
+                        collector.record_reroute();
+                    }
                     t.node[local] = Some(asn.node);
                     t.ev_seq[local] = Some(seq);
                     active_light[asn.node][asn.light_idx] += 1;

@@ -1,0 +1,291 @@
+//! End-to-end failover tests (EXPERIMENTS §P6): the serving path under a
+//! seeded zone outage — bit-deterministic counters, zero silent drops,
+//! and slotted-vs-DES agreement when the shared retry policy is active.
+
+use fmedge::baselines::Proposal;
+use fmedge::config::ExperimentConfig;
+use fmedge::coordinator::{
+    parse_fault_spec, FailoverPolicy, ReplayConfig, ReplayServer, VirtualRequest,
+};
+use fmedge::des::{run_des_trial_faulted, DesOptions};
+use fmedge::faults::{FaultEvent, FaultKind, FaultSchedule};
+use fmedge::metrics::TrialMetrics;
+use fmedge::sim::{record_trace, run_trial_faulted, run_trial_traced, SimEnv, SimOptions};
+
+fn small_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper_default();
+    cfg.sim.slots = 120;
+    cfg.workload.num_users = 8;
+    cfg.controller.effcap_samples = 512;
+    cfg
+}
+
+fn open_loop(n: u64, gap_ms: f64, deadline_ms: f64) -> Vec<VirtualRequest> {
+    (0..n)
+        .map(|id| VirtualRequest {
+            id,
+            arrive_ms: id as f64 * gap_ms,
+            deadline_ms,
+        })
+        .collect()
+}
+
+#[test]
+fn zone_outage_replay_is_bit_deterministic_with_zero_silent_drops() {
+    // The acceptance criterion: under a seeded zone outage every accepted
+    // request is completed (or provably payload-destroyed — the virtual
+    // server holds no payloads, so: completed), the re-routed count is
+    // positive, and two runs agree counter for counter.
+    let cfg = small_cfg();
+    let (num_eds, num_ess) = (cfg.network.num_eds, cfg.network.num_ess);
+    let schedule = parse_fault_spec("zone@40+30", num_eds, num_ess).expect("spec");
+    let server = ReplayServer::new(
+        ReplayConfig { workers: 4, ..Default::default() },
+        &schedule,
+        num_eds,
+    );
+    let arrivals = open_loop(600, 0.5, 50.0);
+    let a = server.run(&arrivals);
+    let b = server.run(&arrivals);
+
+    assert_eq!(a.stats, b.stats, "failover counters must be bit-stable");
+    assert_eq!(a.served, b.served);
+    assert_eq!(a.on_time, b.on_time);
+    assert_eq!(a.latencies_ms, b.latencies_ms, "latency stream bit-stable");
+
+    assert!(a.accepted > 0);
+    assert_eq!(a.stats.abandoned, 0, "accepted work is never abandoned");
+    assert_eq!(a.served, a.accepted, "every accepted request completes");
+    assert!(
+        a.stats.reroutes > 0,
+        "a whole-zone outage must force re-routing: {}",
+        a.stats.line()
+    );
+    assert!(a.stats.retries >= a.stats.reroutes);
+    assert!(
+        a.stats.checkpoint_restores > 0,
+        "recovering workers rejoin from checkpoints: {}",
+        a.stats.line()
+    );
+}
+
+#[test]
+fn degradation_sheds_new_admissions_never_accepted_work() {
+    // Saturate a tiny queue during a long outage: the shed counter moves,
+    // the abandoned counter does not.
+    let cfg = small_cfg();
+    let (num_eds, num_ess) = (cfg.network.num_eds, cfg.network.num_ess);
+    let schedule = parse_fault_spec("zone@5+80", num_eds, num_ess).expect("spec");
+    let server = ReplayServer::new(
+        ReplayConfig {
+            workers: 2,
+            queue_capacity: 16,
+            ..Default::default()
+        },
+        &schedule,
+        num_eds,
+    );
+    let rep = server.run(&open_loop(400, 0.25, 40.0));
+    assert!(rep.stats.shed > 0, "the tiny queue must shed: {}", rep.stats.line());
+    assert_eq!(rep.stats.abandoned, 0, "shedding is for NEW work only");
+    assert_eq!(rep.accepted, rep.served);
+    assert_eq!(rep.accepted + rep.stats.shed, 400);
+}
+
+#[test]
+fn single_server_outage_spec_reroutes_inflight_work() {
+    let cfg = small_cfg();
+    let (num_eds, num_ess) = (cfg.network.num_eds, cfg.network.num_ess);
+    // es0 maps onto worker 0 of 2; work in flight there re-routes to 1.
+    let schedule = parse_fault_spec("es0@10+20", num_eds, num_ess).expect("spec");
+    let server = ReplayServer::new(
+        ReplayConfig { workers: 2, ..Default::default() },
+        &schedule,
+        num_eds,
+    );
+    // Arrivals outpace the two-worker pool, so worker 0 is provably busy
+    // when its outage lands.
+    let rep = server.run(&open_loop(200, 0.6, 50.0));
+    assert_eq!(rep.stats.abandoned, 0);
+    assert!(rep.stats.retries > 0, "{}", rep.stats.line());
+    assert!(rep.stats.reroutes > 0, "{}", rep.stats.line());
+}
+
+/// Zone outage over the simulation engines: two of the four edge servers
+/// go dark mid-trial and recover; a replica fail-stop is paired with a
+/// checkpoint restart.
+fn zone_schedule(cfg: &ExperimentConfig, slot_ms: f64) -> FaultSchedule {
+    let es = cfg.network.num_eds;
+    let mut events = vec![
+        FaultEvent { time_ms: 30.0 * slot_ms, kind: FaultKind::NodeDown { node: es } },
+        FaultEvent { time_ms: 32.0 * slot_ms, kind: FaultKind::NodeDown { node: es + 1 } },
+        FaultEvent {
+            time_ms: 45.0 * slot_ms,
+            kind: FaultKind::CoreReplicaFail { node: es + 2, core_idx: 0 },
+        },
+        FaultEvent {
+            time_ms: 58.0 * slot_ms,
+            kind: FaultKind::CoreReplicaRestart { node: es + 2, core_idx: 0 },
+        },
+        FaultEvent { time_ms: 70.0 * slot_ms, kind: FaultKind::NodeUp { node: es } },
+        FaultEvent { time_ms: 72.0 * slot_ms, kind: FaultKind::NodeUp { node: es + 1 } },
+    ];
+    events.sort_by(|a, b| a.time_ms.partial_cmp(&b.time_ms).unwrap());
+    FaultSchedule::from_events(events)
+}
+
+fn assert_counters_identical(a: &TrialMetrics, b: &TrialMetrics, what: &str) {
+    assert_eq!(a.total_tasks, b.total_tasks, "{what}: total_tasks");
+    assert_eq!(a.completed, b.completed, "{what}: completed");
+    assert_eq!(a.on_time, b.on_time, "{what}: on_time");
+    assert_eq!(a.fault_drops, b.fault_drops, "{what}: fault_drops");
+    assert_eq!(a.retries, b.retries, "{what}: retries");
+    assert_eq!(
+        a.reroute_recovered, b.reroute_recovered,
+        "{what}: reroute_recovered"
+    );
+    assert_eq!(a.hedges, b.hedges, "{what}: hedges");
+    assert_eq!(
+        a.checkpoint_restores, b.checkpoint_restores,
+        "{what}: checkpoint_restores"
+    );
+}
+
+#[test]
+fn engines_replay_retry_policy_deterministically_under_zone_outage() {
+    let mut cfg = small_cfg();
+    // Enough concurrent work that the two-server outage is guaranteed to
+    // catch stages in flight.
+    cfg.sim.load_multiplier = 1.5;
+    let seed = 61;
+    let env = SimEnv::build(&cfg, seed);
+    let opts = SimOptions::from_config(&cfg);
+    let trace = record_trace(&env, seed, &opts);
+    let schedule = zone_schedule(&cfg, opts.slot_ms);
+
+    let s1 = run_trial_faulted(&env, &mut Proposal::new(), seed, &opts, &trace, &schedule);
+    let s2 = run_trial_faulted(&env, &mut Proposal::new(), seed, &opts, &trace, &schedule);
+    assert_counters_identical(&s1, &s2, "slotted");
+
+    let dopts = DesOptions::from_sim(&opts);
+    let d1 = run_des_trial_faulted(&env, &mut Proposal::new(), seed, &dopts, &trace, &schedule);
+    let d2 = run_des_trial_faulted(&env, &mut Proposal::new(), seed, &dopts, &trace, &schedule);
+    assert_counters_identical(&d1, &d2, "des");
+
+    // The two-server outage cancels in-flight work on both engines; the
+    // retry layer must recover it rather than drop it.
+    assert!(
+        s1.retries > 0,
+        "slotted: outage must cancel in-flight stages (retries {})",
+        s1.retries
+    );
+    assert!(
+        d1.retries > 0,
+        "des: outage must cancel in-flight stages (retries {})",
+        d1.retries
+    );
+    assert!(
+        s1.reroute_recovered > 0,
+        "slotted: cancelled stages must re-route (recovered {})",
+        s1.reroute_recovered
+    );
+    assert!(
+        d1.reroute_recovered > 0,
+        "des: cancelled stages must re-route (recovered {})",
+        d1.reroute_recovered
+    );
+
+    // No silent drops: every admitted task is completed, payload-destroyed,
+    // or aged out by the drop bound — the engines account for all of them
+    // (vq_residual 0 already proves no controller-state leak).
+    assert_eq!(s1.vq_residual, 0);
+    assert_eq!(d1.vq_residual, 0);
+    assert!(s1.completed + s1.fault_drops <= s1.total_tasks);
+    assert!(d1.completed + d1.fault_drops <= d1.total_tasks);
+
+    // Engine agreement on the damage, baseline-relative (same tolerances
+    // as the fault-injection suite).
+    let s_base = run_trial_traced(&env, &mut Proposal::new(), seed, &opts, &trace);
+    let d_base = fmedge::des::run_des_trial(&env, &mut Proposal::new(), seed, &dopts, &trace);
+    let s_drop = s_base.on_time_rate() - s1.on_time_rate();
+    let d_drop = d_base.on_time_rate() - d1.on_time_rate();
+    assert!(
+        s_drop > -0.10 && d_drop > -0.10,
+        "an outage must not improve an engine: slotted {s_drop}, des {d_drop}"
+    );
+    assert!(
+        (s_drop - d_drop).abs() < 0.35,
+        "engines disagree on fault damage: slotted {s_drop} vs des {d_drop}"
+    );
+}
+
+#[test]
+fn checkpoint_restart_restores_replica_capacity() {
+    // The paired fail-stop + restart must register as a checkpoint
+    // restore on both engines (the replica was killed while its node was
+    // healthy, so the rejoin path runs).
+    let cfg = small_cfg();
+    let seed = 67;
+    let env = SimEnv::build(&cfg, seed);
+    let opts = SimOptions::from_config(&cfg);
+    let trace = record_trace(&env, seed, &opts);
+    let es = cfg.network.num_eds;
+    // Kill one replica on every ES, restart them all later: whatever the
+    // placement looks like, at least one kill (and thus one restart)
+    // lands on a live replica.
+    let mut events = Vec::new();
+    for k in 0..cfg.network.num_ess {
+        for core_idx in 0..env.app.catalog.num_core() {
+            events.push(FaultEvent {
+                time_ms: 20.0 * opts.slot_ms,
+                kind: FaultKind::CoreReplicaFail { node: es + k, core_idx },
+            });
+            events.push(FaultEvent {
+                time_ms: 50.0 * opts.slot_ms,
+                kind: FaultKind::CoreReplicaRestart { node: es + k, core_idx },
+            });
+        }
+    }
+    let schedule = FaultSchedule::from_events(events);
+    let s = run_trial_faulted(&env, &mut Proposal::new(), seed, &opts, &trace, &schedule);
+    let d = run_des_trial_faulted(
+        &env,
+        &mut Proposal::new(),
+        seed,
+        &DesOptions::from_sim(&opts),
+        &trace,
+        &schedule,
+    );
+    assert!(
+        s.checkpoint_restores > 0,
+        "slotted: restart must restore a killed replica"
+    );
+    assert!(
+        d.checkpoint_restores > 0,
+        "des: restart must restore a killed replica"
+    );
+    assert_eq!(
+        s.checkpoint_restores, d.checkpoint_restores,
+        "both engines replay the same restart set"
+    );
+}
+
+#[test]
+fn failover_counters_stay_zero_without_faults() {
+    // The inertness contract: with no fault schedule the retry layer
+    // never fires — fault-free runs are byte-identical to pre-failover
+    // behavior (the zero-fault equivalence test covers the full metric
+    // identity; this pins the new counters specifically).
+    let cfg = small_cfg();
+    let seed = 71;
+    let env = SimEnv::build(&cfg, seed);
+    let opts = SimOptions::from_config(&cfg);
+    assert_eq!(opts.failover, FailoverPolicy::default());
+    let trace = record_trace(&env, seed, &opts);
+    let m = run_trial_traced(&env, &mut Proposal::new(), seed, &opts, &trace);
+    assert_eq!(m.retries, 0);
+    assert_eq!(m.reroute_recovered, 0);
+    assert_eq!(m.hedges, 0);
+    assert_eq!(m.checkpoint_restores, 0);
+    assert_eq!(m.fault_drops, 0);
+}

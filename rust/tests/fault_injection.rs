@@ -24,6 +24,16 @@ fn assert_identical(a: &TrialMetrics, b: &TrialMetrics, what: &str) {
     assert_eq!(a.completed, b.completed, "{what}: completed");
     assert_eq!(a.on_time, b.on_time, "{what}: on_time");
     assert_eq!(a.fault_drops, b.fault_drops, "{what}: fault_drops");
+    assert_eq!(
+        a.reroute_recovered, b.reroute_recovered,
+        "{what}: reroute_recovered"
+    );
+    assert_eq!(a.retries, b.retries, "{what}: retries");
+    assert_eq!(a.hedges, b.hedges, "{what}: hedges");
+    assert_eq!(
+        a.checkpoint_restores, b.checkpoint_restores,
+        "{what}: checkpoint_restores"
+    );
     assert_eq!(a.vq_residual, b.vq_residual, "{what}: vq_residual");
     assert!(
         (a.total_cost - b.total_cost).abs() < 1e-12,
