@@ -1,0 +1,113 @@
+//! O1 — observability overhead: the same faulted trial untraced, span
+//! tracing only, and fully observed (spans + per-slot telemetry), on both
+//! engines. The headline number is the observed-vs-untraced mean-time
+//! ratio — the cost of `fmedge trace` — which stays small because the
+//! hooks are `Option`-gated and allocate only when armed (the *disabled*
+//! path is free by construction: the zero-overhead tests prove the
+//! outputs bit-identical, this bench prices the *enabled* path).
+//!
+//! Run: `cargo bench --bench bench_obs` (FMEDGE_BENCH_ITERS to override;
+//! `FMEDGE_BENCH_JSON=BENCH_obs.json` saves the perf-trajectory rows).
+
+use fmedge::baselines::Proposal;
+use fmedge::benchkit::{bench, fmt_duration, print_data_table, save_json};
+use fmedge::config::ExperimentConfig;
+use fmedge::des::{run_des_trial_faulted, run_des_trial_observed, DesOptions};
+use fmedge::faults::{FaultEvent, FaultKind, FaultSchedule};
+use fmedge::obs::Observer;
+use fmedge::sim::{record_trace, run_trial_faulted, run_trial_observed, SimEnv, SimOptions};
+
+fn zone_schedule(cfg: &ExperimentConfig, slot_ms: f64) -> FaultSchedule {
+    let es = cfg.network.num_eds;
+    FaultSchedule::from_events(vec![
+        FaultEvent { time_ms: 30.0 * slot_ms, kind: FaultKind::NodeDown { node: es } },
+        FaultEvent { time_ms: 32.0 * slot_ms, kind: FaultKind::NodeDown { node: es + 1 } },
+        FaultEvent { time_ms: 70.0 * slot_ms, kind: FaultKind::NodeUp { node: es } },
+        FaultEvent { time_ms: 72.0 * slot_ms, kind: FaultKind::NodeUp { node: es + 1 } },
+    ])
+}
+
+fn main() {
+    let iters: usize = std::env::var("FMEDGE_BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8);
+    let mut cfg = ExperimentConfig::paper_default();
+    cfg.sim.slots = 120;
+    cfg.workload.num_users = 8;
+    cfg.controller.effcap_samples = 512;
+    cfg.sim.load_multiplier = 1.5;
+    let seed = 61;
+    let env = SimEnv::build(&cfg, seed);
+    let opts = SimOptions::from_config(&cfg);
+    let trace = record_trace(&env, seed, &opts);
+    let schedule = zone_schedule(&cfg, opts.slot_ms);
+    let dopts = DesOptions::from_sim(&opts);
+
+    let mut rows = Vec::new();
+    let headers = ["engine", "mode", "mean", "p95", "overhead vs off"];
+    for engine in ["slotted", "des"] {
+        let run = |obs_mode: u8| {
+            // One closure per (engine, mode); the Observer is rebuilt per
+            // iteration so recorder growth never compounds across runs.
+            bench(&format!("{engine}/{obs_mode}"), 1, iters, || {
+                let mut strat = Proposal::new();
+                match (engine, obs_mode) {
+                    ("slotted", 0) => {
+                        run_trial_faulted(&env, &mut strat, seed, &opts, &trace, &schedule);
+                    }
+                    ("slotted", 1) => {
+                        let mut obs = Observer::trace_only();
+                        run_trial_observed(
+                            &env, &mut strat, seed, &opts, &trace, &schedule, &mut obs,
+                        );
+                    }
+                    ("slotted", _) => {
+                        let mut obs = Observer::new();
+                        run_trial_observed(
+                            &env, &mut strat, seed, &opts, &trace, &schedule, &mut obs,
+                        );
+                    }
+                    ("des", 0) => {
+                        run_des_trial_faulted(&env, &mut strat, seed, &dopts, &trace, &schedule);
+                    }
+                    ("des", 1) => {
+                        let mut obs = Observer::trace_only();
+                        run_des_trial_observed(
+                            &env, &mut strat, seed, &dopts, &trace, &schedule, &mut obs,
+                        );
+                    }
+                    _ => {
+                        let mut obs = Observer::new();
+                        run_des_trial_observed(
+                            &env, &mut strat, seed, &dopts, &trace, &schedule, &mut obs,
+                        );
+                    }
+                }
+            })
+        };
+        let off = run(0);
+        let spans = run(1);
+        let full = run(2);
+        for (label, r) in [("off", &off), ("spans", &spans), ("spans+telemetry", &full)] {
+            rows.push(vec![
+                engine.to_string(),
+                label.to_string(),
+                fmt_duration(r.mean),
+                fmt_duration(r.p95),
+                format!("{:.3}x", r.mean_ns() / off.mean_ns()),
+            ]);
+        }
+    }
+    print_data_table("O1 — tracing/telemetry overhead per faulted trial", &headers, &rows);
+    if let Ok(path) = std::env::var("FMEDGE_BENCH_JSON") {
+        save_json(
+            &path,
+            "O1 — tracing/telemetry overhead per faulted trial",
+            &headers,
+            &rows,
+        )
+        .expect("write bench json");
+        println!("\nbench rows saved to {path}");
+    }
+}

@@ -12,6 +12,9 @@
 //!   and report degradation vs the no-fault baseline.
 //! * `sweep` — parallel experiment orchestrator for the EXPERIMENTS.md
 //!   grids (p1b/p2/p4/p5) with CSV/JSON artifacts.
+//! * `trace` — run one observed trial with span tracing enabled and
+//!   export Chrome trace JSON / JSONL spans / per-slot telemetry CSV,
+//!   with `--blame` for deadline-miss attribution.
 //! * `serve` — start the serving coordinator on a synthetic open-loop
 //!   workload and print the latency/throughput report.
 
@@ -57,6 +60,7 @@ const FLAGS: &[&str] = &[
     "no-real-compute",
     "validate",
     "virtual",
+    "blame",
 ];
 
 impl Args {
@@ -194,6 +198,14 @@ COMMANDS:
             --engines slotted,des, --epsilons, --scenarios; p5 scenario
             names: baseline, diurnal, mmpp, flash-crowd, mobility,
             commuter, zone-outage, cascade, rush-hour)
+  trace     run one observed trial with per-task span tracing and slot
+            telemetry (--engine slotted|des, --strategy ..., --slots N,
+            --load X, --seed N, --rate R arms a seeded fault schedule,
+            --out FILE.json writes Chrome trace-event JSON [Perfetto],
+            --jsonl FILE.jsonl writes flat spans, --telemetry FILE.csv
+            writes the per-slot metric series, --blame prints the
+            deadline-miss blame decomposition vs the g_{m,eps} budget,
+            --config FILE)
   serve     run the serving coordinator on a synthetic open-loop workload
             (--requests N, --rate RPS, --workers N, --no-real-compute;
             failover: --faults SPEC with SPEC = `zone@START+DUR` or

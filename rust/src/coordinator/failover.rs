@@ -24,6 +24,7 @@ use std::time::Duration;
 
 use crate::faults::{FaultEvent, FaultKind, FaultSchedule};
 use crate::metrics::Summary;
+use crate::obs::{Observer, Span, SpanKind, TraceRecorder};
 
 use super::server::ServeReport;
 
@@ -377,7 +378,7 @@ impl Default for ReplayConfig {
 /// Outcome of a virtual serving run. Bit-deterministic: identical inputs
 /// produce identical counters and latencies, which is what
 /// `rust/tests/failover.rs` asserts across repeated runs.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ReplayReport {
     pub accepted: u64,
     pub served: u64,
@@ -479,6 +480,22 @@ impl ReplayServer {
 
     /// Serve `arrivals` (sorted by arrival time) to completion.
     pub fn run(&self, arrivals: &[VirtualRequest]) -> ReplayReport {
+        self.run_inner(arrivals, None)
+    }
+
+    /// Like [`ReplayServer::run`], recording serving-path spans (queue
+    /// wait, service, hedges, cancelled attempts, backoff) into `obs`.
+    /// Recording is pure observation: the report is identical to the
+    /// unobserved run on the same inputs (asserted by tests).
+    pub fn run_observed(&self, arrivals: &[VirtualRequest], obs: &mut Observer) -> ReplayReport {
+        self.run_inner(arrivals, obs.trace.as_mut())
+    }
+
+    fn run_inner(
+        &self,
+        arrivals: &[VirtualRequest],
+        mut rec: Option<&mut TraceRecorder>,
+    ) -> ReplayReport {
         let retry = self.cfg.policy.retry;
         let checkpoint = self.cfg.policy.checkpoint;
         let mut heap: BinaryHeap<Reverse<Timed>> = BinaryHeap::new();
@@ -518,9 +535,26 @@ impl ReplayServer {
         let mut gen = 0u64;
         let mut horizon = 0.0f64;
 
+        // Pure-observation scratch: spans are accumulated on the side and
+        // merged into the recorder at the end, so recording cannot perturb
+        // event ordering or any served/latency outcome.
+        struct ServeTrace {
+            /// Per-request start of the current wait (arrival or re-enqueue).
+            wait_since: Vec<f64>,
+            /// Per-worker index into `spans` of the in-flight Serve/Hedge span.
+            widx: Vec<Option<usize>>,
+            spans: Vec<Span>,
+        }
+        let mut tr: Option<ServeTrace> = rec.as_ref().map(|_| ServeTrace {
+            wait_since: arrivals.iter().map(|a| a.arrive_ms).collect(),
+            widx: vec![None; self.cfg.workers.max(1)],
+            spans: Vec::new(),
+        });
+
         // Dispatch as much queued work as free, healthy workers allow.
         // Hedging fires a duplicate on a second free worker when slack
         // is short; the first completion wins, the duplicate is ignored.
+        #[allow(clippy::too_many_arguments)]
         fn dispatch(
             now: f64,
             queue: &mut VecDeque<usize>,
@@ -532,6 +566,7 @@ impl ReplayServer {
             stats: &mut FailoverStats,
             retry: &RetryPolicy,
             proc_ms: f64,
+            tr: &mut Option<ServeTrace>,
         ) {
             loop {
                 let free: Vec<usize> = workers
@@ -560,7 +595,7 @@ impl ReplayServer {
                 if hedge {
                     stats.hedges += 1;
                 }
-                for &w in free.iter().take(n_attempts) {
+                for (k, &w) in free.iter().take(n_attempts).enumerate() {
                     *gen += 1;
                     workers[w].serving = Some((ri, *gen));
                     *seq += 1;
@@ -569,6 +604,34 @@ impl ReplayServer {
                         seq: *seq,
                         ev: Ev::Done(w, *gen),
                     }));
+                    if let Some(tr) = tr.as_mut() {
+                        if k == 0 {
+                            tr.spans.push(Span {
+                                task: reqs[ri].id,
+                                stage: Some(0),
+                                attempt: *gen,
+                                kind: SpanKind::QueueWait,
+                                start_ms: tr.wait_since[ri].min(now),
+                                end_ms: now,
+                                node: Some(w),
+                                y: 0,
+                                cancelled: false,
+                            });
+                        }
+                        let kind = if k == 0 { SpanKind::Serve } else { SpanKind::Hedge };
+                        tr.widx[w] = Some(tr.spans.len());
+                        tr.spans.push(Span {
+                            task: reqs[ri].id,
+                            stage: Some(0),
+                            attempt: *gen,
+                            kind,
+                            start_ms: now,
+                            end_ms: now + proc_ms,
+                            node: Some(w),
+                            y: 0,
+                            cancelled: false,
+                        });
+                    }
                 }
             }
         }
@@ -593,6 +656,14 @@ impl ReplayServer {
                         w.down += 1;
                         if w.down == 1 {
                             if let Some((ri, _)) = w.serving.take() {
+                                // The in-flight attempt dies with the
+                                // worker: truncate its span at the outage.
+                                if let Some(tr) = tr.as_mut() {
+                                    if let Some(si) = tr.widx[o.worker].take() {
+                                        tr.spans[si].end_ms = now;
+                                        tr.spans[si].cancelled = true;
+                                    }
+                                }
                                 // In-flight on a dying worker: re-route,
                                 // not drop. Backoff before re-dispatch.
                                 let r = &mut reqs[ri];
@@ -606,6 +677,20 @@ impl ReplayServer {
                                     }
                                     let back = retry.backoff_ms(r.attempts, r.id);
                                     push(&mut heap, &mut seq, now + back, Ev::Wake(ri));
+                                    if let Some(tr) = tr.as_mut() {
+                                        tr.spans.push(Span {
+                                            task: r.id,
+                                            stage: Some(0),
+                                            attempt: r.attempts as u64,
+                                            kind: SpanKind::Backoff,
+                                            start_ms: now,
+                                            end_ms: now + back,
+                                            node: None,
+                                            y: 0,
+                                            cancelled: false,
+                                        });
+                                        tr.wait_since[ri] = now + back;
+                                    }
                                 }
                             }
                         }
@@ -632,6 +717,16 @@ impl ReplayServer {
                     let matched = workers[w].serving.map_or(false, |(_, cur)| cur == g);
                     if matched {
                         let (ri, _) = workers[w].serving.take().unwrap();
+                        if let Some(tr) = tr.as_mut() {
+                            if let Some(si) = tr.widx[w].take() {
+                                // A hedge partner that lost the race did
+                                // run to completion, but its result is
+                                // discarded: mark the span cancelled.
+                                if reqs[ri].completed {
+                                    tr.spans[si].cancelled = true;
+                                }
+                            }
+                        }
                         let r = &mut reqs[ri];
                         if !r.completed {
                             r.completed = true;
@@ -651,6 +746,9 @@ impl ReplayServer {
                 Ev::Wake(ri) => {
                     if ri != usize::MAX && !reqs[ri].completed {
                         queue.push_back(ri);
+                        if let Some(tr) = tr.as_mut() {
+                            tr.wait_since[ri] = now;
+                        }
                     }
                 }
             }
@@ -665,6 +763,7 @@ impl ReplayServer {
                 &mut stats,
                 &retry,
                 self.cfg.proc_ms,
+                &mut tr,
             );
             // Drain-phase fast-forward: if nothing is scheduled but
             // accepted work remains (every worker down past the last
@@ -686,7 +785,14 @@ impl ReplayServer {
                     &mut stats,
                     &retry,
                     self.cfg.proc_ms,
+                    &mut tr,
                 );
+            }
+        }
+
+        if let (Some(r), Some(tr)) = (rec.as_deref_mut(), tr) {
+            for s in tr.spans {
+                r.push_raw(s);
             }
         }
 

@@ -12,6 +12,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::metrics::Summary;
+use crate::obs::{Span, SpanKind, TraceRecorder};
 use crate::runtime::{shapes, MsBlockAccel, Runtime};
 
 use super::batcher::{BatchPolicy, Batcher};
@@ -34,6 +35,10 @@ pub struct ServeConfig {
     /// Fault schedule + retry/checkpoint policy; `None` serves exactly as
     /// before this field existed (the fault-free path is untouched).
     pub failover: Option<FailoverConfig>,
+    /// Optional span sink: workers record one `Serve` span per request
+    /// (wall-clock ms relative to coordinator start). `None` — the
+    /// default — adds no locking or allocation to the serving path.
+    pub trace: Option<Arc<Mutex<TraceRecorder>>>,
 }
 
 impl Default for ServeConfig {
@@ -45,6 +50,7 @@ impl Default for ServeConfig {
             real_compute: true,
             artifact_dir: Runtime::default_dir(),
             failover: None,
+            trace: None,
         }
     }
 }
@@ -135,6 +141,8 @@ struct Shared {
     slots_filled: AtomicU64,
     stop: AtomicBool,
     fail: Option<Arc<FailShared>>,
+    /// Coordinator epoch; serving-path spans are stamped relative to it.
+    started: Instant,
 }
 
 /// The serving coordinator (leader thread + worker pool).
@@ -174,6 +182,7 @@ impl Coordinator {
                 );
                 (f, events)
             });
+        let started = Instant::now();
         let shared = Arc::new(Shared {
             latencies_ms: Mutex::new(Vec::new()),
             served: AtomicU64::new(0),
@@ -182,6 +191,7 @@ impl Coordinator {
             slots_filled: AtomicU64::new(0),
             stop: AtomicBool::new(false),
             fail: fail.as_ref().map(|(f, _)| Arc::clone(f)),
+            started,
         });
 
         // Validate the artifact once up-front (fail fast on `make artifacts`
@@ -223,7 +233,6 @@ impl Coordinator {
         // Fault timeline: replays the compiled worker outages in wall
         // time, flipping per-worker down flags. Sleeps in short steps so
         // the drain phase can fast-forward it.
-        let started = Instant::now();
         let timeline = fail.as_ref().map(|(f, events)| {
             let f = Arc::clone(f);
             let events = events.clone();
@@ -470,6 +479,28 @@ fn worker_loop(
                 shared.served.fetch_add(1, Ordering::Relaxed);
                 if ms <= req.deadline_ms {
                     shared.on_time.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            drop(lat);
+            if let Some(tr) = &cfg.trace {
+                let mut r = tr.lock().unwrap();
+                for req in chunk {
+                    let sub_ms = req
+                        .submitted
+                        .saturating_duration_since(shared.started)
+                        .as_secs_f64()
+                        * 1e3;
+                    r.push_raw(Span {
+                        task: req.id,
+                        stage: Some(0),
+                        attempt: attempts as u64,
+                        kind: SpanKind::Serve,
+                        start_ms: sub_ms,
+                        end_ms: sub_ms + req.submitted.elapsed().as_secs_f64() * 1e3,
+                        node: Some(wid),
+                        y: 0,
+                        cancelled: false,
+                    });
                 }
             }
         };

@@ -27,6 +27,7 @@ use crate::coordinator::{BatchPolicy, FailoverPolicy};
 use crate::faults::{DynamicTopology, FaultKind, FaultSchedule};
 use crate::metrics::{CostBook, MetricsCollector, TaskOutcome, TrialMetrics};
 use crate::microservice::{Application, MsClass};
+use crate::obs::{Observer, TraceRecorder};
 use crate::placement::{QosScores, ScoreParams};
 use crate::routing::{CoreRouter, DistanceMatrix};
 use crate::rng::Xoshiro256;
@@ -188,9 +189,17 @@ struct Des<'a> {
     horizon_ms: f64,
     record: bool,
     records: Vec<TaskRecord>,
+    /// Optional observability handle; `None` leaves every hook site on
+    /// the exact untraced code path (no RNG, no event reordering).
+    obs: Option<&'a mut Observer>,
 }
 
 impl<'a> Des<'a> {
+    /// The span recorder, if an observer with tracing is attached.
+    fn rec(&mut self) -> Option<&mut TraceRecorder> {
+        self.obs.as_deref_mut().and_then(|o| o.trace.as_mut())
+    }
+
     fn request_decide(&mut self, now: f64) {
         if !self.decide_scheduled {
             self.decide_scheduled = true;
@@ -199,6 +208,9 @@ impl<'a> Des<'a> {
     }
 
     fn finish_task(&mut self, id: u64, t: DesTask, done_ms: Option<f64>) {
+        if let Some(r) = self.rec() {
+            r.task_finished(id, done_ms);
+        }
         let latency_ms = done_ms.map(|d| d - t.arrival_ms);
         self.collector.record(TaskOutcome {
             task_id: id,
@@ -252,6 +264,13 @@ impl<'a> Des<'a> {
                 hedge: vec![None; n],
             },
         );
+        let sink = app.task_types[a.task_type.0]
+            .dag
+            .sink()
+            .unwrap_or(n.saturating_sub(1));
+        if let Some(r) = self.rec() {
+            r.admit(a.id.0, a.task_type.0, n, sink, now, deadline_ms, a.uplink_delay_ms);
+        }
         self.cal
             .schedule(now + a.uplink_delay_ms, EventKind::UplinkDone { task: a.id.0 });
     }
@@ -350,6 +369,20 @@ impl<'a> Des<'a> {
                 } else {
                     None
                 };
+                // Critical-parent span data must be derived while the
+                // routed dm view is still borrowed (it lives in self).
+                let trace_pre = self.obs.is_some().then(|| {
+                    let t = &self.tasks[&id];
+                    let primary = crate::sim::critical_parent(
+                        app, t.task_type, local, &payloads, asn.node, dm,
+                    );
+                    let hedge = hedge_asn.as_ref().map(|h| {
+                        crate::sim::critical_parent(
+                            app, t.task_type, local, &payloads, h.node, dm,
+                        )
+                    });
+                    (primary, hedge)
+                });
                 let t = self.tasks.get_mut(&id).unwrap();
                 if t.rerouted[local] {
                     t.rerouted[local] = false;
@@ -368,6 +401,20 @@ impl<'a> Des<'a> {
                         token,
                     },
                 );
+                if let Some(((from, ready, arrive), _)) = trace_pre {
+                    if let Some(r) = self.rec() {
+                        r.core_dispatched(
+                            id,
+                            local,
+                            token,
+                            asn.node,
+                            from,
+                            ready,
+                            arrive,
+                            asn.start_ms,
+                        );
+                    }
+                }
                 if let Some(h) = hedge_asn {
                     // The hedge carries token + 1; only a promotion (the
                     // primary's node dying) makes it the live token.
@@ -384,6 +431,20 @@ impl<'a> Des<'a> {
                             token: htoken,
                         },
                     );
+                    if let Some((_, Some((from, ready, arrive)))) = trace_pre {
+                        if let Some(r) = self.rec() {
+                            r.hedge_dispatched(
+                                id,
+                                local,
+                                htoken,
+                                h.node,
+                                from,
+                                ready,
+                                arrive,
+                                h.start_ms,
+                            );
+                        }
+                    }
                 }
             }
             // No instance: every replica may be down or unreachable under
@@ -393,6 +454,9 @@ impl<'a> Des<'a> {
             let t = self.tasks.get_mut(&id).unwrap();
             t.dispatched[local] = true;
             self.pending.push((id, local));
+            if let Some(r) = self.rec() {
+                r.light_pending(id, local, now);
+            }
             self.request_decide(now);
         }
     }
@@ -410,6 +474,9 @@ impl<'a> Des<'a> {
             t.node[local] = Some(node);
             app.task_types[t.task_type].dag.sink() == Some(local)
         };
+        if let Some(r) = self.rec() {
+            r.stage_done(id, local, now);
+        }
         if is_sink {
             let t = self.tasks.remove(&id).unwrap();
             self.finish_task(id, t, Some(now));
@@ -434,6 +501,9 @@ impl<'a> Des<'a> {
     /// its sampled service time, stamped with the station's current
     /// outage generation.
     fn start_service(&mut self, v: usize, m: usize, w: Waiting, now: f64) {
+        if let Some(r) = self.rec() {
+            r.light_started(w.task, w.local, now);
+        }
         let gen = self.stations.gen(v, m);
         self.cal.schedule(
             now + w.proc_ms,
@@ -644,7 +714,7 @@ impl<'a> Des<'a> {
             }
             // Sampled contended service time — same draw semantics as the
             // slotted engine.
-            let (proc_ms, critical, mb, arrive) = {
+            let (proc_ms, critical, mb, arrive, obs_pre) = {
                 let dm: &DistanceMatrix = match &self.dynt {
                     Some(d) => d.dm(),
                     None => &env.dm,
@@ -663,7 +733,10 @@ impl<'a> Des<'a> {
                     })
                     .unwrap();
                 let arrive = pd + dm.latency(pn, asn.node, mb);
-                (spec.workload_mb / f.max(1e-9), (pn, pd), mb, arrive)
+                let obs_pre = self.obs.is_some().then(|| {
+                    crate::sim::critical_parent(app, t.task_type, local, &payloads, asn.node, dm)
+                });
+                (spec.workload_mb / f.max(1e-9), (pn, pd), mb, arrive, obs_pre)
             };
             // No surviving route from the payload to the chosen node:
             // keep waiting (links may recover; the age drop bounds it).
@@ -737,6 +810,21 @@ impl<'a> Des<'a> {
                 };
                 self.cal.schedule(first, kind);
             }
+            if let Some((from, _, _)) = obs_pre {
+                if let Some(r) = self.rec() {
+                    r.light_assigned(
+                        id,
+                        local,
+                        token,
+                        asn.node,
+                        asn.y,
+                        asn.light_idx,
+                        from,
+                        now,
+                        arrive.max(now),
+                    );
+                }
+            }
         }
         self.pending = still;
     }
@@ -785,6 +873,11 @@ impl<'a> Des<'a> {
                 // re-dispatch after the batch commit (dispatch drops
                 // tasks whose inputs died with the node).
                 let retry = self.opts.failover.retry;
+                // Trace events collected during the cancellation walk and
+                // applied after it (the recorder can't be borrowed while
+                // `tasks` is): (task, stage, kind, backoff_until).
+                let tracing = self.obs.as_ref().map_or(false, |o| o.trace.is_some());
+                let mut trace_ev: Vec<(u64, usize, u8, f64)> = Vec::new();
                 for (&id, t) in self.tasks.iter_mut() {
                     for local in 0..t.done.len() {
                         if t.done[local].is_some() {
@@ -806,6 +899,9 @@ impl<'a> Des<'a> {
                                 t.token[local] = ht;
                                 t.hedge[local] = None;
                                 self.collector.record_reroute();
+                                if tracing {
+                                    trace_ev.push((id, local, 0, 0.0));
+                                }
                                 continue;
                             }
                             t.dispatched[local] = false;
@@ -827,9 +923,29 @@ impl<'a> Des<'a> {
                                 );
                             self.collector.record_retry();
                             self.fault_resets.push((id, local));
+                            if tracing {
+                                trace_ev.push((id, local, 1, t.retry_at[local]));
+                            }
                         } else if t.hedge[local].map(|(hn, _)| hn) == Some(node) {
                             // The standby died; the primary continues.
                             t.hedge[local] = None;
+                            if tracing {
+                                trace_ev.push((id, local, 2, 0.0));
+                            }
+                        }
+                    }
+                }
+                if !trace_ev.is_empty() {
+                    // Sorted for determinism: the cancellation walk visits
+                    // a HashMap in arbitrary order.
+                    trace_ev.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.cmp(&b.1)));
+                    if let Some(r) = self.rec() {
+                        for (tid, local, kind, until) in trace_ev {
+                            match kind {
+                                0 => r.hedge_promoted(tid, local, now),
+                                1 => r.attempt_cancelled(tid, local, now, until),
+                                _ => r.hedge_dropped(tid, local, now),
+                            }
                         }
                     }
                 }
@@ -850,12 +966,17 @@ impl<'a> Des<'a> {
                 // the node's own recovery instead.
                 if self.node_up[node] {
                     let cp = self.opts.failover.checkpoint;
-                    if self
-                        .core_router
-                        .rejoin(node, core_idx, now, cp.restore_ms, cp.cold_start_ms)
-                        .is_some()
-                    {
+                    if let Some(ready_ms) = self.core_router.rejoin(
+                        node,
+                        core_idx,
+                        now,
+                        cp.restore_ms,
+                        cp.cold_start_ms,
+                    ) {
                         self.collector.record_restore();
+                        if let Some(r) = self.rec() {
+                            r.restore(node, now, ready_ms);
+                        }
                     }
                 }
             }
@@ -948,6 +1069,31 @@ impl<'a> Des<'a> {
         self.costs
             .charge_light_slot(&x_now, &y_now, &self.light_dp, &self.light_mt, &self.light_pl);
         self.collector.record_queue_depth(self.pending.len() + self.stations.waiting_total());
+        // Per-tick telemetry snapshot (observer-gated, read-only).
+        if self.obs.as_ref().map_or(false, |o| o.metrics.is_some()) {
+            let env = self.env;
+            let nl = env.app.catalog.num_light();
+            let mut backlog = vec![0usize; nl];
+            for &(pid, plocal) in &self.pending {
+                if let Some(t) = self.tasks.get(&pid) {
+                    let ms_id = env.app.task_types[t.task_type].services[plocal];
+                    if let Some(m) = self.light_idx_of[ms_id.0] {
+                        backlog[m] += 1;
+                    }
+                }
+            }
+            let committed_y: Vec<u32> = (0..nl)
+                .map(|m| y_now.iter().map(|row| row[m]).max().unwrap_or(0))
+                .collect();
+            let busy_groups: u32 = x_now.iter().flat_map(|r| r.iter()).sum();
+            let node_util = x_now.iter().filter(|row| row.iter().any(|&b| b > 0)).count()
+                as f64
+                / x_now.len().max(1) as f64;
+            let vq = self.queues.total_backlog();
+            if let Some(o) = self.obs.as_deref_mut() {
+                o.sample_slot(now, &backlog, &committed_y, busy_groups, node_util, vq, &env.gtable);
+            }
+        }
         if !self.pending.is_empty() {
             self.request_decide(now);
         }
@@ -963,7 +1109,7 @@ pub fn run_des_trial(
     trace: &Trace,
 ) -> TrialMetrics {
     let none = FaultSchedule::none();
-    run_des_inner(env, strategy, seed, opts, trace, false, &none).0
+    run_des_inner(env, strategy, seed, opts, trace, false, &none, None).0
 }
 
 /// Like [`run_des_trial`], additionally returning per-task execution
@@ -976,7 +1122,7 @@ pub fn run_des_trial_recorded(
     trace: &Trace,
 ) -> (TrialMetrics, Vec<TaskRecord>) {
     let none = FaultSchedule::none();
-    run_des_inner(env, strategy, seed, opts, trace, true, &none)
+    run_des_inner(env, strategy, seed, opts, trace, true, &none, None)
 }
 
 /// Run one DES trial while replaying a [`FaultSchedule`] at its exact
@@ -990,9 +1136,27 @@ pub fn run_des_trial_faulted(
     trace: &Trace,
     faults: &FaultSchedule,
 ) -> TrialMetrics {
-    run_des_inner(env, strategy, seed, opts, trace, false, faults).0
+    run_des_inner(env, strategy, seed, opts, trace, false, faults, None).0
 }
 
+/// Like [`run_des_trial_faulted`], with an [`Observer`] attached: spans,
+/// per-tick telemetry, and blame-attribution inputs are recorded without
+/// consuming engine RNG or reordering the calendar, so the returned
+/// metrics are identical to the unobserved run on the same inputs
+/// (asserted by the zero-overhead gate test).
+pub fn run_des_trial_observed(
+    env: &SimEnv,
+    strategy: &mut dyn Strategy,
+    seed: u64,
+    opts: &DesOptions,
+    trace: &Trace,
+    faults: &FaultSchedule,
+    obs: &mut Observer,
+) -> TrialMetrics {
+    run_des_inner(env, strategy, seed, opts, trace, false, faults, Some(obs)).0
+}
+
+#[allow(clippy::too_many_arguments)]
 fn run_des_inner(
     env: &SimEnv,
     strategy: &mut dyn Strategy,
@@ -1001,6 +1165,7 @@ fn run_des_inner(
     trace: &Trace,
     record: bool,
     faults: &FaultSchedule,
+    obs: Option<&mut Observer>,
 ) -> (TrialMetrics, Vec<TaskRecord>) {
     let app = &env.app;
     let cfg = &env.cfg;
@@ -1066,6 +1231,7 @@ fn run_des_inner(
         horizon_ms: opts.slots as f64 * opts.slot_ms,
         record,
         records: Vec::new(),
+        obs,
     };
 
     // Seed the calendar. Fault events go in first so that, at equal

@@ -36,7 +36,8 @@ pub mod validate;
 
 pub use calendar::{Calendar, EventKind, Scheduled};
 pub use engine::{
-    run_des_trial, run_des_trial_faulted, run_des_trial_recorded, DesOptions, TaskRecord,
+    run_des_trial, run_des_trial_faulted, run_des_trial_observed, run_des_trial_recorded,
+    DesOptions, TaskRecord,
 };
 pub use stations::{Joined, LightStations, Waiting};
 pub use validate::{pool, report, sojourn_ccdf, validate_bounds, ServiceValidation};

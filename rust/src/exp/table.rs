@@ -32,6 +32,15 @@ impl Table {
         self.rows.push(row);
     }
 
+    /// Append a row of numeric values, formatted to round-trip telemetry:
+    /// integral values print without a fraction (counters stay greppable),
+    /// everything else gets six decimals with trailing zeros trimmed.
+    /// Non-finite values pass through as `NaN`/`inf` text so
+    /// [`Table::validate`] still catches them.
+    pub fn push_numeric_row(&mut self, values: &[f64]) {
+        self.rows.push(values.iter().map(|&v| fmt_numeric(v)).collect());
+    }
+
     /// Well-formedness gate: every row matches the header arity, no cell
     /// is empty, and no numeric cell is NaN/inf. A sweep whose table
     /// fails this must not publish artifacts — an empty or NaN cell means
@@ -153,6 +162,19 @@ impl Table {
     }
 }
 
+/// Compact numeric cell formatting for [`Table::push_numeric_row`].
+fn fmt_numeric(v: f64) -> String {
+    if !v.is_finite() {
+        return format!("{v}");
+    }
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        return format!("{}", v as i64);
+    }
+    let s = format!("{v:.6}");
+    let s = s.trim_end_matches('0').trim_end_matches('.');
+    s.to_string()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -203,5 +225,19 @@ mod tests {
         let r = sample().render();
         assert!(r.contains("== demo =="));
         assert!(r.lines().count() >= 4);
+    }
+
+    #[test]
+    fn numeric_rows_format_compactly() {
+        let mut t = Table::new("telemetry", &["time_ms", "count", "gauge"]);
+        t.push_numeric_row(&[10.0, 4.0, 2.5]);
+        t.push_numeric_row(&[20.5, 5.0, 0.000001]);
+        assert!(t.validate().is_ok());
+        assert_eq!(t.rows[0], vec!["10", "4", "2.5"]);
+        assert_eq!(t.rows[1], vec!["20.5", "5", "0.000001"]);
+        // Non-finite values stay visible so validate() can reject them.
+        let mut bad = Table::new("bad", &["x"]);
+        bad.push_numeric_row(&[f64::NAN]);
+        assert!(bad.validate().is_err());
     }
 }

@@ -51,6 +51,7 @@ pub mod routing;
 pub mod sim;
 
 pub mod exp;
+pub mod obs;
 pub mod scenarios;
 
 pub mod coordinator;

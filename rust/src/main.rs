@@ -8,14 +8,20 @@ use fmedge::coordinator::{
     parse_fault_spec, BatchPolicy, Coordinator, FailoverConfig, FailoverPolicy, ReplayConfig,
     ReplayServer, Request, ServeConfig, VirtualRequest,
 };
-use fmedge::des::{pool, report, run_des_trial, run_des_trial_faulted, validate_bounds, DesOptions};
+use fmedge::des::{
+    pool, report, run_des_trial, run_des_trial_faulted, run_des_trial_observed, validate_bounds,
+    DesOptions,
+};
 use fmedge::exp::{run_sweep, strategy_by_name, Experiment, SweepConfig};
 use fmedge::faults::{FaultParams, FaultSchedule};
 use fmedge::metrics::Summary;
+use fmedge::obs::{analyze, chrome_trace_json, render, spans_jsonl, Observer};
 use fmedge::placement::{solve_static_placement, PlacementParams, QosScores, ScoreParams};
 use fmedge::rng::{Rng, Xoshiro256};
 use fmedge::runtime::{EffCapAccel, Runtime};
-use fmedge::sim::{record_trace, run_trial, run_trial_faulted, SimEnv, SimOptions, Strategy};
+use fmedge::sim::{
+    record_trace, run_trial, run_trial_faulted, run_trial_observed, SimEnv, SimOptions, Strategy,
+};
 use fmedge::workload::{Trace, WorkloadGenerator};
 
 fn main() {
@@ -37,6 +43,7 @@ fn main() {
         "simulate" => cmd_simulate(&args),
         "des" => cmd_des(&args),
         "faults" => cmd_faults(&args),
+        "trace" => cmd_trace(&args),
         "sweep" => cmd_sweep(&args),
         "serve" => cmd_serve(&args),
         other => {
@@ -380,6 +387,93 @@ fn cmd_faults(args: &Args) -> Result<(), AnyError> {
         }
     }
     println!("\nsweep finished in {:?}", t0.elapsed());
+    Ok(())
+}
+
+/// `fmedge trace`: one fully-observed trial (EXPERIMENTS §P7). Runs the
+/// chosen engine with span tracing + per-slot telemetry armed, exports
+/// Chrome trace-event JSON (`--out`, opens in Perfetto), flat JSONL
+/// spans (`--jsonl`) and the telemetry series as CSV (`--telemetry`),
+/// and with `--blame` prints the deadline-miss blame decomposition:
+/// every miss split into uplink / queue / transfer / exec / disruption
+/// components and compared against the `g_{m,eps}(y)` budget. `--rate R`
+/// arms the same seeded fault schedule `fmedge faults` would use, so a
+/// faulty run can be dissected span by span.
+fn cmd_trace(args: &Args) -> Result<(), AnyError> {
+    let mut cfg = load_config(args)?;
+    cfg.sim.slots = args.get_usize("slots", 120)?;
+    cfg.sim.load_multiplier = args.get_f64("load", cfg.sim.load_multiplier)?;
+    cfg.sim.seed = args.get_u64("seed", cfg.sim.seed)?;
+    let strat_name = args.get("strategy").unwrap_or("proposal").to_string();
+    let engine = args.get("engine").unwrap_or("slotted").to_string();
+    if engine != "slotted" && engine != "des" {
+        return Err(format!("unknown engine `{engine}` (slotted|des)").into());
+    }
+    let rate = args.get_f64("rate", 0.0)?;
+    let seed = cfg.sim.seed;
+    let env = SimEnv::build(&cfg, seed);
+    let opts = SimOptions::from_config(&cfg);
+    let trace = record_trace(&env, seed, &opts);
+    // Same schedule derivation as `fmedge faults`: a traced run at
+    // (seed, rate) dissects exactly the grid cell the sweep measured.
+    let schedule = if rate > 0.0 {
+        FaultSchedule::generate(
+            &env.topo,
+            opts.slots,
+            opts.slot_ms,
+            env.app.catalog.num_core(),
+            &FaultParams::from_rate(rate),
+            seed ^ rate.to_bits().rotate_left(17),
+        )
+    } else {
+        FaultSchedule::none()
+    };
+    let mut strategy = make_strategy(&strat_name)?;
+    let mut obs = Observer::new();
+    let t0 = Instant::now();
+    let m = if engine == "des" {
+        run_des_trial_observed(
+            &env,
+            strategy.as_mut(),
+            seed,
+            &DesOptions::from_sim(&opts),
+            &trace,
+            &schedule,
+            &mut obs,
+        )
+    } else {
+        run_trial_observed(&env, strategy.as_mut(), seed, &opts, &trace, &schedule, &mut obs)
+    };
+    let rec = obs.trace.as_ref().expect("Observer::new arms tracing");
+    println!(
+        "{engine}/{strat_name}: tasks={} completed={} on_time={:.3} spans={} in {:?}",
+        m.total_tasks,
+        m.completed,
+        m.on_time_rate(),
+        rec.all_spans().len(),
+        t0.elapsed()
+    );
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, chrome_trace_json(rec))?;
+        println!("chrome trace written to {path} (open in Perfetto / chrome://tracing)");
+    }
+    if let Some(path) = args.get("jsonl") {
+        std::fs::write(path, spans_jsonl(rec))?;
+        println!("spans written to {path}");
+    }
+    if let Some(path) = args.get("telemetry") {
+        let reg = obs.metrics.as_ref().expect("Observer::new arms metrics");
+        let table = reg.to_table("telemetry");
+        table.save_csv(path)?;
+        println!(
+            "telemetry series written to {path} ({} samples)",
+            reg.num_samples()
+        );
+    }
+    if args.flag("blame") {
+        let blame = analyze(rec, Some(&env.gtable))?;
+        print!("{}", render(&blame));
+    }
     Ok(())
 }
 

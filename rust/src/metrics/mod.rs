@@ -15,7 +15,7 @@ pub use stats::{kde_violin, quantile, Summary, ViolinData};
 /// experienced at its assigned replica (queue wait + service), the
 /// measured counterpart of the analytic bound `g_{m,ε}(y)`. Populated by
 /// the DES engine; the slotted engine leaves these empty.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct ServiceObs {
     /// Sojourn-time distribution (ms).
     pub sojourn: Histogram,
@@ -59,7 +59,10 @@ impl TaskOutcome {
 }
 
 /// Aggregated metrics of one simulation trial.
-#[derive(Clone, Debug, Default)]
+///
+/// `PartialEq` exists for the zero-overhead observability gate: a traced
+/// run must produce metrics equal to the untraced run on the same seed.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct TrialMetrics {
     pub total_tasks: usize,
     pub completed: usize,
@@ -67,7 +70,8 @@ pub struct TrialMetrics {
     pub total_cost: f64,
     pub core_cost: f64,
     pub light_cost: f64,
-    /// Completed-task latencies (ms).
+    /// Completed-task latencies (ms), sorted ascending — [`MetricsCollector::finish`]
+    /// sorts once so percentile queries are allocation-free.
     pub latencies_ms: Vec<f64>,
     /// Deadlines of all admitted tasks (for slack analysis).
     pub mean_deadline_ms: f64,
@@ -118,8 +122,18 @@ impl TrialMetrics {
         self.on_time as f64 / self.total_tasks as f64
     }
 
-    /// Latency percentile over completed tasks.
+    /// Latency percentile over completed tasks; `0.0` for an empty trial
+    /// (previously this fed an empty slice to [`quantile`] and returned
+    /// NaN). [`MetricsCollector::finish`] stores the latencies sorted, so
+    /// the common path neither allocates nor re-sorts; a hand-assembled
+    /// unsorted vec falls back to one defensive copy.
     pub fn latency_percentile(&self, p: f64) -> f64 {
+        if self.latencies_ms.is_empty() {
+            return 0.0;
+        }
+        if self.latencies_ms.windows(2).all(|w| w[0] <= w[1]) {
+            return quantile(&self.latencies_ms, p);
+        }
         let mut v = self.latencies_ms.clone();
         v.sort_by(|a, b| a.partial_cmp(b).unwrap());
         quantile(&v, p)
@@ -207,11 +221,15 @@ impl MetricsCollector {
         let total_tasks = self.outcomes.len();
         let completed = self.outcomes.iter().filter(|o| o.completed()).count();
         let on_time = self.outcomes.iter().filter(|o| o.on_time()).count();
-        let latencies_ms: Vec<f64> = self
+        let mut latencies_ms: Vec<f64> = self
             .outcomes
             .iter()
             .filter_map(|o| o.latency_ms)
             .collect();
+        // Sorted once here; `latency_percentile` relies on it. This also
+        // makes the stream insensitive to engine completion order, so
+        // paired slotted-vs-DES comparisons diff multisets, not schedules.
+        latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let mean_deadline_ms = if total_tasks > 0 {
             self.outcomes.iter().map(|o| o.deadline_ms).sum::<f64>() / total_tasks as f64
         } else {
@@ -328,11 +346,38 @@ mod tests {
     #[test]
     fn latency_percentiles() {
         let mut c = MetricsCollector::new();
-        for i in 1..=100 {
+        // Recorded in reverse: `finish` must sort so percentiles hold.
+        for i in (1..=100).rev() {
             c.record(outcome(Some(i as f64), 1000.0));
         }
         let m = c.finish(&CostBook::default());
+        assert!(m.latencies_ms.windows(2).all(|w| w[0] <= w[1]));
         assert!((m.latency_percentile(0.5) - 50.5).abs() < 1.0);
         assert!(m.latency_percentile(0.99) >= 99.0);
+    }
+
+    #[test]
+    fn latency_percentile_of_empty_trial_is_zero() {
+        // Regression: an empty latency vec used to reach `quantile` and
+        // come back NaN, poisoning any table built from a hollow trial.
+        let m = MetricsCollector::new().finish(&CostBook::default());
+        assert_eq!(m.latency_percentile(0.5), 0.0);
+        assert_eq!(m.latency_percentile(0.99), 0.0);
+
+        let mut drops = MetricsCollector::new();
+        drops.record(outcome(None, 20.0)); // admitted but never completed
+        let m = drops.finish(&CostBook::default());
+        assert_eq!(m.latency_percentile(0.5), 0.0);
+    }
+
+    #[test]
+    fn latency_percentile_handles_unsorted_hand_built_metrics() {
+        // Defensive path: a hand-assembled TrialMetrics (tests, external
+        // tools) with unsorted latencies still answers correctly.
+        let m = TrialMetrics {
+            latencies_ms: vec![30.0, 10.0, 20.0],
+            ..TrialMetrics::default()
+        };
+        assert!((m.latency_percentile(0.5) - 20.0).abs() < 1e-9);
     }
 }

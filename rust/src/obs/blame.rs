@@ -1,0 +1,326 @@
+//! Deadline-miss blame attribution (`fmedge trace --blame`).
+//!
+//! Walks every completed task's critical-parent chain from the sink back
+//! to the source, summing span segments plus inter-stage gaps into six
+//! additive components. The decomposition telescopes *exactly* to the
+//! end-to-end sojourn `done - arrival` — the §P7 span-accounting
+//! invariant tests assert it on both engines, faults included — so the
+//! per-component means over misses are a true budget breakdown, not an
+//! approximation.
+//!
+//! When a [`GTable`] is supplied, every completed light execution's
+//! measured station sojourn is additionally compared against the
+//! effective-capacity budget `g_{m,ε}(y)` at its committed `y` — the
+//! per-component "where is the bound loose/tight" report §P2 needed.
+
+use std::collections::BTreeMap;
+
+use super::span::{SpanKind, TraceRecorder};
+use crate::effcap::GTable;
+
+pub const N_COMPONENTS: usize = 6;
+
+/// Component order used by `TaskBlame::parts` and the report tables.
+pub const COMPONENT_NAMES: [&str; N_COMPONENTS] = [
+    "uplink",
+    "queue",
+    "transfer",
+    "core_exec",
+    "light_exec",
+    "disruption",
+];
+
+const UPLINK: usize = 0;
+const QUEUE: usize = 1;
+const TRANSFER: usize = 2;
+const CORE_EXEC: usize = 3;
+const LIGHT_EXEC: usize = 4;
+const DISRUPTION: usize = 5;
+
+fn component(kind: SpanKind) -> usize {
+    match kind {
+        SpanKind::Admission => UPLINK,
+        SpanKind::QueueWait => QUEUE,
+        SpanKind::Transfer => TRANSFER,
+        SpanKind::CoreExec => CORE_EXEC,
+        SpanKind::LightExec => LIGHT_EXEC,
+        SpanKind::Backoff | SpanKind::Hedge | SpanKind::Restore | SpanKind::Serve => DISRUPTION,
+    }
+}
+
+/// One completed task's additive latency decomposition.
+#[derive(Clone, Debug)]
+pub struct TaskBlame {
+    pub task: u64,
+    pub latency_ms: f64,
+    pub deadline_ms: f64,
+    pub missed: bool,
+    /// The task absorbed at least one fault cancellation.
+    pub retried: bool,
+    /// Per-component delay, ordered as [`COMPONENT_NAMES`]; sums to
+    /// `latency_ms` exactly.
+    pub parts: [f64; N_COMPONENTS],
+}
+
+/// Measured-vs-budget comparison for one light service.
+#[derive(Clone, Debug)]
+pub struct BudgetRow {
+    pub light_idx: usize,
+    pub samples: usize,
+    /// Mean measured station sojourn (arrival at the node -> done).
+    pub mean_sojourn_ms: f64,
+    /// Mean `g_{m,ε}(y)` at the committed parallelism of each sample.
+    pub mean_budget_ms: f64,
+    /// Samples whose sojourn exceeded their budget.
+    pub violations: usize,
+}
+
+/// The full post-run report.
+#[derive(Clone, Debug)]
+pub struct BlameReport {
+    pub tasks: Vec<TaskBlame>,
+    pub misses: usize,
+    /// Per-component mean over deadline misses (zeros when none missed).
+    pub miss_mean: [f64; N_COMPONENTS],
+    /// Per-component mean over on-time tasks (zeros when none).
+    pub ontime_mean: [f64; N_COMPONENTS],
+    /// Per-light-service measured-vs-budget rows (empty without a g-table).
+    pub budget: Vec<BudgetRow>,
+}
+
+/// Decompose every completed task in `rec`. Errs when a completed task's
+/// recorded chain is inconsistent — that is an instrumentation bug the
+/// invariant tests are meant to catch, never a data-dependent condition.
+pub fn analyze(rec: &TraceRecorder, gtable: Option<&GTable>) -> Result<BlameReport, String> {
+    let mut tasks_out = Vec::new();
+    // light_idx -> (samples, sojourn sum, budget sum, violations)
+    let mut budget_acc: BTreeMap<usize, (usize, f64, f64, usize)> = BTreeMap::new();
+
+    for (&id, tt) in rec.tasks() {
+        let Some(done) = tt.done_ms else {
+            continue; // dropped or unfinished: no sojourn to decompose
+        };
+        let mut parts = [0.0; N_COMPONENTS];
+        parts[UPLINK] += tt.uplink_ms;
+        let mut retried = false;
+        let mut cur = Some(tt.sink);
+        let mut hops = 0usize;
+        while let Some(s) = cur {
+            hops += 1;
+            if hops > tt.stages.len() + 1 {
+                return Err(format!("task {id}: critical-parent chain does not terminate"));
+            }
+            let st = tt
+                .stages
+                .get(s)
+                .ok_or_else(|| format!("task {id}: stage {s} out of range"))?;
+            let fa = st.completed.as_ref().ok_or_else(|| {
+                format!("task {id}: completed but stage {s} has no finalized attempt")
+            })?;
+            for &(kind, a, b) in &fa.segments {
+                parts[component(kind)] += b - a;
+            }
+            // The gap between the critical parent finishing and this stage
+            // becoming ready: re-dispatch delay after a cancellation when
+            // the stage retried, otherwise scheduling wait.
+            let prev_end = match fa.from {
+                Some(p) => {
+                    tt.stages
+                        .get(p)
+                        .and_then(|ps| ps.completed.as_ref())
+                        .ok_or_else(|| {
+                            format!("task {id}: stage {s} depends on unfinished stage {p}")
+                        })?
+                        .done_ms
+                }
+                None => tt.arrival_ms + tt.uplink_ms,
+            };
+            let gap = fa.ready_ms - prev_end;
+            if st.retries > 0 {
+                retried = true;
+                parts[DISRUPTION] += gap;
+            } else {
+                parts[QUEUE] += gap;
+            }
+            if let (false, Some(m), Some(gt)) = (fa.is_core, fa.light_idx, gtable) {
+                let sojourn = fa.done_ms - fa.arrive_ms;
+                let yy = (fa.y.max(1) as usize).min(gt.max_parallelism());
+                let budget = gt.delay(m, yy);
+                if budget.is_finite() {
+                    let e = budget_acc.entry(m).or_insert((0, 0.0, 0.0, 0));
+                    e.0 += 1;
+                    e.1 += sojourn;
+                    e.2 += budget;
+                    if sojourn > budget {
+                        e.3 += 1;
+                    }
+                }
+            }
+            cur = fa.from;
+        }
+        let latency_ms = done - tt.arrival_ms;
+        tasks_out.push(TaskBlame {
+            task: id,
+            latency_ms,
+            deadline_ms: tt.deadline_ms,
+            missed: latency_ms > tt.deadline_ms,
+            retried,
+            parts,
+        });
+    }
+
+    let mut miss_mean = [0.0; N_COMPONENTS];
+    let mut ontime_mean = [0.0; N_COMPONENTS];
+    let (mut n_miss, mut n_ontime) = (0usize, 0usize);
+    for tb in &tasks_out {
+        let (acc, n) = if tb.missed {
+            (&mut miss_mean, &mut n_miss)
+        } else {
+            (&mut ontime_mean, &mut n_ontime)
+        };
+        *n += 1;
+        for (a, p) in acc.iter_mut().zip(&tb.parts) {
+            *a += p;
+        }
+    }
+    if n_miss > 0 {
+        miss_mean.iter_mut().for_each(|a| *a /= n_miss as f64);
+    }
+    if n_ontime > 0 {
+        ontime_mean.iter_mut().for_each(|a| *a /= n_ontime as f64);
+    }
+    let budget = budget_acc
+        .into_iter()
+        .map(|(m, (n, soj, bud, viol))| BudgetRow {
+            light_idx: m,
+            samples: n,
+            mean_sojourn_ms: soj / n as f64,
+            mean_budget_ms: bud / n as f64,
+            violations: viol,
+        })
+        .collect();
+    Ok(BlameReport {
+        misses: n_miss,
+        miss_mean,
+        ontime_mean,
+        budget,
+        tasks: tasks_out,
+    })
+}
+
+/// Human-readable report for `fmedge trace --blame`.
+pub fn render(report: &BlameReport) -> String {
+    let completed = report.tasks.len();
+    let mut out = String::new();
+    out.push_str(&format!(
+        "blame: {completed} completed tasks, {} deadline misses ({:.1}%)\n",
+        report.misses,
+        if completed > 0 {
+            100.0 * report.misses as f64 / completed as f64
+        } else {
+            0.0
+        }
+    ));
+    let miss_total: f64 = report.miss_mean.iter().sum();
+    out.push_str("  component    miss mean ms   share %   on-time mean ms\n");
+    for (i, name) in COMPONENT_NAMES.iter().enumerate() {
+        let share = if miss_total > 0.0 {
+            100.0 * report.miss_mean[i] / miss_total
+        } else {
+            0.0
+        };
+        out.push_str(&format!(
+            "  {name:<11} {:>12.3} {share:>9.1} {:>17.3}\n",
+            report.miss_mean[i], report.ontime_mean[i]
+        ));
+    }
+    if !report.budget.is_empty() {
+        out.push_str("  measured light sojourn vs g_(m,eps)(y):\n");
+        for row in &report.budget {
+            out.push_str(&format!(
+                "    m={:<2} samples {:>6}  sojourn {:>9.3} ms  budget {:>9.3} ms  \
+                 violations {} ({:.2}%)\n",
+                row.light_idx,
+                row.samples,
+                row.mean_sojourn_ms,
+                row.mean_budget_ms,
+                row.violations,
+                100.0 * row.violations as f64 / row.samples.max(1) as f64
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A two-stage chain with a retry: the decomposition must telescope
+    /// exactly to `done - arrival`.
+    #[test]
+    fn decomposition_telescopes_exactly() {
+        let mut r = TraceRecorder::new();
+        r.admit(5, 0, 2, 1, 100.0, 25.0, 2.0);
+        // Stage 0 (source, light): queue 3, transfer 1, wait 2, exec 6.
+        r.light_pending(5, 0, 102.0);
+        r.light_assigned(5, 0, 1, 0, 2, 0, None, 105.0, 106.0);
+        r.light_started(5, 0, 108.0);
+        r.stage_done(5, 0, 114.0);
+        // Stage 1 (sink, core) retries once: cancelled at 118, backoff to
+        // 121, re-dispatched ready at 121 with transfer to 122, exec to 130.
+        r.core_dispatched(5, 1, 2, 3, Some(0), 114.0, 115.0, 116.0);
+        r.attempt_cancelled(5, 1, 118.0, 121.0);
+        r.core_dispatched(5, 1, 3, 4, Some(0), 121.0, 122.0, 123.0);
+        r.stage_done(5, 1, 130.0);
+        r.task_finished(5, Some(130.0));
+
+        let rep = analyze(&r, None).expect("consistent chain");
+        assert_eq!(rep.tasks.len(), 1);
+        let tb = &rep.tasks[0];
+        assert!(tb.retried);
+        assert!(tb.missed, "latency 30 ms exceeds the 25 ms deadline");
+        let sum: f64 = tb.parts.iter().sum();
+        assert!(
+            (sum - tb.latency_ms).abs() < 1e-9,
+            "components {sum} != latency {}",
+            tb.latency_ms
+        );
+        // The re-dispatch gap [114 done -> 121 ready] is disruption.
+        assert!(tb.parts[DISRUPTION] >= 7.0 - 1e-9);
+    }
+
+    #[test]
+    fn unfinished_tasks_are_skipped() {
+        let mut r = TraceRecorder::new();
+        r.admit(1, 0, 1, 0, 0.0, 50.0, 1.0);
+        r.task_finished(1, None);
+        let rep = analyze(&r, None).unwrap();
+        assert!(rep.tasks.is_empty());
+        assert_eq!(rep.misses, 0);
+    }
+
+    #[test]
+    fn broken_chain_is_an_error() {
+        let mut r = TraceRecorder::new();
+        r.admit(2, 0, 1, 0, 0.0, 50.0, 1.0);
+        // Completed without any finalized stage: instrumentation bug.
+        r.task_finished(2, Some(10.0));
+        assert!(analyze(&r, None).is_err());
+    }
+
+    #[test]
+    fn render_mentions_every_component() {
+        let mut r = TraceRecorder::new();
+        r.admit(0, 0, 1, 0, 0.0, 1.0, 0.5);
+        r.core_dispatched(0, 0, 1, 0, None, 0.5, 1.0, 1.0);
+        r.stage_done(0, 0, 5.0);
+        r.task_finished(0, Some(5.0));
+        let rep = analyze(&r, None).unwrap();
+        assert_eq!(rep.misses, 1);
+        let txt = render(&rep);
+        for name in COMPONENT_NAMES {
+            assert!(txt.contains(name), "missing {name} in:\n{txt}");
+        }
+    }
+}

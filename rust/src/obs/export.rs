@@ -1,0 +1,138 @@
+//! Span exporters: Chrome trace-event JSON (opens directly in Perfetto /
+//! `chrome://tracing`) and one-span-per-line JSONL. Both are hand-rolled
+//! — the crate has no serde — and sanitize non-finite values so the
+//! artifacts always parse.
+
+use super::span::{Span, TraceRecorder, INFRA_TASK};
+
+fn num(x: f64) -> f64 {
+    if x.is_finite() {
+        x
+    } else {
+        0.0
+    }
+}
+
+fn write_chrome_event(out: &mut String, s: &Span) {
+    // Infra spans (checkpoint restores) get their own pid row group.
+    let (pid, tid) = if s.task == INFRA_TASK {
+        (2u32, 0u64)
+    } else {
+        (1u32, s.task)
+    };
+    let stage = s.stage.map_or(-1, |v| v as i64);
+    let node = s.node.map_or(-1, |v| v as i64);
+    out.push_str(&format!(
+        "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{:.3},\"dur\":{:.3},\
+         \"pid\":{pid},\"tid\":{tid},\"args\":{{\"stage\":{stage},\"attempt\":{},\
+         \"node\":{node},\"y\":{},\"cancelled\":{}}}}}",
+        s.kind.name(),
+        s.kind.category(),
+        num(s.start_ms) * 1000.0,
+        num(s.end_ms - s.start_ms).max(0.0) * 1000.0,
+        s.attempt,
+        s.y,
+        s.cancelled,
+    ));
+}
+
+/// Chrome trace-event JSON (`ph: "X"` complete events, µs timestamps).
+pub fn chrome_trace_json(rec: &TraceRecorder) -> String {
+    let spans = rec.all_spans();
+    let mut out = String::with_capacity(64 + spans.len() * 160);
+    out.push_str("{\"traceEvents\":[");
+    for (i, s) in spans.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        write_chrome_event(&mut out, s);
+    }
+    out.push_str("],\"displayTimeUnit\":\"ms\"}\n");
+    out
+}
+
+/// One JSON object per line: the grep/jq-friendly artifact.
+pub fn spans_jsonl(rec: &TraceRecorder) -> String {
+    let spans = rec.all_spans();
+    let mut out = String::with_capacity(spans.len() * 160);
+    for s in &spans {
+        let task = if s.task == INFRA_TASK {
+            "null".to_string()
+        } else {
+            s.task.to_string()
+        };
+        let stage = s.stage.map_or("null".to_string(), |v| v.to_string());
+        let node = s.node.map_or("null".to_string(), |v| v.to_string());
+        out.push_str(&format!(
+            "{{\"task\":{task},\"stage\":{stage},\"attempt\":{},\"kind\":\"{}\",\
+             \"start_ms\":{:.6},\"end_ms\":{:.6},\"node\":{node},\"y\":{},\
+             \"cancelled\":{}}}\n",
+            s.attempt,
+            s.kind.name(),
+            num(s.start_ms),
+            num(s.end_ms),
+            s.y,
+            s.cancelled,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_recorder() -> TraceRecorder {
+        let mut r = TraceRecorder::new();
+        r.admit(0, 0, 1, 0, 0.0, 50.0, 1.5);
+        r.core_dispatched(0, 0, 1, 2, None, 1.5, 2.0, 2.0);
+        r.stage_done(0, 0, 7.0);
+        r.task_finished(0, Some(7.0));
+        r.restore(3, 10.0, 12.0);
+        r
+    }
+
+    #[test]
+    fn chrome_json_is_structurally_sound() {
+        let s = chrome_trace_json(&sample_recorder());
+        assert!(s.starts_with("{\"traceEvents\":["));
+        assert!(s.trim_end().ends_with('}'));
+        assert!(s.contains("\"ph\":\"X\""));
+        assert!(s.contains("\"name\":\"core_exec\""));
+        assert!(s.contains("\"name\":\"restore\""));
+        assert!(!s.contains("NaN") && !s.contains("inf"));
+        // Balanced braces — a cheap parse proxy without serde.
+        let open = s.matches('{').count();
+        let close = s.matches('}').count();
+        assert_eq!(open, close, "unbalanced JSON braces");
+    }
+
+    #[test]
+    fn jsonl_is_one_object_per_line() {
+        let s = spans_jsonl(&sample_recorder());
+        assert!(!s.is_empty());
+        for line in s.lines() {
+            assert!(line.starts_with('{') && line.ends_with('}'), "bad line: {line}");
+        }
+        // The infra restore span carries a null task id.
+        assert!(s.contains("\"task\":null"));
+    }
+
+    #[test]
+    fn non_finite_times_are_sanitized() {
+        let mut r = TraceRecorder::new();
+        r.push_raw(Span {
+            task: 1,
+            stage: None,
+            attempt: 0,
+            kind: super::super::SpanKind::Serve,
+            start_ms: f64::NAN,
+            end_ms: f64::INFINITY,
+            node: None,
+            y: 0,
+            cancelled: false,
+        });
+        let s = chrome_trace_json(&r);
+        assert!(!s.contains("NaN") && !s.contains("inf"));
+    }
+}

@@ -1,0 +1,131 @@
+//! Observability: per-task span tracing, time-series telemetry, and
+//! deadline-miss blame attribution (EXPERIMENTS §P7).
+//!
+//! The paper's guarantee `P(delay > g_{m,ε}(y)) ≤ ε` is probabilistic;
+//! `des::validate` says *whether* it holds but not *why* a given task
+//! missed its deadline. This module answers that question natively:
+//!
+//! * [`TraceRecorder`] — one span per task stage (admission, queue wait,
+//!   transfer, core/light exec at the committed `y`, retry backoff,
+//!   hedges, checkpoint restores), with task/stage/attempt identifiers
+//!   matching the engines' event-seq/token scheme. Exporters emit JSONL
+//!   ([`spans_jsonl`]) and Chrome trace-event JSON ([`chrome_trace_json`])
+//!   that opens directly in Perfetto (`fmedge trace --out trace.json`).
+//! * [`MetricsRegistry`] — counters/gauges/histograms sampled per
+//!   slot/epoch: per-light-service backlog, virtual-queue level,
+//!   committed `y`, node utilization, and the live `g_{m,ε}(y)` budget,
+//!   exported as a CSV [`crate::exp::Table`].
+//! * [`analyze`] — a post-run analyzer that decomposes every completed
+//!   task's sojourn into per-component delay (and every deadline miss
+//!   into blame shares), and compares measured per-service sojourns
+//!   against the effective-capacity budget (`fmedge trace --blame`).
+//!
+//! Everything is `Option`-gated: the engines thread `Option<&mut
+//! Observer>` through the exact code path the untraced run takes,
+//! consume no engine RNG, and never reorder events — with tracing
+//! disabled, outputs are byte-identical (asserted by tests + CI smoke).
+
+mod blame;
+mod export;
+mod span;
+mod telemetry;
+
+pub use blame::{analyze, render, BlameReport, BudgetRow, TaskBlame, COMPONENT_NAMES};
+pub use export::{chrome_trace_json, spans_jsonl};
+pub use span::{Span, SpanKind, StageAttempt, StageTrace, TaskTrace, TraceRecorder, INFRA_TASK};
+pub use telemetry::{CounterId, GaugeId, HistId, MetricsRegistry};
+
+use crate::effcap::GTable;
+
+/// The engines' observability handle: both halves are optional, so a
+/// caller can record spans without telemetry or vice versa.
+#[derive(Clone, Debug, Default)]
+pub struct Observer {
+    pub trace: Option<TraceRecorder>,
+    pub metrics: Option<MetricsRegistry>,
+    series: Option<EngineSeries>,
+}
+
+/// Gauge handles for the per-slot engine snapshot, registered lazily on
+/// the first sample (when the light-service count is known).
+#[derive(Clone, Debug)]
+struct EngineSeries {
+    backlog: Vec<GaugeId>,
+    committed_y: Vec<GaugeId>,
+    g_budget: Vec<GaugeId>,
+    busy_groups: GaugeId,
+    node_util: GaugeId,
+    vq_backlog: GaugeId,
+}
+
+impl Observer {
+    /// Record both spans and telemetry.
+    pub fn new() -> Self {
+        Observer {
+            trace: Some(TraceRecorder::new()),
+            metrics: Some(MetricsRegistry::new()),
+            series: None,
+        }
+    }
+
+    /// Span tracing only (no per-slot telemetry rows).
+    pub fn trace_only() -> Self {
+        Observer {
+            trace: Some(TraceRecorder::new()),
+            metrics: None,
+            series: None,
+        }
+    }
+
+    /// One per-slot (or per-tick) engine snapshot: per-light-service
+    /// backlog and committed parallelism, core-group occupancy, node
+    /// utilization, virtual-queue backlog, and the live effective-capacity
+    /// budget `g_{m,ε}(y)` at the committed `y`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sample_slot(
+        &mut self,
+        now_ms: f64,
+        backlog: &[usize],
+        committed_y: &[u32],
+        busy_groups: u32,
+        node_util: f64,
+        vq_backlog: f64,
+        gtable: &GTable,
+    ) {
+        let Some(reg) = self.metrics.as_mut() else {
+            return;
+        };
+        let series = self.series.get_or_insert_with(|| {
+            let nl = backlog.len();
+            EngineSeries {
+                backlog: (0..nl).map(|m| reg.gauge(&format!("backlog_m{m}"))).collect(),
+                committed_y: (0..nl).map(|m| reg.gauge(&format!("y_m{m}"))).collect(),
+                g_budget: (0..nl).map(|m| reg.gauge(&format!("g_ms_m{m}"))).collect(),
+                busy_groups: reg.gauge("busy_core_groups"),
+                node_util: reg.gauge("node_util"),
+                vq_backlog: reg.gauge("vq_backlog"),
+            }
+        });
+        for (m, &b) in backlog.iter().enumerate() {
+            reg.set(series.backlog[m], b as f64);
+        }
+        for (m, &y) in committed_y.iter().enumerate() {
+            reg.set(series.committed_y[m], y as f64);
+            let yy = (y.max(1) as usize).min(gtable.max_parallelism());
+            let g = gtable.delay(m, yy);
+            // A non-finite budget (no feasible capacity) is recorded as -1
+            // so the CSV stays clean under `Table::validate`.
+            reg.set(series.g_budget[m], if g.is_finite() { g } else { -1.0 });
+        }
+        reg.set(series.busy_groups, busy_groups as f64);
+        reg.set(series.node_util, node_util);
+        reg.set(series.vq_backlog, vq_backlog);
+        reg.sample(now_ms);
+    }
+}
+
+/// Reborrow helper: the recorder inside an optional observer handle, if
+/// both are present. Keeps engine hook sites to one line.
+pub fn rec_mut<'a>(obs: &'a mut Option<&mut Observer>) -> Option<&'a mut TraceRecorder> {
+    obs.as_deref_mut().and_then(|o| o.trace.as_mut())
+}

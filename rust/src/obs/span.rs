@@ -1,0 +1,688 @@
+//! Span recording: per-task, per-stage, per-attempt timing.
+//!
+//! The recorder mirrors the engines' own bookkeeping: a stage has at most
+//! one *pending* primary attempt (plus an optional hedged standby), and a
+//! completed stage finalizes its pending attempt into a [`StageAttempt`]
+//! whose `segments` tile `[ready_ms, done_ms]` contiguously — so summing
+//! a task's segment durations plus the inter-stage gaps along the
+//! critical-parent chain reproduces the end-to-end sojourn *exactly*
+//! (the §P7 span-accounting invariant; see [`super::analyze`]).
+//!
+//! Cancelled attempts (fault casualties, losing hedges) are emitted as
+//! standalone `cancelled` spans: they show real work in Perfetto but are
+//! excluded from the additive decomposition, since the retry's wait is
+//! already accounted as backoff/disruption time.
+
+use std::collections::BTreeMap;
+
+/// Sentinel task id for infrastructure spans (checkpoint restores) that
+/// belong to a node, not a task.
+pub const INFRA_TASK: u64 = u64::MAX;
+
+/// What a span measures.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Uplink: user payload in flight from the device to its ED.
+    Admission,
+    /// Waiting for a decision epoch / a free instance.
+    QueueWait,
+    /// Payload transfer between nodes.
+    Transfer,
+    /// Core-service execution (FIFO-serialized replica).
+    CoreExec,
+    /// Light-service execution at the committed parallelism `y`.
+    LightExec,
+    /// Retry backoff window after a fault cancellation.
+    Backoff,
+    /// Hedged standby execution (second attempt near the deadline).
+    Hedge,
+    /// Checkpoint restore of a core replica (infrastructure span).
+    Restore,
+    /// Serving-path request service (coordinator / replay server).
+    Serve,
+}
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Admission => "admission",
+            SpanKind::QueueWait => "queue_wait",
+            SpanKind::Transfer => "transfer",
+            SpanKind::CoreExec => "core_exec",
+            SpanKind::LightExec => "light_exec",
+            SpanKind::Backoff => "backoff",
+            SpanKind::Hedge => "hedge",
+            SpanKind::Restore => "restore",
+            SpanKind::Serve => "serve",
+        }
+    }
+
+    /// Chrome trace-event category (drives Perfetto's row coloring).
+    pub fn category(self) -> &'static str {
+        match self {
+            SpanKind::Admission => "task",
+            SpanKind::QueueWait => "sched",
+            SpanKind::Transfer => "net",
+            SpanKind::CoreExec | SpanKind::LightExec => "exec",
+            SpanKind::Backoff | SpanKind::Hedge | SpanKind::Restore => "fault",
+            SpanKind::Serve => "serve",
+        }
+    }
+}
+
+/// One flattened span (the export unit).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Span {
+    pub task: u64,
+    /// Local DAG stage, `None` for task-level / infrastructure spans.
+    pub stage: Option<usize>,
+    /// Dispatch identifier: the slotted engine's event seq / the DES
+    /// token, so a span can be joined back to engine internals.
+    pub attempt: u64,
+    pub kind: SpanKind,
+    pub start_ms: f64,
+    pub end_ms: f64,
+    pub node: Option<usize>,
+    /// Committed light parallelism (0 for core/non-exec spans).
+    pub y: u32,
+    /// The attempt was cancelled (fault casualty or losing hedge); its
+    /// duration is real work but not part of the additive decomposition.
+    pub cancelled: bool,
+}
+
+/// An in-flight dispatch attempt, finalized on stage completion.
+#[derive(Clone, Debug)]
+struct Pending {
+    attempt: u64,
+    node: Option<usize>,
+    y: u32,
+    light_idx: Option<usize>,
+    from: Option<usize>,
+    is_core: bool,
+    is_hedge: bool,
+    ready_ms: f64,
+    depart_ms: Option<f64>,
+    arrive_ms: Option<f64>,
+    start_ms: Option<f64>,
+}
+
+/// The finalized attempt that completed a stage. `segments` tile
+/// `[ready_ms, done_ms]` contiguously (transfer, waits, execution).
+#[derive(Clone, Debug)]
+pub struct StageAttempt {
+    pub attempt: u64,
+    pub node: usize,
+    pub y: u32,
+    /// Dense light index (None for core stages).
+    pub light_idx: Option<usize>,
+    pub is_core: bool,
+    /// Critical parent: the local stage whose output arrived last (None
+    /// for source stages reading the user payload at the ED).
+    pub from: Option<usize>,
+    pub ready_ms: f64,
+    /// Payload arrival at the executing node (post-transfer).
+    pub arrive_ms: f64,
+    /// Execution start.
+    pub start_ms: f64,
+    pub done_ms: f64,
+    /// Contiguous `(kind, start, end)` tiling of `[ready_ms, done_ms]`.
+    pub segments: Vec<(SpanKind, f64, f64)>,
+}
+
+/// Per-stage record: the completed attempt plus retry bookkeeping.
+#[derive(Clone, Debug, Default)]
+pub struct StageTrace {
+    /// Fault cancellations this stage absorbed before completing.
+    pub retries: u32,
+    pub completed: Option<StageAttempt>,
+    primary: Option<Pending>,
+    hedge: Option<Pending>,
+}
+
+/// Per-task record.
+#[derive(Clone, Debug)]
+pub struct TaskTrace {
+    pub task_type: usize,
+    /// Sink stage of the task DAG (the blame walk starts here).
+    pub sink: usize,
+    pub arrival_ms: f64,
+    pub uplink_ms: f64,
+    pub deadline_ms: f64,
+    /// Sink completion time; `None` for dropped/unfinished tasks.
+    pub done_ms: Option<f64>,
+    pub stages: Vec<StageTrace>,
+}
+
+/// The span recorder both engines and the serving path write into.
+#[derive(Clone, Debug, Default)]
+pub struct TraceRecorder {
+    tasks: BTreeMap<u64, TaskTrace>,
+    extra: Vec<Span>,
+}
+
+fn clamp_ms(x: f64, lo: f64, hi: f64) -> f64 {
+    x.max(lo).min(hi)
+}
+
+impl TraceRecorder {
+    pub fn new() -> Self {
+        TraceRecorder::default()
+    }
+
+    pub fn tasks(&self) -> &BTreeMap<u64, TaskTrace> {
+        &self.tasks
+    }
+
+    pub fn num_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    fn stage_mut(&mut self, task: u64, stage: usize) -> Option<&mut StageTrace> {
+        self.tasks.get_mut(&task).and_then(|t| t.stages.get_mut(stage))
+    }
+
+    /// A task was admitted: uplink in flight, DAG of `n_stages` ahead.
+    #[allow(clippy::too_many_arguments)]
+    pub fn admit(
+        &mut self,
+        task: u64,
+        task_type: usize,
+        n_stages: usize,
+        sink: usize,
+        arrival_ms: f64,
+        deadline_ms: f64,
+        uplink_ms: f64,
+    ) {
+        self.tasks.insert(
+            task,
+            TaskTrace {
+                task_type,
+                sink,
+                arrival_ms,
+                uplink_ms,
+                deadline_ms,
+                done_ms: None,
+                stages: vec![StageTrace::default(); n_stages],
+            },
+        );
+    }
+
+    /// A core stage was routed: transfer from the critical parent starts
+    /// at `ready_ms`, lands at `arrive_ms`, execution at `start_ms`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn core_dispatched(
+        &mut self,
+        task: u64,
+        stage: usize,
+        attempt: u64,
+        node: usize,
+        from: Option<usize>,
+        ready_ms: f64,
+        arrive_ms: f64,
+        start_ms: f64,
+    ) {
+        let Some(st) = self.stage_mut(task, stage) else {
+            return;
+        };
+        st.primary = Some(Pending {
+            attempt,
+            node: Some(node),
+            y: 0,
+            light_idx: None,
+            from,
+            is_core: true,
+            is_hedge: false,
+            ready_ms,
+            depart_ms: None,
+            arrive_ms: Some(arrive_ms),
+            start_ms: Some(start_ms),
+        });
+    }
+
+    /// A hedged standby was booked alongside the primary core attempt.
+    #[allow(clippy::too_many_arguments)]
+    pub fn hedge_dispatched(
+        &mut self,
+        task: u64,
+        stage: usize,
+        attempt: u64,
+        node: usize,
+        from: Option<usize>,
+        ready_ms: f64,
+        arrive_ms: f64,
+        start_ms: f64,
+    ) {
+        let Some(st) = self.stage_mut(task, stage) else {
+            return;
+        };
+        st.hedge = Some(Pending {
+            attempt,
+            node: Some(node),
+            y: 0,
+            light_idx: None,
+            from,
+            is_core: true,
+            is_hedge: true,
+            ready_ms,
+            depart_ms: None,
+            arrive_ms: Some(arrive_ms),
+            start_ms: Some(start_ms),
+        });
+    }
+
+    /// A light stage became ready and entered the controller queue (DES:
+    /// the per-stage queue-wait clock starts here).
+    pub fn light_pending(&mut self, task: u64, stage: usize, ready_ms: f64) {
+        let Some(st) = self.stage_mut(task, stage) else {
+            return;
+        };
+        st.primary = Some(Pending {
+            attempt: 0,
+            node: None,
+            y: 0,
+            light_idx: None,
+            from: None,
+            is_core: false,
+            is_hedge: false,
+            ready_ms,
+            depart_ms: None,
+            arrive_ms: None,
+            start_ms: None,
+        });
+    }
+
+    /// The controller assigned a queued light stage (DES: execution start
+    /// arrives later via [`TraceRecorder::light_started`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn light_assigned(
+        &mut self,
+        task: u64,
+        stage: usize,
+        attempt: u64,
+        node: usize,
+        y: u32,
+        light_idx: usize,
+        from: Option<usize>,
+        depart_ms: f64,
+        arrive_ms: f64,
+    ) {
+        let Some(st) = self.stage_mut(task, stage) else {
+            return;
+        };
+        let p = st.primary.get_or_insert_with(|| Pending {
+            attempt: 0,
+            node: None,
+            y: 0,
+            light_idx: None,
+            from: None,
+            is_core: false,
+            is_hedge: false,
+            ready_ms: depart_ms,
+            depart_ms: None,
+            arrive_ms: None,
+            start_ms: None,
+        });
+        p.attempt = attempt;
+        p.node = Some(node);
+        p.y = y;
+        p.light_idx = Some(light_idx);
+        p.from = from;
+        p.depart_ms = Some(depart_ms);
+        p.arrive_ms = Some(arrive_ms);
+    }
+
+    /// Slotted one-shot light assignment: the whole timeline is known at
+    /// the decision slot (transfer is modeled from payload-ready time, so
+    /// `depart == ready`; post-arrival wait lands in the mid segment).
+    #[allow(clippy::too_many_arguments)]
+    pub fn light_assigned_full(
+        &mut self,
+        task: u64,
+        stage: usize,
+        attempt: u64,
+        node: usize,
+        y: u32,
+        light_idx: usize,
+        from: Option<usize>,
+        ready_ms: f64,
+        arrive_ms: f64,
+        start_ms: f64,
+    ) {
+        let Some(st) = self.stage_mut(task, stage) else {
+            return;
+        };
+        st.primary = Some(Pending {
+            attempt,
+            node: Some(node),
+            y,
+            light_idx: Some(light_idx),
+            from,
+            is_core: false,
+            is_hedge: false,
+            ready_ms,
+            depart_ms: Some(ready_ms),
+            arrive_ms: Some(arrive_ms),
+            start_ms: Some(start_ms),
+        });
+    }
+
+    /// A light execution entered service (DES station dequeue).
+    pub fn light_started(&mut self, task: u64, stage: usize, now_ms: f64) {
+        if let Some(st) = self.stage_mut(task, stage) {
+            if let Some(p) = st.primary.as_mut() {
+                p.start_ms = Some(now_ms);
+            }
+        }
+    }
+
+    /// The stage's current primary attempt completed at `now_ms`.
+    pub fn stage_done(&mut self, task: u64, stage: usize, now_ms: f64) {
+        let Some(st) = self.stage_mut(task, stage) else {
+            return;
+        };
+        let disrupted = st.retries > 0;
+        if let Some(p) = st.primary.take() {
+            st.completed = Some(Self::finalize(&p, now_ms, disrupted));
+        }
+        let hedge = st.hedge.take();
+        if let Some(h) = hedge {
+            // The primary won; the standby's work was wasted but real.
+            self.extra.push(Self::cancel_span(task, stage, &h, now_ms));
+        }
+    }
+
+    /// A fault cancelled the stage's in-flight attempt; it will re-dispatch
+    /// no earlier than `backoff_until_ms`.
+    pub fn attempt_cancelled(&mut self, task: u64, stage: usize, now_ms: f64, backoff_until_ms: f64) {
+        let Some(st) = self.stage_mut(task, stage) else {
+            return;
+        };
+        st.retries += 1;
+        let retries = st.retries;
+        let primary = st.primary.take();
+        let attempt = primary.as_ref().map_or(retries as u64, |p| p.attempt);
+        if let Some(p) = primary {
+            self.extra.push(Self::cancel_span(task, stage, &p, now_ms));
+        }
+        self.extra.push(Span {
+            task,
+            stage: Some(stage),
+            attempt,
+            kind: SpanKind::Backoff,
+            start_ms: now_ms,
+            end_ms: backoff_until_ms.max(now_ms),
+            node: None,
+            y: 0,
+            cancelled: false,
+        });
+    }
+
+    /// The primary's node died but a live hedged standby takes over in
+    /// place (no retry cycle).
+    pub fn hedge_promoted(&mut self, task: u64, stage: usize, now_ms: f64) {
+        let Some(st) = self.stage_mut(task, stage) else {
+            return;
+        };
+        let old = st.primary.take();
+        if let Some(mut h) = st.hedge.take() {
+            h.is_hedge = false;
+            st.primary = Some(h);
+        }
+        if let Some(p) = old {
+            self.extra.push(Self::cancel_span(task, stage, &p, now_ms));
+        }
+    }
+
+    /// The hedged standby's own node died; the primary continues.
+    pub fn hedge_dropped(&mut self, task: u64, stage: usize, now_ms: f64) {
+        let Some(st) = self.stage_mut(task, stage) else {
+            return;
+        };
+        let hedge = st.hedge.take();
+        if let Some(h) = hedge {
+            self.extra.push(Self::cancel_span(task, stage, &h, now_ms));
+        }
+    }
+
+    /// A core replica restarted from checkpoint (or cold) on `node`.
+    pub fn restore(&mut self, node: usize, at_ms: f64, ready_ms: f64) {
+        self.extra.push(Span {
+            task: INFRA_TASK,
+            stage: None,
+            attempt: 0,
+            kind: SpanKind::Restore,
+            start_ms: at_ms,
+            end_ms: ready_ms.max(at_ms),
+            node: Some(node),
+            y: 0,
+            cancelled: false,
+        });
+    }
+
+    /// Terminal outcome: sink completion time, or `None` for a drop.
+    pub fn task_finished(&mut self, task: u64, done_ms: Option<f64>) {
+        if let Some(t) = self.tasks.get_mut(&task) {
+            t.done_ms = done_ms;
+        }
+    }
+
+    /// Append a pre-built span (serving-path instrumentation).
+    pub fn push_raw(&mut self, span: Span) {
+        self.extra.push(span);
+    }
+
+    fn cancel_span(task: u64, stage: usize, p: &Pending, now_ms: f64) -> Span {
+        let kind = if p.is_hedge {
+            SpanKind::Hedge
+        } else if p.is_core {
+            SpanKind::CoreExec
+        } else {
+            SpanKind::LightExec
+        };
+        let start = p.start_ms.or(p.arrive_ms).unwrap_or(p.ready_ms);
+        Span {
+            task,
+            stage: Some(stage),
+            attempt: p.attempt,
+            kind,
+            start_ms: start,
+            end_ms: now_ms.max(start),
+            node: p.node,
+            y: p.y,
+            cancelled: true,
+        }
+    }
+
+    /// Tile `[ready, done]` with contiguous segments. Clamping keeps the
+    /// tiling exact even if a recorded timestamp is out of order (a
+    /// defensive guard — engines record monotone timelines).
+    fn finalize(p: &Pending, done_ms: f64, disrupted: bool) -> StageAttempt {
+        let ready = p.ready_ms.min(done_ms);
+        // The wait between payload arrival and execution start is backoff
+        // fallout when the stage had a cancelled attempt, queueing else.
+        let mid = if disrupted {
+            SpanKind::Backoff
+        } else {
+            SpanKind::QueueWait
+        };
+        let mut segments = Vec::with_capacity(4);
+        let (arrive, start);
+        if p.is_core {
+            arrive = clamp_ms(p.arrive_ms.unwrap_or(ready), ready, done_ms);
+            start = clamp_ms(p.start_ms.unwrap_or(arrive), arrive, done_ms);
+            segments.push((SpanKind::Transfer, ready, arrive));
+            segments.push((mid, arrive, start));
+            segments.push((SpanKind::CoreExec, start, done_ms));
+        } else {
+            let depart = clamp_ms(p.depart_ms.unwrap_or(ready), ready, done_ms);
+            arrive = clamp_ms(p.arrive_ms.unwrap_or(depart), depart, done_ms);
+            start = clamp_ms(p.start_ms.unwrap_or(arrive), arrive, done_ms);
+            segments.push((SpanKind::QueueWait, ready, depart));
+            segments.push((SpanKind::Transfer, depart, arrive));
+            segments.push((mid, arrive, start));
+            segments.push((SpanKind::LightExec, start, done_ms));
+        }
+        StageAttempt {
+            attempt: p.attempt,
+            node: p.node.unwrap_or(0),
+            y: p.y,
+            light_idx: p.light_idx,
+            is_core: p.is_core,
+            from: p.from,
+            ready_ms: ready,
+            arrive_ms: arrive,
+            start_ms: start,
+            done_ms,
+            segments,
+        }
+    }
+
+    /// Flatten to export order: every completed stage's segments, one
+    /// admission span per task, plus the raw/cancelled spans, sorted by
+    /// start time (BTreeMap iteration keeps ties deterministic).
+    pub fn all_spans(&self) -> Vec<Span> {
+        let mut out = Vec::new();
+        for (&id, t) in &self.tasks {
+            out.push(Span {
+                task: id,
+                stage: None,
+                attempt: 0,
+                kind: SpanKind::Admission,
+                start_ms: t.arrival_ms,
+                end_ms: t.arrival_ms + t.uplink_ms,
+                node: None,
+                y: 0,
+                cancelled: false,
+            });
+            for (local, st) in t.stages.iter().enumerate() {
+                if let Some(fa) = &st.completed {
+                    for &(kind, a, b) in &fa.segments {
+                        out.push(Span {
+                            task: id,
+                            stage: Some(local),
+                            attempt: fa.attempt,
+                            kind,
+                            start_ms: a,
+                            end_ms: b,
+                            node: Some(fa.node),
+                            y: fa.y,
+                            cancelled: false,
+                        });
+                    }
+                }
+            }
+        }
+        out.extend(self.extra.iter().cloned());
+        out.sort_by(|a, b| {
+            a.start_ms
+                .partial_cmp(&b.start_ms)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| a.task.cmp(&b.task))
+                .then_with(|| {
+                    a.end_ms
+                        .partial_cmp(&b.end_ms)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                })
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seg_sum(fa: &StageAttempt) -> f64 {
+        fa.segments.iter().map(|&(_, a, b)| b - a).sum()
+    }
+
+    #[test]
+    fn core_stage_segments_tile_ready_to_done() {
+        let mut r = TraceRecorder::new();
+        r.admit(7, 0, 2, 1, 100.0, 50.0, 3.0);
+        r.core_dispatched(7, 0, 11, 2, None, 103.0, 105.5, 106.0);
+        r.stage_done(7, 0, 110.0);
+        let fa = r.tasks()[&7].stages[0].completed.as_ref().unwrap().clone();
+        assert_eq!(fa.node, 2);
+        assert_eq!(fa.attempt, 11);
+        assert_eq!(fa.segments.len(), 3);
+        assert!((seg_sum(&fa) - (110.0 - 103.0)).abs() < 1e-9);
+        assert_eq!(fa.segments[0].0, SpanKind::Transfer);
+        assert_eq!(fa.segments[2].0, SpanKind::CoreExec);
+    }
+
+    #[test]
+    fn light_stage_records_queue_and_service() {
+        let mut r = TraceRecorder::new();
+        r.admit(1, 0, 1, 0, 0.0, 50.0, 1.0);
+        r.light_pending(1, 0, 5.0);
+        r.light_assigned(1, 0, 3, 4, 2, 0, None, 9.0, 9.5);
+        r.light_started(1, 0, 12.0);
+        r.stage_done(1, 0, 20.0);
+        let fa = r.tasks()[&1].stages[0].completed.as_ref().unwrap().clone();
+        assert_eq!(fa.y, 2);
+        assert_eq!(fa.segments.len(), 4);
+        // queue [5,9] + transfer [9,9.5] + wait [9.5,12] + exec [12,20]
+        assert!((seg_sum(&fa) - 15.0).abs() < 1e-9);
+        assert_eq!(fa.segments[0], (SpanKind::QueueWait, 5.0, 9.0));
+        assert_eq!(fa.segments[3], (SpanKind::LightExec, 12.0, 20.0));
+    }
+
+    #[test]
+    fn cancellation_marks_stage_disrupted_and_emits_backoff() {
+        let mut r = TraceRecorder::new();
+        r.admit(9, 0, 1, 0, 0.0, 50.0, 0.5);
+        r.core_dispatched(9, 0, 1, 3, None, 1.0, 2.0, 2.5);
+        r.attempt_cancelled(9, 0, 4.0, 10.0);
+        r.core_dispatched(9, 0, 2, 5, None, 1.0, 11.0, 12.0);
+        r.stage_done(9, 0, 15.0);
+        let st = &r.tasks()[&9].stages[0];
+        assert_eq!(st.retries, 1);
+        let fa = st.completed.as_ref().unwrap();
+        // Mid segment is attributed to the disruption, not queueing.
+        assert!(fa.segments.iter().any(|&(k, _, _)| k == SpanKind::Backoff));
+        let spans = r.all_spans();
+        assert!(spans.iter().any(|s| s.kind == SpanKind::Backoff && !s.cancelled));
+        assert!(spans.iter().any(|s| s.kind == SpanKind::CoreExec && s.cancelled));
+    }
+
+    #[test]
+    fn hedge_promotion_swaps_primary() {
+        let mut r = TraceRecorder::new();
+        r.admit(2, 0, 1, 0, 0.0, 50.0, 0.0);
+        r.core_dispatched(2, 0, 1, 0, None, 1.0, 2.0, 2.0);
+        r.hedge_dispatched(2, 0, 2, 1, None, 1.0, 3.0, 3.0);
+        r.hedge_promoted(2, 0, 5.0);
+        r.stage_done(2, 0, 9.0);
+        let fa = r.tasks()[&2].stages[0].completed.as_ref().unwrap();
+        assert_eq!(fa.node, 1, "the hedge's node won");
+        assert_eq!(fa.attempt, 2);
+        let spans = r.all_spans();
+        assert!(
+            spans.iter().any(|s| s.cancelled && s.node == Some(0)),
+            "dead primary emitted as a cancelled span"
+        );
+    }
+
+    #[test]
+    fn losing_hedge_is_emitted_cancelled() {
+        let mut r = TraceRecorder::new();
+        r.admit(3, 0, 1, 0, 0.0, 50.0, 0.0);
+        r.core_dispatched(3, 0, 1, 0, None, 1.0, 2.0, 2.0);
+        r.hedge_dispatched(3, 0, 2, 1, None, 1.0, 3.0, 3.0);
+        r.stage_done(3, 0, 8.0);
+        let spans = r.all_spans();
+        assert!(spans.iter().any(|s| s.kind == SpanKind::Hedge && s.cancelled));
+    }
+
+    #[test]
+    fn all_spans_sorted_by_start() {
+        let mut r = TraceRecorder::new();
+        r.admit(1, 0, 1, 0, 10.0, 50.0, 1.0);
+        r.admit(0, 0, 1, 0, 0.0, 50.0, 1.0);
+        r.core_dispatched(0, 0, 1, 0, None, 1.0, 2.0, 2.0);
+        r.stage_done(0, 0, 5.0);
+        let spans = r.all_spans();
+        assert!(spans.windows(2).all(|w| w[0].start_ms <= w[1].start_ms));
+    }
+}

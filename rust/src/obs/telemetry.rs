@@ -1,0 +1,187 @@
+//! Time-series telemetry: a tiny metrics registry (counters, gauges,
+//! histograms) with per-slot/per-epoch sampling, exported as a CSV
+//! [`Table`] alongside the sweep artifacts.
+//!
+//! Registration returns a typed id, so the engine hot path updates by
+//! index — no name hashing per slot. Sampling snapshots every counter
+//! and gauge into one row; histograms aggregate across the whole run
+//! and are summarized separately.
+
+use crate::exp::Table;
+use crate::metrics::Histogram;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CounterId(usize);
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GaugeId(usize);
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HistId(usize);
+
+/// Counters, gauges, and histograms plus the sampled time series.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    counter_names: Vec<String>,
+    counters: Vec<u64>,
+    gauge_names: Vec<String>,
+    gauges: Vec<f64>,
+    hist_names: Vec<String>,
+    hists: Vec<Histogram>,
+    sample_times: Vec<f64>,
+    samples: Vec<Vec<f64>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        MetricsRegistry::default()
+    }
+
+    /// Register (or look up) a counter by name.
+    pub fn counter(&mut self, name: &str) -> CounterId {
+        if let Some(i) = self.counter_names.iter().position(|n| n == name) {
+            return CounterId(i);
+        }
+        self.counter_names.push(name.to_string());
+        self.counters.push(0);
+        CounterId(self.counters.len() - 1)
+    }
+
+    /// Register (or look up) a gauge by name.
+    pub fn gauge(&mut self, name: &str) -> GaugeId {
+        if let Some(i) = self.gauge_names.iter().position(|n| n == name) {
+            return GaugeId(i);
+        }
+        self.gauge_names.push(name.to_string());
+        self.gauges.push(0.0);
+        GaugeId(self.gauges.len() - 1)
+    }
+
+    /// Register (or look up) a histogram by name.
+    pub fn histogram(&mut self, name: &str, hist: Histogram) -> HistId {
+        if let Some(i) = self.hist_names.iter().position(|n| n == name) {
+            return HistId(i);
+        }
+        self.hist_names.push(name.to_string());
+        self.hists.push(hist);
+        HistId(self.hists.len() - 1)
+    }
+
+    pub fn inc(&mut self, id: CounterId, by: u64) {
+        self.counters[id.0] += by;
+    }
+
+    pub fn set(&mut self, id: GaugeId, value: f64) {
+        self.gauges[id.0] = value;
+    }
+
+    pub fn observe(&mut self, id: HistId, value: f64) {
+        self.hists[id.0].observe(value);
+    }
+
+    pub fn counter_value(&self, id: CounterId) -> u64 {
+        self.counters[id.0]
+    }
+
+    pub fn gauge_value(&self, id: GaugeId) -> f64 {
+        self.gauges[id.0]
+    }
+
+    pub fn hist(&self, id: HistId) -> &Histogram {
+        &self.hists[id.0]
+    }
+
+    /// Snapshot every counter and gauge as one time-series row.
+    pub fn sample(&mut self, now_ms: f64) {
+        let mut row = Vec::with_capacity(self.counters.len() + self.gauges.len());
+        row.extend(self.counters.iter().map(|&c| c as f64));
+        row.extend(self.gauges.iter().copied());
+        self.sample_times.push(now_ms);
+        self.samples.push(row);
+    }
+
+    pub fn num_samples(&self) -> usize {
+        self.sample_times.len()
+    }
+
+    /// The sampled series as a CSV-ready table: one row per sample,
+    /// `time_ms` first, then counters and gauges in registration order.
+    /// Rows taken before a late registration are zero-padded so the
+    /// schema stays rectangular.
+    pub fn to_table(&self, name: &str) -> Table {
+        let mut headers: Vec<String> = vec!["time_ms".to_string()];
+        headers.extend(self.counter_names.iter().cloned());
+        headers.extend(self.gauge_names.iter().cloned());
+        let header_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+        let mut table = Table::new(name, &header_refs);
+        let width = self.counters.len() + self.gauges.len();
+        for (t, row) in self.sample_times.iter().zip(&self.samples) {
+            let mut vals = Vec::with_capacity(width + 1);
+            vals.push(*t);
+            for i in 0..width {
+                vals.push(row.get(i).copied().unwrap_or(0.0));
+            }
+            table.push_numeric_row(&vals);
+        }
+        table
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registration_is_idempotent() {
+        let mut reg = MetricsRegistry::new();
+        let a = reg.counter("done");
+        let b = reg.counter("done");
+        assert_eq!(a, b);
+        reg.inc(a, 2);
+        reg.inc(b, 3);
+        assert_eq!(reg.counter_value(a), 5);
+    }
+
+    #[test]
+    fn sampling_snapshots_counters_and_gauges() {
+        let mut reg = MetricsRegistry::new();
+        let c = reg.counter("events");
+        let g = reg.gauge("backlog");
+        reg.inc(c, 4);
+        reg.set(g, 2.5);
+        reg.sample(10.0);
+        reg.inc(c, 1);
+        reg.set(g, 1.0);
+        reg.sample(20.0);
+        let t = reg.to_table("telemetry");
+        t.validate().expect("valid table");
+        assert_eq!(t.headers, vec!["time_ms", "events", "backlog"]);
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.rows[0], vec!["10", "4", "2.5"]);
+        assert_eq!(t.rows[1], vec!["20", "5", "1"]);
+    }
+
+    #[test]
+    fn late_registration_pads_old_rows() {
+        let mut reg = MetricsRegistry::new();
+        let g = reg.gauge("a");
+        reg.set(g, 1.0);
+        reg.sample(0.0);
+        let h = reg.gauge("b");
+        reg.set(h, 7.0);
+        reg.sample(1.0);
+        let t = reg.to_table("telemetry");
+        t.validate().expect("valid table");
+        assert_eq!(t.rows[0], vec!["0", "1", "0"]);
+        assert_eq!(t.rows[1], vec!["1", "1", "7"]);
+    }
+
+    #[test]
+    fn histograms_aggregate() {
+        let mut reg = MetricsRegistry::new();
+        let h = reg.histogram("lat", Histogram::linear(0.0, 100.0, 10));
+        reg.observe(h, 5.0);
+        reg.observe(h, 50.0);
+        assert_eq!(reg.hist(h).count(), 2);
+    }
+}

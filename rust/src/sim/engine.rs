@@ -11,6 +11,7 @@ use crate::faults::{DynamicTopology, FaultKind, FaultSchedule};
 use crate::metrics::{CostBook, MetricsCollector, TaskOutcome, TrialMetrics};
 use crate::microservice::{build_fig1_application, Application, MsClass};
 use crate::network::Topology;
+use crate::obs::{rec_mut, Observer};
 use crate::placement::{QosScores, ScoreParams};
 use crate::rng::Xoshiro256;
 use crate::routing::{CoreRouter, DistanceMatrix, HopTable};
@@ -193,6 +194,32 @@ pub(crate) fn parent_payloads(
     }
 }
 
+/// Shared critical-parent rule for span tracing: among a stage's parent
+/// payloads, the one whose transfer lands last at `target` (ties keep
+/// the first, matching the engines' arrival fold). Returns the parent's
+/// local stage (`None` for source stages reading the user payload at the
+/// ED), its ready time, and the landing time at `target`.
+pub(crate) fn critical_parent(
+    app: &Application,
+    task_type: usize,
+    local: usize,
+    payloads: &[(usize, f64, f64)],
+    target: usize,
+    dm: &DistanceMatrix,
+) -> (Option<usize>, f64, f64) {
+    let parents = app.task_types[task_type].dag.parents(local);
+    let mut best_i = 0usize;
+    let mut best = f64::NEG_INFINITY;
+    for (i, &(pn, pd, mb)) in payloads.iter().enumerate() {
+        let a = pd + dm.latency(pn, target, mb);
+        if a > best {
+            best = a;
+            best_i = i;
+        }
+    }
+    (parents.get(best_i).copied(), payloads[best_i].1, best)
+}
+
 /// Shared input-survival rule for fault injection: a stage's inputs are
 /// irrecoverably gone when any parent stage's output was destroyed (its
 /// node died after the parent completed — recovery restores capacity,
@@ -346,7 +373,7 @@ pub fn run_trial(
     seed: u64,
     opts: &SimOptions,
 ) -> TrialMetrics {
-    run_trial_inner(env, strategy, seed, opts, None, &FaultSchedule::none())
+    run_trial_inner(env, strategy, seed, opts, None, &FaultSchedule::none(), None)
 }
 
 /// Run one trial replaying a recorded [`Trace`] instead of drawing
@@ -359,7 +386,7 @@ pub fn run_trial_traced(
     opts: &SimOptions,
     trace: &Trace,
 ) -> TrialMetrics {
-    run_trial_inner(env, strategy, seed, opts, Some(trace), &FaultSchedule::none())
+    run_trial_inner(env, strategy, seed, opts, Some(trace), &FaultSchedule::none(), None)
 }
 
 /// Run one traced trial while replaying a [`FaultSchedule`]: events are
@@ -373,7 +400,24 @@ pub fn run_trial_faulted(
     trace: &Trace,
     faults: &FaultSchedule,
 ) -> TrialMetrics {
-    run_trial_inner(env, strategy, seed, opts, Some(trace), faults)
+    run_trial_inner(env, strategy, seed, opts, Some(trace), faults, None)
+}
+
+/// Run one traced, faulted trial with an [`Observer`] attached: spans,
+/// per-slot telemetry, and blame-attribution inputs are recorded without
+/// consuming engine RNG or reordering events, so the returned metrics
+/// are identical to [`run_trial_faulted`] on the same inputs (asserted
+/// by the zero-overhead gate test).
+pub fn run_trial_observed(
+    env: &SimEnv,
+    strategy: &mut dyn Strategy,
+    seed: u64,
+    opts: &SimOptions,
+    trace: &Trace,
+    faults: &FaultSchedule,
+    obs: &mut Observer,
+) -> TrialMetrics {
+    run_trial_inner(env, strategy, seed, opts, Some(trace), faults, Some(obs))
 }
 
 fn run_trial_inner(
@@ -383,6 +427,7 @@ fn run_trial_inner(
     opts: &SimOptions,
     trace: Option<&Trace>,
     faults: &FaultSchedule,
+    mut obs: Option<&mut Observer>,
 ) -> TrialMetrics {
     let app = &env.app;
     let cfg = &env.cfg;
@@ -450,7 +495,11 @@ fn run_trial_inner(
          t: &RunTask,
          done_ms: Option<f64>,
          collector: &mut MetricsCollector,
-         queues: &mut VirtualQueues| {
+         queues: &mut VirtualQueues,
+         obs: &mut Option<&mut Observer>| {
+            if let Some(r) = rec_mut(obs) {
+                r.task_finished(id, done_ms);
+            }
             collector.record(TaskOutcome {
                 task_id: id,
                 latency_ms: done_ms.map(|d| d - t.arrival_ms),
@@ -506,6 +555,9 @@ fn run_trial_inner(
                                     t.ev_seq[local] = Some(hs);
                                     t.hedge[local] = None;
                                     collector.record_reroute();
+                                    if let Some(r) = rec_mut(&mut obs) {
+                                        r.hedge_promoted(*id, local, now);
+                                    }
                                     continue;
                                 }
                                 t.dispatched[local] = false;
@@ -523,9 +575,15 @@ fn run_trial_inner(
                                         *id ^ ((local as u64) << 40),
                                     );
                                 collector.record_retry();
+                                if let Some(r) = rec_mut(&mut obs) {
+                                    r.attempt_cancelled(*id, local, now, t.retry_at[local]);
+                                }
                             } else if t.hedge[local].map(|(hn, _)| hn) == Some(node) {
                                 // The standby died; the primary continues.
                                 t.hedge[local] = None;
+                                if let Some(r) = rec_mut(&mut obs) {
+                                    r.hedge_dropped(*id, local, now);
+                                }
                             }
                         }
                     }
@@ -546,11 +604,17 @@ fn run_trial_inner(
                     // into the node's own recovery instead.
                     if node_up[node] {
                         let cp = opts.failover.checkpoint;
-                        if core_router
-                            .rejoin(node, core_idx, now, cp.restore_ms, cp.cold_start_ms)
-                            .is_some()
-                        {
+                        if let Some(ready_ms) = core_router.rejoin(
+                            node,
+                            core_idx,
+                            now,
+                            cp.restore_ms,
+                            cp.cold_start_ms,
+                        ) {
                             collector.record_restore();
+                            if let Some(r) = rec_mut(&mut obs) {
+                                r.restore(node, now, ready_ms);
+                            }
                         }
                     }
                 }
@@ -610,6 +674,17 @@ fn run_trial_inner(
                     hedge: vec![None; n],
                 },
             );
+            if let Some(r) = rec_mut(&mut obs) {
+                r.admit(
+                    a.id.0,
+                    a.task_type.0,
+                    n,
+                    tt.dag.sink().unwrap_or(n.saturating_sub(1)),
+                    now,
+                    tt.deadline_ms,
+                    a.uplink_delay_ms,
+                );
+            }
         }
 
         // 2. Drain events due before the end of this slot. An event is
@@ -630,6 +705,9 @@ fn run_trial_inner(
                 if t.ev_seq[ev.local] == Some(ev.seq) {
                     t.done[ev.local] = Some(ev.time_ms);
                     t.ev_seq[ev.local] = None;
+                    if let Some(r) = rec_mut(&mut obs) {
+                        r.stage_done(ev.task, ev.local, ev.time_ms);
+                    }
                 }
             }
         }
@@ -673,7 +751,7 @@ fn run_trial_inner(
                     if stage_inputs_destroyed(app, t.task_type, &t.destroyed, local) {
                         let t = tasks.remove(id).unwrap();
                         collector.record_fault_drop();
-                        finish_task(*id, &t, None, &mut collector, &mut queues);
+                        finish_task(*id, &t, None, &mut collector, &mut queues, &mut obs);
                         break;
                     }
                     if !node_up[t.ed]
@@ -731,12 +809,44 @@ fn run_trial_inner(
                             seq,
                             release: None,
                         }));
+                        if let Some(r) = rec_mut(&mut obs) {
+                            let task_type = tasks[id].task_type;
+                            let (from, ready, arrive) = critical_parent(
+                                app, task_type, local, &payloads, asn.node, dm_cur,
+                            );
+                            r.core_dispatched(
+                                *id,
+                                local,
+                                seq,
+                                asn.node,
+                                from,
+                                ready,
+                                arrive,
+                                asn.start_ms,
+                            );
+                        }
                         if let Some(h) = hedge_asn {
                             let hseq = next_seq;
                             next_seq += 1;
                             tasks.get_mut(id).unwrap().hedge[local] =
                                 Some((h.node, hseq));
                             collector.record_hedge();
+                            if let Some(r) = rec_mut(&mut obs) {
+                                let task_type = tasks[id].task_type;
+                                let (from, ready, arrive) = critical_parent(
+                                    app, task_type, local, &payloads, h.node, dm_cur,
+                                );
+                                r.hedge_dispatched(
+                                    *id,
+                                    local,
+                                    hseq,
+                                    h.node,
+                                    from,
+                                    ready,
+                                    arrive,
+                                    h.start_ms,
+                                );
+                            }
                             events.push(Reverse(Event {
                                 time_ms: h.done_ms,
                                 task: *id,
@@ -772,7 +882,7 @@ fn run_trial_inner(
             for id in casualties {
                 if let Some(t) = tasks.remove(&id) {
                     collector.record_fault_drop();
-                    finish_task(id, &t, None, &mut collector, &mut queues);
+                    finish_task(id, &t, None, &mut collector, &mut queues, &mut obs);
                 }
             }
             light_queue.retain(|(id, _)| tasks.contains_key(id));
@@ -877,6 +987,25 @@ fn run_trial_inner(
                             light_gen[asn.node][asn.light_idx],
                         )),
                     }));
+                    if let Some(r) = rec_mut(&mut obs) {
+                        let t = &tasks[&id];
+                        let payloads = t.parent_payloads(app, local);
+                        let (from, ready, _) = critical_parent(
+                            app, t.task_type, local, &payloads, asn.node, dm_cur,
+                        );
+                        r.light_assigned_full(
+                            id,
+                            local,
+                            seq,
+                            asn.node,
+                            asn.y,
+                            asn.light_idx,
+                            from,
+                            ready,
+                            arrival,
+                            start,
+                        );
+                    }
                 }
                 None => still_waiting.push((id, local)),
             }
@@ -885,6 +1014,37 @@ fn run_trial_inner(
 
         // 6. Charge light costs for this slot.
         costs.charge_light_slot(&decision.x, &decision.y, &light_dp, &light_mt, &light_pl);
+
+        // Per-slot telemetry snapshot (observer-gated, read-only).
+        if let Some(o) = obs.as_deref_mut() {
+            if o.metrics.is_some() {
+                let mut backlog = vec![0usize; nl];
+                for &(qid, qlocal) in &light_queue {
+                    if let Some(t) = tasks.get(&qid) {
+                        let ms_id = app.task_types[t.task_type].services[qlocal];
+                        if let Some(m) = light_idx_of[ms_id.0] {
+                            backlog[m] += 1;
+                        }
+                    }
+                }
+                let committed_y: Vec<u32> = (0..nl)
+                    .map(|m| decision.y.iter().map(|row| row[m]).max().unwrap_or(0))
+                    .collect();
+                let busy_groups: u32 = busy.iter().flat_map(|r| r.iter()).sum();
+                let node_util = busy.iter().filter(|row| row.iter().any(|&b| b > 0)).count()
+                    as f64
+                    / nv.max(1) as f64;
+                o.sample_slot(
+                    now,
+                    &backlog,
+                    &committed_y,
+                    busy_groups,
+                    node_util,
+                    queues.total_backlog(),
+                    &env.gtable,
+                );
+            }
+        }
 
         // Debug telemetry (FMEDGE_DEBUG=1): queue health every 50 slots.
         if slot % 50 == 0 && std::env::var_os("FMEDGE_DEBUG").is_some() {
@@ -911,7 +1071,7 @@ fn run_trial_inner(
                 let age = slot_end - t.arrival_ms;
                 if age > opts.drop_after_deadlines * t.deadline_ms {
                     let t = tasks.remove(&id).unwrap();
-                    finish_task(id, &t, None, &mut collector, &mut queues);
+                    finish_task(id, &t, None, &mut collector, &mut queues, &mut obs);
                 } else {
                     queues.update(id, age, t.deadline_ms);
                 }
@@ -919,7 +1079,7 @@ fn run_trial_inner(
         }
         for (id, done) in sink_done {
             let t = tasks.remove(&id).unwrap();
-            finish_task(id, &t, Some(done), &mut collector, &mut queues);
+            finish_task(id, &t, Some(done), &mut collector, &mut queues, &mut obs);
         }
         // Dropped/finished tasks may still have queued light stages;
         // purge them so the controller never sees dangling work.
@@ -928,7 +1088,7 @@ fn run_trial_inner(
 
     // Horizon end: everything in flight is incomplete.
     for (id, t) in tasks.drain() {
-        finish_task(id, &t, None, &mut collector, &mut queues);
+        finish_task(id, &t, None, &mut collector, &mut queues, &mut obs);
     }
     let _ = placement.objective;
     let mut metrics = collector.finish(&costs);

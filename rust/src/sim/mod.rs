@@ -8,9 +8,12 @@
 
 mod engine;
 
-pub use engine::{record_trace, run_trial, run_trial_faulted, run_trial_traced, SimEnv, SimOptions};
+pub use engine::{
+    record_trace, run_trial, run_trial_faulted, run_trial_observed, run_trial_traced, SimEnv,
+    SimOptions,
+};
 pub(crate) use engine::{
-    parent_payloads, residual_after_busy, stage_inputs_destroyed, stage_ready,
+    critical_parent, parent_payloads, residual_after_busy, stage_inputs_destroyed, stage_ready,
 };
 
 use crate::controller::{LightDecision, LightRequest};

@@ -1,0 +1,285 @@
+//! Observability integration tests (EXPERIMENTS §P7): the span-accounting
+//! invariant (span components telescope exactly to the end-to-end sojourn,
+//! both engines, retried/hedged tasks included), the zero-overhead gate
+//! (tracing disabled => bit-identical outputs), and exporter sanity.
+
+use fmedge::baselines::Proposal;
+use fmedge::config::ExperimentConfig;
+use fmedge::coordinator::{parse_fault_spec, ReplayConfig, ReplayServer, VirtualRequest};
+use fmedge::des::{run_des_trial_faulted, run_des_trial_observed, DesOptions};
+use fmedge::faults::{FaultEvent, FaultKind, FaultSchedule};
+use fmedge::obs::{analyze, chrome_trace_json, spans_jsonl, Observer, SpanKind};
+use fmedge::sim::{record_trace, run_trial_faulted, run_trial_observed, SimEnv, SimOptions};
+
+fn small_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper_default();
+    cfg.sim.slots = 120;
+    cfg.workload.num_users = 8;
+    cfg.controller.effcap_samples = 512;
+    cfg
+}
+
+/// The §P6 zone outage: two edge servers dark mid-trial, a replica
+/// fail-stop paired with a checkpoint restart. At 1.5x load and seed 61
+/// both engines provably cancel in-flight stages (asserted below), so the
+/// invariant tests cover retried and hedged tasks, not just clean runs.
+fn zone_schedule(cfg: &ExperimentConfig, slot_ms: f64) -> FaultSchedule {
+    let es = cfg.network.num_eds;
+    let events = vec![
+        FaultEvent { time_ms: 30.0 * slot_ms, kind: FaultKind::NodeDown { node: es } },
+        FaultEvent { time_ms: 32.0 * slot_ms, kind: FaultKind::NodeDown { node: es + 1 } },
+        FaultEvent {
+            time_ms: 45.0 * slot_ms,
+            kind: FaultKind::CoreReplicaFail { node: es + 2, core_idx: 0 },
+        },
+        FaultEvent {
+            time_ms: 58.0 * slot_ms,
+            kind: FaultKind::CoreReplicaRestart { node: es + 2, core_idx: 0 },
+        },
+        FaultEvent { time_ms: 70.0 * slot_ms, kind: FaultKind::NodeUp { node: es } },
+        FaultEvent { time_ms: 72.0 * slot_ms, kind: FaultKind::NodeUp { node: es + 1 } },
+    ];
+    FaultSchedule::from_events(events)
+}
+
+struct Fixture {
+    cfg: ExperimentConfig,
+    env: SimEnv,
+    opts: SimOptions,
+    trace: fmedge::workload::Trace,
+    schedule: FaultSchedule,
+    seed: u64,
+}
+
+fn faulty_fixture() -> Fixture {
+    let mut cfg = small_cfg();
+    cfg.sim.load_multiplier = 1.5;
+    let seed = 61;
+    let env = SimEnv::build(&cfg, seed);
+    let opts = SimOptions::from_config(&cfg);
+    let trace = record_trace(&env, seed, &opts);
+    let schedule = zone_schedule(&cfg, opts.slot_ms);
+    Fixture { cfg, env, opts, trace, schedule, seed }
+}
+
+/// The span-accounting invariant for one observed run: every completed
+/// task's component decomposition sums exactly to its end-to-end sojourn,
+/// and the sorted per-task latencies match the engine's own latency
+/// stream value for value.
+fn assert_spans_telescope(obs: &Observer, env: &SimEnv, m: &fmedge::metrics::TrialMetrics, what: &str) {
+    let rec = obs.trace.as_ref().expect("tracing armed");
+    let rep = analyze(rec, Some(&env.gtable)).unwrap_or_else(|e| panic!("{what}: {e}"));
+    assert_eq!(
+        rep.tasks.len(),
+        m.completed,
+        "{what}: every completed task must decompose"
+    );
+    for tb in &rep.tasks {
+        let sum: f64 = tb.parts.iter().sum();
+        assert!(
+            (sum - tb.latency_ms).abs() < 1e-6,
+            "{what}: task {} components {sum} != sojourn {}",
+            tb.task,
+            tb.latency_ms
+        );
+        for (i, &p) in tb.parts.iter().enumerate() {
+            assert!(
+                p > -1e-9,
+                "{what}: task {} component {i} is negative ({p})",
+                tb.task
+            );
+        }
+    }
+    let mut span_lat: Vec<f64> = rep.tasks.iter().map(|t| t.latency_ms).collect();
+    span_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    assert_eq!(span_lat.len(), m.latencies_ms.len(), "{what}: latency count");
+    for (a, b) in span_lat.iter().zip(&m.latencies_ms) {
+        assert!(
+            (a - b).abs() < 1e-6,
+            "{what}: span latency {a} != engine latency {b}"
+        );
+    }
+    // The fixture guarantees fault cancellations; the chain walk must
+    // see them (retried tasks are where mis-accounting would hide).
+    assert!(m.retries > 0, "{what}: fixture must force retries");
+    assert!(
+        rep.tasks.iter().any(|t| t.retried),
+        "{what}: no decomposed task absorbed a retry"
+    );
+    // The g-table comparison has data for at least one light service.
+    assert!(
+        rep.budget.iter().any(|b| b.samples > 0),
+        "{what}: budget rows must accumulate light executions"
+    );
+}
+
+#[test]
+fn span_sums_telescope_to_sojourn_slotted() {
+    let f = faulty_fixture();
+    let mut obs = Observer::new();
+    let m = run_trial_observed(
+        &f.env,
+        &mut Proposal::new(),
+        f.seed,
+        &f.opts,
+        &f.trace,
+        &f.schedule,
+        &mut obs,
+    );
+    assert!(m.completed > 0);
+    assert_spans_telescope(&obs, &f.env, &m, "slotted");
+}
+
+#[test]
+fn span_sums_telescope_to_sojourn_des() {
+    let f = faulty_fixture();
+    let mut obs = Observer::new();
+    let m = run_des_trial_observed(
+        &f.env,
+        &mut Proposal::new(),
+        f.seed,
+        &DesOptions::from_sim(&f.opts),
+        &f.trace,
+        &f.schedule,
+        &mut obs,
+    );
+    assert!(m.completed > 0);
+    assert_spans_telescope(&obs, &f.env, &m, "des");
+}
+
+#[test]
+fn disabled_tracing_is_bit_identical_on_both_engines() {
+    // The zero-overhead gate: an observed run consumes no engine RNG and
+    // reorders no events, so the *full* TrialMetrics (latency stream,
+    // costs, per-service sojourn samples, every counter) is equal to the
+    // unobserved run — and the unobserved faulted path itself is the
+    // seed-era code path, untouched.
+    let f = faulty_fixture();
+    let plain = run_trial_faulted(
+        &f.env,
+        &mut Proposal::new(),
+        f.seed,
+        &f.opts,
+        &f.trace,
+        &f.schedule,
+    );
+    let mut obs = Observer::new();
+    let observed = run_trial_observed(
+        &f.env,
+        &mut Proposal::new(),
+        f.seed,
+        &f.opts,
+        &f.trace,
+        &f.schedule,
+        &mut obs,
+    );
+    assert_eq!(plain, observed, "slotted: observation must be pure");
+
+    let dopts = DesOptions::from_sim(&f.opts);
+    let plain =
+        run_des_trial_faulted(&f.env, &mut Proposal::new(), f.seed, &dopts, &f.trace, &f.schedule);
+    let mut obs = Observer::new();
+    let observed = run_des_trial_observed(
+        &f.env,
+        &mut Proposal::new(),
+        f.seed,
+        &dopts,
+        &f.trace,
+        &f.schedule,
+        &mut obs,
+    );
+    assert_eq!(plain, observed, "des: observation must be pure");
+}
+
+#[test]
+fn observed_replay_server_is_bit_identical_and_spans_cover_faults() {
+    let cfg = small_cfg();
+    let (num_eds, num_ess) = (cfg.network.num_eds, cfg.network.num_ess);
+    let schedule = parse_fault_spec("zone@40+30", num_eds, num_ess).expect("spec");
+    let server = ReplayServer::new(
+        ReplayConfig { workers: 4, ..Default::default() },
+        &schedule,
+        num_eds,
+    );
+    let arrivals: Vec<VirtualRequest> = (0..600)
+        .map(|id| VirtualRequest { id, arrive_ms: id as f64 * 0.5, deadline_ms: 50.0 })
+        .collect();
+    let plain = server.run(&arrivals);
+    let mut obs = Observer::trace_only();
+    let observed = server.run_observed(&arrivals, &mut obs);
+    assert_eq!(plain, observed, "serving path: observation must be pure");
+
+    let rec = obs.trace.as_ref().unwrap();
+    let spans = rec.all_spans();
+    // Exactly one winning (non-cancelled) attempt per served request:
+    // losers of a hedge race and outage-killed attempts are all cancelled.
+    let winners = spans
+        .iter()
+        .filter(|s| matches!(s.kind, SpanKind::Serve | SpanKind::Hedge) && !s.cancelled)
+        .count() as u64;
+    assert_eq!(winners, plain.served, "one winning attempt per served request");
+    assert!(plain.stats.retries > 0, "fixture must force retries");
+    // Every outage kill truncates its attempt span; hedge losers add
+    // cancelled spans on top (their count is workload-dependent).
+    let cancelled = spans.iter().filter(|s| s.cancelled).count() as u64;
+    assert!(
+        cancelled >= plain.stats.retries,
+        "cancelled spans ({cancelled}) must cover the {} outage kills",
+        plain.stats.retries
+    );
+    assert_eq!(
+        spans.iter().filter(|s| s.kind == SpanKind::Backoff).count() as u64,
+        plain.stats.retries,
+        "every retry pairs with one backoff span"
+    );
+    for s in &spans {
+        assert!(
+            s.end_ms >= s.start_ms - 1e-9,
+            "span ends before it starts: {s:?}"
+        );
+    }
+}
+
+#[test]
+fn exports_are_structurally_sound_and_telemetry_covers_every_slot() {
+    let f = faulty_fixture();
+    let mut obs = Observer::new();
+    run_trial_observed(
+        &f.env,
+        &mut Proposal::new(),
+        f.seed,
+        &f.opts,
+        &f.trace,
+        &f.schedule,
+        &mut obs,
+    );
+    let rec = obs.trace.as_ref().unwrap();
+    assert!(rec.num_tasks() > 0);
+    let spans = rec.all_spans();
+    assert!(!spans.is_empty());
+
+    let json = chrome_trace_json(rec);
+    assert!(json.starts_with("{\"traceEvents\":["));
+    assert!(json.contains("\"ph\":\"X\""));
+    assert!(!json.contains("NaN") && !json.contains("inf"));
+    assert_eq!(
+        json.matches('{').count(),
+        json.matches('}').count(),
+        "unbalanced JSON braces"
+    );
+
+    let jsonl = spans_jsonl(rec);
+    assert_eq!(jsonl.lines().count(), spans.len(), "one line per span");
+
+    // Telemetry: one sample per slot, and a table that passes the same
+    // NaN/empty gate the sweep artifacts do.
+    let reg = obs.metrics.as_ref().unwrap();
+    assert_eq!(
+        reg.num_samples(),
+        f.cfg.sim.slots,
+        "one telemetry sample per slot"
+    );
+    let table = reg.to_table("telemetry");
+    table.validate().expect("telemetry table must be publishable");
+    assert_eq!(table.rows.len(), f.cfg.sim.slots);
+}
