@@ -1,0 +1,125 @@
+//! D1 — DES hot-path throughput (EXPERIMENTS §P8). Two layers:
+//!
+//! * **calendar**: push + pop of a uniform-random event set on the
+//!   production radix calendar vs the binary-heap reference. One event
+//!   is one `schedule` + one `pop`; the PR-8 acceptance target is
+//!   >= 1e7 events/sec single-thread on the radix row.
+//! * **engine**: a full faulted trial, retained vs streaming metrics,
+//!   with the `DesArena` reused across iterations — the steady-state
+//!   shape the sweep orchestrator runs in, so allocation amortizes the
+//!   same way here as there.
+//!
+//! Run: `cargo bench --bench bench_des` (FMEDGE_BENCH_ITERS /
+//! FMEDGE_BENCH_EVENTS to override; `FMEDGE_BENCH_JSON=BENCH_des.json`
+//! saves the perf-trajectory rows).
+
+use fmedge::baselines::Proposal;
+use fmedge::benchkit::{bench, fmt_duration, print_data_table, save_json};
+use fmedge::config::ExperimentConfig;
+use fmedge::des::{
+    run_des_trial_faulted_in, DesArena, DesOptions, EventCalendar, EventKind, HeapCalendar,
+    RadixCalendar,
+};
+use fmedge::faults::{FaultEvent, FaultKind, FaultSchedule};
+use fmedge::rng::{Rng, Xoshiro256};
+use fmedge::sim::{record_trace, SimEnv, SimOptions};
+
+fn zone_schedule(cfg: &ExperimentConfig, slot_ms: f64) -> FaultSchedule {
+    let es = cfg.network.num_eds;
+    FaultSchedule::from_events(vec![
+        FaultEvent { time_ms: 30.0 * slot_ms, kind: FaultKind::NodeDown { node: es } },
+        FaultEvent { time_ms: 32.0 * slot_ms, kind: FaultKind::NodeDown { node: es + 1 } },
+        FaultEvent { time_ms: 70.0 * slot_ms, kind: FaultKind::NodeUp { node: es } },
+        FaultEvent { time_ms: 72.0 * slot_ms, kind: FaultKind::NodeUp { node: es + 1 } },
+    ])
+}
+
+fn churn<C: EventCalendar + Default>(times: &[f64]) -> u64 {
+    let mut cal = C::default();
+    for &t in times {
+        cal.schedule(t, EventKind::Decide);
+    }
+    let mut last = f64::NEG_INFINITY;
+    while let Some(ev) = cal.pop() {
+        debug_assert!(ev.time_ms >= last, "calendar must pop in order");
+        last = ev.time_ms;
+    }
+    cal.processed()
+}
+
+fn main() {
+    let iters: usize = std::env::var("FMEDGE_BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8);
+    let n: usize = std::env::var("FMEDGE_BENCH_EVENTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1_000_000);
+    let headers = ["bench", "events", "mean", "p95", "events/sec"];
+    let mut rows = Vec::new();
+
+    // The time stream is generated once up front: the bench prices the
+    // calendar, not the RNG.
+    let mut rng = Xoshiro256::seed_from(0xBE7C);
+    let times: Vec<f64> = (0..n).map(|_| rng.next_f64() * 10_000.0).collect();
+    for (name, runner) in [
+        ("calendar/radix push+pop", churn::<RadixCalendar> as fn(&[f64]) -> u64),
+        ("calendar/heap push+pop", churn::<HeapCalendar> as fn(&[f64]) -> u64),
+    ] {
+        let r = bench(name, 1, iters, || {
+            std::hint::black_box(runner(std::hint::black_box(&times)));
+        });
+        let evs = n as f64 / (r.mean_ns() / 1e9);
+        rows.push(vec![
+            name.to_string(),
+            n.to_string(),
+            fmt_duration(r.mean),
+            fmt_duration(r.p95),
+            format!("{evs:.3e}"),
+        ]);
+    }
+
+    let mut cfg = ExperimentConfig::paper_default();
+    cfg.sim.slots = 120;
+    cfg.workload.num_users = 32;
+    cfg.controller.effcap_samples = 512;
+    cfg.sim.load_multiplier = 1.5;
+    let seed = 61;
+    let env = SimEnv::build(&cfg, seed);
+    let opts = SimOptions::from_config(&cfg);
+    let trace = record_trace(&env, seed, &opts);
+    let schedule = zone_schedule(&cfg, opts.slot_ms);
+    let mut arena: DesArena = DesArena::new();
+    for streaming in [false, true] {
+        let mut dopts = DesOptions::from_sim(&opts);
+        dopts.streaming = streaming;
+        let name = format!(
+            "engine/faulted {}",
+            if streaming { "streaming" } else { "retained" }
+        );
+        let mut events = 0u64;
+        let r = bench(&name, 1, iters, || {
+            let mut strat = Proposal::new();
+            let m = run_des_trial_faulted_in(
+                &mut arena, &env, &mut strat, seed, &dopts, &trace, &schedule,
+            );
+            events = m.des_events;
+        });
+        let evs = events as f64 / (r.mean_ns() / 1e9);
+        rows.push(vec![
+            name,
+            events.to_string(),
+            fmt_duration(r.mean),
+            fmt_duration(r.p95),
+            format!("{evs:.3e}"),
+        ]);
+    }
+
+    let title = "D1 — calendar push/pop and DES engine throughput";
+    print_data_table(title, &headers, &rows);
+    if let Ok(path) = std::env::var("FMEDGE_BENCH_JSON") {
+        save_json(&path, title, &headers, &rows).expect("write bench json");
+        println!("\nbench rows saved to {path}");
+    }
+}

@@ -61,6 +61,8 @@ const FLAGS: &[&str] = &[
     "validate",
     "virtual",
     "blame",
+    "bench",
+    "streaming",
 ];
 
 impl Args {
@@ -181,9 +183,13 @@ COMMANDS:
             --slots N, --load X, --seed N, --config FILE)
   des       run the discrete-event queueing engine on a recorded trace
             (--strategy ..., --trials N, --slots N, --load X, --seed N,
-            --trace FILE to replay, --save-trace FILE, --validate for the
+            --users N overrides the population size, --trace FILE to
+            replay, --save-trace FILE, --validate for the
             measured-vs-g_{m,eps} bound report, --batch N --batch-wait MS
-            for sim-time station batching)
+            for sim-time station batching, --streaming for flat-memory
+            streaming metrics at large N, --bench for the calendar
+            push/pop microbench + engine events/sec report
+            [FMEDGE_BENCH_JSON=FILE to save])
   faults    robustness sweep: replay seeded fault schedules (server
             outages, link outages/degradation, replica fail-stop) over a
             failure-rate x load grid and compare strategies' on-time
@@ -197,7 +203,7 @@ COMMANDS:
             --json FILE.json; grid axes: --loads, --rates, --strategies,
             --engines slotted,des, --epsilons, --scenarios; p5 scenario
             names: baseline, diurnal, mmpp, flash-crowd, mobility,
-            commuter, zone-outage, cascade, rush-hour)
+            commuter, zone-outage, cascade, rush-hour, metro-1m)
   trace     run one observed trial with per-task span tracing and slot
             telemetry (--engine slotted|des, --strategy ..., --slots N,
             --load X, --seed N, --rate R arms a seeded fault schedule,

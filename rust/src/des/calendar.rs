@@ -1,9 +1,43 @@
 //! The event calendar: a monotone priority queue of typed simulation
-//! events, ordered by `(time, insertion sequence)` — ties resolve FIFO,
+//! events, ordered by `(tick, insertion sequence)` — ties resolve FIFO,
 //! so a run is reproducible bit-for-bit from its seed.
+//!
+//! Two implementations share the [`EventCalendar`] contract:
+//!
+//! * [`RadixCalendar`] — the production queue: a radix calendar queue
+//!   (one "current tick" bucket plus 64 radix-distance buckets with a
+//!   filled-bitmap) giving O(1) push and amortized O(1) pop. Event
+//!   times are quantized to fixed-point ticks ([`TICKS_PER_MS`]) for
+//!   *ordering only*; the exact `f64` time rides along untouched, so
+//!   all downstream simulation arithmetic is unchanged.
+//! * [`HeapCalendar`] — the original `BinaryHeap` ordered by the same
+//!   `(tick, seq)` key. Kept as the reference implementation: the
+//!   cross-calendar tests replay seeded faulty fixtures on both and
+//!   assert identical event order and full-struct-equal metrics.
+//!
+//! Ordering contract: events on the same tick pop FIFO in scheduling
+//! order. Two events whose `f64` times were exactly equal always share
+//! a tick, so the old `(time, seq)` FIFO tie-break is preserved;
+//! events whose times differ by less than one tick (~0.98 µs) also
+//! share a tick and pop in scheduling order — handlers still see the
+//! exact times, and since handlers only ever schedule at `now + dt`
+//! with `dt ≥ 0`, tick order never runs backwards.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+use std::collections::VecDeque;
+
+/// Fixed-point resolution of the calendar: ticks per millisecond. At
+/// 1024 ticks/ms (≈0.98 µs) a `u64` tick space covers ~570 years of
+/// simulated time, and quantization is an exact binary scale — times
+/// that compare equal as `f64` always land on the same tick.
+pub const TICKS_PER_MS: f64 = 1024.0;
+
+/// Quantize an event time to its ordering tick.
+#[inline]
+pub fn time_to_tick(time_ms: f64) -> u64 {
+    (time_ms * TICKS_PER_MS) as u64
+}
 
 /// Everything that can happen in the discrete-event simulation.
 #[derive(Clone, Debug)]
@@ -15,15 +49,18 @@ pub enum EventKind {
     /// user's edge device.
     UplinkDone { task: u64 },
     /// An intermediate hop of a light-stage payload transfer completed;
-    /// the payload sits at an interior node of its route. `token` pins the
-    /// event to the dispatch that scheduled it: a fault cancellation bumps
-    /// the stage token, so stale transfer events no-op.
-    HopDone { task: u64, local: usize, token: u64 },
+    /// the payload sits at an interior node of its route. `plan` is the
+    /// transfer-plan slot and `pgen` its generation stamp: a fault
+    /// cancellation frees the slot (bumping the generation), so stale
+    /// transfer events no-op on an O(1) generation check.
+    HopDone { plan: u32, pgen: u32 },
     /// The final transfer hop landed: the payload reached its assigned
     /// light station and joins the replica FIFO (or the batcher).
-    StationJoin { task: u64, local: usize, token: u64 },
+    /// Addressed like [`EventKind::HopDone`].
+    StationJoin { plan: u32, pgen: u32 },
     /// A core stage finished executing. `token` pins the event to its
-    /// dispatch (see [`EventKind::HopDone`]).
+    /// dispatch: a fault cancellation bumps the stage token, so stale
+    /// completion events no-op.
     CoreDone {
         task: u64,
         local: usize,
@@ -66,12 +103,27 @@ pub enum EventKind {
     Retry { task: u64, local: usize },
 }
 
-/// A scheduled event.
+/// A scheduled event. `time_ms` is the exact time handlers run with;
+/// `tick` is its fixed-point quantization, used only for ordering.
 #[derive(Clone, Debug)]
 pub struct Scheduled {
     pub time_ms: f64,
+    tick: u64,
     seq: u64,
     pub kind: EventKind,
+}
+
+impl Scheduled {
+    /// The fixed-point ordering tick ([`time_to_tick`] of `time_ms`,
+    /// after watermark clamping).
+    pub fn tick(&self) -> u64 {
+        self.tick
+    }
+
+    /// Global insertion sequence (the FIFO tie-break within a tick).
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
 }
 
 impl PartialEq for Scheduled {
@@ -87,72 +139,244 @@ impl PartialOrd for Scheduled {
 }
 impl Ord for Scheduled {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.time_ms
-            .partial_cmp(&other.time_ms)
-            .unwrap_or(std::cmp::Ordering::Equal)
+        self.tick
+            .cmp(&other.tick)
             .then_with(|| self.seq.cmp(&other.seq))
     }
 }
 
-/// Monotone event calendar.
-#[derive(Debug, Default)]
-pub struct Calendar {
-    heap: BinaryHeap<Reverse<Scheduled>>,
-    seq: u64,
-    /// Time of the last popped event; scheduling earlier than this clamps
-    /// forward (float round-off guard — the simulation never goes back).
-    watermark: f64,
-    processed: u64,
+/// The calendar contract both queue implementations satisfy. The DES
+/// engine is generic over this, monomorphizing the hot loop per queue.
+pub trait EventCalendar {
+    /// Schedule `kind` at `time_ms` (clamped to the watermark so the
+    /// calendar stays monotone under float round-off).
+    fn schedule(&mut self, time_ms: f64, kind: EventKind);
+    /// Pop the next event (earliest tick, FIFO among same-tick events).
+    fn pop(&mut self) -> Option<Scheduled>;
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Number of events dispatched so far.
+    fn processed(&self) -> u64;
+    /// Drop all queued events and reset counters, retaining allocations
+    /// (arena reuse across trials).
+    fn clear(&mut self);
 }
 
-impl Calendar {
+/// The production calendar — see the module docs. Exported under the
+/// historical name so existing call sites keep compiling.
+pub type Calendar = RadixCalendar;
+
+const RADIX_BUCKETS: usize = 64;
+
+/// Radix calendar queue over fixed-point ticks.
+///
+/// Layout (after the xivc `EventQueue` exemplar, generalized from
+/// `u32`/33 buckets to `u64`/65): `cur` holds events on the current
+/// tick and is popped front-to-back; `buckets[d-1]` holds events whose
+/// tick differs from the current tick in bit `d-1` as its highest
+/// differing bit (`d = 64 - (cur_tick ^ tick).leading_zeros()`);
+/// `filled` has bit `d-1` set when `buckets[d-1]` is non-empty. When
+/// `cur` drains, the lowest non-empty bucket is redistributed around
+/// its minimum tick (every event provably lands in a strictly lower —
+/// and empty — bucket, or in `cur`).
+///
+/// Invariant: every bucket vector is sorted by `seq` (appends use a
+/// globally monotone counter; redistribution drains a sorted source in
+/// order into empty targets), so popping `cur` front-to-back yields
+/// the global `(tick, seq)` order.
+#[derive(Debug)]
+pub struct RadixCalendar {
+    /// Events on `cur_tick`, FIFO by `seq`; consumed via `pop_front`.
+    cur: VecDeque<Scheduled>,
+    buckets: [Vec<Scheduled>; RADIX_BUCKETS],
+    /// Bit `b` set ⇔ `buckets[b]` is non-empty.
+    filled: u64,
+    cur_tick: u64,
+    /// Exact time of the last popped event; scheduling earlier than
+    /// this clamps forward (float round-off guard — the simulation
+    /// never goes back).
+    watermark: f64,
+    seq: u64,
+    processed: u64,
+    len: usize,
+}
+
+impl Default for RadixCalendar {
+    fn default() -> Self {
+        Self {
+            cur: VecDeque::new(),
+            buckets: std::array::from_fn(|_| Vec::new()),
+            filled: 0,
+            cur_tick: 0,
+            watermark: 0.0,
+            seq: 0,
+            processed: 0,
+            len: 0,
+        }
+    }
+}
+
+impl RadixCalendar {
     pub fn new() -> Self {
         Self::default()
     }
 
-    /// Schedule `kind` at `time_ms` (clamped to the watermark so the
-    /// calendar stays monotone under float round-off).
-    pub fn schedule(&mut self, time_ms: f64, kind: EventKind) {
+    #[inline]
+    fn place(&mut self, ev: Scheduled) {
+        let x = ev.tick ^ self.cur_tick;
+        if x == 0 {
+            self.cur.push_back(ev);
+        } else {
+            let b = 63 - x.leading_zeros() as usize;
+            self.buckets[b].push(ev);
+            self.filled |= 1u64 << b;
+        }
+    }
+
+    /// Refill `cur` from the lowest non-empty bucket. Its minimum tick
+    /// becomes the current tick; redistributed events land in `cur` or
+    /// in strictly lower (empty) buckets, so termination is immediate.
+    fn reassign(&mut self) -> bool {
+        if self.filled == 0 {
+            return false;
+        }
+        let b = self.filled.trailing_zeros() as usize;
+        let mut drained = std::mem::take(&mut self.buckets[b]);
+        self.filled &= !(1u64 << b);
+        self.cur_tick = drained.iter().map(|e| e.tick).min().expect("bucket filled");
+        for ev in drained.drain(..) {
+            self.place(ev);
+        }
+        // Hand the drained allocation back to the (now empty) bucket.
+        self.buckets[b] = drained;
+        true
+    }
+}
+
+impl EventCalendar for RadixCalendar {
+    fn schedule(&mut self, time_ms: f64, kind: EventKind) {
         debug_assert!(time_ms.is_finite(), "event time must be finite");
         let t = if time_ms < self.watermark {
             self.watermark
         } else {
             time_ms
         };
+        // `max(cur_tick)` is belt-and-braces: the watermark's tick can
+        // never trail the current tick (the last pop set both).
+        let tick = time_to_tick(t).max(self.cur_tick);
+        self.seq += 1;
+        self.len += 1;
+        self.place(Scheduled {
+            time_ms: t,
+            tick,
+            seq: self.seq,
+            kind,
+        });
+    }
+
+    fn pop(&mut self) -> Option<Scheduled> {
+        if self.cur.is_empty() && !self.reassign() {
+            return None;
+        }
+        let ev = self.cur.pop_front().expect("reassign refilled cur");
+        debug_assert!(ev.tick >= self.cur_tick, "calendar must be monotone");
+        self.watermark = self.watermark.max(ev.time_ms);
+        self.processed += 1;
+        self.len -= 1;
+        Some(ev)
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    fn clear(&mut self) {
+        self.cur.clear();
+        for b in &mut self.buckets {
+            b.clear();
+        }
+        self.filled = 0;
+        self.cur_tick = 0;
+        self.watermark = 0.0;
+        self.seq = 0;
+        self.processed = 0;
+        self.len = 0;
+    }
+}
+
+/// The original binary-heap calendar, ordered by the same `(tick,
+/// seq)` key and applying the identical watermark clamp. Kept as the
+/// reference implementation for cross-calendar bit-identity tests and
+/// the `bench_des` baseline — not used on the production path.
+#[derive(Debug, Default)]
+pub struct HeapCalendar {
+    heap: BinaryHeap<Reverse<Scheduled>>,
+    seq: u64,
+    watermark: f64,
+    cur_tick: u64,
+    processed: u64,
+}
+
+impl HeapCalendar {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl EventCalendar for HeapCalendar {
+    fn schedule(&mut self, time_ms: f64, kind: EventKind) {
+        debug_assert!(time_ms.is_finite(), "event time must be finite");
+        let t = if time_ms < self.watermark {
+            self.watermark
+        } else {
+            time_ms
+        };
+        let tick = time_to_tick(t).max(self.cur_tick);
         self.seq += 1;
         self.heap.push(Reverse(Scheduled {
             time_ms: t,
+            tick,
             seq: self.seq,
             kind,
         }));
     }
 
-    /// Pop the next event (earliest time, FIFO among ties).
-    pub fn pop(&mut self) -> Option<Scheduled> {
+    fn pop(&mut self) -> Option<Scheduled> {
         let Reverse(ev) = self.heap.pop()?;
-        debug_assert!(ev.time_ms >= self.watermark, "calendar must be monotone");
-        self.watermark = ev.time_ms;
+        debug_assert!(ev.tick >= self.cur_tick, "calendar must be monotone");
+        self.watermark = self.watermark.max(ev.time_ms);
+        self.cur_tick = ev.tick;
         self.processed += 1;
         Some(ev)
     }
 
-    pub fn len(&self) -> usize {
+    fn len(&self) -> usize {
         self.heap.len()
     }
 
-    pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+    fn processed(&self) -> u64 {
+        self.processed
     }
 
-    /// Number of events dispatched so far.
-    pub fn processed(&self) -> u64 {
-        self.processed
+    fn clear(&mut self) {
+        self.heap.clear();
+        self.seq = 0;
+        self.watermark = 0.0;
+        self.cur_tick = 0;
+        self.processed = 0;
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::rng::{Rng, Xoshiro256};
 
     #[test]
     fn events_pop_in_time_order_fifo_on_ties() {
@@ -178,5 +402,118 @@ mod tests {
         c.schedule(3.0, EventKind::Tick { slot: 1 }); // in the past: clamps
         let e = c.pop().unwrap();
         assert_eq!(e.time_ms, 10.0);
+    }
+
+    /// Regression (fixed-point clamp): a past event clamped to the
+    /// watermark must pop FIFO-*after* events already queued on the
+    /// watermark tick — the clamp lands it on the same tick with a
+    /// fresh (higher) sequence, never ahead of existing ties.
+    #[test]
+    fn clamped_event_pops_fifo_after_existing_ties_at_watermark() {
+        let mut c = Calendar::new();
+        c.schedule(10.0, EventKind::Decide);
+        c.pop().unwrap(); // watermark now 10.0
+        c.schedule(10.0, EventKind::Tick { slot: 7 }); // tie at the watermark
+        c.schedule(3.0, EventKind::UplinkDone { task: 42 }); // past: clamps to 10.0
+        let first = c.pop().unwrap();
+        assert_eq!(first.time_ms, 10.0);
+        assert!(
+            matches!(first.kind, EventKind::Tick { slot: 7 }),
+            "pre-existing tie at the watermark tick must pop before the clamped event"
+        );
+        let second = c.pop().unwrap();
+        assert_eq!(second.time_ms, 10.0, "clamped to the watermark time");
+        assert!(matches!(second.kind, EventKind::UplinkDone { task: 42 }));
+        assert!(second.seq() > first.seq());
+    }
+
+    /// Same scenario on the reference heap — the two implementations
+    /// must agree on the clamp-then-tie order.
+    #[test]
+    fn heap_calendar_clamps_identically() {
+        let mut c = HeapCalendar::new();
+        c.schedule(10.0, EventKind::Decide);
+        c.pop().unwrap();
+        c.schedule(10.0, EventKind::Tick { slot: 7 });
+        c.schedule(3.0, EventKind::UplinkDone { task: 42 });
+        assert!(matches!(c.pop().unwrap().kind, EventKind::Tick { slot: 7 }));
+        let e = c.pop().unwrap();
+        assert_eq!(e.time_ms, 10.0);
+        assert!(matches!(e.kind, EventKind::UplinkDone { task: 42 }));
+    }
+
+    /// Randomized interleaving of pushes and pops: the radix queue and
+    /// the reference heap must emit the identical event sequence —
+    /// same times, same insertion sequence numbers, same ticks.
+    #[test]
+    fn radix_matches_heap_on_random_interleaving() {
+        let mut rng = Xoshiro256::seed_from(0xCA1E_17DA);
+        let mut radix = RadixCalendar::new();
+        let mut heap = HeapCalendar::new();
+        let mut now = 0.0f64;
+        for step in 0..20_000u64 {
+            if rng.next_f64() < 0.55 || radix.is_empty() {
+                // Mix of future offsets, exact ties, sub-tick jitter,
+                // and occasional past times (exercising the clamp).
+                let dt = match step % 7 {
+                    0 => 0.0,
+                    1 => rng.next_f64() * 1e-4,
+                    2 => -(rng.next_f64() * 5.0),
+                    _ => rng.next_f64() * 50.0,
+                };
+                let t = now + dt;
+                radix.schedule(t, EventKind::Tick { slot: step as usize });
+                heap.schedule(t, EventKind::Tick { slot: step as usize });
+            } else {
+                let a = radix.pop().unwrap();
+                let b = heap.pop().unwrap();
+                assert_eq!(a.seq(), b.seq(), "divergent order at step {step}");
+                assert_eq!(a.time_ms, b.time_ms);
+                assert_eq!(a.tick(), b.tick());
+                now = a.time_ms;
+            }
+            assert_eq!(radix.len(), heap.len());
+        }
+        while let Some(a) = radix.pop() {
+            let b = heap.pop().unwrap();
+            assert_eq!(a.seq(), b.seq());
+            assert_eq!(a.time_ms, b.time_ms);
+        }
+        assert!(heap.pop().is_none());
+        assert_eq!(radix.processed(), heap.processed());
+    }
+
+    /// Exact-equal `f64` times always share a tick, so old FIFO ties
+    /// survive quantization; and tick order never inverts `dt ≥ 0`
+    /// scheduling.
+    #[test]
+    fn quantization_preserves_equal_time_ties() {
+        let t = 123.456_789_f64;
+        assert_eq!(time_to_tick(t), time_to_tick(t));
+        let mut c = Calendar::new();
+        for slot in 0..100 {
+            c.schedule(t, EventKind::Tick { slot });
+        }
+        for slot in 0..100 {
+            let e = c.pop().unwrap();
+            assert!(matches!(e.kind, EventKind::Tick { slot: s } if s == slot));
+        }
+    }
+
+    /// `clear` retains nothing observable: a cleared calendar replays a
+    /// fresh one's sequence exactly (arena reuse across trials).
+    #[test]
+    fn clear_resets_to_fresh_state() {
+        let mut c = Calendar::new();
+        c.schedule(4.0, EventKind::Decide);
+        c.schedule(9.0, EventKind::Decide);
+        c.pop().unwrap();
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.processed(), 0);
+        c.schedule(2.0, EventKind::Tick { slot: 3 });
+        let e = c.pop().unwrap();
+        assert_eq!(e.time_ms, 2.0);
+        assert_eq!(e.seq(), 1, "sequence restarts after clear");
     }
 }

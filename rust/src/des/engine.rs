@@ -18,15 +18,22 @@
 //! What differs is what the paper's bound is *about*: here tasks may
 //! actually wait in FIFO queues, and every light execution yields a
 //! measured sojourn `(y, wait + service)` for `des::validate`.
-
-use std::collections::HashMap;
+//!
+//! The hot-loop storage is metro-scale (see [`super::soa`]): tasks live
+//! in a [`TaskArena`] (struct-of-arrays, O(1) id→slot), transfer plans
+//! in a generation-stamped [`PlanSlab`], and the calendar is the radix
+//! queue from [`super::calendar`]. All of it sits in a [`DesArena`] that
+//! can be reused across trials (clear, don't drop) — `exp::run_cells`
+//! does exactly that — with reuse guaranteed bit-identical to a fresh
+//! arena. The engine itself is generic over [`EventCalendar`], so the
+//! cross-calendar tests replay the same trial on the reference heap.
 
 use crate::config::NUM_RESOURCES;
-use crate::controller::{LightRequest, VirtualQueues};
+use crate::controller::LightRequest;
 use crate::coordinator::{BatchPolicy, FailoverPolicy};
 use crate::faults::{DynamicTopology, FaultKind, FaultSchedule};
 use crate::metrics::{CostBook, MetricsCollector, TaskOutcome, TrialMetrics};
-use crate::microservice::{Application, MsClass};
+use crate::microservice::MsClass;
 use crate::obs::{Observer, TraceRecorder};
 use crate::placement::{QosScores, ScoreParams};
 use crate::routing::{CoreRouter, DistanceMatrix};
@@ -34,7 +41,8 @@ use crate::rng::Xoshiro256;
 use crate::sim::{SimEnv, SimOptions, Strategy};
 use crate::workload::{Trace, WorkloadGenerator};
 
-use super::calendar::{Calendar, EventKind};
+use super::calendar::{Calendar, EventCalendar, EventKind};
+use super::soa::{PlanSlab, TaskArena};
 use super::stations::{Joined, LightStations, Waiting};
 
 /// DES run options.
@@ -53,6 +61,14 @@ pub struct DesOptions {
     /// same object the slotted engine and the serving coordinator use,
     /// so agreement extends to retried executions. Inert without faults.
     pub failover: FailoverPolicy,
+    /// Stream metrics instead of retaining them: per-completion
+    /// histogram/counter accumulation replaces the per-task outcome and
+    /// per-execution sojourn buffers, so collector memory stays flat at
+    /// 10^6 users. Aggregate `TrialMetrics` fields are unchanged;
+    /// raw-sample fields (`latencies_ms`, `ServiceObs::samples`) come
+    /// back empty and percentile/validation queries fall back to the
+    /// streamed histograms. Default off (bit-identical legacy output).
+    pub streaming: bool,
 }
 
 impl DesOptions {
@@ -63,6 +79,7 @@ impl DesOptions {
             drop_after_deadlines: o.drop_after_deadlines,
             batching: None,
             failover: o.failover,
+            streaming: false,
         }
     }
 
@@ -86,78 +103,45 @@ pub struct TaskRecord {
     pub latency_ms: Option<f64>,
 }
 
-/// Task runtime state.
-struct DesTask {
-    task_type: usize,
-    arrival_ms: f64,
-    deadline_ms: f64,
-    uplink_ms: f64,
-    ed: usize,
-    done: Vec<Option<f64>>,
-    node: Vec<Option<usize>>,
-    dispatched: Vec<bool>,
-    /// Per-stage dispatch token: bumped on every dispatch and on every
-    /// fault cancellation, so calendar events from a superseded dispatch
-    /// are recognizably stale.
-    token: Vec<u64>,
-    /// A completed stage's output was lost with its node — permanent:
-    /// recovery restores capacity, not data (shared rule:
-    /// [`crate::sim`]'s `stage_inputs_destroyed`).
-    destroyed: Vec<bool>,
-    /// Fault-cancelled dispatch attempts per stage (drives the backoff).
-    attempts: Vec<u32>,
-    /// Earliest re-dispatch time per stage after a fault cancellation.
-    retry_at: Vec<f64>,
-    /// Cancelled by a fault; counted as a re-route recovery on the next
-    /// successful dispatch (or hedge promotion).
-    rerouted: Vec<bool>,
-    /// Standby hedged execution per stage: `(node, token)`. Promoted if
-    /// the primary's node dies; dropped when its own node dies or the
-    /// primary completes first.
-    hedge: Vec<Option<(usize, u64)>>,
+/// Reusable engine storage: the task arena, transfer-plan slab, event
+/// calendar, stations, and scratch buffers, all of which retain their
+/// allocations across trials. `exp::run_cells` keeps one per worker
+/// cell; reuse is bit-identical to a fresh arena (every trial starts
+/// with a full reset).
+#[derive(Default)]
+pub struct DesArena<C = Calendar> {
+    tasks: TaskArena,
+    plans: PlanSlab,
+    cal: C,
+    pending: Vec<(u64, usize)>,
+    stations: LightStations,
+    records: Vec<TaskRecord>,
+    busy_scratch: Vec<Vec<u32>>,
+    y_scratch: Vec<Vec<u32>>,
 }
 
-impl DesTask {
-    /// Delegates to the engine-shared rule ([`crate::sim`]'s
-    /// `stage_ready`) so paired runs can never disagree on readiness.
-    fn stage_ready(&self, app: &Application, local: usize) -> bool {
-        crate::sim::stage_ready(app, self.task_type, &self.done, &self.dispatched, local)
-    }
-
-    /// Parent payload sources `(node, done_ms, mb)`; source stages read
-    /// the user payload at the ED once the uplink lands. Shared with the
-    /// slotted engine.
-    fn parent_payloads(&self, app: &Application, local: usize) -> Vec<(usize, f64, f64)> {
-        crate::sim::parent_payloads(
-            app,
-            self.task_type,
-            &self.done,
-            &self.node,
-            self.ed,
-            self.arrival_ms + self.uplink_ms,
-            local,
-        )
+impl<C: Default> DesArena<C> {
+    pub fn new() -> Self {
+        Self::default()
     }
 }
 
-/// An assigned light payload in transit: the remaining hop-completion
-/// times (absolute ms; the last entry is the station join). Kept outside
-/// the task map so a dropped task's transfer can still release its busy
-/// accounting when it lands.
-struct TransferPlan {
-    node: usize,
-    light_idx: usize,
-    y: u32,
-    proc_ms: f64,
-    hop_times: Vec<f64>,
-    next: usize,
-    /// Dispatch token of the stage when the plan was made; hop events
-    /// carry it so a plan created by a later re-dispatch is never driven
-    /// by a stale event.
-    token: u64,
+impl<C: EventCalendar> DesArena<C> {
+    /// Reset to the empty state, retaining allocations. Called at the
+    /// top of every trial, so a reused arena and a fresh one are
+    /// trivially indistinguishable.
+    fn reset(&mut self) {
+        self.tasks.clear();
+        self.plans.clear();
+        self.cal.clear();
+        self.pending.clear();
+        self.records.clear();
+        // `stations` is re-dimensioned inside the run (needs nv/nl);
+        // the scratch matrices are overwritten before every read.
+    }
 }
 
-struct Des<'a> {
+struct Des<'a, C: EventCalendar> {
     env: &'a SimEnv,
     opts: &'a DesOptions,
     /// The replayed fault schedule ([`EventKind::Fault`] indexes into it).
@@ -170,14 +154,16 @@ struct Des<'a> {
     /// re-dispatched once the batch's routing rebuild has committed.
     fault_resets: Vec<(u64, usize)>,
     rng: Xoshiro256,
-    cal: Calendar,
-    tasks: HashMap<u64, DesTask>,
-    plans: HashMap<(u64, usize), TransferPlan>,
-    queues: VirtualQueues,
+    cal: &'a mut C,
+    t: &'a mut TaskArena,
+    plans: &'a mut PlanSlab,
+    /// Virtual-queue floor (`VirtualQueues::new(zeta)` semantics; the
+    /// queue values themselves live in the arena's `vq` column).
+    zeta: f64,
     /// Light work awaiting a controller assignment: `(task, local)`.
-    pending: Vec<(u64, usize)>,
+    pending: &'a mut Vec<(u64, usize)>,
     decide_scheduled: bool,
-    stations: LightStations,
+    stations: &'a mut LightStations,
     core_router: CoreRouter,
     residual_static: Vec<[f64; NUM_RESOURCES]>,
     collector: MetricsCollector,
@@ -188,13 +174,15 @@ struct Des<'a> {
     light_pl: Vec<f64>,
     horizon_ms: f64,
     record: bool,
-    records: Vec<TaskRecord>,
+    records: &'a mut Vec<TaskRecord>,
     /// Optional observability handle; `None` leaves every hook site on
     /// the exact untraced code path (no RNG, no event reordering).
     obs: Option<&'a mut Observer>,
+    busy_scratch: &'a mut Vec<Vec<u32>>,
+    y_scratch: &'a mut Vec<Vec<u32>>,
 }
 
-impl<'a> Des<'a> {
+impl<'a, C: EventCalendar> Des<'a, C> {
     /// The span recorder, if an observer with tracing is attached.
     fn rec(&mut self) -> Option<&mut TraceRecorder> {
         self.obs.as_deref_mut().and_then(|o| o.trace.as_mut())
@@ -207,32 +195,52 @@ impl<'a> Des<'a> {
         }
     }
 
-    fn finish_task(&mut self, id: u64, t: DesTask, done_ms: Option<f64>) {
+    /// Shared readiness rule over the arena's span slices.
+    fn stage_ready(&self, slot: u32, local: usize) -> bool {
+        let r = self.t.span(slot);
+        crate::sim::stage_ready(
+            &self.env.app,
+            self.t.task_type[slot as usize] as usize,
+            &self.t.done[r.clone()],
+            &self.t.dispatched[r],
+            local,
+        )
+    }
+
+    /// Record the task's outcome (and optional execution record) and
+    /// free its arena slot.
+    fn finish_task(&mut self, id: u64, done_ms: Option<f64>) {
         if let Some(r) = self.rec() {
             r.task_finished(id, done_ms);
         }
-        let latency_ms = done_ms.map(|d| d - t.arrival_ms);
+        let slot = self.t.slot(id).expect("finishing a task that is not live");
+        let i = slot as usize;
+        let arrival_ms = self.t.arrival_ms[i];
+        let deadline_ms = self.t.deadline_ms[i];
+        let latency_ms = done_ms.map(|d| d - arrival_ms);
         self.collector.record(TaskOutcome {
             task_id: id,
             latency_ms,
-            deadline_ms: t.deadline_ms,
+            deadline_ms,
         });
-        self.queues.remove(id);
         if self.record {
+            let r = self.t.span(slot);
             self.records.push(TaskRecord {
                 id,
-                task_type: t.task_type,
-                arrival_ms: t.arrival_ms,
-                deadline_ms: t.deadline_ms,
-                stage_done: t.done,
-                stage_node: t.node,
+                task_type: self.t.task_type[i] as usize,
+                arrival_ms,
+                deadline_ms,
+                stage_done: self.t.done[r.clone()].to_vec(),
+                stage_node: self.t.node[r].to_vec(),
                 latency_ms,
             });
         }
+        self.t.remove(id);
     }
 
     fn handle_arrival(&mut self, a: crate::workload::TaskArrival, now: f64) {
-        let app = &self.env.app;
+        let env = self.env;
+        let app = &env.app;
         // A trace recorded under a different application would silently
         // skew every paired metric — fail loudly instead (the slotted
         // engine panics on the same mismatch).
@@ -245,24 +253,15 @@ impl<'a> Des<'a> {
         );
         let n = app.task_types[a.task_type.0].dag.len();
         let deadline_ms = app.task_types[a.task_type.0].deadline_ms;
-        self.tasks.insert(
+        self.t.insert(
             a.id.0,
-            DesTask {
-                task_type: a.task_type.0,
-                arrival_ms: now,
-                deadline_ms,
-                uplink_ms: a.uplink_delay_ms,
-                ed: a.ed,
-                done: vec![None; n],
-                node: vec![None; n],
-                dispatched: vec![false; n],
-                token: vec![0; n],
-                destroyed: vec![false; n],
-                attempts: vec![0; n],
-                retry_at: vec![0.0; n],
-                rerouted: vec![false; n],
-                hedge: vec![None; n],
-            },
+            a.task_type.0,
+            now,
+            deadline_ms,
+            a.uplink_delay_ms,
+            a.ed,
+            n,
+            self.zeta,
         );
         let sink = app.task_types[a.task_type.0]
             .dag
@@ -275,22 +274,22 @@ impl<'a> Des<'a> {
             .schedule(now + a.uplink_delay_ms, EventKind::UplinkDone { task: a.id.0 });
     }
 
-    fn ready_stages(&self, id: u64) -> Vec<usize> {
-        let app = &self.env.app;
-        match self.tasks.get(&id) {
-            None => Vec::new(),
-            Some(t) => {
-                let tt = &app.task_types[t.task_type];
-                (0..tt.dag.len())
-                    .filter(|&l| t.stage_ready(app, l))
-                    .collect()
-            }
-        }
-    }
-
     fn handle_uplink_done(&mut self, id: u64, now: f64) {
-        for local in self.ready_stages(id) {
-            self.dispatch_stage(id, local, now);
+        let nst = match self.t.slot(id) {
+            Some(s) => self.t.nstages(s),
+            None => return,
+        };
+        // Check-then-dispatch per stage: a dispatch only flips its own
+        // stage's `dispatched` flag (or drops the task, ending the
+        // walk), so interleaving is equivalent to an upfront ready list.
+        for local in 0..nst {
+            let ready = match self.t.slot(id) {
+                Some(s) => self.stage_ready(s, local),
+                None => break,
+            };
+            if ready {
+                self.dispatch_stage(id, local, now);
+            }
         }
     }
 
@@ -302,36 +301,40 @@ impl<'a> Des<'a> {
     fn dispatch_stage(&mut self, id: u64, local: usize, now: f64) {
         let env = self.env;
         let app = &env.app;
-        let (ms_id, is_core, proc_ms, payloads) = {
-            let t = match self.tasks.get(&id) {
-                Some(t) => t,
-                None => return,
-            };
-            let tt = &app.task_types[t.task_type];
-            let ms_id = tt.services[local];
-            let spec = app.catalog.spec(ms_id);
-            (
-                ms_id,
-                spec.class == MsClass::Core,
-                spec.mean_proc_delay(),
-                t.parent_payloads(app, local),
-            )
+        let slot = match self.t.slot(id) {
+            Some(s) => s,
+            None => return,
         };
+        let i = slot as usize;
+        let task_type = self.t.task_type[i] as usize;
+        let tt = &app.task_types[task_type];
+        let ms_id = tt.services[local];
+        let spec = app.catalog.spec(ms_id);
+        let is_core = spec.class == MsClass::Core;
+        let proc_ms = spec.mean_proc_delay();
+        let r = self.t.span(slot);
+        let payloads = crate::sim::parent_payloads(
+            app,
+            task_type,
+            &self.t.done[r.clone()],
+            &self.t.node[r.clone()],
+            self.t.ed[i] as usize,
+            self.t.arrival_ms[i] + self.t.uplink_ms[i],
+            local,
+        );
         if self.dynt.is_some() {
-            let t = &self.tasks[&id];
             // Destroyed inputs are unrecoverable; a down ED merely delays
             // the source stage (the device retains the user payload).
-            if crate::sim::stage_inputs_destroyed(app, t.task_type, &t.destroyed, local) {
-                let t = self.tasks.remove(&id).unwrap();
+            if crate::sim::stage_inputs_destroyed(app, task_type, &self.t.destroyed[r.clone()], local)
+            {
                 self.collector.record_fault_drop();
-                self.finish_task(id, t, None);
+                self.finish_task(id, None);
                 return;
             }
-            if !self.node_up[t.ed] && app.task_types[t.task_type].dag.parents(local).is_empty()
-            {
+            if !self.node_up[self.t.ed[i] as usize] && tt.dag.parents(local).is_empty() {
                 return; // retried at the next tick once the ED recovers
             }
-            if now < t.retry_at[local] {
+            if now < self.t.retry_at[r.start + local] {
                 return; // backoff window; the Retry event re-dispatches
             }
         }
@@ -350,15 +353,19 @@ impl<'a> Des<'a> {
                 .core_router
                 .route_multi(ci, &payloads, proc_ms, now, dm)
             {
+                let bl = r.start + local;
                 // Hedged second attempt: a stage that already lost one
                 // execution to a fault and is near its deadline books a
                 // standby replica on a *different* node; it is promoted
                 // if the primary's node dies mid-execution.
                 let hedge_asn = if self.dynt.is_some() {
-                    let t = &self.tasks[&id];
-                    let slack = t.arrival_ms + t.deadline_ms - now;
-                    if t.rerouted[local]
-                        && self.opts.failover.retry.should_hedge(slack, t.deadline_ms)
+                    let slack = self.t.arrival_ms[i] + self.t.deadline_ms[i] - now;
+                    if self.t.rerouted[bl]
+                        && self
+                            .opts
+                            .failover
+                            .retry
+                            .should_hedge(slack, self.t.deadline_ms[i])
                     {
                         self.core_router
                             .route_multi(ci, &payloads, proc_ms, now, dm)
@@ -372,26 +379,24 @@ impl<'a> Des<'a> {
                 // Critical-parent span data must be derived while the
                 // routed dm view is still borrowed (it lives in self).
                 let trace_pre = self.obs.is_some().then(|| {
-                    let t = &self.tasks[&id];
                     let primary = crate::sim::critical_parent(
-                        app, t.task_type, local, &payloads, asn.node, dm,
+                        app, task_type, local, &payloads, asn.node, dm,
                     );
                     let hedge = hedge_asn.as_ref().map(|h| {
                         crate::sim::critical_parent(
-                            app, t.task_type, local, &payloads, h.node, dm,
+                            app, task_type, local, &payloads, h.node, dm,
                         )
                     });
                     (primary, hedge)
                 });
-                let t = self.tasks.get_mut(&id).unwrap();
-                if t.rerouted[local] {
-                    t.rerouted[local] = false;
+                if self.t.rerouted[bl] {
+                    self.t.rerouted[bl] = false;
                     self.collector.record_reroute();
                 }
-                t.dispatched[local] = true;
-                t.node[local] = Some(asn.node);
-                t.token[local] += 1;
-                let token = t.token[local];
+                self.t.dispatched[bl] = true;
+                self.t.node[bl] = Some(asn.node);
+                self.t.token[bl] += 1;
+                let token = self.t.token[bl];
                 self.cal.schedule(
                     asn.done_ms,
                     EventKind::CoreDone {
@@ -402,8 +407,8 @@ impl<'a> Des<'a> {
                     },
                 );
                 if let Some(((from, ready, arrive), _)) = trace_pre {
-                    if let Some(r) = self.rec() {
-                        r.core_dispatched(
+                    if let Some(rr) = self.rec() {
+                        rr.core_dispatched(
                             id,
                             local,
                             token,
@@ -418,9 +423,8 @@ impl<'a> Des<'a> {
                 if let Some(h) = hedge_asn {
                     // The hedge carries token + 1; only a promotion (the
                     // primary's node dying) makes it the live token.
-                    let t = self.tasks.get_mut(&id).unwrap();
                     let htoken = token + 1;
-                    t.hedge[local] = Some((h.node, htoken));
+                    self.t.hedge[bl] = Some((h.node, htoken));
                     self.collector.record_hedge();
                     self.cal.schedule(
                         h.done_ms,
@@ -432,8 +436,8 @@ impl<'a> Des<'a> {
                         },
                     );
                     if let Some((_, Some((from, ready, arrive)))) = trace_pre {
-                        if let Some(r) = self.rec() {
-                            r.hedge_dispatched(
+                        if let Some(rr) = self.rec() {
+                            rr.hedge_dispatched(
                                 id,
                                 local,
                                 htoken,
@@ -451,11 +455,10 @@ impl<'a> Des<'a> {
             // faults — the stage stays undispatched and is retried when
             // the next decision or recovery comes around (see tick).
         } else {
-            let t = self.tasks.get_mut(&id).unwrap();
-            t.dispatched[local] = true;
+            self.t.dispatched[r.start + local] = true;
             self.pending.push((id, local));
-            if let Some(r) = self.rec() {
-                r.light_pending(id, local, now);
+            if let Some(rr) = self.rec() {
+                rr.light_pending(id, local, now);
             }
             self.request_decide(now);
         }
@@ -464,36 +467,32 @@ impl<'a> Des<'a> {
     /// A stage finished: record it, complete the task at the sink, and
     /// dispatch any children that became ready.
     fn handle_stage_done(&mut self, id: u64, local: usize, node: usize, now: f64) {
-        let app = &self.env.app;
-        let is_sink = {
-            let t = match self.tasks.get_mut(&id) {
-                Some(t) => t,
-                None => return, // dropped while executing
-            };
-            t.done[local] = Some(now);
-            t.node[local] = Some(node);
-            app.task_types[t.task_type].dag.sink() == Some(local)
+        let env = self.env;
+        let app = &env.app;
+        let slot = match self.t.slot(id) {
+            Some(s) => s,
+            None => return, // dropped while executing
         };
+        let task_type = self.t.task_type[slot as usize] as usize;
+        let bl = self.t.span(slot).start + local;
+        self.t.done[bl] = Some(now);
+        self.t.node[bl] = Some(node);
         if let Some(r) = self.rec() {
             r.stage_done(id, local, now);
         }
-        if is_sink {
-            let t = self.tasks.remove(&id).unwrap();
-            self.finish_task(id, t, Some(now));
+        if app.task_types[task_type].dag.sink() == Some(local) {
+            self.finish_task(id, Some(now));
             return;
         }
-        let children: Vec<usize> = {
-            let t = &self.tasks[&id];
-            app.task_types[t.task_type]
-                .dag
-                .children(local)
-                .iter()
-                .filter(|&&c| t.stage_ready(app, c))
-                .cloned()
-                .collect()
-        };
-        for c in children {
-            self.dispatch_stage(id, c, now);
+        let kids = app.task_types[task_type].dag.children(local);
+        for &c in kids.iter() {
+            let ready = match self.t.slot(id) {
+                Some(s) => self.stage_ready(s, c),
+                None => break, // dropped by an earlier child's dispatch
+            };
+            if ready {
+                self.dispatch_stage(id, c, now);
+            }
         }
     }
 
@@ -519,48 +518,51 @@ impl<'a> Des<'a> {
         );
     }
 
-    fn handle_hop_done(&mut self, id: u64, local: usize, token: u64) {
-        let plan = match self.plans.get_mut(&(id, local)) {
-            Some(p) => p,
-            None => return,
-        };
-        if plan.token != token {
+    fn handle_hop_done(&mut self, plan: u32, pgen: u32) {
+        if !self.plans.is_live(plan, pgen) {
             return; // stale event from a cancelled dispatch
         }
-        plan.next += 1;
-        let i = plan.next;
-        debug_assert!(i < plan.hop_times.len());
-        let t = plan.hop_times[i];
-        let kind = if i + 1 == plan.hop_times.len() {
-            EventKind::StationJoin { task: id, local, token }
+        let p = plan as usize;
+        self.plans.next[p] += 1;
+        let i = self.plans.next[p] as usize;
+        debug_assert!(i < self.plans.hop_times[p].len());
+        let t = self.plans.hop_times[p][i];
+        let kind = if i + 1 == self.plans.hop_times[p].len() {
+            EventKind::StationJoin { plan, pgen }
         } else {
-            EventKind::HopDone { task: id, local, token }
+            EventKind::HopDone { plan, pgen }
         };
         self.cal.schedule(t, kind);
     }
 
-    fn handle_station_join(&mut self, id: u64, local: usize, token: u64, now: f64) {
-        match self.plans.get(&(id, local)) {
-            Some(p) if p.token == token => {}
-            _ => return, // stale event from a cancelled dispatch
+    fn handle_station_join(&mut self, plan: u32, pgen: u32, now: f64) {
+        if !self.plans.is_live(plan, pgen) {
+            return; // stale event from a cancelled dispatch
         }
-        let plan = self.plans.remove(&(id, local)).unwrap();
-        if !self.tasks.contains_key(&id) {
+        let p = plan as usize;
+        let id = self.plans.task[p];
+        let local = self.plans.local[p] as usize;
+        let node = self.plans.node[p] as usize;
+        let light_idx = self.plans.light_idx[p] as usize;
+        let y = self.plans.y[p];
+        let proc_ms = self.plans.proc_ms[p];
+        self.plans.remove(plan);
+        if !self.t.contains(id) {
             // Dropped mid-transfer: never joins, release the commitment.
-            self.stations.abort_assignment(plan.node, plan.light_idx);
+            self.stations.abort_assignment(node, light_idx);
             return;
         }
         let w = Waiting {
             task: id,
             local,
-            proc_ms: plan.proc_ms,
-            y: plan.y,
+            proc_ms,
+            y,
             join_ms: now,
         };
-        match self.stations.join(plan.node, plan.light_idx, w, now) {
+        match self.stations.join(node, light_idx, w, now) {
             Joined::Start(list) => {
                 for w in list {
-                    self.start_service(plan.node, plan.light_idx, w, now);
+                    self.start_service(node, light_idx, w, now);
                 }
             }
             Joined::Queued => {}
@@ -568,8 +570,8 @@ impl<'a> Des<'a> {
                 self.cal.schedule(
                     t,
                     EventKind::BatchFlush {
-                        node: plan.node,
-                        light_idx: plan.light_idx,
+                        node,
+                        light_idx,
                         epoch,
                     },
                 );
@@ -612,31 +614,37 @@ impl<'a> Des<'a> {
     fn handle_decide(&mut self, strategy: &mut dyn Strategy, now: f64) {
         self.decide_scheduled = false;
         {
-            let tasks = &self.tasks;
-            self.pending.retain(|(id, _)| tasks.contains_key(id));
+            let t: &TaskArena = self.t;
+            self.pending.retain(|(id, _)| t.contains(*id));
         }
         if self.dynt.is_some() {
             // Queued work whose input payload was destroyed is an
             // unrecoverable casualty — drop before building requests
             // (unreachable-but-alive inputs keep waiting).
-            let app = &self.env.app;
+            let env = self.env;
+            let app = &env.app;
             let mut casualties: Vec<u64> = Vec::new();
-            for &(id, local) in &self.pending {
-                if let Some(t) = self.tasks.get(&id) {
-                    if crate::sim::stage_inputs_destroyed(app, t.task_type, &t.destroyed, local)
-                    {
+            for &(id, local) in self.pending.iter() {
+                if let Some(slot) = self.t.slot(id) {
+                    let r = self.t.span(slot);
+                    if crate::sim::stage_inputs_destroyed(
+                        app,
+                        self.t.task_type[slot as usize] as usize,
+                        &self.t.destroyed[r],
+                        local,
+                    ) {
                         casualties.push(id);
                     }
                 }
             }
             for id in casualties {
-                if let Some(t) = self.tasks.remove(&id) {
+                if self.t.contains(id) {
                     self.collector.record_fault_drop();
-                    self.finish_task(id, t, None);
+                    self.finish_task(id, None);
                 }
             }
-            let tasks = &self.tasks;
-            self.pending.retain(|(id, _)| tasks.contains_key(id));
+            let t: &TaskArena = self.t;
+            self.pending.retain(|(id, _)| t.contains(*id));
         }
         if self.pending.is_empty() {
             return;
@@ -646,9 +654,12 @@ impl<'a> Des<'a> {
         let slot = ((now / self.opts.slot_ms).floor() as usize)
             .min(self.opts.slots.saturating_sub(1));
 
-        let busy = self.stations.busy_matrix();
-        let mut residual =
-            crate::sim::residual_after_busy(&self.residual_static, &env.light_resources, &busy);
+        self.stations.busy_into(self.busy_scratch);
+        let mut residual = crate::sim::residual_after_busy(
+            &self.residual_static,
+            &env.light_resources,
+            &self.busy_scratch[..],
+        );
         if self.dynt.is_some() {
             for (v, res) in residual.iter_mut().enumerate() {
                 if !self.node_up[v] {
@@ -660,11 +671,22 @@ impl<'a> Des<'a> {
             .pending
             .iter()
             .map(|&(id, local)| {
-                let t = &self.tasks[&id];
-                let tt = &app.task_types[t.task_type];
+                let s = self.t.slot(id).expect("pending task is live");
+                let i = s as usize;
+                let r = self.t.span(s);
+                let task_type = self.t.task_type[i] as usize;
+                let tt = &app.task_types[task_type];
                 let ms_id = tt.services[local];
                 let m = self.light_idx_of[ms_id.0].expect("light idx");
-                let payloads = t.parent_payloads(app, local);
+                let payloads = crate::sim::parent_payloads(
+                    app,
+                    task_type,
+                    &self.t.done[r.clone()],
+                    &self.t.node[r],
+                    self.t.ed[i] as usize,
+                    self.t.arrival_ms[i] + self.t.uplink_ms[i],
+                    local,
+                );
                 let &(from, _, mb) = payloads
                     .iter()
                     .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
@@ -674,8 +696,8 @@ impl<'a> Des<'a> {
                     light_idx: m,
                     from_node: from,
                     payload_mb: mb,
-                    h: self.queues.value(id),
-                    deadline_slack_ms: t.deadline_ms - (now - t.arrival_ms),
+                    h: self.t.vq[i],
+                    deadline_slack_ms: self.t.deadline_ms[i] - (now - self.t.arrival_ms[i]),
                 }
             })
             .collect();
@@ -685,7 +707,15 @@ impl<'a> Des<'a> {
                 Some(d) => d.dm(),
                 None => &env.dm,
             };
-            strategy.decide_light(env, slot, &requests, &busy, &residual, dm, &mut self.rng)
+            strategy.decide_light(
+                env,
+                slot,
+                &requests,
+                &self.busy_scratch[..],
+                &residual,
+                dm,
+                &mut self.rng,
+            )
         };
         debug_assert_eq!(decision.assignments.len(), requests.len());
 
@@ -696,7 +726,7 @@ impl<'a> Des<'a> {
         }
 
         let alpha = env.cfg.controller.contention_alpha;
-        let pending = std::mem::take(&mut self.pending);
+        let pending = std::mem::take(&mut *self.pending);
         let mut still = Vec::new();
         for (qi, (id, local)) in pending.into_iter().enumerate() {
             let asn = match decision.assignments.get(qi).and_then(|a| *a) {
@@ -712,6 +742,10 @@ impl<'a> Des<'a> {
                 still.push((id, local));
                 continue;
             }
+            let s = self.t.slot(id).expect("pending task is live");
+            let i = s as usize;
+            let r = self.t.span(s);
+            let task_type = self.t.task_type[i] as usize;
             // Sampled contended service time — same draw semantics as the
             // slotted engine.
             let (proc_ms, critical, mb, arrive, obs_pre) = {
@@ -719,11 +753,18 @@ impl<'a> Des<'a> {
                     Some(d) => d.dm(),
                     None => &env.dm,
                 };
-                let t = &self.tasks[&id];
-                let tt = &app.task_types[t.task_type];
+                let tt = &app.task_types[task_type];
                 let spec = app.catalog.spec(tt.services[local]);
                 let f = spec.rate.sample(&mut self.rng) / (asn.y as f64).powf(alpha);
-                let payloads = t.parent_payloads(app, local);
+                let payloads = crate::sim::parent_payloads(
+                    app,
+                    task_type,
+                    &self.t.done[r.clone()],
+                    &self.t.node[r.clone()],
+                    self.t.ed[i] as usize,
+                    self.t.arrival_ms[i] + self.t.uplink_ms[i],
+                    local,
+                );
                 let &(pn, pd, mb) = payloads
                     .iter()
                     .max_by(|a, b| {
@@ -734,7 +775,7 @@ impl<'a> Des<'a> {
                     .unwrap();
                 let arrive = pd + dm.latency(pn, asn.node, mb);
                 let obs_pre = self.obs.is_some().then(|| {
-                    crate::sim::critical_parent(app, t.task_type, local, &payloads, asn.node, dm)
+                    crate::sim::critical_parent(app, task_type, local, &payloads, asn.node, dm)
                 });
                 (spec.workload_mb / f.max(1e-9), (pn, pd), mb, arrive, obs_pre)
             };
@@ -744,16 +785,16 @@ impl<'a> Des<'a> {
                 still.push((id, local));
                 continue;
             }
-            let t = self.tasks.get_mut(&id).unwrap();
-            if t.rerouted[local] {
+            let bl = r.start + local;
+            if self.t.rerouted[bl] {
                 // A fault-cancelled execution has found a surviving
                 // replica: recovered, not dropped.
-                t.rerouted[local] = false;
+                self.t.rerouted[bl] = false;
                 self.collector.record_reroute();
             }
-            t.node[local] = Some(asn.node);
-            t.token[local] += 1;
-            let token = t.token[local];
+            self.t.node[bl] = Some(asn.node);
+            self.t.token[bl] += 1;
+            let token = self.t.token[bl];
             self.stations.note_assigned(asn.node, asn.light_idx);
 
             // Hop-by-hop transfer of the latest-arriving parent payload:
@@ -761,58 +802,39 @@ impl<'a> Des<'a> {
             // are skipped (the transfer overlapped the controller wait,
             // matching the slotted engine's `max(arrival, now)`).
             let (pn, pd) = critical;
-            let mut hop_times = Vec::new();
-            let mut cum = pd;
-            let hops = match &self.dynt {
-                Some(d) => d.hops(),
-                None => &env.hops,
-            };
-            for h in hops.hops(pn, asn.node) {
-                cum += h.latency(mb);
-                if cum > now {
-                    hop_times.push(cum);
+            let (pslot, pgen) =
+                self.plans
+                    .alloc(id, local, asn.node, asn.light_idx, asn.y, proc_ms);
+            {
+                let hops = match &self.dynt {
+                    Some(d) => d.hops(),
+                    None => &env.hops,
+                };
+                let mut cum = pd;
+                for h in hops.hops(pn, asn.node) {
+                    cum += h.latency(mb);
+                    if cum > now {
+                        self.plans.hop_times[pslot as usize].push(cum);
+                    }
                 }
             }
-            if hop_times.is_empty() {
-                self.plans.insert(
-                    (id, local),
-                    TransferPlan {
-                        node: asn.node,
-                        light_idx: asn.light_idx,
-                        y: asn.y,
-                        proc_ms,
-                        hop_times: vec![now],
-                        next: 0,
-                        token,
-                    },
-                );
+            let nh = self.plans.hop_times[pslot as usize].len();
+            if nh == 0 {
+                self.plans.hop_times[pslot as usize].push(now);
                 self.cal
-                    .schedule(now, EventKind::StationJoin { task: id, local, token });
+                    .schedule(now, EventKind::StationJoin { plan: pslot, pgen });
             } else {
-                let first = hop_times[0];
-                let single = hop_times.len() == 1;
-                self.plans.insert(
-                    (id, local),
-                    TransferPlan {
-                        node: asn.node,
-                        light_idx: asn.light_idx,
-                        y: asn.y,
-                        proc_ms,
-                        hop_times,
-                        next: 0,
-                        token,
-                    },
-                );
-                let kind = if single {
-                    EventKind::StationJoin { task: id, local, token }
+                let first = self.plans.hop_times[pslot as usize][0];
+                let kind = if nh == 1 {
+                    EventKind::StationJoin { plan: pslot, pgen }
                 } else {
-                    EventKind::HopDone { task: id, local, token }
+                    EventKind::HopDone { plan: pslot, pgen }
                 };
                 self.cal.schedule(first, kind);
             }
             if let Some((from, _, _)) = obs_pre {
-                if let Some(r) = self.rec() {
-                    r.light_assigned(
+                if let Some(rr) = self.rec() {
+                    rr.light_assigned(
                         id,
                         local,
                         token,
@@ -826,15 +848,15 @@ impl<'a> Des<'a> {
                 }
             }
         }
-        self.pending = still;
+        *self.pending = still;
     }
 
     /// A fault-cancelled stage's backoff window closed: re-dispatch if it
     /// is still waiting (the per-tick rescan may have beaten us to it, or
     /// the task may have finished or been dropped meanwhile).
     fn handle_retry(&mut self, id: u64, local: usize, now: f64) {
-        let ready = match self.tasks.get(&id) {
-            Some(t) => t.stage_ready(&self.env.app, local),
+        let ready = match self.t.slot(id) {
+            Some(s) => self.stage_ready(s, local),
             None => return,
         };
         if ready {
@@ -857,78 +879,79 @@ impl<'a> Des<'a> {
                 }
                 self.core_router.set_node_down(node);
                 self.stations.fail_node(node);
-                // Payloads in transit toward the dead station never land.
-                let doomed: Vec<(u64, usize)> = self
-                    .plans
-                    .iter()
-                    .filter(|(_, p)| p.node == node)
-                    .map(|(&k, _)| k)
-                    .collect();
-                for k in &doomed {
-                    self.plans.remove(k);
-                }
+                // Payloads in transit toward the dead station never land
+                // (freeing the plan makes their events stale).
+                self.plans.remove_toward(node, |_| {});
                 // Completed outputs resident on the node are destroyed
                 // (permanent — recovery restores capacity, not data);
                 // in-flight executions are cancelled and their stages
                 // re-dispatch after the batch commit (dispatch drops
                 // tasks whose inputs died with the node).
                 let retry = self.opts.failover.retry;
-                // Trace events collected during the cancellation walk and
-                // applied after it (the recorder can't be borrowed while
-                // `tasks` is): (task, stage, kind, backoff_until).
                 let tracing = self.obs.as_ref().map_or(false, |o| o.trace.is_some());
                 let mut trace_ev: Vec<(u64, usize, u8, f64)> = Vec::new();
-                for (&id, t) in self.tasks.iter_mut() {
-                    for local in 0..t.done.len() {
-                        if t.done[local].is_some() {
-                            if t.node[local] == Some(node) {
-                                t.destroyed[local] = true;
+                // Ascending-id walk (the seed's HashMap walk visited an
+                // arbitrary order; every per-stage effect is local to its
+                // stage, so the end state is identical).
+                for idn in self.t.first_live_id()..self.t.id_upper() {
+                    let id = idn as u64;
+                    let slot = match self.t.slot(id) {
+                        Some(s) => s,
+                        None => continue,
+                    };
+                    let r = self.t.span(slot);
+                    for local in 0..(r.end - r.start) {
+                        let bl = r.start + local;
+                        if self.t.done[bl].is_some() {
+                            if self.t.node[bl] == Some(node) {
+                                self.t.destroyed[bl] = true;
                             }
                             continue;
                         }
-                        if t.node[local] == Some(node) && t.dispatched[local] {
+                        if self.t.node[bl] == Some(node) && self.t.dispatched[bl] {
                             // Primary execution dies with the node. A live
                             // hedged standby is promoted in place: its
                             // token becomes the stage's live token, so its
                             // CoreDone completes the stage and the dead
                             // primary's event goes stale.
                             if let Some((hn, ht)) =
-                                t.hedge[local].filter(|&(hn, _)| hn != node)
+                                self.t.hedge[bl].filter(|&(hn, _)| hn != node)
                             {
-                                t.node[local] = Some(hn);
-                                t.token[local] = ht;
-                                t.hedge[local] = None;
+                                self.t.node[bl] = Some(hn);
+                                self.t.token[bl] = ht;
+                                self.t.hedge[bl] = None;
                                 self.collector.record_reroute();
                                 if tracing {
                                     trace_ev.push((id, local, 0, 0.0));
                                 }
                                 continue;
                             }
-                            t.dispatched[local] = false;
-                            t.node[local] = None;
+                            self.t.dispatched[bl] = false;
+                            self.t.node[bl] = None;
                             // Skip past any booked hedge token so a stale
                             // hedge event can never match a later dispatch.
-                            t.token[local] =
-                                t.token[local].max(t.hedge[local].map_or(0, |(_, ht)| ht)) + 1;
-                            t.hedge[local] = None;
+                            self.t.token[bl] = self.t.token[bl]
+                                .max(self.t.hedge[bl].map_or(0, |(_, ht)| ht))
+                                + 1;
+                            self.t.hedge[bl] = None;
                             // Jittered exponential backoff, deterministic
                             // per (task, stage, attempt) — the engine RNG
                             // stream is never consumed.
-                            t.attempts[local] += 1;
-                            t.rerouted[local] = true;
-                            t.retry_at[local] = now
+                            self.t.attempts[bl] += 1;
+                            self.t.rerouted[bl] = true;
+                            self.t.retry_at[bl] = now
                                 + retry.backoff_ms(
-                                    t.attempts[local],
+                                    self.t.attempts[bl],
                                     id ^ ((local as u64) << 40),
                                 );
                             self.collector.record_retry();
                             self.fault_resets.push((id, local));
                             if tracing {
-                                trace_ev.push((id, local, 1, t.retry_at[local]));
+                                trace_ev.push((id, local, 1, self.t.retry_at[bl]));
                             }
-                        } else if t.hedge[local].map(|(hn, _)| hn) == Some(node) {
+                        } else if self.t.hedge[bl].map(|(hn, _)| hn) == Some(node) {
                             // The standby died; the primary continues.
-                            t.hedge[local] = None;
+                            self.t.hedge[bl] = None;
                             if tracing {
                                 trace_ev.push((id, local, 2, 0.0));
                             }
@@ -936,8 +959,9 @@ impl<'a> Des<'a> {
                     }
                 }
                 if !trace_ev.is_empty() {
-                    // Sorted for determinism: the cancellation walk visits
-                    // a HashMap in arbitrary order.
+                    // The walk is already id-ordered; the sort keeps the
+                    // recorder contract explicit (and stable under any
+                    // future storage change).
                     trace_ev.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.cmp(&b.1)));
                     if let Some(r) = self.rec() {
                         for (tid, local, kind, until) in trace_ev {
@@ -996,15 +1020,16 @@ impl<'a> Des<'a> {
                 d.commit();
             }
             // Sorted for determinism: calendar sequence numbers are
-            // assigned in schedule order, and the cancellation loop above
-            // walks a HashMap.
+            // assigned in schedule order, and resets accumulate across
+            // every entry of the timestamp group.
             let mut resets = std::mem::take(&mut self.fault_resets);
             resets.sort_unstable();
             for (id, local) in resets {
                 // Re-dispatch after the backoff window, not immediately:
                 // the jittered delay spreads the retry burst a zone
                 // outage would otherwise synchronize.
-                let at = self.tasks[&id].retry_at[local].max(now);
+                let s = self.t.slot(id).expect("reset task is live");
+                let at = self.t.retry_at[self.t.span(s).start + local].max(now);
                 self.cal.schedule(at, EventKind::Retry { task: id, local });
             }
         }
@@ -1025,71 +1050,88 @@ impl<'a> Des<'a> {
             }
         }
         let slot_end = now + self.opts.slot_ms;
-        let mut ids: Vec<u64> = self.tasks.keys().cloned().collect();
-        ids.sort_unstable();
-        for id in ids {
-            let (age, deadline) = {
-                let t = &self.tasks[&id];
-                (slot_end - t.arrival_ms, t.deadline_ms)
+        let drop_after = self.opts.drop_after_deadlines;
+        for idn in self.t.first_live_id()..self.t.id_upper() {
+            let id = idn as u64;
+            let s = match self.t.slot(id) {
+                Some(s) => s,
+                None => continue,
             };
-            if age > self.opts.drop_after_deadlines * deadline {
-                let t = self.tasks.remove(&id).unwrap();
-                self.finish_task(id, t, None);
+            let i = s as usize;
+            let age = slot_end - self.t.arrival_ms[i];
+            let deadline = self.t.deadline_ms[i];
+            if age > drop_after * deadline {
+                self.finish_task(id, None);
             } else {
-                self.queues.update(id, age, deadline);
+                // `VirtualQueues::update`: H ← max(H + experienced −
+                // deadline, ζ), marking the queue as tracked.
+                self.t.vq[i] = (self.t.vq[i] + age - deadline).max(self.zeta);
+                self.t.vq_tracked[i] = true;
             }
         }
         {
-            let tasks = &self.tasks;
-            self.pending.retain(|(id, _)| tasks.contains_key(id));
+            let t: &TaskArena = self.t;
+            self.pending.retain(|(id, _)| t.contains(*id));
         }
         // Under faults a core stage can fail to route (all replicas down
         // or unreachable): it stays ready-but-undispatched and is retried
         // each tick until a replica or route comes back.
         if self.dynt.is_some() {
-            let app = &self.env.app;
-            let mut retry: Vec<(u64, usize)> = Vec::new();
-            for (&id, t) in &self.tasks {
-                let tt = &app.task_types[t.task_type];
-                for local in 0..tt.dag.len() {
-                    if t.stage_ready(app, local) {
-                        retry.push((id, local));
+            for idn in self.t.first_live_id()..self.t.id_upper() {
+                let id = idn as u64;
+                let nst = match self.t.slot(id) {
+                    Some(s) => self.t.nstages(s),
+                    None => continue,
+                };
+                for local in 0..nst {
+                    let ready = match self.t.slot(id) {
+                        Some(s) => self.stage_ready(s, local),
+                        None => break,
+                    };
+                    if ready {
+                        self.dispatch_stage(id, local, now);
                     }
                 }
-            }
-            retry.sort_unstable();
-            for (id, local) in retry {
-                self.dispatch_stage(id, local, now);
             }
         }
         // Per-slot light cost: maintenance on busy instance-groups,
         // parallelism on in-flight work (eq. 7 under continuous time).
-        let x_now = self.stations.busy_matrix();
-        let y_now = self.stations.in_flight_matrix();
-        self.costs
-            .charge_light_slot(&x_now, &y_now, &self.light_dp, &self.light_mt, &self.light_pl);
-        self.collector.record_queue_depth(self.pending.len() + self.stations.waiting_total());
+        self.stations.busy_into(self.busy_scratch);
+        self.stations.in_flight_into(self.y_scratch);
+        self.costs.charge_light_slot(
+            &self.busy_scratch[..],
+            &self.y_scratch[..],
+            &self.light_dp,
+            &self.light_mt,
+            &self.light_pl,
+        );
+        self.collector
+            .record_queue_depth(self.pending.len() + self.stations.waiting_total());
         // Per-tick telemetry snapshot (observer-gated, read-only).
         if self.obs.as_ref().map_or(false, |o| o.metrics.is_some()) {
             let env = self.env;
             let nl = env.app.catalog.num_light();
             let mut backlog = vec![0usize; nl];
-            for &(pid, plocal) in &self.pending {
-                if let Some(t) = self.tasks.get(&pid) {
-                    let ms_id = env.app.task_types[t.task_type].services[plocal];
+            for &(pid, plocal) in self.pending.iter() {
+                if let Some(s) = self.t.slot(pid) {
+                    let task_type = self.t.task_type[s as usize] as usize;
+                    let ms_id = env.app.task_types[task_type].services[plocal];
                     if let Some(m) = self.light_idx_of[ms_id.0] {
                         backlog[m] += 1;
                     }
                 }
             }
             let committed_y: Vec<u32> = (0..nl)
-                .map(|m| y_now.iter().map(|row| row[m]).max().unwrap_or(0))
+                .map(|m| self.y_scratch.iter().map(|row| row[m]).max().unwrap_or(0))
                 .collect();
-            let busy_groups: u32 = x_now.iter().flat_map(|r| r.iter()).sum();
-            let node_util = x_now.iter().filter(|row| row.iter().any(|&b| b > 0)).count()
-                as f64
-                / x_now.len().max(1) as f64;
-            let vq = self.queues.total_backlog();
+            let busy_groups: u32 = self.busy_scratch.iter().flat_map(|r| r.iter()).sum();
+            let node_util = self
+                .busy_scratch
+                .iter()
+                .filter(|row| row.iter().any(|&b| b > 0))
+                .count() as f64
+                / self.busy_scratch.len().max(1) as f64;
+            let vq = self.t.vq_total();
             if let Some(o) = self.obs.as_deref_mut() {
                 o.sample_slot(now, &backlog, &committed_y, busy_groups, node_util, vq, &env.gtable);
             }
@@ -1109,7 +1151,8 @@ pub fn run_des_trial(
     trace: &Trace,
 ) -> TrialMetrics {
     let none = FaultSchedule::none();
-    run_des_inner(env, strategy, seed, opts, trace, false, &none, None).0
+    let mut arena = DesArena::<Calendar>::default();
+    run_des_inner(&mut arena, env, strategy, seed, opts, trace, false, &none, None).0
 }
 
 /// Like [`run_des_trial`], additionally returning per-task execution
@@ -1122,7 +1165,8 @@ pub fn run_des_trial_recorded(
     trace: &Trace,
 ) -> (TrialMetrics, Vec<TaskRecord>) {
     let none = FaultSchedule::none();
-    run_des_inner(env, strategy, seed, opts, trace, true, &none, None)
+    let mut arena = DesArena::<Calendar>::default();
+    run_des_inner(&mut arena, env, strategy, seed, opts, trace, true, &none, None)
 }
 
 /// Run one DES trial while replaying a [`FaultSchedule`] at its exact
@@ -1136,7 +1180,26 @@ pub fn run_des_trial_faulted(
     trace: &Trace,
     faults: &FaultSchedule,
 ) -> TrialMetrics {
-    run_des_inner(env, strategy, seed, opts, trace, false, faults, None).0
+    let mut arena = DesArena::<Calendar>::default();
+    run_des_inner(&mut arena, env, strategy, seed, opts, trace, false, faults, None).0
+}
+
+/// [`run_des_trial_faulted`] into a caller-owned [`DesArena`]: the
+/// storage (arena, slab, calendar, stations, scratch) is reset and
+/// reused instead of reallocated, which is what a sweep cell running
+/// many trials wants. Also the cross-calendar test entry — instantiate
+/// the arena with [`super::calendar::HeapCalendar`] to replay a trial
+/// on the reference queue.
+pub fn run_des_trial_faulted_in<C: EventCalendar>(
+    arena: &mut DesArena<C>,
+    env: &SimEnv,
+    strategy: &mut dyn Strategy,
+    seed: u64,
+    opts: &DesOptions,
+    trace: &Trace,
+    faults: &FaultSchedule,
+) -> TrialMetrics {
+    run_des_inner(arena, env, strategy, seed, opts, trace, false, faults, None).0
 }
 
 /// Like [`run_des_trial_faulted`], with an [`Observer`] attached: spans,
@@ -1153,11 +1216,13 @@ pub fn run_des_trial_observed(
     faults: &FaultSchedule,
     obs: &mut Observer,
 ) -> TrialMetrics {
-    run_des_inner(env, strategy, seed, opts, trace, false, faults, Some(obs)).0
+    let mut arena = DesArena::<Calendar>::default();
+    run_des_inner(&mut arena, env, strategy, seed, opts, trace, false, faults, Some(obs)).0
 }
 
 #[allow(clippy::too_many_arguments)]
-fn run_des_inner(
+fn run_des_inner<C: EventCalendar>(
+    arena: &mut DesArena<C>,
     env: &SimEnv,
     strategy: &mut dyn Strategy,
     seed: u64,
@@ -1167,9 +1232,11 @@ fn run_des_inner(
     faults: &FaultSchedule,
     obs: Option<&mut Observer>,
 ) -> (TrialMetrics, Vec<TaskRecord>) {
+    arena.reset();
     let app = &env.app;
     let cfg = &env.cfg;
-    let mut rng = Xoshiro256::seed_from(seed ^ 0xDE5E_7E17);
+    let rng = Xoshiro256::seed_from(seed ^ 0xDE5E_7E17);
+    let mut place_rng = rng.clone();
     let gen = WorkloadGenerator::new(
         cfg,
         app,
@@ -1185,7 +1252,7 @@ fn run_des_inner(
         gen.users(),
         &ScoreParams::from_config(&cfg.controller),
     );
-    let placement = strategy.place_core(env, &scores, &mut rng);
+    let placement = strategy.place_core(env, &scores, &mut place_rng);
     let core_router = CoreRouter::new(&placement.instances);
     let residual_static = placement.residual_capacity(app, &env.topo);
 
@@ -1199,10 +1266,30 @@ fn run_des_inner(
     let max_y = env.gtable.max_parallelism().max(1);
     let mut collector = MetricsCollector::new();
     collector.enable_service_obs(nl);
+    if opts.streaming {
+        // Per-(service, y) delay bounds, snapshotted so violations can
+        // be counted at record time instead of from retained samples.
+        let bounds: Vec<Vec<f64>> = (0..nl)
+            .map(|m| (0..=max_y).map(|y| env.gtable.delay(m, y)).collect())
+            .collect();
+        collector.enable_streaming(bounds);
+    }
 
     let light_idx_of: Vec<Option<usize>> = (0..app.catalog.len())
         .map(|m| app.catalog.light_index(crate::microservice::MsId(m)))
         .collect();
+
+    arena.stations.reset(nv, nl, max_y, opts.batching);
+    let DesArena {
+        tasks,
+        plans,
+        cal,
+        pending,
+        stations,
+        records,
+        busy_scratch,
+        y_scratch,
+    } = arena;
 
     let has_faults = !faults.is_empty();
     let mut d = Des {
@@ -1212,14 +1299,14 @@ fn run_des_inner(
         dynt: has_faults.then(|| DynamicTopology::new(&env.topo, 1.0)),
         node_up: vec![true; nv],
         fault_resets: Vec::new(),
-        rng,
-        cal: Calendar::new(),
-        tasks: HashMap::new(),
-        plans: HashMap::new(),
-        queues: VirtualQueues::new(cfg.controller.zeta),
-        pending: Vec::new(),
+        rng: place_rng,
+        cal,
+        t: tasks,
+        plans,
+        zeta: cfg.controller.zeta,
+        pending,
         decide_scheduled: false,
-        stations: LightStations::new(nv, nl, max_y, opts.batching),
+        stations,
         core_router,
         residual_static,
         collector,
@@ -1230,8 +1317,10 @@ fn run_des_inner(
         light_pl: env.light_costs.iter().map(|c| c.2).collect(),
         horizon_ms: opts.slots as f64 * opts.slot_ms,
         record,
-        records: Vec::new(),
+        records,
         obs,
+        busy_scratch,
+        y_scratch,
     };
 
     // Seed the calendar. Fault events go in first so that, at equal
@@ -1260,10 +1349,8 @@ fn run_des_inner(
         match ev.kind {
             EventKind::Arrival { arrival } => d.handle_arrival(arrival, now),
             EventKind::UplinkDone { task } => d.handle_uplink_done(task, now),
-            EventKind::HopDone { task, local, token } => d.handle_hop_done(task, local, token),
-            EventKind::StationJoin { task, local, token } => {
-                d.handle_station_join(task, local, token, now)
-            }
+            EventKind::HopDone { plan, pgen } => d.handle_hop_done(plan, pgen),
+            EventKind::StationJoin { plan, pgen } => d.handle_station_join(plan, pgen, now),
             EventKind::CoreDone {
                 task,
                 local,
@@ -1271,10 +1358,10 @@ fn run_des_inner(
                 token,
             } => {
                 // Stale when the dispatch was cancelled by a fault.
-                let valid = d
-                    .tasks
-                    .get(&task)
-                    .map_or(false, |t| t.token[local] == token && t.done[local].is_none());
+                let valid = d.t.slot(task).map_or(false, |s| {
+                    let bl = d.t.span(s).start + local;
+                    d.t.token[bl] == token && d.t.done[bl].is_none()
+                });
                 if valid {
                     d.handle_stage_done(task, local, node, now)
                 }
@@ -1304,33 +1391,36 @@ fn run_des_inner(
         eprintln!(
             "[des] events={} unfinished={} pending={} station_wait={}",
             d.cal.processed(),
-            d.tasks.len(),
+            d.t.live(),
             d.pending.len(),
             d.stations.waiting_total()
         );
     }
 
-    // Horizon end: everything still in flight is incomplete.
-    let mut ids: Vec<u64> = d.tasks.keys().cloned().collect();
-    ids.sort_unstable();
-    for id in ids {
-        let t = d.tasks.remove(&id).unwrap();
-        d.finish_task(id, t, None);
+    // Horizon end: everything still in flight is incomplete (ascending
+    // id order, like the seed's sorted drain).
+    for idn in d.t.first_live_id()..d.t.id_upper() {
+        let id = idn as u64;
+        if d.t.contains(id) {
+            d.finish_task(id, None);
+        }
     }
     let _ = placement.objective;
     let Des {
         collector,
         costs,
+        t,
+        cal,
         records,
-        queues,
         ..
     } = d;
     debug_assert!(
-        queues.is_empty(),
-        "virtual-queue leak: {} entries after drain",
-        queues.len()
+        t.live() == 0,
+        "task-arena leak: {} live tasks after drain",
+        t.live()
     );
     let mut metrics = collector.finish(&costs);
-    metrics.vq_residual = queues.len();
-    (metrics, records)
+    metrics.vq_residual = t.live();
+    metrics.des_events = cal.processed();
+    (metrics, std::mem::take(records))
 }

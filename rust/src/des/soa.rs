@@ -1,0 +1,529 @@
+//! Struct-of-arrays hot state for the DES engine.
+//!
+//! At metro scale (10^6 concurrent users) the per-task bookkeeping is
+//! the memory- and cache-bound part of the hot loop. This module
+//! replaces the seed engine's `HashMap<u64, DesTask>` (one heap struct
+//! per task, eight `Vec`s per struct) and `HashMap<(u64, usize),
+//! TransferPlan>` with index-based storage:
+//!
+//! * [`TaskArena`] — per-task scalars in parallel vectors addressed by
+//!   a slot index, per-stage state in flat arrays addressed by a span
+//!   `(base, len)`, and an O(1) `id → slot` map exploiting the fact
+//!   that [`crate::workload::WorkloadGenerator`] issues dense
+//!   sequential task ids from 0. Freed slots and spans recycle through
+//!   free lists; slots carry generation stamps so recycled storage is
+//!   never mistaken for its previous tenant.
+//! * [`PlanSlab`] — transfer plans in a generation-stamped slab;
+//!   calendar events carry `(slot, generation)` so the token staleness
+//!   guard is a single comparison instead of a hash probe.
+//!
+//! The flat per-stage arrays keep the exact element types the shared
+//! `crate::sim` rules take (`&[Option<f64>]`, `&[bool]`, …), so a span
+//! slice feeds `stage_ready` / `parent_payloads` /
+//! `stage_inputs_destroyed` with no translation layer — the engines
+//! keep consulting one copy of the semantics.
+
+/// Sentinel in the `id → slot` map: task absent.
+const NO_SLOT: u32 = u32::MAX;
+
+/// Per-task state, struct-of-arrays. All `pub` fields are engine-hot
+/// storage addressed by the slot index returned from [`TaskArena::insert`]
+/// / [`TaskArena::slot`]; per-stage fields are addressed by the span
+/// range from [`TaskArena::span`].
+#[derive(Debug, Default)]
+pub struct TaskArena {
+    /// `id → slot` (dense ids from 0; `NO_SLOT` = not live).
+    slot_of: Vec<u32>,
+    /// Ids below this are all freed — live-id scans start here.
+    min_live_id: usize,
+    live: usize,
+    free: Vec<u32>,
+
+    // Per-slot scalars.
+    pub id: Vec<u64>,
+    pub task_type: Vec<u32>,
+    pub arrival_ms: Vec<f64>,
+    pub deadline_ms: Vec<f64>,
+    pub uplink_ms: Vec<f64>,
+    pub ed: Vec<u32>,
+    /// Lyapunov virtual-queue value `H_j` (same update rule as
+    /// `controller::VirtualQueues`, stored in-arena so the controller
+    /// read is an indexed load instead of a hash probe).
+    pub vq: Vec<f64>,
+    /// Whether `vq` has been updated by a slot tick at least once.
+    /// `controller::VirtualQueues::total_backlog` sums only tasks that
+    /// were ever `update()`d (the map is insert-on-update); telemetry
+    /// parity requires the same filter here.
+    pub vq_tracked: Vec<bool>,
+    base: Vec<u32>,
+    nstages: Vec<u32>,
+
+    // Flat per-stage arrays, addressed by `base..base + nstages`.
+    // Element types match the shared `crate::sim` rule signatures.
+    pub done: Vec<Option<f64>>,
+    pub node: Vec<Option<usize>>,
+    pub dispatched: Vec<bool>,
+    pub destroyed: Vec<bool>,
+    pub rerouted: Vec<bool>,
+    /// Per-stage dispatch token: bumped on every dispatch and on every
+    /// fault cancellation, so calendar events from a superseded
+    /// dispatch are recognizably stale.
+    pub token: Vec<u64>,
+    pub attempts: Vec<u32>,
+    pub retry_at: Vec<f64>,
+    /// Standby hedged execution per stage: `(node, token)`.
+    pub hedge: Vec<Option<(usize, u64)>>,
+
+    /// Recycled spans, bucketed by length (DAGs are small: a handful of
+    /// distinct stage counts per application).
+    span_free: Vec<Vec<u32>>,
+}
+
+impl TaskArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of live tasks.
+    pub fn live(&self) -> usize {
+        self.live
+    }
+
+    /// O(1) lookup: the slot of a live task, if any.
+    #[inline]
+    pub fn slot(&self, id: u64) -> Option<u32> {
+        match self.slot_of.get(id as usize) {
+            Some(&s) if s != NO_SLOT => Some(s),
+            _ => None,
+        }
+    }
+
+    #[inline]
+    pub fn contains(&self, id: u64) -> bool {
+        self.slot(id).is_some()
+    }
+
+    /// The per-stage span of `slot` into the flat arrays.
+    #[inline]
+    pub fn span(&self, slot: u32) -> std::ops::Range<usize> {
+        let b = self.base[slot as usize] as usize;
+        b..b + self.nstages[slot as usize] as usize
+    }
+
+    #[inline]
+    pub fn nstages(&self, slot: u32) -> usize {
+        self.nstages[slot as usize] as usize
+    }
+
+    /// Insert a task, returning its slot. Ids must be unique while live
+    /// (the generator's are globally unique).
+    #[allow(clippy::too_many_arguments)]
+    pub fn insert(
+        &mut self,
+        id: u64,
+        task_type: usize,
+        arrival_ms: f64,
+        deadline_ms: f64,
+        uplink_ms: f64,
+        ed: usize,
+        nstages: usize,
+        vq0: f64,
+    ) -> u32 {
+        debug_assert!(!self.contains(id), "duplicate live task id {id}");
+        let base = self.alloc_span(nstages);
+        let slot = match self.free.pop() {
+            Some(s) => {
+                let i = s as usize;
+                self.id[i] = id;
+                self.task_type[i] = task_type as u32;
+                self.arrival_ms[i] = arrival_ms;
+                self.deadline_ms[i] = deadline_ms;
+                self.uplink_ms[i] = uplink_ms;
+                self.ed[i] = ed as u32;
+                self.vq[i] = vq0;
+                self.vq_tracked[i] = false;
+                self.base[i] = base;
+                self.nstages[i] = nstages as u32;
+                s
+            }
+            None => {
+                let s = self.id.len() as u32;
+                self.id.push(id);
+                self.task_type.push(task_type as u32);
+                self.arrival_ms.push(arrival_ms);
+                self.deadline_ms.push(deadline_ms);
+                self.uplink_ms.push(uplink_ms);
+                self.ed.push(ed as u32);
+                self.vq.push(vq0);
+                self.vq_tracked.push(false);
+                self.base.push(base);
+                self.nstages.push(nstages as u32);
+                s
+            }
+        };
+        let idx = id as usize;
+        if idx >= self.slot_of.len() {
+            self.slot_of.resize(idx + 1, NO_SLOT);
+        }
+        self.slot_of[idx] = slot;
+        self.live += 1;
+        slot
+    }
+
+    /// Free a live task's slot and span (recycled for later inserts).
+    pub fn remove(&mut self, id: u64) {
+        let slot = self.slot(id).expect("removing a task that is not live");
+        self.slot_of[id as usize] = NO_SLOT;
+        let n = self.nstages[slot as usize] as usize;
+        self.free_span(self.base[slot as usize], n);
+        self.free.push(slot);
+        self.live -= 1;
+    }
+
+    /// Iterate live task ids in ascending id order, calling `f(id,
+    /// slot)`. Ascending-id iteration is the determinism contract the
+    /// seed engine bought with a per-tick `sort_unstable` over a
+    /// `HashMap`'s keys; here the `id → slot` map *is* the sorted
+    /// index, so the walk is a linear scan from the first live id.
+    pub fn for_each_live<F: FnMut(u64, u32)>(&mut self, mut f: F) {
+        while self.min_live_id < self.slot_of.len() && self.slot_of[self.min_live_id] == NO_SLOT {
+            self.min_live_id += 1;
+        }
+        for idx in self.min_live_id..self.slot_of.len() {
+            let s = self.slot_of[idx];
+            if s != NO_SLOT {
+                f(idx as u64, s);
+            }
+        }
+    }
+
+    /// Collect live ids in ascending order into `out` (for walks that
+    /// mutate the arena mid-iteration).
+    pub fn live_ids_into(&mut self, out: &mut Vec<u64>) {
+        out.clear();
+        self.for_each_live(|id, _| out.push(id));
+    }
+
+    /// First possibly-live id (advances past the freed prefix). With
+    /// [`TaskArena::id_upper`] this brackets an open-coded live walk
+    /// for callers that mutate per-stage state mid-iteration.
+    pub fn first_live_id(&mut self) -> usize {
+        while self.min_live_id < self.slot_of.len() && self.slot_of[self.min_live_id] == NO_SLOT {
+            self.min_live_id += 1;
+        }
+        self.min_live_id
+    }
+
+    /// One past the largest id ever inserted.
+    pub fn id_upper(&self) -> usize {
+        self.slot_of.len()
+    }
+
+    /// Total Lyapunov backlog over live tasks whose queue was ever
+    /// ticked — exactly `VirtualQueues::total_backlog` semantics.
+    pub fn vq_total(&self) -> f64 {
+        let mut sum = 0.0;
+        for idx in self.min_live_id..self.slot_of.len() {
+            let s = self.slot_of[idx];
+            if s != NO_SLOT && self.vq_tracked[s as usize] {
+                sum += self.vq[s as usize];
+            }
+        }
+        sum
+    }
+
+    fn alloc_span(&mut self, n: usize) -> u32 {
+        if let Some(list) = self.span_free.get_mut(n) {
+            if let Some(base) = list.pop() {
+                let r = base as usize..base as usize + n;
+                self.done[r.clone()].fill(None);
+                self.node[r.clone()].fill(None);
+                self.dispatched[r.clone()].fill(false);
+                self.destroyed[r.clone()].fill(false);
+                self.rerouted[r.clone()].fill(false);
+                self.token[r.clone()].fill(0);
+                self.attempts[r.clone()].fill(0);
+                self.retry_at[r.clone()].fill(0.0);
+                self.hedge[r].fill(None);
+                return base;
+            }
+        }
+        let base = self.done.len() as u32;
+        self.done.resize(base as usize + n, None);
+        self.node.resize(base as usize + n, None);
+        self.dispatched.resize(base as usize + n, false);
+        self.destroyed.resize(base as usize + n, false);
+        self.rerouted.resize(base as usize + n, false);
+        self.token.resize(base as usize + n, 0);
+        self.attempts.resize(base as usize + n, 0);
+        self.retry_at.resize(base as usize + n, 0.0);
+        self.hedge.resize(base as usize + n, None);
+        base
+    }
+
+    fn free_span(&mut self, base: u32, n: usize) {
+        if self.span_free.len() <= n {
+            self.span_free.resize_with(n + 1, Vec::new);
+        }
+        self.span_free[n].push(base);
+    }
+
+    /// Reset to empty, retaining every allocation (arena reuse across
+    /// trials in a sweep cell).
+    pub fn clear(&mut self) {
+        self.slot_of.clear();
+        self.min_live_id = 0;
+        self.live = 0;
+        self.free.clear();
+        self.id.clear();
+        self.task_type.clear();
+        self.arrival_ms.clear();
+        self.deadline_ms.clear();
+        self.uplink_ms.clear();
+        self.ed.clear();
+        self.vq.clear();
+        self.vq_tracked.clear();
+        self.base.clear();
+        self.nstages.clear();
+        self.done.clear();
+        self.node.clear();
+        self.dispatched.clear();
+        self.destroyed.clear();
+        self.rerouted.clear();
+        self.token.clear();
+        self.attempts.clear();
+        self.retry_at.clear();
+        self.hedge.clear();
+        for l in &mut self.span_free {
+            l.clear();
+        }
+    }
+}
+
+/// Transfer plans in a generation-stamped slab. A plan is created per
+/// light assignment and freed when the payload joins its station, when
+/// its task is cancelled, or when its destination node dies; the
+/// generation bump at free makes any in-flight `HopDone`/`StationJoin`
+/// event stale with one comparison.
+#[derive(Debug, Default)]
+pub struct PlanSlab {
+    pub task: Vec<u64>,
+    pub local: Vec<u32>,
+    pub node: Vec<u32>,
+    pub light_idx: Vec<u32>,
+    pub y: Vec<u32>,
+    pub proc_ms: Vec<f64>,
+    /// Remaining hop-completion times (absolute ms; the last entry is
+    /// the station join). Inner vectors recycle their capacity.
+    pub hop_times: Vec<Vec<f64>>,
+    pub next: Vec<u32>,
+    gen: Vec<u32>,
+    live: Vec<bool>,
+    free: Vec<u32>,
+    live_count: usize,
+}
+
+impl PlanSlab {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn live(&self) -> usize {
+        self.live_count
+    }
+
+    /// Allocate a plan slot (its `hop_times` vector comes back cleared,
+    /// capacity retained). Returns `(slot, generation)` for the events.
+    #[allow(clippy::too_many_arguments)]
+    pub fn alloc(
+        &mut self,
+        task: u64,
+        local: usize,
+        node: usize,
+        light_idx: usize,
+        y: u32,
+        proc_ms: f64,
+    ) -> (u32, u32) {
+        let slot = match self.free.pop() {
+            Some(s) => {
+                let i = s as usize;
+                self.task[i] = task;
+                self.local[i] = local as u32;
+                self.node[i] = node as u32;
+                self.light_idx[i] = light_idx as u32;
+                self.y[i] = y;
+                self.proc_ms[i] = proc_ms;
+                self.hop_times[i].clear();
+                self.next[i] = 0;
+                self.live[i] = true;
+                s
+            }
+            None => {
+                let s = self.task.len() as u32;
+                self.task.push(task);
+                self.local.push(local as u32);
+                self.node.push(node as u32);
+                self.light_idx.push(light_idx as u32);
+                self.y.push(y);
+                self.proc_ms.push(proc_ms);
+                self.hop_times.push(Vec::new());
+                self.next.push(0);
+                self.gen.push(0);
+                self.live.push(true);
+                s
+            }
+        };
+        self.live_count += 1;
+        (slot, self.gen[slot as usize])
+    }
+
+    /// O(1) staleness check: the plan is live and the event's
+    /// generation matches.
+    #[inline]
+    pub fn is_live(&self, slot: u32, gen: u32) -> bool {
+        let i = slot as usize;
+        i < self.live.len() && self.live[i] && self.gen[i] == gen
+    }
+
+    /// Free a plan slot, bumping its generation (in-flight events for
+    /// it become stale).
+    pub fn remove(&mut self, slot: u32) {
+        let i = slot as usize;
+        debug_assert!(self.live[i], "double free of plan slot {slot}");
+        self.live[i] = false;
+        self.gen[i] = self.gen[i].wrapping_add(1);
+        self.free.push(slot);
+        self.live_count -= 1;
+    }
+
+    /// Free every live plan headed to `node`, calling `f(plan_slot)`
+    /// first (node-outage cancellation: payloads toward a dead station
+    /// never land).
+    pub fn remove_toward<F: FnMut(u32)>(&mut self, node: usize, mut f: F) {
+        for i in 0..self.live.len() {
+            if self.live[i] && self.node[i] == node as u32 {
+                f(i as u32);
+                self.live[i] = false;
+                self.gen[i] = self.gen[i].wrapping_add(1);
+                self.free.push(i as u32);
+                self.live_count -= 1;
+            }
+        }
+    }
+
+    /// Reset to empty, retaining allocations (including the per-slot
+    /// `hop_times` capacities).
+    pub fn clear(&mut self) {
+        self.task.clear();
+        self.local.clear();
+        self.node.clear();
+        self.light_idx.clear();
+        self.y.clear();
+        self.proc_ms.clear();
+        for h in &mut self.hop_times {
+            h.clear();
+        }
+        self.hop_times.clear();
+        self.next.clear();
+        self.gen.clear();
+        self.live.clear();
+        self.free.clear();
+        self.live_count = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arena_insert_lookup_remove_recycles_slots_and_spans() {
+        let mut a = TaskArena::new();
+        let s0 = a.insert(0, 1, 10.0, 100.0, 2.0, 3, 4, 0.5);
+        let s1 = a.insert(1, 0, 11.0, 100.0, 2.0, 4, 4, 0.5);
+        assert_eq!(a.live(), 2);
+        assert_eq!(a.slot(0), Some(s0));
+        assert_eq!(a.slot(1), Some(s1));
+        let r0 = a.span(s0);
+        a.done[r0.start] = Some(42.0);
+        a.remove(0);
+        assert_eq!(a.slot(0), None);
+        assert_eq!(a.live(), 1);
+        // Same stage count → the freed slot and span recycle, scrubbed.
+        let s2 = a.insert(2, 1, 12.0, 100.0, 2.0, 5, 4, 0.5);
+        assert_eq!(s2, s0, "slot recycled");
+        let r2 = a.span(s2);
+        assert_eq!(r2, r0, "span recycled");
+        assert!(a.done[r2].iter().all(|d| d.is_none()), "span scrubbed");
+    }
+
+    #[test]
+    fn arena_iterates_live_ids_in_ascending_order() {
+        let mut a = TaskArena::new();
+        for id in 0..10u64 {
+            a.insert(id, 0, 0.0, 1.0, 0.0, 0, 2, 0.0);
+        }
+        for id in [0u64, 1, 4, 7] {
+            a.remove(id);
+        }
+        let mut seen = Vec::new();
+        a.for_each_live(|id, _| seen.push(id));
+        assert_eq!(seen, vec![2, 3, 5, 6, 8, 9]);
+        // The freed prefix is skipped permanently.
+        assert!(a.min_live_id >= 2);
+    }
+
+    #[test]
+    fn arena_clear_retains_nothing_observable() {
+        let mut a = TaskArena::new();
+        a.insert(5, 0, 0.0, 1.0, 0.0, 0, 3, 0.0);
+        a.clear();
+        assert_eq!(a.live(), 0);
+        assert_eq!(a.slot(5), None);
+        let s = a.insert(0, 0, 0.0, 1.0, 0.0, 0, 3, 0.0);
+        assert_eq!(s, 0, "slots restart from zero after clear");
+        assert_eq!(a.span(s), 0..3);
+    }
+
+    #[test]
+    fn vq_total_sums_only_ticked_tasks() {
+        let mut a = TaskArena::new();
+        let s0 = a.insert(0, 0, 0.0, 1.0, 0.0, 0, 1, 0.5);
+        let _s1 = a.insert(1, 0, 0.0, 1.0, 0.0, 0, 1, 0.5);
+        assert_eq!(a.vq_total(), 0.0, "never-ticked queues are invisible");
+        a.vq[s0 as usize] = 3.0;
+        a.vq_tracked[s0 as usize] = true;
+        assert!((a.vq_total() - 3.0).abs() < 1e-12);
+        a.remove(0);
+        assert_eq!(a.vq_total(), 0.0, "removed tasks drop out of the sum");
+    }
+
+    #[test]
+    fn plan_slab_generation_makes_stale_events_noop() {
+        let mut p = PlanSlab::new();
+        let (s, g) = p.alloc(7, 1, 2, 0, 4, 9.0);
+        assert!(p.is_live(s, g));
+        p.hop_times[s as usize].push(15.0);
+        p.remove(s);
+        assert!(!p.is_live(s, g), "freed plan is stale");
+        let (s2, g2) = p.alloc(8, 0, 3, 1, 2, 1.0);
+        assert_eq!(s2, s, "slot recycled");
+        assert_ne!(g2, g, "generation bumped");
+        assert!(p.is_live(s2, g2));
+        assert!(!p.is_live(s, g), "old stamp still stale after reuse");
+        assert!(p.hop_times[s2 as usize].is_empty(), "hops cleared");
+    }
+
+    #[test]
+    fn plan_slab_removes_toward_dead_node() {
+        let mut p = PlanSlab::new();
+        let (a, _) = p.alloc(1, 0, 5, 0, 1, 1.0);
+        let (b, _) = p.alloc(2, 0, 6, 0, 1, 1.0);
+        let (c, _) = p.alloc(3, 0, 5, 1, 1, 1.0);
+        let mut doomed = Vec::new();
+        p.remove_toward(5, |s| doomed.push(s));
+        assert_eq!(doomed, vec![a, c]);
+        assert_eq!(p.live(), 1);
+        assert!(p.is_live(b, 0));
+    }
+}

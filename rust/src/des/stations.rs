@@ -2,6 +2,13 @@
 //! FIFO queues, concurrency caps derived from the controller's instance
 //! decisions, and optional sim-time batching.
 //!
+//! Storage is struct-of-arrays — one parallel vector per field,
+//! indexed `node * num_light + light_idx` — so the hot counters
+//! (`cap` / `in_service` / `in_flight`) pack contiguously and the
+//! per-tick busy scans stream through three flat `u32` arrays instead
+//! of striding over per-replica structs. The station set is reusable
+//! across trials via [`LightStations::reset`] (clears, keeps buffers).
+//!
 //! Core services need no station type of their own — the existing
 //! [`crate::routing::CoreRouter`] already models per-instance FIFO
 //! serialization through its `busy_until` clocks, and the DES reuses it.
@@ -35,81 +42,95 @@ pub enum Joined {
     Batched(Option<(f64, u64)>),
 }
 
+/// All light stations of one trial, indexed `(node, dense light idx)`.
+/// Struct-of-arrays: field `i` of station `(v, m)` is `field[v * nl + m]`.
 #[derive(Debug, Default)]
-struct Station {
+pub struct LightStations {
+    nv: usize,
+    nl: usize,
+    max_y: usize,
     /// Concurrent-service cap: instances × max parallelism from the most
     /// recent decision, floored at the running work plus one group's
     /// drain capacity while commitments remain (see `on_decision`).
-    cap: u32,
-    in_service: u32,
+    cap: Vec<u32>,
+    in_service: Vec<u32>,
     /// Assigned-but-not-completed tasks (the controller's busy signal —
     /// mirrors the slotted engine's `active_light`).
-    in_flight: u32,
-    fifo: VecDeque<Waiting>,
-    batcher: Option<Batcher<Waiting>>,
+    in_flight: Vec<u32>,
+    fifo: Vec<VecDeque<Waiting>>,
+    batcher: Vec<Option<Batcher<Waiting>>>,
     /// Age-window epoch: a batch-flush event is valid only for the
     /// window it was scheduled in.
-    epoch: u64,
+    epoch: Vec<u64>,
     /// Outage generation: bumped when the hosting node fails, so
     /// completion events of executions the failure killed are ignored.
-    gen: u64,
+    gen: Vec<u64>,
 }
 
-impl Station {
-    /// Start `w` if a service slot is free, else park it in the FIFO.
-    fn try_start(&mut self, w: Waiting) -> Option<Waiting> {
-        if self.in_service < self.cap {
-            self.in_service += 1;
+impl LightStations {
+    pub fn new(nv: usize, nl: usize, max_y: usize, batching: Option<BatchPolicy>) -> Self {
+        let mut st = LightStations::default();
+        st.reset(nv, nl, max_y, batching);
+        st
+    }
+
+    /// An empty station set (placeholder until the first
+    /// [`LightStations::reset`] — used by the reusable DES arena).
+    pub fn empty() -> Self {
+        LightStations::default()
+    }
+
+    /// Re-dimension and clear for a fresh trial, retaining the parallel
+    /// vectors' allocations where dimensions allow.
+    pub fn reset(&mut self, nv: usize, nl: usize, max_y: usize, batching: Option<BatchPolicy>) {
+        let n = nv * nl;
+        self.nv = nv;
+        self.nl = nl;
+        self.max_y = max_y.max(1);
+        self.cap.clear();
+        self.cap.resize(n, 0);
+        self.in_service.clear();
+        self.in_service.resize(n, 0);
+        self.in_flight.clear();
+        self.in_flight.resize(n, 0);
+        for f in &mut self.fifo {
+            f.clear();
+        }
+        self.fifo.resize_with(n, VecDeque::new);
+        self.batcher.clear();
+        self.batcher.resize_with(n, || batching.map(Batcher::new));
+        self.epoch.clear();
+        self.epoch.resize(n, 0);
+        self.gen.clear();
+        self.gen.resize(n, 0);
+    }
+
+    #[inline]
+    fn idx(&self, v: usize, m: usize) -> usize {
+        v * self.nl + m
+    }
+
+    /// Start `w` if a service slot is free at station `i`, else park it
+    /// in the FIFO.
+    fn try_start(&mut self, i: usize, w: Waiting) -> Option<Waiting> {
+        if self.in_service[i] < self.cap[i] {
+            self.in_service[i] += 1;
             Some(w)
         } else {
-            self.fifo.push_back(w);
+            self.fifo[i].push_back(w);
             None
         }
     }
 
     /// Release a batch into service, FIFO-parking what exceeds the cap.
-    fn release(&mut self, batch: Vec<Waiting>) -> Vec<Waiting> {
+    fn release(&mut self, i: usize, batch: Vec<Waiting>) -> Vec<Waiting> {
         let mut started = Vec::with_capacity(batch.len());
         for w in batch {
-            if let Some(w) = self.try_start(w) {
+            if let Some(w) = self.try_start(i, w) {
                 started.push(w);
             }
         }
         started
-    }
-
-    fn waiting(&self) -> usize {
-        self.fifo.len() + self.batcher.as_ref().map_or(0, Batcher::len)
-    }
-}
-
-/// All light stations of one trial, indexed `(node, dense light idx)`.
-pub struct LightStations {
-    nv: usize,
-    nl: usize,
-    max_y: usize,
-    st: Vec<Station>,
-}
-
-impl LightStations {
-    pub fn new(nv: usize, nl: usize, max_y: usize, batching: Option<BatchPolicy>) -> Self {
-        let st = (0..nv * nl)
-            .map(|_| Station {
-                batcher: batching.map(Batcher::new),
-                ..Station::default()
-            })
-            .collect();
-        LightStations {
-            nv,
-            nl,
-            max_y: max_y.max(1),
-            st,
-        }
-    }
-
-    #[inline]
-    fn at(&mut self, v: usize, m: usize) -> &mut Station {
-        &mut self.st[v * self.nl + m]
     }
 
     /// Apply a controller decision's instance counts: update caps and
@@ -125,17 +146,17 @@ impl LightStations {
     /// which is exactly the FIFO queueing this engine exists to measure.
     pub fn on_decision(&mut self, x: &[Vec<u32>]) -> Vec<(usize, usize, Waiting)> {
         let mut started = Vec::new();
+        let max_y = self.max_y as u32;
         for v in 0..self.nv {
             for m in 0..self.nl {
-                let max_y = self.max_y as u32;
-                let s = self.at(v, m);
+                let i = self.idx(v, m);
                 let decided = x[v][m].saturating_mul(max_y);
-                let drain_floor = if s.in_flight > 0 { max_y } else { 0 };
-                s.cap = decided.max(s.in_service).max(drain_floor);
-                while s.in_service < s.cap {
-                    match s.fifo.pop_front() {
+                let drain_floor = if self.in_flight[i] > 0 { max_y } else { 0 };
+                self.cap[i] = decided.max(self.in_service[i]).max(drain_floor);
+                while self.in_service[i] < self.cap[i] {
+                    match self.fifo[i].pop_front() {
                         Some(w) => {
-                            s.in_service += 1;
+                            self.in_service[i] += 1;
                             started.push((v, m, w));
                         }
                         None => break,
@@ -149,40 +170,40 @@ impl LightStations {
     /// Register an assignment decided by the controller (payload may
     /// still be in transfer).
     pub fn note_assigned(&mut self, v: usize, m: usize) {
-        self.at(v, m).in_flight += 1;
+        let i = self.idx(v, m);
+        self.in_flight[i] += 1;
     }
 
     /// The assignment never reached the station (task dropped mid-
     /// transfer): release its busy accounting.
     pub fn abort_assignment(&mut self, v: usize, m: usize) {
-        let s = self.at(v, m);
-        s.in_flight = s.in_flight.saturating_sub(1);
+        let i = self.idx(v, m);
+        self.in_flight[i] = self.in_flight[i].saturating_sub(1);
     }
 
     /// A payload arrived at its station.
     pub fn join(&mut self, v: usize, m: usize, w: Waiting, now_ms: f64) -> Joined {
-        let s = self.at(v, m);
-        if s.batcher.is_some() {
-            let was_empty = s.batcher.as_ref().unwrap().is_empty();
-            match s.batcher.as_mut().unwrap().push_at(w, now_ms) {
-                Some(batch) => Joined::Start(s.release(batch)),
+        let i = self.idx(v, m);
+        if self.batcher[i].is_some() {
+            let was_empty = self.batcher[i].as_ref().unwrap().is_empty();
+            match self.batcher[i].as_mut().unwrap().push_at(w, now_ms) {
+                Some(batch) => Joined::Start(self.release(i, batch)),
                 None => {
                     if was_empty {
-                        s.epoch += 1;
-                        let deadline = s
-                            .batcher
+                        self.epoch[i] += 1;
+                        let deadline = self.batcher[i]
                             .as_ref()
                             .unwrap()
                             .age_deadline_ms()
                             .expect("non-empty batcher has an age window");
-                        Joined::Batched(Some((deadline, s.epoch)))
+                        Joined::Batched(Some((deadline, self.epoch[i])))
                     } else {
                         Joined::Batched(None)
                     }
                 }
             }
         } else {
-            match s.try_start(w) {
+            match self.try_start(i, w) {
                 Some(w) => Joined::Start(vec![w]),
                 None => Joined::Queued,
             }
@@ -195,12 +216,12 @@ impl LightStations {
     /// unconditionally — re-deriving the age here could round down under
     /// f64 addition and strand the window forever.
     pub fn age_flush(&mut self, v: usize, m: usize, epoch: u64, _now_ms: f64) -> Vec<Waiting> {
-        let s = self.at(v, m);
-        if s.epoch != epoch {
+        let i = self.idx(v, m);
+        if self.epoch[i] != epoch {
             return Vec::new();
         }
-        match s.batcher.as_mut().and_then(Batcher::flush) {
-            Some(batch) => s.release(batch),
+        match self.batcher[i].as_mut().and_then(Batcher::flush) {
+            Some(batch) => self.release(i, batch),
             None => Vec::new(),
         }
     }
@@ -209,7 +230,7 @@ impl LightStations {
     /// events so completions of executions killed by a node failure are
     /// recognizably stale.
     pub fn gen(&self, v: usize, m: usize) -> u64 {
-        self.st[v * self.nl + m].gen
+        self.gen[v * self.nl + m]
     }
 
     /// Fault injection: the hosting node died. Every station on it loses
@@ -221,28 +242,28 @@ impl LightStations {
     /// per-task state, so nothing is returned here.
     pub fn fail_node(&mut self, v: usize) {
         for m in 0..self.nl {
-            let s = self.at(v, m);
-            s.cap = 0;
-            s.in_service = 0;
-            s.in_flight = 0;
-            s.fifo.clear();
-            if let Some(b) = s.batcher.as_mut() {
+            let i = self.idx(v, m);
+            self.cap[i] = 0;
+            self.in_service[i] = 0;
+            self.in_flight[i] = 0;
+            self.fifo[i].clear();
+            if let Some(b) = self.batcher[i].as_mut() {
                 let _ = b.flush();
             }
-            s.epoch += 1;
-            s.gen += 1;
+            self.epoch[i] += 1;
+            self.gen[i] += 1;
         }
     }
 
     /// A service completed: free the slot, promote the FIFO head if one
     /// fits (the engine schedules its completion; its service starts now).
     pub fn complete(&mut self, v: usize, m: usize) -> Option<Waiting> {
-        let s = self.at(v, m);
-        s.in_service = s.in_service.saturating_sub(1);
-        s.in_flight = s.in_flight.saturating_sub(1);
-        if s.in_service < s.cap {
-            if let Some(w) = s.fifo.pop_front() {
-                s.in_service += 1;
+        let i = self.idx(v, m);
+        self.in_service[i] = self.in_service[i].saturating_sub(1);
+        self.in_flight[i] = self.in_flight[i].saturating_sub(1);
+        if self.in_service[i] < self.cap[i] {
+            if let Some(w) = self.fifo[i].pop_front() {
+                self.in_service[i] += 1;
                 return Some(w);
             }
         }
@@ -251,37 +272,57 @@ impl LightStations {
 
     /// Controller busy signal: instance-groups still working, per
     /// `(node, light idx)` — `ceil(in_flight / max_y)`, exactly the
-    /// slotted engine's convention.
+    /// slotted engine's convention. Writes into `out` so per-tick and
+    /// per-decision calls reuse one scratch matrix.
+    pub fn busy_into(&self, out: &mut Vec<Vec<u32>>) {
+        out.resize_with(self.nv, Vec::new);
+        for (v, row) in out.iter_mut().enumerate() {
+            row.clear();
+            row.extend((0..self.nl).map(|m| {
+                let f = self.in_flight[v * self.nl + m] as usize;
+                f.div_ceil(self.max_y) as u32
+            }));
+        }
+    }
+
+    /// Allocating convenience wrapper over [`LightStations::busy_into`].
     pub fn busy_matrix(&self) -> Vec<Vec<u32>> {
-        (0..self.nv)
-            .map(|v| {
-                (0..self.nl)
-                    .map(|m| {
-                        let f = self.st[v * self.nl + m].in_flight as usize;
-                        f.div_ceil(self.max_y) as u32
-                    })
-                    .collect()
-            })
-            .collect()
+        let mut out = Vec::new();
+        self.busy_into(&mut out);
+        out
     }
 
     /// Assigned-but-uncompleted work per `(node, light idx)` — the
     /// continuous-time counterpart of the slotted decision's `y[v][m]`
     /// (concurrent tasks), used for per-slot parallelism cost charging.
+    pub fn in_flight_into(&self, out: &mut Vec<Vec<u32>>) {
+        out.resize_with(self.nv, Vec::new);
+        for (v, row) in out.iter_mut().enumerate() {
+            row.clear();
+            row.extend((0..self.nl).map(|m| self.in_flight[v * self.nl + m]));
+        }
+    }
+
+    /// Allocating convenience wrapper over [`LightStations::in_flight_into`].
     pub fn in_flight_matrix(&self) -> Vec<Vec<u32>> {
-        (0..self.nv)
-            .map(|v| (0..self.nl).map(|m| self.st[v * self.nl + m].in_flight).collect())
-            .collect()
+        let mut out = Vec::new();
+        self.in_flight_into(&mut out);
+        out
     }
 
     /// Tasks parked in FIFOs and batchers across all stations.
     pub fn waiting_total(&self) -> usize {
-        self.st.iter().map(Station::waiting).sum()
+        self.fifo.iter().map(VecDeque::len).sum::<usize>()
+            + self
+                .batcher
+                .iter()
+                .map(|b| b.as_ref().map_or(0, Batcher::len))
+                .sum::<usize>()
     }
 
     /// Tasks assigned but not yet completed, across all stations.
     pub fn in_flight_total(&self) -> usize {
-        self.st.iter().map(|s| s.in_flight as usize).sum()
+        self.in_flight.iter().map(|&f| f as usize).sum()
     }
 }
 
@@ -430,5 +471,19 @@ mod tests {
         let started = st.on_decision(&[vec![2]]);
         assert_eq!(started.len(), 1);
         assert_eq!(started[0].2.task, 2);
+    }
+
+    #[test]
+    fn reset_reuses_buffers_for_a_fresh_trial() {
+        let mut st = LightStations::new(2, 2, 2, None);
+        st.on_decision(&[vec![1, 1], vec![1, 1]]);
+        st.note_assigned(1, 1);
+        assert!(matches!(st.join(1, 1, w(1), 0.0), Joined::Start(_)));
+        st.fail_node(0);
+        st.reset(2, 2, 2, None);
+        assert_eq!(st.in_flight_total(), 0);
+        assert_eq!(st.waiting_total(), 0);
+        assert_eq!(st.gen(0, 0), 0, "generations restart");
+        assert_eq!(st.busy_matrix(), vec![vec![0, 0], vec![0, 0]]);
     }
 }

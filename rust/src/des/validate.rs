@@ -50,12 +50,30 @@ impl ServiceValidation {
 /// Compare every measured sojourn in `metrics` against the g-table bound
 /// at its own decision parallelism. Services with no executions yield a
 /// zero-sample entry (trivially holding).
+///
+/// Streaming trials retain no raw samples; the per-execution comparison
+/// already happened at record time ([`crate::metrics::ServiceObs::record_streamed`]
+/// looked up the bound at each execution's y), so the same validation is
+/// answered from the streamed aggregates.
 pub fn validate_bounds(gtable: &GTable, metrics: &TrialMetrics) -> Vec<ServiceValidation> {
     metrics
         .service_obs
         .iter()
         .enumerate()
         .map(|(m, obs)| {
+            if obs.samples.is_empty() && obs.sojourn.count() > 0 {
+                // Streaming mode: aggregates only.
+                let n = obs.sojourn.count() as usize;
+                return ServiceValidation {
+                    light_idx: m,
+                    samples: n,
+                    violations: obs.violations as usize,
+                    epsilon: gtable.params_epsilon,
+                    mean_sojourn_ms: obs.sojourn.mean(),
+                    mean_bound_ms: obs.sum_bound_ms / n as f64,
+                    max_sojourn_ms: obs.sojourn.max(),
+                };
+            }
             let mut violations = 0usize;
             let mut sum_s = 0.0;
             let mut sum_g = 0.0;
@@ -119,13 +137,14 @@ pub fn pool(per_trial: &[Vec<ServiceValidation>]) -> Vec<ServiceValidation> {
 }
 
 /// Empirical CCDF of one service's sojourns evaluated at `t` ms:
-/// `P(sojourn > t)` (exact, from the raw samples).
+/// `P(sojourn > t)` — exact from raw samples; bin-resolution from the
+/// sojourn histogram when the trial streamed (no retained samples).
 pub fn sojourn_ccdf(metrics: &TrialMetrics, light_idx: usize, t: f64) -> f64 {
     match metrics.service_obs.get(light_idx) {
         None => 0.0,
         Some(obs) => {
             if obs.samples.is_empty() {
-                return 0.0;
+                return obs.sojourn.ccdf(t);
             }
             let above = obs.samples.iter().filter(|&&(_, s)| s > t).count();
             above as f64 / obs.samples.len() as f64
@@ -197,6 +216,33 @@ mod tests {
         let v = validate_bounds(&gt, &m);
         assert_eq!(v[0].samples, 0);
         assert!(v[0].holds(0.0));
+    }
+
+    #[test]
+    fn streaming_trials_validate_from_aggregates() {
+        // Same samples through a streaming collector (bounds snapshotted
+        // the way the DES engine does it): validate_bounds must agree
+        // with the retained-sample path, and the CCDF must come from the
+        // histogram instead of returning 0.
+        let gt = flat_gtable(10.0, 0.2);
+        let samples = vec![(1u32, 5.0), (2, 9.0), (1, 11.0), (3, 20.0)];
+        let retained = validate_bounds(&gt, &metrics_with(samples.clone()));
+        let mut c = MetricsCollector::new();
+        c.enable_service_obs(1);
+        let bounds = vec![(0..=4).map(|y| gt.delay(0, y)).collect::<Vec<_>>()];
+        c.enable_streaming(bounds);
+        for &(y, s) in &samples {
+            c.record_sojourn(0, y, s);
+        }
+        let m = c.finish(&crate::metrics::CostBook::default());
+        assert!(m.service_obs[0].samples.is_empty());
+        let streamed = validate_bounds(&gt, &m);
+        assert_eq!(streamed[0].samples, retained[0].samples);
+        assert_eq!(streamed[0].violations, retained[0].violations);
+        assert_eq!(streamed[0].max_sojourn_ms, retained[0].max_sojourn_ms);
+        assert!((streamed[0].mean_sojourn_ms - retained[0].mean_sojourn_ms).abs() < 1e-12);
+        assert!((streamed[0].mean_bound_ms - retained[0].mean_bound_ms).abs() < 1e-12);
+        assert!(sojourn_ccdf(&m, 0, 10.0) > 0.0, "CCDF from the histogram");
     }
 
     #[test]

@@ -40,7 +40,10 @@ pub use table::Table;
 
 use crate::baselines::{GaStrategy, LbrrStrategy, PropAvg, Proposal};
 use crate::config::ExperimentConfig;
-use crate::des::{pool, run_des_trial, run_des_trial_faulted, validate_bounds, DesOptions};
+use crate::des::{
+    pool, run_des_trial, run_des_trial_faulted, run_des_trial_faulted_in, validate_bounds,
+    DesArena, DesOptions,
+};
 use crate::faults::{FaultParams, FaultSchedule};
 use crate::ilp::NodeLpMode;
 use crate::metrics::Histogram;
@@ -515,6 +518,9 @@ fn sweep_p4(base: &ExperimentConfig, sc: &SweepConfig) -> Result<Table, String> 
         let mut drops = 0usize;
         let mut reroutes = 0usize;
         let mut tasks = 0usize;
+        // One engine arena per cell, reused across its trials (cleared,
+        // not dropped — bit-identical to fresh, asserted in des::tests).
+        let mut arena: DesArena = DesArena::new();
         for (trial, fx) in fixtures[li].iter().enumerate() {
             // The schedule adds the rate key on top of the shared fixture.
             let schedule = if rate > 0.0 {
@@ -539,7 +545,8 @@ fn sweep_p4(base: &ExperimentConfig, sc: &SweepConfig) -> Result<Table, String> 
                     &fx.trace,
                     &schedule,
                 ),
-                Engine::Des => run_des_trial_faulted(
+                Engine::Des => run_des_trial_faulted_in(
+                    &mut arena,
                     &fx.env,
                     strategy.as_mut(),
                     fx.seed,
@@ -686,6 +693,10 @@ fn sweep_p5(base: &ExperimentConfig, sc: &SweepConfig) -> Result<Table, String> 
         let mut tasks = 0usize;
         let mut moves = 0usize;
         let mut latency = Histogram::latency_ms();
+        // Engine storage reused across the cell's trials (clear, don't
+        // drop). Kept in retained-metrics mode: the p95 column below
+        // needs the raw latency stream.
+        let mut arena: DesArena = DesArena::new();
         for (trial, cs) in compiled[sci].iter().enumerate() {
             let (eseed, env, opts) = &envs[trial];
             let mut strategy = strategy_by_name(&sc.strategies[si]).expect("validated");
@@ -698,7 +709,8 @@ fn sweep_p5(base: &ExperimentConfig, sc: &SweepConfig) -> Result<Table, String> 
                     &cs.trace,
                     &cs.faults,
                 ),
-                Engine::Des => run_des_trial_faulted(
+                Engine::Des => run_des_trial_faulted_in(
+                    &mut arena,
                     env,
                     strategy.as_mut(),
                     *eseed,

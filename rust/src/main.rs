@@ -8,12 +8,14 @@ use fmedge::coordinator::{
     parse_fault_spec, BatchPolicy, Coordinator, FailoverConfig, FailoverPolicy, ReplayConfig,
     ReplayServer, Request, ServeConfig, VirtualRequest,
 };
+use fmedge::benchkit::{bench, fmt_duration, print_data_table, save_json};
 use fmedge::des::{
-    pool, report, run_des_trial, run_des_trial_faulted, run_des_trial_observed, validate_bounds,
-    DesOptions,
+    pool, report, run_des_trial, run_des_trial_faulted, run_des_trial_faulted_in,
+    run_des_trial_observed, validate_bounds, DesArena, DesOptions, EventCalendar, EventKind,
+    HeapCalendar, RadixCalendar,
 };
 use fmedge::exp::{run_sweep, strategy_by_name, Experiment, SweepConfig};
-use fmedge::faults::{FaultParams, FaultSchedule};
+use fmedge::faults::{FaultEvent, FaultKind, FaultParams, FaultSchedule};
 use fmedge::metrics::Summary;
 use fmedge::obs::{analyze, chrome_trace_json, render, spans_jsonl, Observer};
 use fmedge::placement::{solve_static_placement, PlacementParams, QosScores, ScoreParams};
@@ -196,7 +198,11 @@ fn cmd_des(args: &Args) -> Result<(), AnyError> {
     cfg.sim.trials = args.get_usize("trials", cfg.sim.trials)?;
     cfg.sim.load_multiplier = args.get_f64("load", cfg.sim.load_multiplier)?;
     cfg.sim.seed = args.get_u64("seed", cfg.sim.seed)?;
+    cfg.workload.num_users = args.get_usize("users", cfg.workload.num_users)?;
     let strat_name = args.get("strategy").unwrap_or("proposal").to_string();
+    if args.flag("bench") {
+        return cmd_des_bench(&cfg, &strat_name);
+    }
     let batch = args.get_usize("batch", 0)?;
     let batch_wait = args.get_f64("batch-wait", 1.0)?;
     let mut otr = Vec::new();
@@ -242,12 +248,15 @@ fn cmd_des(args: &Args) -> Result<(), AnyError> {
             }
         }
         let mut dopts = DesOptions::from_sim(&opts);
+        dopts.streaming = args.flag("streaming");
         if batch > 1 {
             dopts.batching = Some(BatchPolicy::with_wait_ms(batch, batch_wait));
         }
         let mut strategy = make_strategy(&strat_name)?;
         let m = run_des_trial(env, strategy.as_mut(), seed, &dopts, trace);
-        let measured: usize = m.service_obs.iter().map(|o| o.samples.len()).sum();
+        // The sojourn histograms are filled in both metric modes;
+        // `samples` is empty under --streaming.
+        let measured: u64 = m.service_obs.iter().map(|o| o.sojourn.count()).sum();
         println!(
             "trial {trial:>3}: tasks={:<6} completion={:.3} on_time={:.3} cost={:.0} sojourns={measured} queue {}",
             m.total_tasks,
@@ -277,6 +286,106 @@ fn cmd_des(args: &Args) -> Result<(), AnyError> {
             cfg.controller.epsilon,
             report(&pooled)
         );
+    }
+    Ok(())
+}
+
+/// `fmedge des --bench`: the DES performance harness (EXPERIMENTS §P8,
+/// `benches/bench_des.rs` is the cargo-bench twin). Two microbench rows
+/// price the calendar alone — push + pop of a uniform-random event set
+/// on the production radix calendar and on the binary-heap reference —
+/// and one macro row prices the whole engine: a faulted streaming trial
+/// with the arena reused across iterations (the sweep's steady-state
+/// shape). Throughput is events/sec, where one event is one schedule +
+/// one pop; the acceptance target is >= 1e7 on the radix calendar row.
+/// `FMEDGE_BENCH_ITERS` / `FMEDGE_BENCH_EVENTS` scale the run;
+/// `FMEDGE_BENCH_JSON=BENCH_des.json` saves the perf-trajectory rows.
+fn cmd_des_bench(cfg: &ExperimentConfig, strat_name: &str) -> Result<(), AnyError> {
+    let iters: usize = std::env::var("FMEDGE_BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(5);
+    let n: usize = std::env::var("FMEDGE_BENCH_EVENTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1_000_000);
+    let headers = ["bench", "events", "mean", "events/sec"];
+    let mut rows = Vec::new();
+
+    // The time stream is generated once up front: the bench prices the
+    // calendar, not the RNG.
+    let mut rng = Xoshiro256::seed_from(0xBE7C);
+    let times: Vec<f64> = (0..n).map(|_| rng.next_f64() * 10_000.0).collect();
+
+    fn churn<C: EventCalendar + Default>(times: &[f64]) -> u64 {
+        let mut cal = C::default();
+        for &t in times {
+            cal.schedule(t, EventKind::Decide);
+        }
+        let mut last = f64::NEG_INFINITY;
+        while let Some(ev) = cal.pop() {
+            debug_assert!(ev.time_ms >= last, "calendar must pop in order");
+            last = ev.time_ms;
+        }
+        cal.processed()
+    }
+
+    for (name, runner) in [
+        ("calendar/radix push+pop", churn::<RadixCalendar> as fn(&[f64]) -> u64),
+        ("calendar/heap push+pop", churn::<HeapCalendar> as fn(&[f64]) -> u64),
+    ] {
+        let r = bench(name, 1, iters, || {
+            std::hint::black_box(runner(std::hint::black_box(&times)));
+        });
+        let evs = n as f64 / (r.mean_ns() / 1e9);
+        rows.push(vec![
+            name.to_string(),
+            n.to_string(),
+            fmt_duration(r.mean),
+            format!("{evs:.3e}"),
+        ]);
+    }
+
+    // Engine macro-bench: faulted + streaming, arena reused across
+    // iterations so allocation cost amortizes exactly as it does in the
+    // sweep orchestrator.
+    let seed = cfg.sim.seed;
+    let env = SimEnv::build(cfg, seed);
+    let opts = SimOptions::from_config(cfg);
+    let trace = record_trace(&env, seed, &opts);
+    let es = cfg.network.num_eds;
+    let schedule = FaultSchedule::from_events(vec![
+        FaultEvent { time_ms: 30.0 * opts.slot_ms, kind: FaultKind::NodeDown { node: es } },
+        FaultEvent { time_ms: 32.0 * opts.slot_ms, kind: FaultKind::NodeDown { node: es + 1 } },
+        FaultEvent { time_ms: 70.0 * opts.slot_ms, kind: FaultKind::NodeUp { node: es } },
+        FaultEvent { time_ms: 72.0 * opts.slot_ms, kind: FaultKind::NodeUp { node: es + 1 } },
+    ]);
+    let mut dopts = DesOptions::from_sim(&opts);
+    dopts.streaming = true;
+    let mut arena: DesArena = DesArena::new();
+    let mut events = 0u64;
+    let name = format!("engine/{strat_name} faulted+streaming");
+    let r = bench(&name, 1, iters, || {
+        let mut strategy = make_strategy(strat_name).expect("bench strategy");
+        let m = run_des_trial_faulted_in(
+            &mut arena,
+            &env,
+            strategy.as_mut(),
+            seed,
+            &dopts,
+            &trace,
+            &schedule,
+        );
+        events = m.des_events;
+    });
+    let evs = events as f64 / (r.mean_ns() / 1e9);
+    rows.push(vec![name, events.to_string(), fmt_duration(r.mean), format!("{evs:.3e}")]);
+
+    let title = "DES perf — calendar push/pop and engine throughput";
+    print_data_table(title, &headers, &rows);
+    if let Ok(path) = std::env::var("FMEDGE_BENCH_JSON") {
+        save_json(&path, title, &headers, &rows)?;
+        println!("\nbench rows saved to {path}");
     }
     Ok(())
 }

@@ -17,11 +17,21 @@ pub use stats::{kde_violin, quantile, Summary, ViolinData};
 /// the DES engine; the slotted engine leaves these empty.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct ServiceObs {
-    /// Sojourn-time distribution (ms).
+    /// Sojourn-time distribution (ms). Recorded in both retained and
+    /// streaming modes, so count/mean/max/quantiles are always available.
     pub sojourn: Histogram,
     /// Raw `(decision parallelism y, sojourn ms)` pairs — the bound
     /// validation compares each sample against `g_{m,ε}(y)` at its own y.
+    /// Empty in streaming mode (the comparison happens at record time).
     pub samples: Vec<(u32, f64)>,
+    /// Executions whose sojourn exceeded the analytic bound at their
+    /// committed y. Maintained by [`Self::record_streamed`] only; with
+    /// retained samples `des::validate` recomputes it from `samples`.
+    pub violations: u64,
+    /// Sum of the per-execution bounds `g_{m,ε}(y)` seen by
+    /// [`Self::record_streamed`] (for the mean-bound column of the
+    /// validation report without retained samples).
+    pub sum_bound_ms: f64,
 }
 
 impl ServiceObs {
@@ -30,12 +40,25 @@ impl ServiceObs {
         ServiceObs {
             sojourn: Histogram::latency_ms(),
             samples: Vec::new(),
+            violations: 0,
+            sum_bound_ms: 0.0,
         }
     }
 
     pub fn record(&mut self, y: u32, sojourn_ms: f64) {
         self.sojourn.record(sojourn_ms);
         self.samples.push((y, sojourn_ms));
+    }
+
+    /// Streaming-mode record: the bound comparison happens now, against
+    /// the `g_{m,ε}(y)` value the caller looked up for this execution's
+    /// y, and only aggregates are retained.
+    pub fn record_streamed(&mut self, sojourn_ms: f64, bound_ms: f64) {
+        self.sojourn.record(sojourn_ms);
+        if sojourn_ms > bound_ms {
+            self.violations += 1;
+        }
+        self.sum_bound_ms += bound_ms;
     }
 }
 
@@ -81,6 +104,14 @@ pub struct TrialMetrics {
     /// Pending-work depth (controller queue + station FIFOs), sampled per
     /// controller tick (DES engine; empty under the slotted engine).
     pub queue_depth: Histogram,
+    /// End-to-end latency distribution of completed tasks. Filled by
+    /// [`MetricsCollector::finish`] in both modes; in streaming mode it
+    /// is the only latency record (`latencies_ms` stays empty) and
+    /// percentile queries resolve against it.
+    pub latency_hist: Histogram,
+    /// Calendar events processed by the DES engine (0 for slotted
+    /// trials) — the numerator of the events/sec throughput figure.
+    pub des_events: u64,
     /// Virtual-queue entries still tracked after the end-of-horizon drain.
     /// Every admitted task — finished, dropped, or faulted — must have
     /// been `remove()`d from [`crate::controller::VirtualQueues`] by then,
@@ -129,7 +160,10 @@ impl TrialMetrics {
     /// unsorted vec falls back to one defensive copy.
     pub fn latency_percentile(&self, p: f64) -> f64 {
         if self.latencies_ms.is_empty() {
-            return 0.0;
+            // Streaming trials keep no raw latencies; answer from the
+            // histogram (approximate within its owning bin). An empty
+            // histogram — a genuinely hollow trial — stays 0.0.
+            return self.latency_hist.quantile(p).unwrap_or(0.0);
         }
         if self.latencies_ms.windows(2).all(|w| w[0] <= w[1]) {
             return quantile(&self.latencies_ms, p);
@@ -141,6 +175,13 @@ impl TrialMetrics {
 }
 
 /// Accumulates outcomes during a trial.
+///
+/// Two storage modes. **Retained** (default): every outcome and sojourn
+/// sample is kept, `finish` folds them — bit-identical to historical
+/// behavior. **Streaming** ([`Self::enable_streaming`]): per-completion
+/// counter/histogram accumulation with nothing retained per task, so
+/// collector memory is O(bins) regardless of how many million tasks a
+/// trial admits.
 #[derive(Clone, Debug, Default)]
 pub struct MetricsCollector {
     outcomes: Vec<TaskOutcome>,
@@ -151,6 +192,16 @@ pub struct MetricsCollector {
     retries: usize,
     hedges: usize,
     checkpoint_restores: usize,
+    streaming: bool,
+    /// `bounds[light_idx][y]` = `g_{m,ε}(y)` snapshot for streaming-mode
+    /// violation counting (y = 0 row mirrors y = 1, matching
+    /// `GTable::delay`'s clamp).
+    bounds: Vec<Vec<f64>>,
+    total_tasks: usize,
+    completed: usize,
+    on_time: usize,
+    sum_deadline_ms: f64,
+    latency_hist: Histogram,
 }
 
 impl MetricsCollector {
@@ -165,11 +216,32 @@ impl MetricsCollector {
         self.queue_depth = Histogram::linear(0.0, 512.0, 128);
     }
 
+    /// Switch to streaming accumulation. `bounds[light_idx][y]` supplies
+    /// the analytic sojourn bound each execution is checked against at
+    /// record time (indexes past the row end clamp to its last entry,
+    /// the same clamp `GTable::delay` applies). Call before the first
+    /// `record`/`record_sojourn`.
+    pub fn enable_streaming(&mut self, bounds: Vec<Vec<f64>>) {
+        self.streaming = true;
+        self.bounds = bounds;
+        self.latency_hist = Histogram::latency_ms();
+    }
+
     /// Record one measured light-service sojourn (wait + service, ms) at
     /// the parallelism level `y` the controller committed to.
     pub fn record_sojourn(&mut self, light_idx: usize, y: u32, sojourn_ms: f64) {
         if let Some(obs) = self.service_obs.get_mut(light_idx) {
-            obs.record(y, sojourn_ms);
+            if self.streaming {
+                let bound = self
+                    .bounds
+                    .get(light_idx)
+                    .and_then(|row| row.get((y as usize).min(row.len().saturating_sub(1))))
+                    .copied()
+                    .unwrap_or(f64::INFINITY);
+                obs.record_streamed(sojourn_ms, bound);
+            } else {
+                obs.record(y, sojourn_ms);
+            }
         }
     }
 
@@ -179,7 +251,19 @@ impl MetricsCollector {
     }
 
     pub fn record(&mut self, o: TaskOutcome) {
-        self.outcomes.push(o);
+        if self.streaming {
+            self.total_tasks += 1;
+            self.sum_deadline_ms += o.deadline_ms;
+            if let Some(l) = o.latency_ms {
+                self.completed += 1;
+                if o.on_time() {
+                    self.on_time += 1;
+                }
+                self.latency_hist.record(l);
+            }
+        } else {
+            self.outcomes.push(o);
+        }
     }
 
     /// Count one unrecoverable fault casualty (the task outcome itself is
@@ -209,15 +293,47 @@ impl MetricsCollector {
     }
 
     pub fn len(&self) -> usize {
-        self.outcomes.len()
+        if self.streaming {
+            self.total_tasks
+        } else {
+            self.outcomes.len()
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.outcomes.is_empty()
+        self.len() == 0
     }
 
     /// Fold into trial metrics, attaching the cost book's totals.
     pub fn finish(self, costs: &CostBook) -> TrialMetrics {
+        let b = costs.breakdown();
+        if self.streaming {
+            let mean_deadline_ms = if self.total_tasks > 0 {
+                self.sum_deadline_ms / self.total_tasks as f64
+            } else {
+                0.0
+            };
+            return TrialMetrics {
+                total_tasks: self.total_tasks,
+                completed: self.completed,
+                on_time: self.on_time,
+                total_cost: b.total(),
+                core_cost: b.core_total(),
+                light_cost: b.light_total(),
+                latencies_ms: Vec::new(),
+                mean_deadline_ms,
+                service_obs: self.service_obs,
+                queue_depth: self.queue_depth,
+                latency_hist: self.latency_hist,
+                des_events: 0,
+                vq_residual: 0,
+                fault_drops: self.fault_drops,
+                reroute_recovered: self.reroute_recovered,
+                retries: self.retries,
+                hedges: self.hedges,
+                checkpoint_restores: self.checkpoint_restores,
+            };
+        }
         let total_tasks = self.outcomes.len();
         let completed = self.outcomes.iter().filter(|o| o.completed()).count();
         let on_time = self.outcomes.iter().filter(|o| o.on_time()).count();
@@ -230,12 +346,17 @@ impl MetricsCollector {
         // makes the stream insensitive to engine completion order, so
         // paired slotted-vs-DES comparisons diff multisets, not schedules.
         latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // Fill the histogram here too, so the field is mode-independent
+        // (a deterministic function of the latency multiset either way).
+        let mut latency_hist = Histogram::latency_ms();
+        for &l in &latencies_ms {
+            latency_hist.record(l);
+        }
         let mean_deadline_ms = if total_tasks > 0 {
             self.outcomes.iter().map(|o| o.deadline_ms).sum::<f64>() / total_tasks as f64
         } else {
             0.0
         };
-        let b = costs.breakdown();
         TrialMetrics {
             total_tasks,
             completed,
@@ -247,6 +368,8 @@ impl MetricsCollector {
             mean_deadline_ms,
             service_obs: self.service_obs,
             queue_depth: self.queue_depth,
+            latency_hist,
+            des_events: 0,
             vq_residual: 0,
             fault_drops: self.fault_drops,
             reroute_recovered: self.reroute_recovered,
@@ -368,6 +491,52 @@ mod tests {
         drops.record(outcome(None, 20.0)); // admitted but never completed
         let m = drops.finish(&CostBook::default());
         assert_eq!(m.latency_percentile(0.5), 0.0);
+    }
+
+    #[test]
+    fn streaming_counts_match_retained() {
+        // The streaming collector must agree with the retained one on
+        // every aggregate: counts, rates, mean deadline, histogram-level
+        // latency distribution, and per-service sojourn aggregates.
+        let mut ret = MetricsCollector::new();
+        let mut str_ = MetricsCollector::new();
+        ret.enable_service_obs(2);
+        str_.enable_service_obs(2);
+        // Bound 10ms at every y for service 0, 4ms for service 1.
+        str_.enable_streaming(vec![vec![10.0; 3], vec![4.0; 3]]);
+        for c in [&mut ret, &mut str_] {
+            c.record(outcome(Some(10.0), 20.0)); // on time
+            c.record(outcome(Some(30.0), 20.0)); // late
+            c.record(outcome(None, 20.0)); // dropped
+            c.record_sojourn(0, 1, 5.0); // within bound
+            c.record_sojourn(0, 2, 12.0); // violates 10.0
+            c.record_sojourn(1, 1, 3.0); // within bound
+        }
+        let r = ret.finish(&CostBook::default());
+        let s = str_.finish(&CostBook::default());
+        assert_eq!((s.total_tasks, s.completed, s.on_time), (3, 2, 1));
+        assert_eq!(s.total_tasks, r.total_tasks);
+        assert_eq!(s.mean_deadline_ms, r.mean_deadline_ms);
+        assert_eq!(s.latency_hist, r.latency_hist);
+        assert!(s.latencies_ms.is_empty(), "streaming retains no raw latencies");
+        assert!(s.service_obs[0].samples.is_empty());
+        assert_eq!(s.service_obs[0].sojourn.count(), 2);
+        assert_eq!(s.service_obs[0].violations, 1);
+        assert!((s.service_obs[0].sum_bound_ms - 20.0).abs() < 1e-12);
+        assert_eq!(s.service_obs[1].violations, 0);
+        // Percentiles answer from the histogram, approximately.
+        let p50 = s.latency_percentile(0.5);
+        assert!(p50 > 0.0 && (p50 - r.latency_percentile(0.5)).abs() / p50 < 0.2);
+    }
+
+    #[test]
+    fn streaming_bound_lookup_clamps_y() {
+        let mut c = MetricsCollector::new();
+        c.enable_service_obs(1);
+        c.enable_streaming(vec![vec![10.0, 10.0, 4.0]]); // y=2 → 4.0
+        c.record_sojourn(0, 9, 5.0); // y past the row end clamps to 4.0
+        let m = c.finish(&CostBook::default());
+        assert_eq!(m.service_obs[0].violations, 1);
     }
 
     #[test]

@@ -210,6 +210,31 @@ impl ScenarioSpec {
         )
     }
 
+    /// Metro-scale composite (§P8): the million-user throughput target.
+    /// Diurnal load with commuter churn and rack-correlated outages —
+    /// the same composite stress as [`Self::rush_hour`] but built for
+    /// scale runs: pair it with a config raising `workload.num_users`
+    /// (10^5–10^6) and the DES in streaming-metrics mode. The spec
+    /// itself adds no per-user state; compiled size is all in the trace.
+    pub fn metro_1m() -> Self {
+        Self::new(
+            "metro-1m",
+            ArrivalProcess::Diurnal {
+                period_slots: 400,
+                amplitude: 0.5,
+                phase: 0.25,
+            },
+            MobilityModel::Commuter {
+                half_period_slots: 120,
+            },
+            FaultTemplate::ZoneOutage {
+                zones: 3,
+                zone_outage_per_slot: 0.002,
+                mean_outage_slots: 25.0,
+            },
+        )
+    }
+
     /// The full library, in presentation order.
     pub fn library() -> Vec<ScenarioSpec> {
         vec![
@@ -222,6 +247,7 @@ impl ScenarioSpec {
             Self::zone_outage(),
             Self::cascade(),
             Self::rush_hour(),
+            Self::metro_1m(),
         ]
     }
 

@@ -21,7 +21,9 @@ fn tiny_p4() -> SweepConfig {
     sc.loads = vec![1.0, 2.0];
     sc.rates = vec![0.0, 0.01];
     sc.strategies = vec!["proposal".into()];
-    sc.engines = vec!["slotted".into()];
+    // Both engines: the DES rows exercise the per-cell arena reuse,
+    // which must stay bit-identical across thread counts.
+    sc.engines = vec!["slotted".into(), "des".into()];
     sc
 }
 
@@ -50,8 +52,8 @@ fn p4_grid_shape_and_retained_baseline() {
     sc.threads = 2;
     let table = run_sweep(&cfg, &sc).expect("sweep");
     table.validate().expect("well-formed");
-    // engines(1) x loads(2) x strategies(1) x rates(2).
-    assert_eq!(table.rows.len(), 4);
+    // engines(2) x loads(2) x strategies(1) x rates(2).
+    assert_eq!(table.rows.len(), 8);
     let col = |name: &str| {
         table
             .headers
