@@ -1,0 +1,157 @@
+//! Checked-in lint baselines: CI fails only on *new* findings.
+//!
+//! A baseline entry keys on `(rule, file, trimmed source line)` — not on
+//! the line number — so unrelated edits that shift code do not invalidate
+//! it. Every entry must carry a written justification; an entry without
+//! one fails to parse, which makes an unjustified suppression a red
+//! build rather than silent debt.
+//!
+//! File format (line-oriented, `#` comments and blank lines ignored):
+//!
+//! ```text
+//! <rule> @ <file> @ <trimmed source line> # <justification>
+//! ```
+
+use super::rules::{Finding, Rule};
+
+/// One baseline entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BaselineEntry {
+    pub rule: Rule,
+    pub file: String,
+    pub snippet: String,
+    pub justification: String,
+}
+
+/// A parsed baseline file.
+#[derive(Clone, Debug, Default)]
+pub struct Baseline {
+    pub entries: Vec<BaselineEntry>,
+}
+
+impl Baseline {
+    /// Parse the baseline format. Errors carry the offending line number.
+    pub fn parse(text: &str) -> Result<Baseline, String> {
+        let mut entries = Vec::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let lineno = idx + 1;
+            // The justification is everything after the *last* " # "
+            // (trimmed source lines are Rust code, whose comments are
+            // `//`, so a bare ` # ` cannot appear in the snippet).
+            let (head, justification) = match line.rsplit_once(" # ") {
+                Some((h, j)) if !j.trim().is_empty() => (h, j.trim().to_string()),
+                _ => {
+                    return Err(format!(
+                        "baseline line {lineno}: missing ` # <justification>` — every \
+                         baseline entry must say why it is acceptable"
+                    ))
+                }
+            };
+            let mut parts = head.splitn(3, " @ ");
+            let (rule, file, snippet) = match (parts.next(), parts.next(), parts.next()) {
+                (Some(r), Some(f), Some(s)) => (r.trim(), f.trim(), s.trim()),
+                _ => {
+                    return Err(format!(
+                        "baseline line {lineno}: expected `<rule> @ <file> @ <snippet> # \
+                         <justification>`"
+                    ))
+                }
+            };
+            let rule = Rule::from_name(rule)
+                .ok_or_else(|| format!("baseline line {lineno}: unknown rule `{rule}`"))?;
+            if snippet.is_empty() {
+                return Err(format!("baseline line {lineno}: empty snippet"));
+            }
+            entries.push(BaselineEntry {
+                rule,
+                file: file.to_string(),
+                snippet: snippet.to_string(),
+                justification,
+            });
+        }
+        Ok(Baseline { entries })
+    }
+
+    /// Serialize back to the file format (header comment included).
+    pub fn render(&self) -> String {
+        let mut out = String::from(
+            "# fmedge lint baseline — findings the repo has explicitly accepted.\n\
+             # Format: <rule> @ <file> @ <trimmed source line> # <justification>\n\
+             # An entry without a justification fails to parse; prefer fixing the\n\
+             # finding or an inline `// lint: allow(rule): <why>` over adding here.\n",
+        );
+        for e in &self.entries {
+            out.push_str(&format!(
+                "{} @ {} @ {} # {}\n",
+                e.rule.name(),
+                e.file,
+                e.snippet,
+                e.justification
+            ));
+        }
+        out
+    }
+
+    /// Build a baseline that accepts exactly `findings` (used by
+    /// `fmedge lint --write-baseline`). The placeholder justification is
+    /// deliberately loud: the file parses, but a reviewer sees TODOs.
+    pub fn from_findings(findings: &[Finding]) -> Baseline {
+        let mut entries: Vec<BaselineEntry> = findings
+            .iter()
+            .map(|f| BaselineEntry {
+                rule: f.rule,
+                file: f.file.clone(),
+                snippet: f.snippet.clone(),
+                justification: "TODO: justify or fix".to_string(),
+            })
+            .collect();
+        entries.dedup_by(|a, b| a == b);
+        Baseline { entries }
+    }
+
+    fn matches(&self, f: &Finding) -> Option<usize> {
+        self.entries
+            .iter()
+            .position(|e| e.rule == f.rule && e.file == f.file && e.snippet == f.snippet)
+    }
+
+    /// Split findings into (new, suppressed-count) and report baseline
+    /// entries that matched nothing (stale — candidates for deletion).
+    pub fn filter(&self, findings: Vec<Finding>) -> BaselineResult {
+        let mut used = vec![false; self.entries.len()];
+        let mut new = Vec::new();
+        let mut suppressed = 0usize;
+        for f in findings {
+            match self.matches(&f) {
+                Some(k) => {
+                    used[k] = true;
+                    suppressed += 1;
+                }
+                None => new.push(f),
+            }
+        }
+        let stale = self
+            .entries
+            .iter()
+            .zip(&used)
+            .filter(|&(_, &u)| !u)
+            .map(|(e, _)| format!("{} @ {} @ {}", e.rule.name(), e.file, e.snippet))
+            .collect();
+        BaselineResult { new, suppressed, stale }
+    }
+}
+
+/// Outcome of filtering findings through a baseline.
+#[derive(Clone, Debug, Default)]
+pub struct BaselineResult {
+    /// Findings not covered by the baseline — these gate `--deny`.
+    pub new: Vec<Finding>,
+    /// How many findings the baseline absorbed.
+    pub suppressed: usize,
+    /// Baseline entries that matched nothing (printed as warnings).
+    pub stale: Vec<String>,
+}

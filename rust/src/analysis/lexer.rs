@@ -1,0 +1,468 @@
+//! A minimal hand-rolled Rust lexer for the determinism lint.
+//!
+//! The lint rules ([`crate::analysis::rules`]) pattern-match token
+//! sequences, so the lexer's one job is to never emit a token from inside
+//! a comment, string, raw string, byte string, or char literal — a
+//! `HashMap` mentioned in a doc comment must not fire `hash-iter`. It is
+//! *not* a full Rust lexer: multi-character operators come out as single
+//! `Punct` chars (`::` is two `:` tokens) and numeric literals keep their
+//! raw text, which is all the rule passes need.
+//!
+//! Comments are preserved on a side channel (with their line numbers) so
+//! the suppression pass can find `// lint: allow(rule): reason`
+//! directives.
+
+/// Token classes coarse enough for rule matching.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`HashMap`, `unsafe`, `use`, …).
+    Ident,
+    /// Lifetime (`'a`, `'static`) — distinguished from char literals.
+    Lifetime,
+    /// Numeric literal, raw text (`42`, `0xBE7C`, `1_000.0e-3`).
+    Num,
+    /// String literal of any flavor (`"…"`, `r#"…"#`, `b"…"`).
+    Str,
+    /// Char or byte literal (`'x'`, `b'\n'`).
+    Char,
+    /// Single punctuation character.
+    Punct,
+}
+
+/// One token with its 1-indexed source line.
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// One comment (line or block, delimiters included) at its start line.
+#[derive(Clone, Debug)]
+pub struct Comment {
+    pub line: u32,
+    pub text: String,
+}
+
+/// Lexer output: the token stream plus the comment side channel.
+#[derive(Clone, Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub comments: Vec<Comment>,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+struct Scanner {
+    chars: Vec<char>,
+    pos: usize,
+    line: u32,
+}
+
+impl Scanner {
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.pos + ahead).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.chars.get(self.pos).copied();
+        if let Some(c) = c {
+            self.pos += 1;
+            if c == '\n' {
+                self.line += 1;
+            }
+        }
+        c
+    }
+
+    /// Consume an identifier body starting at the current position.
+    fn ident(&mut self) -> String {
+        let mut s = String::new();
+        while let Some(c) = self.peek(0) {
+            if is_ident_continue(c) {
+                s.push(c);
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        s
+    }
+
+    /// Consume a `"…"` body (opening quote already consumed), honoring
+    /// `\"` and `\\` escapes. Returns the raw body text.
+    fn string_body(&mut self) -> String {
+        let mut s = String::new();
+        while let Some(c) = self.bump() {
+            match c {
+                '\\' => {
+                    s.push(c);
+                    if let Some(e) = self.bump() {
+                        s.push(e);
+                    }
+                }
+                '"' => break,
+                _ => s.push(c),
+            }
+        }
+        s
+    }
+
+    /// Consume a raw-string body after `r##…"`, terminated by `"` + the
+    /// same number of hashes.
+    fn raw_string_body(&mut self, hashes: usize) -> String {
+        let mut s = String::new();
+        while let Some(c) = self.bump() {
+            if c == '"' && (0..hashes).all(|k| self.peek(k) == Some('#')) {
+                for _ in 0..hashes {
+                    self.bump();
+                }
+                break;
+            }
+            s.push(c);
+        }
+        s
+    }
+
+    /// Consume a block comment (opening `/*` already consumed), with
+    /// nesting. Returns the body including nested delimiters.
+    fn block_comment_body(&mut self) -> String {
+        let mut s = String::new();
+        let mut depth = 1usize;
+        while let Some(c) = self.bump() {
+            if c == '*' && self.peek(0) == Some('/') {
+                self.bump();
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+                s.push_str("*/");
+            } else if c == '/' && self.peek(0) == Some('*') {
+                self.bump();
+                depth += 1;
+                s.push_str("/*");
+            } else {
+                s.push(c);
+            }
+        }
+        s
+    }
+}
+
+/// Lex one source file. Never panics on malformed input: unterminated
+/// literals simply run to end-of-file (the lint is advisory tooling, not
+/// a compiler front end).
+pub fn lex(src: &str) -> Lexed {
+    let mut sc = Scanner { chars: src.chars().collect(), pos: 0, line: 1 };
+    let mut out = Lexed::default();
+    while let Some(c) = sc.peek(0) {
+        let line = sc.line;
+        match c {
+            c if c.is_whitespace() => {
+                sc.bump();
+            }
+            '/' if sc.peek(1) == Some('/') => {
+                let mut text = String::new();
+                while let Some(c) = sc.peek(0) {
+                    if c == '\n' {
+                        break;
+                    }
+                    text.push(c);
+                    sc.bump();
+                }
+                out.comments.push(Comment { line, text });
+            }
+            '/' if sc.peek(1) == Some('*') => {
+                sc.bump();
+                sc.bump();
+                let body = sc.block_comment_body();
+                out.comments.push(Comment { line, text: format!("/*{body}*/") });
+            }
+            '"' => {
+                sc.bump();
+                let body = sc.string_body();
+                out.tokens.push(Token { kind: TokKind::Str, text: body, line });
+            }
+            '\'' => {
+                sc.bump();
+                match sc.peek(0) {
+                    Some('\\') => {
+                        // Escaped char literal: consume escape then the
+                        // rest up to the closing quote ('\u{1F600}').
+                        sc.bump();
+                        sc.bump();
+                        let mut text = String::from("\\");
+                        while let Some(c) = sc.peek(0) {
+                            if c == '\'' {
+                                sc.bump();
+                                break;
+                            }
+                            text.push(c);
+                            sc.bump();
+                        }
+                        out.tokens.push(Token { kind: TokKind::Char, text, line });
+                    }
+                    Some(c0) if is_ident_start(c0) => {
+                        let name = sc.ident();
+                        if sc.peek(0) == Some('\'') {
+                            sc.bump();
+                            out.tokens.push(Token { kind: TokKind::Char, text: name, line });
+                        } else {
+                            out.tokens.push(Token { kind: TokKind::Lifetime, text: name, line });
+                        }
+                    }
+                    Some(c0) => {
+                        sc.bump();
+                        if sc.peek(0) == Some('\'') {
+                            sc.bump();
+                        }
+                        out.tokens.push(Token {
+                            kind: TokKind::Char,
+                            text: c0.to_string(),
+                            line,
+                        });
+                    }
+                    None => {
+                        out.tokens.push(Token {
+                            kind: TokKind::Punct,
+                            text: "'".to_string(),
+                            line,
+                        });
+                    }
+                }
+            }
+            'r' | 'b' if raw_or_byte_literal(&sc) => {
+                // r"…", r#"…"#, b"…", br#"…"#, b'…', or a raw identifier
+                // r#ident — disambiguated by `raw_or_byte_literal`.
+                lex_raw_or_byte(&mut sc, &mut out, line);
+            }
+            c if is_ident_start(c) => {
+                let text = sc.ident();
+                out.tokens.push(Token { kind: TokKind::Ident, text, line });
+            }
+            c if c.is_ascii_digit() => {
+                let text = number(&mut sc);
+                out.tokens.push(Token { kind: TokKind::Num, text, line });
+            }
+            c => {
+                sc.bump();
+                out.tokens.push(Token { kind: TokKind::Punct, text: c.to_string(), line });
+            }
+        }
+    }
+    out
+}
+
+/// Does the scanner sit on a raw-string / byte-literal prefix rather
+/// than a plain identifier starting with `r` or `b`?
+fn raw_or_byte_literal(sc: &Scanner) -> bool {
+    match (sc.peek(0), sc.peek(1)) {
+        (Some('b'), Some('\'')) | (Some('b'), Some('"')) => true,
+        (Some('b'), Some('r')) => {
+            matches!(sc.peek(2), Some('"') | Some('#'))
+        }
+        (Some('r'), Some('"')) => true,
+        (Some('r'), Some('#')) => {
+            // r#"…"# raw string, or r#ident raw identifier — both leave
+            // the plain-ident path; `lex_raw_or_byte` tells them apart.
+            true
+        }
+        _ => false,
+    }
+}
+
+fn lex_raw_or_byte(sc: &mut Scanner, out: &mut Lexed, line: u32) {
+    let byte = sc.peek(0) == Some('b');
+    if byte {
+        sc.bump(); // consume 'b'
+    }
+    match sc.peek(0) {
+        Some('\'') => {
+            // b'…' byte literal: reuse the char path.
+            sc.bump();
+            let mut text = String::new();
+            if sc.peek(0) == Some('\\') {
+                text.push('\\');
+                sc.bump();
+                if let Some(e) = sc.bump() {
+                    text.push(e);
+                }
+            } else if let Some(c) = sc.bump() {
+                text.push(c);
+            }
+            if sc.peek(0) == Some('\'') {
+                sc.bump();
+            }
+            out.tokens.push(Token { kind: TokKind::Char, text, line });
+        }
+        Some('"') => {
+            sc.bump();
+            let body = sc.string_body();
+            out.tokens.push(Token { kind: TokKind::Str, text: body, line });
+        }
+        Some('r') => {
+            // `r"…"`, `r#"…"#`, `br"…"`, `br#"…"#`, or raw ident `r#x`.
+            sc.bump(); // the 'r'
+            let mut hashes = 0usize;
+            while sc.peek(0) == Some('#') {
+                hashes += 1;
+                sc.bump();
+            }
+            if sc.peek(0) == Some('"') {
+                sc.bump();
+                let body = sc.raw_string_body(hashes);
+                out.tokens.push(Token { kind: TokKind::Str, text: body, line });
+            } else {
+                // Raw identifier `r#match` — emit the name as an Ident.
+                let text = sc.ident();
+                out.tokens.push(Token { kind: TokKind::Ident, text, line });
+            }
+        }
+        _ => {
+            // Guard said literal but the stream disagrees (malformed
+            // source): emit what sits here as an identifier.
+            let mut text = String::new();
+            if byte {
+                text.push('b');
+            }
+            text.push_str(&sc.ident());
+            out.tokens.push(Token { kind: TokKind::Ident, text, line });
+        }
+    }
+}
+
+/// Numeric literal: digits, `_`, hex/bin/oct bodies, a fractional part
+/// when `.` is followed by a digit, and `e±` exponents. Suffixes
+/// (`f64`, `u32`) ride along via the alphanumeric scan.
+fn number(sc: &mut Scanner) -> String {
+    let mut s = String::new();
+    loop {
+        match sc.peek(0) {
+            Some(c) if is_ident_continue(c) => {
+                s.push(c);
+                sc.bump();
+                // `1e-9` / `2E+5`: a sign directly after the exponent
+                // marker belongs to the literal.
+                if (c == 'e' || c == 'E')
+                    && !s.starts_with("0x")
+                    && !s.starts_with("0X")
+                    && matches!(sc.peek(0), Some('+') | Some('-'))
+                    && sc.peek(1).is_some_and(|d| d.is_ascii_digit())
+                {
+                    s.push(sc.bump().unwrap());
+                }
+            }
+            Some('.') if sc.peek(1).is_some_and(|d| d.is_ascii_digit()) && !s.contains('.') => {
+                s.push('.');
+                sc.bump();
+            }
+            _ => break,
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.clone())
+            .collect()
+    }
+
+    #[test]
+    fn strings_hide_tokens() {
+        let l = lex("let s = \"HashMap::new() // not a comment\"; s.len();");
+        assert!(idents("let s = \"HashMap::new()\";").iter().all(|i| i != "HashMap"));
+        assert_eq!(l.comments.len(), 0);
+        assert!(l.tokens.iter().any(|t| t.kind == TokKind::Str));
+    }
+
+    #[test]
+    fn escaped_quote_does_not_end_string() {
+        let ids = idents(r#"let s = "a\"HashMap\""; let t = 1;"#);
+        assert!(!ids.contains(&"HashMap".to_string()));
+        assert!(ids.contains(&"t".to_string()));
+    }
+
+    #[test]
+    fn raw_strings_hide_tokens() {
+        let ids = idents(r###"let s = r#"unsafe { Instant::now() }"#; let after = 2;"###);
+        assert!(!ids.contains(&"unsafe".to_string()));
+        assert!(!ids.contains(&"Instant".to_string()));
+        assert!(ids.contains(&"after".to_string()));
+    }
+
+    #[test]
+    fn line_and_block_comments_are_side_channel() {
+        let l = lex("// HashMap here\nlet x = 1; /* SystemTime\n multi */ let y = 2;");
+        let ids: Vec<_> =
+            l.tokens.iter().filter(|t| t.kind == TokKind::Ident).map(|t| &t.text).collect();
+        assert!(!ids.iter().any(|i| *i == "HashMap" || *i == "SystemTime"));
+        assert_eq!(l.comments.len(), 2);
+        assert_eq!(l.comments[0].line, 1);
+        assert_eq!(l.comments[1].line, 2);
+        // Line counting continues through the multi-line block comment.
+        assert_eq!(
+            l.tokens.iter().find(|t| t.text == "y").unwrap().line,
+            3
+        );
+    }
+
+    #[test]
+    fn nested_block_comment() {
+        let ids = idents("/* outer /* inner unsafe */ still comment */ let ok = 1;");
+        assert!(!ids.contains(&"unsafe".to_string()));
+        assert!(ids.contains(&"ok".to_string()));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let l = lex("fn f<'a>(x: &'a str) { let c = 'x'; let nl = '\\n'; }");
+        let lifetimes: Vec<_> =
+            l.tokens.iter().filter(|t| t.kind == TokKind::Lifetime).map(|t| &t.text).collect();
+        assert_eq!(lifetimes, vec!["a", "a"]);
+        let chars: Vec<_> =
+            l.tokens.iter().filter(|t| t.kind == TokKind::Char).map(|t| &t.text).collect();
+        assert_eq!(chars.len(), 2);
+    }
+
+    #[test]
+    fn static_lifetime_is_not_a_char() {
+        let l = lex("const S: &'static str = \"x\";");
+        assert!(l.tokens.iter().any(|t| t.kind == TokKind::Lifetime && t.text == "static"));
+    }
+
+    #[test]
+    fn numbers_keep_raw_text() {
+        let l = lex("let a = 0xBE7C; let b = 1_000.5e-3f64; let r = 0..10;");
+        let nums: Vec<_> =
+            l.tokens.iter().filter(|t| t.kind == TokKind::Num).map(|t| t.text.clone()).collect();
+        assert_eq!(nums, vec!["0xBE7C", "1_000.5e-3f64", "0", "10"]);
+    }
+
+    #[test]
+    fn byte_literals() {
+        let ids = idents("let b = b\"unsafe\"; let c = b'x'; let keep = 1;");
+        assert!(!ids.contains(&"unsafe".to_string()));
+        assert!(ids.contains(&"keep".to_string()));
+    }
+
+    #[test]
+    fn line_numbers_are_one_indexed() {
+        let l = lex("a\nb\nc");
+        let lines: Vec<u32> = l.tokens.iter().map(|t| t.line).collect();
+        assert_eq!(lines, vec![1, 2, 3]);
+    }
+}

@@ -1,0 +1,136 @@
+//! # Determinism lint — machine-checked replay invariants.
+//!
+//! Every result this reproduction publishes rests on one property:
+//! seeded trials are **bit-identical** across the slotted engine, the
+//! DES, the `ReplayServer`, and the parallel sweep orchestrator. That is
+//! what lets the EXPERIMENTS tables, the `P(delay > g_{m,ε}(y)) ≤ ε`
+//! validation, and the fault-replay comparisons be paired at all. This
+//! module makes the property a *static gate* instead of a reviewer's
+//! memory: a dependency-free analysis pass over the crate's own sources
+//! (hand-rolled lexer in [`lexer`], token-stream rule passes in
+//! [`rules`], checked-in baselines in [`baseline`]).
+//!
+//! Run it as `fmedge lint [--deny] [--baseline PATH]` — it walks
+//! `rust/src`, `rust/tests`, `rust/benches`, and `examples/`, prints
+//! findings as `file:line: rule: message`, and exits nonzero under
+//! `--deny` when a finding is not covered by an inline
+//! `// lint: allow(<rule>): <reason>` or the baseline file. See
+//! EXPERIMENTS.md §P9 for the rule table and workflow.
+//!
+//! Honors the crate's intentionally empty `[dependencies]`: no syn, no
+//! regex — the lexer handles line/block comments, strings, raw strings,
+//! and char literals so rules can never fire inside a literal, and the
+//! rules are plain scans over the token stream.
+
+pub mod baseline;
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+pub use baseline::{Baseline, BaselineEntry, BaselineResult};
+pub use lexer::{lex, Lexed, TokKind, Token};
+pub use report::LintReport;
+pub use rules::{
+    apply_allows, module_of, parse_directives, run_rules, Finding, Rule,
+    DETERMINISTIC_MODULES, RNG_DISCIPLINE_MODULES,
+};
+
+use std::path::{Path, PathBuf};
+
+/// Directories scanned by a full run, relative to the repo root.
+pub const SCAN_DIRS: &[&str] = &["rust/src", "rust/tests", "rust/benches", "examples"];
+
+/// Default baseline location, relative to the repo root.
+pub const DEFAULT_BASELINE: &str = "rust/lint-baseline.txt";
+
+/// Lint one in-memory source file. `path` must be repo-root-relative
+/// with `/` separators (it keys the module-path rules and the output).
+/// Inline allow directives are applied; baselines are the caller's job.
+pub fn lint_source(path: &str, src: &str) -> Vec<Finding> {
+    let lexed = lexer::lex(src);
+    let findings = rules::run_rules(path, &lexed);
+    let directives = rules::parse_directives(&lexed.comments);
+    let mut findings = rules::apply_allows(path, findings, &directives);
+    let lines: Vec<&str> = src.lines().collect();
+    for f in &mut findings {
+        f.snippet = lines
+            .get(f.line as usize - 1)
+            .map(|l| l.trim().to_string())
+            .unwrap_or_default();
+    }
+    findings
+}
+
+/// Recursively collect `.rs` files under `dir`, sorted by path so runs
+/// are deterministic regardless of directory-entry order.
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<PathBuf> =
+        std::fs::read_dir(dir)?.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs_files(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Find the repo root from the current directory: the first of `.` and
+/// `..` containing `rust/src` (so the CLI works from the repo root and
+/// from `rust/`, where cargo runs it).
+pub fn detect_root() -> Result<PathBuf, String> {
+    for cand in [".", ".."] {
+        let c = PathBuf::from(cand);
+        if c.join("rust/src").is_dir() {
+            return Ok(c);
+        }
+    }
+    Err("cannot find `rust/src` from the current directory (pass --root PATH)".to_string())
+}
+
+/// Run the full lint over the tree at `root`. `baseline` is applied when
+/// given. Missing scan directories are skipped (`examples/` may be
+/// absent in a stripped checkout); unreadable files are errors.
+pub fn run_lint(root: &Path, baseline: Option<&Baseline>) -> Result<LintReport, String> {
+    let mut files = Vec::new();
+    for dir in SCAN_DIRS {
+        let d = root.join(dir);
+        if d.is_dir() {
+            collect_rs_files(&d, &mut files)
+                .map_err(|e| format!("walking {}: {e}", d.display()))?;
+        }
+    }
+    let mut all = Vec::new();
+    for path in &files {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        let rel = rel_path(root, path);
+        all.extend(lint_source(&rel, &src));
+    }
+    all.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    let (new, suppressed, stale) = match baseline {
+        Some(b) => {
+            let r = b.filter(all);
+            (r.new, r.suppressed, r.stale)
+        }
+        None => (all, 0, Vec::new()),
+    };
+    Ok(LintReport {
+        findings: new,
+        files: files.len(),
+        baseline_suppressed: suppressed,
+        stale_baseline: stale,
+    })
+}
+
+/// Root-relative path with `/` separators (stable across platforms —
+/// it is the baseline key and the output format).
+fn rel_path(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}

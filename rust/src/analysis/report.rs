@@ -1,0 +1,46 @@
+//! Lint report aggregation and rendering.
+
+use super::rules::Finding;
+
+/// The result of one full lint run.
+#[derive(Clone, Debug, Default)]
+pub struct LintReport {
+    /// New findings (after allow-directive and baseline suppression),
+    /// sorted by (file, line, rule).
+    pub findings: Vec<Finding>,
+    /// Files scanned.
+    pub files: usize,
+    /// Findings absorbed by the baseline.
+    pub baseline_suppressed: usize,
+    /// Baseline entries that matched nothing (warned, never fatal —
+    /// deleting them is cleanup, not a gate).
+    pub stale_baseline: Vec<String>,
+}
+
+impl LintReport {
+    /// `file:line: rule: message` lines, one per finding, plus a
+    /// trailing summary. This is the CLI output and the CI artifact.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&f.render());
+            out.push('\n');
+        }
+        for s in &self.stale_baseline {
+            out.push_str(&format!("warning: stale baseline entry ({s}) — remove it\n"));
+        }
+        out.push_str(&format!(
+            "lint: {} finding{} in {} files ({} baselined)\n",
+            self.findings.len(),
+            if self.findings.len() == 1 { "" } else { "s" },
+            self.files,
+            self.baseline_suppressed,
+        ));
+        out
+    }
+
+    /// Does the run gate `--deny`?
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+}

@@ -1,0 +1,492 @@
+//! The determinism rule passes.
+//!
+//! Every rule is a pattern match over the token stream of one file,
+//! keyed by the file's module path. The rules encode the repo's replay
+//! invariants — the properties that make seeded trials bit-identical
+//! across the slotted engine, the DES, the `ReplayServer`, and the
+//! parallel sweep orchestrator:
+//!
+//! | rule            | invariant                                                        |
+//! |-----------------|------------------------------------------------------------------|
+//! | `hash-iter`     | no `HashMap`/`HashSet` in deterministic modules (iteration order is randomized per process) |
+//! | `wall-clock`    | no `Instant::now`/`SystemTime` outside the wall-clock allowlist  |
+//! | `float-cmp`     | no `partial_cmp(..).unwrap()/.expect()` comparators (NaN panics) — use `f64::total_cmp` |
+//! | `rng-discipline`| RNG streams derive from `rng::stream_seed`, never bare literals  |
+//! | `unsafe-forbid` | no `unsafe` anywhere (backed by `#![forbid(unsafe_code)]`)       |
+//!
+//! Suppression is explicit: `// lint: allow(<rule>): <reason>` on the
+//! finding's line or the line above. A directive without a written
+//! reason suppresses nothing, and a directive that suppresses nothing
+//! is itself a finding (`stale-allow`) — suppressions stay auditable.
+
+use super::lexer::{Comment, Lexed, TokKind, Token};
+
+/// Modules whose event/RNG streams must replay bit-identically. A
+/// randomized iteration order anywhere in these paths can leak into
+/// dispatch order, RNG consumption order, or float summation order.
+pub const DETERMINISTIC_MODULES: &[&str] =
+    &["sim", "des", "faults", "scenarios", "controller", "routing", "exp"];
+
+/// Modules whose RNG construction must go through
+/// [`crate::rng::stream_seed`] so per-cell/per-trial streams never alias.
+pub const RNG_DISCIPLINE_MODULES: &[&str] = &["sim", "exp", "scenarios"];
+
+/// Path prefixes where wall-clock reads are legitimate: the threaded
+/// serving path, the bench harness, CLI/experiment cell timing, and the
+/// demo binaries.
+pub const WALL_CLOCK_ALLOWED_PREFIXES: &[&str] =
+    &["rust/benches/", "examples/", "rust/src/coordinator/", "rust/src/exp/"];
+
+/// Single files on the wall-clock allowlist.
+pub const WALL_CLOCK_ALLOWED_FILES: &[&str] = &["rust/src/main.rs", "rust/src/benchkit.rs"];
+
+/// The rule identifiers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    HashIter,
+    WallClock,
+    FloatCmp,
+    RngDiscipline,
+    UnsafeForbid,
+    /// Meta-rule: an allow directive that suppressed nothing (or lacks
+    /// a written reason). Keeps the suppression surface auditable.
+    StaleAllow,
+}
+
+impl Rule {
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::HashIter => "hash-iter",
+            Rule::WallClock => "wall-clock",
+            Rule::FloatCmp => "float-cmp",
+            Rule::RngDiscipline => "rng-discipline",
+            Rule::UnsafeForbid => "unsafe-forbid",
+            Rule::StaleAllow => "stale-allow",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Rule> {
+        Some(match name {
+            "hash-iter" => Rule::HashIter,
+            "wall-clock" => Rule::WallClock,
+            "float-cmp" => Rule::FloatCmp,
+            "rng-discipline" => Rule::RngDiscipline,
+            "unsafe-forbid" => Rule::UnsafeForbid,
+            "stale-allow" => Rule::StaleAllow,
+            _ => return None,
+        })
+    }
+
+    /// Every checkable rule (excludes the meta-rule).
+    pub fn all() -> &'static [Rule] {
+        &[
+            Rule::HashIter,
+            Rule::WallClock,
+            Rule::FloatCmp,
+            Rule::RngDiscipline,
+            Rule::UnsafeForbid,
+        ]
+    }
+}
+
+/// One lint finding. `snippet` is the trimmed source line — the
+/// line-number-independent key baselines match on.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Finding {
+    pub file: String,
+    pub line: u32,
+    pub rule: Rule,
+    pub message: String,
+    pub snippet: String,
+}
+
+impl Finding {
+    /// `file:line: rule: message` — the CLI/CI output format.
+    pub fn render(&self) -> String {
+        format!("{}:{}: {}: {}", self.file, self.line, self.rule.name(), self.message)
+    }
+}
+
+/// The module segment of a crate-source path: `rust/src/sim/engine.rs`
+/// and `rust/src/benchkit.rs` → `sim` / `benchkit`. Tests, benches, and
+/// examples have no module (rules keyed by module skip them).
+pub fn module_of(path: &str) -> Option<&str> {
+    let rest = path.strip_prefix("rust/src/")?;
+    let seg = rest.split('/').next().unwrap_or(rest);
+    Some(seg.strip_suffix(".rs").unwrap_or(seg))
+}
+
+fn wall_clock_allowed(path: &str) -> bool {
+    WALL_CLOCK_ALLOWED_FILES.contains(&path)
+        || WALL_CLOCK_ALLOWED_PREFIXES.iter().any(|p| path.starts_with(p))
+}
+
+/// A parsed `// lint: allow(rule[, rule]): reason` directive.
+#[derive(Clone, Debug)]
+pub struct AllowDirective {
+    pub line: u32,
+    pub rules: Vec<String>,
+    pub reason: String,
+}
+
+/// Parse allow directives out of the comment side channel. Accepts any
+/// comment flavor (`//`, `///`, `//!`, `/* */`); the directive must
+/// start the comment body.
+pub fn parse_directives(comments: &[Comment]) -> Vec<AllowDirective> {
+    let mut out = Vec::new();
+    for c in comments {
+        let body = c
+            .text
+            .trim_start_matches(['/', '*', '!'])
+            .trim_end_matches(['*', '/'])
+            .trim();
+        let Some(rest) = body.strip_prefix("lint:") else { continue };
+        let rest = rest.trim_start();
+        let Some(rest) = rest.strip_prefix("allow") else { continue };
+        let rest = rest.trim_start();
+        let Some(rest) = rest.strip_prefix('(') else { continue };
+        let Some(close) = rest.find(')') else { continue };
+        let rules: Vec<String> = rest[..close]
+            .split(',')
+            .map(|r| r.trim().to_string())
+            .filter(|r| !r.is_empty())
+            .collect();
+        let after = rest[close + 1..].trim_start();
+        let reason = after.strip_prefix(':').map(|r| r.trim().to_string()).unwrap_or_default();
+        out.push(AllowDirective { line: c.line, rules, reason });
+    }
+    out
+}
+
+/// Token index ranges covered by `#[cfg(test)]` / `#[test]` items,
+/// returned as inclusive line spans. Pinned literal seeds are the point
+/// of a test, so `rng-discipline` skips these regions.
+pub fn test_regions(tokens: &[Token]) -> Vec<(u32, u32)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < tokens.len() {
+        if let Some(after_attr) = match_test_attr(tokens, i) {
+            if let Some((start, end)) = item_braces(tokens, after_attr) {
+                out.push((tokens[start].line, tokens[end].line));
+                i = end + 1;
+                continue;
+            }
+            i = after_attr;
+            continue;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// If `tokens[i..]` starts a `#[cfg(test)]` or `#[test]` attribute,
+/// return the index just past its closing `]`.
+fn match_test_attr(tokens: &[Token], i: usize) -> Option<usize> {
+    let texts: Vec<&str> = tokens[i..].iter().take(7).map(|t| t.text.as_str()).collect();
+    if texts.len() >= 7
+        && texts[..7] == ["#", "[", "cfg", "(", "test", ")", "]"]
+    {
+        return Some(i + 7);
+    }
+    if texts.len() >= 4 && texts[..4] == ["#", "[", "test", "]"] {
+        return Some(i + 4);
+    }
+    None
+}
+
+/// From just past an attribute, skip any further attributes and find the
+/// item's brace block. Returns token indices of `{` and its matching `}`.
+fn item_braces(tokens: &[Token], mut i: usize) -> Option<(usize, usize)> {
+    // Skip stacked attributes (`#[cfg(test)] #[allow(dead_code)] mod …`).
+    while i + 1 < tokens.len() && tokens[i].text == "#" && tokens[i + 1].text == "[" {
+        let mut depth = 0usize;
+        let mut j = i + 1;
+        while j < tokens.len() {
+            match tokens[j].text.as_str() {
+                "[" => depth += 1,
+                "]" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+    // The item body: first `{` before any item-terminating `;`.
+    let mut j = i;
+    while j < tokens.len() {
+        match tokens[j].text.as_str() {
+            ";" => return None, // e.g. `#[cfg(test)] use …;` — no region
+            "{" => break,
+            _ => {}
+        }
+        j += 1;
+    }
+    if j >= tokens.len() {
+        return None;
+    }
+    let open = j;
+    let mut depth = 0usize;
+    while j < tokens.len() {
+        match tokens[j].text.as_str() {
+            "{" => depth += 1,
+            "}" => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some((open, j));
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    Some((open, tokens.len() - 1))
+}
+
+fn in_regions(line: u32, regions: &[(u32, u32)]) -> bool {
+    regions.iter().any(|&(a, b)| line >= a && line <= b)
+}
+
+/// Is token `i` part of a `use …;` declaration? (The import is not the
+/// hazard — the use sites are — so `hash-iter` skips these.)
+fn in_use_stmt(tokens: &[Token], i: usize) -> bool {
+    // Scan back to the previous statement boundary. `{` is deliberately
+    // NOT a boundary: `use std::collections::{BinaryHeap, HashMap};`
+    // puts the group brace between `use` and the name being probed. A
+    // body brace cannot fool this — the first token after a real `;`/`}`
+    // boundary is then `fn`/`if`/`let`/..., never `use`.
+    let mut b = i;
+    while b > 0 {
+        let t = &tokens[b - 1].text;
+        if t == ";" || t == "}" {
+            break;
+        }
+        b -= 1;
+    }
+    tokens[b..i]
+        .iter()
+        .take(6)
+        .any(|t| t.kind == TokKind::Ident && t.text == "use")
+}
+
+/// Index of the token matching the `(` at `open` (depth-balanced), or
+/// `None` if unbalanced.
+fn matching_paren(tokens: &[Token], open: usize) -> Option<usize> {
+    let mut depth = 0usize;
+    for (k, t) in tokens.iter().enumerate().skip(open) {
+        match t.text.as_str() {
+            "(" => depth += 1,
+            ")" => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(k);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Sort-family identifiers that discharge `hash-iter` when they appear
+/// right after the flagged site (the iterate-then-sort idiom).
+const SORT_IDENTS: &[&str] =
+    &["sort", "sort_by", "sort_unstable", "sort_unstable_by", "sort_by_key", "sort_by_cached_key"];
+
+/// How far ahead (in tokens) the `hash-iter` sorted-nearby heuristic
+/// looks for a sort call.
+const SORT_LOOKAHEAD: usize = 48;
+
+/// Run every rule over one lexed file. Findings are deduplicated per
+/// `(rule, line)` and come back in source order. Allow-directive
+/// suppression and baselines are applied by the caller.
+pub fn run_rules(path: &str, lexed: &Lexed) -> Vec<Finding> {
+    let tokens = &lexed.tokens;
+    let module = module_of(path);
+    let deterministic = module.is_some_and(|m| DETERMINISTIC_MODULES.contains(&m));
+    let rng_scoped = module.is_some_and(|m| RNG_DISCIPLINE_MODULES.contains(&m));
+    let regions = test_regions(tokens);
+    let mut out: Vec<Finding> = Vec::new();
+    let mut push = |out: &mut Vec<Finding>, rule: Rule, line: u32, message: String| {
+        if !out.iter().any(|f| f.rule == rule && f.line == line) {
+            out.push(Finding {
+                file: path.to_string(),
+                line,
+                rule,
+                message,
+                snippet: String::new(),
+            });
+        }
+    };
+
+    for (i, t) in tokens.iter().enumerate() {
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        match t.text.as_str() {
+            // -- unsafe-forbid -------------------------------------------
+            "unsafe" => push(
+                &mut out,
+                Rule::UnsafeForbid,
+                t.line,
+                "`unsafe` is forbidden crate-wide (`#![forbid(unsafe_code)]`): every replay \
+                 invariant is audited on safe code only"
+                    .to_string(),
+            ),
+
+            // -- wall-clock ----------------------------------------------
+            "SystemTime" if !wall_clock_allowed(path) => push(
+                &mut out,
+                Rule::WallClock,
+                t.line,
+                "`SystemTime` outside the wall-clock allowlist — virtual-time paths must take \
+                 time as input (slot/event clock), never read it"
+                    .to_string(),
+            ),
+            "Instant"
+                if !wall_clock_allowed(path)
+                    && tokens.get(i + 1).is_some_and(|t| t.text == ":")
+                    && tokens.get(i + 2).is_some_and(|t| t.text == ":")
+                    && tokens.get(i + 3).is_some_and(|t| t.text == "now") =>
+            {
+                push(
+                    &mut out,
+                    Rule::WallClock,
+                    t.line,
+                    "`Instant::now()` outside the wall-clock allowlist — a wall-clock read in a \
+                     deterministic path makes seeded replays diverge"
+                        .to_string(),
+                )
+            }
+
+            // -- hash-iter -----------------------------------------------
+            "HashMap" | "HashSet" if deterministic => {
+                if in_use_stmt(tokens, i) {
+                    continue;
+                }
+                let sorted_nearby = tokens[i + 1..]
+                    .iter()
+                    .take(SORT_LOOKAHEAD)
+                    .any(|t| t.kind == TokKind::Ident && SORT_IDENTS.contains(&t.text.as_str()));
+                if sorted_nearby {
+                    continue;
+                }
+                push(
+                    &mut out,
+                    Rule::HashIter,
+                    t.line,
+                    format!(
+                        "`{}` in deterministic module `{}` — iteration order is randomized per \
+                         process; use BTreeMap/BTreeSet, sort before iterating, or annotate \
+                         `// lint: allow(hash-iter): <why membership-only>`",
+                        t.text,
+                        module.unwrap_or("?"),
+                    ),
+                )
+            }
+
+            // -- float-cmp -----------------------------------------------
+            "partial_cmp" => {
+                let Some(open) = tokens.get(i + 1).filter(|t| t.text == "(").map(|_| i + 1)
+                else {
+                    continue;
+                };
+                let Some(close) = matching_paren(tokens, open) else { continue };
+                let chained_panic = tokens.get(close + 1).is_some_and(|t| t.text == ".")
+                    && tokens
+                        .get(close + 2)
+                        .is_some_and(|t| t.text == "unwrap" || t.text == "expect");
+                if chained_panic {
+                    push(
+                        &mut out,
+                        Rule::FloatCmp,
+                        t.line,
+                        "`partial_cmp(..).unwrap()` comparator panics on NaN and silently \
+                         depends on NaN-free data — use `f64::total_cmp`"
+                            .to_string(),
+                    )
+                }
+            }
+
+            // -- rng-discipline ------------------------------------------
+            "seed_from" if rng_scoped && !in_regions(t.line, &regions) => {
+                let Some(open) = tokens.get(i + 1).filter(|t| t.text == "(").map(|_| i + 1)
+                else {
+                    continue;
+                };
+                let Some(close) = matching_paren(tokens, open) else { continue };
+                let args = &tokens[open + 1..close];
+                let literal_only = args.iter().any(|t| t.kind == TokKind::Num)
+                    && !args.iter().any(|t| t.kind == TokKind::Ident);
+                if literal_only {
+                    push(
+                        &mut out,
+                        Rule::RngDiscipline,
+                        t.line,
+                        "RNG seeded from a bare literal — derive per-stream seeds with \
+                         `rng::stream_seed(root, stream, index)` so streams never alias \
+                         across cells/trials"
+                            .to_string(),
+                    )
+                }
+            }
+            _ => {}
+        }
+    }
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+/// Apply allow-directive suppression to `findings` and emit the
+/// `stale-allow` meta-findings. Returns surviving findings, in order.
+pub fn apply_allows(
+    path: &str,
+    findings: Vec<Finding>,
+    directives: &[AllowDirective],
+) -> Vec<Finding> {
+    let mut used = vec![false; directives.len()];
+    let mut out: Vec<Finding> = Vec::new();
+    for f in findings {
+        let mut suppressed = false;
+        for (k, d) in directives.iter().enumerate() {
+            let covers = f.line == d.line || f.line == d.line + 1;
+            if covers && !d.reason.is_empty() && d.rules.iter().any(|r| r == f.rule.name()) {
+                used[k] = true;
+                suppressed = true;
+            }
+        }
+        if !suppressed {
+            out.push(f);
+        }
+    }
+    for (k, d) in directives.iter().enumerate() {
+        if used[k] {
+            continue;
+        }
+        let msg = if d.reason.is_empty() {
+            format!(
+                "allow({}) has no written reason — `// lint: allow(rule): <why>` is required \
+                 for a suppression to take effect",
+                d.rules.join(", ")
+            )
+        } else {
+            format!(
+                "allow({}) suppressed nothing — remove the stale directive",
+                d.rules.join(", ")
+            )
+        };
+        out.push(Finding {
+            file: path.to_string(),
+            line: d.line,
+            rule: Rule::StaleAllow,
+            message: msg,
+            snippet: String::new(),
+        });
+    }
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}

@@ -104,7 +104,7 @@ impl GaStrategy {
             let mut next = Vec::with_capacity(p.population);
             // Elitism: carry the best genome.
             let best_idx = (0..pop.len())
-                .min_by(|&a, &b| fit[a].partial_cmp(&fit[b]).unwrap())
+                .min_by(|&a, &b| fit[a].total_cmp(&fit[b]))
                 .unwrap();
             next.push(pop[best_idx].clone());
             while next.len() < p.population {
@@ -142,7 +142,7 @@ impl GaStrategy {
             fit = pop.iter().map(|g| fitness(g)).collect();
         }
         let best_idx = (0..pop.len())
-            .min_by(|&a, &b| fit[a].partial_cmp(&fit[b]).unwrap())
+            .min_by(|&a, &b| fit[a].total_cmp(&fit[b]))
             .unwrap();
         self.best_fitness = fit[best_idx];
         pop.swap_remove(best_idx)
@@ -393,8 +393,7 @@ fn repair_capacity(instances: &mut [Vec<u32>], env: &SimEnv) {
                 .filter(|&ci| row[ci] > 0)
                 .max_by(|&a, &b| {
                     app.catalog.spec(core_ids[a]).resources[k]
-                        .partial_cmp(&app.catalog.spec(core_ids[b]).resources[k])
-                        .unwrap()
+                        .total_cmp(&app.catalog.spec(core_ids[b]).resources[k])
                 });
             match ci {
                 Some(ci) => row[ci] -= 1,

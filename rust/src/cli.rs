@@ -17,6 +17,9 @@
 //!   with `--blame` for deadline-miss attribution.
 //! * `serve` — start the serving coordinator on a synthetic open-loop
 //!   workload and print the latency/throughput report.
+//! * `lint` — the in-tree determinism lint: machine-check the replay
+//!   invariants (hash-iter, wall-clock, float-cmp, rng-discipline,
+//!   unsafe-forbid) over the crate's own sources.
 
 use std::collections::HashMap;
 
@@ -63,6 +66,7 @@ const FLAGS: &[&str] = &[
     "blame",
     "bench",
     "streaming",
+    "deny",
 ];
 
 impl Args {
@@ -219,6 +223,16 @@ COMMANDS:
             re-routing, --virtual replays the same workload + policy on
             the deterministic virtual-time server [bit-stable counters],
             --deadline-ms X, --seed N)
+  lint      determinism lint over rust/src, rust/tests, rust/benches and
+            examples/: hash-iter (HashMap/HashSet in deterministic
+            modules), wall-clock (Instant::now/SystemTime outside the
+            allowlist), float-cmp (partial_cmp().unwrap() comparators),
+            rng-discipline (ad-hoc literal seeds), unsafe-forbid
+            (--deny exits nonzero on any new finding, --baseline FILE
+            [default rust/lint-baseline.txt if present],
+            --write-baseline FILE accepts the current findings,
+            --root PATH overrides repo-root autodetection; suppress a
+            site with `// lint: allow(<rule>): <reason>`)
 
 GLOBAL OPTIONS:
   --config FILE   TOML overrides on top of the paper defaults

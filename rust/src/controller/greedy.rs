@@ -119,7 +119,7 @@ pub fn greedy_light_deployment(
         by_ms[r.light_idx].push(qi);
     }
     for group in &mut by_ms {
-        group.sort_by(|&a, &b| queue[b].h.partial_cmp(&queue[a].h).unwrap());
+        group.sort_by(|&a, &b| queue[b].h.total_cmp(&queue[a].h));
     }
 
     let fits = |residual: &[[f64; NUM_RESOURCES]], v: usize, m: usize| -> bool {
@@ -183,7 +183,7 @@ pub fn greedy_light_deployment(
         if pairs.is_empty() {
             return f64::INFINITY;
         }
-        pairs.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        pairs.sort_by(|a, b| b.1.total_cmp(&a.1));
         let (c_dp, c_mt, c_pl) = costs[m];
         let mut best = f64::INFINITY;
         let mut w_sum = 0.0; // Σ φH over prefix

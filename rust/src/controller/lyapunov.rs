@@ -5,12 +5,16 @@
 //! after violations accumulate (the paper's departure from vanilla
 //! drift-plus-penalty).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// Per-task virtual queues.
+///
+/// Backed by a `BTreeMap` so `total_backlog()` sums in task-id order:
+/// float addition is not associative, and a hash-ordered sum leaked
+/// per-process noise into the telemetry stream.
 #[derive(Clone, Debug)]
 pub struct VirtualQueues {
-    h: HashMap<u64, f64>,
+    h: BTreeMap<u64, f64>,
     zeta: f64,
 }
 
@@ -18,7 +22,7 @@ impl VirtualQueues {
     pub fn new(zeta: f64) -> Self {
         assert!(zeta >= 0.0);
         VirtualQueues {
-            h: HashMap::new(),
+            h: BTreeMap::new(),
             zeta,
         }
     }

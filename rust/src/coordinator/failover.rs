@@ -260,8 +260,7 @@ pub fn compile_worker_events(
     }
     out.sort_by(|a, b| {
         a.at_ms
-            .partial_cmp(&b.at_ms)
-            .unwrap()
+            .total_cmp(&b.at_ms)
             .then_with(|| a.worker.cmp(&b.worker))
             .then_with(|| a.up.cmp(&b.up))
     });

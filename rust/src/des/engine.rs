@@ -689,7 +689,7 @@ impl<'a, C: EventCalendar> Des<'a, C> {
                 );
                 let &(from, _, mb) = payloads
                     .iter()
-                    .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                    .max_by(|a, b| a.1.total_cmp(&b.1))
                     .unwrap();
                 LightRequest {
                     task_id: id,
@@ -770,7 +770,7 @@ impl<'a, C: EventCalendar> Des<'a, C> {
                     .max_by(|a, b| {
                         let la = a.1 + dm.latency(a.0, asn.node, a.2);
                         let lb = b.1 + dm.latency(b.0, asn.node, b.2);
-                        la.partial_cmp(&lb).unwrap()
+                        la.total_cmp(&lb)
                     })
                     .unwrap();
                 let arrive = pd + dm.latency(pn, asn.node, mb);

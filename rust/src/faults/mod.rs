@@ -100,7 +100,7 @@ mod tests {
         let s = FaultSchedule::generate(&t, 300, 1.0, 6, &p, 11);
         assert!(!s.is_empty(), "rate 0.05 over 300 slots must fire");
         let mut last = 0.0;
-        let mut down = std::collections::HashSet::new();
+        let mut down = std::collections::BTreeSet::new();
         for ev in s.events() {
             assert!(ev.time_ms >= last, "events must be time-sorted");
             last = ev.time_ms;

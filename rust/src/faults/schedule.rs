@@ -112,7 +112,7 @@ impl FaultSchedule {
     /// Build from explicit events (tests / handcrafted scenarios); sorts
     /// by time, stable for ties.
     pub fn from_events(mut events: Vec<FaultEvent>) -> Self {
-        events.sort_by(|a, b| a.time_ms.partial_cmp(&b.time_ms).unwrap());
+        events.sort_by(|a, b| a.time_ms.total_cmp(&b.time_ms));
         FaultSchedule { events }
     }
 
@@ -278,14 +278,14 @@ impl FaultSchedule {
                 });
             }
         }
-        tail.sort_by(|a, b| a.time_ms.partial_cmp(&b.time_ms).unwrap());
+        tail.sort_by(|a, b| a.time_ms.total_cmp(&b.time_ms));
         events.extend(tail);
         if !restarts.is_empty() {
             // Restarts land mid-stream; a single stable sort restores the
             // time order (skipped entirely when the knob is off, keeping
             // pre-existing schedules byte-identical).
             events.extend(restarts);
-            events.sort_by(|a, b| a.time_ms.partial_cmp(&b.time_ms).unwrap());
+            events.sort_by(|a, b| a.time_ms.total_cmp(&b.time_ms));
         }
         FaultSchedule { events }
     }

@@ -201,7 +201,7 @@ impl Dag {
         let (best, &len) = dist
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .unwrap_or((0, &0.0));
         let mut path = vec![best];
         let mut cur = best;

@@ -27,6 +27,11 @@
 //! bench harnesses) are implemented in-tree; see `DESIGN.md` for the full
 //! inventory and the experiment index.
 
+// The determinism lint's `unsafe-forbid` rule ([`analysis`]) is backed by
+// the compiler: replay invariants are audited on safe code only.
+#![forbid(unsafe_code)]
+
+pub mod analysis;
 pub mod benchkit;
 pub mod graph;
 pub mod ilp;

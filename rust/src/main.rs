@@ -2,6 +2,7 @@
 
 use std::time::Instant;
 
+use fmedge::analysis::{self, Baseline};
 use fmedge::cli::{Args, HELP};
 use fmedge::config::ExperimentConfig;
 use fmedge::coordinator::{
@@ -48,6 +49,7 @@ fn main() {
         "trace" => cmd_trace(&args),
         "sweep" => cmd_sweep(&args),
         "serve" => cmd_serve(&args),
+        "lint" => cmd_lint(&args),
         other => {
             eprintln!("unknown command `{other}`\n\n{HELP}");
             std::process::exit(2);
@@ -404,7 +406,7 @@ fn cmd_faults(args: &Args) -> Result<(), AnyError> {
     let mut rates = args.get_f64_list("rates", &[0.0, 0.002, 0.01])?;
     // Ascending order puts rate 0 (when present) first, so its baseline
     // exists before any nonzero row needs a "retained" value.
-    rates.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    rates.sort_by(f64::total_cmp);
     let loads = args.get_f64_list("loads", &[1.0, 2.0])?;
     let strategies = args.get_str_list("strategies", &["proposal", "lbrr"]);
     let engine = args.get("engine").unwrap_or("slotted").to_string();
@@ -646,6 +648,59 @@ fn cmd_sweep(args: &Args) -> Result<(), AnyError> {
     if let Some(path) = args.get("json") {
         table.save_json(path)?;
         println!("json written to {path}");
+    }
+    Ok(())
+}
+
+/// `fmedge lint`: the in-tree determinism lint (EXPERIMENTS §P9). Walks
+/// `rust/src`, `rust/tests`, `rust/benches`, and `examples/`, runs the
+/// replay-invariant rules (hash-iter, wall-clock, float-cmp,
+/// rng-discipline, unsafe-forbid), prints findings as
+/// `file:line: rule: message`, and under `--deny` exits nonzero when any
+/// finding is not covered by an inline `// lint: allow(rule): reason`
+/// or the checked-in baseline. `--write-baseline FILE` accepts the
+/// current findings (with TODO justifications a reviewer must replace).
+fn cmd_lint(args: &Args) -> Result<(), AnyError> {
+    let root = match args.get("root") {
+        Some(r) => std::path::PathBuf::from(r),
+        None => analysis::detect_root()?,
+    };
+    let baseline_path = match args.get("baseline") {
+        Some(p) => Some(std::path::PathBuf::from(p)),
+        None => {
+            let default = root.join(analysis::DEFAULT_BASELINE);
+            default.is_file().then_some(default)
+        }
+    };
+    let baseline = match &baseline_path {
+        Some(p) => {
+            let text = std::fs::read_to_string(p)
+                .map_err(|e| format!("reading baseline {}: {e}", p.display()))?;
+            Some(Baseline::parse(&text)?)
+        }
+        None => None,
+    };
+    if let Some(path) = args.get("write-baseline") {
+        // Accept the current findings (pre-baseline) as the new floor.
+        let report = analysis::run_lint(&root, None)?;
+        let b = Baseline::from_findings(&report.findings);
+        std::fs::write(path, b.render())?;
+        println!(
+            "baseline with {} entries written to {path} — replace every `TODO: justify or \
+             fix` before committing",
+            b.entries.len()
+        );
+        return Ok(());
+    }
+    let report = analysis::run_lint(&root, baseline.as_ref())?;
+    print!("{}", report.render());
+    if args.flag("deny") && !report.clean() {
+        return Err(format!(
+            "{} new lint finding(s) — fix them, annotate `// lint: allow(<rule>): <reason>`, \
+             or baseline them with a justification",
+            report.findings.len()
+        )
+        .into());
     }
     Ok(())
 }

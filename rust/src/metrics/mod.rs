@@ -169,7 +169,7 @@ impl TrialMetrics {
             return quantile(&self.latencies_ms, p);
         }
         let mut v = self.latencies_ms.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(f64::total_cmp);
         quantile(&v, p)
     }
 }
@@ -345,7 +345,7 @@ impl MetricsCollector {
         // Sorted once here; `latency_percentile` relies on it. This also
         // makes the stream insensitive to engine completion order, so
         // paired slotted-vs-DES comparisons diff multisets, not schedules.
-        latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        latencies_ms.sort_by(f64::total_cmp);
         // Fill the histogram here too, so the field is mode-independent
         // (a deterministic function of the latency multiset either way).
         let mut latency_hist = Histogram::latency_ms();

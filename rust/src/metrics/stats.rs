@@ -46,7 +46,7 @@ impl Summary {
             };
         }
         let mut s = xs.to_vec();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(f64::total_cmp);
         let n = s.len();
         let mean = s.iter().sum::<f64>() / n as f64;
         let var = s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
@@ -164,7 +164,7 @@ mod tests {
             .density
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .unwrap()
             .0;
         assert!((v.grid[peak_idx] - 5.0).abs() < 0.1);

@@ -335,7 +335,7 @@ fn lp_round(
             }
         }
     }
-    frac.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    frac.sort_by(|a, b| b.0.total_cmp(&a.0));
     let fits = |residual: &[[f64; NUM_RESOURCES]], v: usize, ci: usize| -> bool {
         let spec = app.catalog.spec(core_ids[ci]);
         (0..NUM_RESOURCES).all(|k| residual[v][k] >= spec.resources[k] - 1e-9)
@@ -391,7 +391,7 @@ fn lp_round(
             .filter(|&(v, ci)| instances[v][ci] == 0 && ub[v][ci] > 0)
             .collect();
         empty.sort_by(|&(v1, c1), &(v2, c2)| {
-            scores.q[v2][c2].partial_cmp(&scores.q[v1][c1]).unwrap()
+            scores.q[v2][c2].total_cmp(&scores.q[v1][c1])
         });
         for (v, ci) in empty {
             if support >= kappa {
@@ -644,7 +644,7 @@ fn greedy_fallback(
     let mut orders: Vec<Vec<usize>> = (0..nc)
         .map(|ci| {
             let mut order: Vec<usize> = (0..nv).filter(|&v| ub[v][ci] > 0).collect();
-            order.sort_by(|&a, &b| scores.q[b][ci].partial_cmp(&scores.q[a][ci]).unwrap());
+            order.sort_by(|&a, &b| scores.q[b][ci].total_cmp(&scores.q[a][ci]));
             order
         })
         .collect();
@@ -686,7 +686,7 @@ fn greedy_fallback(
             .filter(|&(v, ci)| instances[v][ci] == 0 && ub[v][ci] > 0)
             .collect();
         empty.sort_by(|&(v1, c1), &(v2, c2)| {
-            scores.q[v2][c2].partial_cmp(&scores.q[v1][c1]).unwrap()
+            scores.q[v2][c2].total_cmp(&scores.q[v1][c1])
         });
         for (v, ci) in empty {
             if support >= kappa {

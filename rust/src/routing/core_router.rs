@@ -206,7 +206,7 @@ impl CoreRouter {
             let (idx, &free) = row[m]
                 .iter()
                 .enumerate()
-                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .min_by(|a, b| a.1.total_cmp(b.1))
                 .expect("non-empty");
             let start = arrive.max(free);
             let done = start + proc_ms;
@@ -261,7 +261,7 @@ impl CoreRouter {
             let (idx, &free) = row[m]
                 .iter()
                 .enumerate()
-                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .min_by(|a, b| a.1.total_cmp(b.1))
                 .expect("non-empty");
             let start = arrive.max(free);
             let done = start + proc_ms;

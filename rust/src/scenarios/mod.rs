@@ -332,7 +332,7 @@ mod tests {
     #[test]
     fn library_names_are_unique_and_resolvable() {
         let lib = ScenarioSpec::library();
-        let mut names = std::collections::HashSet::new();
+        let mut names = std::collections::BTreeSet::new();
         for s in &lib {
             assert!(names.insert(s.name.clone()), "duplicate {}", s.name);
             assert_eq!(ScenarioSpec::by_name(&s.name).as_ref(), Some(s));
@@ -385,8 +385,8 @@ mod tests {
         let cs = ScenarioSpec::commuter().compile(&env, &opts, 7);
         assert!(cs.user_moves > 0, "commuter must move users");
         // Some user's arrivals must appear at two different EDs.
-        let mut seen: std::collections::HashMap<usize, std::collections::HashSet<usize>> =
-            std::collections::HashMap::new();
+        let mut seen: std::collections::BTreeMap<usize, std::collections::BTreeSet<usize>> =
+            std::collections::BTreeMap::new();
         for a in cs.trace.arrivals() {
             seen.entry(a.user).or_default().insert(a.ed);
         }

@@ -324,7 +324,7 @@ mod tests {
     fn replay_invariants(cfg: &ExperimentConfig, s: &FaultSchedule) {
         let cap = ((cfg.network.num_ess - 1) / 2).max(1);
         let mut last = 0.0;
-        let mut down = std::collections::HashSet::new();
+        let mut down = std::collections::BTreeSet::new();
         for ev in s.events() {
             assert!(ev.time_ms >= last, "time-sorted");
             last = ev.time_ms;
@@ -392,7 +392,7 @@ mod tests {
         let s = tpl.compile(&t, 500, 1.0, 6, &[], 11);
         assert!(!s.is_empty());
         // Every LinkDown has its LinkUp; no double-down.
-        let mut down = std::collections::HashSet::new();
+        let mut down = std::collections::BTreeSet::new();
         let mut best = 0usize;
         let mut cur_t = f64::NEG_INFINITY;
         let mut cur = 0usize;

@@ -458,6 +458,7 @@ fn run_trial_inner(
     let nv = env.topo.num_nodes();
     let nl = app.catalog.num_light();
     let max_y = env.gtable.max_parallelism().max(1);
+    // lint: allow(hash-iter): every order-sensitive walk sorts ids first
     let mut tasks: HashMap<u64, RunTask> = HashMap::new();
     let mut queues = VirtualQueues::new(cfg.controller.zeta);
     let mut events: BinaryHeap<Reverse<Event>> = BinaryHeap::new();
@@ -917,7 +918,7 @@ fn run_trial_inner(
                 // Use the latest-finishing parent as the "from" node.
                 let &(from, _, mb) = payloads
                     .iter()
-                    .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                    .max_by(|a, b| a.1.total_cmp(&b.1))
                     .unwrap();
                 LightRequest {
                     task_id: id,
@@ -1086,8 +1087,13 @@ fn run_trial_inner(
         light_queue.retain(|(id, _)| tasks.contains_key(id));
     }
 
-    // Horizon end: everything in flight is incomplete.
-    for (id, t) in tasks.drain() {
+    // Horizon end: everything in flight is incomplete. Drain in id order
+    // — a raw `drain()` finished tasks in hash order, which reordered the
+    // incomplete-latency samples between processes.
+    let mut ids: Vec<u64> = tasks.keys().cloned().collect();
+    ids.sort_unstable();
+    for id in ids {
+        let t = tasks.remove(&id).unwrap();
         finish_task(id, &t, None, &mut collector, &mut queues, &mut obs);
     }
     let _ = placement.objective;

@@ -130,7 +130,7 @@ fn zone_schedule(cfg: &ExperimentConfig, slot_ms: f64) -> FaultSchedule {
         FaultEvent { time_ms: 70.0 * slot_ms, kind: FaultKind::NodeUp { node: es } },
         FaultEvent { time_ms: 72.0 * slot_ms, kind: FaultKind::NodeUp { node: es + 1 } },
     ];
-    events.sort_by(|a, b| a.time_ms.partial_cmp(&b.time_ms).unwrap());
+    events.sort_by(|a, b| a.time_ms.total_cmp(&b.time_ms));
     FaultSchedule::from_events(events)
 }
 

@@ -1,0 +1,248 @@
+//! Determinism-lint integration tests (EXPERIMENTS §P9): every rule
+//! fires on a minimal fixture and stays quiet on the blessed idiom,
+//! inline allow directives suppress (and go stale loudly), baselines
+//! round-trip, and — the gate the others exist for — the repo's own
+//! tree lints clean against the checked-in baseline.
+
+use fmedge::analysis::{lint_source, Baseline, Rule};
+
+/// Findings for a fixture placed at a virtual path (the path keys the
+/// module-scoped rules exactly as it does on disk).
+fn findings(path: &str, src: &str) -> Vec<(Rule, u32)> {
+    lint_source(path, src).into_iter().map(|f| (f.rule, f.line)).collect()
+}
+
+fn rules_fired(path: &str, src: &str) -> Vec<Rule> {
+    findings(path, src).into_iter().map(|(r, _)| r).collect()
+}
+
+// --- hash-iter -----------------------------------------------------------
+
+#[test]
+fn hash_iter_fires_in_deterministic_module() {
+    let src = "fn f() { let m: HashMap<u64, f64> = HashMap::new(); }\n";
+    assert_eq!(rules_fired("rust/src/sim/fixture.rs", src), vec![Rule::HashIter]);
+    // Same source outside the deterministic set: silent.
+    assert!(rules_fired("rust/src/obs/fixture.rs", src).is_empty());
+    assert!(rules_fired("rust/tests/fixture.rs", src).is_empty());
+}
+
+#[test]
+fn hash_iter_skips_use_statements_including_groups() {
+    let src = "use std::collections::HashMap;\n\
+               use std::collections::{BinaryHeap, HashMap, HashSet};\n";
+    assert!(rules_fired("rust/src/des/fixture.rs", src).is_empty());
+}
+
+#[test]
+fn hash_iter_discharged_by_nearby_sort() {
+    let src = "fn f(m: &HashMap<u64, f64>) -> Vec<u64> {\n\
+                   let mut ids: Vec<u64> = m.keys().cloned().collect();\n\
+                   ids.sort_unstable();\n\
+                   ids\n\
+               }\n";
+    assert!(rules_fired("rust/src/sim/fixture.rs", src).is_empty());
+}
+
+#[test]
+fn hash_iter_ignores_strings_and_comments() {
+    let src = "// HashMap in a comment\n\
+               fn f() -> &'static str { \"HashMap::new()\" }\n";
+    assert!(rules_fired("rust/src/sim/fixture.rs", src).is_empty());
+}
+
+// --- wall-clock ----------------------------------------------------------
+
+#[test]
+fn wall_clock_fires_outside_allowlist_only() {
+    let src = "fn f() { let t = std::time::Instant::now(); }\n";
+    assert_eq!(rules_fired("rust/src/sim/fixture.rs", src), vec![Rule::WallClock]);
+    assert_eq!(rules_fired("rust/src/obs/fixture.rs", src), vec![Rule::WallClock]);
+    // The serving path, benches, and examples legitimately read the clock.
+    assert!(rules_fired("rust/src/coordinator/fixture.rs", src).is_empty());
+    assert!(rules_fired("rust/benches/fixture.rs", src).is_empty());
+    assert!(rules_fired("examples/fixture.rs", src).is_empty());
+    assert!(rules_fired("rust/src/main.rs", src).is_empty());
+
+    let sys = "fn f() { let t = std::time::SystemTime::now(); }\n";
+    assert_eq!(rules_fired("rust/src/metrics/fixture.rs", sys), vec![Rule::WallClock]);
+}
+
+// --- float-cmp -----------------------------------------------------------
+
+#[test]
+fn float_cmp_fires_on_panicking_comparators() {
+    let unwrap = "fn f(v: &mut [f64]) { v.sort_by(|a, b| a.partial_cmp(b).unwrap()); }\n";
+    assert_eq!(rules_fired("rust/src/metrics/fixture.rs", unwrap), vec![Rule::FloatCmp]);
+    let expect =
+        "fn f(v: &mut [f64]) { v.sort_by(|a, b| a.partial_cmp(b).expect(\"nan\")); }\n";
+    assert_eq!(rules_fired("rust/src/sim/fixture.rs", expect), vec![Rule::FloatCmp]);
+    // The rule is module-agnostic: a NaN panic in a test helper is still
+    // a NaN panic.
+    assert_eq!(rules_fired("rust/tests/fixture.rs", unwrap), vec![Rule::FloatCmp]);
+}
+
+#[test]
+fn float_cmp_blesses_total_cmp_and_unwrap_or() {
+    let src = "fn f(v: &mut [f64]) { v.sort_by(f64::total_cmp); }\n\
+               fn g(a: f64, b: f64) -> std::cmp::Ordering {\n\
+                   a.partial_cmp(&b).unwrap_or(std::cmp::Ordering::Equal)\n\
+               }\n";
+    assert!(rules_fired("rust/src/metrics/fixture.rs", src).is_empty());
+}
+
+// --- rng-discipline ------------------------------------------------------
+
+#[test]
+fn rng_discipline_fires_on_bare_literal_seeds() {
+    let src = "fn f() { let mut rng = Xoshiro256::seed_from(42); }\n";
+    assert_eq!(rules_fired("rust/src/sim/fixture.rs", src), vec![Rule::RngDiscipline]);
+    // Outside the RNG-scoped modules the rule does not apply.
+    assert!(rules_fired("rust/src/faults/fixture.rs", src).is_empty());
+}
+
+#[test]
+fn rng_discipline_blesses_derived_seeds_and_test_regions() {
+    let derived = "fn f(seed: u64) {\n\
+                   let mut a = Xoshiro256::seed_from(seed ^ 0xE17E_5EED);\n\
+                   let mut b = Xoshiro256::seed_from(stream_seed(seed, STREAM_ARRIVALS, 0));\n\
+                   }\n";
+    assert!(rules_fired("rust/src/scenarios/fixture.rs", derived).is_empty());
+    // Pinned literal seeds are the point of a test.
+    let tests = "#[cfg(test)]\n\
+                 mod tests {\n\
+                     #[test]\n\
+                     fn pinned() { let mut rng = Xoshiro256::seed_from(7); }\n\
+                 }\n";
+    assert!(rules_fired("rust/src/sim/fixture.rs", tests).is_empty());
+}
+
+// --- unsafe-forbid -------------------------------------------------------
+
+#[test]
+fn unsafe_forbid_fires_everywhere() {
+    let src = "fn f(p: *const u8) -> u8 { unsafe { *p } }\n";
+    assert_eq!(rules_fired("rust/src/rng/fixture.rs", src), vec![Rule::UnsafeForbid]);
+    assert_eq!(rules_fired("examples/fixture.rs", src), vec![Rule::UnsafeForbid]);
+    // …but never from inside a string or comment.
+    let masked = "// unsafe in prose\nfn f() -> &'static str { \"unsafe\" }\n";
+    assert!(rules_fired("rust/src/rng/fixture.rs", masked).is_empty());
+}
+
+// --- allow directives ----------------------------------------------------
+
+#[test]
+fn allow_directive_suppresses_on_line_or_line_above() {
+    let above = "// lint: allow(hash-iter): membership-only, never iterated\n\
+                 fn f() { let m: HashMap<u64, f64> = HashMap::new(); }\n";
+    assert!(rules_fired("rust/src/sim/fixture.rs", above).is_empty());
+    let inline = "fn f() { let m: HashSet<u64> = HashSet::new(); } \
+                  // lint: allow(hash-iter): membership-only\n";
+    assert!(rules_fired("rust/src/sim/fixture.rs", inline).is_empty());
+}
+
+#[test]
+fn reasonless_allow_suppresses_nothing_and_is_flagged() {
+    let src = "// lint: allow(hash-iter)\n\
+               fn f() { let m: HashMap<u64, f64> = HashMap::new(); }\n";
+    let got = rules_fired("rust/src/sim/fixture.rs", src);
+    assert!(got.contains(&Rule::HashIter), "finding must survive: {got:?}");
+    assert!(got.contains(&Rule::StaleAllow), "directive must be flagged: {got:?}");
+}
+
+#[test]
+fn stale_allow_fires_when_nothing_is_suppressed() {
+    let src = "// lint: allow(wall-clock): leftover from a removed timer\n\
+               fn f() { let x = 1; }\n";
+    assert_eq!(rules_fired("rust/src/sim/fixture.rs", src), vec![Rule::StaleAllow]);
+}
+
+#[test]
+fn wrong_rule_in_allow_does_not_suppress() {
+    let src = "// lint: allow(wall-clock): wrong rule named\n\
+               fn f() { let m: HashMap<u64, f64> = HashMap::new(); }\n";
+    let got = rules_fired("rust/src/sim/fixture.rs", src);
+    assert!(got.contains(&Rule::HashIter));
+    assert!(got.contains(&Rule::StaleAllow));
+}
+
+// --- baseline ------------------------------------------------------------
+
+#[test]
+fn baseline_round_trips_and_filters() {
+    let src = "fn f() { let m: HashMap<u64, f64> = HashMap::new(); }\n";
+    let found = lint_source("rust/src/sim/fixture.rs", src);
+    assert_eq!(found.len(), 1);
+    let mut b = Baseline::from_findings(&found);
+    assert_eq!(b.entries.len(), 1);
+    b.entries[0].justification = "fixture: accepted for the round-trip test".to_string();
+
+    let reparsed = Baseline::parse(&b.render()).expect("rendered baseline must parse");
+    assert_eq!(reparsed.entries, b.entries);
+
+    // Baselined finding is absorbed; an unrelated finding is new.
+    let r = reparsed.filter(found);
+    assert!(r.new.is_empty(), "baselined finding leaked: {:?}", r.new);
+    assert_eq!(r.suppressed, 1);
+    assert!(r.stale.is_empty());
+
+    let other = lint_source(
+        "rust/src/des/fixture.rs",
+        "fn g() { let s: HashSet<u64> = HashSet::new(); }\n",
+    );
+    let r = reparsed.filter(other);
+    assert_eq!(r.new.len(), 1, "unrelated finding must gate");
+    assert_eq!(r.suppressed, 0);
+    assert_eq!(r.stale.len(), 1, "unused entry must be reported stale");
+}
+
+#[test]
+fn baseline_rejects_missing_justification_and_unknown_rules() {
+    let no_why = "hash-iter @ rust/src/sim/x.rs @ let m = HashMap::new();\n";
+    assert!(Baseline::parse(no_why).is_err(), "justification is mandatory");
+    let bad_rule = "no-such-rule @ f.rs @ x # because\n";
+    assert!(Baseline::parse(bad_rule).is_err());
+    let comments_ok = "# a comment\n\n  # another\n";
+    assert!(Baseline::parse(comments_ok).unwrap().entries.is_empty());
+}
+
+#[test]
+fn baseline_matches_on_snippet_not_line_number() {
+    // The same hazard, shifted three lines down by unrelated edits,
+    // still matches its baseline entry.
+    let v1 = "fn f() { let m: HashMap<u64, f64> = HashMap::new(); }\n";
+    let v2 = "// new\n// comment\n// block\n\
+              fn f() { let m: HashMap<u64, f64> = HashMap::new(); }\n";
+    let mut b = Baseline::from_findings(&lint_source("rust/src/sim/fixture.rs", v1));
+    b.entries[0].justification = "fixture".to_string();
+    let r = b.filter(lint_source("rust/src/sim/fixture.rs", v2));
+    assert!(r.new.is_empty(), "line shift must not invalidate the entry");
+    assert_eq!(r.suppressed, 1);
+}
+
+// --- the repo gate -------------------------------------------------------
+
+#[test]
+fn repo_lints_clean_against_checked_in_baseline() {
+    // Cargo runs integration tests with cwd = the `rust/` directory, so
+    // the repo root is one level up — the same discovery `fmedge lint`
+    // uses when invoked without --root.
+    let root = fmedge::analysis::detect_root().expect("repo root");
+    let baseline_path = root.join(fmedge::analysis::DEFAULT_BASELINE);
+    let baseline = match std::fs::read_to_string(&baseline_path) {
+        Ok(text) => Some(Baseline::parse(&text).expect("checked-in baseline must parse")),
+        Err(_) => None,
+    };
+    let report = fmedge::analysis::run_lint(&root, baseline.as_ref()).expect("lint run");
+    assert!(report.files > 0, "scan must find the crate sources");
+    assert!(
+        report.clean(),
+        "the tree must lint clean — new findings:\n{}",
+        report.render()
+    );
+    assert!(
+        report.stale_baseline.is_empty(),
+        "stale baseline entries: {:?}",
+        report.stale_baseline
+    );
+}

@@ -91,7 +91,7 @@ fn assert_spans_telescope(obs: &Observer, env: &SimEnv, m: &fmedge::metrics::Tri
         }
     }
     let mut span_lat: Vec<f64> = rep.tasks.iter().map(|t| t.latency_ms).collect();
-    span_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    span_lat.sort_by(f64::total_cmp);
     assert_eq!(span_lat.len(), m.latencies_ms.len(), "{what}: latency count");
     for (a, b) in span_lat.iter().zip(&m.latencies_ms) {
         assert!(

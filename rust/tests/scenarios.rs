@@ -185,7 +185,7 @@ fn zone_outage_takes_whole_racks_down_and_recovers() {
     let cs = ScenarioSpec::zone_outage().compile(&env, &opts, 77);
     // Over this horizon the template is stochastic; assert structural
     // invariants on whatever was generated.
-    let mut down = std::collections::HashSet::new();
+    let mut down = std::collections::BTreeSet::new();
     let cap = ((cfg.network.num_ess - 1) / 2).max(1);
     for ev in cs.faults.events() {
         match ev.kind {
