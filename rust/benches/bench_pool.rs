@@ -1,0 +1,125 @@
+//! P10 — elastic replica-pool overhead and scaling-event throughput.
+//! Three layers:
+//!
+//! * **engine on/off**: the same faulted diurnal trial (both engines)
+//!   with the pool tier off vs on — the off rows price the
+//!   `Option`-gating overhead (target: indistinguishable from pre-pool),
+//!   the on rows price shared-rate bookkeeping + policy stepping.
+//! * **manager**: raw `PoolManager::step` throughput over a synthetic
+//!   occupancy/backlog wave — scaling decisions/sec with warm-up queues
+//!   and drain lists in play.
+//!
+//! Run: `cargo bench --bench bench_pool` (FMEDGE_BENCH_ITERS to
+//! override; `FMEDGE_BENCH_JSON=BENCH_pool.json` saves the
+//! perf-trajectory rows).
+
+use fmedge::baselines::Proposal;
+use fmedge::benchkit::{bench, fmt_duration, print_data_table, save_json};
+use fmedge::config::ExperimentConfig;
+use fmedge::des::{run_des_trial_faulted_in, DesArena, DesOptions};
+use fmedge::pool::{Autoscale, PoolConfig, PoolManager};
+use fmedge::scenarios::ScenarioSpec;
+use fmedge::sim::{run_trial_faulted, SimEnv, SimOptions, Strategy};
+
+fn main() {
+    let iters: usize = std::env::var("FMEDGE_BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(5);
+    let headers = ["bench", "tasks", "mean", "p95", "note"];
+    let mut rows = Vec::new();
+
+    let mut cfg = ExperimentConfig::paper_default();
+    cfg.workload.num_users = 16;
+    cfg.controller.effcap_samples = 512;
+    cfg.sim.slots = 200;
+    let seed = 7u64;
+    let env = SimEnv::build(&cfg, seed);
+    let opts = SimOptions::from_config(&cfg);
+    let cs = ScenarioSpec::by_name("diurnal")
+        .expect("library scenario")
+        .compile(&env, &opts, seed ^ 0xBE_0010);
+    let mut pooled = opts.clone();
+    pooled.pool = Some(PoolConfig::from_config(&cfg));
+
+    // Engine rows: pool off vs on, slotted then DES, same paired fixture.
+    let mut arena: DesArena = DesArena::new();
+    for (name, pool_on, des) in [
+        ("engine/slotted pool-off", false, false),
+        ("engine/slotted pool-on", true, false),
+        ("engine/des pool-off", false, true),
+        ("engine/des pool-on", true, true),
+    ] {
+        let o = if pool_on { &pooled } else { &opts };
+        let mut tasks = 0usize;
+        let r = bench(name, 1, iters, || {
+            let mut strategy: Box<dyn Strategy> = if pool_on {
+                Box::new(Autoscale::new())
+            } else {
+                Box::new(Proposal::new())
+            };
+            let m = if des {
+                run_des_trial_faulted_in(
+                    &mut arena,
+                    &env,
+                    strategy.as_mut(),
+                    seed,
+                    &DesOptions::from_sim(o),
+                    &cs.trace,
+                    &cs.faults,
+                )
+            } else {
+                run_trial_faulted(&env, strategy.as_mut(), seed, o, &cs.trace, &cs.faults)
+            };
+            tasks = m.total_tasks;
+        });
+        rows.push(vec![
+            name.to_string(),
+            tasks.to_string(),
+            fmt_duration(r.mean),
+            fmt_duration(r.p95),
+            if pool_on { "elastic tier armed" } else { "gating overhead only" }.to_string(),
+        ]);
+    }
+
+    // Manager row: raw scaling-decision throughput. A deterministic
+    // occupancy wave drives grow, shrink, and scale-to-zero branches;
+    // one "event" is one PoolManager::step call.
+    let (nv, nl, steps) = (16usize, 4usize, 50_000usize);
+    let mut scale_events = 0u64;
+    let name = "manager/step wave";
+    let r = bench(name, 1, iters, || {
+        let mut pm = PoolManager::new(nv, nl, PoolConfig::from_config(&cfg), seed);
+        let mut grown = Vec::new();
+        for s in 0..steps {
+            let now = s as f64 * 10.0;
+            // Triangle wave: ramp occupancy 0..8 and back, per station.
+            let phase = s % 32;
+            let occ = if phase < 16 { phase as u32 / 2 } else { (31 - phase) as u32 / 2 };
+            for v in 0..nv {
+                for m in 0..nl {
+                    pm.promote_ready_all(now);
+                    pm.step(v, m, occ, occ / 2, now, &mut grown);
+                }
+            }
+            pm.end_slot(10.0);
+        }
+        scale_events = pm.scale_events;
+    });
+    let calls = (steps * nv * nl) as f64;
+    let cps = calls / (r.mean_ns() / 1e9);
+    rows.push(vec![
+        name.to_string(),
+        format!("{scale_events} scale events"),
+        fmt_duration(r.mean),
+        fmt_duration(r.p95),
+        format!("{cps:.3e} step calls/sec"),
+    ]);
+
+    let title = "pool perf — elastic tier on/off overhead and scaling throughput";
+    print_data_table(title, &headers, &rows);
+    if let Ok(path) = std::env::var("FMEDGE_BENCH_JSON") {
+        save_json(&path, title, &headers, &rows).expect("save bench json");
+        println!("\nbench rows saved to {path}");
+    }
+}

@@ -25,11 +25,11 @@ use super::lexer::{Comment, Lexed, TokKind, Token};
 /// randomized iteration order anywhere in these paths can leak into
 /// dispatch order, RNG consumption order, or float summation order.
 pub const DETERMINISTIC_MODULES: &[&str] =
-    &["sim", "des", "faults", "scenarios", "controller", "routing", "exp"];
+    &["sim", "des", "faults", "scenarios", "controller", "routing", "exp", "pool"];
 
 /// Modules whose RNG construction must go through
 /// [`crate::rng::stream_seed`] so per-cell/per-trial streams never alias.
-pub const RNG_DISCIPLINE_MODULES: &[&str] = &["sim", "exp", "scenarios"];
+pub const RNG_DISCIPLINE_MODULES: &[&str] = &["sim", "exp", "scenarios", "pool"];
 
 /// Path prefixes where wall-clock reads are legitimate: the threaded
 /// serving path, the bench harness, CLI/experiment cell timing, and the

@@ -8,10 +8,13 @@
 //!   and (optionally) validate measured sojourns against `g_{m,ε}(y)`.
 //! * `gtable` — build and print the effective-capacity delay table
 //!   (native or PJRT-accelerated with `--accel`).
+//! * `pool` — the elastic-autoscaling demo: replica pools + shared-rate
+//!   contention (autoscale) vs the fixed-parallelism path on one paired
+//!   scenario, both engines.
 //! * `faults` — sweep failure rate × load grids under fault injection
 //!   and report degradation vs the no-fault baseline.
 //! * `sweep` — parallel experiment orchestrator for the EXPERIMENTS.md
-//!   grids (p1b/p2/p4/p5) with CSV/JSON artifacts.
+//!   grids (p1b/p2/p4/p5/p10) with CSV/JSON artifacts.
 //! * `trace` — run one observed trial with span tracing enabled and
 //!   export Chrome trace JSON / JSONL spans / per-slot telemetry CSV,
 //!   with `--blame` for deadline-miss attribution.
@@ -194,6 +197,13 @@ COMMANDS:
             streaming metrics at large N, --bench for the calendar
             push/pop microbench + engine events/sec report
             [FMEDGE_BENCH_JSON=FILE to save])
+  pool      elastic-autoscaling demo (EXPERIMENTS P10): run one compiled
+            scenario through both engines with the replica-pool tier on
+            (autoscale: grow/shrink/scale-to-zero, seeded cold starts,
+            shared-rate contention) and off (fixed-y proposal) on the
+            identical trace + fault schedule, and print the on-time vs
+            deployment-cost trade (--scenario NAME [default diurnal],
+            --slots N, --load X, --seed N, --config FILE)
   faults    robustness sweep: replay seeded fault schedules (server
             outages, link outages/degradation, replica fail-stop) over a
             failure-rate x load grid and compare strategies' on-time
@@ -202,12 +212,14 @@ COMMANDS:
             --slots N, --seed N, --engine slotted|des, --config FILE)
   sweep     parallel experiment orchestrator: run an EXPERIMENTS.md grid
             end-to-end and write CSV/JSON artifacts
-            (--experiment p1b|p2|p4|p5, --threads N [bit-identical for
-            any N], --trials N, --slots N, --seed N, --out FILE.csv,
+            (--experiment p1b|p2|p4|p5|p10, --threads N [bit-identical
+            for any N], --trials N, --slots N, --seed N, --out FILE.csv,
             --json FILE.json; grid axes: --loads, --rates, --strategies,
             --engines slotted,des, --epsilons, --scenarios; p5 scenario
             names: baseline, diurnal, mmpp, flash-crowd, mobility,
-            commuter, zone-outage, cascade, rush-hour, metro-1m)
+            commuter, zone-outage, cascade, rush-hour, metro-1m;
+            p10 runs autoscale-vs-fixed-y on paired traces over
+            --scenarios [default diurnal,flash-crowd] x --loads)
   trace     run one observed trial with per-task span tracing and slot
             telemetry (--engine slotted|des, --strategy ..., --slots N,
             --load X, --seed N, --rate R arms a seeded fault schedule,

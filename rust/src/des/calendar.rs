@@ -101,6 +101,16 @@ pub enum EventKind {
     /// the stage was meanwhile dispatched, completed, or its task
     /// dropped.
     Retry { task: u64, local: usize },
+    /// A warming pool replica's cold-start window closed: promote it to
+    /// warm at station `(node, light_idx)` and rebalance the station's
+    /// shared rate (scheduled only with `DesOptions::pool` armed). A
+    /// no-op if the warming entry was cancelled by a shrink or outage.
+    PoolWarm { node: usize, light_idx: usize },
+    /// A pooled light execution's projected completion under the shared
+    /// rate. `run` is its `pool::SharedRate` slot and `rt` the reschedule
+    /// token stamped at scheduling — occupancy changes reschedule the
+    /// completion and bump the token, so superseded events no-op.
+    PoolDone { run: u32, rt: u32 },
 }
 
 /// A scheduled event. `time_ms` is the exact time handlers run with;

@@ -69,6 +69,13 @@ pub struct DesOptions {
     /// back empty and percentile/validation queries fall back to the
     /// streamed histograms. Default off (bit-identical legacy output).
     pub streaming: bool,
+    /// Elastic replica pools + shared-rate contention (EXPERIMENTS
+    /// §P10): light stations become processor-sharing pools whose warm
+    /// replica counts a [`crate::pool::PoolManager`] scales per tick,
+    /// and in-flight completions are rescheduled as occupancy changes.
+    /// `None` (the default) never enters the pool path — every number
+    /// is byte-identical to the fixed-capacity engine.
+    pub pool: Option<crate::pool::PoolConfig>,
 }
 
 impl DesOptions {
@@ -80,6 +87,7 @@ impl DesOptions {
             batching: None,
             failover: o.failover,
             streaming: false,
+            pool: o.pool.clone(),
         }
     }
 
@@ -118,6 +126,9 @@ pub struct DesArena<C = Calendar> {
     records: Vec<TaskRecord>,
     busy_scratch: Vec<Vec<u32>>,
     y_scratch: Vec<Vec<u32>>,
+    /// Shared-rate run bookkeeping for pooled trials; untouched (and
+    /// never read) when `DesOptions::pool` is off.
+    shared_rate: crate::pool::SharedRate,
 }
 
 impl<C: Default> DesArena<C> {
@@ -180,6 +191,14 @@ struct Des<'a, C: EventCalendar> {
     obs: Option<&'a mut Observer>,
     busy_scratch: &'a mut Vec<Vec<u32>>,
     y_scratch: &'a mut Vec<Vec<u32>>,
+    /// Elastic pools (§P10); `None` keeps every handler on the exact
+    /// fixed-capacity station path.
+    pool_mgr: Option<crate::pool::PoolManager>,
+    sr: &'a mut crate::pool::SharedRate,
+    /// Member-id scratch for shared-rate reschedules.
+    pool_scratch: Vec<u32>,
+    /// Ready-time scratch for `PoolManager::step`.
+    pool_grown: Vec<f64>,
 }
 
 impl<'a, C: EventCalendar> Des<'a, C> {
@@ -547,6 +566,15 @@ impl<'a, C: EventCalendar> Des<'a, C> {
         let y = self.plans.y[p];
         let proc_ms = self.plans.proc_ms[p];
         self.plans.remove(plan);
+        if self.pool_mgr.is_some() {
+            // Pooled trial: the payload joins processor sharing (the
+            // stations never booked a commitment, so a dropped task
+            // simply never joins).
+            if self.t.contains(id) {
+                self.pool_join(id, local, node, light_idx, y, proc_ms, now);
+            }
+            return;
+        }
         if !self.t.contains(id) {
             // Dropped mid-transfer: never joins, release the commitment.
             self.stations.abort_assignment(node, light_idx);
@@ -610,6 +638,83 @@ impl<'a, C: EventCalendar> Des<'a, C> {
         self.handle_stage_done(id, local, node, now);
     }
 
+    /// Recompute station `(v, m)`'s shared-rate speed for `replicas`
+    /// warm replicas and reschedule every member's completion at its new
+    /// ETA (superseded `PoolDone` events go stale via the bumped token).
+    /// Caller settles the station to `now` first. A stalled station
+    /// (zero replicas) schedules nothing — the next warm-up or policy
+    /// step picks its members back up.
+    fn pool_resched(&mut self, v: usize, m: usize, now: f64, replicas: u32) {
+        self.sr.rebalance(v, m, replicas);
+        let mut tmp = std::mem::take(&mut self.pool_scratch);
+        tmp.clear();
+        tmp.extend_from_slice(self.sr.members(v, m));
+        for &run in tmp.iter() {
+            let rt = self.sr.bump(run);
+            if let Some(eta) = self.sr.eta(run) {
+                self.cal
+                    .schedule(now + eta, EventKind::PoolDone { run, rt });
+            }
+        }
+        self.pool_scratch = tmp;
+    }
+
+    /// [`Self::pool_resched`] at the pool manager's current warm count.
+    fn pool_rebalance(&mut self, v: usize, m: usize, now: f64) {
+        let replicas = self.pool_mgr.as_ref().map_or(0, |pm| pm.active(v, m));
+        self.pool_resched(v, m, now, replicas);
+    }
+
+    /// Pooled station join: the payload enters processor sharing
+    /// immediately (no FIFO wait — contention shows up as stretched
+    /// service instead), which reschedules every co-located completion.
+    fn pool_join(
+        &mut self,
+        id: u64,
+        local: usize,
+        node: usize,
+        light_idx: usize,
+        y: u32,
+        proc_ms: f64,
+        now: f64,
+    ) {
+        if let Some(r) = self.rec() {
+            r.light_started(id, local, now);
+        }
+        self.sr.settle(node, light_idx, now);
+        self.sr.join(id, local, node, light_idx, y, now, proc_ms);
+        self.pool_rebalance(node, light_idx, now);
+    }
+
+    /// A pooled execution's completion event landed (and is still the
+    /// run's live schedule): record the measured sojourn, shrink the
+    /// station's occupancy — speeding up the survivors — and walk the
+    /// DAG exactly like a station completion.
+    fn handle_pool_done(&mut self, run: u32, rt: u32, now: f64) {
+        if !self.sr.is_live(run, rt) {
+            return; // rescheduled or killed with its node
+        }
+        let (v, m) = self.sr.station_of(run);
+        self.sr.settle(v, m, now);
+        let (id, local, node, light_idx, y, join_ms) = self.sr.complete(run);
+        self.collector.record_sojourn(light_idx, y, now - join_ms);
+        self.pool_rebalance(node, light_idx, now);
+        self.handle_stage_done(id, local, node, now);
+    }
+
+    /// A warming replica's cold-start window closed: promote it and
+    /// rebalance (a no-op for warm-ups cancelled by shrink or outage).
+    fn handle_pool_warm(&mut self, node: usize, light_idx: usize, now: f64) {
+        let fired = self
+            .pool_mgr
+            .as_mut()
+            .map_or(false, |pm| pm.warm_fire(node, light_idx, now));
+        if fired {
+            self.sr.settle(node, light_idx, now);
+            self.pool_rebalance(node, light_idx, now);
+        }
+    }
+
     /// Invoke the deployment strategy on the pending light queue.
     fn handle_decide(&mut self, strategy: &mut dyn Strategy, now: f64) {
         self.decide_scheduled = false;
@@ -654,7 +759,14 @@ impl<'a, C: EventCalendar> Des<'a, C> {
         let slot = ((now / self.opts.slot_ms).floor() as usize)
             .min(self.opts.slots.saturating_sub(1));
 
-        self.stations.busy_into(self.busy_scratch);
+        if self.pool_mgr.is_some() {
+            // Pooled busy view: live occupancy in the same instance-group
+            // units the stations report, so strategies are none the wiser.
+            let max_y = env.gtable.max_parallelism().max(1);
+            self.sr.busy_into(self.busy_scratch, max_y);
+        } else {
+            self.stations.busy_into(self.busy_scratch);
+        }
         let mut residual = crate::sim::residual_after_busy(
             &self.residual_static,
             &env.light_resources,
@@ -719,10 +831,13 @@ impl<'a, C: EventCalendar> Des<'a, C> {
         };
         debug_assert_eq!(decision.assignments.len(), requests.len());
 
-        // New instance counts may free FIFO'd work immediately.
-        let promoted = self.stations.on_decision(&decision.x);
-        for (v, m, w) in promoted {
-            self.start_service(v, m, w, now);
+        // New instance counts may free FIFO'd work immediately. Pooled
+        // trials have no FIFO: capacity is the pool manager's business.
+        if self.pool_mgr.is_none() {
+            let promoted = self.stations.on_decision(&decision.x);
+            for (v, m, w) in promoted {
+                self.start_service(v, m, w, now);
+            }
         }
 
         let alpha = env.cfg.controller.contention_alpha;
@@ -795,7 +910,9 @@ impl<'a, C: EventCalendar> Des<'a, C> {
             self.t.node[bl] = Some(asn.node);
             self.t.token[bl] += 1;
             let token = self.t.token[bl];
-            self.stations.note_assigned(asn.node, asn.light_idx);
+            if self.pool_mgr.is_none() {
+                self.stations.note_assigned(asn.node, asn.light_idx);
+            }
 
             // Hop-by-hop transfer of the latest-arriving parent payload:
             // hops that analytically completed while the request waited
@@ -879,6 +996,13 @@ impl<'a, C: EventCalendar> Des<'a, C> {
                 }
                 self.core_router.set_node_down(node);
                 self.stations.fail_node(node);
+                if let Some(pm) = self.pool_mgr.as_mut() {
+                    // Replicas die with their node; pooled executions
+                    // there go stale (their cancelled stages re-dispatch
+                    // through the walk below, same as station mode).
+                    pm.fail_node(node);
+                    self.sr.kill_node(node);
+                }
                 // Payloads in transit toward the dead station never land
                 // (freeing the plan makes their events stale).
                 self.plans.remove_toward(node, |_| {});
@@ -980,6 +1104,11 @@ impl<'a, C: EventCalendar> Des<'a, C> {
                     d.apply_deferred(&fev.kind);
                 }
                 self.core_router.set_node_up(node, now);
+                if let Some(pm) = self.pool_mgr.as_mut() {
+                    // Capacity returns, replicas don't: the policy
+                    // regrows the node's pools from demand.
+                    pm.node_restored(node);
+                }
             }
             FaultKind::CoreReplicaFail { node, core_idx } => {
                 self.core_router.kill_instance(node, core_idx);
@@ -1094,19 +1223,23 @@ impl<'a, C: EventCalendar> Des<'a, C> {
                 }
             }
         }
-        // Per-slot light cost: maintenance on busy instance-groups,
-        // parallelism on in-flight work (eq. 7 under continuous time).
-        self.stations.busy_into(self.busy_scratch);
-        self.stations.in_flight_into(self.y_scratch);
-        self.costs.charge_light_slot(
-            &self.busy_scratch[..],
-            &self.y_scratch[..],
-            &self.light_dp,
-            &self.light_mt,
-            &self.light_pl,
-        );
-        self.collector
-            .record_queue_depth(self.pending.len() + self.stations.waiting_total());
+        if self.pool_mgr.is_some() {
+            self.pool_tick(now);
+        } else {
+            // Per-slot light cost: maintenance on busy instance-groups,
+            // parallelism on in-flight work (eq. 7 under continuous time).
+            self.stations.busy_into(self.busy_scratch);
+            self.stations.in_flight_into(self.y_scratch);
+            self.costs.charge_light_slot(
+                &self.busy_scratch[..],
+                &self.y_scratch[..],
+                &self.light_dp,
+                &self.light_mt,
+                &self.light_pl,
+            );
+            self.collector
+                .record_queue_depth(self.pending.len() + self.stations.waiting_total());
+        }
         // Per-tick telemetry snapshot (observer-gated, read-only).
         if self.obs.as_ref().map_or(false, |o| o.metrics.is_some()) {
             let env = self.env;
@@ -1132,6 +1265,43 @@ impl<'a, C: EventCalendar> Des<'a, C> {
                 .count() as f64
                 / self.busy_scratch.len().max(1) as f64;
             let vq = self.t.vq_total();
+            if let Some(pm) = self.pool_mgr.as_ref() {
+                // Pool snapshot + the live `g_{m,ε}` of the §P10 story:
+                // the paper's delay-bound machinery evaluated at the
+                // worst actual occupancy/replica ratio instead of the
+                // committed `y`.
+                let alpha = self.opts.pool.as_ref().map_or(1.0, |p| p.alpha);
+                let ctrl = &env.cfg.controller;
+                let est = crate::effcap::EffCapEstimator::log_grid(
+                    ctrl.theta_lo,
+                    ctrl.theta_hi,
+                    ctrl.theta_n,
+                );
+                let mut worst = f64::NEG_INFINITY;
+                for v in 0..self.node_up.len() {
+                    for (m, &ms_id) in env.app.catalog.light_ids().iter().enumerate() {
+                        let occ = self.sr.occupancy(v, m);
+                        if occ == 0 {
+                            continue;
+                        }
+                        let g = crate::pool::live_delay_bound(
+                            &est,
+                            &env.light_rate_samples[m],
+                            env.app.catalog.spec(ms_id).workload_mb,
+                            ctrl.epsilon,
+                            occ,
+                            pm.active(v, m),
+                            alpha,
+                        );
+                        if g.is_finite() && g > worst {
+                            worst = g;
+                        }
+                    }
+                }
+                if let Some(o) = self.obs.as_deref_mut() {
+                    o.set_pool_gauges(pm.active_total(), pm.warming_total(), worst);
+                }
+            }
             if let Some(o) = self.obs.as_deref_mut() {
                 o.sample_slot(now, &backlog, &committed_y, busy_groups, node_util, vq, &env.gtable);
             }
@@ -1139,6 +1309,75 @@ impl<'a, C: EventCalendar> Des<'a, C> {
         if !self.pending.is_empty() {
             self.request_decide(now);
         }
+    }
+
+    /// Pooled slot boundary: step the scaling policy per station in
+    /// sorted `(node, service)` order, schedule `PoolWarm` events for
+    /// grown replicas, reschedule stations whose draining replicas
+    /// retired (the survivors speed up), then charge deployment cost on
+    /// the pool state — instance column `x` = warm + warming replicas
+    /// (instantiation-on-increase prices every cold start), parallelism
+    /// column `y` = executions actually being served.
+    fn pool_tick(&mut self, now: f64) {
+        let nl = self.env.app.catalog.num_light();
+        let nv = self.node_up.len();
+        // Station-attributed backlog: pending light work by service.
+        let mut backlog = vec![0u32; nl];
+        for &(pid, plocal) in self.pending.iter() {
+            if let Some(s) = self.t.slot(pid) {
+                let task_type = self.t.task_type[s as usize] as usize;
+                let ms_id = self.env.app.task_types[task_type].services[plocal];
+                if let Some(m) = self.light_idx_of[ms_id.0] {
+                    backlog[m] += 1;
+                }
+            }
+        }
+        let mut pm = self.pool_mgr.take().expect("pool_tick without a pool");
+        let mut grown = std::mem::take(&mut self.pool_grown);
+        for v in 0..nv {
+            for m in 0..nl {
+                let in_flight = self.sr.occupancy(v, m);
+                let retired = pm.step(v, m, in_flight, backlog[m], now, &mut grown);
+                for &ready in grown.iter() {
+                    self.cal
+                        .schedule(ready, EventKind::PoolWarm { node: v, light_idx: m });
+                    if let Some(r) = self.rec() {
+                        r.warmup(v, now, ready);
+                    }
+                }
+                if retired > 0 {
+                    self.sr.settle(v, m, now);
+                    self.pool_resched(v, m, now, pm.active(v, m));
+                }
+            }
+        }
+        pm.end_slot(self.opts.slot_ms);
+        // Cost columns from the pool state, in the scratch matrices the
+        // telemetry snapshot also reads.
+        self.busy_scratch.resize(nv, Vec::new());
+        self.y_scratch.resize(nv, Vec::new());
+        for v in 0..nv {
+            self.busy_scratch[v].clear();
+            self.busy_scratch[v].resize(nl, 0);
+            self.y_scratch[v].clear();
+            self.y_scratch[v].resize(nl, 0);
+            for m in 0..nl {
+                self.busy_scratch[v][m] = pm.total(v, m);
+                self.y_scratch[v][m] = self.sr.occupancy(v, m).min(pm.active(v, m));
+            }
+        }
+        self.costs.charge_light_slot(
+            &self.busy_scratch[..],
+            &self.y_scratch[..],
+            &self.light_dp,
+            &self.light_mt,
+            &self.light_pl,
+        );
+        // Processor sharing has no station FIFO: the depth is the
+        // controller backlog alone.
+        self.collector.record_queue_depth(self.pending.len());
+        self.pool_grown = grown;
+        self.pool_mgr = Some(pm);
     }
 }
 
@@ -1289,7 +1528,16 @@ fn run_des_inner<C: EventCalendar>(
         records,
         busy_scratch,
         y_scratch,
+        shared_rate,
     } = arena;
+
+    // Elastic pools (§P10): fresh manager per trial, shared-rate table
+    // reset in place (a reused arena is bit-identical to a fresh one).
+    // With `pool` off neither is ever touched.
+    let pool_mgr = opts.pool.as_ref().map(|pc| {
+        shared_rate.reset(nv, nl, pc.alpha);
+        crate::pool::PoolManager::new(nv, nl, pc.clone(), seed)
+    });
 
     let has_faults = !faults.is_empty();
     let mut d = Des {
@@ -1321,6 +1569,10 @@ fn run_des_inner<C: EventCalendar>(
         obs,
         busy_scratch,
         y_scratch,
+        pool_mgr,
+        sr: shared_rate,
+        pool_scratch: Vec::new(),
+        pool_grown: Vec::new(),
     };
 
     // Seed the calendar. Fault events go in first so that, at equal
@@ -1384,6 +1636,8 @@ fn run_des_inner<C: EventCalendar>(
             } => d.handle_batch_flush(node, light_idx, epoch, now),
             EventKind::Fault { idx } => d.handle_fault(idx, now),
             EventKind::Retry { task, local } => d.handle_retry(task, local, now),
+            EventKind::PoolWarm { node, light_idx } => d.handle_pool_warm(node, light_idx, now),
+            EventKind::PoolDone { run, rt } => d.handle_pool_done(run, rt, now),
         }
     }
 
@@ -1412,6 +1666,7 @@ fn run_des_inner<C: EventCalendar>(
         t,
         cal,
         records,
+        pool_mgr,
         ..
     } = d;
     debug_assert!(
@@ -1422,5 +1677,12 @@ fn run_des_inner<C: EventCalendar>(
     let mut metrics = collector.finish(&costs);
     metrics.vq_residual = t.live();
     metrics.des_events = cal.processed();
+    if let Some(pm) = pool_mgr {
+        metrics.cold_starts = pm.cold_starts;
+        metrics.pool_scale_events = pm.scale_events;
+        metrics.pool_scale_to_zero = pm.scale_to_zero_events;
+        metrics.pool_replica_slot_seconds = pm.replica_slot_seconds;
+        metrics.pool_size = pm.size_hist;
+    }
     (metrics, std::mem::take(records))
 }

@@ -302,6 +302,7 @@ mod tests {
             batching: None,
             failover: crate::coordinator::FailoverPolicy::default(),
             streaming: false,
+            pool: None,
         };
         let (m, records) = run_des_trial_recorded(&env, &mut Proposal::new(), 77, &opts, &trace);
         assert_eq!(m.total_tasks, 1);

@@ -29,6 +29,11 @@
 //! * `p5`  — scenario-robustness ensemble over the
 //!   [`crate::scenarios`] library (non-stationary arrivals, ED churn,
 //!   correlated outages) under both engines.
+//! * `p10` — elastic autoscaling vs fixed-parallelism A/B
+//!   ([`crate::pool`]): paired traces across diurnal + flash-crowd
+//!   scenarios and load multipliers, both engines, reporting on-time
+//!   rate against deployment cost (replica-slot-seconds, cold starts,
+//!   pool-size p95).
 
 mod runner;
 mod stats;
@@ -60,6 +65,7 @@ pub enum Experiment {
     P2,
     P4,
     P5,
+    P10,
 }
 
 impl Experiment {
@@ -69,7 +75,8 @@ impl Experiment {
             "p2" => Ok(Experiment::P2),
             "p4" => Ok(Experiment::P4),
             "p5" => Ok(Experiment::P5),
-            other => Err(format!("unknown experiment `{other}` (p1b|p2|p4|p5)")),
+            "p10" => Ok(Experiment::P10),
+            other => Err(format!("unknown experiment `{other}` (p1b|p2|p4|p5|p10)")),
         }
     }
 
@@ -90,6 +97,9 @@ impl Experiment {
             Experiment::P2 => &["loads", "rates", "strategies", "engines", "scenarios"],
             Experiment::P4 => &["epsilons", "scenarios"],
             Experiment::P5 => &["loads", "rates", "epsilons"],
+            // p10 hardcodes its autoscale-vs-fixed mode pair (the A/B is
+            // the experiment), so the strategy axis is not consumed.
+            Experiment::P10 => &["rates", "epsilons", "strategies"],
         }
     }
 }
@@ -125,6 +135,9 @@ pub fn strategy_by_name(name: &str) -> Result<Box<dyn Strategy>, String> {
         "propavg" => Box::new(PropAvg::new()),
         "lbrr" => Box::new(LbrrStrategy::new()),
         "ga" => Box::new(GaStrategy::new(16, 12)),
+        // Pool-aware: per-instance y is pinned to 1 so parallelism comes
+        // from replica counts (crate::pool, §P10), not planned splits.
+        "autoscale" => Box::new(crate::pool::Autoscale::new()),
         other => return Err(format!("unknown strategy `{other}`")),
     })
 }
@@ -188,6 +201,14 @@ impl SweepConfig {
                 strategies: vec!["proposal".into()],
                 ..base
             },
+            // 400 slots for the same reason as p5: the diurnal cycle and
+            // the flash crowd must land inside the arrival window so the
+            // pool actually has peaks to chase and troughs to drain in.
+            Experiment::P10 => SweepConfig {
+                slots: 400,
+                scenarios: vec!["diurnal".into(), "flash-crowd".into()],
+                ..base
+            },
         }
     }
 }
@@ -206,6 +227,8 @@ const TAG_P4_FIXTURE: u64 = 0x4000;
 const TAG_P4_SCHEDULE: u64 = 0x4500;
 const TAG_P5_ENV: u64 = 0x5000;
 const TAG_P5_SCENARIO: u64 = 0x5100;
+const TAG_P10_ENV: u64 = 0xA000;
+const TAG_P10_SCENARIO: u64 = 0xA100;
 
 /// Tag-seeded FNV-1a fold: one definition so value-keyed and name-keyed
 /// stream coordinates cannot drift apart.
@@ -257,6 +280,7 @@ pub fn run_sweep(base: &ExperimentConfig, sc: &SweepConfig) -> Result<Table, Str
         Experiment::P2 => sweep_p2(base, sc),
         Experiment::P4 => sweep_p4(base, sc),
         Experiment::P5 => sweep_p5(base, sc),
+        Experiment::P10 => sweep_p10(base, sc),
     }
 }
 
@@ -777,6 +801,205 @@ fn sweep_p5(base: &ExperimentConfig, sc: &SweepConfig) -> Result<Table, String> 
     Ok(table)
 }
 
+// ---------------------------------------------------------------------
+// p10 — elastic autoscaling vs fixed parallelism (crate::pool, §P10)
+// ---------------------------------------------------------------------
+
+fn sweep_p10(base: &ExperimentConfig, sc: &SweepConfig) -> Result<Table, String> {
+    let engines: Vec<Engine> = sc
+        .engines
+        .iter()
+        .map(|e| Engine::parse(e))
+        .collect::<Result<_, _>>()?;
+    // The A/B pair: elastic pools driven by the Autoscale strategy vs the
+    // pre-pool fixed-parallelism proposal path on the same replayed
+    // trace + fault schedule.
+    let modes: [(&str, bool); 2] = [("autoscale", true), ("fixed-y", false)];
+    let specs: Vec<ScenarioSpec> = if sc.scenarios.is_empty() {
+        ["diurnal", "flash-crowd"]
+            .iter()
+            .map(|n| ScenarioSpec::by_name(n).expect("library scenario"))
+            .collect()
+    } else {
+        sc.scenarios
+            .iter()
+            .map(|n| {
+                ScenarioSpec::by_name(n).ok_or_else(|| format!("unknown scenario `{n}`"))
+            })
+            .collect::<Result<_, _>>()?
+    };
+
+    // Grid order (also row order): scenario, engine, load, mode.
+    let mut cells = Vec::new();
+    for sci in 0..specs.len() {
+        for ei in 0..engines.len() {
+            for li in 0..sc.loads.len() {
+                for mi in 0..modes.len() {
+                    cells.push((sci, ei, li, mi));
+                }
+            }
+        }
+    }
+    // Fixture keyed by (load, trial) — engines, scenarios, and modes all
+    // replay the same realized environment. Env streams are keyed by the
+    // load *value*, so a single row reproduces under any --loads subset.
+    struct Fixture {
+        seed: u64,
+        env: SimEnv,
+        opts: SimOptions,
+    }
+    let fixtures = run_grid2(sc.loads.len(), sc.trials, sc.threads, |li, trial| {
+        let mut cfg = base.clone();
+        cfg.sim.slots = sc.slots;
+        cfg.sim.load_multiplier = sc.loads[li];
+        let eseed = stream_seed(
+            sc.seed,
+            axis_stream(TAG_P10_ENV, sc.loads[li].to_bits()),
+            trial as u64,
+        );
+        let env = SimEnv::build(&cfg, eseed);
+        let opts = SimOptions::from_config(&cfg);
+        Fixture {
+            seed: eseed,
+            env,
+            opts,
+        }
+    });
+    // Compiled scenarios keyed by (scenario name, load value, trial) —
+    // both modes and both engines of a cell replay the identical trace
+    // and fault schedule (the §P10 pairing).
+    let compiled: Vec<Vec<CompiledScenario>> = run_grid2(
+        specs.len() * sc.loads.len(),
+        sc.trials,
+        sc.threads,
+        |flat, trial| {
+            let (sci, li) = (flat / sc.loads.len(), flat % sc.loads.len());
+            let fx = &fixtures[li][trial];
+            let croot = stream_seed(
+                sc.seed,
+                name_stream(TAG_P10_SCENARIO, &specs[sci].name),
+                sc.loads[li].to_bits(),
+            );
+            specs[sci].compile(&fx.env, &fx.opts, stream_seed(croot, 0, trial as u64))
+        },
+    );
+
+    struct Cell {
+        on_time: Welford,
+        light_cost: Welford,
+        tasks: usize,
+        replica_ss: f64,
+        cold_starts: u64,
+        scale_events: u64,
+        pool_size: Histogram,
+    }
+    let results = run_cells(cells.len(), sc.threads, |i| {
+        let (sci, ei, li, mi) = cells[i];
+        let pooled = modes[mi].1;
+        let mut on_time = Welford::new();
+        let mut light_cost = Welford::new();
+        let mut tasks = 0usize;
+        let mut replica_ss = 0.0f64;
+        let mut cold_starts = 0u64;
+        let mut scale_events = 0u64;
+        let mut pool_size = Histogram::linear(0.0, 512.0, 128);
+        // Engine storage reused across the cell's trials (clear, don't
+        // drop — bit-identical to fresh, asserted in tests/pool.rs).
+        let mut arena: DesArena = DesArena::new();
+        for (trial, cs) in compiled[sci * sc.loads.len() + li].iter().enumerate() {
+            let fx = &fixtures[li][trial];
+            let mut opts = fx.opts.clone();
+            let mut strategy: Box<dyn Strategy> = if pooled {
+                opts.pool = Some(crate::pool::PoolConfig::from_config(base));
+                Box::new(crate::pool::Autoscale::new())
+            } else {
+                Box::new(Proposal::new())
+            };
+            let m = match engines[ei] {
+                Engine::Slotted => run_trial_faulted(
+                    &fx.env,
+                    strategy.as_mut(),
+                    fx.seed,
+                    &opts,
+                    &cs.trace,
+                    &cs.faults,
+                ),
+                Engine::Des => run_des_trial_faulted_in(
+                    &mut arena,
+                    &fx.env,
+                    strategy.as_mut(),
+                    fx.seed,
+                    &DesOptions::from_sim(&opts),
+                    &cs.trace,
+                    &cs.faults,
+                ),
+            };
+            on_time.push(m.on_time_rate());
+            light_cost.push(m.light_cost);
+            tasks += m.total_tasks;
+            replica_ss += m.pool_replica_slot_seconds;
+            cold_starts += m.cold_starts;
+            scale_events += m.pool_scale_events;
+            // Fixed-y trials carry a default-config (empty) histogram;
+            // merge() asserts matching bucket layouts, so skip them.
+            if pooled {
+                pool_size.merge(&m.pool_size);
+            }
+        }
+        Cell {
+            on_time,
+            light_cost,
+            tasks,
+            replica_ss,
+            cold_starts,
+            scale_events,
+            pool_size,
+        }
+    });
+    let mut table = Table::new(
+        "p10 — elastic autoscaling vs fixed parallelism (paired traces)",
+        &[
+            "scenario",
+            "engine",
+            "mode",
+            "load",
+            "trials",
+            "tasks",
+            "on_time_mean",
+            "on_time_ci95",
+            "light_cost_mean",
+            "replica_slot_s",
+            "cold_starts",
+            "scale_events",
+            "pool_p95",
+        ],
+    );
+    for (i, c) in results.iter().enumerate() {
+        let (sci, ei, li, mi) = cells[i];
+        table.push_row(vec![
+            specs[sci].name.clone(),
+            engines[ei].name().to_string(),
+            modes[mi].0.to_string(),
+            format!("{:.2}", sc.loads[li]),
+            sc.trials.to_string(),
+            c.tasks.to_string(),
+            f6(c.on_time.mean()),
+            f6(c.on_time.ci95_half()),
+            f6(c.light_cost.mean()),
+            format!("{:.3}", c.replica_ss),
+            c.cold_starts.to_string(),
+            c.scale_events.to_string(),
+            // "-" on the fixed-y rows (no pool, empty histogram) — 0.000
+            // would read as a measured pool size rather than "no pool".
+            match c.pool_size.quantile(0.95) {
+                Some(q) => format!("{q:.3}"),
+                None => "-".to_string(),
+            },
+        ]);
+    }
+    Ok(table)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -785,12 +1008,13 @@ mod tests {
     fn experiment_names_parse() {
         assert_eq!(Experiment::parse("p1b").unwrap(), Experiment::P1b);
         assert_eq!(Experiment::parse("P4").unwrap(), Experiment::P4);
+        assert_eq!(Experiment::parse("P10").unwrap(), Experiment::P10);
         assert!(Experiment::parse("p3").is_err());
     }
 
     #[test]
     fn strategy_factory_covers_the_cli_names() {
-        for name in ["proposal", "propavg", "lbrr", "ga"] {
+        for name in ["proposal", "propavg", "lbrr", "ga", "autoscale"] {
             assert!(strategy_by_name(name).is_ok(), "{name}");
         }
         assert!(strategy_by_name("nope").is_err());
@@ -798,7 +1022,13 @@ mod tests {
 
     #[test]
     fn default_grids_are_nonempty() {
-        for e in [Experiment::P1b, Experiment::P2, Experiment::P4, Experiment::P5] {
+        for e in [
+            Experiment::P1b,
+            Experiment::P2,
+            Experiment::P4,
+            Experiment::P5,
+            Experiment::P10,
+        ] {
             let sc = SweepConfig::for_experiment(e);
             assert!(sc.trials > 0);
             assert!(!sc.engines.is_empty());

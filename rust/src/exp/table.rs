@@ -65,12 +65,18 @@ impl Table {
                         self.name, self.headers[j]
                     ));
                 }
-                let lower = cell.to_ascii_lowercase();
-                if lower.contains("nan") || lower.contains("inf") {
-                    return Err(format!(
-                        "table `{}` row {i} column `{}`: non-finite value `{cell}`",
-                        self.name, self.headers[j]
-                    ));
+                // Parse-based non-finite gate: any cell that reads as an
+                // f64 must be finite. The previous substring match on
+                // "nan"/"inf" missed overflow spellings like `1e999`
+                // (which parse to +inf) and rejected legitimate text
+                // cells that merely contain those letters.
+                if let Ok(x) = cell.parse::<f64>() {
+                    if !x.is_finite() {
+                        return Err(format!(
+                            "table `{}` row {i} column `{}`: non-finite value `{cell}`",
+                            self.name, self.headers[j]
+                        ));
+                    }
                 }
                 if cell.contains(',') || cell.contains('\n') {
                     return Err(format!(
@@ -207,6 +213,20 @@ mod tests {
         let mut t = sample();
         t.push_row(vec!["NaN".into(), "3".into()]);
         assert!(t.validate().unwrap_err().contains("non-finite"));
+        // ±Inf in every spelling Rust's float parser accepts, plus the
+        // overflow form the old substring check let through.
+        for bad in ["inf", "-inf", "Infinity", "-Infinity", "1e999", "-1e999"] {
+            let mut t = sample();
+            t.push_row(vec![bad.into(), "3".into()]);
+            assert!(
+                t.validate().unwrap_err().contains("non-finite"),
+                "`{bad}` must be rejected"
+            );
+        }
+        // Text cells that merely contain the letters are fine.
+        let mut t = sample();
+        t.push_row(vec!["infra-scenario".into(), "3".into()]);
+        assert!(t.validate().is_ok());
         let mut t = sample();
         t.push_row(vec!["".into(), "3".into()]);
         assert!(t.validate().unwrap_err().contains("empty cell"));

@@ -52,6 +52,7 @@ pub mod controller;
 pub mod des;
 pub mod faults;
 pub mod placement;
+pub mod pool;
 pub mod routing;
 pub mod sim;
 

@@ -45,6 +45,7 @@ fn main() {
         "gtable" => cmd_gtable(&args),
         "simulate" => cmd_simulate(&args),
         "des" => cmd_des(&args),
+        "pool" => cmd_pool(&args),
         "faults" => cmd_faults(&args),
         "trace" => cmd_trace(&args),
         "sweep" => cmd_sweep(&args),
@@ -392,6 +393,80 @@ fn cmd_des_bench(cfg: &ExperimentConfig, strat_name: &str) -> Result<(), AnyErro
     Ok(())
 }
 
+/// `fmedge pool`: the elastic-autoscaling demo (EXPERIMENTS §P10). Runs
+/// one scenario (default diurnal) through both engines twice — once with
+/// the replica-pool tier on (Autoscale strategy, per-instance y pinned
+/// to 1, capacity from the shared-rate pools) and once on the pre-pool
+/// fixed-parallelism path — on the identical compiled trace + fault
+/// schedule, and prints the on-time / deployment-cost trade per row.
+fn cmd_pool(args: &Args) -> Result<(), AnyError> {
+    let mut cfg = load_config(args)?;
+    cfg.sim.slots = args.get_usize("slots", 200)?;
+    cfg.sim.load_multiplier = args.get_f64("load", cfg.sim.load_multiplier)?;
+    cfg.sim.seed = args.get_u64("seed", cfg.sim.seed)?;
+    let scen_name = args.get("scenario").unwrap_or("diurnal").to_string();
+    let spec = fmedge::scenarios::ScenarioSpec::by_name(&scen_name)
+        .ok_or_else(|| format!("unknown scenario `{scen_name}`"))?;
+    let seed = cfg.sim.seed;
+    let env = SimEnv::build(&cfg, seed);
+    let base_opts = SimOptions::from_config(&cfg);
+    let cs = spec.compile(&env, &base_opts, seed ^ 0xA10_0);
+    println!(
+        "pool: scenario={scen_name} slots={} load={} seed={seed} ({} arrivals, {} fault events)",
+        cfg.sim.slots,
+        cfg.sim.load_multiplier,
+        cs.trace.len(),
+        cs.faults.len()
+    );
+    println!(
+        "pool: {:<8} {:<10} {:>8} {:>8} {:>11} {:>12} {:>13} {:>9}",
+        "engine", "mode", "tasks", "on-time", "cold-starts", "scale-events", "replica-slots", "pool-p95"
+    );
+    let t0 = Instant::now();
+    let mut arena: DesArena = DesArena::new();
+    for engine in ["slotted", "des"] {
+        for (mode, pooled) in [("autoscale", true), ("fixed-y", false)] {
+            let mut opts = base_opts.clone();
+            let mut strategy: Box<dyn Strategy> = if pooled {
+                opts.pool = Some(fmedge::pool::PoolConfig::from_config(&cfg));
+                Box::new(fmedge::pool::Autoscale::new())
+            } else {
+                make_strategy("proposal")?
+            };
+            let m = if engine == "des" {
+                run_des_trial_faulted_in(
+                    &mut arena,
+                    &env,
+                    strategy.as_mut(),
+                    seed,
+                    &DesOptions::from_sim(&opts),
+                    &cs.trace,
+                    &cs.faults,
+                )
+            } else {
+                run_trial_faulted(&env, strategy.as_mut(), seed, &opts, &cs.trace, &cs.faults)
+            };
+            let p95 = match m.pool_size.quantile(0.95) {
+                Some(q) => format!("{q:.1}"),
+                None => "-".to_string(),
+            };
+            println!(
+                "pool: {:<8} {:<10} {:>8} {:>8.3} {:>11} {:>12} {:>13.1} {:>9}",
+                engine,
+                mode,
+                m.total_tasks,
+                m.on_time_rate(),
+                m.cold_starts,
+                m.pool_scale_events,
+                m.pool_replica_slot_seconds,
+                p95
+            );
+        }
+    }
+    println!("pool: finished in {:?}", t0.elapsed());
+    Ok(())
+}
+
 /// `fmedge faults`: the robustness sweep (EXPERIMENTS §P4). For every
 /// (load, failure-rate) grid point, every strategy replays the *same*
 /// recorded trace under the *same* seeded fault schedule; rate 0 uses an
@@ -589,7 +664,7 @@ fn cmd_trace(args: &Args) -> Result<(), AnyError> {
 }
 
 /// `fmedge sweep`: the parallel experiment orchestrator. Runs one of the
-/// EXPERIMENTS.md grids (p1b/p2/p4/p5) end-to-end over scoped worker
+/// EXPERIMENTS.md grids (p1b/p2/p4/p5/p10) end-to-end over scoped worker
 /// threads and writes CSV/JSON artifacts. Every per-cell/per-trial RNG
 /// stream is derived statelessly from `--seed` and the grid coordinates,
 /// so the output is bit-identical for any `--threads` (wall-clock

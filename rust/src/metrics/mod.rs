@@ -133,6 +133,22 @@ pub struct TrialMetrics {
     pub hedges: usize,
     /// Core replicas brought back through checkpoint/restart.
     pub checkpoint_restores: usize,
+    /// Light replicas spun up by the elastic pool tier (§P10), each one
+    /// serving nothing for its seeded cold-start window. Zero when the
+    /// pool is off.
+    pub cold_starts: u64,
+    /// Pool scaling decisions applied (grow or shrink, scale-to-zero
+    /// included). Zero when the pool is off.
+    pub pool_scale_events: u64,
+    /// Scale-to-zero events: an idle station's entire pool drained away.
+    pub pool_scale_to_zero: u64,
+    /// Deployment-cost accounting for the elastic tier: total
+    /// replica-slot-seconds provisioned (warm + warming) across every
+    /// station, the denominator-free analogue of `light_cost`.
+    pub pool_replica_slot_seconds: f64,
+    /// Distribution of the fleet-wide pool size (warm replicas) sampled
+    /// once per slot/tick. Default-empty when the pool is off.
+    pub pool_size: Histogram,
 }
 
 impl TrialMetrics {
@@ -332,6 +348,11 @@ impl MetricsCollector {
                 retries: self.retries,
                 hedges: self.hedges,
                 checkpoint_restores: self.checkpoint_restores,
+                cold_starts: 0,
+                pool_scale_events: 0,
+                pool_scale_to_zero: 0,
+                pool_replica_slot_seconds: 0.0,
+                pool_size: Histogram::default(),
             };
         }
         let total_tasks = self.outcomes.len();
@@ -376,6 +397,11 @@ impl MetricsCollector {
             retries: self.retries,
             hedges: self.hedges,
             checkpoint_restores: self.checkpoint_restores,
+            cold_starts: 0,
+            pool_scale_events: 0,
+            pool_scale_to_zero: 0,
+            pool_replica_slot_seconds: 0.0,
+            pool_size: Histogram::default(),
         }
     }
 }

@@ -44,7 +44,11 @@ fn component(kind: SpanKind) -> usize {
         SpanKind::Transfer => TRANSFER,
         SpanKind::CoreExec => CORE_EXEC,
         SpanKind::LightExec => LIGHT_EXEC,
-        SpanKind::Backoff | SpanKind::Hedge | SpanKind::Restore | SpanKind::Serve => DISRUPTION,
+        SpanKind::Backoff
+        | SpanKind::Hedge
+        | SpanKind::Restore
+        | SpanKind::Serve
+        | SpanKind::Warmup => DISRUPTION,
     }
 }
 

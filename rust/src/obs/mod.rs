@@ -44,6 +44,7 @@ pub struct Observer {
     pub trace: Option<TraceRecorder>,
     pub metrics: Option<MetricsRegistry>,
     series: Option<EngineSeries>,
+    pool_series: Option<PoolSeries>,
 }
 
 /// Gauge handles for the per-slot engine snapshot, registered lazily on
@@ -58,6 +59,16 @@ struct EngineSeries {
     vq_backlog: GaugeId,
 }
 
+/// Gauge handles for the elastic-pool snapshot (§P10), registered
+/// lazily on the first pooled sample — unpooled runs never register
+/// them, so the telemetry schema is unchanged when the pool is off.
+#[derive(Clone, Debug)]
+struct PoolSeries {
+    replicas: GaugeId,
+    warming: GaugeId,
+    live_g_ms: GaugeId,
+}
+
 impl Observer {
     /// Record both spans and telemetry.
     pub fn new() -> Self {
@@ -65,6 +76,7 @@ impl Observer {
             trace: Some(TraceRecorder::new()),
             metrics: Some(MetricsRegistry::new()),
             series: None,
+            pool_series: None,
         }
     }
 
@@ -74,7 +86,32 @@ impl Observer {
             trace: Some(TraceRecorder::new()),
             metrics: None,
             series: None,
+            pool_series: None,
         }
+    }
+
+    /// Set the elastic-pool gauges for the row the next
+    /// [`Self::sample_slot`] call finalizes: total warm replicas,
+    /// warming (cold-starting) replicas, and the worst finite live
+    /// shared-rate delay bound across occupied stations (−1 when no
+    /// station has a finite bound, mirroring the `g_ms` convention).
+    /// Only pooled engines call this, so the telemetry schema is
+    /// unchanged for every pre-existing run.
+    pub fn set_pool_gauges(&mut self, replicas: u32, warming: u32, live_g_ms: f64) {
+        let Some(reg) = self.metrics.as_mut() else {
+            return;
+        };
+        let s = self.pool_series.get_or_insert_with(|| PoolSeries {
+            replicas: reg.gauge("pool_replicas"),
+            warming: reg.gauge("pool_warming"),
+            live_g_ms: reg.gauge("pool_g_ms"),
+        });
+        reg.set(s.replicas, replicas as f64);
+        reg.set(s.warming, warming as f64);
+        reg.set(
+            s.live_g_ms,
+            if live_g_ms.is_finite() { live_g_ms } else { -1.0 },
+        );
     }
 
     /// One per-slot (or per-tick) engine snapshot: per-light-service

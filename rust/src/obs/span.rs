@@ -40,6 +40,10 @@ pub enum SpanKind {
     Restore,
     /// Serving-path request service (coordinator / replay server).
     Serve,
+    /// Elastic-pool replica cold start (§P10): the warming window during
+    /// which the replica is billed but serves nothing (infrastructure
+    /// span, like [`SpanKind::Restore`]).
+    Warmup,
 }
 
 impl SpanKind {
@@ -54,6 +58,7 @@ impl SpanKind {
             SpanKind::Hedge => "hedge",
             SpanKind::Restore => "restore",
             SpanKind::Serve => "serve",
+            SpanKind::Warmup => "warmup",
         }
     }
 
@@ -64,7 +69,7 @@ impl SpanKind {
             SpanKind::QueueWait => "sched",
             SpanKind::Transfer => "net",
             SpanKind::CoreExec | SpanKind::LightExec => "exec",
-            SpanKind::Backoff | SpanKind::Hedge | SpanKind::Restore => "fault",
+            SpanKind::Backoff | SpanKind::Hedge | SpanKind::Restore | SpanKind::Warmup => "fault",
             SpanKind::Serve => "serve",
         }
     }
@@ -451,6 +456,22 @@ impl TraceRecorder {
             stage: None,
             attempt: 0,
             kind: SpanKind::Restore,
+            start_ms: at_ms,
+            end_ms: ready_ms.max(at_ms),
+            node: Some(node),
+            y: 0,
+            cancelled: false,
+        });
+    }
+
+    /// An elastic-pool replica started warming on `node` at `at_ms`,
+    /// joining the pool at `ready_ms` (serves nothing until then).
+    pub fn warmup(&mut self, node: usize, at_ms: f64, ready_ms: f64) {
+        self.extra.push(Span {
+            task: INFRA_TASK,
+            stage: None,
+            attempt: 0,
+            kind: SpanKind::Warmup,
             start_ms: at_ms,
             end_ms: ready_ms.max(at_ms),
             node: Some(node),

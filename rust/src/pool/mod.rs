@@ -1,0 +1,1002 @@
+//! Elastic replica pools with shared-rate contention (EXPERIMENTS §P10).
+//!
+//! The paper fixes light-service parallelism `y` per decision epoch; a
+//! production serving tier scales replica pools elastically instead.
+//! This module supplies both halves of that story, shared by the slotted
+//! and DES engines behind an `Option`-gated [`PoolConfig`] (off ⇒ every
+//! existing number is byte-identical — the pool path is never entered):
+//!
+//! * [`PoolManager`] — a deterministic desired-instances controller per
+//!   (node, light service): grow through a seeded cold-start window
+//!   (a warming replica serves nothing until its ready time), shrink via
+//!   drain-before-kill (a replica marked for retirement keeps serving
+//!   until the in-flight count allows its removal — in-flight work is
+//!   never abandoned, mirroring the failover tier's shed-new-only
+//!   invariant), and scale-to-zero after a configurable idle window.
+//!   Decisions come from a pluggable [`ScalingPolicy`] with hysteresis
+//!   and per-station cooldown.
+//! * [`SharedRate`] — the contention model: all in-flight executions at a
+//!   station share its warm replicas, so the per-execution rate divisor
+//!   is the *live* occupancy ratio `max(1, n/R)^α` instead of the static
+//!   committed `y`. Occupancy changes stretch or shrink executions that
+//!   are already in flight: the DES keeps remaining-work bookkeeping
+//!   (struct-of-arrays, reusable across trials like the rest of
+//!   [`crate::des::DesArena`]) and reschedules completion events; the
+//!   slotted engine divides rates per slot at the previous boundary's
+//!   occupancy. [`live_delay_bound`] evaluates the paper's `g_{m,ε}`
+//!   machinery ([`EffCapEstimator::delay_bound_contended`]) at that same
+//!   live divisor, so the reported bound tracks actual contention.
+//! * [`Autoscale`] — a [`Strategy`] that delegates placement and routing
+//!   to the paper's Proposal but commits `y = 1` everywhere: parallelism
+//!   comes from the pool growing replicas, not from the controller
+//!   splitting one instance — the fixed-`y` Lyapunov controller versus
+//!   this strategy is the §P10 comparison axis.
+
+use crate::baselines::Proposal;
+use crate::config::NUM_RESOURCES;
+use crate::controller::{LightDecision, LightRequest};
+use crate::effcap::EffCapEstimator;
+use crate::metrics::Histogram;
+use crate::placement::{CorePlacement, QosScores};
+use crate::rng::{Rng, Xoshiro256};
+use crate::routing::DistanceMatrix;
+use crate::sim::{SimEnv, Strategy};
+
+/// Elastic-pool configuration, `Option`-gated on both engines' options.
+#[derive(Clone, Debug)]
+pub struct PoolConfig {
+    /// The desired-instances policy driving grow/shrink decisions.
+    pub policy: ScalingPolicy,
+    /// Floor on warm replicas per (node, service); `0` permits
+    /// scale-to-zero.
+    pub min_replicas: u32,
+    /// Ceiling on total (warm + warming) replicas per (node, service).
+    pub max_replicas: u32,
+    /// Replicas pre-warmed at trial start per (node, service) — no
+    /// cold-start window is charged for these.
+    pub initial_replicas: u32,
+    /// Base cold-start window: a newly grown replica serves nothing for
+    /// this long.
+    pub cold_start_ms: f64,
+    /// Uniform jitter added on top of the base window, drawn from the
+    /// pool's own seeded stream (so cold starts never perturb engine RNG).
+    pub cold_start_jitter_ms: f64,
+    /// Contention exponent of the shared-rate divisor `(n/R)^α` — mirror
+    /// of `controller.contention_alpha` so both models agree.
+    pub alpha: f64,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            policy: ScalingPolicy::default(),
+            min_replicas: 0,
+            max_replicas: 8,
+            initial_replicas: 0,
+            cold_start_ms: 40.0,
+            cold_start_jitter_ms: 10.0,
+            alpha: 1.0,
+        }
+    }
+}
+
+impl PoolConfig {
+    /// Default pool tied to the experiment config's contention exponent.
+    pub fn from_config(cfg: &crate::config::ExperimentConfig) -> Self {
+        PoolConfig {
+            alpha: cfg.controller.contention_alpha,
+            ..PoolConfig::default()
+        }
+    }
+}
+
+/// Pluggable desired-instances policy. Both variants carry a cooldown
+/// (slots to wait after any scaling action) and an idle window after
+/// which the station scales to zero (`0` disables scale-to-zero).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ScalingPolicy {
+    /// Track a target per-replica utilization: desired = ⌈n / target⌉,
+    /// gated by a hysteresis band so the pool doesn't thrash around the
+    /// target.
+    TargetUtilization {
+        target: f64,
+        hysteresis: f64,
+        cooldown_slots: u32,
+        idle_slots_to_zero: u32,
+    },
+    /// Step growth/shrink on queue pressure (in-flight + backlog)
+    /// relative to the current pool size.
+    BacklogThreshold {
+        grow_above: f64,
+        shrink_below: f64,
+        cooldown_slots: u32,
+        idle_slots_to_zero: u32,
+    },
+}
+
+impl Default for ScalingPolicy {
+    fn default() -> Self {
+        ScalingPolicy::TargetUtilization {
+            target: 0.7,
+            hysteresis: 0.15,
+            cooldown_slots: 3,
+            idle_slots_to_zero: 12,
+        }
+    }
+}
+
+impl ScalingPolicy {
+    /// Parse a CLI policy name.
+    pub fn by_name(name: &str) -> Result<Self, String> {
+        match name {
+            "target-util" => Ok(ScalingPolicy::default()),
+            "backlog" => Ok(ScalingPolicy::BacklogThreshold {
+                grow_above: 2.0,
+                shrink_below: 0.5,
+                cooldown_slots: 3,
+                idle_slots_to_zero: 12,
+            }),
+            other => Err(format!(
+                "unknown scaling policy '{other}' (target-util|backlog)"
+            )),
+        }
+    }
+
+    pub fn cooldown_slots(&self) -> u32 {
+        match *self {
+            ScalingPolicy::TargetUtilization { cooldown_slots, .. }
+            | ScalingPolicy::BacklogThreshold { cooldown_slots, .. } => cooldown_slots,
+        }
+    }
+
+    pub fn idle_slots_to_zero(&self) -> u32 {
+        match *self {
+            ScalingPolicy::TargetUtilization {
+                idle_slots_to_zero, ..
+            }
+            | ScalingPolicy::BacklogThreshold {
+                idle_slots_to_zero, ..
+            } => idle_slots_to_zero,
+        }
+    }
+
+    /// Desired warm-replica count given the live signals. Returns the
+    /// current count when inside the hysteresis band (no action).
+    pub fn desired(&self, active: u32, in_flight: u32, backlog: u32) -> u32 {
+        match *self {
+            ScalingPolicy::TargetUtilization {
+                target, hysteresis, ..
+            } => {
+                if in_flight == 0 {
+                    return active;
+                }
+                let demand = in_flight as f64;
+                let want = (demand / target.max(1e-9)).ceil().max(1.0) as u32;
+                let util = demand / active.max(1) as f64;
+                if want > active && (active == 0 || util > target + hysteresis) {
+                    want
+                } else if want < active && util < target - hysteresis {
+                    want
+                } else {
+                    active
+                }
+            }
+            ScalingPolicy::BacklogThreshold {
+                grow_above,
+                shrink_below,
+                ..
+            } => {
+                let pressure = in_flight as u64 + backlog as u64;
+                if pressure == 0 {
+                    return active;
+                }
+                if active == 0 {
+                    return 1;
+                }
+                let p = pressure as f64;
+                if p > grow_above * active as f64 {
+                    active + 1
+                } else if p < shrink_below * active as f64 {
+                    active.saturating_sub(1)
+                } else {
+                    active
+                }
+            }
+        }
+    }
+}
+
+/// Deterministic elastic replica pools, one per (node, light service).
+///
+/// Stepped once per slot boundary by both engines, in sorted `(v, m)`
+/// order, with its own seeded RNG stream — the pool never consumes
+/// engine RNG, so arming it perturbs nothing outside its own state.
+#[derive(Clone, Debug)]
+pub struct PoolManager {
+    nv: usize,
+    nl: usize,
+    cfg: PoolConfig,
+    /// Warm (serving) replicas per station — includes draining ones,
+    /// which keep serving until retired.
+    active: Vec<u32>,
+    /// Of `active`, how many are marked for drain-before-kill retirement.
+    draining: Vec<u32>,
+    /// Ready times of warming replicas per station, sorted ascending.
+    warming: Vec<Vec<f64>>,
+    /// Consecutive idle slots per station (no in-flight, no backlog).
+    idle: Vec<u32>,
+    /// Slots remaining before the policy may act again.
+    cooldown: Vec<u32>,
+    node_up: Vec<bool>,
+    rng: Xoshiro256,
+    /// Cold starts initiated (replicas grown through a warmup window).
+    pub cold_starts: u64,
+    /// Policy actions taken (each grow or shrink initiation counts once).
+    pub scale_events: u64,
+    /// Scale-to-zero events (a station idling its whole pool away).
+    pub scale_to_zero_events: u64,
+    /// Deployment-cost accounting: replica-slot-seconds accumulated over
+    /// the horizon (warm + warming replicas × slot duration).
+    pub replica_slot_seconds: f64,
+    /// Total pool size sampled once per slot (for the p95 column).
+    pub size_hist: Histogram,
+}
+
+impl PoolManager {
+    pub fn new(nv: usize, nl: usize, cfg: PoolConfig, seed: u64) -> Self {
+        let n = nv * nl;
+        let initial = cfg.initial_replicas.min(cfg.max_replicas);
+        PoolManager {
+            nv,
+            nl,
+            active: vec![initial; n],
+            draining: vec![0; n],
+            warming: vec![Vec::new(); n],
+            idle: vec![0; n],
+            cooldown: vec![0; n],
+            node_up: vec![true; nv],
+            rng: Xoshiro256::seed_from(seed ^ 0x9001_CAFE),
+            cfg,
+            cold_starts: 0,
+            scale_events: 0,
+            scale_to_zero_events: 0,
+            replica_slot_seconds: 0.0,
+            size_hist: Histogram::linear(0.0, 512.0, 128),
+        }
+    }
+
+    #[inline]
+    fn st(&self, v: usize, m: usize) -> usize {
+        v * self.nl + m
+    }
+
+    /// Warm replicas currently able to serve at `(v, m)`.
+    pub fn active(&self, v: usize, m: usize) -> u32 {
+        self.active[self.st(v, m)]
+    }
+
+    /// Warm + warming replicas at `(v, m)` (the deployment-cost base).
+    pub fn total(&self, v: usize, m: usize) -> u32 {
+        let i = self.st(v, m);
+        self.active[i] + self.warming[i].len() as u32
+    }
+
+    /// Warm + warming replicas across every station.
+    pub fn total_all(&self) -> u32 {
+        (0..self.active.len())
+            .map(|i| self.active[i] + self.warming[i].len() as u32)
+            .sum()
+    }
+
+    /// Warm replicas across every station (the telemetry gauge).
+    pub fn active_total(&self) -> u32 {
+        self.active.iter().sum()
+    }
+
+    /// Warming (cold-starting) replicas across every station.
+    pub fn warming_total(&self) -> u32 {
+        self.warming.iter().map(|w| w.len() as u32).sum()
+    }
+
+    /// Promote every warming replica whose ready time has passed — the
+    /// slotted engine's slot-boundary promotion (the DES promotes at
+    /// exact ready times through `PoolWarm` events + [`Self::warm_fire`]).
+    pub fn promote_ready_all(&mut self, now: f64) {
+        for i in 0..self.warming.len() {
+            let mut k = 0;
+            while k < self.warming[i].len() && self.warming[i][k] <= now {
+                k += 1;
+            }
+            if k > 0 {
+                self.warming[i].drain(..k);
+                self.active[i] += k as u32;
+            }
+        }
+    }
+
+    /// A `PoolWarm` event fired: promote the earliest warming replica
+    /// whose ready time has passed. Returns `false` for stale events
+    /// (the warming entry was cancelled by a node failure or a shrink).
+    pub fn warm_fire(&mut self, v: usize, m: usize, now: f64) -> bool {
+        let i = self.st(v, m);
+        if self.warming[i].first().is_some_and(|&r| r <= now + 1e-9) {
+            self.warming[i].remove(0);
+            self.active[i] += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// A node outage destroys its replicas (warm, warming, and draining
+    /// alike); the policy regrows them after recovery.
+    pub fn fail_node(&mut self, v: usize) {
+        self.node_up[v] = false;
+        for m in 0..self.nl {
+            let i = self.st(v, m);
+            self.active[i] = 0;
+            self.draining[i] = 0;
+            self.warming[i].clear();
+            self.idle[i] = 0;
+            self.cooldown[i] = 0;
+        }
+    }
+
+    pub fn node_restored(&mut self, v: usize) {
+        self.node_up[v] = true;
+    }
+
+    /// One policy step for station `(v, m)`. `in_flight` is the live
+    /// execution count there, `backlog` the station-attributed pending
+    /// work. Ready times of newly grown (warming) replicas are pushed
+    /// into `grown` (for warmup spans / `PoolWarm` events); the return
+    /// value is how many draining replicas were retired this step — a
+    /// nonzero count changes the shared-rate divisor, so the DES
+    /// reschedules the station's in-flight completions.
+    pub fn step(
+        &mut self,
+        v: usize,
+        m: usize,
+        in_flight: u32,
+        backlog: u32,
+        now: f64,
+        grown: &mut Vec<f64>,
+    ) -> u32 {
+        grown.clear();
+        let i = self.st(v, m);
+        // Drain-before-kill: retire marked replicas the in-flight count
+        // no longer needs. Never drops below the in-flight level, so a
+        // running execution always keeps a replica share.
+        let mut retired = self.retire(i, in_flight);
+        if !self.node_up[v] {
+            return retired;
+        }
+        if in_flight == 0 && backlog == 0 {
+            self.idle[i] += 1;
+        } else {
+            self.idle[i] = 0;
+        }
+        if self.cooldown[i] > 0 {
+            self.cooldown[i] -= 1;
+            return retired;
+        }
+        let total = self.active[i] + self.warming[i].len() as u32;
+        let idle_window = self.cfg.policy.idle_slots_to_zero();
+        if idle_window > 0
+            && self.idle[i] >= idle_window
+            && self.cfg.min_replicas == 0
+            && total > 0
+        {
+            // Scale-to-zero: cancel the warming queue outright (nothing
+            // runs on a warming replica) and mark every warm replica for
+            // drain — with nothing in flight they all retire immediately.
+            self.warming[i].clear();
+            self.draining[i] = self.active[i];
+            retired += self.retire(i, in_flight);
+            self.scale_to_zero_events += 1;
+            self.scale_events += 1;
+            self.cooldown[i] = self.cfg.policy.cooldown_slots();
+            return retired;
+        }
+        let want = self
+            .cfg
+            .policy
+            .desired(self.active[i], in_flight, backlog)
+            .clamp(self.cfg.min_replicas, self.cfg.max_replicas);
+        if want > total {
+            for _ in 0..(want - total) {
+                let jitter = if self.cfg.cold_start_jitter_ms > 0.0 {
+                    self.rng.next_f64() * self.cfg.cold_start_jitter_ms
+                } else {
+                    0.0
+                };
+                let ready = now + self.cfg.cold_start_ms + jitter;
+                self.warming[i].push(ready);
+                grown.push(ready);
+                self.cold_starts += 1;
+            }
+            self.warming[i].sort_by(f64::total_cmp);
+            self.scale_events += 1;
+            self.cooldown[i] = self.cfg.policy.cooldown_slots();
+        } else if want < total {
+            // Shrink: cancel the youngest warming replicas first (they
+            // serve nothing yet, so cancellation abandons no work), then
+            // mark warm replicas for drain-before-kill.
+            let mut shrink = total - want;
+            while shrink > 0 && !self.warming[i].is_empty() {
+                self.warming[i].pop();
+                shrink -= 1;
+            }
+            self.draining[i] = (self.draining[i] + shrink).min(self.active[i]);
+            retired += self.retire(i, in_flight);
+            self.scale_events += 1;
+            self.cooldown[i] = self.cfg.policy.cooldown_slots();
+        }
+        retired
+    }
+
+    fn retire(&mut self, i: usize, in_flight: u32) -> u32 {
+        let can = self.active[i]
+            .saturating_sub(in_flight)
+            .min(self.draining[i]);
+        self.active[i] -= can;
+        self.draining[i] -= can;
+        can
+    }
+
+    /// End-of-slot accounting: replica-slot-seconds and the pool-size
+    /// sample behind the p95 column. Call exactly once per slot.
+    pub fn end_slot(&mut self, slot_ms: f64) {
+        let total = self.total_all();
+        self.replica_slot_seconds += total as f64 * slot_ms / 1000.0;
+        self.size_hist.record(total as f64);
+    }
+}
+
+/// Live shared-rate divisor: `n` in-flight executions over `R` warm
+/// replicas contend as `max(1, n/R)^α` (a pool with spare replicas runs
+/// at full rate; an empty pool stalls everything).
+pub fn shared_divisor(in_flight: u32, replicas: u32, alpha: f64) -> f64 {
+    if replicas == 0 {
+        return f64::INFINITY;
+    }
+    let n = in_flight.max(1) as f64;
+    (n / replicas as f64).max(1.0).powf(alpha)
+}
+
+/// The paper's `g_{m,ε}` delay bound evaluated at the *live* occupancy
+/// divisor instead of a static committed `y` — the effective-capacity
+/// machinery tracking actual contention. Infinite when the pool is empty
+/// (no capacity ⇒ no finite statistical bound).
+pub fn live_delay_bound(
+    est: &EffCapEstimator,
+    rate_samples: &[f64],
+    workload_mb: f64,
+    epsilon: f64,
+    in_flight: u32,
+    replicas: u32,
+    alpha: f64,
+) -> f64 {
+    if replicas == 0 {
+        return f64::INFINITY;
+    }
+    est.delay_bound_contended(
+        rate_samples,
+        shared_divisor(in_flight, replicas, alpha),
+        workload_mb,
+        epsilon,
+    )
+}
+
+/// Shared-rate run bookkeeping for the DES engine: remaining *nominal*
+/// work per in-flight execution (milliseconds at divisor 1), advanced
+/// lazily per station and rescheduled whenever occupancy or the replica
+/// count changes. Struct-of-arrays with a free list, reusable across
+/// trials inside [`crate::des::DesArena`].
+#[derive(Clone, Debug, Default)]
+pub struct SharedRate {
+    nv: usize,
+    nl: usize,
+    alpha: f64,
+    /// Live run ids per station, in join order.
+    members: Vec<Vec<u32>>,
+    /// Time the station's members' remaining work was last settled.
+    last_ms: Vec<f64>,
+    /// Current per-run progress speed at the station (nominal ms per ms;
+    /// `0` when the pool there is empty — runs stall).
+    speed: Vec<f64>,
+    task: Vec<u64>,
+    local: Vec<u32>,
+    node: Vec<u32>,
+    midx: Vec<u32>,
+    y: Vec<u32>,
+    join_ms: Vec<f64>,
+    remaining_ms: Vec<f64>,
+    /// Reschedule token: bumped on every completion (re)schedule so a
+    /// superseded `PoolDone` event no-ops on an O(1) check.
+    rt: Vec<u32>,
+    live: Vec<bool>,
+    free: Vec<u32>,
+}
+
+impl SharedRate {
+    /// Reset to an empty table for `nv × nl` stations, retaining
+    /// allocations (bit-identical to a fresh table, like the arena).
+    pub fn reset(&mut self, nv: usize, nl: usize, alpha: f64) {
+        self.nv = nv;
+        self.nl = nl;
+        self.alpha = alpha;
+        self.members.resize(nv * nl, Vec::new());
+        for ms in &mut self.members {
+            ms.clear();
+        }
+        self.last_ms.clear();
+        self.last_ms.resize(nv * nl, 0.0);
+        self.speed.clear();
+        self.speed.resize(nv * nl, 0.0);
+        self.task.clear();
+        self.local.clear();
+        self.node.clear();
+        self.midx.clear();
+        self.y.clear();
+        self.join_ms.clear();
+        self.remaining_ms.clear();
+        self.rt.clear();
+        self.live.clear();
+        self.free.clear();
+    }
+
+    #[inline]
+    fn st(&self, v: usize, m: usize) -> usize {
+        v * self.nl + m
+    }
+
+    /// Advance the station's members' remaining work to `now` at the
+    /// current speed. Call before any occupancy or replica change.
+    pub fn settle(&mut self, v: usize, m: usize, now: f64) {
+        let s = self.st(v, m);
+        let sp = self.speed[s];
+        let dt = now - self.last_ms[s];
+        if sp > 0.0 && dt > 0.0 {
+            for &id in &self.members[s] {
+                let r = &mut self.remaining_ms[id as usize];
+                *r = (*r - dt * sp).max(0.0);
+            }
+        }
+        self.last_ms[s] = now;
+    }
+
+    /// Recompute the station speed from its occupancy and `replicas`.
+    /// Call after [`Self::settle`] whenever either changed.
+    pub fn rebalance(&mut self, v: usize, m: usize, replicas: u32) {
+        let s = self.st(v, m);
+        let n = self.members[s].len() as u32;
+        self.speed[s] = if n == 0 || replicas == 0 {
+            0.0
+        } else {
+            1.0 / shared_divisor(n, replicas, self.alpha)
+        };
+    }
+
+    /// Register a new in-flight execution (caller settles first). The
+    /// run's remaining work starts at its full nominal service time.
+    #[allow(clippy::too_many_arguments)]
+    pub fn join(
+        &mut self,
+        task: u64,
+        local: usize,
+        v: usize,
+        m: usize,
+        y: u32,
+        join_ms: f64,
+        proc_ms: f64,
+    ) -> u32 {
+        let id = match self.free.pop() {
+            Some(id) => {
+                let i = id as usize;
+                self.task[i] = task;
+                self.local[i] = local as u32;
+                self.node[i] = v as u32;
+                self.midx[i] = m as u32;
+                self.y[i] = y;
+                self.join_ms[i] = join_ms;
+                self.remaining_ms[i] = proc_ms;
+                self.rt[i] += 1;
+                self.live[i] = true;
+                id
+            }
+            None => {
+                let id = self.task.len() as u32;
+                self.task.push(task);
+                self.local.push(local as u32);
+                self.node.push(v as u32);
+                self.midx.push(m as u32);
+                self.y.push(y);
+                self.join_ms.push(join_ms);
+                self.remaining_ms.push(proc_ms);
+                self.rt.push(0);
+                self.live.push(true);
+                id
+            }
+        };
+        let s = self.st(v, m);
+        self.members[s].push(id);
+        id
+    }
+
+    /// Live run ids at the station, in join order.
+    pub fn members(&self, v: usize, m: usize) -> &[u32] {
+        &self.members[self.st(v, m)]
+    }
+
+    /// The `(node, light_idx)` station run `id` executes at.
+    pub fn station_of(&self, id: u32) -> (usize, usize) {
+        let i = id as usize;
+        (self.node[i] as usize, self.midx[i] as usize)
+    }
+
+    /// Time until run `id` completes at the current station speed
+    /// (`None` while the station is stalled).
+    pub fn eta(&self, id: u32) -> Option<f64> {
+        let i = id as usize;
+        let s = self.st(self.node[i] as usize, self.midx[i] as usize);
+        let sp = self.speed[s];
+        (sp > 0.0).then(|| self.remaining_ms[i] / sp)
+    }
+
+    /// Bump and return the run's reschedule token (stamps the next
+    /// `PoolDone` event; older events go stale).
+    pub fn bump(&mut self, id: u32) -> u32 {
+        self.rt[id as usize] += 1;
+        self.rt[id as usize]
+    }
+
+    pub fn is_live(&self, id: u32, rt: u32) -> bool {
+        let i = id as usize;
+        i < self.live.len() && self.live[i] && self.rt[i] == rt
+    }
+
+    /// Complete run `id`: remove it from its station and free the slot.
+    /// Returns `(task, local, node, light_idx, y, join_ms)`.
+    pub fn complete(&mut self, id: u32) -> (u64, usize, usize, usize, u32, f64) {
+        let i = id as usize;
+        debug_assert!(self.live[i], "completing a dead run");
+        let v = self.node[i] as usize;
+        let m = self.midx[i] as usize;
+        let s = self.st(v, m);
+        self.members[s].retain(|&x| x != id);
+        self.live[i] = false;
+        self.free.push(id);
+        (
+            self.task[i],
+            self.local[i] as usize,
+            v,
+            m,
+            self.y[i],
+            self.join_ms[i],
+        )
+    }
+
+    /// Kill every run on node `v` (executions die with their node); any
+    /// pending `PoolDone` events for them go stale via the live flag.
+    pub fn kill_node(&mut self, v: usize) {
+        for m in 0..self.nl {
+            let s = self.st(v, m);
+            for &id in &self.members[s] {
+                self.live[id as usize] = false;
+                self.free.push(id);
+            }
+            self.members[s].clear();
+            self.speed[s] = 0.0;
+        }
+    }
+
+    /// In-flight executions at the station.
+    pub fn occupancy(&self, v: usize, m: usize) -> u32 {
+        self.members[self.st(v, m)].len() as u32
+    }
+
+    /// Busy instance-groups per station, `ceil(occupancy / max_y)` —
+    /// the same accounting rule the stations use, so strategies see a
+    /// comparable busy matrix in pool mode.
+    pub fn busy_into(&self, out: &mut Vec<Vec<u32>>, max_y: usize) {
+        out.clear();
+        out.resize(self.nv, Vec::new());
+        for (v, row) in out.iter_mut().enumerate() {
+            row.clear();
+            row.resize(self.nl, 0);
+            for (m, cell) in row.iter_mut().enumerate() {
+                *cell = (self.members[v * self.nl + m].len()).div_ceil(max_y.max(1)) as u32;
+            }
+        }
+    }
+}
+
+/// The §P10 autoscaling strategy: the paper's Proposal for placement and
+/// routing, with parallelism pinned to `y = 1` — capacity comes from the
+/// replica pool, and contention from [`SharedRate`]'s live occupancy.
+#[derive(Clone, Debug, Default)]
+pub struct Autoscale {
+    inner: Proposal,
+}
+
+impl Autoscale {
+    pub fn new() -> Self {
+        Autoscale {
+            inner: Proposal::new(),
+        }
+    }
+}
+
+impl Strategy for Autoscale {
+    fn name(&self) -> &str {
+        "Autoscale"
+    }
+
+    fn place_core(
+        &mut self,
+        env: &SimEnv,
+        scores: &QosScores,
+        rng: &mut Xoshiro256,
+    ) -> CorePlacement {
+        self.inner.place_core(env, scores, rng)
+    }
+
+    fn decide_light(
+        &mut self,
+        env: &SimEnv,
+        slot: usize,
+        queue: &[LightRequest],
+        busy: &[Vec<u32>],
+        residual: &[[f64; NUM_RESOURCES]],
+        dm: &DistanceMatrix,
+        rng: &mut Xoshiro256,
+    ) -> LightDecision {
+        let mut d = self
+            .inner
+            .decide_light(env, slot, queue, busy, residual, dm, rng);
+        for a in d.assignments.iter_mut().flatten() {
+            a.y = 1;
+        }
+        let LightDecision { x, y, .. } = &mut d;
+        for (xr, yr) in x.iter().zip(y.iter_mut()) {
+            for (xc, yc) in xr.iter().zip(yr.iter_mut()) {
+                *yc = u32::from(*xc > 0);
+            }
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(policy: ScalingPolicy) -> PoolConfig {
+        PoolConfig {
+            policy,
+            cold_start_ms: 20.0,
+            cold_start_jitter_ms: 4.0,
+            ..PoolConfig::default()
+        }
+    }
+
+    #[test]
+    fn shared_divisor_tracks_occupancy_ratio() {
+        assert_eq!(shared_divisor(4, 0, 1.0), f64::INFINITY);
+        assert!((shared_divisor(4, 4, 1.0) - 1.0).abs() < 1e-12);
+        assert!((shared_divisor(2, 4, 1.0) - 1.0).abs() < 1e-12, "spare capacity never speeds up");
+        assert!((shared_divisor(8, 4, 1.0) - 2.0).abs() < 1e-12);
+        assert!((shared_divisor(8, 2, 0.5) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn target_utilization_grows_and_respects_hysteresis() {
+        let p = ScalingPolicy::TargetUtilization {
+            target: 0.5,
+            hysteresis: 0.1,
+            cooldown_slots: 0,
+            idle_slots_to_zero: 0,
+        };
+        assert_eq!(p.desired(0, 3, 0), 6, "cold station sizes to demand");
+        assert_eq!(p.desired(6, 3, 0), 6, "inside the band: no action");
+        assert_eq!(p.desired(2, 3, 0), 6, "util 1.5 > 0.6: grow");
+        assert_eq!(p.desired(10, 3, 0), 6, "util 0.3 < 0.4: shrink");
+        assert_eq!(p.desired(7, 3, 0), 7, "util ~0.43 inside band: hold");
+    }
+
+    #[test]
+    fn backlog_threshold_steps_by_one() {
+        let p = ScalingPolicy::BacklogThreshold {
+            grow_above: 2.0,
+            shrink_below: 0.5,
+            cooldown_slots: 0,
+            idle_slots_to_zero: 0,
+        };
+        assert_eq!(p.desired(0, 1, 5), 1);
+        assert_eq!(p.desired(2, 2, 3), 3, "pressure 5 > 4: grow");
+        assert_eq!(p.desired(4, 1, 0), 3, "pressure 1 < 2: shrink");
+        assert_eq!(p.desired(2, 1, 2), 2, "pressure 3 in [1,4]: hold");
+    }
+
+    #[test]
+    fn grow_serves_nothing_until_warm() {
+        let mut pm = PoolManager::new(1, 1, cfg(ScalingPolicy::default()), 7);
+        let mut grown = Vec::new();
+        pm.step(0, 0, 3, 0, 100.0, &mut grown);
+        assert!(!grown.is_empty());
+        assert_eq!(pm.active(0, 0), 0, "warming replicas serve nothing");
+        assert!(pm.total(0, 0) > 0);
+        for &r in &grown {
+            assert!(r >= 120.0 && r <= 124.0, "ready inside the jitter window, got {r}");
+        }
+        pm.promote_ready_all(110.0);
+        assert_eq!(pm.active(0, 0), 0, "still cold");
+        pm.promote_ready_all(130.0);
+        assert_eq!(pm.active(0, 0) as usize, grown.len(), "warm after the window");
+    }
+
+    #[test]
+    fn drain_before_kill_never_abandons_in_flight() {
+        let pc = PoolConfig {
+            initial_replicas: 4,
+            policy: ScalingPolicy::TargetUtilization {
+                target: 0.7,
+                hysteresis: 0.1,
+                cooldown_slots: 0,
+                idle_slots_to_zero: 0,
+            },
+            ..PoolConfig::default()
+        };
+        let mut pm = PoolManager::new(1, 1, pc, 3);
+        let mut grown = Vec::new();
+        // Demand 1 over 4 replicas: util 0.25 → shrink toward 2, but 3
+        // executions are still in flight — only one replica may retire.
+        let retired = pm.step(0, 0, 1, 0, 10.0, &mut grown);
+        assert!(pm.active(0, 0) >= 1, "in-flight work keeps its replica");
+        assert_eq!(retired, pm.scale_events as u32 * 0 + retired); // retired counted
+        assert!(pm.active(0, 0) + retired == 4 || pm.active(0, 0) == 4 - retired);
+    }
+
+    #[test]
+    fn scale_to_zero_after_idle_window_and_counts_event() {
+        let pc = PoolConfig {
+            initial_replicas: 2,
+            policy: ScalingPolicy::TargetUtilization {
+                target: 0.7,
+                hysteresis: 0.1,
+                cooldown_slots: 0,
+                idle_slots_to_zero: 3,
+            },
+            ..PoolConfig::default()
+        };
+        let mut pm = PoolManager::new(1, 1, pc, 11);
+        let mut grown = Vec::new();
+        for k in 0..3 {
+            pm.step(0, 0, 0, 0, k as f64, &mut grown);
+        }
+        assert_eq!(pm.active(0, 0), 0, "idle pool scaled to zero");
+        assert_eq!(pm.scale_to_zero_events, 1);
+    }
+
+    #[test]
+    fn manager_is_deterministic_per_seed() {
+        let run = |seed: u64| {
+            let mut pm = PoolManager::new(2, 2, cfg(ScalingPolicy::default()), seed);
+            let mut grown = Vec::new();
+            let mut log = Vec::new();
+            for slot in 0..40u32 {
+                let now = slot as f64 * 10.0;
+                pm.promote_ready_all(now);
+                for v in 0..2 {
+                    for m in 0..2 {
+                        let inf = (slot / 4 + v as u32 + m as u32) % 5;
+                        pm.step(v, m, inf, 0, now, &mut grown);
+                        log.extend(grown.iter().map(|&r| (v, m, r.to_bits())));
+                    }
+                }
+                pm.end_slot(10.0);
+            }
+            (
+                log,
+                pm.cold_starts,
+                pm.scale_events,
+                pm.replica_slot_seconds.to_bits(),
+            )
+        };
+        assert_eq!(run(5), run(5), "same seed replays bit-identically");
+        assert_ne!(run(5).0, run(6).0, "jitter stream follows the seed");
+    }
+
+    #[test]
+    fn fail_node_clears_pool_and_warm_fire_goes_stale() {
+        let mut pm = PoolManager::new(2, 1, cfg(ScalingPolicy::default()), 9);
+        let mut grown = Vec::new();
+        pm.step(0, 0, 2, 0, 0.0, &mut grown);
+        assert!(!grown.is_empty());
+        let ready = grown[0];
+        pm.fail_node(0);
+        assert_eq!(pm.total(0, 0), 0);
+        assert!(!pm.warm_fire(0, 0, ready), "warmup of a dead node is stale");
+    }
+
+    #[test]
+    fn shared_rate_stretches_in_flight_work() {
+        let mut sr = SharedRate::default();
+        sr.reset(1, 1, 1.0);
+        // One run over one replica: full speed.
+        sr.settle(0, 0, 0.0);
+        let a = sr.join(1, 0, 0, 0, 1, 0.0, 100.0);
+        sr.rebalance(0, 0, 1);
+        assert_eq!(sr.eta(a), Some(100.0));
+        // A second run joins at t=50: the first is half done, and both
+        // now progress at half speed over the single replica.
+        sr.settle(0, 0, 50.0);
+        let b = sr.join(2, 0, 0, 0, 1, 50.0, 100.0);
+        sr.rebalance(0, 0, 1);
+        assert_eq!(sr.eta(a), Some(100.0), "50 nominal ms left at half speed");
+        assert_eq!(sr.eta(b), Some(200.0));
+        // A second replica warms at t=100: back to full speed.
+        sr.settle(0, 0, 100.0);
+        sr.rebalance(0, 0, 2);
+        assert_eq!(sr.eta(a), Some(25.0));
+        let (task, _, v, m, _, _) = sr.complete(a);
+        assert_eq!((task, v, m), (1, 0, 0));
+        assert_eq!(sr.occupancy(0, 0), 1);
+    }
+
+    #[test]
+    fn shared_rate_reuse_matches_fresh() {
+        let drive = |sr: &mut SharedRate| {
+            sr.reset(2, 1, 1.0);
+            sr.settle(1, 0, 5.0);
+            let a = sr.join(7, 1, 1, 0, 1, 5.0, 40.0);
+            sr.rebalance(1, 0, 2);
+            let eta = sr.eta(a);
+            sr.kill_node(1);
+            (eta, sr.occupancy(1, 0))
+        };
+        let mut fresh = SharedRate::default();
+        let want = drive(&mut fresh);
+        let mut reused = SharedRate::default();
+        reused.reset(2, 1, 1.0);
+        for k in 0..5 {
+            sr_noise(&mut reused, k);
+        }
+        assert_eq!(drive(&mut reused), want, "reset erases all prior state");
+    }
+
+    fn sr_noise(sr: &mut SharedRate, k: u64) {
+        let id = sr.join(k, 0, 0, 0, 1, 0.0, 10.0 + k as f64);
+        sr.rebalance(0, 0, 1);
+        sr.settle(0, 0, k as f64);
+        if k % 2 == 0 {
+            sr.complete(id);
+        }
+    }
+
+    #[test]
+    fn stalled_station_reports_no_eta() {
+        let mut sr = SharedRate::default();
+        sr.reset(1, 1, 1.0);
+        let a = sr.join(1, 0, 0, 0, 1, 0.0, 10.0);
+        sr.rebalance(0, 0, 0);
+        assert_eq!(sr.eta(a), None, "empty pool stalls the run");
+        sr.settle(0, 0, 50.0);
+        sr.rebalance(0, 0, 1);
+        assert_eq!(sr.eta(a), Some(10.0), "no progress while stalled");
+    }
+
+    #[test]
+    fn live_bound_tracks_contention_and_empty_pool() {
+        let est = EffCapEstimator::log_grid(1e-3, 10.0, 16);
+        let samples: Vec<f64> = (0..512).map(|i| 2.0 + (i % 7) as f64).collect();
+        let relaxed = live_delay_bound(&est, &samples, 1.0, 0.2, 2, 4, 1.0);
+        let contended = live_delay_bound(&est, &samples, 1.0, 0.2, 8, 2, 1.0);
+        assert!(contended > relaxed, "occupancy 4x replicas must cost delay");
+        assert_eq!(
+            live_delay_bound(&est, &samples, 1.0, 0.2, 1, 0, 1.0),
+            f64::INFINITY
+        );
+    }
+}

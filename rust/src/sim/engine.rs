@@ -126,6 +126,13 @@ pub struct SimOptions {
     /// is active. Inert (never consulted) on fault-free runs, so the
     /// zero-fault bit-identity invariant is unaffected.
     pub failover: FailoverPolicy,
+    /// Elastic replica pools + shared-rate contention (EXPERIMENTS
+    /// §P10): light capacity comes from a [`crate::pool::PoolManager`]
+    /// scaled per slot, and in-flight executions progress at a per-slot
+    /// shared rate set by the previous boundary's occupancy. `None`
+    /// (the default) never enters the pool path — every number is
+    /// byte-identical to the fixed-capacity engine.
+    pub pool: Option<crate::pool::PoolConfig>,
 }
 
 impl SimOptions {
@@ -140,6 +147,7 @@ impl SimOptions {
             drop_after_deadlines: 5.0,
             arrival_cutoff: slots.saturating_sub(drain).max(slots / 4).max(1),
             failover: FailoverPolicy::default(),
+            pool: None,
         }
     }
 }
@@ -346,6 +354,24 @@ impl Ord for Event {
     }
 }
 
+/// An in-flight pooled light execution (slotted engine, §P10): nominal
+/// remaining work advanced once per slot boundary at the shared rate its
+/// station ran at over the elapsed interval. When the remaining work
+/// hits zero the exact retrospective finish time is posted as a regular
+/// completion [`Event`] carrying the dispatch `seq` (so fault staleness
+/// works unchanged). `gen` is the station outage generation at dispatch
+/// — a node death purges the run the same way it zeroes busy counts.
+struct SlottedRun {
+    task: u64,
+    local: usize,
+    node: usize,
+    m: usize,
+    start_ms: f64,
+    remaining_ms: f64,
+    seq: u64,
+    gen: u64,
+}
+
 /// Record a realized workload trace for `env` at `seed`: the arrivals an
 /// engine run would admit (Poisson draws per slot up to the cutoff, with
 /// realized uplink SNR/delay stamped per task). Both the slotted engine
@@ -491,6 +517,23 @@ fn run_trial_inner(
         .map(|m| app.catalog.light_index(crate::microservice::MsId(m)))
         .collect();
 
+    // --- elastic pools (§P10) --------------------------------------------
+    // With `pool` off none of this is ever touched: the manager is absent,
+    // the run registry stays empty, and the slot loop below takes the
+    // exact fixed-capacity path (bit-identical output, no extra RNG).
+    let pool_alpha = opts.pool.as_ref().map_or(1.0, |p| p.alpha);
+    let mut pool_mgr = opts
+        .pool
+        .as_ref()
+        .map(|pc| crate::pool::PoolManager::new(nv, nl, pc.clone(), seed));
+    let mut pool_runs: Vec<SlottedRun> = Vec::new();
+    let mut pool_grown: Vec<f64> = Vec::new();
+    let mut pool_occ: Vec<Vec<u32>> = if pool_mgr.is_some() {
+        vec![vec![0u32; nl]; nv]
+    } else {
+        Vec::new()
+    };
+
     let mut finish_task =
         |id: u64,
          t: &RunTask,
@@ -529,6 +572,11 @@ fn run_trial_inner(
                     for m in 0..nl {
                         active_light[node][m] = 0;
                         light_gen[node][m] += 1;
+                    }
+                    // The node's replica pools die with it; the gen bump
+                    // above already purges its in-flight pooled runs.
+                    if let Some(pm) = pool_mgr.as_mut() {
+                        pm.fail_node(node);
                     }
                     // Completed outputs resident on the node are destroyed
                     // (permanently — recovery restores capacity, not
@@ -595,6 +643,9 @@ fn run_trial_inner(
                         d.apply_deferred(&fev.kind);
                     }
                     core_router.set_node_up(node, now);
+                    if let Some(pm) = pool_mgr.as_mut() {
+                        pm.node_restored(node);
+                    }
                 }
                 FaultKind::CoreReplicaFail { node, core_idx } => {
                     core_router.kill_instance(node, core_idx);
@@ -642,6 +693,64 @@ fn run_trial_inner(
             Some(d) => d.dm(),
             None => &env.dm,
         };
+
+        // Pool advance (§P10): purge runs whose dispatch went stale, then
+        // move every surviving in-flight execution forward across the
+        // elapsed slot at the shared rate its station ran at over that
+        // interval (occupancy and replica counts as of the previous
+        // boundary — the same previous-boundary quantization the slotted
+        // engine applies to faults). Finished runs post their exact
+        // retrospective completion time as a regular event, drained in
+        // step 2 below; warming replicas whose cold-start window closed
+        // only join the pool *after* the interval they were absent from.
+        if let Some(pm) = pool_mgr.as_mut() {
+            pool_runs.retain(|r| {
+                light_gen[r.node][r.m] == r.gen
+                    && tasks
+                        .get(&r.task)
+                        .map_or(false, |t| t.ev_seq[r.local] == Some(r.seq))
+            });
+            if slot > 0 {
+                for row in pool_occ.iter_mut() {
+                    row.iter_mut().for_each(|c| *c = 0);
+                }
+                for r in &pool_runs {
+                    pool_occ[r.node][r.m] += 1;
+                }
+                let lo_slot = now - opts.slot_ms;
+                let mut i = 0;
+                while i < pool_runs.len() {
+                    let r = &mut pool_runs[i];
+                    let div = crate::pool::shared_divisor(
+                        pool_occ[r.node][r.m],
+                        pm.active(r.node, r.m),
+                        pool_alpha,
+                    );
+                    let lo = r.start_ms.max(lo_slot);
+                    let dt = (now - lo).max(0.0);
+                    // An empty pool (divisor = inf) stalls the run: it
+                    // holds its remaining work until replicas return.
+                    if div.is_finite() && dt > 0.0 {
+                        let progress = dt / div;
+                        if progress >= r.remaining_ms {
+                            let fin = lo + r.remaining_ms * div;
+                            events.push(Reverse(Event {
+                                time_ms: fin,
+                                task: r.task,
+                                local: r.local,
+                                seq: r.seq,
+                                release: None,
+                            }));
+                            pool_runs.swap_remove(i);
+                            continue;
+                        }
+                        r.remaining_ms -= progress;
+                    }
+                    i += 1;
+                }
+            }
+            pm.promote_ready_all(now);
+        }
 
         // 1. Arrivals (none past the cutoff: drain phase). A replayed
         //    trace is authoritative: its recorded slots are admitted
@@ -889,15 +998,34 @@ fn run_trial_inner(
             light_queue.retain(|(id, _)| tasks.contains_key(id));
         }
 
-        // 4. Build the controller queue and residual capacity.
-        let busy: Vec<Vec<u32>> = active_light
-            .iter()
-            .map(|row| {
-                row.iter()
-                    .map(|&a| (a as usize).div_ceil(max_y) as u32)
-                    .collect()
-            })
-            .collect();
+        // 4. Build the controller queue and residual capacity. Pooled
+        //    mode derives busy groups from live run occupancy instead of
+        //    the fixed-capacity active counters (which it never touches).
+        let busy: Vec<Vec<u32>> = if pool_mgr.is_some() {
+            for row in pool_occ.iter_mut() {
+                row.iter_mut().for_each(|c| *c = 0);
+            }
+            for r in &pool_runs {
+                pool_occ[r.node][r.m] += 1;
+            }
+            pool_occ
+                .iter()
+                .map(|row| {
+                    row.iter()
+                        .map(|&a| (a as usize).div_ceil(max_y) as u32)
+                        .collect()
+                })
+                .collect()
+        } else {
+            active_light
+                .iter()
+                .map(|row| {
+                    row.iter()
+                        .map(|&a| (a as usize).div_ceil(max_y) as u32)
+                        .collect()
+                })
+                .collect()
+        };
         let mut residual = residual_after_busy(&residual_static, &env.light_resources, &busy);
         if has_faults {
             // Dead nodes host nothing new.
@@ -976,18 +1104,36 @@ fn run_trial_inner(
                     }
                     t.node[local] = Some(asn.node);
                     t.ev_seq[local] = Some(seq);
-                    active_light[asn.node][asn.light_idx] += 1;
-                    events.push(Reverse(Event {
-                        time_ms: done,
-                        task: id,
-                        local,
-                        seq,
-                        release: Some((
-                            asn.node,
-                            asn.light_idx,
-                            light_gen[asn.node][asn.light_idx],
-                        )),
-                    }));
+                    if pool_mgr.is_some() {
+                        // Pooled: the execution joins the shared-rate run
+                        // registry with its nominal work; its completion
+                        // event is posted only when the per-slot advance
+                        // sees the work drain (stretched/shrunk by live
+                        // station occupancy vs. warm replicas).
+                        pool_runs.push(SlottedRun {
+                            task: id,
+                            local,
+                            node: asn.node,
+                            m: asn.light_idx,
+                            start_ms: start,
+                            remaining_ms: proc,
+                            seq,
+                            gen: light_gen[asn.node][asn.light_idx],
+                        });
+                    } else {
+                        active_light[asn.node][asn.light_idx] += 1;
+                        events.push(Reverse(Event {
+                            time_ms: done,
+                            task: id,
+                            local,
+                            seq,
+                            release: Some((
+                                asn.node,
+                                asn.light_idx,
+                                light_gen[asn.node][asn.light_idx],
+                            )),
+                        }));
+                    }
                     if let Some(r) = rec_mut(&mut obs) {
                         let t = &tasks[&id];
                         let payloads = t.parent_payloads(app, local);
@@ -1013,8 +1159,50 @@ fn run_trial_inner(
         }
         light_queue = still_waiting;
 
-        // 6. Charge light costs for this slot.
-        costs.charge_light_slot(&decision.x, &decision.y, &light_dp, &light_mt, &light_pl);
+        // 6. Charge light costs for this slot. Pooled mode runs the
+        //    scaling policy per station (sorted walk), bills actual
+        //    pool sizes (warm + warming replicas price their cold
+        //    starts via instantiation-on-increase), and counts only
+        //    served executions as active parallelism.
+        if let Some(pm) = pool_mgr.as_mut() {
+            let mut backlog_m = vec![0u32; nl];
+            for &(qid, qlocal) in &light_queue {
+                if let Some(t) = tasks.get(&qid) {
+                    let ms_id = app.task_types[t.task_type].services[qlocal];
+                    if let Some(m) = light_idx_of[ms_id.0] {
+                        backlog_m[m] += 1;
+                    }
+                }
+            }
+            for row in pool_occ.iter_mut() {
+                row.iter_mut().for_each(|c| *c = 0);
+            }
+            for r in &pool_runs {
+                pool_occ[r.node][r.m] += 1;
+            }
+            for v in 0..nv {
+                for m in 0..nl {
+                    pm.step(v, m, pool_occ[v][m], backlog_m[m], now, &mut pool_grown);
+                    if !pool_grown.is_empty() {
+                        if let Some(r) = rec_mut(&mut obs) {
+                            for &ready in &pool_grown {
+                                r.warmup(v, now, ready);
+                            }
+                        }
+                    }
+                }
+            }
+            pm.end_slot(opts.slot_ms);
+            let x: Vec<Vec<u32>> = (0..nv)
+                .map(|v| (0..nl).map(|m| pm.total(v, m)).collect())
+                .collect();
+            let served: Vec<Vec<u32>> = (0..nv)
+                .map(|v| (0..nl).map(|m| pool_occ[v][m].min(pm.active(v, m))).collect())
+                .collect();
+            costs.charge_light_slot(&x, &served, &light_dp, &light_mt, &light_pl);
+        } else {
+            costs.charge_light_slot(&decision.x, &decision.y, &light_dp, &light_mt, &light_pl);
+        }
 
         // Per-slot telemetry snapshot (observer-gated, read-only).
         if let Some(o) = obs.as_deref_mut() {
@@ -1035,6 +1223,39 @@ fn run_trial_inner(
                 let node_util = busy.iter().filter(|row| row.iter().any(|&b| b > 0)).count()
                     as f64
                     / nv.max(1) as f64;
+                // Pool gauges ride the same row: pool sizes plus the
+                // worst finite live shared-rate bound g_{m,eps} across
+                // occupied stations (actual contention, not planned y).
+                if let Some(pm) = pool_mgr.as_ref() {
+                    let ctrl = &cfg.controller;
+                    let est = crate::effcap::EffCapEstimator::log_grid(
+                        ctrl.theta_lo,
+                        ctrl.theta_hi,
+                        ctrl.theta_n,
+                    );
+                    let mut worst = f64::NEG_INFINITY;
+                    for v in 0..nv {
+                        for (m, &ms_id) in app.catalog.light_ids().iter().enumerate() {
+                            let occ = pool_occ[v][m];
+                            if occ == 0 {
+                                continue;
+                            }
+                            let g = crate::pool::live_delay_bound(
+                                &est,
+                                &env.light_rate_samples[m],
+                                app.catalog.spec(ms_id).workload_mb,
+                                ctrl.epsilon,
+                                occ,
+                                pm.active(v, m),
+                                pool_alpha,
+                            );
+                            if g.is_finite() && g > worst {
+                                worst = g;
+                            }
+                        }
+                    }
+                    o.set_pool_gauges(pm.active_total(), pm.warming_total(), worst);
+                }
                 o.sample_slot(
                     now,
                     &backlog,
@@ -1107,5 +1328,12 @@ fn run_trial_inner(
         queues.len()
     );
     metrics.vq_residual = queues.len();
+    if let Some(pm) = pool_mgr {
+        metrics.cold_starts = pm.cold_starts;
+        metrics.pool_scale_events = pm.scale_events;
+        metrics.pool_scale_to_zero = pm.scale_to_zero_events;
+        metrics.pool_replica_slot_seconds = pm.replica_slot_seconds;
+        metrics.pool_size = pm.size_hist;
+    }
     metrics
 }

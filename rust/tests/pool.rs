@@ -1,0 +1,247 @@
+//! Integration tests for the elastic replica-pool tier (§P10): the
+//! pool-off path must stay byte-identical (full `TrialMetrics` struct
+//! equality) including across reused DES arenas that previously ran
+//! pooled trials, pooled timelines must replay bit-identically, the p10
+//! sweep must be thread-count-invariant, and both engines must agree on
+//! pooled fixtures that actually exercise cold starts and scale-to-zero.
+
+use fmedge::config::ExperimentConfig;
+use fmedge::des::{run_des_trial_faulted_in, DesArena, DesOptions};
+use fmedge::exp::{run_sweep, Experiment, SweepConfig};
+use fmedge::pool::{Autoscale, PoolConfig};
+use fmedge::scenarios::{CompiledScenario, ScenarioSpec};
+use fmedge::sim::{run_trial_faulted, SimEnv, SimOptions};
+
+fn small_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper_default();
+    cfg.workload.num_users = 8;
+    cfg.controller.effcap_samples = 512;
+    cfg.sim.slots = 200;
+    cfg
+}
+
+/// A compiled scenario fixture shared by every run of a test: same env,
+/// same trace, same fault schedule — only the pool options vary.
+fn fixture(scenario: &str, seed: u64) -> (SimEnv, SimOptions, CompiledScenario) {
+    let cfg = small_cfg();
+    let env = SimEnv::build(&cfg, seed);
+    let opts = SimOptions::from_config(&cfg);
+    let spec = ScenarioSpec::by_name(scenario).expect("library scenario");
+    let cs = spec.compile(&env, &opts, seed ^ 0x10_57E5);
+    (env, opts, cs)
+}
+
+fn pooled(opts: &SimOptions) -> SimOptions {
+    let mut o = opts.clone();
+    o.pool = Some(PoolConfig::from_config(&small_cfg()));
+    o
+}
+
+#[test]
+fn pool_off_slotted_replays_bit_identically() {
+    let (env, opts, cs) = fixture("diurnal", 31);
+    let a = run_trial_faulted(
+        &env,
+        &mut fmedge::baselines::Proposal::new(),
+        31,
+        &opts,
+        &cs.trace,
+        &cs.faults,
+    );
+    let b = run_trial_faulted(
+        &env,
+        &mut fmedge::baselines::Proposal::new(),
+        31,
+        &opts,
+        &cs.trace,
+        &cs.faults,
+    );
+    // Full-struct equality: histograms, sojourns, cost breakdowns, pool
+    // counters (all zero off) — not just the headline rates.
+    assert_eq!(a, b, "pool-off slotted trial must replay bit-identically");
+    assert_eq!(a.cold_starts, 0);
+    assert_eq!(a.pool_scale_events, 0);
+    assert_eq!(a.pool_replica_slot_seconds, 0.0);
+}
+
+#[test]
+fn pool_off_des_is_unaffected_by_a_prior_pooled_trial_in_the_arena() {
+    let (env, opts, cs) = fixture("diurnal", 32);
+    let dopts = DesOptions::from_sim(&opts);
+
+    let mut fresh: DesArena = DesArena::new();
+    let clean = run_des_trial_faulted_in(
+        &mut fresh,
+        &env,
+        &mut fmedge::baselines::Proposal::new(),
+        32,
+        &dopts,
+        &cs.trace,
+        &cs.faults,
+    );
+
+    // Dirty the arena with a pooled trial (stale shared-rate columns,
+    // different calendar shape), then rerun the pool-off config in it.
+    let mut reused: DesArena = DesArena::new();
+    let _ = run_des_trial_faulted_in(
+        &mut reused,
+        &env,
+        &mut Autoscale::new(),
+        32,
+        &DesOptions::from_sim(&pooled(&opts)),
+        &cs.trace,
+        &cs.faults,
+    );
+    let after = run_des_trial_faulted_in(
+        &mut reused,
+        &env,
+        &mut fmedge::baselines::Proposal::new(),
+        32,
+        &dopts,
+        &cs.trace,
+        &cs.faults,
+    );
+    assert_eq!(
+        clean, after,
+        "pool-off DES metrics must be byte-identical after a pooled trial reused the arena"
+    );
+}
+
+#[test]
+fn pooled_timelines_replay_bit_identically_across_arena_reuse() {
+    let (env, opts, cs) = fixture("flash-crowd", 33);
+    let dopts = DesOptions::from_sim(&pooled(&opts));
+
+    let mut fresh: DesArena = DesArena::new();
+    let a = run_des_trial_faulted_in(
+        &mut fresh,
+        &env,
+        &mut Autoscale::new(),
+        33,
+        &dopts,
+        &cs.trace,
+        &cs.faults,
+    );
+    // Same config in an arena that already ran a *different* pooled
+    // seed: grow/shrink/scale-to-zero event timelines must replay
+    // bit-identically (full-struct equality covers the pool counters,
+    // the size histogram, and the replica-slot-second accounting).
+    let mut reused: DesArena = DesArena::new();
+    let _ = run_des_trial_faulted_in(
+        &mut reused,
+        &env,
+        &mut Autoscale::new(),
+        777,
+        &dopts,
+        &cs.trace,
+        &cs.faults,
+    );
+    let b = run_des_trial_faulted_in(
+        &mut reused,
+        &env,
+        &mut Autoscale::new(),
+        33,
+        &dopts,
+        &cs.trace,
+        &cs.faults,
+    );
+    assert_eq!(a, b, "pooled DES trial must be bit-identical fresh vs reused arena");
+
+    // And the slotted engine replays its own pooled timeline too.
+    let sopts = pooled(&opts);
+    let s1 = run_trial_faulted(&env, &mut Autoscale::new(), 33, &sopts, &cs.trace, &cs.faults);
+    let s2 = run_trial_faulted(&env, &mut Autoscale::new(), 33, &sopts, &cs.trace, &cs.faults);
+    assert_eq!(s1, s2, "pooled slotted trial must replay bit-identically");
+}
+
+#[test]
+fn pooled_fixtures_exercise_cold_starts_and_scale_to_zero() {
+    // Diurnal troughs + the post-cutoff drain give every pool an idle
+    // window, so with min_replicas = 0 the tier must both cold-start
+    // replicas on the peaks and drain whole pools on the troughs.
+    let (env, opts, cs) = fixture("diurnal", 34);
+    let sopts = pooled(&opts);
+    let s = run_trial_faulted(&env, &mut Autoscale::new(), 34, &sopts, &cs.trace, &cs.faults);
+    assert!(s.cold_starts > 0, "slotted: no cold starts exercised");
+    assert!(s.pool_scale_events > 0, "slotted: pool never scaled");
+    assert!(
+        s.pool_scale_to_zero > 0,
+        "slotted: scale-to-zero never fired over a diurnal horizon"
+    );
+    assert!(s.pool_replica_slot_seconds > 0.0);
+    assert!(s.pool_size.count() > 0, "pool size must be sampled per slot");
+
+    let mut arena: DesArena = DesArena::new();
+    let d = run_des_trial_faulted_in(
+        &mut arena,
+        &env,
+        &mut Autoscale::new(),
+        34,
+        &DesOptions::from_sim(&sopts),
+        &cs.trace,
+        &cs.faults,
+    );
+    assert!(d.cold_starts > 0, "des: no cold starts exercised");
+    assert!(d.pool_scale_events > 0, "des: pool never scaled");
+    assert!(
+        d.pool_scale_to_zero > 0,
+        "des: scale-to-zero never fired over a diurnal horizon"
+    );
+
+    // Engine agreement on the pooled fixture: same tolerance band the
+    // fault-injection agreement tests use for headline rates.
+    assert!(s.completed > 0 && d.completed > 0, "both engines must complete work");
+    assert!(
+        (s.on_time_rate() - d.on_time_rate()).abs() < 0.45,
+        "pooled engines disagree: slotted {} vs des {}",
+        s.on_time_rate(),
+        d.on_time_rate()
+    );
+}
+
+#[test]
+fn p10_sweep_parallel_is_bit_identical_to_serial_and_well_formed() {
+    let cfg = small_cfg();
+    let mut sc = SweepConfig::for_experiment(Experiment::P10);
+    sc.trials = 2;
+    sc.slots = 80;
+    sc.seed = 13;
+    sc.loads = vec![1.0];
+    sc.threads = 1;
+    let serial = run_sweep(&cfg, &sc).expect("serial p10 sweep");
+    serial.validate().expect("well-formed table");
+    // scenarios(2) x engines(2) x loads(1) x modes(2).
+    assert_eq!(serial.rows.len(), 8);
+    let col = |name: &str| {
+        serial
+            .headers
+            .iter()
+            .position(|h| h == name)
+            .unwrap_or_else(|| panic!("missing column {name}"))
+    };
+    let (mode_c, cold_c, rss_c, p95_c) = (
+        col("mode"),
+        col("cold_starts"),
+        col("replica_slot_s"),
+        col("pool_p95"),
+    );
+    for row in &serial.rows {
+        if row[mode_c] == "autoscale" {
+            assert!(row[cold_c].parse::<u64>().unwrap() > 0, "autoscale row without cold starts");
+            assert!(row[rss_c].parse::<f64>().unwrap() > 0.0);
+            assert_ne!(row[p95_c], "-", "autoscale row must report a pool p95");
+        } else {
+            assert_eq!(row[cold_c], "0", "fixed-y row must not cold-start");
+            assert_eq!(row[p95_c], "-", "fixed-y row has no pool");
+        }
+    }
+    for threads in [2, 4] {
+        sc.threads = threads;
+        let par = run_sweep(&cfg, &sc).expect("parallel p10 sweep");
+        assert_eq!(
+            serial.to_csv(),
+            par.to_csv(),
+            "p10 threads={threads} must be bit-identical to serial"
+        );
+    }
+}
